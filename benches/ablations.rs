@@ -1,0 +1,227 @@
+//! Ablation benches for the design choices DESIGN.md §6 calls out.
+//! These measure *optimizer quality* (best value reached under a fixed
+//! budget, averaged over seeds), not wall time:
+//!
+//!   1. GPHP treatment: slice-sampling MCMC vs empirical Bayes (§4.2)
+//!   2. Input warping on vs off (§4.2) on a non-stationary objective
+//!   3. Log scaling on vs off (§5.1) with BO on the XGBoost surrogate
+//!   4. Sobol anchor count in the acquisition optimizer (§4.3)
+//!   5. Async pending-exclusion on vs off at parallelism 4 (§4.4)
+//!   6. Median-rule activation: dynamic vs always-on vs 10-completed (§5.2)
+//!
+//! `cargo bench --bench ablations [seeds]`
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use amt::acquisition::AcquisitionConfig;
+use amt::config::TuningJobRequest;
+use amt::coordinator::TuningJobRunner;
+use amt::earlystop::{MedianRule, NoStopping, StoppingPolicy};
+use amt::gp::slice::SliceConfig;
+use amt::gp::NativeBackend;
+use amt::harness::{mean_std, print_table};
+use amt::metrics::MetricsService;
+use amt::objectives::by_name;
+use amt::platform::{PlatformConfig, TrainingPlatform};
+use amt::rng::Rng;
+use amt::store::MetadataStore;
+use amt::strategies::{BayesianOptimization, BoConfig, GphpMode, Observation, Strategy};
+
+/// Run BO directly against an objective's final values (no platform) and
+/// return best-so-far after `budget` evaluations.
+fn run_bo(objective: &str, config: BoConfig, seed: u64, budget: usize) -> f64 {
+    let obj = by_name(objective).unwrap();
+    let sign = if obj.minimize() { 1.0 } else { -1.0 };
+    let space = obj.space();
+    let mut bo = BayesianOptimization::new(space, Arc::new(NativeBackend), config, seed);
+    let mut history: Vec<Observation> = Vec::new();
+    for i in 0..budget {
+        let c = bo.next_config(&history, &[]);
+        let v = sign * obj.final_value(&c, seed ^ (i as u64) << 17);
+        history.push(Observation { config: c, value: v });
+    }
+    history.iter().map(|o| o.value).fold(f64::INFINITY, f64::min)
+}
+
+fn summarize(name: &str, vals: &[f64]) -> Vec<String> {
+    let (m, s) = mean_std(vals);
+    vec![name.into(), format!("{m:.4} ± {s:.4}")]
+}
+
+fn main() {
+    let seeds: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let budget = 25;
+    let base = || BoConfig {
+        init_random: 4,
+        gphp: GphpMode::Mcmc(SliceConfig::light()),
+        acq: AcquisitionConfig { num_anchors: 256, ..Default::default() },
+        ..Default::default()
+    };
+
+    // 1. MCMC vs EB on hartmann6 (few-observation regime is where it matters)
+    let mut mcmc = Vec::new();
+    let mut eb = Vec::new();
+    for s in 0..seeds {
+        mcmc.push(run_bo("hartmann6", base(), s, budget));
+        let mut c = base();
+        c.gphp = GphpMode::EmpiricalBayes { restarts: 2 };
+        eb.push(run_bo("hartmann6", c, s, budget));
+    }
+    print_table(
+        "ablation 1 — GPHP treatment (hartmann6, lower better)",
+        &["variant", "best after 25 evals"],
+        &[summarize("slice MCMC (AMT)", &mcmc), summarize("empirical Bayes", &eb)],
+    );
+
+    // 2. input warping on/off on the log-sensitive xgboost surface,
+    //    *without* log scaling, so warping has to discover the geometry
+    let mut warp_on = Vec::new();
+    let mut warp_off = Vec::new();
+    for s in 0..seeds {
+        warp_on.push(run_bo("xgboost_dm_linear", base(), s, budget));
+        let mut c = base();
+        c.input_warping = false;
+        warp_off.push(run_bo("xgboost_dm_linear", c, s, budget));
+    }
+    print_table(
+        "ablation 2 — input warping (xgboost, linear scaling)",
+        &["variant", "best after 25 evals"],
+        &[summarize("warping on (AMT)", &warp_on), summarize("warping off", &warp_off)],
+    );
+
+    // 3. log scaling on/off (same objective, two space definitions)
+    let mut log_on = Vec::new();
+    let mut log_off = Vec::new();
+    for s in 0..seeds {
+        log_on.push(run_bo("xgboost_dm", base(), s, budget));
+        log_off.push(run_bo("xgboost_dm_linear", base(), s, budget));
+    }
+    print_table(
+        "ablation 3 — log scaling (xgboost direct marketing)",
+        &["variant", "best after 25 evals"],
+        &[summarize("log scaling (AMT)", &log_on), summarize("linear scaling", &log_off)],
+    );
+
+    // 4. anchor count
+    let mut rows = Vec::new();
+    for anchors in [32usize, 128, 512] {
+        let mut vals = Vec::new();
+        for s in 0..seeds {
+            let mut c = base();
+            c.acq.num_anchors = anchors;
+            vals.push(run_bo("branin", c, s, budget));
+        }
+        rows.push(summarize(&format!("{anchors} anchors"), &vals));
+    }
+    print_table("ablation 4 — Sobol anchor count (branin)", &["variant", "best"], &rows);
+
+    // 5. pending exclusion at parallelism 4 (platform-driven, async)
+    let run_parallel = |exclusion: f64, seed: u64| -> f64 {
+        let obj: Arc<dyn amt::objectives::Objective> = by_name("branin").unwrap().into();
+        let mut c = base();
+        c.acq.exclusion_radius = exclusion;
+        let strat: Box<dyn Strategy> =
+            Box::new(BayesianOptimization::new(obj.space(), Arc::new(NativeBackend), c, seed));
+        let request = TuningJobRequest {
+            name: format!("abl5-{exclusion}-{seed}"),
+            objective: "branin".into(),
+            strategy: "bayesian".into(),
+            max_training_jobs: budget as u32,
+            max_parallel_jobs: 4,
+            seed,
+            ..Default::default()
+        };
+        let out = TuningJobRunner::new(
+            request,
+            obj,
+            strat,
+            Box::new(NoStopping),
+            TrainingPlatform::new(PlatformConfig::noiseless(), seed),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+        .run();
+        out.best.map(|b| b.1).unwrap_or(f64::INFINITY)
+    };
+    let mut with_ex = Vec::new();
+    let mut without_ex = Vec::new();
+    for s in 0..seeds {
+        with_ex.push(run_parallel(0.08, s));
+        without_ex.push(run_parallel(1e-9, s)); // radius→0 disables the penalty
+    }
+    print_table(
+        "ablation 5 — async pending exclusion (branin, L=4)",
+        &["variant", "best after 25 evals"],
+        &[
+            summarize("exclusion on (AMT)", &with_ex),
+            summarize("exclusion off", &without_ex),
+        ],
+    );
+
+    // 6. median-rule activation policies: time saved vs quality lost
+    let run_es = |policy: Box<dyn StoppingPolicy>, seed: u64| -> (f64, f64) {
+        let obj: Arc<dyn amt::objectives::Objective> =
+            by_name("gdelt_single").unwrap().into();
+        let strat = amt::strategies::by_name(
+            "random",
+            &obj.space(),
+            Arc::new(NativeBackend),
+            seed,
+        )
+        .unwrap();
+        let request = TuningJobRequest {
+            name: format!("abl6-{seed}-{}", policy.name()),
+            objective: "gdelt_single".into(),
+            strategy: "random".into(),
+            max_training_jobs: 40,
+            max_parallel_jobs: 2,
+            seed,
+            ..Default::default()
+        };
+        let out = TuningJobRunner::new(
+            request,
+            obj,
+            strat,
+            policy,
+            TrainingPlatform::new(PlatformConfig::noiseless(), seed),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+        .run();
+        (out.best.map(|b| b.1).unwrap_or(f64::INFINITY), out.total_seconds)
+    };
+    let mut rows = Vec::new();
+    type PolicyMaker = fn() -> Box<dyn StoppingPolicy>;
+    let variants: [(&str, PolicyMaker); 4] = [
+        ("off", || Box::new(NoStopping)),
+        ("dynamic activation (AMT)", || Box::new(MedianRule::default())),
+        ("always-on (fraction 0)", || {
+            Box::new(MedianRule { activation_fraction: 0.0, min_epochs: 1, ..Default::default() })
+        }),
+        ("10-completed safeguard", || {
+            Box::new(MedianRule { min_completed_jobs: 10, ..Default::default() })
+        }),
+    ];
+    for (name, make) in variants {
+        let mut loss = Vec::new();
+        let mut time = Vec::new();
+        for s in 0..seeds {
+            let (l, t) = run_es(make(), s);
+            loss.push(l);
+            time.push(t / 3600.0);
+        }
+        let (lm, _) = mean_std(&loss);
+        let (tm, _) = mean_std(&time);
+        rows.push(vec![name.to_string(), format!("{lm:.4}"), format!("{tm:.2}h")]);
+    }
+    print_table(
+        "ablation 6 — median-rule activation (gdelt, 40 evals)",
+        &["variant", "final loss", "wall time"],
+        &rows,
+    );
+
+    let _ = Rng::new(0);
+}

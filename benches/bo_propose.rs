@@ -1,0 +1,79 @@
+//! End-to-end proposal latency: one full BO round (GPHP fit + posterior
+//! factorization + Sobol-anchor scoring + local EI refinement) as a
+//! function of the observation count, on the native and HLO backends.
+//! This is the per-decision service latency the Hyperparameter Selection
+//! Service adds between training jobs. `cargo bench --bench bo_propose`.
+
+use std::sync::Arc;
+
+use amt::acquisition::AcquisitionConfig;
+use amt::gp::{NativeBackend, SurrogateBackend};
+use amt::harness::{bench, print_table};
+use amt::rng::Rng;
+use amt::runtime::{HloBackend, HloRuntime};
+use amt::space::{continuous, Scaling, SearchSpace};
+use amt::strategies::{BayesianOptimization, BoConfig, GphpMode, Observation, Strategy};
+
+fn space(d: usize) -> SearchSpace {
+    SearchSpace::new(
+        (0..d)
+            .map(|i| continuous(&format!("x{i}"), 0.0, 1.0, Scaling::Linear))
+            .collect(),
+    )
+    .unwrap()
+}
+
+fn history(space: &SearchSpace, n: usize, seed: u64) -> Vec<Observation> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let config = space.sample(&mut rng);
+            let v: f64 = config.values().filter_map(|v| v.as_f64()).map(|x| (x - 0.4).powi(2)).sum();
+            Observation { config, value: v }
+        })
+        .collect()
+}
+
+fn main() {
+    let d = 6;
+    let sp = space(d);
+    let backends: Vec<(&str, Arc<dyn SurrogateBackend>)> = {
+        let mut v: Vec<(&str, Arc<dyn SurrogateBackend>)> =
+            vec![("native", Arc::new(NativeBackend))];
+        match HloRuntime::open_default() {
+            Ok(rt) => v.push(("hlo", Arc::new(HloBackend::new(rt)))),
+            Err(_) => eprintln!("NOTE: artifacts missing; hlo rows skipped"),
+        }
+        v
+    };
+
+    let mut rows = Vec::new();
+    for n in [10usize, 25, 50, 100, 200] {
+        let hist = history(&sp, n, n as u64);
+        let mut cells = vec![n.to_string()];
+        for (bname, backend) in &backends {
+            let mut bo = BayesianOptimization::new(
+                sp.clone(),
+                Arc::clone(backend),
+                BoConfig {
+                    init_random: 4,
+                    gphp: GphpMode::Mcmc(amt::gp::slice::SliceConfig::light()),
+                    acq: AcquisitionConfig { num_anchors: 512, ..Default::default() },
+                    ..Default::default()
+                },
+                1,
+            );
+            let iters = if n <= 50 { 5 } else { 3 };
+            let stats = bench(&format!("propose {bname:>6} n={n}"), 1, iters, || {
+                let c = bo.next_config(&hist, &[]);
+                std::hint::black_box(c);
+            });
+            cells.push(amt::harness::fmt_secs(stats.p50));
+        }
+        rows.push(cells);
+    }
+    let header: Vec<&str> = std::iter::once("n")
+        .chain(backends.iter().map(|(n, _)| *n))
+        .collect();
+    print_table("BO proposal p50 latency (light MCMC, 512 anchors)", &header, &rows);
+}

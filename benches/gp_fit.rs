@@ -1,0 +1,58 @@
+//! GPHP-fitting bench: the paper's slice-sampling MCMC spec (§4.2 — 300
+//! samples, 250 burn-in, thin 5) vs the light harness preset vs empirical
+//! Bayes, across training-set sizes. Run with `cargo bench --bench gp_fit`.
+
+use amt::gp::fit::fit_empirical_bayes;
+use amt::gp::slice::{sample_gphp, SliceConfig};
+use amt::gp::{normalization, NativeBackend};
+use amt::harness::{bench, print_table};
+use amt::rng::Rng;
+
+fn data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+    let y_raw: Vec<f64> =
+        x.iter().map(|p| (5.0 * p[0]).sin() + p[1] + 0.05 * rng.normal()).collect();
+    let (m, s) = normalization(&y_raw);
+    (x, y_raw.iter().map(|v| (v - m) / s).collect())
+}
+
+fn main() {
+    let d = 4;
+    let mut rows = Vec::new();
+    for n in [10usize, 25, 50, 100, 200] {
+        let (x, y) = data(n, d, n as u64);
+        let iters = if n <= 50 { 5 } else { 3 };
+
+        let mut rng = Rng::new(7);
+        let paper = bench(&format!("slice paper-spec n={n}"), 1, iters, || {
+            let t = sample_gphp(
+                &NativeBackend, &x, &y, d, &SliceConfig::default(), &mut rng, None,
+            );
+            std::hint::black_box(t);
+        });
+        let mut rng = Rng::new(7);
+        let light = bench(&format!("slice light      n={n}"), 1, iters, || {
+            let t =
+                sample_gphp(&NativeBackend, &x, &y, d, &SliceConfig::light(), &mut rng, None);
+            std::hint::black_box(t);
+        });
+        let mut rng = Rng::new(7);
+        let eb = bench(&format!("empirical bayes  n={n}"), 1, iters, || {
+            let t = fit_empirical_bayes(&NativeBackend, &x, &y, d, 1, &mut rng);
+            std::hint::black_box(t);
+        });
+        rows.push(vec![
+            n.to_string(),
+            amt::harness::fmt_secs(paper.p50),
+            amt::harness::fmt_secs(light.p50),
+            amt::harness::fmt_secs(eb.p50),
+        ]);
+    }
+    print_table(
+        "GPHP fit p50 latency (native backend)",
+        &["n", "MCMC (paper spec)", "MCMC (light)", "empirical Bayes"],
+        &rows,
+    );
+}

@@ -1,0 +1,49 @@
+//! L1 kernel bench: Gram-matrix construction across train-set buckets,
+//! native Rust vs the AOT HLO artifact (Pallas kernel via PJRT).
+//!
+//! This is the innermost hot spot of GP fitting: one Gram per
+//! slice-sampling likelihood query (~600 per BO proposal under the paper's
+//! MCMC settings). Run with `cargo bench --bench kernel_matrix`.
+
+use amt::gp::{NativeBackend, SurrogateBackend, Theta};
+use amt::harness::{bench, print_table};
+use amt::rng::Rng;
+use amt::runtime::{HloBackend, HloRuntime};
+
+fn points(n: usize, d: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let d = 8;
+    let theta = Theta::default_for_dim(d);
+    let hlo = HloRuntime::open_default().ok().map(HloBackend::artifacts_only);
+    if hlo.is_none() {
+        eprintln!("NOTE: artifacts missing; HLO column skipped (`make artifacts`)");
+    }
+
+    let mut rows = Vec::new();
+    for n in [16usize, 32, 64, 128, 256, 512] {
+        let x = points(n, d, &mut rng);
+        let iters = (20_000 / n).max(5);
+        let nat = bench(&format!("gram native   n={n}"), 2, iters, || {
+            let k = NativeBackend.gram(&x, &theta);
+            std::hint::black_box(k);
+        });
+        let hlo_stats = hlo.as_ref().map(|b| {
+            bench(&format!("gram hlo/pjrt n={n}"), 2, iters.min(100), || {
+                let k = b.gram(&x, &theta);
+                std::hint::black_box(k);
+            })
+        });
+        rows.push(vec![
+            n.to_string(),
+            amt::harness::fmt_secs(nat.p50),
+            hlo_stats
+                .map(|s| amt::harness::fmt_secs(s.p50))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print_table("Gram matrix p50 latency", &["n", "native", "hlo/pjrt"], &rows);
+}

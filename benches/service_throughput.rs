@@ -1,0 +1,107 @@
+//! L3 service-path benches: metadata-store writes, conditional writes,
+//! metric emission, platform event processing, and whole tuning-job
+//! throughput (random search, so the measured cost is pure coordinator).
+//! The coordinator must never be the bottleneck unless the contribution is
+//! the coordinator itself (§Perf targets in DESIGN.md).
+//! `cargo bench --bench service_throughput`.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use amt::config::TuningJobRequest;
+use amt::coordinator::{stopping_by_name, TuningJobRunner};
+use amt::gp::NativeBackend;
+use amt::harness::{bench, print_table};
+use amt::json::Json;
+use amt::metrics::MetricsService;
+use amt::platform::{PlatformConfig, TrainingPlatform, TrainingJobSpec};
+use amt::store::MetadataStore;
+use amt::strategies;
+
+fn main() {
+    let mut rows = Vec::new();
+
+    // store puts
+    let store = MetadataStore::new();
+    let mut i = 0u64;
+    let s = bench("store put", 100, 50_000, || {
+        i += 1;
+        store.put("t", &format!("k{}", i % 1000), Json::Num(i as f64));
+    });
+    rows.push(vec!["store put".into(), format!("{:.0}/s", 1.0 / s.mean)]);
+
+    let mut ver = store.put("t", "cond", Json::Num(0.0));
+    let s = bench("store conditional put", 100, 50_000, || {
+        ver = store.put_if("t", "cond", Json::Num(ver as f64), Some(ver)).unwrap();
+    });
+    rows.push(vec!["store put_if".into(), format!("{:.0}/s", 1.0 / s.mean)]);
+
+    // metric emission
+    let metrics = MetricsService::new();
+    let mut t = 0.0;
+    let s = bench("metrics emit", 100, 50_000, || {
+        t += 1.0;
+        metrics.emit("bench/stream", t, t * 0.5);
+    });
+    rows.push(vec!["metrics emit".into(), format!("{:.0}/s", 1.0 / s.mean)]);
+
+    // platform event pump (submit + drain batches of jobs)
+    let objective: Arc<dyn amt::objectives::Objective> =
+        amt::objectives::by_name("branin").unwrap().into();
+    let mut rng = amt::rng::Rng::new(3);
+    let s = bench("platform 50-job drain", 2, 50, || {
+        let mut p = TrainingPlatform::new(PlatformConfig::default(), 7);
+        for j in 0..50 {
+            p.submit(TrainingJobSpec {
+                name: format!("b{j}"),
+                config: objective.space().sample(&mut rng),
+                objective: Arc::clone(&objective),
+                seed: j,
+                instance_count: 1,
+            });
+        }
+        while p.next_event().is_some() {}
+    });
+    // 50 jobs × (1 start + 5 epochs) events
+    rows.push(vec![
+        "platform events".into(),
+        format!("{:.0}/s", 50.0 * 6.0 / s.mean),
+    ]);
+
+    // full tuning job, random search (coordinator overhead only)
+    let s = bench("tuning job (20 evals, random)", 1, 20, || {
+        let request = TuningJobRequest {
+            name: "bench".into(),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 20,
+            max_parallel_jobs: 4,
+            ..Default::default()
+        };
+        let strat = strategies::by_name(
+            "random",
+            &objective.space(),
+            Arc::new(NativeBackend),
+            1,
+        )
+        .unwrap();
+        let out = TuningJobRunner::new(
+            request,
+            Arc::clone(&objective),
+            strat,
+            stopping_by_name("off").unwrap(),
+            TrainingPlatform::new(PlatformConfig::default(), 1),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+        .run();
+        std::hint::black_box(out);
+    });
+    rows.push(vec![
+        "coordinator per evaluation".into(),
+        amt::harness::fmt_secs(s.mean / 20.0),
+    ]);
+
+    print_table("service throughput", &["operation", "rate / latency"], &rows);
+}

@@ -1,0 +1,93 @@
+//! Figure 5 reproduction: warm starting sequential tuning jobs on the
+//! Caltech-256 image-classifier workload (§6.4).
+//!
+//! Three tuning jobs run through the service, exactly like the paper's case
+//! study: (1) from scratch, (2) same algorithm + data warm-started from
+//! job 1 ("red dots"), (3) on the *augmented* dataset warm-started from
+//! jobs 1+2 ("blue dots"). Validation accuracy should keep improving
+//! across phases (paper: 0.33 → 0.47 → 0.52).
+//!
+//! ```bash
+//! cargo run --release --example fig5_warm_start [evals_per_job]
+//! ```
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::harness::print_table;
+use amt::platform::PlatformConfig;
+
+fn main() {
+    let evals: u32 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let service = AmtService::new(PlatformConfig::default());
+
+    let phases: [(&str, &str, Vec<String>); 3] = [
+        ("phase1-scratch", "caltech_base", vec![]),
+        ("phase2-warm", "caltech_rerun", vec!["phase1-scratch".into()]),
+        (
+            "phase3-augmented",
+            "caltech_augmented",
+            vec!["phase1-scratch".into(), "phase2-warm".into()],
+        ),
+    ];
+
+    let mut rows = Vec::new();
+    let mut best_by_phase = Vec::new();
+    let mut offset = 0.0;
+    for (name, objective, parents) in phases {
+        let request = TuningJobRequest {
+            name: name.into(),
+            objective: objective.into(),
+            strategy: "bayesian".into(),
+            max_training_jobs: evals,
+            max_parallel_jobs: 2,
+            warm_start_parents: parents.clone(),
+            seed: 17,
+            ..Default::default()
+        };
+        let job = service.create_tuning_job(request).expect("create");
+        let outcome = service.wait(&job).expect("wait");
+        // accuracy over (global) time: phases run back to back
+        for (t, v) in outcome.best_over_time(false) {
+            rows.push(vec![
+                name.to_string(),
+                format!("{:.1}h", (offset + t) / 3600.0),
+                format!("{v:.4}"),
+            ]);
+        }
+        let best = outcome.best.map(|b| b.1).unwrap_or(0.0);
+        best_by_phase.push((name.to_string(), best, parents.len()));
+        offset += outcome.total_seconds;
+    }
+
+    print_table(
+        "Fig 5: best validation accuracy so far over time (3 sequential jobs)",
+        &["phase", "time", "best accuracy"],
+        &rows,
+    );
+
+    let summary: Vec<Vec<String>> = best_by_phase
+        .iter()
+        .map(|(n, b, p)| vec![n.clone(), format!("{b:.4}"), p.to_string()])
+        .collect();
+    print_table(
+        "Fig 5 summary (paper: 0.33 -> 0.47 -> 0.52)",
+        &["phase", "best accuracy", "#parents"],
+        &summary,
+    );
+
+    assert!(
+        best_by_phase[1].1 >= best_by_phase[0].1 - 1e-9,
+        "warm-started phase 2 should not regress"
+    );
+    assert!(
+        best_by_phase[2].1 >= best_by_phase[1].1 - 0.02,
+        "augmented phase 3 should reach the highest accuracy"
+    );
+    println!(
+        "\nwarm start kept improving: {:.3} -> {:.3} -> {:.3}",
+        best_by_phase[0].1, best_by_phase[1].1, best_by_phase[2].1
+    );
+}

@@ -1,0 +1,76 @@
+//! Multi-objective extension demo (§8 Conclusion future work): search the
+//! Pareto frontier of validation error vs training cost for the image-
+//! classifier workload — "configurations that are optimal along several
+//! criteria", via ParEGO-style scalarization over the standard AMT BO
+//! engine.
+//!
+//! ```bash
+//! cargo run --release --example multi_objective [evals]
+//! ```
+
+use std::sync::Arc;
+
+use amt::gp::NativeBackend;
+use amt::harness::print_table;
+use amt::multiobjective::{hypervolume_2d, MultiObservation, ParEgoOptimizer};
+use amt::objectives::{Objective, SvmCapacity};
+use amt::strategies::BoConfig;
+
+fn main() {
+    let evals: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    // SVM capacity: accuracy improves with C while training cost grows —
+    // a genuine accuracy-vs-cost frontier (Fig 2's landscape, §5.1)
+    let workload = SvmCapacity;
+    let space = workload.space();
+
+    let mut opt = ParEgoOptimizer::new(
+        space,
+        Arc::new(NativeBackend),
+        BoConfig::default(),
+        2,
+        11,
+    );
+
+    // objectives (both minimized): classification error and training cost
+    let mut history: Vec<MultiObservation> = Vec::new();
+    for i in 0..evals {
+        let config = opt.next_config(&history, &[]);
+        let c = config.get("C").unwrap().as_f64().unwrap();
+        let error = 1.0 - SvmCapacity::accuracy(c);
+        let cost_hours =
+            workload.epoch_seconds(&config) * workload.max_epochs() as f64 / 3600.0;
+        history.push(MultiObservation { config, values: vec![error, cost_hours] });
+        let _ = i;
+    }
+
+    let front = opt.front(&history);
+    let mut rows: Vec<Vec<String>> = front
+        .iter()
+        .map(|o| {
+            vec![
+                format!("{:.4}", 1.0 - o.values[0]),
+                format!("{:.2}h", o.values[1]),
+                format!("{:.2e}", o.config.get("C").unwrap().as_f64().unwrap()),
+            ]
+        })
+        .collect();
+    rows.sort();
+    print_table(
+        "Pareto front: accuracy vs training cost",
+        &["accuracy", "train cost", "C"],
+        &rows,
+    );
+
+    let pts: Vec<(f64, f64)> = front.iter().map(|o| (o.values[0], o.values[1])).collect();
+    let hv = hypervolume_2d(&pts, (1.0, 1.0));
+    println!(
+        "\n{} evaluations -> {} non-dominated configurations, hypervolume {:.4} (ref (1.0, 1.0h))",
+        evals,
+        front.len(),
+        hv
+    );
+    assert!(front.len() >= 2, "expected a trade-off frontier");
+}

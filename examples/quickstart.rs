@@ -1,0 +1,54 @@
+//! Quickstart: tune the Branin function with Bayesian optimization through
+//! the full AMT service (API layer → workflow engine → training platform).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::platform::PlatformConfig;
+
+fn main() {
+    // 1. bring up the managed service (one platform timeline per job)
+    let service = AmtService::new(PlatformConfig::default());
+
+    // 2. describe what to tune: workload, strategy, budget, parallelism
+    let request = TuningJobRequest {
+        name: "quickstart".into(),
+        objective: "branin".into(),     // 2-d benchmark, minimum ≈ 0.3979
+        strategy: "bayesian".into(),    // GP + EI, slice-sampled GPHPs
+        max_training_jobs: 25,          // total evaluations
+        max_parallel_jobs: 2,           // asynchronous parallelism (§4.4)
+        early_stopping: "off".into(),
+        seed: 42,
+        ..Default::default()
+    };
+
+    // 3. CreateHyperParameterTuningJob + wait for the workflow
+    let name = service.create_tuning_job(request).expect("create");
+    let outcome = service.wait(&name).expect("wait");
+
+    // 4. inspect results
+    println!(
+        "finished: {:?}; {} evaluations in {:.0} simulated seconds",
+        outcome.status,
+        outcome.evaluations.len(),
+        outcome.total_seconds
+    );
+    let (config, best) = outcome.best.clone().expect("at least one evaluation");
+    println!("best branin value: {best:.5} (optimum 0.39789) at:");
+    for (k, v) in &config {
+        println!("  {k} = {v:?}");
+    }
+
+    println!("\nbest-so-far trajectory:");
+    for (t, v) in outcome.best_over_time(true) {
+        println!("  t = {t:>7.0}s   best = {v:.5}");
+    }
+
+    // the Describe API reads the same state from the metadata store
+    let summary = service.describe_tuning_job(&name).expect("describe");
+    println!("\nDescribeHyperParameterTuningJob: status = {}", summary.status);
+    assert!(best < 2.0, "BO should land near a Branin basin");
+}

@@ -1,0 +1,154 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the Rust ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and the project README.
+
+Artifacts (written to --out-dir, default ../artifacts):
+
+    kernel_matrix_n{N}.hlo.txt    N in BUCKETS        Gram matrix graph
+    posterior_ei_n{N}.hlo.txt     N in BUCKETS        EI / posterior graph
+    mlp_train_h{H}.hlo.txt        H in MLP_WIDTHS     one SGD epoch
+    mlp_eval_h{H}.hlo.txt         H in MLP_WIDTHS     val loss + accuracy
+    manifest.json                                     shape/layout metadata
+
+Run once via ``make artifacts``; Python never executes on the Rust request
+path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape contract shared with rust/src/runtime/registry.rs (via manifest.json).
+BUCKETS = [16, 32, 64, 128, 256, 512]
+ENCODED_DIM = 8  # padded encoded-configuration dimension D
+CAND_BATCH = 256  # acquisition candidate batch M
+THETA_DIM = 2 + 3 * ENCODED_DIM
+
+MLP_WIDTHS = [8, 32, 128]
+MLP_FEATURES = 10
+MLP_TRAIN_ROWS = 512
+MLP_VAL_ROWS = 256
+MLP_NUM_BATCHES = 8
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_kernel_matrix(n: int):
+    fn = lambda x, mask, theta: (model.kernel_matrix(x, mask, theta),)
+    return jax.jit(fn).lower(
+        _spec(n, ENCODED_DIM), _spec(n), _spec(THETA_DIM)
+    )
+
+
+def lower_posterior_ei(n: int):
+    fn = lambda *a: model.posterior_ei(*a)
+    return jax.jit(fn).lower(
+        _spec(n, ENCODED_DIM),
+        _spec(n),
+        _spec(THETA_DIM),
+        _spec(n, n),
+        _spec(n),
+        _spec(CAND_BATCH, ENCODED_DIM),
+        _spec(1),
+    )
+
+
+def lower_mlp_train(h: int):
+    fn = functools.partial(model.mlp_train_epoch, num_batches=MLP_NUM_BATCHES)
+    return jax.jit(fn).lower(
+        _spec(MLP_FEATURES, h),
+        _spec(h),
+        _spec(h),
+        _spec(1),
+        _spec(MLP_TRAIN_ROWS, MLP_FEATURES),
+        _spec(MLP_TRAIN_ROWS),
+        _spec(1),
+        _spec(1),
+    )
+
+
+def lower_mlp_eval(h: int):
+    return jax.jit(model.mlp_eval).lower(
+        _spec(MLP_FEATURES, h),
+        _spec(h),
+        _spec(h),
+        _spec(1),
+        _spec(MLP_VAL_ROWS, MLP_FEATURES),
+        _spec(MLP_VAL_ROWS),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact-name prefixes to (re)build",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = args.only.split(",") if args.only else None
+
+    jobs = []
+    for n in BUCKETS:
+        jobs.append((f"kernel_matrix_n{n}", lambda n=n: lower_kernel_matrix(n)))
+        jobs.append((f"posterior_ei_n{n}", lambda n=n: lower_posterior_ei(n)))
+    for h in MLP_WIDTHS:
+        jobs.append((f"mlp_train_h{h}", lambda h=h: lower_mlp_train(h)))
+        jobs.append((f"mlp_eval_h{h}", lambda h=h: lower_mlp_eval(h)))
+
+    for name, make in jobs:
+        if only and not any(name.startswith(p) for p in only):
+            continue
+        text = to_hlo_text(make())
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "buckets": BUCKETS,
+        "encoded_dim": ENCODED_DIM,
+        "cand_batch": CAND_BATCH,
+        "theta_dim": THETA_DIM,
+        "jitter": model.JITTER,
+        "mlp": {
+            "widths": MLP_WIDTHS,
+            "features": MLP_FEATURES,
+            "train_rows": MLP_TRAIN_ROWS,
+            "val_rows": MLP_VAL_ROWS,
+            "num_batches": MLP_NUM_BATCHES,
+        },
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

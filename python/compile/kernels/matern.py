@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: blocked pairwise Matérn-5/2 ARD covariance with fused
+Kumaraswamy input warping.
+
+This is the compute hot spot of the AMT Bayesian-optimization surrogate: it
+is evaluated for every slice-sampling likelihood query (kernel Gram matrix)
+and for every acquisition batch (cross covariance between candidates and the
+training set). The kernel is written so that the pairwise term runs as a
+matmul (MXU-friendly on a real TPU) via the expansion
+
+    r2[i, j] = |wa_i|^2 + |wb_j|^2 - 2 <wa_i, wb_j>
+
+where ``wa = kumaraswamy(x_a) / lengthscale`` is computed inside the block
+(fused warping — the warped matrix is never materialized in HBM).
+
+Lowered with ``interpret=True`` so the resulting HLO runs on any PJRT
+backend, including the Rust CPU client (real-TPU lowering would emit a
+Mosaic custom-call the CPU plugin cannot execute). See DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Numerical guards, shared with the pure-jnp oracle in ref.py.
+_EPS = 1e-6
+_SQRT5 = 2.2360679774997896
+
+
+def _kumaraswamy(x, a, b):
+    """Kumaraswamy CDF w(x) = 1 - (1 - x^a)^b on [0, 1], clipped for safety."""
+    xc = jnp.clip(x, _EPS, 1.0 - _EPS)
+    return 1.0 - (1.0 - xc**a) ** b
+
+
+def _matern52(r2, amp):
+    """Matérn-5/2 from squared distance; amp is the signal variance."""
+    r = jnp.sqrt(jnp.maximum(r2, 0.0))
+    return amp * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+
+
+def _cross_block_kernel(xa_ref, xb_ref, wa_ref, wb_ref, ils_ref, amp_ref, o_ref):
+    """One (bm, bn) output tile: warp both input tiles, scale by inverse
+    lengthscales, take pairwise squared distances via the matmul expansion,
+    and apply the Matérn-5/2 form."""
+    a = wa_ref[...]  # (1, D) warp a
+    b = wb_ref[...]  # (1, D) warp b
+    ils = ils_ref[...]  # (1, D) inverse lengthscales
+
+    wa = _kumaraswamy(xa_ref[...], a, b) * ils  # (bm, D)
+    wb = _kumaraswamy(xb_ref[...], a, b) * ils  # (bn, D)
+
+    na = jnp.sum(wa * wa, axis=1, keepdims=True)  # (bm, 1)
+    nb = jnp.sum(wb * wb, axis=1, keepdims=True)  # (bn, 1)
+    # MXU path: the only O(bm*bn*D) term is this dot.
+    cross = jnp.dot(wa, wb.T, preferred_element_type=jnp.float32)
+    r2 = na + nb.T - 2.0 * cross
+    o_ref[...] = _matern52(r2, amp_ref[0, 0])
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of ``n`` that is <= target (shapes here are powers of
+    two, so this returns min(n, target) in practice)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matern52_cross(xa, xb, warp_a, warp_b, inv_ls, amp, *, block_m=128, block_n=128):
+    """Pairwise warped Matérn-5/2 covariance K[i, j] = k(xa_i, xb_j).
+
+    Args:
+      xa: (M, D) float32 in [0, 1].
+      xb: (N, D) float32 in [0, 1].
+      warp_a, warp_b: (D,) Kumaraswamy shape parameters (positive).
+      inv_ls: (D,) inverse ARD lengthscales (positive).
+      amp: () signal variance.
+
+    Returns:
+      (M, N) float32 covariance matrix.
+    """
+    m, d = xa.shape
+    n, _ = xb.shape
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+
+    # Row-vector parameter layout so blocks broadcast cleanly.
+    wa_p = warp_a.reshape(1, d).astype(jnp.float32)
+    wb_p = warp_b.reshape(1, d).astype(jnp.float32)
+    ils_p = inv_ls.reshape(1, d).astype(jnp.float32)
+    amp_p = jnp.asarray(amp, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        _cross_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(
+        xa.astype(jnp.float32),
+        xb.astype(jnp.float32),
+        wa_p,
+        wb_p,
+        ils_p,
+        amp_p,
+    )
+
+
+def matern52_gram(x, warp_a, warp_b, inv_ls, amp, **kw):
+    """Gram matrix K(X, X) — same kernel, both operands the train matrix."""
+    return matern52_cross(x, x, warp_a, warp_b, inv_ls, amp, **kw)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Pallas Matérn-5/2 kernel (correctness reference).
+
+Deliberately written in the most direct O(M*N*D) broadcast style, with no
+blocking and no matmul expansion, so that any algebraic shortcut taken by
+the Pallas kernel is validated against first-principles math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-6
+_SQRT5 = 2.2360679774997896
+
+
+def kumaraswamy_ref(x, a, b):
+    """Kumaraswamy CDF, same clipping as the kernel."""
+    xc = jnp.clip(x, _EPS, 1.0 - _EPS)
+    return 1.0 - (1.0 - xc**a) ** b
+
+
+def matern52_cross_ref(xa, xb, warp_a, warp_b, inv_ls, amp):
+    """Reference pairwise warped Matérn-5/2 covariance.
+
+    Shapes match ``matern.matern52_cross``: xa (M, D), xb (N, D), parameter
+    vectors (D,), scalar amp; returns (M, N).
+    """
+    wa = kumaraswamy_ref(xa, warp_a[None, :], warp_b[None, :]) * inv_ls[None, :]
+    wb = kumaraswamy_ref(xb, warp_a[None, :], warp_b[None, :]) * inv_ls[None, :]
+    diff = wa[:, None, :] - wb[None, :, :]  # (M, N, D)
+    r2 = jnp.sum(diff * diff, axis=-1)
+    r = jnp.sqrt(jnp.maximum(r2, 0.0))
+    return amp * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+
+
+def matern52_gram_ref(x, warp_a, warp_b, inv_ls, amp):
+    return matern52_cross_ref(x, x, warp_a, warp_b, inv_ls, amp)

@@ -1,0 +1,182 @@
+"""L2: JAX compute graphs for the AMT Bayesian-optimization surrogate and the
+end-to-end demo model.
+
+Every public function here is AOT-lowered by ``aot.py`` into HLO text that
+the Rust coordinator loads through PJRT. All array shapes are static (one
+artifact per train-set-size bucket / model variant); variable-size training
+sets are handled with row masks. Scalars travel as shape-(1,) f32 arrays to
+keep the Rust literal marshalling uniform.
+
+GP hyperparameter (theta) packing, shared with ``rust/src/gp/theta.rs``::
+
+    theta = [ log_amp, log_noise,
+              log_ls[0..D), log_warp_a[0..D), log_warp_b[0..D) ]   # 2 + 3D
+
+The O(N^3) Cholesky lives in Rust (jax>=0.5 lowers linalg.cholesky on CPU to
+a LAPACK FFI custom-call that xla_extension 0.5.1 cannot run); these graphs
+cover everything else: Gram/cross kernels (Pallas, L1), posterior moments
+and expected improvement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matern
+
+JITTER = 1e-6
+_INV_SQRT2 = 0.7071067811865476
+_INV_SQRT_2PI = 0.3989422804014327
+
+
+def unpack_theta(theta, d):
+    """Split a packed theta vector into positive GP hyperparameters."""
+    log_amp = theta[0]
+    log_noise = theta[1]
+    log_ls = theta[2 : 2 + d]
+    log_a = theta[2 + d : 2 + 2 * d]
+    log_b = theta[2 + 2 * d : 2 + 3 * d]
+    return (
+        jnp.exp(log_amp),
+        jnp.exp(log_noise),
+        jnp.exp(log_ls),
+        jnp.exp(log_a),
+        jnp.exp(log_b),
+    )
+
+
+def kernel_matrix(x, mask, theta):
+    """Masked, regularized GP Gram matrix.
+
+    Rows where ``mask == 0`` are replaced with identity rows so that a
+    Cholesky of the result ignores padding: the padded subspace contributes
+    log-det 0 and decouples from live rows.
+
+    Args:
+      x: (N, D) encoded configurations in [0, 1].
+      mask: (N,) {0, 1} float; 1 = live training row.
+      theta: (2 + 3D,) packed GP hyperparameters.
+
+    Returns:
+      (N, N) matrix ``(m m^T) * K + diag((1 - m) + m*(noise + jitter))``.
+    """
+    n, d = x.shape
+    amp, noise, ls, wa, wb = unpack_theta(theta, d)
+    k = matern.matern52_gram(x, wa, wb, 1.0 / ls, amp)
+    mm = mask[:, None] * mask[None, :]
+    diag = (1.0 - mask) + mask * (noise + JITTER)
+    return mm * k + jnp.diag(diag)
+
+
+def _norm_pdf(z):
+    return _INV_SQRT_2PI * jnp.exp(-0.5 * z * z)
+
+
+def _erf(x):
+    """Abramowitz–Stegun 7.1.26 polynomial erf (|err| < 1.5e-7).
+
+    Deliberately NOT ``jax.lax.erf``: that lowers to a first-class ``erf``
+    HLO opcode which xla_extension 0.5.1's text parser predates ("Unknown
+    opcode: erf"), so the artifact would silently fall back to the native
+    path. This is also bit-comparable to ``rust/src/gp/mod.rs::erf``, which
+    uses the same polynomial.
+    """
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = t * (
+        0.254829592
+        + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429)))
+    )
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _norm_cdf(z):
+    return 0.5 * (1.0 + _erf(z * _INV_SQRT2))
+
+
+def posterior_ei(x_train, mask, theta, k_inv, alpha, x_cand, y_best):
+    """Posterior moments and expected improvement at a candidate batch.
+
+    The Rust side factorizes K = L L^T once per theta sample and passes in
+    ``k_inv = K^{-1}`` and ``alpha = K^{-1} y``; this graph then scores an
+    arbitrary candidate batch:
+
+        mu    = Kx alpha
+        var   = amp - rowsum((Kx K^{-1}) * Kx)
+        EI    = sigma * (z Phi(z) + phi(z)),  z = (y_best - mu) / sigma
+
+    Args:
+      x_train: (N, D); mask: (N,); theta: (2 + 3D,)
+      k_inv: (N, N); alpha: (N,)
+      x_cand: (M, D); y_best: (1,) incumbent (minimization).
+
+    Returns:
+      (ei, mu, var): three (M,) vectors.
+    """
+    _, d = x_train.shape
+    amp, _, ls, wa, wb = unpack_theta(theta, d)
+    kx = matern.matern52_cross(x_cand, x_train, wa, wb, 1.0 / ls, amp)
+    kx = kx * mask[None, :]  # padded columns contribute nothing
+    mu = kx @ alpha
+    var = amp - jnp.sum((kx @ k_inv) * kx, axis=1)
+    var = jnp.maximum(var, 1e-12)
+    sigma = jnp.sqrt(var)
+    z = (y_best[0] - mu) / sigma
+    ei = sigma * (z * _norm_cdf(z) + _norm_pdf(z))
+    return ei, mu, var
+
+
+# ---------------------------------------------------------------------------
+# End-to-end demo model: a small MLP binary classifier trained entirely
+# through AOT artifacts (the "real workload" of examples/end_to_end.rs).
+# One train/eval artifact pair per hidden width H (a categorical HP).
+# ---------------------------------------------------------------------------
+
+
+def _mlp_logits(w1, b1, w2, b2, x):
+    h = jnp.tanh(x @ w1 + b1[None, :])
+    return h @ w2 + b2[0]
+
+
+def _mlp_loss(params, x, y, l2):
+    w1, b1, w2, b2 = params
+    logits = _mlp_logits(w1, b1, w2, b2, x)
+    # numerically stable logistic loss
+    nll = jnp.mean(jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    reg = l2 * (jnp.sum(w1 * w1) + jnp.sum(w2 * w2))
+    return nll + reg
+
+
+def mlp_train_epoch(w1, b1, w2, b2, x, y, lr, l2, num_batches: int):
+    """One epoch of minibatch SGD; returns updated params and mean loss.
+
+    x: (B, F), y: (B,) with B divisible by num_batches; lr, l2: (1,).
+    """
+    b = x.shape[0]
+    mb = b // num_batches
+    grad_fn = jax.value_and_grad(_mlp_loss)
+
+    def body(i, carry):
+        params, loss_acc = carry
+        xb = jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+        yb = jax.lax.dynamic_slice_in_dim(y, i * mb, mb, axis=0)
+        loss, grads = grad_fn(params, xb, yb, l2[0])
+        params = tuple(p - lr[0] * g for p, g in zip(params, grads))
+        return params, loss_acc + loss
+
+    (w1, b1, w2, b2), loss_sum = jax.lax.fori_loop(
+        0, num_batches, body, ((w1, b1, w2, b2), jnp.float32(0.0))
+    )
+    return w1, b1, w2, b2, (loss_sum / num_batches).reshape(1)
+
+
+def mlp_eval(w1, b1, w2, b2, x, y):
+    """Validation loss and accuracy; returns two (1,) vectors."""
+    logits = _mlp_logits(w1, b1, w2, b2, x)
+    nll = jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    acc = jnp.mean(((logits > 0.0).astype(jnp.float32) == y).astype(jnp.float32))
+    return nll.reshape(1), acc.reshape(1)

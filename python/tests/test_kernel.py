@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas Matérn-5/2 kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (incl. non-square, block-boundary and tiny sizes)
+and parameter magnitudes; every case asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matern, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.uniform(0.0, 1.0, size=shape), jnp.float32)
+
+
+def _params(rng, d, warped=True):
+    if warped:
+        wa = jnp.asarray(rng.uniform(0.3, 3.0, size=d), jnp.float32)
+        wb = jnp.asarray(rng.uniform(0.3, 3.0, size=d), jnp.float32)
+    else:
+        wa = jnp.ones(d, jnp.float32)
+        wb = jnp.ones(d, jnp.float32)
+    ils = jnp.asarray(1.0 / rng.uniform(0.05, 2.0, size=d), jnp.float32)
+    amp = jnp.float32(rng.uniform(0.1, 3.0))
+    return wa, wb, ils, amp
+
+
+def _check(xa, xb, wa, wb, ils, amp, atol=2e-5):
+    got = matern.matern52_cross(xa, xb, wa, wb, ils, amp)
+    want = ref.matern52_cross_ref(xa, xb, wa, wb, ils, amp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=atol)
+
+
+@pytest.mark.parametrize("m,n", [(16, 16), (256, 64), (128, 128), (256, 512), (512, 512)])
+def test_cross_matches_ref_bucket_shapes(m, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    d = 8
+    xa, xb = _rand(rng, m, d), _rand(rng, n, d)
+    _check(xa, xb, *_params(rng, d))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 3, 5, 8, 16, 48, 130]),
+    n=st.sampled_from([1, 2, 4, 7, 16, 96, 129]),
+    d=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+    warped=st.booleans(),
+)
+def test_cross_matches_ref_hypothesis(m, n, d, seed, warped):
+    rng = np.random.default_rng(seed)
+    xa, xb = _rand(rng, m, d), _rand(rng, n, d)
+    _check(xa, xb, *_params(rng, d, warped))
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(7)
+    x = _rand(rng, 64, 8)
+    wa, wb, ils, amp = _params(rng, 8)
+    k = np.asarray(matern.matern52_gram(x, wa, wb, ils, amp), np.float64)
+    np.testing.assert_allclose(k, k.T, atol=1e-6)
+    evals = np.linalg.eigvalsh(k + 1e-6 * np.eye(64))
+    assert evals.min() > 0, f"Gram not PSD: min eigenvalue {evals.min()}"
+
+
+def test_diagonal_equals_amplitude():
+    rng = np.random.default_rng(11)
+    x = _rand(rng, 32, 4)
+    wa, wb, ils, amp = _params(rng, 4)
+    k = np.asarray(matern.matern52_gram(x, wa, wb, ils, amp))
+    np.testing.assert_allclose(np.diag(k), np.full(32, float(amp)), rtol=1e-5)
+
+
+def test_identity_warp_reduces_to_plain_matern():
+    """With a=b=1 the Kumaraswamy CDF is (numerically) the identity."""
+    rng = np.random.default_rng(13)
+    d = 6
+    xa, xb = _rand(rng, 32, d), _rand(rng, 16, d)
+    ones = jnp.ones(d, jnp.float32)
+    ils = jnp.asarray(1.0 / rng.uniform(0.1, 1.0, size=d), jnp.float32)
+    amp = jnp.float32(1.5)
+    got = np.asarray(matern.matern52_cross(xa, xb, ones, ones, ils, amp))
+    # plain Matérn on raw (clipped) inputs
+    want = np.asarray(ref.matern52_cross_ref(xa, xb, ones, ones, ils, amp))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-5)
+
+
+def test_kernel_decays_with_distance():
+    d = 2
+    wa = jnp.ones(d, jnp.float32)
+    ils = jnp.full(d, 5.0, jnp.float32)
+    amp = jnp.float32(1.0)
+    base = jnp.zeros((1, d), jnp.float32)
+    pts = jnp.asarray([[0.1, 0.1], [0.4, 0.4], [0.9, 0.9]], jnp.float32)
+    k = np.asarray(matern.matern52_cross(base, pts, wa, wa, ils, amp))[0]
+    assert k[0] > k[1] > k[2] > 0.0
+
+
+def test_float64_inputs_are_cast():
+    rng = np.random.default_rng(3)
+    xa = jnp.asarray(rng.uniform(size=(16, 4)))  # f32 by default in jax, but be explicit
+    wa, wb, ils, amp = _params(rng, 4)
+    out = matern.matern52_cross(xa.astype(jnp.float32), xa.astype(jnp.float32), wa, wb, ils, amp)
+    assert out.dtype == jnp.float32
+
+
+def test_kumaraswamy_monotone_and_bounded():
+    x = jnp.linspace(0.0, 1.0, 101)
+    for a, b in [(0.5, 0.5), (1.0, 1.0), (2.0, 3.0), (0.3, 4.0)]:
+        w = np.asarray(ref.kumaraswamy_ref(x, a, b))
+        assert (np.diff(w) >= -1e-7).all()
+        assert w.min() >= 0.0 and w.max() <= 1.0

@@ -1,0 +1,238 @@
+"""L2 correctness: GP graphs against a from-scratch numpy GP, and the MLP
+training graphs against basic learning behaviour.
+
+These are the same checks the Rust integration tests perform against the
+compiled artifacts; here they validate the *math* at the JAX level.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+D = 8
+
+
+def _theta(rng, d=D):
+    # mild, well-conditioned hyperparameters
+    log_amp = np.log(rng.uniform(0.5, 2.0))
+    log_noise = np.log(rng.uniform(1e-3, 1e-1))
+    log_ls = np.log(rng.uniform(0.2, 1.0, size=d))
+    log_a = np.log(rng.uniform(0.7, 1.4, size=d))
+    log_b = np.log(rng.uniform(0.7, 1.4, size=d))
+    return jnp.asarray(
+        np.concatenate([[log_amp, log_noise], log_ls, log_a, log_b]), jnp.float32
+    )
+
+
+def _numpy_kernel(x, theta):
+    th = np.asarray(theta, np.float64)
+    d = x.shape[1]
+    amp, noise = np.exp(th[0]), np.exp(th[1])
+    ls = np.exp(th[2 : 2 + d])
+    wa = np.exp(th[2 + d : 2 + 2 * d])
+    wb = np.exp(th[2 + 2 * d : 2 + 3 * d])
+    k = np.asarray(
+        ref.matern52_cross_ref(
+            jnp.asarray(x, jnp.float32),
+            jnp.asarray(x, jnp.float32),
+            jnp.asarray(wa, jnp.float32),
+            jnp.asarray(wb, jnp.float32),
+            jnp.asarray(1.0 / ls, jnp.float32),
+            jnp.float32(amp),
+        ),
+        np.float64,
+    )
+    return k, amp, noise
+
+
+def test_kernel_matrix_masking_identity_rows():
+    rng = np.random.default_rng(0)
+    n, live = 32, 20
+    x = rng.uniform(size=(n, D)).astype(np.float32)
+    mask = np.zeros(n, np.float32)
+    mask[:live] = 1.0
+    theta = _theta(rng)
+    k = np.asarray(model.kernel_matrix(jnp.asarray(x), jnp.asarray(mask), theta))
+    # dead rows/cols are exactly identity
+    for i in range(live, n):
+        np.testing.assert_allclose(k[i], np.eye(n)[i], atol=1e-7)
+        np.testing.assert_allclose(k[:, i], np.eye(n)[i], atol=1e-7)
+    # live block equals the raw kernel + (noise + jitter) I
+    kr, _, noise = _numpy_kernel(x[:live], theta)
+    np.testing.assert_allclose(
+        k[:live, :live], kr + (noise + model.JITTER) * np.eye(live), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_kernel_matrix_is_choleskyable_under_padding():
+    rng = np.random.default_rng(1)
+    for live in [1, 5, 16]:
+        n = 16
+        x = rng.uniform(size=(n, D)).astype(np.float32)
+        mask = np.zeros(n, np.float32)
+        mask[:live] = 1.0
+        k = np.asarray(
+            model.kernel_matrix(jnp.asarray(x), jnp.asarray(mask), _theta(rng)),
+            np.float64,
+        )
+        np.linalg.cholesky(k)  # raises if not PD
+
+
+def test_posterior_ei_matches_numpy_gp():
+    rng = np.random.default_rng(2)
+    n, m, live = 32, 256, 24
+    x = rng.uniform(size=(n, D)).astype(np.float32)
+    x[live:] = 0.0
+    y = rng.normal(size=n).astype(np.float32)
+    y[live:] = 0.0
+    mask = np.zeros(n, np.float32)
+    mask[:live] = 1.0
+    theta = _theta(rng)
+    xc = rng.uniform(size=(m, D)).astype(np.float32)
+
+    k = np.asarray(model.kernel_matrix(jnp.asarray(x), jnp.asarray(mask), theta), np.float64)
+    k_inv = np.linalg.inv(k)
+    alpha = k_inv @ y
+    y_best = float(y[:live].min())
+
+    ei, mu, var = model.posterior_ei(
+        jnp.asarray(x),
+        jnp.asarray(mask),
+        theta,
+        jnp.asarray(k_inv, jnp.float32),
+        jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(xc),
+        jnp.asarray([y_best], jnp.float32),
+    )
+
+    # independent numpy computation on the live block only
+    th = np.asarray(theta, np.float64)
+    amp = np.exp(th[0])
+    ls = np.exp(th[2 : 2 + D])
+    wa = np.exp(th[2 + D : 2 + 2 * D])
+    wb = np.exp(th[2 + 2 * D : 2 + 3 * D])
+    kx = np.asarray(
+        ref.matern52_cross_ref(
+            jnp.asarray(xc),
+            jnp.asarray(x[:live]),
+            jnp.asarray(wa, jnp.float32),
+            jnp.asarray(wb, jnp.float32),
+            jnp.asarray(1.0 / ls, jnp.float32),
+            jnp.float32(amp),
+        ),
+        np.float64,
+    )
+    k_live = k[:live, :live]
+    k_live_inv = np.linalg.inv(k_live)
+    mu_np = kx @ (k_live_inv @ y[:live])
+    var_np = amp - np.sum((kx @ k_live_inv) * kx, axis=1)
+    np.testing.assert_allclose(np.asarray(mu), mu_np, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(var), np.maximum(var_np, 1e-12), rtol=2e-3, atol=1e-4)
+
+    sigma = np.sqrt(np.maximum(var_np, 1e-12))
+    z = (y_best - mu_np) / sigma
+    from scipy.stats import norm as _norm  # noqa: PLC0415
+
+    ei_np = sigma * (z * _norm.cdf(z) + _norm.pdf(z))
+    np.testing.assert_allclose(np.asarray(ei), ei_np, rtol=2e-3, atol=1e-4)
+
+
+def test_ei_zero_when_far_worse():
+    """EI at a candidate with mu >> y_best and tiny sigma must be ~0."""
+    rng = np.random.default_rng(5)
+    n, live = 16, 16
+    x = rng.uniform(size=(n, D)).astype(np.float32)
+    y = (10.0 + rng.normal(size=n)).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    theta = _theta(rng)
+    k = np.asarray(model.kernel_matrix(jnp.asarray(x), jnp.asarray(mask), theta), np.float64)
+    k_inv = np.linalg.inv(k)
+    alpha = k_inv @ y
+    # candidates at the training points: tiny sigma, mu ≈ 10 >> y_best = -10
+    xc = np.tile(x, (16, 1))[:256]
+    ei, _, _ = model.posterior_ei(
+        jnp.asarray(x), jnp.asarray(mask), theta,
+        jnp.asarray(k_inv, jnp.float32), jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(xc, jnp.float32), jnp.asarray([-10.0], jnp.float32),
+    )
+    assert float(np.max(np.asarray(ei))) < 1e-3
+
+
+def test_ei_positive_under_uncertainty():
+    rng = np.random.default_rng(6)
+    n = 16
+    x = (0.5 * np.ones((n, D))).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    theta = _theta(rng)
+    k = np.asarray(model.kernel_matrix(jnp.asarray(x), jnp.asarray(mask), theta), np.float64)
+    k_inv = np.linalg.inv(k)
+    alpha = k_inv @ y
+    # far-away candidates: posterior ≈ prior, sigma large, EI > 0
+    xc = np.zeros((256, D), np.float32)
+    xc[:, 0] = np.linspace(0.0, 1.0, 256)
+    ei, _, var = model.posterior_ei(
+        jnp.asarray(x), jnp.asarray(mask), theta,
+        jnp.asarray(k_inv, jnp.float32), jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(xc), jnp.asarray([float(y.min())], jnp.float32),
+    )
+    assert float(np.asarray(ei).max()) > 1e-4
+    assert float(np.asarray(var).min()) >= 0.0
+
+
+# --------------------------- MLP graphs -----------------------------------
+
+
+def _toy_data(rng, rows, f=10, w=None):
+    x = rng.normal(size=(rows, f)).astype(np.float32)
+    if w is None:
+        w = rng.normal(size=f)
+    y = (x @ w + 0.1 * rng.normal(size=rows) > 0).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y), w
+
+
+def _init(rng, f, h):
+    return (
+        jnp.asarray(rng.normal(size=(f, h)) * 0.3, jnp.float32),
+        jnp.zeros(h, jnp.float32),
+        jnp.asarray(rng.normal(size=h) * 0.3, jnp.float32),
+        jnp.zeros(1, jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("h", [8, 32])
+def test_mlp_training_reduces_loss(h):
+    rng = np.random.default_rng(42)
+    x, y, w = _toy_data(rng, 512)
+    xv, yv, _ = _toy_data(rng, 256, w=w)  # same labeling function as train
+    w1, b1, w2, b2 = _init(rng, 10, h)
+    lr = jnp.asarray([0.03], jnp.float32)
+    l2 = jnp.asarray([1e-4], jnp.float32)
+    loss0, acc0 = model.mlp_eval(w1, b1, w2, b2, xv, yv)
+    for _ in range(40):
+        w1, b1, w2, b2, _tr = model.mlp_train_epoch(
+            w1, b1, w2, b2, x, y, lr, l2, num_batches=8
+        )
+    loss1, acc1 = model.mlp_eval(w1, b1, w2, b2, xv, yv)
+    assert float(loss1[0]) < float(loss0[0])
+    assert float(acc1[0]) > 0.8, f"accuracy {float(acc1[0])} too low"
+
+
+def test_mlp_l2_shrinks_weights():
+    rng = np.random.default_rng(1)
+    x, y, _ = _toy_data(rng, 512)
+    params_lo = _init(rng, 10, 8)
+    params_hi = tuple(jnp.array(p) for p in params_lo)
+    lr = jnp.asarray([0.05], jnp.float32)
+    for _ in range(10):
+        *params_lo, _ = model.mlp_train_epoch(*params_lo, x, y, lr, jnp.asarray([0.0], jnp.float32), num_batches=8)
+        *params_hi, _ = model.mlp_train_epoch(*params_hi, x, y, lr, jnp.asarray([0.05], jnp.float32), num_batches=8)
+    n_lo = float(jnp.sum(params_lo[0] ** 2))
+    n_hi = float(jnp.sum(params_hi[0] ** 2))
+    assert n_hi < n_lo

@@ -1,0 +1,373 @@
+//! Acquisition functions and their optimization (§4.3–§4.4).
+//!
+//! AMT's scheme, reproduced here: a Sobol sequence populates the encoded
+//! search space with a dense pseudo-random grid; marginal posterior scores
+//! are evaluated at those anchors in one batch (the AOT `posterior_ei`
+//! artifact, or the native backend); the top anchors seed a local
+//! Nelder–Mead optimization of the EI; and an asynchronous-parallelism
+//! penalty keeps new proposals away from the L−1 *pending* candidates so a
+//! worker slot freed mid-tuning never receives a duplicate suggestion
+//! (§4.4: "making sure, of course, not to select one of the L−1 pending
+//! candidates", with diversity induced through the acquisition optimizer).
+
+use crate::gp::fit::{nelder_mead, NmOptions};
+use crate::gp::{GpModel, Score, SurrogateBackend};
+use crate::rng::Rng;
+use crate::sobol::Sobol;
+
+/// Which acquisition rule picks the next candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcquisitionKind {
+    /// Expected improvement (AMT's default).
+    ExpectedImprovement,
+    /// Marginal Thompson sampling on the Sobol grid (the tractable
+    /// approximation described in §4.3).
+    ThompsonMarginal,
+    /// Cost-aware EI (§4.3's "alternative acquisition functions to make
+    /// the EI cost-aware and steer the hyperparameter search towards
+    /// cheaper configurations", Lee et al. / Guinet et al.):
+    /// EI(x) / cost(x)^alpha with the exponent in per-mille (integer to
+    /// keep the config `Copy`; 1000 = EI-per-unit-cost, 0 = plain EI).
+    CostAwareEi { alpha_millis: u32 },
+}
+
+/// Acquisition optimizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AcquisitionConfig {
+    /// Acquisition rule.
+    pub kind: AcquisitionKind,
+    /// Number of Sobol anchor points scored per proposal.
+    pub num_anchors: usize,
+    /// How many top anchors get a local EI optimization.
+    pub num_local_starts: usize,
+    /// Max function evaluations per local optimization.
+    pub local_evals: usize,
+    /// Radius of the pending-candidate exclusion penalty (encoded units).
+    pub exclusion_radius: f64,
+}
+
+impl Default for AcquisitionConfig {
+    fn default() -> Self {
+        AcquisitionConfig {
+            kind: AcquisitionKind::ExpectedImprovement,
+            num_anchors: 512,
+            num_local_starts: 3,
+            local_evals: 60,
+            exclusion_radius: 0.08,
+        }
+    }
+}
+
+/// Multiplicative penalty pushing proposals away from pending evaluations:
+/// ∏ (1 − exp(−‖x − p‖² / r²)). 0 at a pending point, →1 far away.
+pub fn pending_penalty(x: &[f64], pending: &[Vec<f64>], radius: f64) -> f64 {
+    let mut m = 1.0;
+    for p in pending {
+        let d2: f64 = x.iter().zip(p).map(|(a, b)| (a - b) * (a - b)).sum();
+        m *= 1.0 - (-d2 / (radius * radius)).exp();
+    }
+    m
+}
+
+/// Result of one acquisition round.
+#[derive(Clone, Debug)]
+pub struct Proposal {
+    /// Encoded location of the chosen candidate.
+    pub x: Vec<f64>,
+    /// Acquisition value at the choice (penalized).
+    pub acq_value: f64,
+    /// Posterior score at the choice.
+    pub score: Score,
+}
+
+/// Evaluation-cost model over encoded configurations, used by
+/// [`AcquisitionKind::CostAwareEi`] (e.g. predicted training seconds).
+pub type CostModel = std::sync::Arc<dyn Fn(&[f64]) -> f64 + Send + Sync>;
+
+/// Propose the next encoded candidate.
+///
+/// `dim` is the encoded dimension; `pending` holds encoded locations whose
+/// evaluations are still running (asynchronous mode).
+pub fn propose(
+    model: &GpModel,
+    backend: &dyn SurrogateBackend,
+    dim: usize,
+    pending: &[Vec<f64>],
+    config: &AcquisitionConfig,
+    rng: &mut Rng,
+) -> Proposal {
+    propose_with_cost(model, backend, dim, pending, config, rng, None)
+}
+
+/// [`propose`] with an optional cost model for cost-aware EI.
+#[allow(clippy::too_many_arguments)]
+pub fn propose_with_cost(
+    model: &GpModel,
+    backend: &dyn SurrogateBackend,
+    dim: usize,
+    pending: &[Vec<f64>],
+    config: &AcquisitionConfig,
+    rng: &mut Rng,
+    cost: Option<&CostModel>,
+) -> Proposal {
+    // 1. Sobol anchor grid (§4.3: "populating the search space as densely
+    //    as possible"), plus a few uniform points to break Sobol alignment
+    //    across repeated calls.
+    let sdim = dim.min(crate::sobol::MAX_DIM);
+    let mut sobol = Sobol::new(sdim);
+    let mut anchors = sobol.take_points(config.num_anchors);
+    for a in anchors.iter_mut() {
+        while a.len() < dim {
+            let l = a.len();
+            a.push(a[l % sdim]);
+        }
+    }
+    for _ in 0..config.num_anchors / 8 {
+        anchors.push((0..dim).map(|_| rng.uniform()).collect());
+    }
+
+    // 2. batch-score all anchors (one artifact execution per theta sample)
+    let scores = model.score(backend, &anchors);
+
+    // 3. anchor utility
+    let cost_factor = |x: &[f64]| -> f64 {
+        match (config.kind, cost) {
+            (AcquisitionKind::CostAwareEi { alpha_millis }, Some(c)) => {
+                let alpha = alpha_millis as f64 / 1000.0;
+                1.0 / c(x).max(1e-9).powf(alpha)
+            }
+            _ => 1.0,
+        }
+    };
+    let mut ranked: Vec<(usize, f64)> = scores
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let pen = pending_penalty(&anchors[i], pending, config.exclusion_radius);
+            let u = match config.kind {
+                AcquisitionKind::ExpectedImprovement => s.ei * pen,
+                AcquisitionKind::CostAwareEi { .. } => {
+                    s.ei * pen * cost_factor(&anchors[i])
+                }
+                AcquisitionKind::ThompsonMarginal => {
+                    let draw = s.mu + s.var.max(1e-12).sqrt() * rng.normal();
+                    -draw * pen.max(1e-9)
+                }
+            };
+            (i, u)
+        })
+        .collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    // Thompson: return the best grid draw directly (its classic form)
+    if config.kind == AcquisitionKind::ThompsonMarginal {
+        let (idx, val) = ranked[0];
+        return Proposal { x: anchors[idx].clone(), acq_value: val, score: scores[idx] };
+    }
+
+    // 4. local EI refinement from the top anchors (§4.3: the pseudo-random
+    //    grid is "a set of anchor points to initialize the local
+    //    optimization of the EI")
+    let neg_ei = |x: &[f64]| -> Option<f64> {
+        if x.iter().any(|v| !(0.0..=1.0).contains(v)) {
+            return None; // clamp by rejection: keeps NM inside the cube
+        }
+        let s = model.score(backend, &[x.to_vec()]);
+        Some(
+            -s[0].ei
+                * pending_penalty(x, pending, config.exclusion_radius)
+                * cost_factor(x),
+        )
+    };
+
+    let mut best_x = anchors[ranked[0].0].clone();
+    let mut best_v = ranked[0].1;
+    for &(idx, anchor_val) in ranked.iter().take(config.num_local_starts) {
+        let (x_loc, f_loc) = nelder_mead(
+            neg_ei,
+            &anchors[idx],
+            &NmOptions { max_evals: config.local_evals, init_step: 0.05, f_tol: 1e-12 },
+        );
+        let v = -f_loc;
+        if v > best_v {
+            best_v = v;
+            best_x = x_loc;
+        } else if anchor_val > best_v {
+            best_v = anchor_val;
+            best_x = anchors[idx].clone();
+        }
+    }
+    for v in best_x.iter_mut() {
+        *v = v.clamp(0.0, 1.0);
+    }
+    let score = model.score(backend, &[best_x.clone()])[0];
+    Proposal { x: best_x, acq_value: best_v, score }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{NativeBackend, Theta};
+
+    fn fitted_model(seed: u64) -> GpModel {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> =
+            (0..15).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+        // minimum near (0.25, 0.75)
+        let y: Vec<f64> = x
+            .iter()
+            .map(|p| (p[0] - 0.25).powi(2) + (p[1] - 0.75).powi(2) + 0.01 * rng.normal())
+            .collect();
+        GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap()
+    }
+
+    #[test]
+    fn pending_penalty_zero_at_pending_one_far() {
+        let pending = vec![vec![0.5, 0.5]];
+        assert!(pending_penalty(&[0.5, 0.5], &pending, 0.1) < 1e-9);
+        assert!(pending_penalty(&[0.0, 0.0], &pending, 0.1) > 0.999);
+        assert_eq!(pending_penalty(&[0.3, 0.3], &[], 0.1), 1.0);
+    }
+
+    #[test]
+    fn proposal_is_in_unit_cube() {
+        let model = fitted_model(1);
+        let mut rng = Rng::new(2);
+        let p = propose(
+            &model,
+            &NativeBackend,
+            2,
+            &[],
+            &AcquisitionConfig { num_anchors: 64, ..Default::default() },
+            &mut rng,
+        );
+        assert_eq!(p.x.len(), 2);
+        for v in &p.x {
+            assert!((0.0..=1.0).contains(v));
+        }
+        assert!(p.acq_value >= 0.0);
+    }
+
+    #[test]
+    fn proposal_gravitates_to_good_region() {
+        let model = fitted_model(3);
+        let mut rng = Rng::new(4);
+        let p = propose(
+            &model,
+            &NativeBackend,
+            2,
+            &[],
+            &AcquisitionConfig { num_anchors: 256, ..Default::default() },
+            &mut rng,
+        );
+        // minimum is at (0.25, 0.75); EI should propose within a reasonable ball
+        let d = ((p.x[0] - 0.25).powi(2) + (p.x[1] - 0.75).powi(2)).sqrt();
+        assert!(d < 0.45, "proposal {:?} too far from optimum", p.x);
+    }
+
+    #[test]
+    fn pending_exclusion_moves_proposal() {
+        let model = fitted_model(5);
+        let cfg = AcquisitionConfig { num_anchors: 256, ..Default::default() };
+        let mut rng = Rng::new(6);
+        let first = propose(&model, &NativeBackend, 2, &[], &cfg, &mut rng);
+        // now pretend `first` is pending: next proposal must be elsewhere
+        let mut rng = Rng::new(6);
+        let second =
+            propose(&model, &NativeBackend, 2, &[first.x.clone()], &cfg, &mut rng);
+        let d: f64 = first
+            .x
+            .iter()
+            .zip(&second.x)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(d > 0.02, "pending exclusion ignored: d={d}");
+    }
+
+    #[test]
+    fn thompson_marginal_returns_grid_point() {
+        let model = fitted_model(7);
+        let mut rng = Rng::new(8);
+        let cfg = AcquisitionConfig {
+            kind: AcquisitionKind::ThompsonMarginal,
+            num_anchors: 128,
+            ..Default::default()
+        };
+        let p = propose(&model, &NativeBackend, 2, &[], &cfg, &mut rng);
+        for v in &p.x {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+
+    #[test]
+    fn cost_aware_ei_prefers_cheaper_region() {
+        // two symmetric minima; the cost model makes the x0>0.5 half 10x
+        // more expensive — cost-aware EI should propose in the cheap half
+        let mut rng = Rng::new(21);
+        let x: Vec<Vec<f64>> =
+            (0..20).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|p| {
+                let d1 = (p[0] - 0.2).powi(2) + (p[1] - 0.5).powi(2);
+                let d2 = (p[0] - 0.8).powi(2) + (p[1] - 0.5).powi(2);
+                d1.min(d2)
+            })
+            .collect();
+        let model =
+            GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap();
+        let cost: super::CostModel =
+            std::sync::Arc::new(|p: &[f64]| if p[0] > 0.5 { 10.0 } else { 1.0 });
+        let cfg = AcquisitionConfig {
+            kind: AcquisitionKind::CostAwareEi { alpha_millis: 1000 },
+            num_anchors: 256,
+            ..Default::default()
+        };
+        let mut cheap_wins = 0;
+        for seed in 0..5 {
+            let mut rng = Rng::new(100 + seed);
+            let p = super::propose_with_cost(
+                &model, &NativeBackend, 2, &[], &cfg, &mut rng, Some(&cost),
+            );
+            if p.x[0] <= 0.5 {
+                cheap_wins += 1;
+            }
+        }
+        assert!(cheap_wins >= 4, "cost-aware EI chose the expensive half: {cheap_wins}/5");
+    }
+
+    #[test]
+    fn local_refinement_beats_plain_grid() {
+        // with very few anchors the local optimizer must still find high EI
+        let model = fitted_model(9);
+        let mut rng_a = Rng::new(10);
+        let coarse = propose(
+            &model,
+            &NativeBackend,
+            2,
+            &[],
+            &AcquisitionConfig {
+                num_anchors: 8,
+                num_local_starts: 0,
+                ..Default::default()
+            },
+            &mut rng_a,
+        );
+        let mut rng_b = Rng::new(10);
+        let refined = propose(
+            &model,
+            &NativeBackend,
+            2,
+            &[],
+            &AcquisitionConfig {
+                num_anchors: 8,
+                num_local_starts: 3,
+                local_evals: 120,
+                ..Default::default()
+            },
+            &mut rng_b,
+        );
+        assert!(refined.acq_value >= coarse.acq_value - 1e-12);
+    }
+}

@@ -1,0 +1,468 @@
+//! API layer (§3.2): Create / Describe / List / Stop HyperParameterTuningJob.
+//!
+//! The AWS deployment fronts these with API Gateway + Lambda; here they are
+//! methods on [`AmtService`], the in-process service facade. Semantics
+//! match the paper's design requirements:
+//!
+//! * synchronous APIs validate and persist to the metadata store before
+//!   returning (the §3.1 availability pillar — the §6.5 soak bench measures
+//!   their success rate under load);
+//! * the asynchronous tuning workflow runs on background worker threads,
+//!   one platform timeline per tuning job;
+//! * `StopHyperParameterTuningJob` flips a per-job flag the workflow
+//!   observes at its next scheduling point;
+//! * warm start resolves parent jobs *through the store*, so chained jobs
+//!   behave exactly like the §6.4 case study.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::TuningJobRequest;
+use crate::coordinator::{stopping_by_name, TuningJobOutcome, TuningJobRunner};
+use crate::gp::{NativeBackend, SurrogateBackend};
+use crate::json::Json;
+use crate::metrics::MetricsService;
+use crate::objectives::by_name as objective_by_name;
+use crate::platform::{PlatformConfig, TrainingPlatform};
+use crate::space::{config_from_json, Value};
+use crate::store::MetadataStore;
+use crate::strategies::{BayesianOptimization, BoConfig, Observation, Strategy};
+use crate::warmstart::{transfer, ParentJob, TransferOptions};
+
+/// API error codes (the synchronous 4xx/5xx surface).
+#[derive(Debug, PartialEq, Eq)]
+pub enum ApiError {
+    /// Request failed validation.
+    Validation(String),
+    /// A tuning job with this name already exists.
+    AlreadyExists(String),
+    /// No such tuning job.
+    NotFound(String),
+    /// A named warm-start parent does not exist or has no results.
+    BadParent(String),
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Tuning-job summary returned by List/Describe.
+#[derive(Clone, Debug)]
+pub struct TuningJobSummary {
+    /// Job name.
+    pub name: String,
+    /// "InProgress" | "Completed" | "Stopped" | "Failed".
+    pub status: String,
+    /// Finished evaluations so far.
+    pub evaluations: usize,
+    /// Best raw metric value so far, if any.
+    pub best_value: Option<f64>,
+}
+
+struct JobHandle {
+    stop_flag: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<TuningJobOutcome>>,
+    outcome: Option<TuningJobOutcome>,
+}
+
+/// The fully managed tuning service (in-process facade).
+pub struct AmtService {
+    store: Arc<MetadataStore>,
+    metrics: Arc<MetricsService>,
+    platform_config: PlatformConfig,
+    backend: Arc<dyn SurrogateBackend>,
+    jobs: Mutex<HashMap<String, JobHandle>>,
+    /// API call counters for the §6.5 availability accounting.
+    pub api_calls: std::sync::atomic::AtomicU64,
+    /// API calls that returned an error.
+    pub api_errors: std::sync::atomic::AtomicU64,
+}
+
+impl AmtService {
+    /// New service with the native surrogate backend.
+    pub fn new(platform_config: PlatformConfig) -> Self {
+        Self::with_backend(platform_config, Arc::new(NativeBackend))
+    }
+
+    /// New service with an explicit surrogate backend (e.g. the PJRT/HLO
+    /// backend from [`crate::runtime`]).
+    pub fn with_backend(
+        platform_config: PlatformConfig,
+        backend: Arc<dyn SurrogateBackend>,
+    ) -> Self {
+        AmtService {
+            store: Arc::new(MetadataStore::new()),
+            metrics: Arc::new(MetricsService::new()),
+            platform_config,
+            backend,
+            jobs: Mutex::new(HashMap::new()),
+            api_calls: std::sync::atomic::AtomicU64::new(0),
+            api_errors: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Shared metadata store (read-only use recommended).
+    pub fn store(&self) -> Arc<MetadataStore> {
+        Arc::clone(&self.store)
+    }
+
+    /// Shared metrics service.
+    pub fn metrics(&self) -> Arc<MetricsService> {
+        Arc::clone(&self.metrics)
+    }
+
+    fn count_call(&self) {
+        self.api_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn fail<T>(&self, e: ApiError) -> Result<T, ApiError> {
+        self.api_errors.fetch_add(1, Ordering::Relaxed);
+        Err(e)
+    }
+
+    /// Resolve warm-start parents from the store into transfer observations.
+    fn resolve_parents_for(
+        &self,
+        request: &TuningJobRequest,
+        sign: f64,
+        child_space: &crate::space::SearchSpace,
+    ) -> Result<Vec<Observation>, ApiError> {
+        if request.warm_start_parents.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut parents = Vec::new();
+        for pname in &request.warm_start_parents {
+            // parent tuning job must exist and be terminal
+            let Some((_, job)) = self.store.get("tuning_jobs", pname) else {
+                return self.fail(ApiError::BadParent(pname.clone()));
+            };
+            let pobj_name = job
+                .get("request")
+                .and_then(|r| r.get("objective"))
+                .and_then(Json::as_str)
+                .unwrap_or(&request.objective)
+                .to_string();
+            let pspace = objective_by_name(&pobj_name)
+                .map(|o| o.space())
+                .unwrap_or_else(|| child_space.clone());
+            let mut observations = Vec::new();
+            for (_, rec) in self.store.scan("training_jobs", &format!("{pname}-train-")) {
+                let Some(vj) = rec.get("final_value") else { continue };
+                let Some(v) = vj.as_f64() else { continue };
+                let Some(cfg) = rec.get("config").and_then(config_from_json) else {
+                    continue;
+                };
+                // coerce numeric strings back into the parent space types
+                let cfg = pspace.clamp(&cfg);
+                observations.push(Observation { config: cfg, value: sign * v });
+            }
+            if observations.is_empty() {
+                return self.fail(ApiError::BadParent(pname.clone()));
+            }
+            parents.push(ParentJob { name: pname.clone(), space: pspace, observations });
+        }
+        Ok(transfer(&parents, child_space, &TransferOptions::default()))
+    }
+
+    /// `CreateHyperParameterTuningJob`: validate, persist, start the
+    /// asynchronous workflow. Returns the job name (stand-in for the ARN).
+    pub fn create_tuning_job(&self, request: TuningJobRequest) -> Result<String, ApiError> {
+        self.count_call();
+        if let Err(e) = request.validate() {
+            return self.fail(ApiError::Validation(e.to_string()));
+        }
+        let objective: Arc<dyn crate::objectives::Objective> =
+            objective_by_name(&request.objective).expect("validated").into();
+        self.create_with_objective(request, objective)
+    }
+
+    /// Tune a *custom algorithm* (the paper: "AMT can be used with built-in
+    /// algorithms, custom algorithms, and ... pre-built containers"): same
+    /// workflow, caller-supplied objective. The request's `objective` field
+    /// is treated as a label; validation of the other fields still applies.
+    pub fn create_custom_tuning_job(
+        &self,
+        request: TuningJobRequest,
+        objective: Arc<dyn crate::objectives::Objective>,
+    ) -> Result<String, ApiError> {
+        self.count_call();
+        if let Err(e) = request.validate_with_custom_objective() {
+            return self.fail(ApiError::Validation(e.to_string()));
+        }
+        self.create_with_objective(request, objective)
+    }
+
+    fn create_with_objective(
+        &self,
+        request: TuningJobRequest,
+        objective: Arc<dyn crate::objectives::Objective>,
+    ) -> Result<String, ApiError> {
+        {
+            let jobs = self.jobs.lock().unwrap();
+            if jobs.contains_key(&request.name)
+                || self.store.get("tuning_jobs", &request.name).is_some()
+            {
+                let name = request.name.clone();
+                drop(jobs);
+                return self.fail(ApiError::AlreadyExists(name));
+            }
+        }
+
+        let sign = if objective.minimize() { 1.0 } else { -1.0 };
+        let transferred = self.resolve_parents_for(&request, sign, &objective.space())?;
+
+        // build the strategy (BO gets the warm-start observations)
+        let strategy: Box<dyn Strategy> = match request.strategy.as_str() {
+            "bayesian" | "bo" => {
+                let mut bo = BayesianOptimization::new(
+                    objective.space(),
+                    Arc::clone(&self.backend),
+                    BoConfig::default(),
+                    request.seed,
+                );
+                bo.add_transferred(transferred);
+                Box::new(bo)
+            }
+            other => crate::strategies::by_name(
+                other,
+                &objective.space(),
+                Arc::clone(&self.backend),
+                request.seed,
+            )
+            .expect("validated strategy"),
+        };
+        let stopping = stopping_by_name(&request.early_stopping).expect("validated");
+
+        let stop_flag = Arc::new(AtomicBool::new(false));
+        let runner = TuningJobRunner::new(
+            request.clone(),
+            objective,
+            strategy,
+            stopping,
+            TrainingPlatform::new(self.platform_config.clone(), request.seed),
+            Arc::clone(&self.store),
+            Arc::clone(&self.metrics),
+            Arc::clone(&stop_flag),
+        );
+        // persist the accepted request before the async workflow starts
+        self.store.put(
+            "tuning_jobs",
+            &request.name,
+            Json::obj(vec![
+                ("status", Json::Str("InProgress".into())),
+                ("request", request.to_json()),
+            ]),
+        );
+        let thread = std::thread::spawn(move || runner.run());
+        self.jobs.lock().unwrap().insert(
+            request.name.clone(),
+            JobHandle { stop_flag, thread: Some(thread), outcome: None },
+        );
+        Ok(request.name)
+    }
+
+    /// Block until a tuning job's workflow finishes; returns its outcome.
+    pub fn wait(&self, name: &str) -> Result<TuningJobOutcome, ApiError> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let Some(handle) = jobs.get_mut(name) else {
+            drop(jobs);
+            return self.fail(ApiError::NotFound(name.to_string()));
+        };
+        if let Some(thread) = handle.thread.take() {
+            let outcome = thread.join().expect("tuning workflow panicked");
+            handle.outcome = Some(outcome);
+        }
+        Ok(handle.outcome.clone().expect("outcome present after join"))
+    }
+
+    /// `DescribeHyperParameterTuningJob`.
+    pub fn describe_tuning_job(&self, name: &str) -> Result<TuningJobSummary, ApiError> {
+        self.count_call();
+        let Some((_, job)) = self.store.get("tuning_jobs", name) else {
+            return self.fail(ApiError::NotFound(name.to_string()));
+        };
+        let status = job
+            .get("status")
+            .and_then(Json::as_str)
+            .unwrap_or("Unknown")
+            .to_string();
+        let mut evaluations = 0;
+        let mut best: Option<f64> = None;
+        let minimize = job
+            .get("request")
+            .and_then(|r| r.get("objective"))
+            .and_then(Json::as_str)
+            .and_then(objective_by_name)
+            .map(|o| o.minimize())
+            .unwrap_or(true);
+        for (_, rec) in self.store.scan("training_jobs", &format!("{name}-train-")) {
+            let terminal = matches!(
+                rec.get("status").and_then(Json::as_str),
+                Some("Completed") | Some("Stopped") | Some("Failed")
+            );
+            if terminal {
+                evaluations += 1;
+            }
+            if let Some(v) = rec.get("final_value").and_then(Json::as_f64) {
+                best = Some(match best {
+                    None => v,
+                    Some(b) => {
+                        if minimize {
+                            b.min(v)
+                        } else {
+                            b.max(v)
+                        }
+                    }
+                });
+            }
+        }
+        Ok(TuningJobSummary { name: name.to_string(), status, evaluations, best_value: best })
+    }
+
+    /// `ListHyperParameterTuningJobs` (optionally by name prefix).
+    pub fn list_tuning_jobs(&self, prefix: &str) -> Vec<String> {
+        self.count_call();
+        self.store.list_keys("tuning_jobs", prefix)
+    }
+
+    /// `StopHyperParameterTuningJob`: signal the workflow to stop. The
+    /// call is asynchronous, like the AWS API.
+    pub fn stop_tuning_job(&self, name: &str) -> Result<(), ApiError> {
+        self.count_call();
+        let jobs = self.jobs.lock().unwrap();
+        let Some(handle) = jobs.get(name) else {
+            drop(jobs);
+            return self.fail(ApiError::NotFound(name.to_string()));
+        };
+        handle.stop_flag.store(true, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Availability ratio over the service lifetime (§6.5: "API
+    /// communication was available ... for the 99.99% of time").
+    pub fn availability(&self) -> f64 {
+        let calls = self.api_calls.load(Ordering::Relaxed);
+        let errors = self.api_errors.load(Ordering::Relaxed);
+        if calls == 0 {
+            1.0
+        } else {
+            1.0 - errors as f64 / calls as f64
+        }
+    }
+}
+
+/// Convenience for tests/benches: extract a numeric HP from a config.
+pub fn config_num(config: &crate::space::Config, key: &str) -> Option<f64> {
+    config.get(key).and_then(Value::as_f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_request(name: &str, jobs: u32) -> TuningJobRequest {
+        TuningJobRequest {
+            name: name.into(),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: jobs,
+            max_parallel_jobs: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn create_wait_describe_lifecycle() {
+        let svc = AmtService::new(PlatformConfig::noiseless());
+        let name = svc.create_tuning_job(quick_request("job-a", 5)).unwrap();
+        let outcome = svc.wait(&name).unwrap();
+        assert_eq!(outcome.evaluations.len(), 5);
+        let d = svc.describe_tuning_job(&name).unwrap();
+        assert_eq!(d.status, "Completed");
+        assert_eq!(d.evaluations, 5);
+        assert!(d.best_value.is_some());
+        assert_eq!(svc.list_tuning_jobs("job-"), vec!["job-a"]);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let svc = AmtService::new(PlatformConfig::noiseless());
+        svc.create_tuning_job(quick_request("dup", 2)).unwrap();
+        assert!(matches!(
+            svc.create_tuning_job(quick_request("dup", 2)),
+            Err(ApiError::AlreadyExists(_))
+        ));
+        svc.wait("dup").unwrap();
+    }
+
+    #[test]
+    fn validation_errors_surface() {
+        let svc = AmtService::new(PlatformConfig::noiseless());
+        let mut r = quick_request("bad", 2);
+        r.objective = "nonexistent".into();
+        assert!(matches!(svc.create_tuning_job(r), Err(ApiError::Validation(_))));
+        assert!(svc.availability() < 1.0);
+    }
+
+    #[test]
+    fn describe_and_stop_missing_jobs() {
+        let svc = AmtService::new(PlatformConfig::noiseless());
+        assert!(matches!(svc.describe_tuning_job("ghost"), Err(ApiError::NotFound(_))));
+        assert!(matches!(svc.stop_tuning_job("ghost"), Err(ApiError::NotFound(_))));
+    }
+
+    #[test]
+    fn stop_terminates_early() {
+        let svc = AmtService::new(PlatformConfig::noiseless());
+        let name = svc
+            .create_tuning_job(quick_request("stoppable", 500))
+            .unwrap();
+        svc.stop_tuning_job(&name).unwrap();
+        let outcome = svc.wait(&name).unwrap();
+        assert!(outcome.evaluations.len() < 500);
+        let d = svc.describe_tuning_job(&name).unwrap();
+        assert_eq!(d.status, "Stopped");
+    }
+
+    #[test]
+    fn warm_start_resolves_parent_from_store() {
+        let svc = AmtService::new(PlatformConfig::noiseless());
+        svc.create_tuning_job(quick_request("parent", 6)).unwrap();
+        svc.wait("parent").unwrap();
+
+        let mut child = quick_request("child", 4);
+        child.strategy = "bayesian".into();
+        child.warm_start_parents = vec!["parent".into()];
+        let name = svc.create_tuning_job(child).unwrap();
+        let outcome = svc.wait(&name).unwrap();
+        assert_eq!(outcome.evaluations.len(), 4);
+    }
+
+    #[test]
+    fn warm_start_rejects_unknown_parent() {
+        let svc = AmtService::new(PlatformConfig::noiseless());
+        let mut r = quick_request("orphan", 2);
+        r.strategy = "bayesian".into();
+        r.warm_start_parents = vec!["never-existed".into()];
+        assert!(matches!(svc.create_tuning_job(r), Err(ApiError::BadParent(_))));
+    }
+
+    #[test]
+    fn concurrent_tuning_jobs_run() {
+        let svc = Arc::new(AmtService::new(PlatformConfig::noiseless()));
+        for i in 0..4 {
+            svc.create_tuning_job(quick_request(&format!("par-{i}"), 3)).unwrap();
+        }
+        for i in 0..4 {
+            let out = svc.wait(&format!("par-{i}")).unwrap();
+            assert_eq!(out.evaluations.len(), 3);
+        }
+        assert_eq!(svc.list_tuning_jobs("par-").len(), 4);
+        assert_eq!(svc.availability(), 1.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Tuning-job request/record types and their JSON wire format — the shapes
+//! the Create/Describe/List/Stop APIs exchange (§3.2).
+//!
+//! Mirrors the SageMaker API surface at the granularity this reproduction
+//! needs: a `TuningJobRequest` names a workload (objective), a selection
+//! strategy, resource limits, early-stopping and warm-start settings.
+
+use crate::json::Json;
+
+/// Request payload of `CreateHyperParameterTuningJob`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningJobRequest {
+    /// Unique tuning-job name.
+    pub name: String,
+    /// Workload to tune (a [`crate::objectives`] registry name).
+    pub objective: String,
+    /// Selection strategy: "bayesian" | "random" | "grid" | "sobol".
+    pub strategy: String,
+    /// Budget: total hyperparameter evaluations.
+    pub max_training_jobs: u32,
+    /// Parallelism: simultaneous training jobs L (§4.4).
+    pub max_parallel_jobs: u32,
+    /// Early stopping: "off" | "median" | "linear" | "asha" (§5.2).
+    pub early_stopping: String,
+    /// EC2 instances per training job (>1 ⇒ distributed mode).
+    pub instance_count: u32,
+    /// RNG seed for the whole tuning job.
+    pub seed: u64,
+    /// Parent tuning jobs to warm start from (§5.3).
+    pub warm_start_parents: Vec<String>,
+    /// Per-evaluation retry budget for failed training jobs (§3.3).
+    pub max_retries_per_job: u32,
+}
+
+impl Default for TuningJobRequest {
+    fn default() -> Self {
+        TuningJobRequest {
+            name: "tuning-job".into(),
+            objective: "branin".into(),
+            strategy: "bayesian".into(),
+            max_training_jobs: 20,
+            max_parallel_jobs: 1,
+            early_stopping: "off".into(),
+            instance_count: 1,
+            seed: 0,
+            warm_start_parents: Vec::new(),
+            max_retries_per_job: 2,
+        }
+    }
+}
+
+/// Request validation failure (the API's synchronous 4xx path).
+#[derive(Debug, PartialEq, Eq)]
+pub enum ValidationError {
+    /// Name empty or too long.
+    BadName(String),
+    /// Unknown objective/workload.
+    UnknownObjective(String),
+    /// Unknown strategy.
+    UnknownStrategy(String),
+    /// Unknown early-stopping mode.
+    UnknownEarlyStopping(String),
+    /// Limits out of range.
+    BadLimits(String),
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Known strategy names.
+pub const STRATEGIES: &[&str] = &["bayesian", "bo", "random", "grid", "sobol"];
+/// Known early-stopping modes.
+pub const EARLY_STOPPING_MODES: &[&str] = &["off", "median", "linear", "asha"];
+
+impl TuningJobRequest {
+    /// Validate against the objective registry and limits.
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        if crate::objectives::by_name(&self.objective).is_none() {
+            return Err(ValidationError::UnknownObjective(self.objective.clone()));
+        }
+        self.validate_with_custom_objective()
+    }
+
+    /// Validation for custom-algorithm jobs (§1: "AMT can be used with
+    /// built-in algorithms, custom algorithms ..."): everything except the
+    /// built-in objective-registry membership check.
+    pub fn validate_with_custom_objective(&self) -> Result<(), ValidationError> {
+        if self.name.is_empty() || self.name.len() > 64 {
+            return Err(ValidationError::BadName(self.name.clone()));
+        }
+        if !STRATEGIES.contains(&self.strategy.as_str()) {
+            return Err(ValidationError::UnknownStrategy(self.strategy.clone()));
+        }
+        if !EARLY_STOPPING_MODES.contains(&self.early_stopping.as_str()) {
+            return Err(ValidationError::UnknownEarlyStopping(self.early_stopping.clone()));
+        }
+        if self.max_training_jobs == 0 || self.max_training_jobs > 10_000 {
+            return Err(ValidationError::BadLimits("max_training_jobs".into()));
+        }
+        if self.max_parallel_jobs == 0 || self.max_parallel_jobs > 100 {
+            return Err(ValidationError::BadLimits("max_parallel_jobs".into()));
+        }
+        if self.instance_count == 0 || self.instance_count > 128 {
+            return Err(ValidationError::BadLimits("instance_count".into()));
+        }
+        Ok(())
+    }
+
+    /// JSON wire form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("objective", Json::Str(self.objective.clone())),
+            ("strategy", Json::Str(self.strategy.clone())),
+            ("max_training_jobs", Json::Num(self.max_training_jobs as f64)),
+            ("max_parallel_jobs", Json::Num(self.max_parallel_jobs as f64)),
+            ("early_stopping", Json::Str(self.early_stopping.clone())),
+            ("instance_count", Json::Num(self.instance_count as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "warm_start_parents",
+                Json::Arr(
+                    self.warm_start_parents.iter().map(|p| Json::Str(p.clone())).collect(),
+                ),
+            ),
+            ("max_retries_per_job", Json::Num(self.max_retries_per_job as f64)),
+        ])
+    }
+
+    /// Parse the JSON wire form (missing fields take defaults).
+    pub fn from_json(j: &Json) -> Option<TuningJobRequest> {
+        let d = TuningJobRequest::default();
+        let get_str = |k: &str, dv: &str| {
+            j.get(k).and_then(Json::as_str).map(String::from).unwrap_or_else(|| dv.into())
+        };
+        let get_u32 =
+            |k: &str, dv: u32| j.get(k).and_then(Json::as_i64).map(|v| v as u32).unwrap_or(dv);
+        Some(TuningJobRequest {
+            name: j.get("name")?.as_str()?.to_string(),
+            objective: get_str("objective", &d.objective),
+            strategy: get_str("strategy", &d.strategy),
+            max_training_jobs: get_u32("max_training_jobs", d.max_training_jobs),
+            max_parallel_jobs: get_u32("max_parallel_jobs", d.max_parallel_jobs),
+            early_stopping: get_str("early_stopping", &d.early_stopping),
+            instance_count: get_u32("instance_count", d.instance_count),
+            seed: j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(d.seed),
+            warm_start_parents: j
+                .get("warm_start_parents")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter().filter_map(|v| v.as_str().map(String::from)).collect()
+                })
+                .unwrap_or_default(),
+            max_retries_per_job: get_u32("max_retries_per_job", d.max_retries_per_job),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_request_is_valid() {
+        assert_eq!(TuningJobRequest::default().validate(), Ok(()));
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut r = TuningJobRequest::default();
+        r.name = String::new();
+        assert!(matches!(r.validate(), Err(ValidationError::BadName(_))));
+
+        let mut r = TuningJobRequest::default();
+        r.objective = "nope".into();
+        assert!(matches!(r.validate(), Err(ValidationError::UnknownObjective(_))));
+
+        let mut r = TuningJobRequest::default();
+        r.strategy = "nope".into();
+        assert!(matches!(r.validate(), Err(ValidationError::UnknownStrategy(_))));
+
+        let mut r = TuningJobRequest::default();
+        r.early_stopping = "nope".into();
+        assert!(matches!(r.validate(), Err(ValidationError::UnknownEarlyStopping(_))));
+
+        let mut r = TuningJobRequest::default();
+        r.max_parallel_jobs = 0;
+        assert!(matches!(r.validate(), Err(ValidationError::BadLimits(_))));
+
+        let mut r = TuningJobRequest::default();
+        r.instance_count = 1000;
+        assert!(matches!(r.validate(), Err(ValidationError::BadLimits(_))));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = TuningJobRequest::default();
+        r.name = "my-job".into();
+        r.warm_start_parents = vec!["parent-1".into(), "parent-2".into()];
+        r.seed = 77;
+        let j = r.to_json();
+        let back = TuningJobRequest::from_json(&crate::json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn from_json_applies_defaults() {
+        let j = crate::json::parse(r#"{"name": "x"}"#).unwrap();
+        let r = TuningJobRequest::from_json(&j).unwrap();
+        assert_eq!(r.strategy, "bayesian");
+        assert_eq!(r.max_training_jobs, 20);
+        // and a nameless request is rejected
+        let j = crate::json::parse(r#"{"objective": "branin"}"#).unwrap();
+        assert!(TuningJobRequest::from_json(&j).is_none());
+    }
+}

@@ -1,0 +1,641 @@
+//! Tuning-job coordinator: the workflow that ties the Hyperparameter
+//! Selection Service, the training platform, the metadata store, the
+//! metrics service and the early stopper together (§3.2's "AMT workflows
+//! engine ... kicking off the evaluation of hyperparameter configurations
+//! from the Hyperparameter Selection Service, starting training jobs,
+//! tracking their progress and repeating the process until the stopping
+//! criterion is met").
+//!
+//! The coarse lifecycle (Validate → RunLoop → Finalize) runs on the
+//! [`crate::workflow`] state machine; inside the loop the coordinator
+//! maintains up to `max_parallel_jobs` in-flight training jobs
+//! **asynchronously**: the moment one finishes, its observation updates the
+//! strategy and a fresh candidate fills the free slot (§4.4), with failed
+//! jobs retried per the §3.3 retry policy.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::config::TuningJobRequest;
+use crate::earlystop::{CurveHistory, StoppingPolicy};
+use crate::metrics::MetricsService;
+use crate::objectives::Objective;
+use crate::platform::{
+    JobId, PlatformEvent, TrainingJobSpec, TrainingJobStatus, TrainingPlatform,
+};
+use crate::space::Config;
+use crate::store::MetadataStore;
+use crate::strategies::{Observation, Strategy};
+use crate::workflow::{ExecutionStatus, RetryPolicy, StateMachine, Transition};
+use crate::json::Json;
+
+/// Outcome of one hyperparameter evaluation.
+#[derive(Clone, Debug)]
+pub struct EvaluationRecord {
+    /// Training-job name (unique within the tuning job).
+    pub training_job_name: String,
+    /// Evaluated configuration.
+    pub config: Config,
+    /// Intermediate metric values (raw objective orientation).
+    pub curve: Vec<f64>,
+    /// Final metric (raw orientation), if the job produced one.
+    pub final_value: Option<f64>,
+    /// Terminal platform status.
+    pub status: TrainingJobStatus,
+    /// True if the early stopper cut this evaluation short.
+    pub stopped_early: bool,
+    /// Launch attempts consumed (1 = no retries).
+    pub attempts: u32,
+    /// Virtual submission time of the first attempt.
+    pub submitted_at: f64,
+    /// Virtual terminal time.
+    pub ended_at: f64,
+}
+
+/// Result of a completed tuning job.
+#[derive(Clone, Debug)]
+pub struct TuningJobOutcome {
+    /// Tuning-job name.
+    pub name: String,
+    /// All evaluations in completion order.
+    pub evaluations: Vec<EvaluationRecord>,
+    /// Best configuration and its raw metric value.
+    pub best: Option<(Config, f64)>,
+    /// Total virtual wall-clock seconds.
+    pub total_seconds: f64,
+    /// Sum of per-job billable seconds (the §5.2 cost metric).
+    pub total_billable_seconds: f64,
+    /// Workflow termination status.
+    pub status: ExecutionStatus,
+    /// Total training-job retries performed.
+    pub retries: u32,
+}
+
+impl TuningJobOutcome {
+    /// Best-so-far series over virtual time (raw orientation): one point
+    /// per finished evaluation — the y-axis of Figs 3–5.
+    pub fn best_over_time(&self, minimize: bool) -> Vec<(f64, f64)> {
+        let mut evs: Vec<&EvaluationRecord> = self.evaluations.iter().collect();
+        evs.sort_by(|a, b| a.ended_at.total_cmp(&b.ended_at));
+        let mut best = if minimize { f64::INFINITY } else { f64::NEG_INFINITY };
+        let mut out = Vec::new();
+        for e in evs {
+            if let Some(v) = e.final_value {
+                best = if minimize { best.min(v) } else { best.max(v) };
+                if best.is_finite() {
+                    out.push((e.ended_at, best));
+                }
+            }
+        }
+        out
+    }
+}
+
+struct InFlight {
+    eval_index: usize,
+    platform_id: JobId,
+    /// curve in *minimization* orientation for the stopping policy
+    curve_min: Vec<f64>,
+}
+
+struct LoopCtx {
+    request: TuningJobRequest,
+    objective: Arc<dyn Objective>,
+    strategy: Box<dyn Strategy>,
+    stopping: Box<dyn StoppingPolicy>,
+    platform: TrainingPlatform,
+    store: Arc<MetadataStore>,
+    metrics: Arc<MetricsService>,
+    stop_flag: Arc<AtomicBool>,
+    sign: f64,
+    launched: u32,
+    history: Vec<Observation>,
+    curve_history: CurveHistory,
+    in_flight: HashMap<JobId, InFlight>,
+    evaluations: Vec<EvaluationRecord>,
+    retries: u32,
+    /// per-eval remaining retry budget
+    retry_budget: Vec<u32>,
+}
+
+impl LoopCtx {
+    fn pending_configs(&self) -> Vec<Config> {
+        self.in_flight
+            .values()
+            .map(|f| self.evaluations[f.eval_index].config.clone())
+            .collect()
+    }
+
+    fn launch_new(&mut self) {
+        let pending = self.pending_configs();
+        let config = self.strategy.next_config(&self.history, &pending);
+        let idx = self.evaluations.len();
+        let name = format!("{}-train-{:04}", self.request.name, idx);
+        self.evaluations.push(EvaluationRecord {
+            training_job_name: name.clone(),
+            config: config.clone(),
+            curve: Vec::new(),
+            final_value: None,
+            status: TrainingJobStatus::Provisioning,
+            stopped_early: false,
+            attempts: 1,
+            submitted_at: self.platform.now(),
+            ended_at: self.platform.now(),
+        });
+        self.retry_budget.push(self.request.max_retries_per_job);
+        self.launched += 1;
+        self.submit(idx);
+        self.persist_training_job(idx);
+    }
+
+    fn submit(&mut self, eval_index: usize) {
+        let e = &self.evaluations[eval_index];
+        let id = self.platform.submit(TrainingJobSpec {
+            name: e.training_job_name.clone(),
+            config: e.config.clone(),
+            objective: Arc::clone(&self.objective),
+            seed: self.request.seed ^ (eval_index as u64).wrapping_mul(0x2545F4914F6CDD1D)
+                ^ (e.attempts as u64) << 48,
+            instance_count: self.request.instance_count,
+        });
+        self.in_flight.insert(
+            id,
+            InFlight { eval_index, platform_id: id, curve_min: Vec::new() },
+        );
+    }
+
+    fn persist_training_job(&self, idx: usize) {
+        let e = &self.evaluations[idx];
+        self.store.put(
+            "training_jobs",
+            &e.training_job_name,
+            Json::obj(vec![
+                ("tuning_job", Json::Str(self.request.name.clone())),
+                ("config", crate::space::config_to_json(&e.config)),
+                ("status", Json::Str(format!("{:?}", e.status))),
+                ("final_value", e.final_value.map(Json::Num).unwrap_or(Json::Null)),
+                ("stopped_early", Json::Bool(e.stopped_early)),
+                ("attempts", Json::Num(e.attempts as f64)),
+            ]),
+        );
+    }
+
+    /// Handle one platform event. Returns false when the platform is idle.
+    fn pump_one(&mut self) -> bool {
+        let Some(event) = self.platform.next_event() else {
+            return false;
+        };
+        match event {
+            PlatformEvent::JobStarted { .. } => {}
+            PlatformEvent::EpochCompleted { job, epoch, value, time } => {
+                if let Some(fl) = self.in_flight.get_mut(&job) {
+                    let idx = fl.eval_index;
+                    fl.curve_min.push(self.sign * value);
+                    self.evaluations[idx].curve.push(value);
+                    let name = self.evaluations[idx].training_job_name.clone();
+                    self.metrics.emit(&format!("{name}/objective"), time, value);
+                    // early-stopping decision (§5.2)
+                    let stop = self.stopping.should_stop(
+                        &fl.curve_min.clone(),
+                        epoch,
+                        &self.curve_history,
+                    );
+                    if stop {
+                        let fl = self.in_flight.remove(&job).unwrap();
+                        self.platform.stop_job(fl.platform_id);
+                        let e = &mut self.evaluations[idx];
+                        e.status = TrainingJobStatus::Stopped;
+                        e.stopped_early = true;
+                        e.ended_at = self.platform.now();
+                        // a stopped curve still informs future medians and
+                        // counts as an observation at its last fidelity
+                        e.final_value = e.curve.last().copied();
+                        self.curve_history.push(fl.curve_min.clone(), false);
+                        if let Some(v) = e.final_value {
+                            self.history.push(Observation {
+                                config: e.config.clone(),
+                                value: self.sign * v,
+                            });
+                        }
+                        self.persist_training_job(idx);
+                    }
+                }
+            }
+            PlatformEvent::JobCompleted { job, final_value, time } => {
+                if let Some(fl) = self.in_flight.remove(&job) {
+                    let idx = fl.eval_index;
+                    let e = &mut self.evaluations[idx];
+                    e.status = TrainingJobStatus::Completed;
+                    e.final_value = Some(final_value);
+                    e.ended_at = time;
+                    self.curve_history.push(fl.curve_min.clone(), true);
+                    self.history.push(Observation {
+                        config: e.config.clone(),
+                        value: self.sign * final_value,
+                    });
+                    let name = e.training_job_name.clone();
+                    self.metrics.emit(&format!("{name}/final"), time, final_value);
+                    self.metrics.emit(
+                        &format!("{}/evaluations", self.request.name),
+                        time,
+                        final_value,
+                    );
+                    self.persist_training_job(idx);
+                }
+            }
+            PlatformEvent::JobFailed { job, reason, time } => {
+                if let Some(fl) = self.in_flight.remove(&job) {
+                    let idx = fl.eval_index;
+                    if self.retry_budget[idx] > 0 {
+                        // §3.3 retry mechanism: re-launch the same config
+                        self.retry_budget[idx] -= 1;
+                        self.retries += 1;
+                        self.evaluations[idx].attempts += 1;
+                        self.evaluations[idx].curve.clear();
+                        self.submit(idx);
+                    } else {
+                        let e = &mut self.evaluations[idx];
+                        e.status = TrainingJobStatus::Failed;
+                        e.ended_at = time;
+                        self.metrics.emit(
+                            &format!("{}/failures", self.request.name),
+                            time,
+                            1.0,
+                        );
+                        let _ = reason;
+                        self.persist_training_job(idx);
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    fn finished_count(&self) -> usize {
+        self.evaluations
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.status,
+                    TrainingJobStatus::Completed
+                        | TrainingJobStatus::Stopped
+                        | TrainingJobStatus::Failed
+                )
+            })
+            .count()
+    }
+}
+
+/// Drives one tuning job to completion on a dedicated platform timeline.
+pub struct TuningJobRunner {
+    ctx: LoopCtx,
+}
+
+impl TuningJobRunner {
+    /// Assemble a runner. The strategy and stopping policy are passed in
+    /// pre-built (the API layer constructs them from the request, including
+    /// warm-start transfer).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        request: TuningJobRequest,
+        objective: Arc<dyn Objective>,
+        strategy: Box<dyn Strategy>,
+        stopping: Box<dyn StoppingPolicy>,
+        platform: TrainingPlatform,
+        store: Arc<MetadataStore>,
+        metrics: Arc<MetricsService>,
+        stop_flag: Arc<AtomicBool>,
+    ) -> Self {
+        let sign = if objective.minimize() { 1.0 } else { -1.0 };
+        TuningJobRunner {
+            ctx: LoopCtx {
+                request,
+                objective,
+                strategy,
+                stopping,
+                platform,
+                store,
+                metrics,
+                stop_flag,
+                sign,
+                launched: 0,
+                history: Vec::new(),
+                curve_history: CurveHistory::default(),
+                in_flight: HashMap::new(),
+                evaluations: Vec::new(),
+                retries: 0,
+                retry_budget: Vec::new(),
+            },
+        }
+    }
+
+    /// Execute the tuning job to completion.
+    pub fn run(mut self) -> TuningJobOutcome {
+        let name = self.ctx.request.name.clone();
+        let mut machine: StateMachine<LoopCtx> = StateMachine::new("Validate")
+            .state("Validate", RetryPolicy::none(), |ctx: &mut LoopCtx, _| {
+                match ctx.request.validate_with_custom_objective() {
+                    Ok(()) => {
+                        ctx.store.put(
+                            "tuning_jobs",
+                            &ctx.request.name,
+                            Json::obj(vec![
+                                ("status", Json::Str("InProgress".into())),
+                                ("request", ctx.request.to_json()),
+                            ]),
+                        );
+                        Transition::Next("RunLoop".into())
+                    }
+                    Err(e) => Transition::Fail(format!("validation: {e}")),
+                }
+            })
+            .state("RunLoop", RetryPolicy::default(), |ctx, _| {
+                // user-initiated Stop API (§3.2)
+                if ctx.stop_flag.load(Ordering::Relaxed) {
+                    let ids: Vec<JobId> = ctx.in_flight.keys().copied().collect();
+                    for id in ids {
+                        ctx.platform.stop_job(id);
+                    }
+                    while ctx.pump_one() {}
+                    return Transition::Next("Finalize".into());
+                }
+                // fill free parallel slots (asynchronous scheduling, §4.4)
+                while ctx.launched < ctx.request.max_training_jobs
+                    && ctx.in_flight.len() < ctx.request.max_parallel_jobs as usize
+                {
+                    ctx.launch_new();
+                }
+                // advance the platform by one event
+                let progressed = ctx.pump_one();
+                let budget_done = ctx.launched >= ctx.request.max_training_jobs
+                    && ctx.in_flight.is_empty();
+                if budget_done || (!progressed && ctx.in_flight.is_empty()) {
+                    Transition::Next("Finalize".into())
+                } else {
+                    Transition::Next("RunLoop".into())
+                }
+            })
+            .state("Finalize", RetryPolicy::none(), |ctx, _| {
+                let status = if ctx.stop_flag.load(Ordering::Relaxed) {
+                    "Stopped"
+                } else {
+                    "Completed"
+                };
+                ctx.store.put(
+                    "tuning_jobs",
+                    &ctx.request.name,
+                    Json::obj(vec![
+                        ("status", Json::Str(status.into())),
+                        ("request", ctx.request.to_json()),
+                        (
+                            "evaluations",
+                            Json::Num(ctx.finished_count() as f64),
+                        ),
+                    ]),
+                );
+                Transition::Succeed
+            });
+        machine.max_transitions = 4_000_000;
+
+        let mut clock = 0.0;
+        let execution = machine.execute(&mut self.ctx, &mut clock);
+        let ctx = self.ctx;
+
+        // compute best in raw orientation
+        let minimize = ctx.sign > 0.0;
+        let mut best: Option<(Config, f64)> = None;
+        for e in &ctx.evaluations {
+            if let Some(v) = e.final_value {
+                // only fully completed evaluations compete for "best" when
+                // maximizing? No: the paper counts stopped jobs' last values
+                // too — they are real model scores.
+                let better = match &best {
+                    None => true,
+                    Some((_, b)) => {
+                        if minimize {
+                            v < *b
+                        } else {
+                            v > *b
+                        }
+                    }
+                };
+                if better {
+                    best = Some((e.config.clone(), v));
+                }
+            }
+        }
+        let total_billable = ctx
+            .evaluations
+            .iter()
+            .map(|e| {
+                // billable = spec-reported per training job (platform info)
+                e.ended_at - e.submitted_at
+            })
+            .sum();
+
+        TuningJobOutcome {
+            name,
+            best,
+            total_seconds: ctx.platform.now(),
+            total_billable_seconds: total_billable,
+            evaluations: ctx.evaluations,
+            status: execution.status,
+            retries: ctx.retries,
+        }
+    }
+}
+
+/// Build the stopping policy named in a request (§5.2 modes).
+pub fn stopping_by_name(name: &str) -> Option<Box<dyn StoppingPolicy>> {
+    use crate::earlystop::*;
+    Some(match name {
+        "off" => Box::new(NoStopping),
+        "median" => Box::new(MedianRule::default()),
+        "linear" => Box::new(LinearExtrapolation::default()),
+        "asha" => Box::new(AshaRule::default()),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::NativeBackend;
+    use crate::platform::PlatformConfig;
+    use crate::strategies::RandomSearch;
+
+    fn run_job(
+        objective: &str,
+        strategy: &str,
+        early: &str,
+        max_jobs: u32,
+        parallel: u32,
+        platform_config: PlatformConfig,
+        seed: u64,
+    ) -> TuningJobOutcome {
+        let request = TuningJobRequest {
+            name: format!("t-{objective}-{seed}"),
+            objective: objective.into(),
+            strategy: strategy.into(),
+            early_stopping: early.into(),
+            max_training_jobs: max_jobs,
+            max_parallel_jobs: parallel,
+            seed,
+            ..Default::default()
+        };
+        let obj = crate::objectives::by_name(objective).unwrap();
+        let obj: Arc<dyn Objective> = obj.into();
+        let strat: Box<dyn Strategy> = crate::strategies::by_name(
+            strategy,
+            &obj.space(),
+            Arc::new(NativeBackend),
+            seed,
+        )
+        .unwrap();
+        let stopping = stopping_by_name(early).unwrap();
+        let runner = TuningJobRunner::new(
+            request,
+            obj,
+            strat,
+            stopping,
+            TrainingPlatform::new(platform_config, seed),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        );
+        runner.run()
+    }
+
+    #[test]
+    fn random_tuning_job_completes_budget() {
+        let out = run_job("branin", "random", "off", 8, 2, PlatformConfig::noiseless(), 1);
+        assert_eq!(out.status, ExecutionStatus::Succeeded);
+        assert_eq!(out.evaluations.len(), 8);
+        assert!(out
+            .evaluations
+            .iter()
+            .all(|e| e.status == TrainingJobStatus::Completed));
+        assert!(out.best.is_some());
+        assert!(out.total_seconds > 0.0);
+    }
+
+    #[test]
+    fn parallelism_limit_respected_and_speeds_up() {
+        let seq = run_job("branin", "random", "off", 6, 1, PlatformConfig::noiseless(), 2);
+        let par = run_job("branin", "random", "off", 6, 3, PlatformConfig::noiseless(), 2);
+        assert!(par.total_seconds < seq.total_seconds * 0.7,
+            "parallel {} vs sequential {}", par.total_seconds, seq.total_seconds);
+    }
+
+    #[test]
+    fn failures_are_retried_then_recorded() {
+        let cfg = PlatformConfig {
+            provisioning_failure_rate: 0.4,
+            ..PlatformConfig::noiseless()
+        };
+        let out = run_job("branin", "random", "off", 10, 2, cfg, 3);
+        assert_eq!(out.status, ExecutionStatus::Succeeded);
+        assert_eq!(out.evaluations.len(), 10);
+        // with retries most evaluations should still complete
+        let completed = out
+            .evaluations
+            .iter()
+            .filter(|e| e.status == TrainingJobStatus::Completed)
+            .count();
+        assert!(completed >= 7, "only {completed}/10 completed");
+        assert!(out.retries > 0, "retry mechanism unused");
+    }
+
+    #[test]
+    fn early_stopping_cuts_time_not_quality_much() {
+        let base = run_job("gdelt_single", "random", "off", 12, 1, PlatformConfig::noiseless(), 4);
+        let es = run_job("gdelt_single", "random", "median", 12, 1, PlatformConfig::noiseless(), 4);
+        assert!(es.total_seconds < base.total_seconds, "early stopping saved no time");
+        let stopped = es.evaluations.iter().filter(|e| e.stopped_early).count();
+        assert!(stopped > 0, "median rule never fired");
+        assert_eq!(es.evaluations.len(), 12, "budget must still be honored");
+    }
+
+    #[test]
+    fn stop_flag_halts_job() {
+        let request = TuningJobRequest {
+            name: "stop-test".into(),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 1000,
+            max_parallel_jobs: 1,
+            ..Default::default()
+        };
+        let obj: Arc<dyn Objective> = crate::objectives::by_name("branin").unwrap().into();
+        let strat = Box::new(RandomSearch::new(obj.space(), 1));
+        let flag = Arc::new(AtomicBool::new(true)); // stop immediately
+        let runner = TuningJobRunner::new(
+            request,
+            obj,
+            strat,
+            stopping_by_name("off").unwrap(),
+            TrainingPlatform::new(PlatformConfig::noiseless(), 1),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            flag,
+        );
+        let out = runner.run();
+        assert!(out.evaluations.len() < 1000);
+    }
+
+    #[test]
+    fn store_records_jobs_and_metrics_emitted() {
+        let store = Arc::new(MetadataStore::new());
+        let metrics = Arc::new(MetricsService::new());
+        let request = TuningJobRequest {
+            name: "persist-test".into(),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 3,
+            ..Default::default()
+        };
+        let obj: Arc<dyn Objective> = crate::objectives::by_name("branin").unwrap().into();
+        let strat = Box::new(RandomSearch::new(obj.space(), 5));
+        let runner = TuningJobRunner::new(
+            request,
+            obj,
+            strat,
+            stopping_by_name("off").unwrap(),
+            TrainingPlatform::new(PlatformConfig::noiseless(), 5),
+            Arc::clone(&store),
+            Arc::clone(&metrics),
+            Arc::new(AtomicBool::new(false)),
+        );
+        let out = runner.run();
+        assert_eq!(out.evaluations.len(), 3);
+        // tuning job record flipped to Completed
+        let (_, job) = store.get("tuning_jobs", "persist-test").unwrap();
+        assert_eq!(job.get("status").unwrap().as_str(), Some("Completed"));
+        // per-training-job records exist
+        assert_eq!(store.list_keys("training_jobs", "persist-test-train-").len(), 3);
+        // per-epoch metrics were published
+        assert!(!metrics.list_streams("persist-test-train-0000/").is_empty());
+        assert_eq!(metrics.series("persist-test/evaluations").len(), 3);
+    }
+
+    #[test]
+    fn bo_tuning_job_end_to_end() {
+        let out = run_job("branin", "bayesian", "off", 10, 1, PlatformConfig::noiseless(), 6);
+        assert_eq!(out.status, ExecutionStatus::Succeeded);
+        assert_eq!(out.evaluations.len(), 10);
+        let (_, best) = out.best.unwrap();
+        assert!(best < 40.0, "BO on branin should find something decent: {best}");
+    }
+
+    #[test]
+    fn best_over_time_is_monotone() {
+        let out = run_job("branin", "random", "off", 8, 2, PlatformConfig::noiseless(), 7);
+        let series = out.best_over_time(true);
+        assert!(!series.is_empty());
+        for w in series.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-12);
+            assert!(w[1].0 >= w[0].0);
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! Early stopping of training jobs (§5.2) and successive-halving baselines
+//! (§2.3).
+//!
+//! AMT's production rule is the **median rule** [Golovin et al., Google
+//! Vizier]: stop an evaluation at iteration r when its intermediate metric
+//! is worse than the median of previously evaluated configurations *at the
+//! same iteration r*. Two resilience refinements from the paper are
+//! implemented faithfully:
+//!
+//! 1. stopping decisions are made only after a dynamic iteration threshold
+//!    derived from the duration of fully completed evaluations (poor early
+//!    fidelities are not always representative of final values);
+//! 2. the "always complete 10 evaluations first" safeguard the authors
+//!    evaluated and discarded is available as an option for the ablation
+//!    bench (`min_completed_jobs`).
+//!
+//! All curves at this layer are in minimization orientation.
+
+/// Record of a finished (completed or stopped) evaluation's curve.
+#[derive(Clone, Debug)]
+pub struct FinishedCurve {
+    /// Intermediate metric values, epochs 1..=len.
+    pub values: Vec<f64>,
+    /// Whether the job ran to its full epoch budget.
+    pub completed: bool,
+}
+
+/// History of finished curves a stopping policy can condition on.
+#[derive(Clone, Debug, Default)]
+pub struct CurveHistory {
+    /// All finished curves (stopped ones included — their prefixes count
+    /// toward the per-iteration medians, as in Vizier).
+    pub curves: Vec<FinishedCurve>,
+}
+
+impl CurveHistory {
+    /// Add a finished curve.
+    pub fn push(&mut self, values: Vec<f64>, completed: bool) {
+        self.curves.push(FinishedCurve { values, completed });
+    }
+
+    /// Number of *fully completed* evaluations.
+    pub fn num_completed(&self) -> usize {
+        self.curves.iter().filter(|c| c.completed).count()
+    }
+
+    /// Values observed at 1-based epoch `r` across finished curves.
+    pub fn values_at(&self, r: u32) -> Vec<f64> {
+        self.curves
+            .iter()
+            .filter_map(|c| c.values.get(r as usize - 1).copied())
+            .collect()
+    }
+
+    /// Median epoch count among completed runs (the paper's dynamic
+    /// activation signal: "determined dynamically based on the duration of
+    /// the fully completed hyperparameter evaluations").
+    pub fn median_completed_epochs(&self) -> Option<f64> {
+        let mut lens: Vec<f64> = self
+            .curves
+            .iter()
+            .filter(|c| c.completed)
+            .map(|c| c.values.len() as f64)
+            .collect();
+        if lens.is_empty() {
+            return None;
+        }
+        lens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(median_sorted(&lens))
+    }
+}
+
+fn median_sorted(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    }
+}
+
+/// Median of an unsorted slice.
+pub fn median(values: &[f64]) -> f64 {
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    median_sorted(&v)
+}
+
+/// A decision point for a running evaluation.
+pub trait StoppingPolicy: Send + Sync {
+    /// Policy name for logs.
+    fn name(&self) -> &'static str;
+    /// Decide after 1-based epoch `epoch` with the running job's curve so
+    /// far; `history` holds finished curves of sibling evaluations.
+    fn should_stop(&self, curve_so_far: &[f64], epoch: u32, history: &CurveHistory) -> bool;
+}
+
+/// Never stop (the "without early stopping" arm of Fig 4).
+pub struct NoStopping;
+
+impl StoppingPolicy for NoStopping {
+    fn name(&self) -> &'static str {
+        "off"
+    }
+    fn should_stop(&self, _c: &[f64], _e: u32, _h: &CurveHistory) -> bool {
+        false
+    }
+}
+
+/// AMT's median rule with dynamic activation (§5.2).
+#[derive(Clone, Debug)]
+pub struct MedianRule {
+    /// Fraction of the median completed-run length before stopping
+    /// decisions activate.
+    pub activation_fraction: f64,
+    /// Hard floor on the activation epoch.
+    pub min_epochs: u32,
+    /// Optional safeguard: require this many *completed* evaluations before
+    /// stopping anything (paper evaluated 10 and discarded it; kept for the
+    /// ablation bench).
+    pub min_completed_jobs: usize,
+}
+
+impl Default for MedianRule {
+    fn default() -> Self {
+        MedianRule { activation_fraction: 0.25, min_epochs: 2, min_completed_jobs: 0 }
+    }
+}
+
+impl MedianRule {
+    /// The dynamic activation epoch given current history.
+    pub fn activation_epoch(&self, history: &CurveHistory) -> u32 {
+        match history.median_completed_epochs() {
+            Some(m) => ((m * self.activation_fraction).ceil() as u32).max(self.min_epochs),
+            None => u32::MAX, // nothing completed yet ⇒ never stop
+        }
+    }
+}
+
+impl StoppingPolicy for MedianRule {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+    fn should_stop(&self, curve_so_far: &[f64], epoch: u32, history: &CurveHistory) -> bool {
+        if history.num_completed() < self.min_completed_jobs.max(1) {
+            return false;
+        }
+        if epoch < self.activation_epoch(history) {
+            return false;
+        }
+        let peers = history.values_at(epoch);
+        if peers.len() < 2 {
+            return false;
+        }
+        let cur = match curve_so_far.get(epoch as usize - 1) {
+            Some(v) => *v,
+            None => return false,
+        };
+        cur > median(&peers)
+    }
+}
+
+/// Linear learning-curve extrapolation baseline (§5.2 compares the median
+/// rule against model-based prediction; this is the linear predictor).
+#[derive(Clone, Debug)]
+pub struct LinearExtrapolation {
+    /// Points of the running curve used for the fit.
+    pub window: usize,
+    /// Epoch budget to extrapolate to.
+    pub horizon: u32,
+    /// Activate only after this many epochs.
+    pub min_epochs: u32,
+}
+
+impl Default for LinearExtrapolation {
+    fn default() -> Self {
+        LinearExtrapolation { window: 5, horizon: 0, min_epochs: 4 }
+    }
+}
+
+impl StoppingPolicy for LinearExtrapolation {
+    fn name(&self) -> &'static str {
+        "linear_extrapolation"
+    }
+    fn should_stop(&self, curve_so_far: &[f64], epoch: u32, history: &CurveHistory) -> bool {
+        if epoch < self.min_epochs || curve_so_far.len() < self.window {
+            return false;
+        }
+        // best completed final value so far
+        let best_final = history
+            .curves
+            .iter()
+            .filter(|c| c.completed)
+            .filter_map(|c| c.values.last().copied())
+            .fold(f64::INFINITY, f64::min);
+        if !best_final.is_finite() {
+            return false;
+        }
+        // least-squares line through the last `window` points
+        let tail = &curve_so_far[curve_so_far.len() - self.window..];
+        let n = tail.len() as f64;
+        let tbar = (n - 1.0) / 2.0;
+        let ybar = tail.iter().sum::<f64>() / n;
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (i, y) in tail.iter().enumerate() {
+            num += (i as f64 - tbar) * (y - ybar);
+            den += (i as f64 - tbar).powi(2);
+        }
+        let slope = if den > 0.0 { num / den } else { 0.0 };
+        let horizon = if self.horizon > 0 {
+            self.horizon
+        } else {
+            history
+                .median_completed_epochs()
+                .map(|m| m as u32)
+                .unwrap_or(epoch)
+        };
+        let steps_left = horizon.saturating_sub(epoch) as f64;
+        let predicted_final = tail[tail.len() - 1] + slope.min(0.0) * steps_left;
+        predicted_final > best_final
+    }
+}
+
+/// Asynchronous successive halving (ASHA, §2.3): stop at rung boundaries
+/// (min_r · ηᵏ) unless the running value is within the top 1/η of observed
+/// values at that rung. Configurations are chosen by any [`crate::strategies::Strategy`]
+/// (classically random), making this the multi-fidelity baseline the paper
+/// cites.
+#[derive(Clone, Debug)]
+pub struct AshaRule {
+    /// Smallest rung resource (epochs).
+    pub min_resource: u32,
+    /// Reduction factor η.
+    pub eta: u32,
+}
+
+impl Default for AshaRule {
+    fn default() -> Self {
+        AshaRule { min_resource: 1, eta: 3 }
+    }
+}
+
+impl AshaRule {
+    /// Whether `epoch` is a rung boundary.
+    pub fn is_rung(&self, epoch: u32) -> bool {
+        let mut r = self.min_resource;
+        while r <= epoch {
+            if r == epoch {
+                return true;
+            }
+            r *= self.eta;
+        }
+        false
+    }
+}
+
+impl StoppingPolicy for AshaRule {
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+    fn should_stop(&self, curve_so_far: &[f64], epoch: u32, history: &CurveHistory) -> bool {
+        if !self.is_rung(epoch) {
+            return false;
+        }
+        let mut peers = history.values_at(epoch);
+        if peers.len() < self.eta as usize {
+            return false;
+        }
+        let cur = match curve_so_far.get(epoch as usize - 1) {
+            Some(v) => *v,
+            None => return false,
+        };
+        peers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut = peers[(peers.len() / self.eta as usize).saturating_sub(1).min(peers.len() - 1)];
+        cur > cut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn history_with(curves: &[&[f64]]) -> CurveHistory {
+        let mut h = CurveHistory::default();
+        for c in curves {
+            h.push(c.to_vec(), true);
+        }
+        h
+    }
+
+    #[test]
+    fn median_helper() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn median_rule_stops_bad_job() {
+        let h = history_with(&[
+            &[0.9, 0.5, 0.3, 0.2],
+            &[0.8, 0.6, 0.4, 0.3],
+            &[0.7, 0.4, 0.2, 0.1],
+        ]);
+        let rule = MedianRule::default();
+        // activation: median completed epochs = 4, fraction 0.25 ⇒ epoch 2
+        assert_eq!(rule.activation_epoch(&h), 2);
+        // running job much worse than the median at epoch 2 (0.5)
+        assert!(rule.should_stop(&[0.95, 0.9], 2, &h));
+        // and a good one survives
+        assert!(!rule.should_stop(&[0.6, 0.3], 2, &h));
+    }
+
+    #[test]
+    fn median_rule_inactive_before_threshold() {
+        let h = history_with(&[&[0.9; 20], &[0.8; 20]]);
+        let rule = MedianRule::default();
+        // activation = ceil(20 * 0.25) = 5
+        assert_eq!(rule.activation_epoch(&h), 5);
+        assert!(!rule.should_stop(&[10.0, 10.0, 10.0, 10.0], 4, &h));
+        assert!(rule.should_stop(&[10.0; 5], 5, &h));
+    }
+
+    #[test]
+    fn median_rule_never_stops_without_completed_jobs() {
+        let h = CurveHistory::default();
+        let rule = MedianRule::default();
+        assert!(!rule.should_stop(&[100.0; 10], 10, &h));
+    }
+
+    #[test]
+    fn min_completed_jobs_safeguard() {
+        let h = history_with(&[&[0.1, 0.1], &[0.1, 0.1]]);
+        let rule = MedianRule { min_completed_jobs: 10, ..Default::default() };
+        assert!(!rule.should_stop(&[9.9, 9.9], 2, &h));
+        let rule = MedianRule { min_completed_jobs: 2, ..Default::default() };
+        assert!(rule.should_stop(&[9.9, 9.9], 2, &h));
+    }
+
+    #[test]
+    fn stopped_prefixes_count_toward_medians() {
+        let mut h = CurveHistory::default();
+        h.push(vec![0.5, 0.4, 0.3, 0.2], true);
+        h.push(vec![0.9, 0.9], false); // stopped early
+        assert_eq!(h.values_at(2).len(), 2);
+        assert_eq!(h.num_completed(), 1);
+    }
+
+    #[test]
+    fn linear_extrapolation_stops_flat_bad_curves() {
+        let mut h = CurveHistory::default();
+        h.push(vec![0.9, 0.5, 0.3, 0.25, 0.2, 0.18, 0.17, 0.16], true);
+        let rule = LinearExtrapolation::default();
+        // running curve plateaued at 0.6 — cannot reach 0.16
+        let flat = vec![0.9, 0.8, 0.65, 0.62, 0.61, 0.6];
+        assert!(rule.should_stop(&flat, 6, &h));
+        // steeply improving curve is spared
+        let steep = vec![0.9, 0.5, 0.4, 0.3, 0.2, 0.15];
+        assert!(!rule.should_stop(&steep, 6, &h));
+    }
+
+    #[test]
+    fn asha_rungs_and_cuts() {
+        let rule = AshaRule { min_resource: 1, eta: 3 };
+        assert!(rule.is_rung(1));
+        assert!(rule.is_rung(3));
+        assert!(rule.is_rung(9));
+        assert!(!rule.is_rung(2));
+        assert!(!rule.is_rung(6));
+
+        let h = history_with(&[
+            &[0.1, 0.1, 0.1],
+            &[0.2, 0.2, 0.2],
+            &[0.3, 0.3, 0.3],
+            &[0.4, 0.4, 0.4],
+            &[0.5, 0.5, 0.5],
+            &[0.6, 0.6, 0.6],
+        ]);
+        // top 1/3 at rung 3 is ~0.2; a 0.55 value must stop, 0.15 survives
+        assert!(rule.should_stop(&[0.55, 0.55, 0.55], 3, &h));
+        assert!(!rule.should_stop(&[0.15, 0.15, 0.15], 3, &h));
+        // non-rung epoch: never stop
+        assert!(!rule.should_stop(&[0.99, 0.99], 2, &h));
+    }
+
+    #[test]
+    fn no_stopping_is_inert() {
+        let h = history_with(&[&[0.0; 5]]);
+        assert!(!NoStopping.should_stop(&[f64::INFINITY; 5], 5, &h));
+    }
+}

@@ -1,0 +1,205 @@
+//! Empirical-Bayes GPHP fitting (§4.2's "traditional way"): maximize the
+//! log marginal likelihood (plus the weak log prior, which regularizes the
+//! few-observation regime the paper warns about) with a bounded
+//! Nelder–Mead simplex over the packed log-space θ.
+//!
+//! Also home of the general-purpose [`nelder_mead`] optimizer, reused by
+//! the acquisition module to locally optimize EI from Sobol anchors (§4.3).
+
+use super::theta::Theta;
+use super::{nll, SurrogateBackend};
+use crate::rng::Rng;
+
+/// Nelder–Mead options.
+#[derive(Clone, Copy, Debug)]
+pub struct NmOptions {
+    /// Maximum function evaluations.
+    pub max_evals: usize,
+    /// Initial simplex scale (per coordinate).
+    pub init_step: f64,
+    /// Convergence: simplex f-spread below this stops.
+    pub f_tol: f64,
+}
+
+impl Default for NmOptions {
+    fn default() -> Self {
+        NmOptions { max_evals: 400, init_step: 0.4, f_tol: 1e-8 }
+    }
+}
+
+/// Derivative-free Nelder–Mead minimization of `f` from `x0`.
+/// Returns (argmin, min). `f` may return `None` ⇒ treated as +∞.
+pub fn nelder_mead<F>(f: F, x0: &[f64], opts: &NmOptions) -> (Vec<f64>, f64)
+where
+    F: Fn(&[f64]) -> Option<f64>,
+{
+    let n = x0.len();
+    let eval = |x: &[f64]| f(x).unwrap_or(f64::INFINITY);
+    // initial simplex: x0 plus per-coordinate steps
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    simplex.push((x0.to_vec(), eval(x0)));
+    for i in 0..n {
+        let mut xi = x0.to_vec();
+        xi[i] += opts.init_step;
+        let fx = eval(&xi);
+        simplex.push((xi, fx));
+    }
+    let mut evals = n + 1;
+
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+    while evals < opts.max_evals {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let spread = simplex[n].1 - simplex[0].1;
+        if spread.abs() < opts.f_tol {
+            break;
+        }
+        // centroid of all but worst
+        let mut c = vec![0.0; n];
+        for (x, _) in &simplex[..n] {
+            for (ci, xi) in c.iter_mut().zip(x) {
+                *ci += xi / n as f64;
+            }
+        }
+        let worst = simplex[n].clone();
+        let refl: Vec<f64> =
+            c.iter().zip(&worst.0).map(|(ci, wi)| ci + alpha * (ci - wi)).collect();
+        let f_refl = eval(&refl);
+        evals += 1;
+
+        if f_refl < simplex[0].1 {
+            // expansion
+            let exp: Vec<f64> =
+                c.iter().zip(&refl).map(|(ci, ri)| ci + gamma * (ri - ci)).collect();
+            let f_exp = eval(&exp);
+            evals += 1;
+            simplex[n] = if f_exp < f_refl { (exp, f_exp) } else { (refl, f_refl) };
+        } else if f_refl < simplex[n - 1].1 {
+            simplex[n] = (refl, f_refl);
+        } else {
+            // contraction
+            let con: Vec<f64> =
+                c.iter().zip(&worst.0).map(|(ci, wi)| ci + rho * (wi - ci)).collect();
+            let f_con = eval(&con);
+            evals += 1;
+            if f_con < worst.1 {
+                simplex[n] = (con, f_con);
+            } else {
+                // shrink towards best
+                let best = simplex[0].0.clone();
+                for (x, fx) in simplex.iter_mut().skip(1) {
+                    for (xi, bi) in x.iter_mut().zip(&best) {
+                        *xi = bi + sigma * (*xi - bi);
+                    }
+                    *fx = eval(x);
+                    evals += 1;
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.swap_remove(0)
+}
+
+/// Empirical-Bayes fit: multi-start Nelder–Mead on −(log marginal
+/// likelihood + log prior), clamped to the stability box. Returns the best
+/// theta found (always at least the default).
+pub fn fit_empirical_bayes(
+    backend: &dyn SurrogateBackend,
+    x: &[Vec<f64>],
+    y: &[f64],
+    d: usize,
+    restarts: usize,
+    rng: &mut Rng,
+) -> Theta {
+    let objective = |packed: &[f64]| -> Option<f64> {
+        let mut p = packed.to_vec();
+        Theta::clamp_packed(&mut p, d);
+        let theta = Theta::unpack(&p, d);
+        nll(backend, x, y, &theta).map(|v| v - theta.log_prior())
+    };
+
+    let mut best_x = Theta::default_for_dim(d).pack();
+    let mut best_f = objective(&best_x).unwrap_or(f64::INFINITY);
+
+    let bounds = Theta::bounds(d);
+    for r in 0..restarts.max(1) {
+        let start: Vec<f64> = if r == 0 {
+            Theta::default_for_dim(d).pack()
+        } else {
+            bounds
+                .iter()
+                .map(|(lo, hi)| rng.uniform_range(*lo * 0.5 + *hi * 0.5 - 1.0, *lo * 0.5 + *hi * 0.5 + 1.0))
+                .collect()
+        };
+        let (xr, fr) = nelder_mead(objective, &start, &NmOptions::default());
+        if fr < best_f {
+            best_f = fr;
+            best_x = xr;
+        }
+    }
+    Theta::clamp_packed(&mut best_x, d);
+    Theta::unpack(&best_x, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{normalization, NativeBackend};
+
+    #[test]
+    fn nelder_mead_minimizes_quadratic() {
+        let f = |x: &[f64]| Some((x[0] - 2.0).powi(2) + (x[1] + 1.0).powi(2) + 3.0);
+        let (x, fx) = nelder_mead(f, &[0.0, 0.0], &NmOptions::default());
+        assert!((x[0] - 2.0).abs() < 1e-3, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-3, "{x:?}");
+        assert!((fx - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn nelder_mead_handles_infeasible_regions() {
+        // f undefined left of 1.0
+        let f = |x: &[f64]| (x[0] > 1.0).then(|| (x[0] - 3.0).powi(2));
+        let (x, _) = nelder_mead(f, &[4.0], &NmOptions::default());
+        assert!((x[0] - 3.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn rosenbrock_2d_reasonable() {
+        let f =
+            |x: &[f64]| Some((1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2));
+        let (x, fx) =
+            nelder_mead(f, &[-1.0, 1.0], &NmOptions { max_evals: 2000, ..Default::default() });
+        assert!(fx < 1e-3, "fx={fx} at {x:?}");
+    }
+
+    #[test]
+    fn eb_fit_improves_over_default() {
+        let mut rng = Rng::new(1);
+        let x: Vec<Vec<f64>> =
+            (0..25).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+        let y_raw: Vec<f64> =
+            x.iter().map(|p| (5.0 * p[0]).sin() * 2.0 + 0.01 * rng.normal()).collect();
+        let (m, s) = normalization(&y_raw);
+        let y: Vec<f64> = y_raw.iter().map(|v| (v - m) / s).collect();
+
+        let fitted = fit_empirical_bayes(&NativeBackend, &x, &y, 2, 2, &mut rng);
+        let default = Theta::default_for_dim(2);
+        let nll_fit = nll(&NativeBackend, &x, &y, &fitted).unwrap();
+        let nll_def = nll(&NativeBackend, &x, &y, &default).unwrap();
+        assert!(
+            nll_fit <= nll_def + 1e-9,
+            "fitted {nll_fit} should beat default {nll_def}"
+        );
+    }
+
+    #[test]
+    fn eb_fit_stays_in_bounds() {
+        let mut rng = Rng::new(2);
+        let x: Vec<Vec<f64>> = (0..8).map(|_| vec![rng.uniform()]).collect();
+        let y: Vec<f64> = x.iter().map(|p| p[0]).collect();
+        let t = fit_empirical_bayes(&NativeBackend, &x, &y, 1, 1, &mut rng);
+        for (v, (lo, hi)) in t.pack().iter().zip(Theta::bounds(1)) {
+            assert!(*v >= lo - 1e-9 && *v <= hi + 1e-9);
+        }
+    }
+}

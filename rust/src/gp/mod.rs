@@ -1,0 +1,332 @@
+//! Gaussian-process surrogate model (§4.2): zero-mean GP over encoded
+//! configurations with a warped Matérn-5/2 ARD kernel, Gaussian observation
+//! noise, and GPHPs treated either by empirical Bayes ([`fit`]) or slice
+//! sampling ([`slice`]).
+//!
+//! The O(N³) factorization work happens here in Rust ([`crate::linalg`]);
+//! the O(N²) kernel construction and O(M·N²) acquisition scoring are
+//! delegated to a [`SurrogateBackend`] — either [`NativeBackend`] (pure
+//! Rust, any dimension) or the PJRT-executed AOT artifacts
+//! ([`crate::runtime::HloBackend`]), which run the L1 Pallas kernel.
+
+pub mod fit;
+pub mod kernel;
+pub mod slice;
+pub mod theta;
+
+pub use theta::Theta;
+
+use crate::linalg::{cho_inverse, cho_logdet, cho_solve, cholesky, solve_lower, Matrix};
+
+/// Acquisition-relevant posterior summary at one candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Score {
+    /// Expected improvement (minimization, normalized-y units).
+    pub ei: f64,
+    /// Posterior mean.
+    pub mu: f64,
+    /// Posterior variance of the latent function.
+    pub var: f64,
+}
+
+/// Fitted per-theta posterior state: everything the acquisition graphs need.
+#[derive(Clone, Debug)]
+pub struct PosteriorState {
+    /// Encoded training inputs (live rows only).
+    pub x: Vec<Vec<f64>>,
+    /// GP hyperparameters of this sample.
+    pub theta: Theta,
+    /// Cholesky factor of the regularized Gram matrix.
+    pub l: Matrix,
+    /// K⁻¹ (shipped to the AOT posterior/EI graph).
+    pub k_inv: Matrix,
+    /// K⁻¹ y (normalized targets).
+    pub alpha: Vec<f64>,
+}
+
+/// Kernel/acquisition compute backend.
+pub trait SurrogateBackend: Send + Sync {
+    /// Human-readable backend name (for logs/benches).
+    fn name(&self) -> &'static str;
+    /// Regularized Gram matrix K(X, X) + (noise + jitter) I.
+    fn gram(&self, x: &[Vec<f64>], theta: &Theta) -> Matrix;
+    /// (EI, mu, var) at each candidate given a fitted posterior and the
+    /// incumbent `y_best` (normalized units, minimization).
+    fn posterior_scores(
+        &self,
+        post: &PosteriorState,
+        x_cand: &[Vec<f64>],
+        y_best: f64,
+    ) -> Vec<Score>;
+}
+
+/// Pure-Rust backend (f64; reference implementation).
+pub struct NativeBackend;
+
+impl SurrogateBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn gram(&self, x: &[Vec<f64>], theta: &Theta) -> Matrix {
+        kernel::gram(x, theta)
+    }
+
+    fn posterior_scores(
+        &self,
+        post: &PosteriorState,
+        x_cand: &[Vec<f64>],
+        y_best: f64,
+    ) -> Vec<Score> {
+        let kx = kernel::cross(x_cand, &post.x, &post.theta);
+        let amp = post.theta.amp();
+        let n = post.x.len();
+        let mut out = Vec::with_capacity(x_cand.len());
+        for i in 0..x_cand.len() {
+            let row = kx.row(i);
+            let mu = crate::linalg::dot(row, &post.alpha);
+            // var = amp − rowᵀ K⁻¹ row (same formula the HLO graph uses)
+            let mut quad = 0.0;
+            for a in 0..n {
+                quad += row[a] * crate::linalg::dot(post.k_inv.row(a), row);
+            }
+            let var = (amp - quad).max(1e-12);
+            out.push(Score { ei: expected_improvement(mu, var, y_best), mu, var });
+        }
+        out
+    }
+}
+
+/// Closed-form expected improvement for minimization.
+pub fn expected_improvement(mu: f64, var: f64, y_best: f64) -> f64 {
+    let sigma = var.max(1e-12).sqrt();
+    let z = (y_best - mu) / sigma;
+    sigma * (z * norm_cdf(z) + norm_pdf(z))
+}
+
+/// Standard normal pdf.
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via erf (Abramowitz–Stegun 7.1.26, |err| < 1.5e-7).
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Error function approximation (A&S 7.1.26).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Negative log marginal likelihood of normalized targets under `theta`.
+///
+/// Returns `None` when the Gram matrix is numerically non-PD (the caller —
+/// slice sampler or optimizer — treats that as an infinitely bad point).
+pub fn nll(backend: &dyn SurrogateBackend, x: &[Vec<f64>], y: &[f64], theta: &Theta) -> Option<f64> {
+    let k = backend.gram(x, theta);
+    let l = cholesky(&k).ok()?;
+    let a = solve_lower(&l, y);
+    let quad: f64 = a.iter().map(|v| v * v).sum();
+    let val = 0.5 * quad
+        + 0.5 * cho_logdet(&l)
+        + 0.5 * x.len() as f64 * (2.0 * std::f64::consts::PI).ln();
+    val.is_finite().then_some(val)
+}
+
+/// A fitted GP surrogate: one posterior per GPHP sample, plus the target
+/// normalization (observations are normalized to zero mean / unit variance,
+/// §4.2 "observations y collected from f are normalized").
+pub struct GpModel {
+    /// One fitted posterior per theta (MCMC) or a single one (EB).
+    pub posteriors: Vec<PosteriorState>,
+    /// Normalization: y_norm = (y − mean) / std.
+    pub y_mean: f64,
+    /// Normalization scale.
+    pub y_std: f64,
+    /// Best (lowest) normalized observation — EI incumbent.
+    pub y_best_norm: f64,
+}
+
+impl GpModel {
+    /// Fit posteriors for a set of theta samples over raw observations.
+    /// Thetas whose Gram matrix fails to factorize are dropped; returns
+    /// `None` if none survive or the dataset is empty.
+    pub fn fit(
+        backend: &dyn SurrogateBackend,
+        x: &[Vec<f64>],
+        y_raw: &[f64],
+        thetas: Vec<Theta>,
+    ) -> Option<GpModel> {
+        if x.is_empty() || x.len() != y_raw.len() {
+            return None;
+        }
+        let (y_mean, y_std) = normalization(y_raw);
+        let y: Vec<f64> = y_raw.iter().map(|v| (v - y_mean) / y_std).collect();
+        let y_best_norm = y.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut posteriors = Vec::new();
+        for theta in thetas {
+            let k = backend.gram(x, &theta);
+            let Ok(l) = cholesky(&k) else { continue };
+            let alpha = cho_solve(&l, &y);
+            let k_inv = cho_inverse(&l);
+            posteriors.push(PosteriorState { x: x.to_vec(), theta, l, k_inv, alpha });
+        }
+        (!posteriors.is_empty()).then_some(GpModel { posteriors, y_mean, y_std, y_best_norm })
+    }
+
+    /// Acquisition scores averaged over the GPHP posterior samples
+    /// (normalized-y units).
+    pub fn score(&self, backend: &dyn SurrogateBackend, x_cand: &[Vec<f64>]) -> Vec<Score> {
+        let mut acc: Vec<Score> = vec![Score { ei: 0.0, mu: 0.0, var: 0.0 }; x_cand.len()];
+        for post in &self.posteriors {
+            let s = backend.posterior_scores(post, x_cand, self.y_best_norm);
+            for (a, b) in acc.iter_mut().zip(s) {
+                a.ei += b.ei;
+                a.mu += b.mu;
+                a.var += b.var;
+            }
+        }
+        let k = self.posteriors.len() as f64;
+        for a in &mut acc {
+            a.ei /= k;
+            a.mu /= k;
+            a.var /= k;
+        }
+        acc
+    }
+
+    /// Posterior mean in raw-objective units at one point.
+    pub fn predict_raw(&self, backend: &dyn SurrogateBackend, x: &[f64]) -> (f64, f64) {
+        let s = self.score(backend, &[x.to_vec()]);
+        (self.y_mean + self.y_std * s[0].mu, self.y_std * self.y_std * s[0].var)
+    }
+}
+
+/// Mean/std normalization constants (std floored for degenerate data).
+pub fn normalization(y: &[f64]) -> (f64, f64) {
+    let n = y.len() as f64;
+    let mean = y.iter().sum::<f64>() / n;
+    let var = y.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt().max(1e-9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn toy_data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        // smooth function + small noise
+        let y: Vec<f64> = x
+            .iter()
+            .map(|p| {
+                (3.0 * p[0]).sin() + p.iter().skip(1).sum::<f64>() * 0.3 + 0.01 * rng.normal()
+            })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn erf_and_cdf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-6); // A&S 7.1.26: |err| < 1.5e-7
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((norm_cdf(1.96) - 0.9750021).abs() < 1e-5);
+        assert!((norm_cdf(-1.96) - 0.0249979).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ei_closed_form_sanity() {
+        // mu = y_best, sigma = 1 ⇒ EI = phi(0) ≈ 0.39894
+        let ei = expected_improvement(0.0, 1.0, 0.0);
+        assert!((ei - 0.3989422804).abs() < 1e-6);
+        // far worse mean with tiny sigma ⇒ ~0
+        assert!(expected_improvement(10.0, 1e-6, 0.0) < 1e-12);
+        // improvement certain ⇒ EI ≈ y_best − mu
+        let ei = expected_improvement(-5.0, 1e-6, 0.0);
+        assert!((ei - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nll_finite_and_better_for_true_noise() {
+        let (x, y) = toy_data(30, 2, 1);
+        let (m, s) = normalization(&y);
+        let yn: Vec<f64> = y.iter().map(|v| (v - m) / s).collect();
+        let good = Theta::default_for_dim(2);
+        let mut bad = good.clone();
+        bad.log_noise = 0.0; // variance 1: way too noisy for this data
+        let nll_good = nll(&NativeBackend, &x, &yn, &good).unwrap();
+        let nll_bad = nll(&NativeBackend, &x, &yn, &bad).unwrap();
+        assert!(nll_good < nll_bad, "{nll_good} vs {nll_bad}");
+    }
+
+    #[test]
+    fn posterior_interpolates_training_data() {
+        let (x, y) = toy_data(25, 2, 2);
+        let model =
+            GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap();
+        for (xi, yi) in x.iter().zip(&y).take(5) {
+            let (mu, var) = model.predict_raw(&NativeBackend, xi);
+            assert!((mu - yi).abs() < 0.15, "mu={mu} yi={yi}");
+            assert!(var < 0.1);
+        }
+    }
+
+    #[test]
+    fn posterior_uncertainty_grows_away_from_data() {
+        let x = vec![vec![0.5, 0.5]];
+        let y = vec![0.0];
+        let model =
+            GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap();
+        let (_, var_near) = model.predict_raw(&NativeBackend, &[0.5, 0.5]);
+        let (_, var_far) = model.predict_raw(&NativeBackend, &[0.0, 0.0]);
+        assert!(var_far > 10.0 * var_near, "{var_far} vs {var_near}");
+    }
+
+    #[test]
+    fn score_averages_over_theta_samples() {
+        let (x, y) = toy_data(12, 2, 3);
+        let mut t2 = Theta::default_for_dim(2);
+        t2.log_ls = vec![(0.2f64).ln(); 2];
+        let model =
+            GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2), t2.clone()])
+                .unwrap();
+        let avg = model.score(&NativeBackend, &[vec![0.3, 0.7]])[0];
+        let m1 = GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap();
+        let m2 = GpModel::fit(&NativeBackend, &x, &y, vec![t2]).unwrap();
+        let s1 = m1.score(&NativeBackend, &[vec![0.3, 0.7]])[0];
+        let s2 = m2.score(&NativeBackend, &[vec![0.3, 0.7]])[0];
+        assert!((avg.mu - 0.5 * (s1.mu + s2.mu)).abs() < 1e-9);
+        assert!((avg.ei - 0.5 * (s1.ei + s2.ei)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_drops_non_finite_thetas() {
+        let x = vec![vec![0.1], vec![0.9]];
+        let y = vec![0.0, 1.0];
+        let mut degenerate = Theta::default_for_dim(1);
+        degenerate.log_amp = 710.0; // exp overflows ⇒ non-finite Gram ⇒ dropped
+        let ok = Theta::default_for_dim(1);
+        let model = GpModel::fit(&NativeBackend, &x, &y, vec![degenerate, ok]).unwrap();
+        assert_eq!(model.posteriors.len(), 1);
+    }
+
+    #[test]
+    fn normalization_handles_constant_targets() {
+        let (m, s) = normalization(&[2.0, 2.0, 2.0]);
+        assert_eq!(m, 2.0);
+        assert!(s > 0.0);
+    }
+}

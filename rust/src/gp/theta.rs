@@ -1,0 +1,189 @@
+//! GP hyperparameters (GPHPs, §4.2): packed representation, priors, bounds.
+//!
+//! The packed layout is shared byte-for-byte with the AOT HLO graphs (see
+//! `python/compile/model.py`):
+//!
+//! ```text
+//! theta = [ log_amp, log_noise, log_ls[0..d), log_wa[0..d), log_wb[0..d) ]
+//! ```
+//!
+//! All parameters live in log space, which makes the slice sampler and the
+//! empirical-Bayes optimizer unconstrained up to the stability box bounds
+//! the paper mentions ("we fix upper and lower bounds on the GPHPs for
+//! numerical stability").
+
+/// GP hyperparameters for a `d`-dimensional encoded space.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Theta {
+    /// log signal variance (amplitude²).
+    pub log_amp: f64,
+    /// log observation-noise variance.
+    pub log_noise: f64,
+    /// log ARD lengthscales, one per encoded dimension.
+    pub log_ls: Vec<f64>,
+    /// log Kumaraswamy `a` warping parameters (0 ⇒ identity warp).
+    pub log_wa: Vec<f64>,
+    /// log Kumaraswamy `b` warping parameters.
+    pub log_wb: Vec<f64>,
+}
+
+impl Theta {
+    /// Sensible starting point: unit amplitude, small noise, lengthscale
+    /// 0.5 in the unit cube, identity warp.
+    pub fn default_for_dim(d: usize) -> Theta {
+        Theta {
+            log_amp: 0.0,
+            log_noise: (1e-3f64).ln(),
+            log_ls: vec![0.5f64.ln(); d],
+            log_wa: vec![0.0; d],
+            log_wb: vec![0.0; d],
+        }
+    }
+
+    /// Encoded dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.log_ls.len()
+    }
+
+    /// Packed length 2 + 3d.
+    pub fn packed_len(d: usize) -> usize {
+        2 + 3 * d
+    }
+
+    /// Pack into the shared flat layout.
+    pub fn pack(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(Self::packed_len(self.dim()));
+        v.push(self.log_amp);
+        v.push(self.log_noise);
+        v.extend_from_slice(&self.log_ls);
+        v.extend_from_slice(&self.log_wa);
+        v.extend_from_slice(&self.log_wb);
+        v
+    }
+
+    /// Unpack from the shared flat layout.
+    pub fn unpack(v: &[f64], d: usize) -> Theta {
+        assert_eq!(v.len(), Self::packed_len(d), "theta length mismatch");
+        Theta {
+            log_amp: v[0],
+            log_noise: v[1],
+            log_ls: v[2..2 + d].to_vec(),
+            log_wa: v[2 + d..2 + 2 * d].to_vec(),
+            log_wb: v[2 + 2 * d..2 + 3 * d].to_vec(),
+        }
+    }
+
+    /// Positive-space views.
+    pub fn amp(&self) -> f64 {
+        self.log_amp.exp()
+    }
+    /// Observation-noise variance.
+    pub fn noise(&self) -> f64 {
+        self.log_noise.exp()
+    }
+    /// ARD lengthscales.
+    pub fn lengthscales(&self) -> Vec<f64> {
+        self.log_ls.iter().map(|v| v.exp()).collect()
+    }
+    /// Kumaraswamy `a` parameters.
+    pub fn warp_a(&self) -> Vec<f64> {
+        self.log_wa.iter().map(|v| v.exp()).collect()
+    }
+    /// Kumaraswamy `b` parameters.
+    pub fn warp_b(&self) -> Vec<f64> {
+        self.log_wb.iter().map(|v| v.exp()).collect()
+    }
+
+    /// Stability box bounds on the packed vector (lo, hi per entry).
+    pub fn bounds(d: usize) -> Vec<(f64, f64)> {
+        let mut b = Vec::with_capacity(Self::packed_len(d));
+        b.push(((1e-3f64).ln(), (1e3f64).ln())); // amp
+        b.push(((1e-6f64).ln(), 1.0f64.ln())); // noise
+        for _ in 0..d {
+            b.push(((5e-3f64).ln(), (10.0f64).ln())); // lengthscale
+        }
+        for _ in 0..2 * d {
+            b.push(((0.25f64).ln(), (4.0f64).ln())); // warp a, b
+        }
+        b
+    }
+
+    /// Clamp a packed vector into the stability box (in place).
+    pub fn clamp_packed(v: &mut [f64], d: usize) {
+        for (x, (lo, hi)) in v.iter_mut().zip(Self::bounds(d)) {
+            *x = x.clamp(lo, hi);
+        }
+    }
+
+    /// Log prior density (up to a constant): independent Gaussians in log
+    /// space, centered on a weakly-informative configuration. Keeps the
+    /// MCMC posterior proper and regularizes empirical Bayes in the
+    /// few-observation regime (§4.2).
+    pub fn log_prior(&self) -> f64 {
+        let mut lp = 0.0;
+        let g = |x: f64, mu: f64, sd: f64| -0.5 * ((x - mu) / sd).powi(2);
+        lp += g(self.log_amp, 0.0, 1.0);
+        lp += g(self.log_noise, (1e-3f64).ln(), 2.0);
+        for &l in &self.log_ls {
+            lp += g(l, (0.5f64).ln(), 1.0);
+        }
+        for &a in self.log_wa.iter().chain(&self.log_wb) {
+            lp += g(a, 0.0, 0.55); // shrink towards the identity warp
+        }
+        lp
+    }
+
+    /// Disable input warping (fix a = b = 1); used by the warping ablation.
+    pub fn with_identity_warp(mut self) -> Theta {
+        self.log_wa.iter_mut().for_each(|v| *v = 0.0);
+        self.log_wb.iter_mut().for_each(|v| *v = 0.0);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let t = Theta {
+            log_amp: 0.3,
+            log_noise: -5.0,
+            log_ls: vec![0.1, -0.2, 0.5],
+            log_wa: vec![0.0, 0.1, -0.1],
+            log_wb: vec![0.2, 0.0, 0.05],
+        };
+        let packed = t.pack();
+        assert_eq!(packed.len(), Theta::packed_len(3));
+        assert_eq!(Theta::unpack(&packed, 3), t);
+    }
+
+    #[test]
+    fn bounds_cover_default() {
+        let d = 5;
+        let t = Theta::default_for_dim(d);
+        for (v, (lo, hi)) in t.pack().iter().zip(Theta::bounds(d)) {
+            assert!(*v >= lo && *v <= hi, "{v} not in [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn clamp_respects_box() {
+        let d = 2;
+        let mut v = vec![100.0; Theta::packed_len(d)];
+        Theta::clamp_packed(&mut v, d);
+        for (x, (lo, hi)) in v.iter().zip(Theta::bounds(d)) {
+            assert!(*x >= lo && *x <= hi);
+        }
+    }
+
+    #[test]
+    fn prior_prefers_identity_warp() {
+        let d = 2;
+        let base = Theta::default_for_dim(d);
+        let mut warped = base.clone();
+        warped.log_wa = vec![1.0; d];
+        assert!(base.log_prior() > warped.log_prior());
+    }
+}

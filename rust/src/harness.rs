@@ -1,0 +1,174 @@
+//! Benchmark & figure-harness utilities.
+//!
+//! The offline environment pins a vendored crate set without criterion, so
+//! `cargo bench` targets use this self-contained harness: warmup + timed
+//! iterations, robust summary statistics, and aligned table printing shared
+//! by the figure-reproduction examples.
+
+use std::time::Instant;
+
+/// Summary statistics over timed iterations (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    /// Iterations measured.
+    pub iters: usize,
+    /// Mean seconds/iter.
+    pub mean: f64,
+    /// Median seconds/iter.
+    pub p50: f64,
+    /// 95th percentile seconds/iter.
+    pub p95: f64,
+    /// Minimum seconds/iter.
+    pub min: f64,
+}
+
+impl BenchStats {
+    /// From raw per-iteration durations.
+    pub fn from_samples(mut secs: Vec<f64>) -> BenchStats {
+        assert!(!secs.is_empty());
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = secs.len();
+        let mean = secs.iter().sum::<f64>() / n as f64;
+        BenchStats {
+            iters: n,
+            mean,
+            p50: secs[n / 2],
+            p95: secs[((n - 1) as f64 * 0.95) as usize],
+            min: secs[0],
+        }
+    }
+
+    /// Human format with auto units.
+    pub fn human(&self) -> String {
+        format!(
+            "mean {:>10} p50 {:>10} p95 {:>10} min {:>10} ({} iters)",
+            fmt_secs(self.mean),
+            fmt_secs(self.p50),
+            fmt_secs(self.p95),
+            fmt_secs(self.min),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds with appropriate unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let stats = BenchStats::from_samples(samples);
+    println!("{name:<44} {}", stats.human());
+    stats
+}
+
+/// Print an aligned table: header + rows of equal arity.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        println!("{}", fmt_row(row.clone()));
+    }
+}
+
+/// Mean and population standard deviation.
+pub fn mean_std(values: &[f64]) -> (f64, f64) {
+    let n = values.len().max(1) as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Interpolate a step series (time, best-so-far) onto a fixed time grid —
+/// used to average best-over-time curves across replications.
+pub fn step_interpolate(series: &[(f64, f64)], grid: &[f64], default: f64) -> Vec<f64> {
+    grid.iter()
+        .map(|&t| {
+            let mut last = default;
+            for &(st, sv) in series {
+                if st <= t {
+                    last = sv;
+                } else {
+                    break;
+                }
+            }
+            last
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_computed_correctly() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(2.5e-5).ends_with("µs"));
+        assert!(fmt_secs(2.5e-2).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn step_interpolation() {
+        let series = vec![(1.0, 10.0), (3.0, 5.0)];
+        let grid = vec![0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(
+            step_interpolate(&series, &grid, f64::NAN)
+                .iter()
+                .skip(1)
+                .cloned()
+                .collect::<Vec<_>>(),
+            vec![10.0, 10.0, 5.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0]);
+        assert_eq!(m, 3.0);
+        assert_eq!(s, 1.0);
+    }
+}

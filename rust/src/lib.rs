@@ -1,0 +1,43 @@
+//! # sagemaker-amt — reproduction of *Amazon SageMaker Automatic Model
+//! Tuning: Scalable Gradient-Free Optimization* (KDD 2021)
+//!
+//! A fully managed, fault-tolerant hyperparameter-optimization service:
+//! an API layer over a metadata store and a workflow engine that drives
+//! training jobs on a (simulated) training platform, with candidate
+//! configurations chosen by GP-based Bayesian optimization (Matérn-5/2 ARD,
+//! Kumaraswamy input warping, slice-sampled GP hyperparameters, expected
+//! improvement over Sobol anchors), random/grid search baselines, median-rule
+//! early stopping and warm starting.
+//!
+//! The GP compute hot path (Gram matrices, posterior moments, EI scoring) is
+//! AOT-compiled from JAX + Pallas into HLO artifacts and executed through
+//! PJRT by [`runtime`]; a pure-Rust mirror of the same math lives in [`gp`]
+//! and is cross-checked against the artifacts in integration tests.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the reproduced figures.
+
+pub mod acquisition;
+pub mod api;
+pub mod config;
+pub mod coordinator;
+pub mod earlystop;
+pub mod gp;
+pub mod harness;
+pub mod json;
+pub mod linalg;
+pub mod metrics;
+pub mod multiobjective;
+pub mod objectives;
+pub mod platform;
+pub mod rng;
+pub mod runtime;
+pub mod sobol;
+pub mod space;
+pub mod store;
+pub mod strategies;
+pub mod warmstart;
+pub mod workflow;
+
+/// Crate-wide result type (service-level errors).
+pub type Result<T> = anyhow::Result<T>;

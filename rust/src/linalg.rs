@@ -1,0 +1,304 @@
+//! Dense linear algebra for the native GP surrogate.
+//!
+//! The O(N³) part of GP inference (Cholesky factorization, triangular
+//! solves) runs here in Rust: jax ≥ 0.5 lowers `linalg.cholesky` on CPU to a
+//! LAPACK FFI custom-call that the pinned xla_extension 0.5.1 cannot
+//! execute, so the coordinator factorizes natively and ships `K⁻¹` / `α` to
+//! the AOT posterior/EI graphs (see DESIGN.md §1 "hot-path split").
+//!
+//! Matrices are row-major `f64`; sizes here are ≤ 512, so simple cache-aware
+//! loops beat the overhead of pulling in a BLAS.
+
+use std::fmt;
+
+/// Row-major dense matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// Immutable row view.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    /// Matrix-matrix product (ikj loop order for cache friendliness).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Max |a - b| over entries (for tests / cross-checks).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+///
+/// Returns `Err` with the failing pivot index if the matrix is not PD (the
+/// BO engine treats that as a rejected GPHP sample).
+pub fn cholesky(a: &Matrix) -> Result<Matrix, usize> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // split borrows: rows i and j of l
+            let (s, ljj) = {
+                let ri = &l.data[i * n..i * n + j];
+                let rj = &l.data[j * n..j * n + j];
+                (dot(ri, rj), l[(j, j)])
+            };
+            if i == j {
+                let d = a[(i, i)] - s;
+                if d <= 0.0 || !d.is_finite() {
+                    return Err(i);
+                }
+                l[(i, i)] = d.sqrt();
+            } else {
+                l[(i, j)] = (a[(i, j)] - s) / ljj;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L x = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let s = dot(&l.data[i * n..i * n + i], &x[..i]);
+        x[i] = (x[i] - s) / l[(i, i)];
+    }
+    x
+}
+
+/// Solve Lᵀ x = b for lower-triangular L (backward substitution).
+pub fn solve_lower_transpose(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let mut s = 0.0;
+        for k in i + 1..n {
+            s += l[(k, i)] * x[k];
+        }
+        x[i] = (x[i] - s) / l[(i, i)];
+    }
+    x
+}
+
+/// Solve K x = b given the Cholesky factor L of K.
+pub fn cho_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    solve_lower_transpose(l, &solve_lower(l, b))
+}
+
+/// K⁻¹ from the Cholesky factor of K (column-by-column cho_solve of I).
+pub fn cho_inverse(l: &Matrix) -> Matrix {
+    let n = l.rows;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = cho_solve(l, &e);
+        e[j] = 0.0;
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    // symmetrize against round-off
+    for i in 0..n {
+        for j in 0..i {
+            let m = 0.5 * (inv[(i, j)] + inv[(j, i)]);
+            inv[(i, j)] = m;
+            inv[(j, i)] = m;
+        }
+    }
+    inv
+}
+
+/// log det K = 2 Σ log L_ii, from the Cholesky factor.
+pub fn cho_logdet(l: &Matrix) -> f64 {
+    (0..l.rows).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut a = Matrix::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.normal();
+        }
+        // A Aᵀ + n I is SPD
+        let mut s = a.matmul(&a.transpose());
+        for i in 0..n {
+            s[(i, i)] += n as f64;
+        }
+        s
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        for n in [1, 2, 5, 16, 64] {
+            let a = random_spd(n, n as u64);
+            let l = cholesky(&a).unwrap();
+            let rec = l.matmul(&l.transpose());
+            assert!(a.max_abs_diff(&rec) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let mut a = Matrix::eye(3);
+        a[(2, 2)] = -1.0;
+        assert_eq!(cholesky(&a), Err(2));
+    }
+
+    #[test]
+    fn cho_solve_solves() {
+        let a = random_spd(20, 3);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..20).map(|i| (i as f64).sin()).collect();
+        let x = cho_solve(&l, &b);
+        let ax = a.matvec(&x);
+        for (u, v) in ax.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cho_inverse_is_inverse() {
+        let a = random_spd(12, 5);
+        let l = cholesky(&a).unwrap();
+        let inv = cho_inverse(&l);
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Matrix::eye(12)) < 1e-8);
+    }
+
+    #[test]
+    fn logdet_matches_direct_for_diagonal() {
+        let mut a = Matrix::eye(4);
+        for i in 0..4 {
+            a[(i, i)] = (i + 1) as f64;
+        }
+        let l = cholesky(&a).unwrap();
+        let expect = (1.0f64 * 2.0 * 3.0 * 4.0).ln();
+        assert!((cho_logdet(&l) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        let a = random_spd(8, 9);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..8).map(|i| i as f64 - 3.0).collect();
+        let y = solve_lower(&l, &b);
+        let ly = l.matvec(&y);
+        for (u, v) in ly.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let z = solve_lower_transpose(&l, &b);
+        let ltz = l.transpose().matvec(&z);
+        for (u, v) in ltz.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Matrix::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_rows(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+}

@@ -1,0 +1,199 @@
+//! `amt` — CLI for the SageMaker-AMT reproduction.
+//!
+//! Commands:
+//!   amt tune --objective <name> [--strategy bayesian] [--max-jobs 20]
+//!            [--parallel 1] [--early-stopping off] [--backend native|hlo]
+//!            [--instances 1] [--seed 0]
+//!   amt objectives                 list built-in workloads
+//!   amt artifacts-check [dir]      compile & smoke-run every HLO artifact
+//!   amt snapshot <path>            run a small job and dump the store
+//!
+//! (The vendored offline crate set has no clap; argument parsing is a small
+//! hand-rolled layer over std::env.)
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::gp::{NativeBackend, SurrogateBackend, Theta};
+use amt::platform::PlatformConfig;
+use amt::rng::Rng;
+use amt::runtime::{HloBackend, HloRuntime};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+fn backend_by_name(name: &str) -> anyhow::Result<Arc<dyn SurrogateBackend>> {
+    Ok(match name {
+        "native" => Arc::new(NativeBackend),
+        "hlo" => Arc::new(HloBackend::new(HloRuntime::open_default()?)),
+        other => anyhow::bail!("unknown backend '{other}' (native|hlo)"),
+    })
+}
+
+fn cmd_tune(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let objective = flag(flags, "objective", "branin").to_string();
+    let request = TuningJobRequest {
+        name: flag(flags, "name", &format!("tune-{objective}")).to_string(),
+        objective: objective.clone(),
+        strategy: flag(flags, "strategy", "bayesian").to_string(),
+        max_training_jobs: flag(flags, "max-jobs", "20").parse()?,
+        max_parallel_jobs: flag(flags, "parallel", "1").parse()?,
+        early_stopping: flag(flags, "early-stopping", "off").to_string(),
+        instance_count: flag(flags, "instances", "1").parse()?,
+        seed: flag(flags, "seed", "0").parse()?,
+        ..Default::default()
+    };
+    let backend = backend_by_name(flag(flags, "backend", "native"))?;
+    let service = AmtService::with_backend(PlatformConfig::default(), backend);
+    let obj = amt::objectives::by_name(&objective)
+        .ok_or_else(|| anyhow::anyhow!("unknown objective"))?;
+
+    println!(
+        "tuning '{}' with {} ({} evaluations, {} parallel, early stopping: {})",
+        request.objective,
+        request.strategy,
+        request.max_training_jobs,
+        request.max_parallel_jobs,
+        request.early_stopping
+    );
+    let name = service
+        .create_tuning_job(request)
+        .map_err(|e| anyhow::anyhow!("create: {e}"))?;
+    let outcome = service.wait(&name).map_err(|e| anyhow::anyhow!("wait: {e}"))?;
+
+    println!(
+        "\ntuning job '{}' finished: {:?} | {} evaluations | {} retries | {:.0}s simulated",
+        outcome.name,
+        outcome.status,
+        outcome.evaluations.len(),
+        outcome.retries,
+        outcome.total_seconds
+    );
+    let stopped = outcome.evaluations.iter().filter(|e| e.stopped_early).count();
+    if stopped > 0 {
+        println!("early-stopped evaluations: {stopped}");
+    }
+    if let Some((config, value)) = &outcome.best {
+        println!("best {} = {:.6}", if obj.minimize() { "min" } else { "max" }, value);
+        for (k, v) in config {
+            println!("  {k} = {v:?}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_objectives() {
+    println!("built-in objectives (workloads):");
+    for name in amt::objectives::all_names() {
+        let obj = amt::objectives::by_name(name).unwrap();
+        println!(
+            "  {name:<22} dims={:<2} epochs={:<3} {}",
+            obj.space().encoded_dim(),
+            obj.max_epochs(),
+            if obj.minimize() { "minimize" } else { "maximize" }
+        );
+    }
+}
+
+fn cmd_artifacts_check(dir: &str) -> anyhow::Result<()> {
+    let rt = HloRuntime::open(dir)?;
+    println!(
+        "manifest: buckets {:?}, D = {}, M = {}, mlp widths {:?}",
+        rt.manifest.buckets,
+        rt.manifest.encoded_dim,
+        rt.manifest.cand_batch,
+        rt.manifest.mlp_widths
+    );
+    let backend = HloBackend::new(Arc::clone(&rt));
+    let mut rng = Rng::new(0);
+    for &b in &rt.manifest.buckets.clone() {
+        let n = (b * 3 / 4).max(1); // a live size inside this bucket
+        let x: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..rt.manifest.encoded_dim).map(|_| rng.uniform()).collect())
+            .collect();
+        let theta = Theta::default_for_dim(rt.manifest.encoded_dim);
+        let k = amt::gp::SurrogateBackend::gram(&backend, &x, &theta);
+        anyhow::ensure!(k.rows == n, "bad gram shape for bucket {b}");
+        println!("kernel_matrix_n{b}: OK ({n} live rows)");
+    }
+    for &h in &rt.manifest.mlp_widths.clone() {
+        let mut trainer = amt::runtime::mlp::MlpTrainer::new(Arc::clone(&rt), h, 0)?;
+        let data = amt::runtime::mlp::MlpDataset::generate(&rt, 0);
+        let loss = trainer.train_epoch(&data, 0.05, 1e-4)?;
+        anyhow::ensure!(loss.is_finite());
+        println!("mlp_train_h{h}/mlp_eval_h{h}: OK (train loss {loss:.4})");
+    }
+    println!(
+        "all artifacts healthy ({} executions)",
+        rt.executions.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    Ok(())
+}
+
+fn cmd_snapshot(path: &str) -> anyhow::Result<()> {
+    let service = AmtService::new(PlatformConfig::default());
+    let request = TuningJobRequest {
+        name: "snapshot-demo".into(),
+        objective: "branin".into(),
+        strategy: "random".into(),
+        max_training_jobs: 5,
+        ..Default::default()
+    };
+    let name = service.create_tuning_job(request).map_err(|e| anyhow::anyhow!("{e}"))?;
+    service.wait(&name).map_err(|e| anyhow::anyhow!("{e}"))?;
+    std::fs::write(path, service.store().snapshot())?;
+    println!("metadata-store snapshot written to {path}");
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "tune" => cmd_tune(&flags),
+        "objectives" => {
+            cmd_objectives();
+            Ok(())
+        }
+        "artifacts-check" => {
+            cmd_artifacts_check(pos.get(1).map(String::as_str).unwrap_or("artifacts"))
+        }
+        "snapshot" => cmd_snapshot(pos.get(1).map(String::as_str).unwrap_or("store.json")),
+        _ => {
+            println!(
+                "usage: amt <tune|objectives|artifacts-check|snapshot> [--flags]\n\
+                 see module docs in rust/src/main.rs"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Metrics service (§3.2): the CloudWatch stand-in.
+//!
+//! Training jobs publish their intermediate objective values here (the
+//! paper: "each training job provides customers with ... logs and metrics
+//! persisted in CloudWatch"); the workflow engine reads them back to feed
+//! the early stopper, and the figure harnesses query time series to plot
+//! best-so-far curves. Timestamps are virtual-clock seconds.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One metric observation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DataPoint {
+    /// Virtual time (seconds since tuning-job start).
+    pub time: f64,
+    /// Metric value.
+    pub value: f64,
+}
+
+/// Aggregate statistics over a metric stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricStats {
+    /// Number of data points.
+    pub count: usize,
+    /// Minimum value.
+    pub min: f64,
+    /// Maximum value.
+    pub max: f64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Value of the latest point.
+    pub last: f64,
+}
+
+/// Thread-safe metric sink keyed by `namespace/metric` streams.
+#[derive(Default)]
+pub struct MetricsService {
+    streams: Mutex<BTreeMap<String, Vec<DataPoint>>>,
+}
+
+impl MetricsService {
+    /// Empty service.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish one point to `stream` (points must be in time order per
+    /// producer; out-of-order points are inserted by timestamp).
+    pub fn emit(&self, stream: &str, time: f64, value: f64) {
+        let mut streams = self.streams.lock().unwrap();
+        let s = streams.entry(stream.to_string()).or_default();
+        match s.last() {
+            Some(last) if last.time > time => {
+                let idx = s.partition_point(|p| p.time <= time);
+                s.insert(idx, DataPoint { time, value });
+            }
+            _ => s.push(DataPoint { time, value }),
+        }
+    }
+
+    /// Full series for a stream.
+    pub fn series(&self, stream: &str) -> Vec<DataPoint> {
+        self.streams.lock().unwrap().get(stream).cloned().unwrap_or_default()
+    }
+
+    /// Stream names with a prefix.
+    pub fn list_streams(&self, prefix: &str) -> Vec<String> {
+        self.streams
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
+    /// Summary statistics, if the stream has data.
+    pub fn stats(&self, stream: &str) -> Option<MetricStats> {
+        let streams = self.streams.lock().unwrap();
+        let s = streams.get(stream)?;
+        if s.is_empty() {
+            return None;
+        }
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        for p in s {
+            min = min.min(p.value);
+            max = max.max(p.value);
+            sum += p.value;
+        }
+        Some(MetricStats {
+            count: s.len(),
+            min,
+            max,
+            mean: sum / s.len() as f64,
+            last: s.last().unwrap().value,
+        })
+    }
+
+    /// Running best (minimum if `minimize`, else maximum) as a step series —
+    /// the "best model score so far over time" curves of Figs 3–5.
+    pub fn best_so_far(&self, stream: &str, minimize: bool) -> Vec<DataPoint> {
+        let series = self.series(stream);
+        let mut best = if minimize { f64::INFINITY } else { f64::NEG_INFINITY };
+        let mut out = Vec::with_capacity(series.len());
+        for p in series {
+            best = if minimize { best.min(p.value) } else { best.max(p.value) };
+            out.push(DataPoint { time: p.time, value: best });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_and_query() {
+        let m = MetricsService::new();
+        m.emit("job/loss", 1.0, 0.9);
+        m.emit("job/loss", 2.0, 0.5);
+        let s = m.series("job/loss");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[1].value, 0.5);
+        assert!(m.series("missing").is_empty());
+    }
+
+    #[test]
+    fn out_of_order_points_sorted() {
+        let m = MetricsService::new();
+        m.emit("s", 5.0, 1.0);
+        m.emit("s", 2.0, 2.0);
+        m.emit("s", 3.0, 3.0);
+        let times: Vec<f64> = m.series("s").iter().map(|p| p.time).collect();
+        assert_eq!(times, vec![2.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn stats_and_listing() {
+        let m = MetricsService::new();
+        m.emit("a/x", 0.0, 1.0);
+        m.emit("a/x", 1.0, 3.0);
+        m.emit("b/y", 0.0, -1.0);
+        let st = m.stats("a/x").unwrap();
+        assert_eq!(st.count, 2);
+        assert_eq!(st.min, 1.0);
+        assert_eq!(st.max, 3.0);
+        assert_eq!(st.mean, 2.0);
+        assert_eq!(st.last, 3.0);
+        assert_eq!(m.list_streams("a/"), vec!["a/x"]);
+        assert!(m.stats("missing").is_none());
+    }
+
+    #[test]
+    fn best_so_far_monotone() {
+        let m = MetricsService::new();
+        for (t, v) in [(0.0, 5.0), (1.0, 3.0), (2.0, 4.0), (3.0, 1.0)] {
+            m.emit("s", t, v);
+        }
+        let mins: Vec<f64> = m.best_so_far("s", true).iter().map(|p| p.value).collect();
+        assert_eq!(mins, vec![5.0, 3.0, 3.0, 1.0]);
+        let maxs: Vec<f64> = m.best_so_far("s", false).iter().map(|p| p.value).collect();
+        assert_eq!(maxs, vec![5.0, 5.0, 5.0, 5.0]);
+    }
+}

@@ -1,0 +1,281 @@
+//! Multi-objective extension (§8 Conclusion): "In the future, AMT could be
+//! extended to optimize multiple objectives simultaneously, automatically
+//! suggesting hyperparameter configurations that are optimal along several
+//! criteria and search for the Pareto frontier of the multiple objectives."
+//!
+//! This module implements that extension on top of the existing BO engine:
+//!
+//! * [`pareto_front`] — non-dominated filtering (minimization on all axes);
+//! * [`hypervolume_2d`] — the standard front-quality indicator;
+//! * [`ParEgoOptimizer`] — ParEGO-style random augmented-Chebyshev
+//!   scalarization: each proposal draws a weight vector, scalarizes the
+//!   (normalized) multi-objective history, and delegates to the single-
+//!   objective GP/EI machinery — so warping, MCMC GPHPs and the
+//!   asynchronous pending handling all carry over unchanged.
+
+use std::sync::Arc;
+
+use crate::gp::SurrogateBackend;
+use crate::rng::Rng;
+use crate::space::{Config, SearchSpace};
+use crate::strategies::{BayesianOptimization, BoConfig, Observation};
+
+/// One evaluation under several objectives (all minimized).
+#[derive(Clone, Debug)]
+pub struct MultiObservation {
+    /// Evaluated configuration.
+    pub config: Config,
+    /// One value per objective.
+    pub values: Vec<f64>,
+}
+
+/// True iff `a` dominates `b` (no worse on all axes, better on one).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the non-dominated observations (the Pareto front).
+pub fn pareto_front(observations: &[MultiObservation]) -> Vec<usize> {
+    (0..observations.len())
+        .filter(|&i| {
+            !observations
+                .iter()
+                .enumerate()
+                .any(|(j, o)| j != i && dominates(&o.values, &observations[i].values))
+        })
+        .collect()
+}
+
+/// Dominated hypervolume of a 2-d front w.r.t. `reference` (both axes
+/// minimized; points outside the reference box contribute nothing).
+pub fn hypervolume_2d(front: &[(f64, f64)], reference: (f64, f64)) -> f64 {
+    let mut pts: Vec<(f64, f64)> = front
+        .iter()
+        .copied()
+        .filter(|p| p.0 < reference.0 && p.1 < reference.1)
+        .collect();
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut hv = 0.0;
+    let mut prev_y = reference.1;
+    for (x, y) in pts {
+        if y < prev_y {
+            hv += (reference.0 - x) * (prev_y - y);
+            prev_y = y;
+        }
+    }
+    hv
+}
+
+/// ParEGO-style multi-objective BO: random augmented-Chebyshev
+/// scalarization per proposal over the shared GP engine.
+pub struct ParEgoOptimizer {
+    bo: BayesianOptimization,
+    num_objectives: usize,
+    rng: Rng,
+    /// Chebyshev augmentation coefficient (ParEGO default 0.05).
+    pub rho: f64,
+}
+
+impl ParEgoOptimizer {
+    /// Build over a search space and surrogate backend.
+    pub fn new(
+        space: SearchSpace,
+        backend: Arc<dyn SurrogateBackend>,
+        config: BoConfig,
+        num_objectives: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(num_objectives >= 2, "use BayesianOptimization for 1 objective");
+        ParEgoOptimizer {
+            bo: BayesianOptimization::new(space, backend, config, seed),
+            num_objectives,
+            rng: Rng::new(seed ^ 0x9A9A),
+            rho: 0.05,
+        }
+    }
+
+    /// Scalarize the history with a random weight vector (normalized per
+    /// objective to [0, 1] so weights are comparable).
+    fn scalarize(&mut self, history: &[MultiObservation]) -> Vec<Observation> {
+        // per-objective min/max
+        let k = self.num_objectives;
+        let mut lo = vec![f64::INFINITY; k];
+        let mut hi = vec![f64::NEG_INFINITY; k];
+        for o in history {
+            for (j, v) in o.values.iter().enumerate() {
+                lo[j] = lo[j].min(*v);
+                hi[j] = hi[j].max(*v);
+            }
+        }
+        // random simplex weights
+        let raw: Vec<f64> = (0..k).map(|_| -self.rng.uniform().max(1e-12).ln()).collect();
+        let sum: f64 = raw.iter().sum();
+        let w: Vec<f64> = raw.iter().map(|v| v / sum).collect();
+
+        history
+            .iter()
+            .map(|o| {
+                let normed: Vec<f64> = o
+                    .values
+                    .iter()
+                    .enumerate()
+                    .map(|(j, v)| {
+                        if hi[j] > lo[j] {
+                            (v - lo[j]) / (hi[j] - lo[j])
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                let cheb = normed
+                    .iter()
+                    .zip(&w)
+                    .map(|(v, wi)| v * wi)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let aug: f64 = normed.iter().zip(&w).map(|(v, wi)| v * wi).sum();
+                Observation { config: o.config.clone(), value: cheb + self.rho * aug }
+            })
+            .collect()
+    }
+
+    /// Propose the next configuration for the multi-objective problem.
+    pub fn next_config(
+        &mut self,
+        history: &[MultiObservation],
+        pending: &[Config],
+    ) -> Config {
+        use crate::strategies::Strategy;
+        let scalar = self.scalarize(history);
+        self.bo.next_config(&scalar, pending)
+    }
+
+    /// Current Pareto front of the history.
+    pub fn front<'a>(&self, history: &'a [MultiObservation]) -> Vec<&'a MultiObservation> {
+        pareto_front(history).into_iter().map(|i| &history[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acquisition::AcquisitionConfig;
+    use crate::gp::NativeBackend;
+    use crate::space::{continuous, Scaling, Value};
+    use crate::strategies::GphpMode;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0])); // trade-off
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal
+    }
+
+    fn mo(vals: &[f64]) -> MultiObservation {
+        MultiObservation { config: Config::new(), values: vals.to_vec() }
+    }
+
+    #[test]
+    fn pareto_front_filters_dominated() {
+        let obs = vec![
+            mo(&[1.0, 5.0]),
+            mo(&[2.0, 2.0]),
+            mo(&[5.0, 1.0]),
+            mo(&[3.0, 3.0]), // dominated by (2,2)
+            mo(&[2.0, 6.0]), // dominated by (1,5)? (1<=2, 5<=6, strict) yes
+        ];
+        let front = pareto_front(&obs);
+        assert_eq!(front, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn hypervolume_known_values() {
+        // single point (0,0) with ref (1,1) ⇒ area 1
+        assert!((hypervolume_2d(&[(0.0, 0.0)], (1.0, 1.0)) - 1.0).abs() < 1e-12);
+        // staircase {(0, .5), (.5, 0)} ref (1,1): 1*0.5 + 0.5*0.5 = 0.75
+        let hv = hypervolume_2d(&[(0.0, 0.5), (0.5, 0.0)], (1.0, 1.0));
+        assert!((hv - 0.75).abs() < 1e-12, "{hv}");
+        // points outside the reference contribute nothing
+        assert_eq!(hypervolume_2d(&[(2.0, 2.0)], (1.0, 1.0)), 0.0);
+        // dominated point adds nothing
+        let hv2 = hypervolume_2d(&[(0.0, 0.5), (0.5, 0.0), (0.6, 0.6)], (1.0, 1.0));
+        assert!((hv2 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parego_approaches_biobjective_front() {
+        // f1 = x², f2 = (x−1)²: Pareto set is x ∈ [0, 1]
+        let space =
+            SearchSpace::new(vec![continuous("x", -2.0, 3.0, Scaling::Linear)]).unwrap();
+        let mut opt = ParEgoOptimizer::new(
+            space,
+            Arc::new(NativeBackend),
+            BoConfig {
+                init_random: 4,
+                gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                acq: AcquisitionConfig { num_anchors: 128, ..Default::default() },
+                ..Default::default()
+            },
+            2,
+            3,
+        );
+        let mut history: Vec<MultiObservation> = Vec::new();
+        for _ in 0..20 {
+            let c = opt.next_config(&history, &[]);
+            let x = c.get("x").unwrap().as_f64().unwrap();
+            history.push(MultiObservation {
+                config: c,
+                values: vec![x * x, (x - 1.0) * (x - 1.0)],
+            });
+        }
+        let front = opt.front(&history);
+        assert!(front.len() >= 3, "front too small: {}", front.len());
+        // most front points should lie in the Pareto set [0, 1] (±slack)
+        let inside = front
+            .iter()
+            .filter(|o| {
+                let x = o.config.get("x").unwrap().as_f64().unwrap();
+                (-0.2..=1.2).contains(&x)
+            })
+            .count();
+        assert!(
+            inside * 2 >= front.len(),
+            "front not concentrated on the Pareto set"
+        );
+        // hypervolume should beat a naive two-endpoint baseline
+        let pts: Vec<(f64, f64)> =
+            front.iter().map(|o| (o.values[0], o.values[1])).collect();
+        let hv = hypervolume_2d(&pts, (4.0, 4.0));
+        assert!(hv > hypervolume_2d(&[(0.0, 1.0), (1.0, 0.0)], (4.0, 4.0)) * 0.9);
+    }
+
+    #[test]
+    fn scalarization_preserves_config_identity() {
+        let space =
+            SearchSpace::new(vec![continuous("x", 0.0, 1.0, Scaling::Linear)]).unwrap();
+        let mut opt = ParEgoOptimizer::new(
+            space,
+            Arc::new(NativeBackend),
+            BoConfig::default(),
+            2,
+            1,
+        );
+        let mut cfg = Config::new();
+        cfg.insert("x".into(), Value::Float(0.5));
+        let hist = vec![MultiObservation { config: cfg.clone(), values: vec![1.0, 2.0] }];
+        let scalar = opt.scalarize(&hist);
+        assert_eq!(scalar.len(), 1);
+        assert_eq!(scalar[0].config, cfg);
+        assert!(scalar[0].value.is_finite());
+    }
+}

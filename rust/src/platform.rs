@@ -1,0 +1,581 @@
+//! SageMaker Training platform simulator (§3.2–§3.3).
+//!
+//! Every hyperparameter evaluation runs as a separate *training job* on
+//! this platform, exactly as in AMT. The simulator is a deterministic
+//! discrete-event system on a virtual clock and reproduces the cost
+//! structure the paper's experiments depend on:
+//!
+//! * **cluster provisioning overhead** — "a training job involves setting
+//!   up a new cluster of EC2 instances, waiting for the setup to complete,
+//!   and downloading algorithm images", with the §3.3 *compute
+//!   provisioning optimizations* available as a toggle;
+//! * **per-epoch metric emission** — intermediate objective values drive
+//!   the §5.2 early stopper;
+//! * **failure injection** — dependency failures at provisioning and
+//!   OOM-style crashes mid-training (§3.3's example failure scenarios),
+//!   which the workflow engine's retry mechanism must absorb;
+//! * **distributed training mode** — multi-instance clusters shorten
+//!   epochs with imperfect scaling efficiency (Fig 4 right).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
+
+use crate::objectives::Objective;
+use crate::rng::Rng;
+use crate::space::Config;
+
+/// Platform tuning knobs.
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    /// Mean EC2 cluster provisioning time (seconds).
+    pub provisioning_mean: f64,
+    /// Provisioning jitter (uniform ± this).
+    pub provisioning_jitter: f64,
+    /// §3.3 compute-provisioning optimizations: cuts provisioning time.
+    pub fast_provisioning: bool,
+    /// Algorithm-image download time (seconds).
+    pub image_download_seconds: f64,
+    /// Probability a job fails during provisioning (dependency issues).
+    pub provisioning_failure_rate: f64,
+    /// Probability a job crashes at a random epoch (e.g. OOM).
+    pub training_failure_rate: f64,
+    /// Marginal speedup per extra instance (1.0 = perfect scaling).
+    pub distributed_efficiency: f64,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            provisioning_mean: 120.0,
+            provisioning_jitter: 30.0,
+            fast_provisioning: true,
+            image_download_seconds: 45.0,
+            provisioning_failure_rate: 0.01,
+            training_failure_rate: 0.01,
+            distributed_efficiency: 0.8,
+        }
+    }
+}
+
+impl PlatformConfig {
+    /// Deterministic, failure-free platform for unit tests and benches.
+    pub fn noiseless() -> Self {
+        PlatformConfig {
+            provisioning_jitter: 0.0,
+            provisioning_failure_rate: 0.0,
+            training_failure_rate: 0.0,
+            ..Default::default()
+        }
+    }
+}
+
+/// Identifier of a training job within one platform instance.
+pub type JobId = usize;
+
+/// Submission request for one training job.
+pub struct TrainingJobSpec {
+    /// Job name (unique per tuning job; used as the metric stream key).
+    pub name: String,
+    /// Hyperparameter configuration under evaluation.
+    pub config: Config,
+    /// Workload to train.
+    pub objective: Arc<dyn Objective>,
+    /// Seed for the evaluation noise.
+    pub seed: u64,
+    /// EC2 instances in the cluster (>1 = distributed mode).
+    pub instance_count: u32,
+}
+
+/// Lifecycle states (mirrors the SageMaker training-job status values).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainingJobStatus {
+    /// Cluster being set up.
+    Provisioning,
+    /// Training in progress.
+    InProgress,
+    /// Ran its full epoch budget.
+    Completed,
+    /// Crashed (provisioning or training).
+    Failed,
+    /// Stopped by the tuning workflow (early stopping or Stop API).
+    Stopped,
+}
+
+/// Why a job failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureReason {
+    /// Dependency problems while setting up the cluster.
+    ProvisioningError,
+    /// Out-of-memory-style crash mid-training (e.g. the BO engine suggested
+    /// an over-large configuration, §3.3).
+    TrainingCrash,
+}
+
+/// Observable job record.
+#[derive(Clone, Debug)]
+pub struct TrainingJobInfo {
+    /// Job name from the spec.
+    pub name: String,
+    /// Evaluated configuration.
+    pub config: Config,
+    /// Current status.
+    pub status: TrainingJobStatus,
+    /// Metric values for epochs completed so far.
+    pub curve: Vec<f64>,
+    /// Virtual submission time.
+    pub submitted_at: f64,
+    /// Virtual time training started (provisioning done).
+    pub started_at: Option<f64>,
+    /// Virtual terminal time.
+    pub ended_at: Option<f64>,
+    /// Failure cause, if failed.
+    pub failure: Option<FailureReason>,
+    /// Total epochs the job would run if never stopped.
+    pub max_epochs: u32,
+    /// Billable seconds (provisioned-to-terminal), populated at the end.
+    pub billable_seconds: f64,
+}
+
+/// Events surfaced to the workflow engine, in virtual-time order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlatformEvent {
+    /// Provisioning finished; training began.
+    JobStarted { job: JobId, time: f64 },
+    /// One epoch finished with an intermediate metric value.
+    EpochCompleted { job: JobId, epoch: u32, value: f64, time: f64 },
+    /// All epochs done.
+    JobCompleted { job: JobId, final_value: f64, time: f64 },
+    /// Job crashed.
+    JobFailed { job: JobId, reason: FailureReason, time: f64 },
+}
+
+impl PlatformEvent {
+    /// Event timestamp.
+    pub fn time(&self) -> f64 {
+        match self {
+            PlatformEvent::JobStarted { time, .. }
+            | PlatformEvent::EpochCompleted { time, .. }
+            | PlatformEvent::JobCompleted { time, .. }
+            | PlatformEvent::JobFailed { time, .. } => *time,
+        }
+    }
+
+    /// Job the event belongs to.
+    pub fn job(&self) -> JobId {
+        match self {
+            PlatformEvent::JobStarted { job, .. }
+            | PlatformEvent::EpochCompleted { job, .. }
+            | PlatformEvent::JobCompleted { job, .. }
+            | PlatformEvent::JobFailed { job, .. } => *job,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Queued {
+    Start { job: JobId },
+    Epoch { job: JobId, epoch: u32 },
+    ProvisionFail { job: JobId },
+}
+
+struct HeapEntry {
+    time: f64,
+    seq: u64,
+    item: Queued,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+struct JobState {
+    info: TrainingJobInfo,
+    full_curve: Vec<f64>,
+    epoch_seconds: f64,
+    crash_at_epoch: Option<u32>,
+    cancelled: bool,
+}
+
+/// The discrete-event training platform.
+pub struct TrainingPlatform {
+    config: PlatformConfig,
+    rng: Rng,
+    now: f64,
+    seq: u64,
+    queue: BinaryHeap<Reverse<HeapEntry>>,
+    jobs: HashMap<JobId, JobState>,
+    next_id: JobId,
+}
+
+impl TrainingPlatform {
+    /// New platform with its own virtual clock at t = 0.
+    pub fn new(config: PlatformConfig, seed: u64) -> Self {
+        TrainingPlatform {
+            config,
+            rng: Rng::new(seed ^ 0x9E3779B97F4A7C15),
+            now: 0.0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            jobs: HashMap::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Current virtual time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Read a job record.
+    pub fn job(&self, id: JobId) -> Option<&TrainingJobInfo> {
+        self.jobs.get(&id).map(|s| &s.info)
+    }
+
+    /// Number of jobs in non-terminal states.
+    pub fn active_jobs(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|s| {
+                matches!(
+                    s.info.status,
+                    TrainingJobStatus::Provisioning | TrainingJobStatus::InProgress
+                )
+            })
+            .count()
+    }
+
+    fn push(&mut self, time: f64, item: Queued) {
+        self.seq += 1;
+        self.queue.push(Reverse(HeapEntry { time, seq: self.seq, item }));
+    }
+
+    /// Submit a training job; returns its id. Provisioning begins now.
+    pub fn submit(&mut self, spec: TrainingJobSpec) -> JobId {
+        let id = self.next_id;
+        self.next_id += 1;
+
+        let mut rng = self.rng.fork(id as u64);
+        let full_curve = spec.objective.curve(&spec.config, spec.seed);
+        let max_epochs = full_curve.len() as u32;
+
+        let speedup = 1.0
+            + self.config.distributed_efficiency * (spec.instance_count.max(1) - 1) as f64;
+        let epoch_seconds =
+            (spec.objective.epoch_seconds(&spec.config) / speedup).max(1e-3);
+
+        let prov_scale = if self.config.fast_provisioning { 0.4 } else { 1.0 };
+        let provisioning = (self.config.provisioning_mean * prov_scale
+            + rng.uniform_range(-1.0, 1.0) * self.config.provisioning_jitter * prov_scale)
+            .max(1.0)
+            + self.config.image_download_seconds;
+
+        let crash_at_epoch = (rng.uniform() < self.config.training_failure_rate)
+            .then(|| 1 + rng.below(max_epochs as usize) as u32);
+
+        let info = TrainingJobInfo {
+            name: spec.name,
+            config: spec.config,
+            status: TrainingJobStatus::Provisioning,
+            curve: Vec::new(),
+            submitted_at: self.now,
+            started_at: None,
+            ended_at: None,
+            failure: None,
+            max_epochs,
+            billable_seconds: 0.0,
+        };
+        self.jobs.insert(
+            id,
+            JobState { info, full_curve, epoch_seconds, crash_at_epoch, cancelled: false },
+        );
+
+        if rng.uniform() < self.config.provisioning_failure_rate {
+            let t = self.now + provisioning * rng.uniform_range(0.3, 1.0);
+            self.push(t, Queued::ProvisionFail { job: id });
+        } else {
+            self.push(self.now + provisioning, Queued::Start { job: id });
+        }
+        id
+    }
+
+    /// Stop a running/provisioning job (early stopping or the Stop API).
+    pub fn stop_job(&mut self, id: JobId) {
+        if let Some(state) = self.jobs.get_mut(&id) {
+            if matches!(
+                state.info.status,
+                TrainingJobStatus::Provisioning | TrainingJobStatus::InProgress
+            ) {
+                state.cancelled = true;
+                state.info.status = TrainingJobStatus::Stopped;
+                state.info.ended_at = Some(self.now);
+                state.info.billable_seconds =
+                    self.now - state.info.submitted_at;
+            }
+        }
+    }
+
+    /// Pop the next event, advancing the virtual clock. `None` ⇒ idle.
+    pub fn next_event(&mut self) -> Option<PlatformEvent> {
+        while let Some(Reverse(entry)) = self.queue.pop() {
+            let (time, item) = (entry.time, entry.item);
+            let id = match &item {
+                Queued::Start { job }
+                | Queued::Epoch { job, .. }
+                | Queued::ProvisionFail { job } => *job,
+            };
+            let cancelled = self.jobs.get(&id).map(|s| s.cancelled).unwrap_or(true);
+            if cancelled {
+                continue; // stopped jobs drop their scheduled events
+            }
+            self.now = self.now.max(time);
+
+            match item {
+                Queued::ProvisionFail { job } => {
+                    let s = self.jobs.get_mut(&job).unwrap();
+                    s.info.status = TrainingJobStatus::Failed;
+                    s.info.failure = Some(FailureReason::ProvisioningError);
+                    s.info.ended_at = Some(self.now);
+                    s.info.billable_seconds = self.now - s.info.submitted_at;
+                    s.cancelled = true;
+                    return Some(PlatformEvent::JobFailed {
+                        job,
+                        reason: FailureReason::ProvisioningError,
+                        time: self.now,
+                    });
+                }
+                Queued::Start { job } => {
+                    let jitter = 1.0 + 0.1 * (self.rng.uniform() - 0.5);
+                    let s = self.jobs.get_mut(&job).unwrap();
+                    s.info.status = TrainingJobStatus::InProgress;
+                    s.info.started_at = Some(self.now);
+                    let dt = s.epoch_seconds * jitter;
+                    let next = self.now + dt;
+                    self.push(next, Queued::Epoch { job, epoch: 1 });
+                    return Some(PlatformEvent::JobStarted { job, time: self.now });
+                }
+                Queued::Epoch { job, epoch } => {
+                    let jitter = 1.0 + 0.1 * (self.rng.uniform() - 0.5);
+                    let s = self.jobs.get_mut(&job).unwrap();
+                    if s.crash_at_epoch == Some(epoch) {
+                        s.info.status = TrainingJobStatus::Failed;
+                        s.info.failure = Some(FailureReason::TrainingCrash);
+                        s.info.ended_at = Some(self.now);
+                        s.info.billable_seconds = self.now - s.info.submitted_at;
+                        s.cancelled = true;
+                        return Some(PlatformEvent::JobFailed {
+                            job,
+                            reason: FailureReason::TrainingCrash,
+                            time: self.now,
+                        });
+                    }
+                    let value = s.full_curve[epoch as usize - 1];
+                    s.info.curve.push(value);
+                    if epoch == s.info.max_epochs {
+                        s.info.status = TrainingJobStatus::Completed;
+                        s.info.ended_at = Some(self.now);
+                        s.info.billable_seconds = self.now - s.info.submitted_at;
+                        s.cancelled = true;
+                        return Some(PlatformEvent::JobCompleted {
+                            job,
+                            final_value: value,
+                            time: self.now,
+                        });
+                    }
+                    let dt = s.epoch_seconds * jitter;
+                    let next = self.now + dt;
+                    self.push(next, Queued::Epoch { job, epoch: epoch + 1 });
+                    return Some(PlatformEvent::EpochCompleted {
+                        job,
+                        epoch,
+                        value,
+                        time: self.now,
+                    });
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectives::by_name;
+
+    fn spec(name: &str, seed: u64) -> TrainingJobSpec {
+        let obj = by_name("branin").unwrap();
+        let mut rng = Rng::new(seed);
+        let config = obj.space().sample(&mut rng);
+        TrainingJobSpec {
+            name: name.into(),
+            config,
+            objective: obj.into(),
+            seed,
+            instance_count: 1,
+        }
+    }
+
+    fn drain(p: &mut TrainingPlatform) -> Vec<PlatformEvent> {
+        let mut out = Vec::new();
+        while let Some(e) = p.next_event() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn job_runs_through_lifecycle() {
+        let mut p = TrainingPlatform::new(PlatformConfig::noiseless(), 1);
+        let id = p.submit(spec("j1", 1));
+        let events = drain(&mut p);
+        assert!(matches!(events[0], PlatformEvent::JobStarted { .. }));
+        assert!(matches!(events.last().unwrap(), PlatformEvent::JobCompleted { .. }));
+        let info = p.job(id).unwrap();
+        assert_eq!(info.status, TrainingJobStatus::Completed);
+        assert_eq!(info.curve.len(), info.max_epochs as usize);
+        assert!(info.billable_seconds > 0.0);
+        // provisioning overhead is visible: started_at > submitted_at
+        assert!(info.started_at.unwrap() > info.submitted_at);
+    }
+
+    #[test]
+    fn events_are_time_ordered() {
+        let mut p = TrainingPlatform::new(PlatformConfig::default(), 2);
+        for i in 0..5 {
+            p.submit(spec(&format!("j{i}"), i));
+        }
+        let events = drain(&mut p);
+        for w in events.windows(2) {
+            assert!(w[0].time() <= w[1].time());
+        }
+    }
+
+    #[test]
+    fn stop_job_halts_events() {
+        let mut p = TrainingPlatform::new(PlatformConfig::noiseless(), 3);
+        let id = p.submit(spec("j", 1));
+        // run past start + 2 epochs
+        let mut epochs = 0;
+        while let Some(e) = p.next_event() {
+            if matches!(e, PlatformEvent::EpochCompleted { .. }) {
+                epochs += 1;
+                if epochs == 2 {
+                    p.stop_job(id);
+                }
+            }
+        }
+        let info = p.job(id).unwrap();
+        assert_eq!(info.status, TrainingJobStatus::Stopped);
+        assert_eq!(info.curve.len(), 2);
+    }
+
+    #[test]
+    fn provisioning_failures_injected() {
+        let mut p = TrainingPlatform::new(
+            PlatformConfig {
+                provisioning_failure_rate: 1.0,
+                ..PlatformConfig::noiseless()
+            },
+            4,
+        );
+        let id = p.submit(spec("j", 9));
+        let events = drain(&mut p);
+        assert_eq!(events.len(), 1);
+        assert!(matches!(
+            events[0],
+            PlatformEvent::JobFailed { reason: FailureReason::ProvisioningError, .. }
+        ));
+        assert_eq!(p.job(id).unwrap().status, TrainingJobStatus::Failed);
+    }
+
+    #[test]
+    fn training_crashes_injected() {
+        let mut p = TrainingPlatform::new(
+            PlatformConfig { training_failure_rate: 1.0, ..PlatformConfig::noiseless() },
+            5,
+        );
+        p.submit(spec("j", 11));
+        let events = drain(&mut p);
+        assert!(matches!(
+            events.last().unwrap(),
+            PlatformEvent::JobFailed { reason: FailureReason::TrainingCrash, .. }
+        ));
+    }
+
+    #[test]
+    fn fast_provisioning_reduces_overhead() {
+        let run = |fast: bool| {
+            let mut p = TrainingPlatform::new(
+                PlatformConfig { fast_provisioning: fast, ..PlatformConfig::noiseless() },
+                6,
+            );
+            let id = p.submit(spec("j", 2));
+            drain(&mut p);
+            let info = p.job(id).unwrap();
+            info.started_at.unwrap() - info.submitted_at
+        };
+        assert!(run(true) < run(false));
+    }
+
+    #[test]
+    fn distributed_mode_shortens_epochs() {
+        let run = |instances: u32| {
+            let mut p = TrainingPlatform::new(PlatformConfig::noiseless(), 7);
+            let mut s = spec("j", 3);
+            s.instance_count = instances;
+            let id = p.submit(s);
+            drain(&mut p);
+            let info = p.job(id).unwrap();
+            info.ended_at.unwrap() - info.started_at.unwrap()
+        };
+        let single = run(1);
+        let distributed = run(4);
+        assert!(
+            distributed < 0.5 * single,
+            "4 instances should cut epoch time >2x: {distributed} vs {single}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut p = TrainingPlatform::new(PlatformConfig::default(), 42);
+            for i in 0..3 {
+                p.submit(spec(&format!("j{i}"), i));
+            }
+            drain(&mut p)
+                .iter()
+                .map(|e| (e.job(), e.time()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn active_job_counting() {
+        let mut p = TrainingPlatform::new(PlatformConfig::noiseless(), 8);
+        let a = p.submit(spec("a", 1));
+        let _b = p.submit(spec("b", 2));
+        assert_eq!(p.active_jobs(), 2);
+        p.stop_job(a);
+        assert_eq!(p.active_jobs(), 1);
+        drain(&mut p);
+        assert_eq!(p.active_jobs(), 0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Real trainable model for the end-to-end example: a small MLP binary
+//! classifier whose train/eval steps are the `mlp_train_h*` / `mlp_eval_h*`
+//! AOT artifacts. The Rust coordinator owns the parameters and the training
+//! loop; every SGD epoch and every evaluation is an HLO execution — no
+//! Python anywhere at run time.
+//!
+//! [`MlpObjective`] adapts the trainer to the [`crate::objectives::Objective`]
+//! interface so the *entire AMT stack* (API → workflow → platform →
+//! selection service → early stopper) can tune a genuinely trained model.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::objectives::Objective;
+use crate::rng::Rng;
+use crate::space::{categorical, continuous, Config, Scaling, SearchSpace, Value};
+
+use super::{literal_matrix, literal_to_f64, literal_vec, HloRuntime};
+
+/// A synthetic-but-real binary classification dataset (two noisy linear
+/// class boundaries with interactions), fixed at generation seed.
+pub struct MlpDataset {
+    /// Train inputs, row-major (train_rows × features).
+    pub x_train: Vec<f64>,
+    /// Train labels.
+    pub y_train: Vec<f64>,
+    /// Validation inputs.
+    pub x_val: Vec<f64>,
+    /// Validation labels.
+    pub y_val: Vec<f64>,
+    /// Feature count.
+    pub features: usize,
+    /// Train rows.
+    pub train_rows: usize,
+    /// Validation rows.
+    pub val_rows: usize,
+}
+
+impl MlpDataset {
+    /// Generate the dataset matching the artifact shapes.
+    pub fn generate(runtime: &HloRuntime, seed: u64) -> MlpDataset {
+        let f = runtime.manifest.mlp_features;
+        let tr = runtime.manifest.mlp_train_rows;
+        let vr = runtime.manifest.mlp_val_rows;
+        let mut rng = Rng::new(seed);
+        let w: Vec<f64> = (0..f).map(|_| rng.normal()).collect();
+        let mut make = |rows: usize| {
+            let mut x = Vec::with_capacity(rows * f);
+            let mut y = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                let xi: Vec<f64> = (0..f).map(|_| rng.normal()).collect();
+                // nonlinear boundary: linear part + pairwise interaction
+                let score: f64 = xi.iter().zip(&w).map(|(a, b)| a * b).sum::<f64>()
+                    + 0.8 * xi[0] * xi[1]
+                    + 0.3 * rng.normal();
+                x.extend_from_slice(&xi);
+                y.push(if score > 0.0 { 1.0 } else { 0.0 });
+            }
+            (x, y)
+        };
+        let (x_train, y_train) = make(tr);
+        let (x_val, y_val) = make(vr);
+        MlpDataset { x_train, y_train, x_val, y_val, features: f, train_rows: tr, val_rows: vr }
+    }
+}
+
+/// MLP parameters + the executable pair for one hidden width.
+pub struct MlpTrainer {
+    runtime: Arc<HloRuntime>,
+    hidden: usize,
+    features: usize,
+    w1: Vec<f64>,
+    b1: Vec<f64>,
+    w2: Vec<f64>,
+    b2: Vec<f64>,
+}
+
+impl MlpTrainer {
+    /// Initialize parameters for hidden width `hidden` (must be one of the
+    /// compiled artifact widths).
+    pub fn new(runtime: Arc<HloRuntime>, hidden: usize, seed: u64) -> Result<MlpTrainer> {
+        if !runtime.manifest.mlp_widths.contains(&hidden) {
+            return Err(anyhow!(
+                "no mlp artifact for hidden width {hidden} (have {:?})",
+                runtime.manifest.mlp_widths
+            ));
+        }
+        let f = runtime.manifest.mlp_features;
+        let mut rng = Rng::new(seed ^ 0x3117);
+        let scale = (2.0 / f as f64).sqrt();
+        Ok(MlpTrainer {
+            features: f,
+            w1: (0..f * hidden).map(|_| rng.normal() * scale).collect(),
+            b1: vec![0.0; hidden],
+            w2: (0..hidden).map(|_| rng.normal() * (2.0 / hidden as f64).sqrt()).collect(),
+            b2: vec![0.0; 1],
+            hidden,
+            runtime,
+        })
+    }
+
+    /// One SGD epoch over the dataset through the `mlp_train_h*` artifact;
+    /// returns the mean training loss.
+    pub fn train_epoch(&mut self, data: &MlpDataset, lr: f64, l2: f64) -> Result<f64> {
+        let out = self.runtime.run(
+            &format!("mlp_train_h{}", self.hidden),
+            &[
+                &literal_matrix(&self.w1, self.features, self.hidden)?,
+                &literal_vec(&self.b1),
+                &literal_vec(&self.w2),
+                &literal_vec(&self.b2),
+                &literal_matrix(&data.x_train, data.train_rows, data.features)?,
+                &literal_vec(&data.y_train),
+                &literal_vec(&[lr]),
+                &literal_vec(&[l2]),
+            ],
+        )?;
+        self.w1 = literal_to_f64(&out[0])?;
+        self.b1 = literal_to_f64(&out[1])?;
+        self.w2 = literal_to_f64(&out[2])?;
+        self.b2 = literal_to_f64(&out[3])?;
+        Ok(literal_to_f64(&out[4])?[0])
+    }
+
+    /// Validation (loss, accuracy) through the `mlp_eval_h*` artifact.
+    pub fn evaluate(&self, data: &MlpDataset) -> Result<(f64, f64)> {
+        let out = self.runtime.run(
+            &format!("mlp_eval_h{}", self.hidden),
+            &[
+                &literal_matrix(&self.w1, self.features, self.hidden)?,
+                &literal_vec(&self.b1),
+                &literal_vec(&self.w2),
+                &literal_vec(&self.b2),
+                &literal_matrix(&data.x_val, data.val_rows, data.features)?,
+                &literal_vec(&data.y_val),
+            ],
+        )?;
+        Ok((literal_to_f64(&out[0])?[0], literal_to_f64(&out[1])?[0]))
+    }
+}
+
+/// The end-to-end workload: tune (learning_rate, l2, hidden_width) of the
+/// real HLO-trained MLP. Metric = validation loss per epoch (minimized).
+pub struct MlpObjective {
+    runtime: Arc<HloRuntime>,
+    dataset: Arc<MlpDataset>,
+    epochs: u32,
+}
+
+impl MlpObjective {
+    /// Build the workload (dataset fixed by `data_seed`).
+    pub fn new(runtime: Arc<HloRuntime>, data_seed: u64, epochs: u32) -> MlpObjective {
+        let dataset = Arc::new(MlpDataset::generate(&runtime, data_seed));
+        MlpObjective { runtime, dataset, epochs }
+    }
+
+    /// Validation accuracy of a fully trained configuration (reporting).
+    pub fn final_accuracy(&self, config: &Config, seed: u64) -> f64 {
+        let (mut trainer, lr, l2) = self.make_trainer(config, seed);
+        for _ in 0..self.epochs {
+            let _ = trainer.train_epoch(&self.dataset, lr, l2);
+        }
+        trainer.evaluate(&self.dataset).map(|(_, acc)| acc).unwrap_or(0.0)
+    }
+
+    fn make_trainer(&self, config: &Config, seed: u64) -> (MlpTrainer, f64, f64) {
+        let lr = config.get("learning_rate").and_then(Value::as_f64).unwrap_or(0.1);
+        let l2 = config.get("l2").and_then(Value::as_f64).unwrap_or(1e-4);
+        let hidden: usize = config
+            .get("hidden_width")
+            .and_then(Value::as_str)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(32);
+        let trainer = MlpTrainer::new(Arc::clone(&self.runtime), hidden, seed)
+            .expect("hidden width validated by the space");
+        (trainer, lr, l2)
+    }
+}
+
+impl Objective for MlpObjective {
+    fn name(&self) -> &str {
+        "mlp_real"
+    }
+
+    fn space(&self) -> SearchSpace {
+        let widths: Vec<String> =
+            self.runtime.manifest.mlp_widths.iter().map(|w| w.to_string()).collect();
+        let width_refs: Vec<&str> = widths.iter().map(String::as_str).collect();
+        SearchSpace::new(vec![
+            continuous("learning_rate", 1e-3, 1.0, Scaling::Logarithmic),
+            continuous("l2", 1e-7, 1e-1, Scaling::Logarithmic),
+            categorical("hidden_width", &width_refs),
+        ])
+        .unwrap()
+    }
+
+    fn max_epochs(&self) -> u32 {
+        self.epochs
+    }
+
+    fn curve(&self, config: &Config, seed: u64) -> Vec<f64> {
+        let (mut trainer, lr, l2) = self.make_trainer(config, seed);
+        let mut curve = Vec::with_capacity(self.epochs as usize);
+        for _ in 0..self.epochs {
+            if trainer.train_epoch(&self.dataset, lr, l2).is_err() {
+                curve.push(f64::INFINITY);
+                continue;
+            }
+            let (val_loss, _) = trainer.evaluate(&self.dataset).unwrap_or((f64::INFINITY, 0.0));
+            curve.push(val_loss);
+        }
+        curve
+    }
+
+    fn epoch_seconds(&self, config: &Config) -> f64 {
+        // bigger hidden layer ⇒ slower simulated epochs
+        let hidden: f64 = config
+            .get("hidden_width")
+            .and_then(Value::as_str)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(32.0);
+        8.0 + hidden * 0.25
+    }
+}

@@ -1,0 +1,238 @@
+//! PJRT runtime: loads and executes the AOT-compiled HLO artifacts.
+//!
+//! This is the L3 ↔ L2 bridge: `make artifacts` lowers the JAX/Pallas
+//! graphs to HLO *text* (jax ≥ 0.5 emits serialized protos with 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids), and
+//! this module compiles them once on the PJRT CPU client and executes them
+//! from the BO hot path. Python never runs at request time.
+//!
+//! Layout contract with `python/compile/aot.py` is carried by
+//! `artifacts/manifest.json` (buckets, encoded dim, candidate batch, theta
+//! packing).
+
+pub mod backend;
+pub mod mlp;
+
+pub use backend::HloBackend;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{self, Json};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Train-set-size buckets with compiled artifacts.
+    pub buckets: Vec<usize>,
+    /// Encoded configuration dimension D of the compiled graphs.
+    pub encoded_dim: usize,
+    /// Candidate batch size M of the posterior/EI graph.
+    pub cand_batch: usize,
+    /// Packed theta length (must equal 2 + 3 D).
+    pub theta_dim: usize,
+    /// MLP artifact family (end-to-end example).
+    pub mlp_widths: Vec<usize>,
+    /// MLP input features.
+    pub mlp_features: usize,
+    /// MLP train batch rows.
+    pub mlp_train_rows: usize,
+    /// MLP validation rows.
+    pub mlp_val_rows: usize,
+}
+
+impl Manifest {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arr_usize = |k: &str| -> Result<Vec<usize>> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_i64)
+                        .map(|v| v as usize)
+                        .collect()
+                })
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let num =
+            |v: Option<&Json>, k: &str| v.and_then(Json::as_i64).ok_or_else(|| anyhow!("manifest missing {k}"));
+        let mlp = j.get("mlp").ok_or_else(|| anyhow!("manifest missing mlp"))?;
+        Ok(Manifest {
+            buckets: arr_usize("buckets")?,
+            encoded_dim: num(j.get("encoded_dim"), "encoded_dim")? as usize,
+            cand_batch: num(j.get("cand_batch"), "cand_batch")? as usize,
+            theta_dim: num(j.get("theta_dim"), "theta_dim")? as usize,
+            mlp_widths: mlp
+                .get("widths")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_i64).map(|v| v as usize).collect())
+                .ok_or_else(|| anyhow!("manifest missing mlp.widths"))?,
+            mlp_features: num(mlp.get("features"), "mlp.features")? as usize,
+            mlp_train_rows: num(mlp.get("train_rows"), "mlp.train_rows")? as usize,
+            mlp_val_rows: num(mlp.get("val_rows"), "mlp.val_rows")? as usize,
+        })
+    }
+
+    /// Smallest bucket that fits `n` live rows.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+}
+
+/// `PjRtLoadedExecutable` wrapper asserting thread-safety.
+///
+/// SAFETY: the PJRT CPU client is thread-safe per the PJRT C API contract;
+/// the crate merely omits the auto-markers because it holds raw pointers.
+/// All executions additionally serialize through [`HloRuntime::run`]'s
+/// mutex, so cross-thread use is conservative.
+struct SendExecutable(xla::PjRtLoadedExecutable);
+unsafe impl Send for SendExecutable {}
+unsafe impl Sync for SendExecutable {}
+
+/// Compiled-artifact cache over one PJRT CPU client.
+pub struct HloRuntime {
+    dir: PathBuf,
+    /// Manifest describing the artifact family.
+    pub manifest: Manifest,
+    client: Mutex<xla::PjRtClient>,
+    executables: Mutex<HashMap<String, Arc<SendExecutable>>>,
+    /// Total artifact executions (perf accounting).
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+unsafe impl Send for HloRuntime {}
+unsafe impl Sync for HloRuntime {}
+
+impl HloRuntime {
+    /// Open the artifact directory (expects `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<HloRuntime>> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let manifest = Manifest::parse(&manifest_text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Arc::new(HloRuntime {
+            dir,
+            manifest,
+            client: Mutex::new(client),
+            executables: Mutex::new(HashMap::new()),
+            executions: std::sync::atomic::AtomicU64::new(0),
+        }))
+    }
+
+    /// Default artifact location (repo-root `artifacts/`).
+    pub fn open_default() -> Result<Arc<HloRuntime>> {
+        HloRuntime::open("artifacts")
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn executable(&self, name: &str) -> Result<Arc<SendExecutable>> {
+        {
+            let cache = self.executables.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(Arc::clone(e));
+            }
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = {
+            let client = self.client.lock().unwrap();
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?
+        };
+        let exe = Arc::new(SendExecutable(exe));
+        self.executables.lock().unwrap().insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; returns the output tuple's
+    /// elements (graphs are lowered with `return_tuple=True`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        self.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // serialize executions (single CPU device; keeps FFI use conservative)
+        let _guard = self.client.lock().unwrap();
+        let result = exe
+            .0
+            .execute(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow!("untupling {name} output: {e:?}"))
+    }
+
+    /// Names of compiled-and-cached artifacts (for diagnostics).
+    pub fn cached(&self) -> Vec<String> {
+        self.executables.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+/// f32 row-major literal from f64 data with shape (rows, cols).
+pub fn literal_matrix(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    xla::Literal::vec1(&f32s)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// f32 vector literal from f64 data.
+pub fn literal_vec(data: &[f64]) -> xla::Literal {
+    let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    xla::Literal::vec1(&f32s)
+}
+
+/// Read an f32 literal back as f64s.
+pub fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+            "buckets": [16, 32], "encoded_dim": 8, "cand_batch": 256,
+            "theta_dim": 26, "jitter": 1e-6,
+            "mlp": {"widths": [8], "features": 10, "train_rows": 512,
+                     "val_rows": 256, "num_batches": 8}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.buckets, vec![16, 32]);
+        assert_eq!(m.encoded_dim, 8);
+        assert_eq!(m.theta_dim, 26);
+        assert_eq!(m.bucket_for(10), Some(16));
+        assert_eq!(m.bucket_for(17), Some(32));
+        assert_eq!(m.bucket_for(33), None);
+    }
+
+    #[test]
+    fn manifest_rejects_incomplete() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.5, -2.0, 3.25, 0.0, 7.0, -1.0];
+        let lit = literal_matrix(&data, 2, 3).unwrap();
+        let back = literal_to_f64(&lit).unwrap();
+        assert_eq!(back, data);
+    }
+}

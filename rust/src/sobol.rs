@@ -1,0 +1,187 @@
+//! Sobol low-discrepancy sequences (§4.3 of the paper).
+//!
+//! AMT uses a Sobol generator to populate the search space with a dense,
+//! well-spread pseudo-random grid of anchor points that (a) seed the
+//! Thompson-style marginal sampling and (b) initialize the local
+//! optimization of the expected improvement. This is a Gray-code
+//! implementation with the Joe–Kuo (new-joe-kuo-6) direction numbers for the
+//! first [`MAX_DIM`] dimensions — comfortably above the encoded-configuration
+//! dimension used by the HLO artifacts (D = 8).
+
+/// Maximum supported dimensionality.
+pub const MAX_DIM: usize = 21;
+
+const BITS: u32 = 52; // enough for f64 mantissa use
+
+/// (s, a, m[..s]) rows of the Joe–Kuo direction-number table, dimensions
+/// 2..=21 (dimension 1 is the van der Corput sequence).
+const JOE_KUO: &[(u32, u32, &[u32])] = &[
+    (1, 0, &[1]),
+    (2, 1, &[1, 3]),
+    (3, 1, &[1, 3, 1]),
+    (3, 2, &[1, 1, 1]),
+    (4, 1, &[1, 1, 3, 3]),
+    (4, 4, &[1, 3, 5, 13]),
+    (5, 2, &[1, 1, 5, 5, 17]),
+    (5, 4, &[1, 1, 5, 5, 5]),
+    (5, 7, &[1, 1, 7, 11, 19]),
+    (5, 11, &[1, 1, 5, 1, 1]),
+    (5, 13, &[1, 1, 1, 3, 11]),
+    (5, 14, &[1, 3, 5, 5, 31]),
+    (6, 1, &[1, 3, 3, 9, 7, 49]),
+    (6, 13, &[1, 1, 1, 15, 21, 21]),
+    (6, 16, &[1, 3, 1, 13, 27, 49]),
+    (6, 19, &[1, 1, 1, 15, 7, 5]),
+    (6, 22, &[1, 3, 1, 15, 13, 25]),
+    (6, 25, &[1, 1, 5, 5, 19, 61]),
+    (7, 1, &[1, 3, 7, 11, 23, 15, 103]),
+    (7, 4, &[1, 3, 7, 13, 13, 15, 69]),
+];
+
+/// Sobol sequence generator over the unit hypercube.
+pub struct Sobol {
+    dim: usize,
+    /// direction numbers, `v[d][k]`, scaled to BITS bits
+    v: Vec<[u64; BITS as usize]>,
+    x: Vec<u64>,
+    index: u64,
+}
+
+impl Sobol {
+    /// New generator for `dim` dimensions (1..=MAX_DIM).
+    pub fn new(dim: usize) -> Self {
+        assert!(
+            (1..=MAX_DIM).contains(&dim),
+            "sobol: dim {dim} out of range 1..={MAX_DIM}"
+        );
+        let mut v = Vec::with_capacity(dim);
+        // dimension 1: van der Corput, v_k = 2^(BITS - k - 1)
+        let mut v0 = [0u64; BITS as usize];
+        for (k, slot) in v0.iter_mut().enumerate() {
+            *slot = 1u64 << (BITS - 1 - k as u32);
+        }
+        v.push(v0);
+        for d in 1..dim {
+            let (s, a, m) = JOE_KUO[d - 1];
+            let s = s as usize;
+            let mut vd = [0u64; BITS as usize];
+            for k in 0..BITS as usize {
+                if k < s {
+                    vd[k] = (m[k] as u64) << (BITS - 1 - k as u32);
+                } else {
+                    let mut val = vd[k - s] ^ (vd[k - s] >> s);
+                    for j in 1..s {
+                        if (a >> (s - 1 - j)) & 1 == 1 {
+                            val ^= vd[k - j];
+                        }
+                    }
+                    vd[k] = val;
+                }
+            }
+            v.push(vd);
+        }
+        Sobol { dim, v, x: vec![0; dim], index: 0 }
+    }
+
+    /// Dimensionality of the sequence.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Next point in [0, 1)^dim (Gray-code order; the first emitted point is
+    /// the origin-skipped point 0.5,…).
+    pub fn next_point(&mut self) -> Vec<f64> {
+        // skip index 0 (the all-zeros point) like common implementations
+        self.index += 1;
+        let c = self.index.trailing_zeros().min(BITS - 1);
+        let scale = 1.0 / (1u64 << BITS) as f64;
+        for d in 0..self.dim {
+            self.x[d] ^= self.v[d][c as usize];
+        }
+        self.x.iter().map(|&u| u as f64 * scale).collect()
+    }
+
+    /// Generate the next `n` points.
+    pub fn take_points(&mut self, n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| self.next_point()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_points_dimension_one_are_van_der_corput() {
+        let mut s = Sobol::new(1);
+        let got: Vec<f64> = (0..7).map(|_| s.next_point()[0]).collect();
+        let want = [0.5, 0.75, 0.25, 0.375, 0.875, 0.625, 0.125];
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-12, "{got:?}");
+        }
+    }
+
+    #[test]
+    fn first_points_dimension_two() {
+        let mut s = Sobol::new(2);
+        let got: Vec<Vec<f64>> = s.take_points(4);
+        // standard Sobol (origin skipped): (.5,.5), (.75,.25), (.25,.75), (.375,.375)
+        let want = [[0.5, 0.5], [0.75, 0.25], [0.25, 0.75], [0.375, 0.375]];
+        for (g, w) in got.iter().zip(want.iter()) {
+            for (a, b) in g.iter().zip(w.iter()) {
+                assert!((a - b).abs() < 1e-12, "{got:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn points_in_unit_cube_all_dims() {
+        for dim in 1..=MAX_DIM {
+            let mut s = Sobol::new(dim);
+            for p in s.take_points(256) {
+                assert_eq!(p.len(), dim);
+                for &c in &p {
+                    assert!((0.0..1.0).contains(&c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_duplicate_points_in_prefix() {
+        let mut s = Sobol::new(8);
+        let pts = s.take_points(1024);
+        let mut keys: Vec<String> = pts
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .map(|c| format!("{c:.15}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            })
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 1024);
+    }
+
+    #[test]
+    fn coverage_better_than_random_grid_gap() {
+        // every axis should have points in each of 16 equal bins after 256 draws
+        let mut s = Sobol::new(6);
+        let pts = s.take_points(256);
+        for d in 0..6 {
+            let mut bins = [0u32; 16];
+            for p in &pts {
+                bins[(p[d] * 16.0) as usize] += 1;
+            }
+            assert!(bins.iter().all(|&b| b > 0), "dim {d}: {bins:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_oversized_dim() {
+        let _ = Sobol::new(MAX_DIM + 1);
+    }
+}

@@ -1,0 +1,687 @@
+//! Hyperparameter search-space definition and encoding (§4.1, §5.1).
+//!
+//! A [`SearchSpace`] is an ordered list of parameter ranges — continuous,
+//! integer, or categorical. For the surrogate model every configuration is
+//! encoded into `[0, 1]^D`: numeric parameters map through their *scaling*
+//! (linear, logarithmic, or reverse-logarithmic — §5.1 "log scaling") and
+//! categoricals are one-hot encoded, exactly as the paper describes
+//! (integers are handled in the continuous space and rounded on decode).
+//!
+//! Random search samples uniformly **in the transformed space**, which is
+//! what makes log scaling useful for model-free search too (§5.1).
+
+use std::collections::BTreeMap;
+
+use crate::json::Json;
+use crate::rng::Rng;
+
+/// Numeric-parameter scaling (SageMaker's `ScalingType`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Scaling {
+    /// Pick automatically: logarithmic when the range spans ≥ 3 decades and
+    /// is strictly positive, linear otherwise.
+    #[default]
+    Auto,
+    Linear,
+    Logarithmic,
+    /// For ranges inside [0, 1) whose interesting region hugs 1 (e.g. decay
+    /// rates): log-transform the distance to 1.
+    ReverseLogarithmic,
+}
+
+/// One tunable hyperparameter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParameterRange {
+    Continuous { name: String, min_value: f64, max_value: f64, scaling: Scaling },
+    Integer { name: String, min_value: i64, max_value: i64, scaling: Scaling },
+    Categorical { name: String, values: Vec<String> },
+}
+
+impl ParameterRange {
+    /// Parameter name.
+    pub fn name(&self) -> &str {
+        match self {
+            ParameterRange::Continuous { name, .. } => name,
+            ParameterRange::Integer { name, .. } => name,
+            ParameterRange::Categorical { name, .. } => name,
+        }
+    }
+
+    /// Number of encoded dimensions this parameter occupies.
+    pub fn encoded_width(&self) -> usize {
+        match self {
+            ParameterRange::Categorical { values, .. } => values.len(),
+            _ => 1,
+        }
+    }
+}
+
+/// A concrete hyperparameter value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Float(f64),
+    Int(i64),
+    Cat(String),
+}
+
+impl Value {
+    /// Numeric view (errors for categoricals).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            Value::Cat(_) => None,
+        }
+    }
+
+    /// Categorical view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Cat(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A full hyperparameter configuration, keyed by parameter name.
+pub type Config = BTreeMap<String, Value>;
+
+/// Errors raised by space validation / encoding.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SpaceError {
+    EmptySpace,
+    DuplicateName(String),
+    InvalidRange(String),
+    LogRequiresPositive(String),
+    ReverseLogRequiresUnit(String),
+    EmptyCategories(String),
+    MissingParameter(String),
+    TypeMismatch(String),
+    OutOfRange(String),
+    UnknownCategory(String),
+}
+
+impl std::fmt::Display for SpaceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for SpaceError {}
+
+/// Ordered collection of parameter ranges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchSpace {
+    pub parameters: Vec<ParameterRange>,
+}
+
+impl SearchSpace {
+    /// Build and validate a search space.
+    pub fn new(parameters: Vec<ParameterRange>) -> Result<Self, SpaceError> {
+        if parameters.is_empty() {
+            return Err(SpaceError::EmptySpace);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for p in &parameters {
+            if !seen.insert(p.name().to_string()) {
+                return Err(SpaceError::DuplicateName(p.name().to_string()));
+            }
+            match p {
+                ParameterRange::Continuous { name, min_value, max_value, scaling } => {
+                    if !(min_value < max_value) || !min_value.is_finite() || !max_value.is_finite()
+                    {
+                        return Err(SpaceError::InvalidRange(name.clone()));
+                    }
+                    validate_scaling(name, *min_value, *max_value, *scaling)?;
+                }
+                ParameterRange::Integer { name, min_value, max_value, scaling } => {
+                    if min_value >= max_value {
+                        return Err(SpaceError::InvalidRange(name.clone()));
+                    }
+                    validate_scaling(name, *min_value as f64, *max_value as f64, *scaling)?;
+                }
+                ParameterRange::Categorical { name, values } => {
+                    if values.is_empty() {
+                        return Err(SpaceError::EmptyCategories(name.clone()));
+                    }
+                }
+            }
+        }
+        Ok(SearchSpace { parameters })
+    }
+
+    /// Total encoded dimensionality D.
+    pub fn encoded_dim(&self) -> usize {
+        self.parameters.iter().map(|p| p.encoded_width()).sum()
+    }
+
+    /// Look up a parameter by name.
+    pub fn parameter(&self, name: &str) -> Option<&ParameterRange> {
+        self.parameters.iter().find(|p| p.name() == name)
+    }
+
+    /// Encode a configuration into `[0, 1]^D`.
+    pub fn encode(&self, config: &Config) -> Result<Vec<f64>, SpaceError> {
+        let mut out = Vec::with_capacity(self.encoded_dim());
+        for p in &self.parameters {
+            let v = config
+                .get(p.name())
+                .ok_or_else(|| SpaceError::MissingParameter(p.name().to_string()))?;
+            match p {
+                ParameterRange::Continuous { name, min_value, max_value, scaling } => {
+                    let x = v.as_f64().ok_or_else(|| SpaceError::TypeMismatch(name.clone()))?;
+                    if x < *min_value || x > *max_value {
+                        return Err(SpaceError::OutOfRange(name.clone()));
+                    }
+                    out.push(to_unit(x, *min_value, *max_value, *scaling));
+                }
+                ParameterRange::Integer { name, min_value, max_value, scaling } => {
+                    let x = v.as_f64().ok_or_else(|| SpaceError::TypeMismatch(name.clone()))?;
+                    if x < *min_value as f64 || x > *max_value as f64 {
+                        return Err(SpaceError::OutOfRange(name.clone()));
+                    }
+                    out.push(to_unit(x, *min_value as f64, *max_value as f64, *scaling));
+                }
+                ParameterRange::Categorical { name, values } => {
+                    let s = v.as_str().ok_or_else(|| SpaceError::TypeMismatch(name.clone()))?;
+                    let idx = values
+                        .iter()
+                        .position(|c| c == s)
+                        .ok_or_else(|| SpaceError::UnknownCategory(name.clone()))?;
+                    for i in 0..values.len() {
+                        out.push(if i == idx { 1.0 } else { 0.0 });
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode a point of `[0, 1]^D` back into a configuration (clamping,
+    /// integer rounding, categorical argmax).
+    pub fn decode(&self, u: &[f64]) -> Config {
+        assert!(u.len() >= self.encoded_dim(), "decode: point too short");
+        let mut config = Config::new();
+        let mut off = 0;
+        for p in &self.parameters {
+            match p {
+                ParameterRange::Continuous { name, min_value, max_value, scaling } => {
+                    let x = from_unit(u[off].clamp(0.0, 1.0), *min_value, *max_value, *scaling);
+                    config.insert(name.clone(), Value::Float(x.clamp(*min_value, *max_value)));
+                    off += 1;
+                }
+                ParameterRange::Integer { name, min_value, max_value, scaling } => {
+                    let x = from_unit(
+                        u[off].clamp(0.0, 1.0),
+                        *min_value as f64,
+                        *max_value as f64,
+                        *scaling,
+                    );
+                    let r = (x.round() as i64).clamp(*min_value, *max_value);
+                    config.insert(name.clone(), Value::Int(r));
+                    off += 1;
+                }
+                ParameterRange::Categorical { name, values } => {
+                    let slice = &u[off..off + values.len()];
+                    let idx = slice
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    config.insert(name.clone(), Value::Cat(values[idx].clone()));
+                    off += values.len();
+                }
+            }
+        }
+        config
+    }
+
+    /// Uniform sample **in the transformed space** (this is what the paper's
+    /// log scaling does for random search).
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        let u: Vec<f64> = (0..self.encoded_dim()).map(|_| rng.uniform()).collect();
+        self.decode(&u)
+    }
+
+    /// Cartesian grid with `k` values per numeric parameter (grid search,
+    /// §2.1). Categorical parameters enumerate all categories.
+    pub fn grid(&self, k: usize) -> Vec<Config> {
+        assert!(k >= 2);
+        let mut axes: Vec<Vec<Value>> = Vec::new();
+        for p in &self.parameters {
+            match p {
+                ParameterRange::Continuous { min_value, max_value, scaling, .. } => {
+                    axes.push(
+                        (0..k)
+                            .map(|i| {
+                                let u = i as f64 / (k - 1) as f64;
+                                Value::Float(from_unit(u, *min_value, *max_value, *scaling))
+                            })
+                            .collect(),
+                    );
+                }
+                ParameterRange::Integer { min_value, max_value, scaling, .. } => {
+                    let mut vals: Vec<i64> = (0..k)
+                        .map(|i| {
+                            let u = i as f64 / (k - 1) as f64;
+                            from_unit(u, *min_value as f64, *max_value as f64, *scaling).round()
+                                as i64
+                        })
+                        .collect();
+                    vals.dedup();
+                    axes.push(vals.into_iter().map(Value::Int).collect());
+                }
+                ParameterRange::Categorical { values, .. } => {
+                    axes.push(values.iter().cloned().map(Value::Cat).collect());
+                }
+            }
+        }
+        let mut configs = vec![Config::new()];
+        for (p, axis) in self.parameters.iter().zip(axes) {
+            let mut next = Vec::with_capacity(configs.len() * axis.len());
+            for c in &configs {
+                for v in &axis {
+                    let mut c2 = c.clone();
+                    c2.insert(p.name().to_string(), v.clone());
+                    next.push(c2);
+                }
+            }
+            configs = next;
+        }
+        configs
+    }
+
+    /// Clamp a configuration into this space (used by warm start to remap
+    /// parent-job configurations; handles the §6.2 lesson where a parent's
+    /// linear-scale value 0 is invalid under a child's log scale).
+    pub fn clamp(&self, config: &Config) -> Config {
+        let mut out = Config::new();
+        for p in &self.parameters {
+            let v = config.get(p.name());
+            match p {
+                ParameterRange::Continuous { name, min_value, max_value, .. } => {
+                    let x = v.and_then(Value::as_f64).unwrap_or((min_value + max_value) / 2.0);
+                    out.insert(name.clone(), Value::Float(x.clamp(*min_value, *max_value)));
+                }
+                ParameterRange::Integer { name, min_value, max_value, .. } => {
+                    let x = v
+                        .and_then(Value::as_f64)
+                        .unwrap_or((min_value + max_value) as f64 / 2.0);
+                    out.insert(
+                        name.clone(),
+                        Value::Int((x.round() as i64).clamp(*min_value, *max_value)),
+                    );
+                }
+                ParameterRange::Categorical { name, values } => {
+                    let s = v
+                        .and_then(Value::as_str)
+                        .filter(|s| values.iter().any(|c| c == s))
+                        .unwrap_or(&values[0]);
+                    out.insert(name.clone(), Value::Cat(s.to_string()));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn validate_scaling(name: &str, min: f64, max: f64, scaling: Scaling) -> Result<(), SpaceError> {
+    match scaling {
+        Scaling::Logarithmic if min <= 0.0 => {
+            Err(SpaceError::LogRequiresPositive(name.to_string()))
+        }
+        Scaling::ReverseLogarithmic if !(0.0 <= min && max < 1.0) => {
+            Err(SpaceError::ReverseLogRequiresUnit(name.to_string()))
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Resolve `Auto` into a concrete scaling for a numeric range.
+pub fn resolve_auto(min: f64, max: f64, scaling: Scaling) -> Scaling {
+    match scaling {
+        Scaling::Auto => {
+            if min > 0.0 && max / min >= 1000.0 {
+                Scaling::Logarithmic
+            } else {
+                Scaling::Linear
+            }
+        }
+        s => s,
+    }
+}
+
+/// Map a raw value into [0, 1] under the given scaling.
+pub fn to_unit(x: f64, min: f64, max: f64, scaling: Scaling) -> f64 {
+    match resolve_auto(min, max, scaling) {
+        Scaling::Linear | Scaling::Auto => (x - min) / (max - min),
+        Scaling::Logarithmic => (x.ln() - min.ln()) / (max.ln() - min.ln()),
+        Scaling::ReverseLogarithmic => {
+            ((1.0 - min).ln() - (1.0 - x).ln()) / ((1.0 - min).ln() - (1.0 - max).ln())
+        }
+    }
+}
+
+/// Inverse of [`to_unit`].
+pub fn from_unit(u: f64, min: f64, max: f64, scaling: Scaling) -> f64 {
+    match resolve_auto(min, max, scaling) {
+        Scaling::Linear | Scaling::Auto => min + u * (max - min),
+        Scaling::Logarithmic => (min.ln() + u * (max.ln() - min.ln())).exp(),
+        Scaling::ReverseLogarithmic => {
+            1.0 - ((1.0 - min).ln() - u * ((1.0 - min).ln() - (1.0 - max).ln())).exp()
+        }
+    }
+}
+
+// --------------------------- JSON conversions -----------------------------
+
+impl Scaling {
+    /// API string form (mirrors SageMaker's `ScalingType`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scaling::Auto => "Auto",
+            Scaling::Linear => "Linear",
+            Scaling::Logarithmic => "Logarithmic",
+            Scaling::ReverseLogarithmic => "ReverseLogarithmic",
+        }
+    }
+
+    /// Parse the API string form.
+    pub fn from_str_name(s: &str) -> Option<Scaling> {
+        Some(match s {
+            "Auto" => Scaling::Auto,
+            "Linear" => Scaling::Linear,
+            "Logarithmic" => Scaling::Logarithmic,
+            "ReverseLogarithmic" => Scaling::ReverseLogarithmic,
+            _ => return None,
+        })
+    }
+}
+
+impl Value {
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Float(v) => Json::Num(*v),
+            Value::Int(v) => Json::Num(*v as f64),
+            Value::Cat(s) => Json::Str(s.clone()),
+        }
+    }
+
+    /// From JSON (numbers become Float unless integral-and-int-typed later).
+    pub fn from_json(j: &Json) -> Option<Value> {
+        match j {
+            Json::Num(n) => Some(Value::Float(*n)),
+            Json::Str(s) => Some(Value::Cat(s.clone())),
+            _ => None,
+        }
+    }
+}
+
+/// Serialize a configuration.
+pub fn config_to_json(config: &Config) -> Json {
+    Json::Obj(config.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+}
+
+/// Deserialize a configuration (numeric values become `Value::Float`; use
+/// [`SearchSpace::clamp`] to coerce types against a space).
+pub fn config_from_json(j: &Json) -> Option<Config> {
+    let obj = j.as_obj()?;
+    let mut cfg = Config::new();
+    for (k, v) in obj {
+        cfg.insert(k.clone(), Value::from_json(v)?);
+    }
+    Some(cfg)
+}
+
+impl ParameterRange {
+    /// JSON form (tagged by `type`).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ParameterRange::Continuous { name, min_value, max_value, scaling } => Json::obj(vec![
+                ("type", Json::Str("Continuous".into())),
+                ("name", Json::Str(name.clone())),
+                ("min_value", Json::Num(*min_value)),
+                ("max_value", Json::Num(*max_value)),
+                ("scaling", Json::Str(scaling.as_str().into())),
+            ]),
+            ParameterRange::Integer { name, min_value, max_value, scaling } => Json::obj(vec![
+                ("type", Json::Str("Integer".into())),
+                ("name", Json::Str(name.clone())),
+                ("min_value", Json::Num(*min_value as f64)),
+                ("max_value", Json::Num(*max_value as f64)),
+                ("scaling", Json::Str(scaling.as_str().into())),
+            ]),
+            ParameterRange::Categorical { name, values } => Json::obj(vec![
+                ("type", Json::Str("Categorical".into())),
+                ("name", Json::Str(name.clone())),
+                (
+                    "values",
+                    Json::Arr(values.iter().map(|v| Json::Str(v.clone())).collect()),
+                ),
+            ]),
+        }
+    }
+
+    /// Parse the JSON form.
+    pub fn from_json(j: &Json) -> Option<ParameterRange> {
+        let ty = j.get("type")?.as_str()?;
+        let name = j.get("name")?.as_str()?.to_string();
+        match ty {
+            "Continuous" => Some(ParameterRange::Continuous {
+                name,
+                min_value: j.get("min_value")?.as_f64()?,
+                max_value: j.get("max_value")?.as_f64()?,
+                scaling: Scaling::from_str_name(j.get("scaling")?.as_str()?)?,
+            }),
+            "Integer" => Some(ParameterRange::Integer {
+                name,
+                min_value: j.get("min_value")?.as_i64()?,
+                max_value: j.get("max_value")?.as_i64()?,
+                scaling: Scaling::from_str_name(j.get("scaling")?.as_str()?)?,
+            }),
+            "Categorical" => Some(ParameterRange::Categorical {
+                name,
+                values: j
+                    .get("values")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_str().map(String::from))
+                    .collect::<Option<Vec<_>>>()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+impl SearchSpace {
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.parameters.iter().map(|p| p.to_json()).collect())
+    }
+
+    /// Parse and validate the JSON form.
+    pub fn from_json(j: &Json) -> Option<SearchSpace> {
+        let params = j
+            .as_arr()?
+            .iter()
+            .map(ParameterRange::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        SearchSpace::new(params).ok()
+    }
+}
+
+/// Convenience constructors.
+pub fn continuous(name: &str, min: f64, max: f64, scaling: Scaling) -> ParameterRange {
+    ParameterRange::Continuous { name: name.into(), min_value: min, max_value: max, scaling }
+}
+
+/// Integer range helper.
+pub fn integer(name: &str, min: i64, max: i64, scaling: Scaling) -> ParameterRange {
+    ParameterRange::Integer { name: name.into(), min_value: min, max_value: max, scaling }
+}
+
+/// Categorical range helper.
+pub fn categorical(name: &str, values: &[&str]) -> ParameterRange {
+    ParameterRange::Categorical {
+        name: name.into(),
+        values: values.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_space() -> SearchSpace {
+        SearchSpace::new(vec![
+            continuous("learning_rate", 1e-5, 1.0, Scaling::Logarithmic),
+            integer("depth", 1, 16, Scaling::Linear),
+            categorical("loss", &["hinge", "logistic", "huber"]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn encoded_dim_counts_onehot() {
+        assert_eq!(demo_space().encoded_dim(), 1 + 1 + 3);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_exact_for_int_and_cat() {
+        let space = demo_space();
+        let mut cfg = Config::new();
+        cfg.insert("learning_rate".into(), Value::Float(0.01));
+        cfg.insert("depth".into(), Value::Int(7));
+        cfg.insert("loss".into(), Value::Cat("logistic".into()));
+        let enc = space.encode(&cfg).unwrap();
+        let dec = space.decode(&enc);
+        assert_eq!(dec.get("depth"), Some(&Value::Int(7)));
+        assert_eq!(dec.get("loss"), Some(&Value::Cat("logistic".into())));
+        let lr = dec.get("learning_rate").unwrap().as_f64().unwrap();
+        assert!((lr.ln() - 0.01f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_scaling_centers_geometric_mean() {
+        // u = 0.5 must decode to the geometric mean of the range
+        let x = from_unit(0.5, 1e-9, 1e9, Scaling::Logarithmic);
+        assert!((x - 1.0).abs() < 1e-6, "{x}");
+    }
+
+    #[test]
+    fn auto_resolves_to_log_for_wide_positive_ranges() {
+        assert_eq!(resolve_auto(1e-6, 1.0, Scaling::Auto), Scaling::Logarithmic);
+        assert_eq!(resolve_auto(0.0, 1.0, Scaling::Auto), Scaling::Linear);
+        assert_eq!(resolve_auto(1.0, 10.0, Scaling::Auto), Scaling::Linear);
+    }
+
+    #[test]
+    fn reverse_log_maps_bounds() {
+        let (min, max) = (0.0, 0.999);
+        assert!((to_unit(min, min, max, Scaling::ReverseLogarithmic)).abs() < 1e-12);
+        assert!((to_unit(max, min, max, Scaling::ReverseLogarithmic) - 1.0).abs() < 1e-12);
+        let mid = from_unit(0.5, min, max, Scaling::ReverseLogarithmic);
+        assert!(mid > 0.9, "reverse log should hug 1: {mid}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_spaces() {
+        assert_eq!(SearchSpace::new(vec![]).unwrap_err(), SpaceError::EmptySpace);
+        assert!(matches!(
+            SearchSpace::new(vec![continuous("x", 1.0, 1.0, Scaling::Linear)]).unwrap_err(),
+            SpaceError::InvalidRange(_)
+        ));
+        assert!(matches!(
+            SearchSpace::new(vec![continuous("x", 0.0, 1.0, Scaling::Logarithmic)]).unwrap_err(),
+            SpaceError::LogRequiresPositive(_)
+        ));
+        assert!(matches!(
+            SearchSpace::new(vec![
+                continuous("x", 0.0, 1.0, Scaling::Linear),
+                continuous("x", 0.0, 2.0, Scaling::Linear)
+            ])
+            .unwrap_err(),
+            SpaceError::DuplicateName(_)
+        ));
+        assert!(matches!(
+            SearchSpace::new(vec![categorical("c", &[])]).unwrap_err(),
+            SpaceError::EmptyCategories(_)
+        ));
+    }
+
+    #[test]
+    fn encode_rejects_out_of_range_and_unknown() {
+        let space = demo_space();
+        let mut cfg = Config::new();
+        cfg.insert("learning_rate".into(), Value::Float(10.0));
+        cfg.insert("depth".into(), Value::Int(7));
+        cfg.insert("loss".into(), Value::Cat("logistic".into()));
+        assert!(matches!(space.encode(&cfg), Err(SpaceError::OutOfRange(_))));
+        cfg.insert("learning_rate".into(), Value::Float(0.1));
+        cfg.insert("loss".into(), Value::Cat("nope".into()));
+        assert!(matches!(space.encode(&cfg), Err(SpaceError::UnknownCategory(_))));
+    }
+
+    #[test]
+    fn sample_respects_log_scaling_distribution() {
+        // under log scaling, ~half the samples of [1e-8, 1] land below 1e-4
+        let space =
+            SearchSpace::new(vec![continuous("c", 1e-8, 1.0, Scaling::Logarithmic)]).unwrap();
+        let mut rng = Rng::new(5);
+        let mut below = 0;
+        for _ in 0..2000 {
+            let c = space.sample(&mut rng);
+            if c.get("c").unwrap().as_f64().unwrap() < 1e-4 {
+                below += 1;
+            }
+        }
+        let frac = below as f64 / 2000.0;
+        assert!((frac - 0.5).abs() < 0.05, "{frac}");
+    }
+
+    #[test]
+    fn grid_enumerates_cartesian_product() {
+        let space = SearchSpace::new(vec![
+            continuous("a", 0.0, 1.0, Scaling::Linear),
+            categorical("c", &["x", "y"]),
+        ])
+        .unwrap();
+        let g = space.grid(3);
+        assert_eq!(g.len(), 6);
+    }
+
+    #[test]
+    fn clamp_handles_log_scale_zero_edge_case() {
+        // §6.2: parent explored 0.0 under linear scaling; child uses log
+        // scaling on [1e-6, 1]. Clamping must produce a valid value.
+        let child =
+            SearchSpace::new(vec![continuous("wd", 1e-6, 1.0, Scaling::Logarithmic)]).unwrap();
+        let mut parent_cfg = Config::new();
+        parent_cfg.insert("wd".into(), Value::Float(0.0));
+        let fixed = child.clamp(&parent_cfg);
+        let v = fixed.get("wd").unwrap().as_f64().unwrap();
+        assert!(v >= 1e-6);
+        assert!(child.encode(&fixed).is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let space = demo_space();
+        let s = space.to_json().to_string();
+        let back = SearchSpace::from_json(&crate::json::parse(&s).unwrap()).unwrap();
+        assert_eq!(space, back);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let mut cfg = Config::new();
+        cfg.insert("lr".into(), Value::Float(0.5));
+        cfg.insert("opt".into(), Value::Cat("sgd".into()));
+        let j = config_to_json(&cfg);
+        let back = config_from_json(&crate::json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.get("opt"), Some(&Value::Cat("sgd".into())));
+        assert_eq!(back.get("lr").unwrap().as_f64(), Some(0.5));
+    }
+}

@@ -1,0 +1,303 @@
+//! Metadata store (§3.2): the DynamoDB stand-in.
+//!
+//! AMT keeps *only job metadata* here — never customer data (a §3.1
+//! security requirement the store enforces by construction: values are
+//! JSON job/state records produced by the service itself). Semantics
+//! mirror what the backend needs from DynamoDB:
+//!
+//! * per-item version numbers with **conditional writes** (optimistic
+//!   concurrency for the workflow engine's state transitions),
+//! * prefix listing (List* APIs),
+//! * JSON snapshot persistence (durability stand-in).
+//!
+//! The store is `Sync`; the API layer shares it across tuning-job worker
+//! threads.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::json::{self, Json};
+
+/// Version assigned to an item on each successful write.
+pub type Version = u64;
+
+/// Conditional-write failure.
+#[derive(Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// Expected version did not match the stored item.
+    VersionConflict { expected: Version, actual: Version },
+    /// Conditional update of a missing item.
+    NotFound,
+    /// Snapshot (de)serialization problem.
+    Corrupt(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+#[derive(Default)]
+struct Table {
+    items: BTreeMap<String, (Version, Json)>,
+}
+
+/// In-memory, thread-safe metadata store with DynamoDB-like semantics.
+#[derive(Default)]
+pub struct MetadataStore {
+    tables: Mutex<BTreeMap<String, Table>>,
+    writes: std::sync::atomic::AtomicU64,
+}
+
+impl MetadataStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Unconditional put; returns the new version.
+    pub fn put(&self, table: &str, key: &str, value: Json) -> Version {
+        let mut tables = self.tables.lock().unwrap();
+        let t = tables.entry(table.to_string()).or_default();
+        let next = t.items.get(key).map(|(v, _)| v + 1).unwrap_or(1);
+        t.items.insert(key.to_string(), (next, value));
+        self.writes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        next
+    }
+
+    /// Conditional put: succeeds only if the stored version matches
+    /// `expected` (`None` ⇒ item must not exist). The workflow engine uses
+    /// this for exactly-once state transitions.
+    pub fn put_if(
+        &self,
+        table: &str,
+        key: &str,
+        value: Json,
+        expected: Option<Version>,
+    ) -> Result<Version, StoreError> {
+        let mut tables = self.tables.lock().unwrap();
+        let t = tables.entry(table.to_string()).or_default();
+        let actual = t.items.get(key).map(|(v, _)| *v);
+        match (expected, actual) {
+            (None, None) => {}
+            (Some(e), Some(a)) if e == a => {}
+            (Some(e), Some(a)) => {
+                return Err(StoreError::VersionConflict { expected: e, actual: a })
+            }
+            (Some(_), None) => return Err(StoreError::NotFound),
+            (None, Some(a)) => {
+                return Err(StoreError::VersionConflict { expected: 0, actual: a })
+            }
+        }
+        let next = actual.map(|v| v + 1).unwrap_or(1);
+        t.items.insert(key.to_string(), (next, value));
+        self.writes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(next)
+    }
+
+    /// Read an item with its version.
+    pub fn get(&self, table: &str, key: &str) -> Option<(Version, Json)> {
+        let tables = self.tables.lock().unwrap();
+        tables.get(table)?.items.get(key).cloned()
+    }
+
+    /// Delete an item; true if it existed.
+    pub fn delete(&self, table: &str, key: &str) -> bool {
+        let mut tables = self.tables.lock().unwrap();
+        tables
+            .get_mut(table)
+            .map(|t| t.items.remove(key).is_some())
+            .unwrap_or(false)
+    }
+
+    /// Keys with the given prefix (List* API support).
+    pub fn list_keys(&self, table: &str, prefix: &str) -> Vec<String> {
+        let tables = self.tables.lock().unwrap();
+        tables
+            .get(table)
+            .map(|t| {
+                t.items
+                    .keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// All (key, value) pairs with the given prefix.
+    pub fn scan(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
+        let tables = self.tables.lock().unwrap();
+        tables
+            .get(table)
+            .map(|t| {
+                t.items
+                    .iter()
+                    .filter(|(k, _)| k.starts_with(prefix))
+                    .map(|(k, (_, v))| (k.clone(), v.clone()))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Total successful writes (availability accounting for §6.5).
+    pub fn write_count(&self) -> u64 {
+        self.writes.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Serialize the whole store to pretty JSON.
+    pub fn snapshot(&self) -> String {
+        let tables = self.tables.lock().unwrap();
+        let mut obj = BTreeMap::new();
+        for (name, t) in tables.iter() {
+            let mut items = BTreeMap::new();
+            for (k, (ver, v)) in &t.items {
+                items.insert(
+                    k.clone(),
+                    Json::obj(vec![("version", Json::Num(*ver as f64)), ("value", v.clone())]),
+                );
+            }
+            obj.insert(name.clone(), Json::Obj(items));
+        }
+        Json::Obj(obj).to_pretty()
+    }
+
+    /// Restore a snapshot produced by [`MetadataStore::snapshot`].
+    pub fn restore(text: &str) -> Result<MetadataStore, StoreError> {
+        let parsed = json::parse(text).map_err(|e| StoreError::Corrupt(e.to_string()))?;
+        let obj = parsed
+            .as_obj()
+            .ok_or_else(|| StoreError::Corrupt("top level must be object".into()))?;
+        let store = MetadataStore::new();
+        {
+            let mut tables = store.tables.lock().unwrap();
+            for (name, items) in obj {
+                let mut table = Table::default();
+                let items = items
+                    .as_obj()
+                    .ok_or_else(|| StoreError::Corrupt("table must be object".into()))?;
+                for (k, entry) in items {
+                    let ver = entry
+                        .get("version")
+                        .and_then(Json::as_i64)
+                        .ok_or_else(|| StoreError::Corrupt("missing version".into()))?;
+                    let value = entry
+                        .get("value")
+                        .cloned()
+                        .ok_or_else(|| StoreError::Corrupt("missing value".into()))?;
+                    table.items.insert(k.clone(), (ver as Version, value));
+                }
+                tables.insert(name.clone(), table);
+            }
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip_and_versions() {
+        let s = MetadataStore::new();
+        let v1 = s.put("jobs", "a", Json::Num(1.0));
+        let v2 = s.put("jobs", "a", Json::Num(2.0));
+        assert_eq!((v1, v2), (1, 2));
+        let (ver, val) = s.get("jobs", "a").unwrap();
+        assert_eq!(ver, 2);
+        assert_eq!(val, Json::Num(2.0));
+        assert!(s.get("jobs", "b").is_none());
+        assert!(s.get("other", "a").is_none());
+    }
+
+    #[test]
+    fn conditional_writes_enforce_versions() {
+        let s = MetadataStore::new();
+        assert_eq!(s.put_if("t", "k", Json::Bool(true), None), Ok(1));
+        // create-if-absent fails on existing
+        assert!(matches!(
+            s.put_if("t", "k", Json::Bool(false), None),
+            Err(StoreError::VersionConflict { .. })
+        ));
+        // stale version fails
+        s.put("t", "k", Json::Num(2.0));
+        assert!(matches!(
+            s.put_if("t", "k", Json::Num(3.0), Some(1)),
+            Err(StoreError::VersionConflict { expected: 1, actual: 2 })
+        ));
+        // matching version succeeds
+        assert_eq!(s.put_if("t", "k", Json::Num(3.0), Some(2)), Ok(3));
+        // conditional update of missing item
+        assert_eq!(
+            s.put_if("t", "missing", Json::Null, Some(1)),
+            Err(StoreError::NotFound)
+        );
+    }
+
+    #[test]
+    fn list_and_scan_by_prefix() {
+        let s = MetadataStore::new();
+        s.put("jobs", "tune-1", Json::Num(1.0));
+        s.put("jobs", "tune-2", Json::Num(2.0));
+        s.put("jobs", "train-1", Json::Num(3.0));
+        assert_eq!(s.list_keys("jobs", "tune-"), vec!["tune-1", "tune-2"]);
+        assert_eq!(s.scan("jobs", "train-").len(), 1);
+        assert!(s.list_keys("nope", "").is_empty());
+    }
+
+    #[test]
+    fn delete_removes() {
+        let s = MetadataStore::new();
+        s.put("t", "k", Json::Null);
+        assert!(s.delete("t", "k"));
+        assert!(!s.delete("t", "k"));
+        assert!(s.get("t", "k").is_none());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let s = MetadataStore::new();
+        s.put("jobs", "a", Json::obj(vec![("x", Json::Num(1.5))]));
+        s.put("jobs", "b", Json::Str("hello \"world\"".into()));
+        s.put("state", "a", Json::Arr(vec![Json::Bool(true), Json::Null]));
+        s.put("jobs", "a", Json::obj(vec![("x", Json::Num(2.5))])); // bump version
+        let snap = s.snapshot();
+        let r = MetadataStore::restore(&snap).unwrap();
+        assert_eq!(r.get("jobs", "a"), s.get("jobs", "a"));
+        assert_eq!(r.get("jobs", "b"), s.get("jobs", "b"));
+        assert_eq!(r.get("state", "a"), s.get("state", "a"));
+        // versions preserved ⇒ conditional writes keep working post-restore
+        assert_eq!(r.get("jobs", "a").unwrap().0, 2);
+    }
+
+    #[test]
+    fn restore_rejects_garbage() {
+        assert!(MetadataStore::restore("not json").is_err());
+        assert!(MetadataStore::restore("[1,2]").is_err());
+        assert!(MetadataStore::restore(r#"{"t": {"k": {"value": 1}}}"#).is_err());
+    }
+
+    #[test]
+    fn concurrent_writers_are_serialized() {
+        use std::sync::Arc;
+        let s = Arc::new(MetadataStore::new());
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for j in 0..50 {
+                    s.put("t", &format!("k{i}-{j}"), Json::Num(j as f64));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.list_keys("t", "k").len(), 200);
+        assert_eq!(s.write_count(), 200);
+    }
+}

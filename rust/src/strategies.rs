@@ -1,0 +1,595 @@
+//! Hyperparameter selection strategies (§2, §4): the algorithm side of the
+//! Hyperparameter Selection Service.
+//!
+//! All strategies speak *minimization*; the coordinator negates metrics for
+//! maximization objectives before they reach this layer. Strategies are
+//! stateful (they own their RNG / Sobol cursor / GPHP chain state) and are
+//! driven by the coordinator with the full observation history plus the
+//! currently *pending* configurations (asynchronous parallelism, §4.4).
+
+use std::sync::Arc;
+
+use crate::acquisition::{propose, AcquisitionConfig, Proposal};
+use crate::gp::slice::{sample_gphp, SliceConfig};
+use crate::gp::{fit::fit_empirical_bayes, GpModel, SurrogateBackend, Theta};
+use crate::rng::Rng;
+use crate::sobol::Sobol;
+use crate::space::{Config, SearchSpace};
+
+/// One finished evaluation: configuration and its (minimized) final metric.
+#[derive(Clone, Debug)]
+pub struct Observation {
+    /// The evaluated configuration.
+    pub config: Config,
+    /// Final objective value (lower is better at this layer).
+    pub value: f64,
+}
+
+/// A proposal source for the selection service.
+pub trait Strategy: Send {
+    /// Short name for logs and benches.
+    fn name(&self) -> &'static str;
+    /// Propose the next configuration given history and pending evaluations.
+    fn next_config(&mut self, history: &[Observation], pending: &[Config]) -> Config;
+}
+
+// ---------------------------------------------------------------------------
+// Model-free baselines (§2.1)
+// ---------------------------------------------------------------------------
+
+/// Uniform random search in the *transformed* space (log scaling applies).
+pub struct RandomSearch {
+    space: SearchSpace,
+    rng: Rng,
+}
+
+impl RandomSearch {
+    /// New sampler over `space`.
+    pub fn new(space: SearchSpace, seed: u64) -> Self {
+        RandomSearch { space, rng: Rng::new(seed) }
+    }
+}
+
+impl Strategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+    fn next_config(&mut self, _history: &[Observation], _pending: &[Config]) -> Config {
+        self.space.sample(&mut self.rng)
+    }
+}
+
+/// Quasi-random search on a Sobol sequence (§2.1's "pseudo-random points").
+pub struct SobolSearch {
+    space: SearchSpace,
+    sobol: Sobol,
+}
+
+impl SobolSearch {
+    /// New Sobol cursor over `space`.
+    pub fn new(space: SearchSpace) -> Self {
+        let dim = space.encoded_dim().min(crate::sobol::MAX_DIM);
+        SobolSearch { space, sobol: Sobol::new(dim) }
+    }
+}
+
+impl Strategy for SobolSearch {
+    fn name(&self) -> &'static str {
+        "sobol"
+    }
+    fn next_config(&mut self, _history: &[Observation], _pending: &[Config]) -> Config {
+        let mut u = self.sobol.next_point();
+        while u.len() < self.space.encoded_dim() {
+            let l = u.len();
+            u.push(u[l % self.sobol.dim()]);
+        }
+        self.space.decode(&u)
+    }
+}
+
+/// Exhaustive grid search with `k` points per numeric axis (§2.1). Cycles
+/// if asked for more configurations than the grid holds.
+pub struct GridSearch {
+    grid: Vec<Config>,
+    cursor: usize,
+}
+
+impl GridSearch {
+    /// Materialize the grid.
+    pub fn new(space: &SearchSpace, k: usize) -> Self {
+        GridSearch { grid: space.grid(k), cursor: 0 }
+    }
+    /// Total grid size K^d.
+    pub fn len(&self) -> usize {
+        self.grid.len()
+    }
+    /// Whether the grid is empty (never true for valid spaces).
+    pub fn is_empty(&self) -> bool {
+        self.grid.is_empty()
+    }
+}
+
+impl Strategy for GridSearch {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+    fn next_config(&mut self, _history: &[Observation], _pending: &[Config]) -> Config {
+        let c = self.grid[self.cursor % self.grid.len()].clone();
+        self.cursor += 1;
+        c
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bayesian optimization (§4)
+// ---------------------------------------------------------------------------
+
+/// GPHP treatment (§4.2): full slice-sampling MCMC or empirical Bayes.
+#[derive(Clone, Debug)]
+pub enum GphpMode {
+    /// Slice sampling (AMT default; paper: less prone to early overfit).
+    Mcmc(SliceConfig),
+    /// Marginal-likelihood maximization with `restarts` Nelder–Mead starts.
+    EmpiricalBayes { restarts: usize },
+}
+
+/// How pending (still-running) evaluations inform new proposals (§4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AsyncMode {
+    /// AMT's production scheme: exclude the neighbourhoods of the L−1
+    /// pending candidates through the acquisition penalty.
+    #[default]
+    Exclusion,
+    /// The improvement §4.4 sketches ("asynchronous processing could be
+    /// based on fantasizing"): kriging-believer fantasies — pending
+    /// configurations enter the fit with their posterior-mean values, so
+    /// the surrogate's uncertainty collapses around in-flight work.
+    Fantasies,
+}
+
+/// BO engine configuration.
+#[derive(Clone, Debug)]
+pub struct BoConfig {
+    /// Random/Sobol evaluations before the GP turns on.
+    pub init_random: usize,
+    /// GPHP treatment.
+    pub gphp: GphpMode,
+    /// Acquisition optimizer settings.
+    pub acq: AcquisitionConfig,
+    /// Enable Kumaraswamy input warping (ablation toggle; default on).
+    pub input_warping: bool,
+    /// Cap on GP training-set size (the paper notes the cubic scaling of
+    /// GPs; beyond this the most recent observations are kept).
+    pub max_fit_points: usize,
+    /// Pending-candidate handling under parallelism.
+    pub async_mode: AsyncMode,
+}
+
+impl Default for BoConfig {
+    fn default() -> Self {
+        BoConfig {
+            init_random: 4,
+            gphp: GphpMode::Mcmc(SliceConfig::light()),
+            acq: AcquisitionConfig::default(),
+            input_warping: true,
+            max_fit_points: 512,
+            async_mode: AsyncMode::Exclusion,
+        }
+    }
+}
+
+/// GP-based Bayesian optimization: the algorithm of §4, end to end.
+pub struct BayesianOptimization {
+    space: SearchSpace,
+    backend: Arc<dyn SurrogateBackend>,
+    config: BoConfig,
+    rng: Rng,
+    sobol_init: Sobol,
+    /// Last accepted theta — used to warm-start the next MCMC chain.
+    last_theta: Option<Theta>,
+    /// Observations injected by warm start (§5.3), prepended to history.
+    transferred: Vec<Observation>,
+}
+
+impl BayesianOptimization {
+    /// New BO strategy over `space` with the given surrogate backend.
+    pub fn new(
+        space: SearchSpace,
+        backend: Arc<dyn SurrogateBackend>,
+        config: BoConfig,
+        seed: u64,
+    ) -> Self {
+        let dim = space.encoded_dim().min(crate::sobol::MAX_DIM);
+        BayesianOptimization {
+            space,
+            backend,
+            config,
+            rng: Rng::new(seed),
+            sobol_init: Sobol::new(dim),
+            last_theta: None,
+            transferred: Vec::new(),
+        }
+    }
+
+    /// Inject warm-start observations (already remapped into this space).
+    pub fn add_transferred(&mut self, obs: Vec<Observation>) {
+        self.transferred.extend(obs);
+    }
+
+    /// Count of transferred observations currently held.
+    pub fn transferred_len(&self) -> usize {
+        self.transferred.len()
+    }
+
+    fn initial_design(&mut self) -> Config {
+        // Sobol-spread initial design, a standard upgrade over pure random
+        let mut u = self.sobol_init.next_point();
+        while u.len() < self.space.encoded_dim() {
+            let l = u.len();
+            u.push(self.rng.uniform());
+            let _ = l;
+        }
+        // jitter to avoid deterministic collisions across parallel workers
+        for v in u.iter_mut() {
+            *v = (*v + 0.02 * self.rng.normal()).clamp(0.0, 1.0);
+        }
+        self.space.decode(&u)
+    }
+
+    /// Fit the surrogate on (transferred + live) history. Public so benches
+    /// can measure the fit in isolation.
+    pub fn fit_model(&mut self, history: &[Observation]) -> Option<GpModel> {
+        let mut all: Vec<&Observation> =
+            self.transferred.iter().chain(history.iter()).collect();
+        if all.len() > self.config.max_fit_points {
+            let skip = all.len() - self.config.max_fit_points;
+            all.drain(..skip);
+        }
+        let mut xs = Vec::with_capacity(all.len());
+        let mut ys = Vec::with_capacity(all.len());
+        for o in &all {
+            if let Ok(x) = self.space.encode(&o.config) {
+                xs.push(x);
+                ys.push(o.value);
+            }
+        }
+        if xs.len() < 2 {
+            return None;
+        }
+        let d = self.space.encoded_dim();
+        let (m, s) = crate::gp::normalization(&ys);
+        let yn: Vec<f64> = ys.iter().map(|v| (v - m) / s).collect();
+
+        let mut thetas = match &self.config.gphp {
+            GphpMode::Mcmc(cfg) => sample_gphp(
+                self.backend.as_ref(),
+                &xs,
+                &yn,
+                d,
+                cfg,
+                &mut self.rng,
+                self.last_theta.clone(),
+            ),
+            GphpMode::EmpiricalBayes { restarts } => vec![fit_empirical_bayes(
+                self.backend.as_ref(),
+                &xs,
+                &yn,
+                d,
+                *restarts,
+                &mut self.rng,
+            )],
+        };
+        if !self.config.input_warping {
+            thetas = thetas.into_iter().map(|t| t.with_identity_warp()).collect();
+        }
+        self.last_theta = thetas.last().cloned();
+        GpModel::fit(self.backend.as_ref(), &xs, &ys, thetas)
+    }
+
+    /// Run one full propose step and also return the acquisition details.
+    pub fn propose_detailed(
+        &mut self,
+        history: &[Observation],
+        pending: &[Config],
+    ) -> (Config, Option<Proposal>) {
+        let live = history.len();
+        if live + pending.len() < self.config.init_random && self.transferred.is_empty() {
+            return (self.initial_design(), None);
+        }
+        let Some(model) = self.fit_model(history) else {
+            return (self.initial_design(), None);
+        };
+        let pending_enc: Vec<Vec<f64>> =
+            pending.iter().filter_map(|c| self.space.encode(c).ok()).collect();
+        let d = self.space.encoded_dim();
+        let acq = self.config.acq;
+
+        // §4.4 fantasizing: refit with pending points at their posterior
+        // means, then propose with no exclusion penalty — the collapsed
+        // uncertainty at in-flight locations provides the diversity.
+        let (model, pending_enc) = if self.config.async_mode == AsyncMode::Fantasies
+            && !pending_enc.is_empty()
+        {
+            let mut fantasized: Vec<Observation> = history.to_vec();
+            for (cfg, enc) in pending.iter().zip(&pending_enc) {
+                let (mu_raw, _) = model.predict_raw(self.backend.as_ref(), enc);
+                fantasized.push(Observation { config: cfg.clone(), value: mu_raw });
+            }
+            match self.fit_model(&fantasized) {
+                Some(m) => (m, Vec::new()),
+                None => (model, pending_enc),
+            }
+        } else {
+            (model, pending_enc)
+        };
+
+        let prop =
+            propose(&model, self.backend.as_ref(), d, &pending_enc, &acq, &mut self.rng);
+        let config = self.space.decode(&prop.x);
+        // integer/categorical rounding can collide with a pending config;
+        // fall back to a random sample to keep workers busy with new points
+        let clash = pending.iter().any(|p| *p == config)
+            || history.iter().any(|o| o.config == config);
+        if clash {
+            (self.space.sample(&mut self.rng), Some(prop))
+        } else {
+            (config, Some(prop))
+        }
+    }
+}
+
+impl Strategy for BayesianOptimization {
+    fn name(&self) -> &'static str {
+        "bayesian"
+    }
+    fn next_config(&mut self, history: &[Observation], pending: &[Config]) -> Config {
+        self.propose_detailed(history, pending).0
+    }
+}
+
+/// Build a strategy by CLI name.
+pub fn by_name(
+    name: &str,
+    space: &SearchSpace,
+    backend: Arc<dyn SurrogateBackend>,
+    seed: u64,
+) -> Option<Box<dyn Strategy>> {
+    Some(match name {
+        "random" => Box::new(RandomSearch::new(space.clone(), seed)),
+        "sobol" => Box::new(SobolSearch::new(space.clone())),
+        "grid" => Box::new(GridSearch::new(space, 4)),
+        "bayesian" | "bo" => {
+            Box::new(BayesianOptimization::new(space.clone(), backend, BoConfig::default(), seed))
+        }
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::NativeBackend;
+    use crate::space::{continuous, Scaling, Value};
+
+    fn space_2d() -> SearchSpace {
+        SearchSpace::new(vec![
+            continuous("a", 0.0, 1.0, Scaling::Linear),
+            continuous("b", 0.0, 1.0, Scaling::Linear),
+        ])
+        .unwrap()
+    }
+
+    fn quadratic(config: &Config) -> f64 {
+        let a = config.get("a").unwrap().as_f64().unwrap();
+        let b = config.get("b").unwrap().as_f64().unwrap();
+        (a - 0.3).powi(2) + (b - 0.6).powi(2)
+    }
+
+    #[test]
+    fn random_search_stays_in_space() {
+        let mut s = RandomSearch::new(space_2d(), 1);
+        for _ in 0..50 {
+            let c = s.next_config(&[], &[]);
+            assert!(space_2d().encode(&c).is_ok());
+        }
+    }
+
+    #[test]
+    fn sobol_search_covers_space() {
+        let mut s = SobolSearch::new(space_2d());
+        let configs: Vec<Config> = (0..64).map(|_| s.next_config(&[], &[])).collect();
+        let any_low = configs
+            .iter()
+            .any(|c| c.get("a").unwrap().as_f64().unwrap() < 0.25);
+        let any_high = configs
+            .iter()
+            .any(|c| c.get("a").unwrap().as_f64().unwrap() > 0.75);
+        assert!(any_low && any_high);
+    }
+
+    #[test]
+    fn grid_search_cycles() {
+        let mut s = GridSearch::new(&space_2d(), 3);
+        assert_eq!(s.len(), 9);
+        let first = s.next_config(&[], &[]);
+        for _ in 0..8 {
+            s.next_config(&[], &[]);
+        }
+        let again = s.next_config(&[], &[]);
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn bo_beats_random_on_quadratic() {
+        // small, seeded head-to-head: BO should reach a better best-so-far
+        // than random search with the same budget on a smooth function
+        let budget = 18;
+        let run = |mut strat: Box<dyn Strategy>, seed: u64| -> f64 {
+            let mut rng = Rng::new(seed);
+            let mut history: Vec<Observation> = Vec::new();
+            for _ in 0..budget {
+                let c = strat.next_config(&history, &[]);
+                let v = quadratic(&c) + 0.001 * rng.normal();
+                history.push(Observation { config: c, value: v });
+            }
+            history.iter().map(|o| o.value).fold(f64::INFINITY, f64::min)
+        };
+        let mut bo_wins = 0;
+        for seed in 0..3 {
+            let bo = run(
+                Box::new(BayesianOptimization::new(
+                    space_2d(),
+                    Arc::new(NativeBackend),
+                    BoConfig {
+                        init_random: 4,
+                        gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                        acq: AcquisitionConfig { num_anchors: 128, ..Default::default() },
+                        ..Default::default()
+                    },
+                    seed,
+                )),
+                seed,
+            );
+            let rnd = run(Box::new(RandomSearch::new(space_2d(), seed)), seed);
+            if bo <= rnd {
+                bo_wins += 1;
+            }
+        }
+        assert!(bo_wins >= 2, "BO won only {bo_wins}/3 against random");
+    }
+
+    #[test]
+    fn bo_avoids_pending_duplicates() {
+        let mut bo = BayesianOptimization::new(
+            space_2d(),
+            Arc::new(NativeBackend),
+            BoConfig {
+                init_random: 2,
+                gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                acq: AcquisitionConfig { num_anchors: 64, ..Default::default() },
+                ..Default::default()
+            },
+            7,
+        );
+        let mut history = Vec::new();
+        for i in 0..6 {
+            let c = bo.next_config(&history, &[]);
+            history.push(Observation { config: c, value: (i as f64 - 3.0).abs() });
+        }
+        let pending = vec![history[0].config.clone()];
+        let c = bo.next_config(&history, &pending);
+        assert_ne!(c, pending[0]);
+    }
+
+    #[test]
+    fn warm_start_observations_activate_model_immediately() {
+        let mut bo = BayesianOptimization::new(
+            space_2d(),
+            Arc::new(NativeBackend),
+            BoConfig {
+                init_random: 4,
+                gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                acq: AcquisitionConfig { num_anchors: 64, ..Default::default() },
+                ..Default::default()
+            },
+            11,
+        );
+        let mut parent = Vec::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let c = space_2d().sample(&mut rng);
+            let v = quadratic(&c);
+            parent.push(Observation { config: c, value: v });
+        }
+        bo.add_transferred(parent);
+        // with zero live history but 10 transferred points, the model fits
+        let (c, prop) = bo.propose_detailed(&[], &[]);
+        assert!(prop.is_some(), "warm-started BO should be model-driven");
+        assert!(space_2d().encode(&c).is_ok());
+    }
+
+    #[test]
+    fn fantasizing_avoids_pending_without_penalty() {
+        // with fantasies, the engine should not re-propose an in-flight
+        // point even though the exclusion penalty is disabled (radius ~0)
+        let mut bo = BayesianOptimization::new(
+            space_2d(),
+            Arc::new(NativeBackend),
+            BoConfig {
+                init_random: 2,
+                gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                acq: AcquisitionConfig {
+                    num_anchors: 128,
+                    exclusion_radius: 1e-12,
+                    ..Default::default()
+                },
+                async_mode: AsyncMode::Fantasies,
+                ..Default::default()
+            },
+            19,
+        );
+        let mut history = Vec::new();
+        for i in 0..6 {
+            let c = bo.next_config(&history, &[]);
+            history.push(Observation { config: c, value: quadratic_i(i) });
+        }
+        // the point the model itself would pick next becomes "pending"
+        let (next, _) = bo.propose_detailed(&history, &[]);
+        let pending = vec![next.clone()];
+        let (under_fantasy, prop) = bo.propose_detailed(&history, &pending);
+        assert!(prop.is_some());
+        let d: f64 = space_2d()
+            .encode(&under_fantasy)
+            .unwrap()
+            .iter()
+            .zip(space_2d().encode(&next).unwrap().iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(d > 1e-3, "fantasy proposal duplicated the pending point (d={d})");
+    }
+
+    fn quadratic_i(i: usize) -> f64 {
+        (i as f64 * 0.13 - 0.3).powi(2)
+    }
+
+    #[test]
+    fn by_name_builds_all() {
+        let space = space_2d();
+        for n in ["random", "sobol", "grid", "bayesian"] {
+            assert!(by_name(n, &space, Arc::new(NativeBackend), 1).is_some());
+        }
+        assert!(by_name("nope", &space, Arc::new(NativeBackend), 1).is_none());
+    }
+
+    #[test]
+    fn bo_integer_categorical_space_works() {
+        use crate::space::{categorical, integer};
+        let space = SearchSpace::new(vec![
+            integer("n", 1, 20, Scaling::Linear),
+            categorical("kind", &["x", "y"]),
+        ])
+        .unwrap();
+        let mut bo = BayesianOptimization::new(
+            space.clone(),
+            Arc::new(NativeBackend),
+            BoConfig {
+                init_random: 3,
+                gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                acq: AcquisitionConfig { num_anchors: 32, ..Default::default() },
+                ..Default::default()
+            },
+            3,
+        );
+        let mut history = Vec::new();
+        for i in 0..8 {
+            let c = bo.next_config(&history, &[]);
+            assert!(space.encode(&c).is_ok());
+            let n = c.get("n").unwrap().as_f64().unwrap();
+            history.push(Observation { config: c, value: (n - 7.0).abs() + i as f64 * 0.01 });
+        }
+        // model-driven proposals must still produce valid Int/Cat values
+        let c = bo.next_config(&history, &[]);
+        assert!(matches!(c.get("n"), Some(Value::Int(_))));
+    }
+}

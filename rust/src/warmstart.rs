@@ -1,0 +1,248 @@
+//! Warm starting from previous tuning jobs (§5.3).
+//!
+//! AMT's design point, reproduced here: a *light-weight* transfer purely
+//! based on past hyperparameter evaluations — no dataset meta-features.
+//! Parent-job observations are remapped into the child job's search space
+//! and injected into the BO history, so the surrogate is informed from
+//! evaluation one ("the new tuning job quickly detects good hyperparameter
+//! configurations thanks to the knowledge from the parent job").
+//!
+//! Remapping handles the edge cases §6.2 reports from production:
+//! a parent value that is invalid under the child's scaling (e.g. 0.0
+//! explored under linear scaling, then log scaling enabled in the child) is
+//! clamped into the child range; parameters added in the child are filled
+//! with range midpoints; parameters dropped from the child are ignored.
+
+use crate::space::SearchSpace;
+use crate::strategies::Observation;
+
+/// A parent tuning job's transferable state.
+#[derive(Clone, Debug)]
+pub struct ParentJob {
+    /// Parent job identifier (for provenance in logs).
+    pub name: String,
+    /// The parent's search space (may differ from the child's).
+    pub space: SearchSpace,
+    /// Finished evaluations, values already in the child's minimization
+    /// orientation.
+    pub observations: Vec<Observation>,
+}
+
+/// Transfer policy options.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferOptions {
+    /// Cap on transferred observations per parent (most recent kept). The
+    /// paper notes users chain jobs with ~500 evaluations each to sidestep
+    /// the cubic GP cost; the cap keeps the child's fit tractable.
+    pub max_per_parent: usize,
+    /// Drop parent observations whose configuration cannot be expressed in
+    /// the child space at all (instead of clamping).
+    pub strict: bool,
+}
+
+impl Default for TransferOptions {
+    fn default() -> Self {
+        TransferOptions { max_per_parent: 256, strict: false }
+    }
+}
+
+/// Remap parent observations into the child space.
+///
+/// Returns the observations ready for
+/// [`crate::strategies::BayesianOptimization::add_transferred`].
+pub fn transfer(
+    parents: &[ParentJob],
+    child_space: &SearchSpace,
+    options: &TransferOptions,
+) -> Vec<Observation> {
+    let mut out = Vec::new();
+    for parent in parents {
+        let tail_start = parent.observations.len().saturating_sub(options.max_per_parent);
+        for obs in &parent.observations[tail_start..] {
+            if !obs.value.is_finite() {
+                continue; // failed parent evaluations carry no signal
+            }
+            // already valid in the child space?
+            if child_space.encode(&obs.config).is_ok() {
+                out.push(Observation { config: obs.config.clone(), value: obs.value });
+                continue;
+            }
+            if options.strict {
+                continue;
+            }
+            // clamp into the child space (the §6.2 log-scaling edge case)
+            let clamped = child_space.clamp(&obs.config);
+            if child_space.encode(&clamped).is_ok() {
+                out.push(Observation { config: clamped, value: obs.value });
+            }
+        }
+    }
+    out
+}
+
+/// Identical-data transfer mode (paper's "same algorithm and dataset"
+/// use case): all parents share the metric scale, so raw values transfer.
+/// For transfer across *transformed* datasets ("augmented dataset" case)
+/// the metric may shift; [`rank_normalize`] maps each parent's values onto
+/// their within-parent standard scores, preserving ordering information
+/// while discarding the task-specific offset — the light-weight analogue of
+/// quantile-based HP transfer the paper cites.
+pub fn rank_normalize(parents: &mut [ParentJob]) {
+    for parent in parents {
+        let n = parent.observations.len();
+        if n < 2 {
+            continue;
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            parent.observations[a]
+                .value
+                .partial_cmp(&parent.observations[b].value)
+                .unwrap()
+        });
+        // map to normal-ish scores in (-2, 2): 4 * (rank/(n-1) - 0.5)
+        let mut scores = vec![0.0; n];
+        for (rank, &i) in idx.iter().enumerate() {
+            scores[i] = 4.0 * (rank as f64 / (n as f64 - 1.0) - 0.5);
+        }
+        for (obs, s) in parent.observations.iter_mut().zip(scores) {
+            obs.value = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{continuous, Config, Scaling, Value};
+
+    fn obs(pairs: &[(&str, f64)], value: f64) -> Observation {
+        let config: Config = pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), Value::Float(*v)))
+            .collect();
+        Observation { config, value }
+    }
+
+    fn linear_space() -> SearchSpace {
+        SearchSpace::new(vec![continuous("wd", 0.0, 1.0, Scaling::Linear)]).unwrap()
+    }
+
+    fn log_space() -> SearchSpace {
+        SearchSpace::new(vec![continuous("wd", 1e-6, 1.0, Scaling::Logarithmic)]).unwrap()
+    }
+
+    #[test]
+    fn compatible_observations_pass_through() {
+        let parent = ParentJob {
+            name: "p".into(),
+            space: linear_space(),
+            observations: vec![obs(&[("wd", 0.5)], 1.0), obs(&[("wd", 0.9)], 2.0)],
+        };
+        let t = transfer(&[parent], &linear_space(), &TransferOptions::default());
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].value, 1.0);
+    }
+
+    #[test]
+    fn log_scaling_zero_edge_case_is_clamped() {
+        // §6.2: parent explored wd = 0.0 under linear scaling; child
+        // switches to log scaling where 0 is invalid.
+        let parent = ParentJob {
+            name: "p".into(),
+            space: linear_space(),
+            observations: vec![obs(&[("wd", 0.0)], 0.7)],
+        };
+        let t = transfer(&[parent], &log_space(), &TransferOptions::default());
+        assert_eq!(t.len(), 1);
+        let v = t[0].config.get("wd").unwrap().as_f64().unwrap();
+        assert!(v >= 1e-6, "must be clamped to child minimum, got {v}");
+        assert!(log_space().encode(&t[0].config).is_ok());
+    }
+
+    #[test]
+    fn strict_mode_drops_incompatible() {
+        let parent = ParentJob {
+            name: "p".into(),
+            space: linear_space(),
+            observations: vec![obs(&[("wd", 0.0)], 0.7), obs(&[("wd", 0.5)], 0.3)],
+        };
+        let t = transfer(
+            &[parent],
+            &log_space(),
+            &TransferOptions { strict: true, ..Default::default() },
+        );
+        assert_eq!(t.len(), 1); // only the valid one survives
+    }
+
+    #[test]
+    fn added_and_removed_parameters_are_handled() {
+        // child adds "lr" and keeps "wd"
+        let child = SearchSpace::new(vec![
+            continuous("wd", 0.0, 1.0, Scaling::Linear),
+            continuous("lr", 1e-4, 1.0, Scaling::Logarithmic),
+        ])
+        .unwrap();
+        let parent = ParentJob {
+            name: "p".into(),
+            space: linear_space(),
+            observations: vec![obs(&[("wd", 0.25)], 0.1)],
+        };
+        let t = transfer(&[parent], &child, &TransferOptions::default());
+        assert_eq!(t.len(), 1);
+        assert!(child.encode(&t[0].config).is_ok());
+        // removed parameter: child only has wd, parent had wd + extra
+        let parent2 = ParentJob {
+            name: "p2".into(),
+            space: child.clone(),
+            observations: vec![obs(&[("wd", 0.25), ("lr", 0.01)], 0.1)],
+        };
+        let t2 = transfer(&[parent2], &linear_space(), &TransferOptions::default());
+        assert_eq!(t2.len(), 1);
+        assert!(linear_space().encode(&t2[0].config).is_ok());
+    }
+
+    #[test]
+    fn non_finite_values_are_dropped() {
+        let parent = ParentJob {
+            name: "p".into(),
+            space: linear_space(),
+            observations: vec![obs(&[("wd", 0.4)], f64::NAN), obs(&[("wd", 0.6)], 1.0)],
+        };
+        let t = transfer(&[parent], &linear_space(), &TransferOptions::default());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn max_per_parent_keeps_most_recent() {
+        let observations: Vec<Observation> =
+            (0..10).map(|i| obs(&[("wd", i as f64 / 10.0)], i as f64)).collect();
+        let parent = ParentJob { name: "p".into(), space: linear_space(), observations };
+        let t = transfer(
+            &[parent],
+            &linear_space(),
+            &TransferOptions { max_per_parent: 3, ..Default::default() },
+        );
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].value, 7.0); // tail kept
+    }
+
+    #[test]
+    fn rank_normalize_preserves_order_and_centers() {
+        let mut parents = vec![ParentJob {
+            name: "p".into(),
+            space: linear_space(),
+            observations: vec![
+                obs(&[("wd", 0.1)], 100.0),
+                obs(&[("wd", 0.2)], -5.0),
+                obs(&[("wd", 0.3)], 40.0),
+            ],
+        }];
+        rank_normalize(&mut parents);
+        let vals: Vec<f64> =
+            parents[0].observations.iter().map(|o| o.value).collect();
+        // order preserved: obs1 (100) worst, obs2 (−5) best
+        assert!(vals[1] < vals[2] && vals[2] < vals[0]);
+        assert!((vals.iter().sum::<f64>()).abs() < 1e-9); // centered
+    }
+}

@@ -1,0 +1,329 @@
+//! Workflow engine (§3.2): the Step-Functions/Lambda stand-in.
+//!
+//! "AWS Cloudwatch Events, AWS Step Functions and AWS Lambda are used in
+//! the AMT workflows engine, which is responsible for kicking off the
+//! evaluation of hyperparameter configurations ..., starting training jobs,
+//! tracking their progress and repeating the process until the stopping
+//! criterion is met." This module provides that engine: a named-state
+//! machine with per-state **retry policies with exponential backoff**
+//! (§3.3's "built-in retry mechanism to guarantee robustness") executing on
+//! the virtual clock, recording a full execution history for the
+//! Describe API.
+
+/// Outcome returned by a state handler.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Transition {
+    /// Move to the named state.
+    Next(String),
+    /// Sleep `seconds` of virtual time, then move to the named state.
+    Wait { seconds: f64, then: String },
+    /// Terminal success.
+    Succeed,
+    /// Terminal failure (unretryable).
+    Fail(String),
+    /// Transient error: retry this state per its policy.
+    Retryable(String),
+}
+
+/// Retry policy for a state (Step Functions' `Retry` block).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// First backoff interval (virtual seconds).
+    pub interval_seconds: f64,
+    /// Backoff multiplier per retry.
+    pub backoff_rate: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, interval_seconds: 5.0, backoff_rate: 2.0 }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries at all.
+    pub fn none() -> Self {
+        RetryPolicy { max_attempts: 1, interval_seconds: 0.0, backoff_rate: 1.0 }
+    }
+}
+
+/// One state of the machine.
+pub struct State<C> {
+    /// Unique state name.
+    pub name: String,
+    /// Handler invoked on entry; receives the shared context.
+    pub handler: Box<dyn FnMut(&mut C, f64) -> Transition + Send>,
+    /// Retry policy applied to `Transition::Retryable`.
+    pub retry: RetryPolicy,
+}
+
+/// A recorded step of an execution (Describe API material).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepRecord {
+    /// State name.
+    pub state: String,
+    /// 1-based attempt number.
+    pub attempt: u32,
+    /// Virtual time the attempt started.
+    pub time: f64,
+    /// Stringified outcome.
+    pub outcome: String,
+}
+
+/// Terminal result of an execution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecutionStatus {
+    /// Reached `Succeed`.
+    Succeeded,
+    /// Reached `Fail` or exhausted retries.
+    Failed(String),
+}
+
+/// Full execution report.
+#[derive(Clone, Debug)]
+pub struct Execution {
+    /// Terminal status.
+    pub status: ExecutionStatus,
+    /// Ordered step history.
+    pub steps: Vec<StepRecord>,
+    /// Virtual time at completion.
+    pub finished_at: f64,
+}
+
+impl Execution {
+    /// Total retries performed across all states (steps that were re-attempts).
+    pub fn total_retries(&self) -> u32 {
+        self.steps.iter().filter(|s| s.attempt > 1).count() as u32
+    }
+}
+
+/// A named-state workflow.
+pub struct StateMachine<C> {
+    states: Vec<State<C>>,
+    start: String,
+    /// Safety valve against runaway loops.
+    pub max_transitions: usize,
+}
+
+impl<C> StateMachine<C> {
+    /// Build a machine starting at `start`.
+    pub fn new(start: &str) -> Self {
+        StateMachine { states: Vec::new(), start: start.to_string(), max_transitions: 100_000 }
+    }
+
+    /// Register a state.
+    pub fn state<F>(mut self, name: &str, retry: RetryPolicy, handler: F) -> Self
+    where
+        F: FnMut(&mut C, f64) -> Transition + Send + 'static,
+    {
+        self.states.push(State { name: name.to_string(), handler: Box::new(handler), retry });
+        self
+    }
+
+    fn index_of(&self, name: &str) -> Option<usize> {
+        self.states.iter().position(|s| s.name == name)
+    }
+
+    /// Run to a terminal state, advancing `clock` through waits/backoffs.
+    pub fn execute(&mut self, ctx: &mut C, clock: &mut f64) -> Execution {
+        let mut steps = Vec::new();
+        let mut current = match self.index_of(&self.start.clone()) {
+            Some(i) => i,
+            None => {
+                return Execution {
+                    status: ExecutionStatus::Failed(format!(
+                        "start state '{}' not found",
+                        self.start
+                    )),
+                    steps,
+                    finished_at: *clock,
+                }
+            }
+        };
+        let mut attempt = 1u32;
+        for _ in 0..self.max_transitions {
+            let name = self.states[current].name.clone();
+            let retry = self.states[current].retry;
+            let tr = (self.states[current].handler)(ctx, *clock);
+            steps.push(StepRecord {
+                state: name.clone(),
+                attempt,
+                time: *clock,
+                outcome: format!("{tr:?}"),
+            });
+            match tr {
+                Transition::Succeed => {
+                    return Execution {
+                        status: ExecutionStatus::Succeeded,
+                        steps,
+                        finished_at: *clock,
+                    }
+                }
+                Transition::Fail(e) => {
+                    return Execution {
+                        status: ExecutionStatus::Failed(e),
+                        steps,
+                        finished_at: *clock,
+                    }
+                }
+                Transition::Next(next) => {
+                    attempt = 1;
+                    match self.index_of(&next) {
+                        Some(i) => current = i,
+                        None => {
+                            return Execution {
+                                status: ExecutionStatus::Failed(format!(
+                                    "unknown state '{next}'"
+                                )),
+                                steps,
+                                finished_at: *clock,
+                            }
+                        }
+                    }
+                }
+                Transition::Wait { seconds, then } => {
+                    *clock += seconds.max(0.0);
+                    attempt = 1;
+                    match self.index_of(&then) {
+                        Some(i) => current = i,
+                        None => {
+                            return Execution {
+                                status: ExecutionStatus::Failed(format!(
+                                    "unknown state '{then}'"
+                                )),
+                                steps,
+                                finished_at: *clock,
+                            }
+                        }
+                    }
+                }
+                Transition::Retryable(err) => {
+                    if attempt >= retry.max_attempts {
+                        return Execution {
+                            status: ExecutionStatus::Failed(format!(
+                                "state '{name}' exhausted {} attempts: {err}",
+                                retry.max_attempts
+                            )),
+                            steps,
+                            finished_at: *clock,
+                        };
+                    }
+                    *clock += retry.interval_seconds
+                        * retry.backoff_rate.powi(attempt as i32 - 1);
+                    attempt += 1;
+                }
+            }
+        }
+        Execution {
+            status: ExecutionStatus::Failed("transition budget exhausted".into()),
+            steps,
+            finished_at: *clock,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_flow_succeeds() {
+        let mut m: StateMachine<Vec<&'static str>> = StateMachine::new("a")
+            .state("a", RetryPolicy::none(), |ctx: &mut Vec<&'static str>, _| {
+                ctx.push("a");
+                Transition::Next("b".into())
+            })
+            .state("b", RetryPolicy::none(), |ctx: &mut Vec<&'static str>, _| {
+                ctx.push("b");
+                Transition::Succeed
+            });
+        let mut trace = Vec::new();
+        let mut clock = 0.0;
+        let ex = m.execute(&mut trace, &mut clock);
+        assert_eq!(ex.status, ExecutionStatus::Succeeded);
+        assert_eq!(trace, vec!["a", "b"]);
+        assert_eq!(ex.steps.len(), 2);
+    }
+
+    #[test]
+    fn retries_with_exponential_backoff() {
+        struct Ctx {
+            failures_left: u32,
+        }
+        let mut m: StateMachine<Ctx> = StateMachine::new("flaky").state(
+            "flaky",
+            RetryPolicy { max_attempts: 4, interval_seconds: 10.0, backoff_rate: 2.0 },
+            |ctx: &mut Ctx, _| {
+                if ctx.failures_left > 0 {
+                    ctx.failures_left -= 1;
+                    Transition::Retryable("boom".into())
+                } else {
+                    Transition::Succeed
+                }
+            },
+        );
+        let mut ctx = Ctx { failures_left: 3 };
+        let mut clock = 0.0f64;
+        let ex = m.execute(&mut ctx, &mut clock);
+        assert_eq!(ex.status, ExecutionStatus::Succeeded);
+        // backoff: 10 + 20 + 40
+        assert!((clock - 70.0).abs() < 1e-9, "clock = {clock}");
+        assert_eq!(ex.steps.len(), 4);
+        assert_eq!(ex.total_retries(), 3);
+    }
+
+    #[test]
+    fn exhausted_retries_fail() {
+        let mut m: StateMachine<()> = StateMachine::new("s").state(
+            "s",
+            RetryPolicy { max_attempts: 2, interval_seconds: 1.0, backoff_rate: 1.0 },
+            |_, _| Transition::Retryable("always".into()),
+        );
+        let mut clock = 0.0;
+        let ex = m.execute(&mut (), &mut clock);
+        assert!(matches!(ex.status, ExecutionStatus::Failed(ref e) if e.contains("exhausted")));
+    }
+
+    #[test]
+    fn wait_advances_clock() {
+        let mut m: StateMachine<()> = StateMachine::new("a")
+            .state("a", RetryPolicy::none(), |_, _| {
+                Transition::Wait { seconds: 30.0, then: "b".into() }
+            })
+            .state("b", RetryPolicy::none(), |_, t| {
+                assert!(t >= 30.0);
+                Transition::Succeed
+            });
+        let mut clock = 0.0;
+        let ex = m.execute(&mut (), &mut clock);
+        assert_eq!(ex.status, ExecutionStatus::Succeeded);
+        assert_eq!(clock, 30.0);
+    }
+
+    #[test]
+    fn unknown_state_fails_cleanly() {
+        let mut m: StateMachine<()> = StateMachine::new("a").state(
+            "a",
+            RetryPolicy::none(),
+            |_, _| Transition::Next("ghost".into()),
+        );
+        let mut clock = 0.0;
+        let ex = m.execute(&mut (), &mut clock);
+        assert!(matches!(ex.status, ExecutionStatus::Failed(ref e) if e.contains("ghost")));
+    }
+
+    #[test]
+    fn runaway_loops_bounded() {
+        let mut m: StateMachine<()> =
+            StateMachine::new("a").state("a", RetryPolicy::none(), |_, _| {
+                Transition::Next("a".into())
+            });
+        m.max_transitions = 100;
+        let mut clock = 0.0;
+        let ex = m.execute(&mut (), &mut clock);
+        assert!(matches!(ex.status, ExecutionStatus::Failed(ref e) if e.contains("budget")));
+        assert_eq!(ex.steps.len(), 100);
+    }
+}

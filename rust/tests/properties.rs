@@ -1,0 +1,341 @@
+//! Property-based tests over the core invariants (DESIGN.md §7).
+//!
+//! The offline crate set has no proptest, so these are seeded randomized
+//! properties driven by the crate's own deterministic RNG: hundreds of
+//! random cases per invariant, fully reproducible, with the failing case's
+//! seed printed on assertion failure.
+
+use amt::earlystop::{CurveHistory, MedianRule, StoppingPolicy};
+use amt::gp::{expected_improvement, kernel, NativeBackend, SurrogateBackend, Theta};
+use amt::linalg::{cho_solve, cholesky, Matrix};
+use amt::rng::Rng;
+use amt::sobol::Sobol;
+use amt::space::{
+    categorical, continuous, integer, Config, Scaling, SearchSpace, Value,
+};
+use amt::store::MetadataStore;
+
+fn random_space(rng: &mut Rng) -> SearchSpace {
+    let n_params = 1 + rng.below(4);
+    let mut params = Vec::new();
+    for i in 0..n_params {
+        match rng.below(3) {
+            0 => {
+                let min = rng.uniform_range(-10.0, 10.0);
+                let max = min + rng.uniform_range(0.5, 20.0);
+                let scaling = if min > 0.0 && rng.uniform() < 0.5 {
+                    Scaling::Logarithmic
+                } else {
+                    Scaling::Linear
+                };
+                params.push(continuous(&format!("c{i}"), min, max, scaling));
+            }
+            1 => {
+                let min = rng.int_range(-50, 50);
+                let max = min + 1 + rng.below(100) as i64;
+                params.push(integer(&format!("i{i}"), min, max, Scaling::Linear));
+            }
+            _ => {
+                let k = 2 + rng.below(4);
+                let cats: Vec<String> = (0..k).map(|j| format!("v{j}")).collect();
+                let refs: Vec<&str> = cats.iter().map(String::as_str).collect();
+                params.push(categorical(&format!("k{i}"), &refs));
+            }
+        }
+    }
+    SearchSpace::new(params).unwrap()
+}
+
+#[test]
+fn prop_encode_decode_roundtrip() {
+    // decode(encode(x)) == x for integer/categorical, ≈ for continuous
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(seed);
+        let space = random_space(&mut rng);
+        let config = space.sample(&mut rng);
+        let enc = space.encode(&config).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(enc.len(), space.encoded_dim(), "seed {seed}");
+        for v in &enc {
+            assert!((-1e-9..=1.0 + 1e-9).contains(v), "seed {seed}: encode out of cube");
+        }
+        let dec = space.decode(&enc);
+        for p in &space.parameters {
+            let a = config.get(p.name()).unwrap();
+            let b = dec.get(p.name()).unwrap();
+            match (a, b) {
+                (Value::Int(x), Value::Int(y)) => assert_eq!(x, y, "seed {seed}"),
+                (Value::Cat(x), Value::Cat(y)) => assert_eq!(x, y, "seed {seed}"),
+                (Value::Float(x), Value::Float(y)) => {
+                    assert!((x - y).abs() <= 1e-6 * (1.0 + x.abs()), "seed {seed}: {x} vs {y}")
+                }
+                _ => panic!("seed {seed}: type flip"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_decode_total_on_arbitrary_unit_points() {
+    // any point of [0,1]^D decodes to a valid, encodable configuration
+    for seed in 200..300u64 {
+        let mut rng = Rng::new(seed);
+        let space = random_space(&mut rng);
+        let u: Vec<f64> = (0..space.encoded_dim()).map(|_| rng.uniform()).collect();
+        let config = space.decode(&u);
+        assert!(space.encode(&config).is_ok(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_sobol_in_bounds_and_distinct() {
+    for seed in 0..20u64 {
+        let dim = 1 + (seed as usize % amt::sobol::MAX_DIM);
+        let mut sobol = Sobol::new(dim);
+        let pts = sobol.take_points(128);
+        for p in &pts {
+            for &c in p {
+                assert!((0.0..1.0).contains(&c), "dim {dim}");
+            }
+        }
+        // successive points differ
+        for w in pts.windows(2) {
+            assert_ne!(w[0], w[1], "dim {dim}");
+        }
+    }
+}
+
+#[test]
+fn prop_gram_is_psd_and_symmetric() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.below(40);
+        let d = 1 + rng.below(8);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        let mut theta = Theta::default_for_dim(d);
+        for j in 0..d {
+            theta.log_ls[j] = rng.uniform_range(-2.0, 1.0);
+            theta.log_wa[j] = rng.uniform_range(-1.0, 1.0);
+            theta.log_wb[j] = rng.uniform_range(-1.0, 1.0);
+        }
+        let k = kernel::gram(&x, &theta);
+        for i in 0..n {
+            for j in 0..n {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12, "seed {seed}");
+            }
+        }
+        assert!(cholesky(&k).is_ok(), "seed {seed}: gram not PD");
+    }
+}
+
+#[test]
+fn prop_cholesky_solve_residual_small() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xC0);
+        let n = 1 + rng.below(30);
+        let mut a = Matrix::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut spd = a.matmul(&a.transpose());
+        for i in 0..n {
+            spd[(i, i)] += n as f64;
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let l = cholesky(&spd).unwrap();
+        let x = cho_solve(&l, &b);
+        let r = spd.matvec(&x);
+        for (u, v) in r.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-7, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_ei_nonnegative_and_monotone_in_sigma() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed ^ 0xE1);
+        let mu = rng.uniform_range(-3.0, 3.0);
+        let y_best = rng.uniform_range(-3.0, 3.0);
+        let v1 = rng.uniform_range(1e-6, 2.0);
+        let v2 = v1 * rng.uniform_range(1.1, 4.0);
+        let e1 = expected_improvement(mu, v1, y_best);
+        let e2 = expected_improvement(mu, v2, y_best);
+        assert!(e1 >= 0.0 && e2 >= 0.0, "seed {seed}");
+        // more uncertainty ⇒ no less expected improvement (fixed mu)
+        assert!(e2 >= e1 - 1e-12, "seed {seed}: {e2} < {e1}");
+        // EI at least the certain improvement
+        assert!(e1 >= (y_best - mu).max(0.0) - 1e-9, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_posterior_var_nonnegative_and_interpolation() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0xF2);
+        let n = 3 + rng.below(20);
+        let d = 1 + rng.below(4);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let model =
+            amt::gp::GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(d)])
+                .unwrap();
+        let scores = model.score(&NativeBackend, &x);
+        for (i, s) in scores.iter().enumerate() {
+            assert!(s.var >= 0.0, "seed {seed}");
+            // training points have small posterior variance
+            assert!(s.var < 0.2, "seed {seed} point {i}: var {}", s.var);
+        }
+    }
+}
+
+#[test]
+fn prop_median_rule_monotone_in_value() {
+    // if the rule stops a curve, it stops every strictly worse curve
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed ^ 0xAB);
+        let mut h = CurveHistory::default();
+        for _ in 0..4 {
+            let c: Vec<f64> = (0..10).map(|_| rng.uniform()).collect();
+            h.push(c, true);
+        }
+        let rule = MedianRule::default();
+        let epoch = 3 + rng.below(7) as u32;
+        let base: Vec<f64> = (0..epoch as usize).map(|_| rng.uniform()).collect();
+        let worse: Vec<f64> = base.iter().map(|v| v + 0.5).collect();
+        if rule.should_stop(&base, epoch, &h) {
+            assert!(rule.should_stop(&worse, epoch, &h), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_store_versions_strictly_increase() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x57);
+        let store = MetadataStore::new();
+        let mut last = 0;
+        for i in 0..50 {
+            let v = store.put("t", "k", amt::json::Json::Num(i as f64));
+            assert_eq!(v, last + 1, "seed {seed}");
+            last = v;
+            // interleaved conditional writes with a stale version must fail
+            if rng.uniform() < 0.3 && last > 1 {
+                assert!(store
+                    .put_if("t", "k", amt::json::Json::Null, Some(last - 1))
+                    .is_err());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_parallelism_never_exceeded() {
+    // from the evaluation records of real tuning runs: at no virtual time
+    // do more than L evaluations overlap
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    for seed in 0..6u64 {
+        let parallel = 1 + (seed % 4) as usize;
+        let request = amt::config::TuningJobRequest {
+            name: format!("prop-par-{seed}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 12,
+            max_parallel_jobs: parallel as u32,
+            seed,
+            ..Default::default()
+        };
+        let obj: Arc<dyn amt::objectives::Objective> =
+            amt::objectives::by_name("branin").unwrap().into();
+        let strat = amt::strategies::by_name(
+            "random",
+            &obj.space(),
+            Arc::new(NativeBackend),
+            seed,
+        )
+        .unwrap();
+        let out = amt::coordinator::TuningJobRunner::new(
+            request,
+            obj,
+            strat,
+            amt::coordinator::stopping_by_name("off").unwrap(),
+            amt::platform::TrainingPlatform::new(
+                amt::platform::PlatformConfig::default(),
+                seed,
+            ),
+            Arc::new(MetadataStore::new()),
+            Arc::new(amt::metrics::MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+        .run();
+        // sweep all interval endpoints
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for e in &out.evaluations {
+            events.push((e.submitted_at, 1));
+            events.push((e.ended_at, -1));
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut live = 0;
+        for (_, delta) in events {
+            live += delta;
+            assert!(
+                live <= parallel as i32,
+                "seed {seed}: {live} concurrent evaluations > L={parallel}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_warmstart_transfer_always_encodable() {
+    use amt::strategies::Observation;
+    use amt::warmstart::{transfer, ParentJob, TransferOptions};
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0x77);
+        let parent_space = random_space(&mut rng);
+        let child_space = random_space(&mut rng);
+        let observations: Vec<Observation> = (0..10)
+            .map(|_| Observation {
+                config: parent_space.sample(&mut rng),
+                value: rng.normal(),
+            })
+            .collect();
+        let parent = ParentJob { name: "p".into(), space: parent_space, observations };
+        let transferred = transfer(&[parent], &child_space, &TransferOptions::default());
+        for obs in &transferred {
+            assert!(
+                child_space.encode(&obs.config).is_ok(),
+                "seed {seed}: transferred config not encodable in child space"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_configs() {
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed ^ 0x11);
+        let space = random_space(&mut rng);
+        let config = space.sample(&mut rng);
+        let j = amt::space::config_to_json(&config);
+        let text = j.to_string();
+        let parsed = amt::json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let back: Config = amt::space::config_from_json(&parsed).unwrap();
+        // numeric equality after the clamp-coercion step
+        let coerced = space.clamp(&back);
+        for p in &space.parameters {
+            let a = config.get(p.name()).unwrap();
+            let b = coerced.get(p.name()).unwrap();
+            match (a, b) {
+                (Value::Float(x), Value::Float(y)) => {
+                    assert!((x - y).abs() < 1e-9, "seed {seed}")
+                }
+                (Value::Int(x), Value::Int(y)) => assert_eq!(x, y, "seed {seed}"),
+                (Value::Cat(x), Value::Cat(y)) => assert_eq!(x, y, "seed {seed}"),
+                _ => panic!("seed {seed}: type flip"),
+            }
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Whole-service integration tests: API → workflow → platform → store →
+//! metrics, across strategies, early stopping, warm start and failure
+//! injection — the §3 architecture exercised end to end (native backend;
+//! the artifact path is covered by `hlo_integration.rs`).
+
+use std::sync::Arc;
+
+use amt::api::{AmtService, ApiError};
+use amt::config::TuningJobRequest;
+use amt::platform::PlatformConfig;
+
+fn request(name: &str) -> TuningJobRequest {
+    TuningJobRequest {
+        name: name.into(),
+        objective: "branin".into(),
+        strategy: "random".into(),
+        max_training_jobs: 6,
+        max_parallel_jobs: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_strategies_complete_through_the_service() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    for strategy in ["random", "sobol", "grid", "bayesian"] {
+        let mut r = request(&format!("strat-{strategy}"));
+        r.strategy = strategy.into();
+        r.max_training_jobs = 5;
+        let name = svc.create_tuning_job(r).unwrap();
+        let out = svc.wait(&name).unwrap();
+        assert_eq!(out.evaluations.len(), 5, "{strategy}");
+        assert!(out.best.is_some(), "{strategy}");
+    }
+}
+
+#[test]
+fn all_stopping_policies_complete() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    for early in ["off", "median", "linear", "asha"] {
+        let mut r = request(&format!("es-{early}"));
+        r.objective = "gdelt_single".into();
+        r.early_stopping = early.into();
+        r.max_training_jobs = 10;
+        let name = svc.create_tuning_job(r).unwrap();
+        let out = svc.wait(&name).unwrap();
+        assert_eq!(out.evaluations.len(), 10, "{early}");
+    }
+}
+
+#[test]
+fn failure_storm_is_absorbed() {
+    // §3.3: the workflow must stay robust under heavy failure injection
+    let svc = AmtService::new(PlatformConfig {
+        provisioning_failure_rate: 0.25,
+        training_failure_rate: 0.20,
+        ..Default::default()
+    });
+    let mut r = request("storm");
+    r.max_training_jobs = 20;
+    r.max_retries_per_job = 3;
+    let name = svc.create_tuning_job(r).unwrap();
+    let out = svc.wait(&name).unwrap();
+    assert_eq!(out.evaluations.len(), 20);
+    assert!(out.retries > 0);
+    let completed = out
+        .evaluations
+        .iter()
+        .filter(|e| e.status == amt::platform::TrainingJobStatus::Completed)
+        .count();
+    assert!(completed >= 12, "only {completed}/20 survived the storm");
+    // best is still found despite failures
+    assert!(out.best.is_some());
+}
+
+#[test]
+fn chained_warm_start_improves_over_generations() {
+    // three generations on the same maximization workload; each warm starts
+    // from all previous ones (the §6.4 pattern)
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let mut parents: Vec<String> = Vec::new();
+    let mut bests = Vec::new();
+    for generation in 0..3 {
+        let r = TuningJobRequest {
+            name: format!("gen-{generation}"),
+            objective: "caltech_base".into(),
+            strategy: "bayesian".into(),
+            max_training_jobs: 8,
+            max_parallel_jobs: 1,
+            warm_start_parents: parents.clone(),
+            seed: generation as u64,
+            ..Default::default()
+        };
+        let name = svc.create_tuning_job(r).unwrap();
+        let out = svc.wait(&name).unwrap();
+        bests.push(out.best.map(|b| b.1).unwrap_or(0.0));
+        parents.push(name);
+    }
+    // maximization: later generations should not regress materially
+    assert!(
+        bests[2] >= bests[0] - 0.02,
+        "warm start regressed: {bests:?}"
+    );
+}
+
+#[test]
+fn store_state_consistent_with_outcomes() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let name = svc.create_tuning_job(request("consistent")).unwrap();
+    let out = svc.wait(&name).unwrap();
+    let store = svc.store();
+    // every evaluation has a persisted record with terminal status
+    for e in &out.evaluations {
+        let (_, rec) = store
+            .get("training_jobs", &e.training_job_name)
+            .unwrap_or_else(|| panic!("missing record for {}", e.training_job_name));
+        let status = rec.get("status").and_then(amt::json::Json::as_str).unwrap();
+        assert!(["Completed", "Stopped", "Failed"].contains(&status), "{status}");
+    }
+    // snapshot → restore → same records
+    let snapshot = store.snapshot();
+    let restored = amt::store::MetadataStore::restore(&snapshot).unwrap();
+    assert_eq!(
+        restored.list_keys("training_jobs", "consistent-"),
+        store.list_keys("training_jobs", "consistent-")
+    );
+}
+
+#[test]
+fn describe_is_callable_while_running() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let mut r = request("live");
+    r.max_training_jobs = 50;
+    let name = svc.create_tuning_job(r).unwrap();
+    // poll Describe concurrently with the workflow thread
+    for _ in 0..20 {
+        let d = svc.describe_tuning_job(&name).unwrap();
+        assert!(["InProgress", "Completed"].contains(&d.status.as_str()));
+    }
+    svc.stop_tuning_job(&name).unwrap();
+    svc.wait(&name).unwrap();
+}
+
+#[test]
+fn metrics_streams_cover_all_epochs() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let name = svc.create_tuning_job(request("metrics")).unwrap();
+    let out = svc.wait(&name).unwrap();
+    let metrics = svc.metrics();
+    for e in &out.evaluations {
+        let series = metrics.series(&format!("{}/objective", e.training_job_name));
+        assert_eq!(series.len(), e.curve.len(), "{}", e.training_job_name);
+        // values match the recorded curve in order
+        for (p, v) in series.iter().zip(&e.curve) {
+            assert_eq!(p.value, *v);
+        }
+    }
+}
+
+#[test]
+fn distributed_instance_count_shortens_jobs() {
+    let run = |instances: u32| {
+        let svc = AmtService::new(PlatformConfig::noiseless());
+        let mut r = request(&format!("dist-{instances}"));
+        r.objective = "gdelt_distributed".into();
+        r.instance_count = instances;
+        r.max_training_jobs = 4;
+        r.max_parallel_jobs = 1;
+        let name = svc.create_tuning_job(r).unwrap();
+        svc.wait(&name).unwrap().total_seconds
+    };
+    assert!(run(8) < run(1) * 0.6);
+}
+
+#[test]
+fn stopped_parent_is_still_a_valid_warm_start_source() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let mut r = request("stopped-parent");
+    r.max_training_jobs = 400;
+    let name = svc.create_tuning_job(r).unwrap();
+    // let some evaluations land, then stop
+    loop {
+        if svc.describe_tuning_job(&name).map(|d| d.evaluations >= 3).unwrap_or(false) {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    svc.stop_tuning_job(&name).unwrap();
+    svc.wait(&name).unwrap();
+
+    let mut child = request("child-of-stopped");
+    child.strategy = "bayesian".into();
+    child.warm_start_parents = vec![name];
+    let cname = svc.create_tuning_job(child).unwrap();
+    assert_eq!(svc.wait(&cname).unwrap().evaluations.len(), 6);
+}
+
+#[test]
+fn error_paths_do_not_poison_the_service() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let _ = svc.describe_tuning_job("nope");
+    let _ = svc.stop_tuning_job("nope");
+    let mut bad = request("bad");
+    bad.max_parallel_jobs = 0;
+    assert!(matches!(svc.create_tuning_job(bad), Err(ApiError::Validation(_))));
+    // a healthy job still runs fine afterwards
+    let name = svc.create_tuning_job(request("healthy")).unwrap();
+    assert_eq!(svc.wait(&name).unwrap().evaluations.len(), 6);
+    assert!(svc.availability() < 1.0);
+    assert!(svc.availability() > 0.2); // 3 deliberate errors out of 4 calls
+}
+
+#[test]
+fn custom_objective_through_public_api() {
+    // a user-supplied workload (the "custom algorithm" path)
+    struct Parabola;
+    impl amt::objectives::Objective for Parabola {
+        fn name(&self) -> &str {
+            "parabola"
+        }
+        fn space(&self) -> amt::space::SearchSpace {
+            amt::space::SearchSpace::new(vec![amt::space::continuous(
+                "x",
+                -1.0,
+                1.0,
+                amt::space::Scaling::Linear,
+            )])
+            .unwrap()
+        }
+        fn max_epochs(&self) -> u32 {
+            3
+        }
+        fn curve(&self, config: &amt::space::Config, _seed: u64) -> Vec<f64> {
+            let x = config.get("x").unwrap().as_f64().unwrap();
+            vec![x * x + 1.0, x * x + 0.5, x * x]
+        }
+    }
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let mut r = request("custom");
+    r.objective = "parabola".into();
+    r.strategy = "bayesian".into();
+    r.max_training_jobs = 10;
+    let name = svc.create_custom_tuning_job(r, Arc::new(Parabola)).unwrap();
+    let out = svc.wait(&name).unwrap();
+    let (cfg, best) = out.best.unwrap();
+    assert!(best < 0.25, "BO should approach x=0: best {best} at {cfg:?}");
+}
