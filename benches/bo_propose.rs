@@ -3,12 +3,16 @@
 //! function of the observation count, on the native and HLO backends.
 //! This is the per-decision service latency the Hyperparameter Selection
 //! Service adds between training jobs. `cargo bench --bench bo_propose`.
+//!
+//! Emits `BENCH_propose.json` alongside the printed table so the perf
+//! trajectory is tracked across PRs (`scripts/bench.sh` diffs it against
+//! the committed baseline).
 
 use std::sync::Arc;
 
 use amt::acquisition::AcquisitionConfig;
 use amt::gp::{NativeBackend, SurrogateBackend};
-use amt::harness::{bench, print_table};
+use amt::harness::{bench, print_table, BenchReport};
 use amt::rng::Rng;
 use amt::runtime::{HloBackend, HloRuntime};
 use amt::space::{continuous, Scaling, SearchSpace};
@@ -47,6 +51,7 @@ fn main() {
         v
     };
 
+    let mut report = BenchReport::new("propose");
     let mut rows = Vec::new();
     for n in [10usize, 25, 50, 100, 200] {
         let hist = history(&sp, n, n as u64);
@@ -68,6 +73,17 @@ fn main() {
                 let c = bo.next_config(&hist, &[]);
                 std::hint::black_box(c);
             });
+            report.push(
+                &format!("propose {bname} n={n}"),
+                &[
+                    ("backend", bname.to_string()),
+                    ("n", n.to_string()),
+                    ("d", d.to_string()),
+                    ("anchors", "512".to_string()),
+                    ("gphp", "mcmc-light".to_string()),
+                ],
+                &stats,
+            );
             cells.push(amt::harness::fmt_secs(stats.p50));
         }
         rows.push(cells);
@@ -76,4 +92,8 @@ fn main() {
         .chain(backends.iter().map(|(n, _)| *n))
         .collect();
     print_table("BO proposal p50 latency (light MCMC, 512 anchors)", &header, &rows);
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("WARN: could not write bench report: {e}"),
+    }
 }

@@ -1,25 +1,28 @@
 //! GPHP-fitting bench: the paper's slice-sampling MCMC spec (§4.2 — 300
 //! samples, 250 burn-in, thin 5) vs the light harness preset vs empirical
 //! Bayes, across training-set sizes. Run with `cargo bench --bench gp_fit`.
+//!
+//! Emits `BENCH_gp_fit.json` alongside the printed table (see
+//! `scripts/bench.sh`).
 
 use amt::gp::fit::fit_empirical_bayes;
 use amt::gp::slice::{sample_gphp, SliceConfig};
-use amt::gp::{normalization, NativeBackend};
-use amt::harness::{bench, print_table};
+use amt::gp::{normalization, Dataset, NativeBackend};
+use amt::harness::{bench, print_table, BenchReport};
 use amt::rng::Rng;
 
-fn data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+fn data(n: usize, d: usize, seed: u64) -> (Dataset, Vec<f64>) {
     let mut rng = Rng::new(seed);
-    let x: Vec<Vec<f64>> =
-        (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+    let x = Dataset::from_fn(n, d, |_, _| rng.uniform());
     let y_raw: Vec<f64> =
-        x.iter().map(|p| (5.0 * p[0]).sin() + p[1] + 0.05 * rng.normal()).collect();
+        x.rows().map(|p| (5.0 * p[0]).sin() + p[1] + 0.05 * rng.normal()).collect();
     let (m, s) = normalization(&y_raw);
     (x, y_raw.iter().map(|v| (v - m) / s).collect())
 }
 
 fn main() {
     let d = 4;
+    let mut report = BenchReport::new("gp_fit");
     let mut rows = Vec::new();
     for n in [10usize, 25, 50, 100, 200] {
         let (x, y) = data(n, d, n as u64);
@@ -43,6 +46,19 @@ fn main() {
             let t = fit_empirical_bayes(&NativeBackend, &x, &y, d, 1, &mut rng);
             std::hint::black_box(t);
         });
+        for (variant, stats) in
+            [("mcmc-paper", &paper), ("mcmc-light", &light), ("empirical-bayes", &eb)]
+        {
+            report.push(
+                &format!("gp_fit {variant} n={n}"),
+                &[
+                    ("variant", variant.to_string()),
+                    ("n", n.to_string()),
+                    ("d", d.to_string()),
+                ],
+                stats,
+            );
+        }
         rows.push(vec![
             n.to_string(),
             amt::harness::fmt_secs(paper.p50),
@@ -55,4 +71,8 @@ fn main() {
         &["n", "MCMC (paper spec)", "MCMC (light)", "empirical Bayes"],
         &rows,
     );
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("WARN: could not write bench report: {e}"),
+    }
 }

@@ -5,13 +5,13 @@
 //! slice-sampling likelihood query (~600 per BO proposal under the paper's
 //! MCMC settings). Run with `cargo bench --bench kernel_matrix`.
 
-use amt::gp::{NativeBackend, SurrogateBackend, Theta};
+use amt::gp::{Dataset, NativeBackend, SurrogateBackend, Theta};
 use amt::harness::{bench, print_table};
 use amt::rng::Rng;
 use amt::runtime::{HloBackend, HloRuntime};
 
-fn points(n: usize, d: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
-    (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect()
+fn points(n: usize, d: usize, rng: &mut Rng) -> Dataset {
+    Dataset::from_fn(n, d, |_, _| rng.uniform())
 }
 
 fn main() {

@@ -9,11 +9,22 @@
 //! worker slot freed mid-tuning never receives a duplicate suggestion
 //! (§4.4: "making sure, of course, not to select one of the L−1 pending
 //! candidates", with diversity induced through the acquisition optimizer).
+//!
+//! The anchor grid lives in one contiguous [`Dataset`]; when the model
+//! holds a single posterior (empirical Bayes) the grid is scored in
+//! parallel anchor blocks, and with multiple posteriors (MCMC) the
+//! fan-out happens across posterior samples inside [`GpModel::score`] —
+//! either way the reduction is order-stable, so proposals are bit-identical
+//! to the sequential path (DESIGN.md §5).
 
 use crate::gp::fit::{nelder_mead, NmOptions};
-use crate::gp::{GpModel, Score, SurrogateBackend};
+use crate::gp::{Dataset, GpModel, Score, SurrogateBackend};
+use crate::parallel;
 use crate::rng::Rng;
 use crate::sobol::Sobol;
+
+/// Anchor rows per parallel scoring block.
+const ANCHOR_BLOCK: usize = 128;
 
 /// Which acquisition rule picks the next candidate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,6 +95,33 @@ pub struct Proposal {
 /// [`AcquisitionKind::CostAwareEi`] (e.g. predicted training seconds).
 pub type CostModel = std::sync::Arc<dyn Fn(&[f64]) -> f64 + Send + Sync>;
 
+/// Score the anchor grid: across posterior samples when the model carries
+/// an MCMC ensemble, across contiguous anchor blocks when it carries a
+/// single (empirical-Bayes) posterior. Block results are concatenated in
+/// grid order, so the output equals one sequential `model.score` call.
+fn score_anchors(
+    model: &GpModel,
+    backend: &dyn SurrogateBackend,
+    anchors: &Dataset,
+) -> Vec<Score> {
+    let single_posterior = model.posteriors.len() == 1;
+    // Block splitting is a native-backend optimization only: the HLO
+    // artifact pads every execution to its compiled candidate batch, so
+    // sub-batch blocks would multiply PJRT executions instead of saving
+    // wall clock.
+    if single_posterior
+        && backend.name() == "native"
+        && anchors.len() >= 2 * ANCHOR_BLOCK
+        && parallel::max_threads() > 1
+    {
+        let blocks = anchors.blocks(ANCHOR_BLOCK);
+        let per: Vec<Vec<Score>> = parallel::par_map(&blocks, |b| model.score(backend, b));
+        per.into_iter().flatten().collect()
+    } else {
+        model.score(backend, anchors)
+    }
+}
+
 /// Propose the next encoded candidate.
 ///
 /// `dim` is the encoded dimension; `pending` holds encoded locations whose
@@ -112,22 +150,27 @@ pub fn propose_with_cost(
 ) -> Proposal {
     // 1. Sobol anchor grid (§4.3: "populating the search space as densely
     //    as possible"), plus a few uniform points to break Sobol alignment
-    //    across repeated calls.
+    //    across repeated calls. The grid is one contiguous dataset.
     let sdim = dim.min(crate::sobol::MAX_DIM);
     let mut sobol = Sobol::new(sdim);
-    let mut anchors = sobol.take_points(config.num_anchors);
-    for a in anchors.iter_mut() {
-        while a.len() < dim {
-            let l = a.len();
-            a.push(a[l % sdim]);
+    let mut anchors = Dataset::with_capacity(dim, config.num_anchors + config.num_anchors / 8);
+    let mut row = vec![0.0; dim];
+    for p in sobol.take_points(config.num_anchors) {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = p[j % sdim];
         }
+        anchors.push_row(&row);
     }
     for _ in 0..config.num_anchors / 8 {
-        anchors.push((0..dim).map(|_| rng.uniform()).collect());
+        for v in row.iter_mut() {
+            *v = rng.uniform();
+        }
+        anchors.push_row(&row);
     }
 
-    // 2. batch-score all anchors (one artifact execution per theta sample)
-    let scores = model.score(backend, &anchors);
+    // 2. batch-score all anchors (one artifact execution per theta sample;
+    //    parallel across posterior samples or anchor blocks)
+    let scores = score_anchors(model, backend, &anchors);
 
     // 3. anchor utility
     let cost_factor = |x: &[f64]| -> f64 {
@@ -143,11 +186,11 @@ pub fn propose_with_cost(
         .iter()
         .enumerate()
         .map(|(i, s)| {
-            let pen = pending_penalty(&anchors[i], pending, config.exclusion_radius);
+            let pen = pending_penalty(anchors.row(i), pending, config.exclusion_radius);
             let u = match config.kind {
                 AcquisitionKind::ExpectedImprovement => s.ei * pen,
                 AcquisitionKind::CostAwareEi { .. } => {
-                    s.ei * pen * cost_factor(&anchors[i])
+                    s.ei * pen * cost_factor(anchors.row(i))
                 }
                 AcquisitionKind::ThompsonMarginal => {
                     let draw = s.mu + s.var.max(1e-12).sqrt() * rng.normal();
@@ -162,17 +205,17 @@ pub fn propose_with_cost(
     // Thompson: return the best grid draw directly (its classic form)
     if config.kind == AcquisitionKind::ThompsonMarginal {
         let (idx, val) = ranked[0];
-        return Proposal { x: anchors[idx].clone(), acq_value: val, score: scores[idx] };
+        return Proposal { x: anchors.row(idx).to_vec(), acq_value: val, score: scores[idx] };
     }
 
     // 4. local EI refinement from the top anchors (§4.3: the pseudo-random
     //    grid is "a set of anchor points to initialize the local
     //    optimization of the EI")
-    let neg_ei = |x: &[f64]| -> Option<f64> {
+    let mut neg_ei = |x: &[f64]| -> Option<f64> {
         if x.iter().any(|v| !(0.0..=1.0).contains(v)) {
             return None; // clamp by rejection: keeps NM inside the cube
         }
-        let s = model.score(backend, &[x.to_vec()]);
+        let s = model.score(backend, &Dataset::from_row(x));
         Some(
             -s[0].ei
                 * pending_penalty(x, pending, config.exclusion_radius)
@@ -180,12 +223,12 @@ pub fn propose_with_cost(
         )
     };
 
-    let mut best_x = anchors[ranked[0].0].clone();
+    let mut best_x = anchors.row(ranked[0].0).to_vec();
     let mut best_v = ranked[0].1;
     for &(idx, anchor_val) in ranked.iter().take(config.num_local_starts) {
         let (x_loc, f_loc) = nelder_mead(
-            neg_ei,
-            &anchors[idx],
+            &mut neg_ei,
+            anchors.row(idx),
             &NmOptions { max_evals: config.local_evals, init_step: 0.05, f_tol: 1e-12 },
         );
         let v = -f_loc;
@@ -194,13 +237,13 @@ pub fn propose_with_cost(
             best_x = x_loc;
         } else if anchor_val > best_v {
             best_v = anchor_val;
-            best_x = anchors[idx].clone();
+            best_x = anchors.row(idx).to_vec();
         }
     }
     for v in best_x.iter_mut() {
         *v = v.clamp(0.0, 1.0);
     }
-    let score = model.score(backend, &[best_x.clone()])[0];
+    let score = model.score(backend, &Dataset::from_row(&best_x))[0];
     Proposal { x: best_x, acq_value: best_v, score }
 }
 
@@ -211,11 +254,13 @@ mod tests {
 
     fn fitted_model(seed: u64) -> GpModel {
         let mut rng = Rng::new(seed);
-        let x: Vec<Vec<f64>> =
-            (0..15).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+        let mut x = Dataset::new(2);
+        for _ in 0..15 {
+            x.push_row(&[rng.uniform(), rng.uniform()]);
+        }
         // minimum near (0.25, 0.75)
         let y: Vec<f64> = x
-            .iter()
+            .rows()
             .map(|p| (p[0] - 0.25).powi(2) + (p[1] - 0.75).powi(2) + 0.01 * rng.normal())
             .collect();
         GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap()
@@ -266,6 +311,39 @@ mod tests {
     }
 
     #[test]
+    fn seeded_proposals_are_bit_identical() {
+        // the parallel scoring paths must not perturb proposals: two runs
+        // from identical seeds produce identical bits
+        let model = fitted_model(13);
+        let cfg = AcquisitionConfig { num_anchors: 512, ..Default::default() };
+        let mut r1 = Rng::new(17);
+        let mut r2 = Rng::new(17);
+        let a = propose(&model, &NativeBackend, 2, &[], &cfg, &mut r1);
+        let b = propose(&model, &NativeBackend, 2, &[], &cfg, &mut r2);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.acq_value.to_bits(), b.acq_value.to_bits());
+        assert_eq!(a.score, b.score);
+    }
+
+    #[test]
+    fn block_parallel_anchor_scores_match_sequential() {
+        let model = fitted_model(23); // single posterior ⇒ block path
+        let mut rng = Rng::new(5);
+        let mut anchors = Dataset::new(2);
+        for _ in 0..700 {
+            anchors.push_row(&[rng.uniform(), rng.uniform()]);
+        }
+        let blocked = super::score_anchors(&model, &NativeBackend, &anchors);
+        let sequential = model.score_sequential(&NativeBackend, &anchors);
+        assert_eq!(blocked.len(), sequential.len());
+        for (a, b) in blocked.iter().zip(&sequential) {
+            assert_eq!(a.ei.to_bits(), b.ei.to_bits());
+            assert_eq!(a.mu.to_bits(), b.mu.to_bits());
+            assert_eq!(a.var.to_bits(), b.var.to_bits());
+        }
+    }
+
+    #[test]
     fn pending_exclusion_moves_proposal() {
         let model = fitted_model(5);
         let cfg = AcquisitionConfig { num_anchors: 256, ..Default::default() };
@@ -305,10 +383,12 @@ mod tests {
         // two symmetric minima; the cost model makes the x0>0.5 half 10x
         // more expensive — cost-aware EI should propose in the cheap half
         let mut rng = Rng::new(21);
-        let x: Vec<Vec<f64>> =
-            (0..20).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+        let mut x = Dataset::new(2);
+        for _ in 0..20 {
+            x.push_row(&[rng.uniform(), rng.uniform()]);
+        }
         let y: Vec<f64> = x
-            .iter()
+            .rows()
             .map(|p| {
                 let d1 = (p[0] - 0.2).powi(2) + (p[1] - 0.5).powi(2);
                 let d2 = (p[0] - 0.8).powi(2) + (p[1] - 0.5).powi(2);

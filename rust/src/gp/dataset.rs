@@ -1,0 +1,263 @@
+//! Contiguous training-set storage and the reusable Gram workspace.
+//!
+//! The BO hot path (slice-sampling likelihood queries, anchor scoring)
+//! used to thread `&[Vec<f64>]` through every layer: one heap allocation
+//! per row, pointer-chasing on every kernel evaluation, and fresh
+//! warp/scale buffers on each of the ~600 likelihood queries per proposal.
+//! [`Dataset`] replaces that with a single row-major `Vec<f64>` (n × d),
+//! so kernels stream over contiguous memory and the PJRT backend can pad
+//! straight out of the flat buffer (DESIGN.md §2).
+//!
+//! [`GramScratch`] is the companion workspace: warp parameters, scaled
+//! points, the Gram/Cholesky matrix and a triangular-solve vector, all
+//! reused across likelihood evaluations so the slice sampler's inner loop
+//! performs zero heap allocations after warm-up (DESIGN.md §3).
+
+use crate::linalg::Matrix;
+
+/// Row-major, contiguous set of encoded configurations (n rows × d dims).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    n: usize,
+    d: usize,
+    data: Vec<f64>,
+}
+
+impl Dataset {
+    /// Empty dataset over a `d`-dimensional encoded space.
+    pub fn new(d: usize) -> Dataset {
+        Dataset { n: 0, d, data: Vec::new() }
+    }
+
+    /// Empty dataset with room for `rows` rows.
+    pub fn with_capacity(d: usize, rows: usize) -> Dataset {
+        Dataset { n: 0, d, data: Vec::with_capacity(rows * d) }
+    }
+
+    /// Build from per-row slices (all rows must share one length).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Dataset {
+        let d = rows.first().map(Vec::len).unwrap_or(0);
+        let mut ds = Dataset::with_capacity(d, rows.len());
+        for r in rows {
+            ds.push_row(r);
+        }
+        ds
+    }
+
+    /// Single-row dataset (posterior queries at one candidate).
+    pub fn from_row(row: &[f64]) -> Dataset {
+        Dataset { n: 1, d: row.len(), data: row.to_vec() }
+    }
+
+    /// Build an n × d dataset by evaluating `f(row, col)` in row-major
+    /// order (the order matters for seeded RNG fills).
+    pub fn from_fn(n: usize, d: usize, mut f: impl FnMut(usize, usize) -> f64) -> Dataset {
+        let mut data = Vec::with_capacity(n * d);
+        for i in 0..n {
+            for j in 0..d {
+                data.push(f(i, j));
+            }
+        }
+        Dataset { n, d, data }
+    }
+
+    /// Build from an already-flat row-major buffer.
+    pub fn from_flat(n: usize, d: usize, data: Vec<f64>) -> Dataset {
+        assert_eq!(data.len(), n * d, "flat buffer length mismatch");
+        Dataset { n, d, data }
+    }
+
+    /// Append one encoded row.
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.d, "row dimension mismatch");
+        self.data.extend_from_slice(row);
+        self.n += 1;
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the dataset holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Encoded dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// One row as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Iterate over rows.
+    pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.data.chunks_exact(self.d.max(1))
+    }
+
+    /// The whole row-major buffer (ships to PJRT without re-marshalling).
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Copy of the rows in `range` as an owned dataset (anchor blocks).
+    pub fn slice(&self, range: std::ops::Range<usize>) -> Dataset {
+        Dataset {
+            n: range.len(),
+            d: self.d,
+            data: self.data[range.start * self.d..range.end * self.d].to_vec(),
+        }
+    }
+
+    /// Split into owned blocks of at most `block` rows (last may be short).
+    pub fn blocks(&self, block: usize) -> Vec<Dataset> {
+        assert!(block > 0);
+        (0..self.n)
+            .step_by(block)
+            .map(|s| self.slice(s..(s + block).min(self.n)))
+            .collect()
+    }
+}
+
+/// Reusable workspace for Gram construction and likelihood evaluation.
+///
+/// All buffers grow monotonically and are reused across calls; after the
+/// first evaluation at a given (n, d) no further heap allocation happens
+/// (asserted by the scratch-reuse tests via [`GramScratch::reallocs`]).
+#[derive(Debug, Default)]
+pub struct GramScratch {
+    /// Warped + inverse-lengthscale-scaled points (n × d, row-major).
+    pub(crate) scaled: Vec<f64>,
+    /// Per-dimension Kumaraswamy `a` parameters.
+    pub(crate) wa: Vec<f64>,
+    /// Per-dimension Kumaraswamy `b` parameters.
+    pub(crate) wb: Vec<f64>,
+    /// Per-dimension inverse lengthscales.
+    pub(crate) inv_ls: Vec<f64>,
+    /// Gram matrix; the NLL path factorizes it in place (k becomes L).
+    pub k: Matrix,
+    /// Triangular-solve workspace (length n).
+    pub v: Vec<f64>,
+    /// How many times any buffer had to grow (should stabilize after the
+    /// first call at a given size — the zero-alloc invariant).
+    reallocs: u64,
+}
+
+impl GramScratch {
+    /// Fresh, empty workspace.
+    pub fn new() -> GramScratch {
+        GramScratch::default()
+    }
+
+    /// Size all buffers for an (n, d) problem, reusing capacity.
+    pub(crate) fn ensure(&mut self, n: usize, d: usize) {
+        let caps = (
+            self.scaled.capacity(),
+            self.wa.capacity(),
+            self.k.data.capacity(),
+            self.v.capacity(),
+        );
+        self.scaled.resize(n * d, 0.0);
+        self.wa.resize(d, 0.0);
+        self.wb.resize(d, 0.0);
+        self.inv_ls.resize(d, 0.0);
+        self.k.data.resize(n * n, 0.0);
+        self.k.rows = n;
+        self.k.cols = n;
+        self.v.resize(n, 0.0);
+        let grown = caps
+            != (
+                self.scaled.capacity(),
+                self.wa.capacity(),
+                self.k.data.capacity(),
+                self.v.capacity(),
+            );
+        if grown {
+            self.reallocs += 1;
+        }
+    }
+
+    /// Allocation-growth counter (see struct docs).
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_roundtrips_rows() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let ds = Dataset::from_rows(&rows);
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.flat(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let back: Vec<Vec<f64>> = ds.rows().map(|r| r.to_vec()).collect();
+        assert_eq!(back, rows);
+    }
+
+    #[test]
+    fn dataset_push_and_slice() {
+        let mut ds = Dataset::new(3);
+        assert!(ds.is_empty());
+        for i in 0..5 {
+            ds.push_row(&[i as f64, 0.0, 1.0]);
+        }
+        let mid = ds.slice(1..3);
+        assert_eq!(mid.len(), 2);
+        assert_eq!(mid.row(0), ds.row(1));
+        assert_eq!(mid.row(1), ds.row(2));
+    }
+
+    #[test]
+    fn dataset_blocks_cover_everything_in_order() {
+        let mut ds = Dataset::new(1);
+        for i in 0..10 {
+            ds.push_row(&[i as f64]);
+        }
+        let blocks = ds.blocks(4);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks.iter().map(Dataset::len).sum::<usize>(), 10);
+        let rejoined: Vec<f64> =
+            blocks.iter().flat_map(|b| b.flat().iter().copied()).collect();
+        assert_eq!(rejoined, ds.flat());
+    }
+
+    #[test]
+    fn scratch_reuse_stops_allocating() {
+        let mut s = GramScratch::new();
+        s.ensure(20, 4);
+        let after_first = s.reallocs();
+        assert!(after_first >= 1);
+        for _ in 0..100 {
+            s.ensure(20, 4);
+        }
+        assert_eq!(s.reallocs(), after_first, "steady-state ensure() must not allocate");
+        // shrinking reuses capacity too
+        s.ensure(10, 4);
+        assert_eq!(s.reallocs(), after_first);
+    }
+
+    #[test]
+    fn from_fn_fills_row_major() {
+        let ds = Dataset::from_fn(3, 2, |i, j| (i * 10 + j) as f64);
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.flat(), &[0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+    }
+
+    #[test]
+    fn from_flat_matches_from_rows() {
+        let rows = vec![vec![0.5, 0.25], vec![0.75, 1.0]];
+        let a = Dataset::from_rows(&rows);
+        let b = Dataset::from_flat(2, 2, vec![0.5, 0.25, 0.75, 1.0]);
+        assert_eq!(a, b);
+    }
+}

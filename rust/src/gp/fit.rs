@@ -6,8 +6,9 @@
 //! Also home of the general-purpose [`nelder_mead`] optimizer, reused by
 //! the acquisition module to locally optimize EI from Sobol anchors (§4.3).
 
+use super::dataset::{Dataset, GramScratch};
 use super::theta::Theta;
-use super::{nll, SurrogateBackend};
+use super::{nll_scratch, SurrogateBackend};
 use crate::rng::Rng;
 
 /// Nelder–Mead options.
@@ -29,15 +30,19 @@ impl Default for NmOptions {
 
 /// Derivative-free Nelder–Mead minimization of `f` from `x0`.
 /// Returns (argmin, min). `f` may return `None` ⇒ treated as +∞.
-pub fn nelder_mead<F>(f: F, x0: &[f64], opts: &NmOptions) -> (Vec<f64>, f64)
+///
+/// `f` is `FnMut` so objectives can carry reusable workspaces (the
+/// empirical-Bayes NLL threads a [`GramScratch`] through every evaluation).
+pub fn nelder_mead<F>(mut f: F, x0: &[f64], opts: &NmOptions) -> (Vec<f64>, f64)
 where
-    F: Fn(&[f64]) -> Option<f64>,
+    F: FnMut(&[f64]) -> Option<f64>,
 {
     let n = x0.len();
-    let eval = |x: &[f64]| f(x).unwrap_or(f64::INFINITY);
+    let mut eval = |x: &[f64]| f(x).unwrap_or(f64::INFINITY);
     // initial simplex: x0 plus per-coordinate steps
     let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
-    simplex.push((x0.to_vec(), eval(x0)));
+    let f0 = eval(x0);
+    simplex.push((x0.to_vec(), f0));
     for i in 0..n {
         let mut xi = x0.to_vec();
         xi[i] += opts.init_step;
@@ -103,19 +108,28 @@ where
 /// Empirical-Bayes fit: multi-start Nelder–Mead on −(log marginal
 /// likelihood + log prior), clamped to the stability box. Returns the best
 /// theta found (always at least the default).
+///
+/// Restarts after the first are seeded *uniformly within*
+/// [`Theta::bounds`] — wide dimensions get the same relative coverage as
+/// narrow ones (the old seeding sampled midpoint ± 1.0 regardless of
+/// bound width, so most of a wide box was never explored).
 pub fn fit_empirical_bayes(
     backend: &dyn SurrogateBackend,
-    x: &[Vec<f64>],
+    x: &Dataset,
     y: &[f64],
     d: usize,
     restarts: usize,
     rng: &mut Rng,
 ) -> Theta {
-    let objective = |packed: &[f64]| -> Option<f64> {
-        let mut p = packed.to_vec();
-        Theta::clamp_packed(&mut p, d);
-        let theta = Theta::unpack(&p, d);
-        nll(backend, x, y, &theta).map(|v| v - theta.log_prior())
+    let mut scratch = GramScratch::new();
+    let mut theta_buf = Theta::default_for_dim(d);
+    let mut clamped = vec![0.0; Theta::packed_len(d)];
+    let mut objective = |packed: &[f64]| -> Option<f64> {
+        clamped.copy_from_slice(packed);
+        Theta::clamp_packed(&mut clamped, d);
+        theta_buf.unpack_into(&clamped, d);
+        nll_scratch(backend, x, y, &theta_buf, &mut scratch)
+            .map(|v| v - theta_buf.log_prior())
     };
 
     let mut best_x = Theta::default_for_dim(d).pack();
@@ -126,12 +140,9 @@ pub fn fit_empirical_bayes(
         let start: Vec<f64> = if r == 0 {
             Theta::default_for_dim(d).pack()
         } else {
-            bounds
-                .iter()
-                .map(|(lo, hi)| rng.uniform_range(*lo * 0.5 + *hi * 0.5 - 1.0, *lo * 0.5 + *hi * 0.5 + 1.0))
-                .collect()
+            bounds.iter().map(|(lo, hi)| rng.uniform_range(*lo, *hi)).collect()
         };
-        let (xr, fr) = nelder_mead(objective, &start, &NmOptions::default());
+        let (xr, fr) = nelder_mead(&mut objective, &start, &NmOptions::default());
         if fr < best_f {
             best_f = fr;
             best_x = xr;
@@ -164,6 +175,19 @@ mod tests {
     }
 
     #[test]
+    fn nelder_mead_accepts_stateful_objectives() {
+        // FnMut: objectives may mutate captured workspaces between calls
+        let mut calls = 0usize;
+        let f = |x: &[f64]| {
+            calls += 1;
+            Some(x[0] * x[0])
+        };
+        let (x, _) = nelder_mead(f, &[2.0], &NmOptions::default());
+        assert!(x[0].abs() < 1e-2);
+        assert!(calls > 2);
+    }
+
+    #[test]
     fn rosenbrock_2d_reasonable() {
         let f =
             |x: &[f64]| Some((1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2));
@@ -175,17 +199,19 @@ mod tests {
     #[test]
     fn eb_fit_improves_over_default() {
         let mut rng = Rng::new(1);
-        let x: Vec<Vec<f64>> =
-            (0..25).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+        let mut x = Dataset::new(2);
+        for _ in 0..25 {
+            x.push_row(&[rng.uniform(), rng.uniform()]);
+        }
         let y_raw: Vec<f64> =
-            x.iter().map(|p| (5.0 * p[0]).sin() * 2.0 + 0.01 * rng.normal()).collect();
+            x.rows().map(|p| (5.0 * p[0]).sin() * 2.0 + 0.01 * rng.normal()).collect();
         let (m, s) = normalization(&y_raw);
         let y: Vec<f64> = y_raw.iter().map(|v| (v - m) / s).collect();
 
         let fitted = fit_empirical_bayes(&NativeBackend, &x, &y, 2, 2, &mut rng);
         let default = Theta::default_for_dim(2);
-        let nll_fit = nll(&NativeBackend, &x, &y, &fitted).unwrap();
-        let nll_def = nll(&NativeBackend, &x, &y, &default).unwrap();
+        let nll_fit = crate::gp::nll(&NativeBackend, &x, &y, &fitted).unwrap();
+        let nll_def = crate::gp::nll(&NativeBackend, &x, &y, &default).unwrap();
         assert!(
             nll_fit <= nll_def + 1e-9,
             "fitted {nll_fit} should beat default {nll_def}"
@@ -195,11 +221,40 @@ mod tests {
     #[test]
     fn eb_fit_stays_in_bounds() {
         let mut rng = Rng::new(2);
-        let x: Vec<Vec<f64>> = (0..8).map(|_| vec![rng.uniform()]).collect();
-        let y: Vec<f64> = x.iter().map(|p| p[0]).collect();
+        let mut x = Dataset::new(1);
+        for _ in 0..8 {
+            x.push_row(&[rng.uniform()]);
+        }
+        let y: Vec<f64> = x.rows().map(|p| p[0]).collect();
         let t = fit_empirical_bayes(&NativeBackend, &x, &y, 1, 1, &mut rng);
         for (v, (lo, hi)) in t.pack().iter().zip(Theta::bounds(1)) {
             assert!(*v >= lo - 1e-9 && *v <= hi + 1e-9);
         }
+    }
+
+    #[test]
+    fn eb_restart_seeds_cover_the_full_box() {
+        // regression for the midpoint ± 1.0 seeding bug: with many
+        // restarts, seeds must land outside the old ±1 band around the
+        // midpoint for the wide amplitude dimension (width ~13.8 in log
+        // space). We reproduce the seeding draw exactly as the fitter
+        // makes it and check its spread.
+        let bounds = Theta::bounds(1);
+        let (lo, hi) = bounds[0]; // log amp: ln(1e-3)..ln(1e3)
+        let mid = 0.5 * (lo + hi);
+        let mut rng = Rng::new(3);
+        let mut outside_old_band = 0;
+        for _ in 0..200 {
+            let draw: Vec<f64> =
+                bounds.iter().map(|(lo, hi)| rng.uniform_range(*lo, *hi)).collect();
+            assert!(draw[0] >= lo && draw[0] <= hi);
+            if (draw[0] - mid).abs() > 1.0 {
+                outside_old_band += 1;
+            }
+        }
+        assert!(
+            outside_old_band > 100,
+            "restart seeding still hugs the midpoint: {outside_old_band}/200"
+        );
     }
 }

@@ -3,7 +3,13 @@
 //! cross-check oracle for the HLO artifacts and as the fallback surrogate
 //! when artifacts are unavailable (e.g. encoded dimension > the compiled
 //! D).
+//!
+//! All entry points operate on the contiguous row-major [`Dataset`]
+//! layout; the hot path ([`gram_into`]) streams warped points through a
+//! caller-owned [`GramScratch`] so repeated likelihood queries allocate
+//! nothing (DESIGN.md §3).
 
+use super::dataset::{Dataset, GramScratch};
 use super::theta::Theta;
 use crate::linalg::Matrix;
 
@@ -25,65 +31,111 @@ pub fn matern52(r2: f64, amp: f64) -> f64 {
     amp * (1.0 + SQRT5 * r + (5.0 / 3.0) * r2) * (-SQRT5 * r).exp()
 }
 
-/// Warp and inverse-lengthscale-scale one encoded point.
-fn warp_scale(x: &[f64], wa: &[f64], wb: &[f64], inv_ls: &[f64]) -> Vec<f64> {
-    x.iter()
-        .zip(wa)
-        .zip(wb)
-        .zip(inv_ls)
-        .map(|(((&x, &a), &b), &il)| kumaraswamy(x, a, b) * il)
-        .collect()
+/// Fill the per-dimension warp/scale parameters of `theta` into flat
+/// buffers (no allocation; buffers must have length d).
+fn theta_params_into(theta: &Theta, wa: &mut [f64], wb: &mut [f64], inv_ls: &mut [f64]) {
+    for j in 0..wa.len() {
+        wa[j] = theta.log_wa[j].exp();
+        wb[j] = theta.log_wb[j].exp();
+        inv_ls[j] = 1.0 / theta.log_ls[j].exp();
+    }
+}
+
+/// Warp and inverse-lengthscale-scale `x` (n × d row-major) into `out`.
+fn warp_scale_into(x: &[f64], d: usize, wa: &[f64], wb: &[f64], inv_ls: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (src, dst) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        for j in 0..d {
+            dst[j] = kumaraswamy(src[j], wa[j], wb[j]) * inv_ls[j];
+        }
+    }
+}
+
+/// Squared Euclidean distance between two scaled points.
+#[inline]
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(u, v)| (u - v) * (u - v)).sum()
 }
 
 /// Pairwise cross covariance K[i][j] = k(xa_i, xb_j).
-pub fn cross(xa: &[Vec<f64>], xb: &[Vec<f64>], theta: &Theta) -> Matrix {
+pub fn cross(xa: &Dataset, xb: &Dataset, theta: &Theta) -> Matrix {
+    let d = theta.dim();
+    debug_assert_eq!(xa.dim(), d);
+    debug_assert_eq!(xb.dim(), d);
     let amp = theta.amp();
-    let wa = theta.warp_a();
-    let wb = theta.warp_b();
-    let inv_ls: Vec<f64> = theta.lengthscales().iter().map(|l| 1.0 / l).collect();
-    let a_scaled: Vec<Vec<f64>> =
-        xa.iter().map(|x| warp_scale(x, &wa, &wb, &inv_ls)).collect();
-    let b_scaled: Vec<Vec<f64>> =
-        xb.iter().map(|x| warp_scale(x, &wa, &wb, &inv_ls)).collect();
+    let mut wa = vec![0.0; d];
+    let mut wb = vec![0.0; d];
+    let mut inv_ls = vec![0.0; d];
+    theta_params_into(theta, &mut wa, &mut wb, &mut inv_ls);
+    let mut a_scaled = vec![0.0; xa.len() * d];
+    let mut b_scaled = vec![0.0; xb.len() * d];
+    warp_scale_into(xa.flat(), d, &wa, &wb, &inv_ls, &mut a_scaled);
+    warp_scale_into(xb.flat(), d, &wa, &wb, &inv_ls, &mut b_scaled);
     let mut k = Matrix::zeros(xa.len(), xb.len());
-    for (i, ai) in a_scaled.iter().enumerate() {
-        for (j, bj) in b_scaled.iter().enumerate() {
-            let r2: f64 = ai.iter().zip(bj).map(|(u, v)| (u - v) * (u - v)).sum();
-            k[(i, j)] = matern52(r2, amp);
+    for (i, ai) in a_scaled.chunks_exact(d).enumerate() {
+        let out_row = &mut k.data[i * xb.len()..(i + 1) * xb.len()];
+        for (o, bj) in out_row.iter_mut().zip(b_scaled.chunks_exact(d)) {
+            *o = matern52(dist2(ai, bj), amp);
         }
     }
     k
 }
 
-/// Regularized Gram matrix K(X, X) + (noise + jitter) I.
+/// One kernel column k(x_row, xb) without building a one-row dataset —
+/// used by the rank-1 Cholesky append path.
+pub fn cross_row(x_row: &[f64], xb: &Dataset, theta: &Theta) -> Vec<f64> {
+    let d = theta.dim();
+    debug_assert_eq!(x_row.len(), d);
+    let amp = theta.amp();
+    let mut wa = vec![0.0; d];
+    let mut wb = vec![0.0; d];
+    let mut inv_ls = vec![0.0; d];
+    theta_params_into(theta, &mut wa, &mut wb, &mut inv_ls);
+    let mut a = vec![0.0; d];
+    warp_scale_into(x_row, d, &wa, &wb, &inv_ls, &mut a);
+    let mut b_scaled = vec![0.0; xb.len() * d];
+    warp_scale_into(xb.flat(), d, &wa, &wb, &inv_ls, &mut b_scaled);
+    b_scaled
+        .chunks_exact(d)
+        .map(|bj| matern52(dist2(&a, bj), amp))
+        .collect()
+}
+
+/// Regularized Gram matrix K(X, X) + (noise + jitter) I (allocating form).
+pub fn gram(x: &Dataset, theta: &Theta) -> Matrix {
+    let mut scratch = GramScratch::new();
+    gram_into(x, theta, &mut scratch);
+    scratch.k
+}
+
+/// Regularized Gram matrix into a reusable workspace: `scratch.k` holds
+/// K(X, X) + (noise + jitter) I on return, and no heap allocation happens
+/// once the scratch has warmed up at this (n, d).
 ///
 /// Perf (§Perf iteration 6): computes only the upper triangle and mirrors —
 /// the Matérn `exp` calls dominate this kernel, and symmetry halves them.
 /// This is the innermost cost of every slice-sampling likelihood query
 /// (~600 Gram+Cholesky evaluations per BO proposal at the paper's MCMC
 /// settings), so the 2× here is a direct ~1.5× on GP fitting.
-pub fn gram(x: &[Vec<f64>], theta: &Theta) -> Matrix {
+pub fn gram_into(x: &Dataset, theta: &Theta, scratch: &mut GramScratch) {
     let n = x.len();
+    let d = x.dim();
+    debug_assert_eq!(theta.dim(), d);
+    scratch.ensure(n, d);
+    let GramScratch { scaled, wa, wb, inv_ls, k, .. } = scratch;
+    theta_params_into(theta, wa, wb, inv_ls);
+    warp_scale_into(x.flat(), d, wa, wb, inv_ls, scaled);
     let amp = theta.amp();
-    let wa = theta.warp_a();
-    let wb = theta.warp_b();
-    let inv_ls: Vec<f64> = theta.lengthscales().iter().map(|l| 1.0 / l).collect();
-    let scaled: Vec<Vec<f64>> =
-        x.iter().map(|p| warp_scale(p, &wa, &wb, &inv_ls)).collect();
     let reg = theta.noise() + JITTER;
-    let mut k = Matrix::zeros(n, n);
     for i in 0..n {
-        k[(i, i)] = amp + reg;
-        let si = &scaled[i];
+        k.data[i * n + i] = amp + reg;
+        let si = &scaled[i * d..(i + 1) * d];
         for j in 0..i {
-            let r2: f64 =
-                si.iter().zip(&scaled[j]).map(|(u, v)| (u - v) * (u - v)).sum();
-            let v = matern52(r2, amp);
-            k[(i, j)] = v;
-            k[(j, i)] = v;
+            let v = matern52(dist2(si, &scaled[j * d..(j + 1) * d]), amp);
+            k.data[i * n + j] = v;
+            k.data[j * n + i] = v;
         }
     }
-    k
 }
 
 #[cfg(test)]
@@ -92,9 +144,9 @@ mod tests {
     use crate::linalg::cholesky;
     use crate::rng::Rng;
 
-    fn rand_x(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+    fn rand_x(n: usize, d: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);
-        (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect()
+        Dataset::from_fn(n, d, |_, _| rng.uniform())
     }
 
     #[test]
@@ -116,10 +168,26 @@ mod tests {
     }
 
     #[test]
+    fn gram_into_reuses_scratch_without_allocating() {
+        let theta = Theta::default_for_dim(5);
+        let x = rand_x(30, 5, 9);
+        let mut scratch = GramScratch::new();
+        gram_into(&x, &theta, &mut scratch);
+        let warmup = scratch.reallocs();
+        let first = scratch.k.clone();
+        for _ in 0..50 {
+            gram_into(&x, &theta, &mut scratch);
+        }
+        assert_eq!(scratch.reallocs(), warmup, "warm gram_into must not allocate");
+        assert_eq!(scratch.k, first, "repeated evaluation must be bit-identical");
+        assert_eq!(first, gram(&x, &theta));
+    }
+
+    #[test]
     fn kernel_decays_monotonically() {
         let theta = Theta::default_for_dim(1);
-        let a = vec![vec![0.1]];
-        let pts: Vec<Vec<f64>> = vec![vec![0.1], vec![0.3], vec![0.6], vec![0.95]];
+        let a = Dataset::from_row(&[0.1]);
+        let pts = Dataset::from_rows(&[vec![0.1], vec![0.3], vec![0.6], vec![0.95]]);
         let k = cross(&a, &pts, &theta);
         assert!(k[(0, 0)] > k[(0, 1)]);
         assert!(k[(0, 1)] > k[(0, 2)]);
@@ -129,8 +197,8 @@ mod tests {
     #[test]
     fn warping_changes_geometry() {
         let mut theta = Theta::default_for_dim(1);
-        let a = vec![vec![0.05]];
-        let b = vec![vec![0.15]];
+        let a = Dataset::from_row(&[0.05]);
+        let b = Dataset::from_row(&[0.15]);
         let plain = cross(&a, &b, &theta)[(0, 0)];
         theta.log_wa = vec![(3.0f64).ln()];
         theta.log_wb = vec![(0.5f64).ln()];
@@ -148,14 +216,25 @@ mod tests {
         let ils: Vec<f64> = theta.lengthscales().iter().map(|l| 1.0 / l).collect();
         for i in 0..5 {
             for j in 0..6 {
-                let r2: f64 = xa[i]
+                let r2: f64 = xa
+                    .row(i)
                     .iter()
-                    .zip(&xb[j])
+                    .zip(xb.row(j))
                     .zip(&ils)
                     .map(|((u, v), il)| ((u - v) * il).powi(2))
                     .sum();
                 assert!((k[(i, j)] - matern52(r2, theta.amp())).abs() < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn cross_row_matches_cross() {
+        let theta = Theta::default_for_dim(3);
+        let xa = rand_x(1, 3, 11);
+        let xb = rand_x(7, 3, 12);
+        let full = cross(&xa, &xb, &theta);
+        let row = cross_row(xa.row(0), &xb, &theta);
+        assert_eq!(full.row(0), &row[..]);
     }
 }

@@ -8,15 +8,34 @@
 //! delegated to a [`SurrogateBackend`] — either [`NativeBackend`] (pure
 //! Rust, any dimension) or the PJRT-executed AOT artifacts
 //! ([`crate::runtime::HloBackend`]), which run the L1 Pallas kernel.
+//!
+//! Training inputs flow through the whole stack as a contiguous row-major
+//! [`Dataset`]; likelihood queries reuse a [`GramScratch`] workspace; and
+//! both GPHP fitting and posterior-sample scoring fan out over
+//! [`crate::parallel`] with order-stable reduction, so results are
+//! bit-identical to the sequential path (DESIGN.md §2–§5).
 
+pub mod dataset;
 pub mod fit;
 pub mod kernel;
 pub mod slice;
 pub mod theta;
 
+pub use dataset::{Dataset, GramScratch};
 pub use theta::Theta;
 
-use crate::linalg::{cho_inverse, cho_logdet, cho_solve, cholesky, solve_lower, Matrix};
+use crate::linalg::{
+    cho_inverse, cho_logdet, cho_solve, cholesky, cholesky_in_place, dot, solve_lower_in_place,
+    Matrix,
+};
+use crate::parallel;
+
+/// Below this many training rows, per-theta fitting stays sequential
+/// (thread spawn would cost more than the factorization).
+const PAR_MIN_FIT_N: usize = 64;
+/// Below this many candidates, scoring stays sequential (the local EI
+/// refinement scores one point per call).
+const PAR_MIN_SCORE_M: usize = 32;
 
 /// Acquisition-relevant posterior summary at one candidate.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -32,13 +51,14 @@ pub struct Score {
 /// Fitted per-theta posterior state: everything the acquisition graphs need.
 #[derive(Clone, Debug)]
 pub struct PosteriorState {
-    /// Encoded training inputs (live rows only).
-    pub x: Vec<Vec<f64>>,
+    /// Encoded training inputs (live rows only, contiguous row-major).
+    pub x: Dataset,
     /// GP hyperparameters of this sample.
     pub theta: Theta,
     /// Cholesky factor of the regularized Gram matrix.
     pub l: Matrix,
-    /// K⁻¹ (shipped to the AOT posterior/EI graph).
+    /// K⁻¹ (used by the blocked native scorer and shipped to the AOT
+    /// posterior/EI graph).
     pub k_inv: Matrix,
     /// K⁻¹ y (normalized targets).
     pub alpha: Vec<f64>,
@@ -49,13 +69,19 @@ pub trait SurrogateBackend: Send + Sync {
     /// Human-readable backend name (for logs/benches).
     fn name(&self) -> &'static str;
     /// Regularized Gram matrix K(X, X) + (noise + jitter) I.
-    fn gram(&self, x: &[Vec<f64>], theta: &Theta) -> Matrix;
+    fn gram(&self, x: &Dataset, theta: &Theta) -> Matrix;
+    /// Gram matrix into a reusable workspace (`scratch.k`). The native
+    /// backend overrides this with a zero-allocation fill; the default
+    /// delegates to [`SurrogateBackend::gram`].
+    fn gram_into(&self, x: &Dataset, theta: &Theta, scratch: &mut GramScratch) {
+        scratch.k = self.gram(x, theta);
+    }
     /// (EI, mu, var) at each candidate given a fitted posterior and the
     /// incumbent `y_best` (normalized units, minimization).
     fn posterior_scores(
         &self,
         post: &PosteriorState,
-        x_cand: &[Vec<f64>],
+        x_cand: &Dataset,
         y_best: f64,
     ) -> Vec<Score>;
 }
@@ -68,28 +94,34 @@ impl SurrogateBackend for NativeBackend {
         "native"
     }
 
-    fn gram(&self, x: &[Vec<f64>], theta: &Theta) -> Matrix {
+    fn gram(&self, x: &Dataset, theta: &Theta) -> Matrix {
         kernel::gram(x, theta)
     }
 
+    fn gram_into(&self, x: &Dataset, theta: &Theta, scratch: &mut GramScratch) {
+        kernel::gram_into(x, theta, scratch);
+    }
+
+    /// Blocked scorer: one Kx cross-covariance build, one blocked
+    /// Kx · K⁻¹ matmul (ikj order, streaming K⁻¹ rows), then a contiguous
+    /// per-candidate dot for the quadratic form — instead of the old
+    /// per-candidate loop that gathered K⁻¹ rows M times with strided
+    /// access (DESIGN.md §4).
     fn posterior_scores(
         &self,
         post: &PosteriorState,
-        x_cand: &[Vec<f64>],
+        x_cand: &Dataset,
         y_best: f64,
     ) -> Vec<Score> {
         let kx = kernel::cross(x_cand, &post.x, &post.theta);
+        let q = kx.matmul(&post.k_inv);
         let amp = post.theta.amp();
-        let n = post.x.len();
         let mut out = Vec::with_capacity(x_cand.len());
         for i in 0..x_cand.len() {
             let row = kx.row(i);
-            let mu = crate::linalg::dot(row, &post.alpha);
+            let mu = dot(row, &post.alpha);
             // var = amp − rowᵀ K⁻¹ row (same formula the HLO graph uses)
-            let mut quad = 0.0;
-            for a in 0..n {
-                quad += row[a] * crate::linalg::dot(post.k_inv.row(a), row);
-            }
+            let quad = dot(q.row(i), row);
             let var = (amp - quad).max(1e-12);
             out.push(Score { ei: expected_improvement(mu, var, y_best), mu, var });
         }
@@ -127,17 +159,35 @@ pub fn erf(x: f64) -> f64 {
     sign * y
 }
 
-/// Negative log marginal likelihood of normalized targets under `theta`.
+/// Negative log marginal likelihood of normalized targets under `theta`
+/// (allocating convenience wrapper over [`nll_scratch`]).
 ///
 /// Returns `None` when the Gram matrix is numerically non-PD (the caller —
 /// slice sampler or optimizer — treats that as an infinitely bad point).
-pub fn nll(backend: &dyn SurrogateBackend, x: &[Vec<f64>], y: &[f64], theta: &Theta) -> Option<f64> {
-    let k = backend.gram(x, theta);
-    let l = cholesky(&k).ok()?;
-    let a = solve_lower(&l, y);
-    let quad: f64 = a.iter().map(|v| v * v).sum();
+pub fn nll(backend: &dyn SurrogateBackend, x: &Dataset, y: &[f64], theta: &Theta) -> Option<f64> {
+    let mut scratch = GramScratch::new();
+    nll_scratch(backend, x, y, theta, &mut scratch)
+}
+
+/// Negative log marginal likelihood through a reusable workspace: Gram
+/// build, in-place Cholesky and forward solve all land in `scratch`, so a
+/// warmed-up scratch makes this evaluation allocation-free — the slice
+/// sampler calls it ~600 times per proposal.
+pub fn nll_scratch(
+    backend: &dyn SurrogateBackend,
+    x: &Dataset,
+    y: &[f64],
+    theta: &Theta,
+    scratch: &mut GramScratch,
+) -> Option<f64> {
+    backend.gram_into(x, theta, scratch);
+    cholesky_in_place(&mut scratch.k).ok()?;
+    scratch.v.resize(y.len(), 0.0);
+    scratch.v.copy_from_slice(y);
+    solve_lower_in_place(&scratch.k, &mut scratch.v);
+    let quad: f64 = scratch.v.iter().map(|v| v * v).sum();
     let val = 0.5 * quad
-        + 0.5 * cho_logdet(&l)
+        + 0.5 * cho_logdet(&scratch.k)
         + 0.5 * x.len() as f64 * (2.0 * std::f64::consts::PI).ln();
     val.is_finite().then_some(val)
 }
@@ -160,9 +210,13 @@ impl GpModel {
     /// Fit posteriors for a set of theta samples over raw observations.
     /// Thetas whose Gram matrix fails to factorize are dropped; returns
     /// `None` if none survive or the dataset is empty.
+    ///
+    /// Per-theta factorizations are independent, so they run through
+    /// [`parallel::par_map`] when the dataset is large enough to pay for
+    /// the threads; the surviving posteriors keep theta order either way.
     pub fn fit(
         backend: &dyn SurrogateBackend,
-        x: &[Vec<f64>],
+        x: &Dataset,
         y_raw: &[f64],
         thetas: Vec<Theta>,
     ) -> Option<GpModel> {
@@ -172,43 +226,105 @@ impl GpModel {
         let (y_mean, y_std) = normalization(y_raw);
         let y: Vec<f64> = y_raw.iter().map(|v| (v - y_mean) / y_std).collect();
         let y_best_norm = y.iter().cloned().fold(f64::INFINITY, f64::min);
-        let mut posteriors = Vec::new();
-        for theta in thetas {
-            let k = backend.gram(x, &theta);
-            let Ok(l) = cholesky(&k) else { continue };
+        let fit_one = |theta: &Theta| -> Option<PosteriorState> {
+            let k = backend.gram(x, theta);
+            let l = cholesky(&k).ok()?;
             let alpha = cho_solve(&l, &y);
             let k_inv = cho_inverse(&l);
-            posteriors.push(PosteriorState { x: x.to_vec(), theta, l, k_inv, alpha });
-        }
+            Some(PosteriorState { x: x.clone(), theta: theta.clone(), l, k_inv, alpha })
+        };
+        let fitted: Vec<Option<PosteriorState>> =
+            if thetas.len() > 1 && x.len() >= PAR_MIN_FIT_N && parallel::max_threads() > 1 {
+                parallel::par_map(&thetas, fit_one)
+            } else {
+                thetas.iter().map(fit_one).collect()
+            };
+        let posteriors: Vec<PosteriorState> = fitted.into_iter().flatten().collect();
         (!posteriors.is_empty()).then_some(GpModel { posteriors, y_mean, y_std, y_best_norm })
     }
 
+    /// Fit a single posterior from an already-computed Cholesky factor of
+    /// the regularized Gram matrix (the rank-1 empirical-Bayes refit path:
+    /// the factor was extended in O(N²) by
+    /// [`crate::linalg::chol_append_row`], so no O(N³) refactorization
+    /// happens here).
+    pub fn fit_from_factor(
+        x: &Dataset,
+        y_raw: &[f64],
+        theta: Theta,
+        l: Matrix,
+    ) -> Option<GpModel> {
+        if x.is_empty() || x.len() != y_raw.len() || l.rows != x.len() {
+            return None;
+        }
+        let (y_mean, y_std) = normalization(y_raw);
+        let y: Vec<f64> = y_raw.iter().map(|v| (v - y_mean) / y_std).collect();
+        let y_best_norm = y.iter().cloned().fold(f64::INFINITY, f64::min);
+        let alpha = cho_solve(&l, &y);
+        let k_inv = cho_inverse(&l);
+        let posteriors = vec![PosteriorState { x: x.clone(), theta, l, k_inv, alpha }];
+        Some(GpModel { posteriors, y_mean, y_std, y_best_norm })
+    }
+
     /// Acquisition scores averaged over the GPHP posterior samples
-    /// (normalized-y units).
-    pub fn score(&self, backend: &dyn SurrogateBackend, x_cand: &[Vec<f64>]) -> Vec<Score> {
-        let mut acc: Vec<Score> = vec![Score { ei: 0.0, mu: 0.0, var: 0.0 }; x_cand.len()];
-        for post in &self.posteriors {
-            let s = backend.posterior_scores(post, x_cand, self.y_best_norm);
-            for (a, b) in acc.iter_mut().zip(s) {
-                a.ei += b.ei;
-                a.mu += b.mu;
-                a.var += b.var;
-            }
-        }
-        let k = self.posteriors.len() as f64;
-        for a in &mut acc {
-            a.ei /= k;
-            a.mu /= k;
-            a.var /= k;
-        }
-        acc
+    /// (normalized-y units). Fans out over posterior samples when the
+    /// batch is large enough; reduction is in posterior order, so the
+    /// result is bit-identical to [`GpModel::score_sequential`].
+    pub fn score(&self, backend: &dyn SurrogateBackend, x_cand: &Dataset) -> Vec<Score> {
+        let go_parallel = self.posteriors.len() > 1
+            && x_cand.len() >= PAR_MIN_SCORE_M
+            && parallel::max_threads() > 1;
+        let per: Vec<Vec<Score>> = if go_parallel {
+            parallel::par_map(&self.posteriors, |p| {
+                backend.posterior_scores(p, x_cand, self.y_best_norm)
+            })
+        } else {
+            self.posteriors
+                .iter()
+                .map(|p| backend.posterior_scores(p, x_cand, self.y_best_norm))
+                .collect()
+        };
+        average_scores(per, x_cand.len())
+    }
+
+    /// Strictly sequential scoring (determinism cross-checks and benches).
+    pub fn score_sequential(
+        &self,
+        backend: &dyn SurrogateBackend,
+        x_cand: &Dataset,
+    ) -> Vec<Score> {
+        let per: Vec<Vec<Score>> = self
+            .posteriors
+            .iter()
+            .map(|p| backend.posterior_scores(p, x_cand, self.y_best_norm))
+            .collect();
+        average_scores(per, x_cand.len())
     }
 
     /// Posterior mean in raw-objective units at one point.
     pub fn predict_raw(&self, backend: &dyn SurrogateBackend, x: &[f64]) -> (f64, f64) {
-        let s = self.score(backend, &[x.to_vec()]);
+        let s = self.score(backend, &Dataset::from_row(x));
         (self.y_mean + self.y_std * s[0].mu, self.y_std * self.y_std * s[0].var)
     }
+}
+
+/// Order-stable average of per-posterior score vectors.
+fn average_scores(per: Vec<Vec<Score>>, m: usize) -> Vec<Score> {
+    let mut acc: Vec<Score> = vec![Score { ei: 0.0, mu: 0.0, var: 0.0 }; m];
+    for s in &per {
+        for (a, b) in acc.iter_mut().zip(s) {
+            a.ei += b.ei;
+            a.mu += b.mu;
+            a.var += b.var;
+        }
+    }
+    let k = per.len() as f64;
+    for a in &mut acc {
+        a.ei /= k;
+        a.mu /= k;
+        a.var /= k;
+    }
+    acc
 }
 
 /// Mean/std normalization constants (std floored for degenerate data).
@@ -224,13 +340,12 @@ mod tests {
     use super::*;
     use crate::rng::Rng;
 
-    fn toy_data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    fn toy_data(n: usize, d: usize, seed: u64) -> (Dataset, Vec<f64>) {
         let mut rng = Rng::new(seed);
-        let x: Vec<Vec<f64>> =
-            (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        let x = Dataset::from_fn(n, d, |_, _| rng.uniform());
         // smooth function + small noise
         let y: Vec<f64> = x
-            .iter()
+            .rows()
             .map(|p| {
                 (3.0 * p[0]).sin() + p.iter().skip(1).sum::<f64>() * 0.3 + 0.01 * rng.normal()
             })
@@ -273,20 +388,43 @@ mod tests {
     }
 
     #[test]
+    fn nll_scratch_reuse_is_stable_and_allocation_free() {
+        let (x, y) = toy_data(25, 3, 8);
+        let (m, s) = normalization(&y);
+        let yn: Vec<f64> = y.iter().map(|v| (v - m) / s).collect();
+        let theta = Theta::default_for_dim(3);
+        let mut scratch = GramScratch::new();
+        let first = nll_scratch(&NativeBackend, &x, &yn, &theta, &mut scratch).unwrap();
+        let warm = scratch.reallocs();
+        for _ in 0..200 {
+            let again = nll_scratch(&NativeBackend, &x, &yn, &theta, &mut scratch).unwrap();
+            assert_eq!(first.to_bits(), again.to_bits());
+        }
+        assert_eq!(
+            scratch.reallocs(),
+            warm,
+            "NLL inner loop must not allocate once the scratch is warm"
+        );
+        // and the scratch path agrees with the one-shot wrapper
+        let one_shot = nll(&NativeBackend, &x, &yn, &theta).unwrap();
+        assert_eq!(first.to_bits(), one_shot.to_bits());
+    }
+
+    #[test]
     fn posterior_interpolates_training_data() {
         let (x, y) = toy_data(25, 2, 2);
         let model =
             GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap();
-        for (xi, yi) in x.iter().zip(&y).take(5) {
-            let (mu, var) = model.predict_raw(&NativeBackend, xi);
-            assert!((mu - yi).abs() < 0.15, "mu={mu} yi={yi}");
+        for i in 0..5 {
+            let (mu, var) = model.predict_raw(&NativeBackend, x.row(i));
+            assert!((mu - y[i]).abs() < 0.15, "mu={mu} yi={}", y[i]);
             assert!(var < 0.1);
         }
     }
 
     #[test]
     fn posterior_uncertainty_grows_away_from_data() {
-        let x = vec![vec![0.5, 0.5]];
+        let x = Dataset::from_row(&[0.5, 0.5]);
         let y = vec![0.0];
         let model =
             GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap();
@@ -303,18 +441,56 @@ mod tests {
         let model =
             GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2), t2.clone()])
                 .unwrap();
-        let avg = model.score(&NativeBackend, &[vec![0.3, 0.7]])[0];
+        let cand = Dataset::from_row(&[0.3, 0.7]);
+        let avg = model.score(&NativeBackend, &cand)[0];
         let m1 = GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(2)]).unwrap();
         let m2 = GpModel::fit(&NativeBackend, &x, &y, vec![t2]).unwrap();
-        let s1 = m1.score(&NativeBackend, &[vec![0.3, 0.7]])[0];
-        let s2 = m2.score(&NativeBackend, &[vec![0.3, 0.7]])[0];
+        let s1 = m1.score(&NativeBackend, &cand)[0];
+        let s2 = m2.score(&NativeBackend, &cand)[0];
         assert!((avg.mu - 0.5 * (s1.mu + s2.mu)).abs() < 1e-9);
         assert!((avg.ei - 0.5 * (s1.ei + s2.ei)).abs() < 1e-9);
     }
 
     #[test]
+    fn parallel_score_is_bit_identical_to_sequential() {
+        let (x, y) = toy_data(80, 3, 4);
+        let mut thetas = Vec::new();
+        for i in 0..6 {
+            let mut t = Theta::default_for_dim(3);
+            t.log_ls = vec![(0.2 + 0.1 * i as f64).ln(); 3];
+            thetas.push(t);
+        }
+        let model = GpModel::fit(&NativeBackend, &x, &y, thetas).unwrap();
+        let (cand, _) = toy_data(100, 3, 5);
+        let par = model.score(&NativeBackend, &cand);
+        let seq = model.score_sequential(&NativeBackend, &cand);
+        assert_eq!(par.len(), seq.len());
+        for (a, b) in par.iter().zip(&seq) {
+            assert_eq!(a.ei.to_bits(), b.ei.to_bits());
+            assert_eq!(a.mu.to_bits(), b.mu.to_bits());
+            assert_eq!(a.var.to_bits(), b.var.to_bits());
+        }
+    }
+
+    #[test]
+    fn fit_from_factor_matches_direct_fit() {
+        let (x, y) = toy_data(20, 2, 6);
+        let theta = Theta::default_for_dim(2);
+        let direct = GpModel::fit(&NativeBackend, &x, &y, vec![theta.clone()]).unwrap();
+        let l = direct.posteriors[0].l.clone();
+        let via_factor = GpModel::fit_from_factor(&x, &y, theta, l).unwrap();
+        let (cand, _) = toy_data(10, 2, 7);
+        let a = direct.score(&NativeBackend, &cand);
+        let b = via_factor.score(&NativeBackend, &cand);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u.mu - v.mu).abs() < 1e-12);
+            assert!((u.var - v.var).abs() < 1e-12);
+        }
+    }
+
+    #[test]
     fn fit_drops_non_finite_thetas() {
-        let x = vec![vec![0.1], vec![0.9]];
+        let x = Dataset::from_rows(&[vec![0.1], vec![0.9]]);
         let y = vec![0.0, 1.0];
         let mut degenerate = Theta::default_for_dim(1);
         degenerate.log_amp = 710.0; // exp overflows ⇒ non-finite Gram ⇒ dropped

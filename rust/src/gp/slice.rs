@@ -6,9 +6,15 @@
 //! problem (θ ∈ ℝᵏ) to the standard univariate slice sampler (Neal 2003,
 //! stepping-out + shrinkage), with box bounds on the GPHPs for numerical
 //! stability.
+//!
+//! Every likelihood query runs through one [`GramScratch`] workspace and a
+//! reusable packed-θ buffer, so the inner loop (~600 Gram + Cholesky
+//! evaluations per proposal at the paper's settings) performs zero heap
+//! allocations after the first evaluation (DESIGN.md §3).
 
+use super::dataset::{Dataset, GramScratch};
 use super::theta::Theta;
-use super::{nll, SurrogateBackend};
+use super::{nll_scratch, SurrogateBackend};
 use crate::rng::Rng;
 
 /// Sampler configuration. `Default` is the paper's production setting.
@@ -40,23 +46,30 @@ impl SliceConfig {
     }
 }
 
-/// Log unnormalized posterior of theta: −NLL + log prior. `None` ⇒ −∞.
-fn log_target(
+/// Zero-allocation log unnormalized posterior of a packed θ: −NLL + log
+/// prior, or −∞ outside the stability box / on non-PD Gram matrices.
+#[allow(clippy::too_many_arguments)]
+fn log_target_scratch(
     backend: &dyn SurrogateBackend,
-    x: &[Vec<f64>],
+    x: &Dataset,
     y: &[f64],
     packed: &[f64],
     d: usize,
-) -> Option<f64> {
+    bounds: &[(f64, f64)],
+    theta_buf: &mut Theta,
+    scratch: &mut GramScratch,
+) -> f64 {
     // outside the stability box ⇒ reject
-    for (v, (lo, hi)) in packed.iter().zip(Theta::bounds(d)) {
-        if *v < lo || *v > hi {
-            return None;
+    for (v, (lo, hi)) in packed.iter().zip(bounds) {
+        if *v < *lo || *v > *hi {
+            return f64::NEG_INFINITY;
         }
     }
-    let theta = Theta::unpack(packed, d);
-    let l = nll(backend, x, y, &theta)?;
-    Some(-l + theta.log_prior())
+    theta_buf.unpack_into(packed, d);
+    match nll_scratch(backend, x, y, theta_buf, scratch) {
+        Some(l) => -l + theta_buf.log_prior(),
+        None => f64::NEG_INFINITY,
+    }
 }
 
 /// Run the chain; returns the thinned posterior samples of θ.
@@ -65,7 +78,7 @@ fn log_target(
 /// chain starts at [`Theta::default_for_dim`] (or `init` if given).
 pub fn sample_gphp(
     backend: &dyn SurrogateBackend,
-    x: &[Vec<f64>],
+    x: &Dataset,
     y: &[f64],
     d: usize,
     config: &SliceConfig,
@@ -74,8 +87,11 @@ pub fn sample_gphp(
 ) -> Vec<Theta> {
     let mut cur = init.unwrap_or_else(|| Theta::default_for_dim(d)).pack();
     Theta::clamp_packed(&mut cur, d);
-    let mut cur_lp = log_target(backend, x, y, &cur, d)
-        .unwrap_or(f64::NEG_INFINITY);
+    let bounds = Theta::bounds(d);
+    let mut theta_buf = Theta::default_for_dim(d);
+    let mut scratch = GramScratch::new();
+    let mut cur_lp =
+        log_target_scratch(backend, x, y, &cur, d, &bounds, &mut theta_buf, &mut scratch);
     // If even the default point fails (tiny pathological datasets), bail to
     // the prior default — callers fall back to the default theta.
     if !cur_lp.is_finite() {
@@ -83,43 +99,49 @@ pub fn sample_gphp(
     }
 
     let k = cur.len();
+    let mut dir = vec![0.0; k];
+    let mut probe = vec![0.0; k];
     let mut kept = Vec::new();
     for step in 0..config.samples {
         // one random-direction univariate slice update
-        let dir = rng.unit_vector(k);
+        rng.unit_vector_into(&mut dir);
         let log_y = cur_lp + rng.uniform().max(1e-300).ln(); // slice level
 
         // stepping out
         let mut lo = -config.width * rng.uniform();
         let mut hi = lo + config.width;
-        let eval = |t: f64, backend: &dyn SurrogateBackend| -> f64 {
-            let p: Vec<f64> = cur.iter().zip(&dir).map(|(c, u)| c + t * u).collect();
-            log_target(backend, x, y, &p, d).unwrap_or(f64::NEG_INFINITY)
-        };
+        macro_rules! eval_at {
+            ($t:expr) => {{
+                for ((p, c), u) in probe.iter_mut().zip(&cur).zip(&dir) {
+                    *p = c + $t * u;
+                }
+                log_target_scratch(
+                    backend, x, y, &probe, d, &bounds, &mut theta_buf, &mut scratch,
+                )
+            }};
+        }
         for _ in 0..config.max_steps_out {
-            if eval(lo, backend) <= log_y {
+            if eval_at!(lo) <= log_y {
                 break;
             }
             lo -= config.width;
         }
         for _ in 0..config.max_steps_out {
-            if eval(hi, backend) <= log_y {
+            if eval_at!(hi) <= log_y {
                 break;
             }
             hi += config.width;
         }
 
         // shrinkage
-        let mut accepted = false;
         for _ in 0..60 {
             let t = rng.uniform_range(lo, hi);
-            let lp = eval(t, backend);
+            let lp = eval_at!(t);
             if lp > log_y {
                 for (c, u) in cur.iter_mut().zip(&dir) {
                     *c += t * u;
                 }
                 cur_lp = lp;
-                accepted = true;
                 break;
             }
             if t < 0.0 {
@@ -128,7 +150,7 @@ pub fn sample_gphp(
                 hi = t;
             }
         }
-        let _ = accepted; // a fully shrunk bracket keeps the current point
+        // a fully shrunk bracket keeps the current point
 
         if step >= config.burn_in && (step - config.burn_in) % config.thin == 0 {
             kept.push(Theta::unpack(&cur, d));
@@ -145,10 +167,13 @@ mod tests {
     use super::*;
     use crate::gp::NativeBackend;
 
-    fn toy(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    fn toy(n: usize, seed: u64) -> (Dataset, Vec<f64>) {
         let mut rng = Rng::new(seed);
-        let x: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
-        let y: Vec<f64> = x.iter().map(|p| (4.0 * p[0]).sin() + 0.05 * rng.normal()).collect();
+        let mut x = Dataset::new(2);
+        for _ in 0..n {
+            x.push_row(&[rng.uniform(), rng.uniform()]);
+        }
+        let y: Vec<f64> = x.rows().map(|p| (4.0 * p[0]).sin() + 0.05 * rng.normal()).collect();
         let (m, s) = crate::gp::normalization(&y);
         (x, y.iter().map(|v| (v - m) / s).collect())
     }

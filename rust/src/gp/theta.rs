@@ -73,6 +73,21 @@ impl Theta {
         }
     }
 
+    /// Unpack into an existing Theta, reusing its buffers (no allocation
+    /// when the dimension is unchanged — the slice sampler calls this once
+    /// per likelihood query).
+    pub fn unpack_into(&mut self, v: &[f64], d: usize) {
+        assert_eq!(v.len(), Self::packed_len(d), "theta length mismatch");
+        self.log_amp = v[0];
+        self.log_noise = v[1];
+        self.log_ls.resize(d, 0.0);
+        self.log_ls.copy_from_slice(&v[2..2 + d]);
+        self.log_wa.resize(d, 0.0);
+        self.log_wa.copy_from_slice(&v[2 + d..2 + 2 * d]);
+        self.log_wb.resize(d, 0.0);
+        self.log_wb.copy_from_slice(&v[2 + 2 * d..2 + 3 * d]);
+    }
+
     /// Positive-space views.
     pub fn amp(&self) -> f64 {
         self.log_amp.exp()
@@ -157,6 +172,21 @@ mod tests {
         let packed = t.pack();
         assert_eq!(packed.len(), Theta::packed_len(3));
         assert_eq!(Theta::unpack(&packed, 3), t);
+    }
+
+    #[test]
+    fn unpack_into_matches_unpack() {
+        let t = Theta {
+            log_amp: -0.4,
+            log_noise: -6.0,
+            log_ls: vec![0.3, -0.7],
+            log_wa: vec![0.05, -0.02],
+            log_wb: vec![0.0, 0.4],
+        };
+        let packed = t.pack();
+        let mut buf = Theta::default_for_dim(2);
+        buf.unpack_into(&packed, 2);
+        assert_eq!(buf, Theta::unpack(&packed, 2));
     }
 
     #[test]

@@ -4,8 +4,15 @@
 //! `cargo bench` targets use this self-contained harness: warmup + timed
 //! iterations, robust summary statistics, and aligned table printing shared
 //! by the figure-reproduction examples.
+//!
+//! Perf benches additionally emit machine-readable `BENCH_<name>.json`
+//! reports (see [`BenchReport`]) so the latency trajectory is tracked
+//! across PRs; `scripts/bench.sh` diffs a fresh run against the committed
+//! baselines.
 
 use std::time::Instant;
+
+use crate::json::Json;
 
 /// Summary statistics over timed iterations (seconds).
 #[derive(Clone, Copy, Debug)]
@@ -78,6 +85,64 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     let stats = BenchStats::from_samples(samples);
     println!("{name:<44} {}", stats.human());
     stats
+}
+
+/// Machine-readable benchmark report, one entry per measured case.
+///
+/// Serialized as `BENCH_<name>.json` next to the working directory of the
+/// bench run (repo root under `cargo bench`), or under `AMT_BENCH_DIR`
+/// when set. Schema:
+///
+/// ```json
+/// { "bench": "propose", "schema": 1,
+///   "entries": [ { "label": "...", "params": {...}, "iters": 3,
+///                  "mean_s": 0.01, "p50_s": 0.01, "p95_s": 0.02,
+///                  "min_s": 0.009 } ] }
+/// ```
+pub struct BenchReport {
+    name: String,
+    entries: Vec<Json>,
+}
+
+impl BenchReport {
+    /// New empty report named `name` (file becomes `BENCH_<name>.json`).
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one measured case with free-form string parameters.
+    pub fn push(&mut self, label: &str, params: &[(&str, String)], stats: &BenchStats) {
+        let p = Json::Obj(
+            params.iter().map(|(k, v)| (k.to_string(), Json::Str(v.clone()))).collect(),
+        );
+        self.entries.push(Json::obj(vec![
+            ("label", Json::Str(label.to_string())),
+            ("params", p),
+            ("iters", Json::Num(stats.iters as f64)),
+            ("mean_s", Json::Num(stats.mean)),
+            ("p50_s", Json::Num(stats.p50)),
+            ("p95_s", Json::Num(stats.p95)),
+            ("min_s", Json::Num(stats.min)),
+        ]));
+    }
+
+    /// The report as a JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("schema", Json::Num(1.0)),
+            ("entries", Json::Arr(self.entries.clone())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` (respecting `AMT_BENCH_DIR`) and return
+    /// the path written.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("AMT_BENCH_DIR").unwrap_or_else(|_| ".".into());
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_pretty() + "\n")?;
+        Ok(path)
+    }
 }
 
 /// Print an aligned table: header + rows of equal arity.
@@ -170,5 +235,25 @@ mod tests {
         let (m, s) = mean_std(&[2.0, 4.0]);
         assert_eq!(m, 3.0);
         assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn bench_report_serializes_and_parses_back() {
+        let stats = BenchStats::from_samples(vec![0.01, 0.02, 0.03]);
+        let mut report = BenchReport::new("propose");
+        report.push("propose native n=50", &[("n", "50".into()), ("backend", "native".into())], &stats);
+        let j = report.to_json();
+        let text = j.to_pretty();
+        let parsed = crate::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("propose"));
+        assert_eq!(parsed.get("schema").unwrap().as_i64(), Some(1));
+        let entries = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("iters").unwrap().as_i64(), Some(3));
+        assert_eq!(entries[0].get("p50_s").unwrap().as_f64(), Some(stats.p50));
+        assert_eq!(
+            entries[0].get("params").unwrap().get("backend").unwrap().as_str(),
+            Some("native")
+        );
     }
 }

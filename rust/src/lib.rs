@@ -14,6 +14,12 @@
 //! PJRT by [`runtime`]; a pure-Rust mirror of the same math lives in [`gp`]
 //! and is cross-checked against the artifacts in integration tests.
 //!
+//! Training data flows through the stack as one contiguous row-major
+//! [`gp::Dataset`]; likelihood queries reuse a [`gp::GramScratch`]
+//! workspace (zero allocations in the slice-sampling inner loop); and GPHP
+//! fitting / anchor scoring fan out over [`parallel`] with order-stable,
+//! bit-deterministic reduction. See `DESIGN.md` §2–§5.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the reproduced figures.
 
@@ -29,6 +35,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod multiobjective;
 pub mod objectives;
+pub mod parallel;
 pub mod platform;
 pub mod rng;
 pub mod runtime;

@@ -12,7 +12,7 @@
 use std::fmt;
 
 /// Row-major dense matrix.
-#[derive(Clone, PartialEq)]
+#[derive(Clone, Default, PartialEq)]
 pub struct Matrix {
     pub rows: usize,
     pub cols: usize,
@@ -125,52 +125,113 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// Returns `Err` with the failing pivot index if the matrix is not PD (the
 /// BO engine treats that as a rejected GPHP sample).
 pub fn cholesky(a: &Matrix) -> Result<Matrix, usize> {
-    assert_eq!(a.rows, a.cols);
-    let n = a.rows;
-    let mut l = Matrix::zeros(n, n);
+    let mut l = a.clone();
+    cholesky_in_place(&mut l)?;
+    // zero the upper triangle (the in-place factorization leaves A there)
+    let n = l.rows;
     for i in 0..n {
-        for j in 0..=i {
-            // split borrows: rows i and j of l
-            let (s, ljj) = {
-                let ri = &l.data[i * n..i * n + j];
-                let rj = &l.data[j * n..j * n + j];
-                (dot(ri, rj), l[(j, j)])
-            };
-            if i == j {
-                let d = a[(i, i)] - s;
-                if d <= 0.0 || !d.is_finite() {
-                    return Err(i);
-                }
-                l[(i, i)] = d.sqrt();
-            } else {
-                l[(i, j)] = (a[(i, j)] - s) / ljj;
-            }
+        for j in i + 1..n {
+            l[(i, j)] = 0.0;
         }
     }
     Ok(l)
 }
 
+/// In-place Cholesky: overwrite the lower triangle of `a` with L.
+///
+/// The upper triangle is left untouched (it still holds A's entries), so
+/// callers that only read the lower triangle — all triangular solves and
+/// [`cho_logdet`] in this module — can use the result directly. This is
+/// the zero-allocation factorization the slice-sampler NLL loop runs on a
+/// [`crate::gp::GramScratch`]-owned buffer (~600 times per BO proposal).
+pub fn cholesky_in_place(a: &mut Matrix) -> Result<(), usize> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    for i in 0..n {
+        for j in 0..=i {
+            // split borrows: the already-factorized prefixes of rows i and j
+            let (s, ljj) = {
+                let ri = &a.data[i * n..i * n + j];
+                let rj = &a.data[j * n..j * n + j];
+                (dot(ri, rj), a.data[j * n + j])
+            };
+            if i == j {
+                let d = a.data[i * n + i] - s;
+                if d <= 0.0 || !d.is_finite() {
+                    return Err(i);
+                }
+                a.data[i * n + i] = d.sqrt();
+            } else {
+                a.data[i * n + j] = (a.data[i * n + j] - s) / ljj;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Extend a Cholesky factor by one row/column in O(N²).
+///
+/// Given L with L Lᵀ = K (n × n), the kernel column `k_new = k(x_new, X)`
+/// and the diagonal value `k_diag = k(x_new, x_new) + noise + jitter`,
+/// returns the (n+1) × (n+1) factor of the bordered matrix
+/// `[[K, k_new], [k_newᵀ, k_diag]]` without refactorizing: the new row is
+/// `w = L⁻¹ k_new` and the new pivot is `sqrt(k_diag − ‖w‖²)`. This is
+/// what makes empirical-Bayes refits after each fresh observation O(N²)
+/// instead of O(N³) (DESIGN.md §4).
+pub fn chol_append_row(l: &Matrix, k_new: &[f64], k_diag: f64) -> Result<Matrix, usize> {
+    let n = l.rows;
+    assert_eq!(k_new.len(), n);
+    let w = solve_lower(l, k_new);
+    let d = k_diag - w.iter().map(|v| v * v).sum::<f64>();
+    if d <= 0.0 || !d.is_finite() {
+        return Err(n);
+    }
+    let m = n + 1;
+    let mut out = Matrix::zeros(m, m);
+    for i in 0..n {
+        out.data[i * m..i * m + i + 1].copy_from_slice(&l.data[i * n..i * n + i + 1]);
+    }
+    out.data[n * m..n * m + n].copy_from_slice(&w);
+    out[(n, n)] = d.sqrt();
+    Ok(out)
+}
+
 /// Solve L x = b for lower-triangular L (forward substitution).
 pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
-    let n = l.rows;
     let mut x = b.to_vec();
-    for i in 0..n {
-        let s = dot(&l.data[i * n..i * n + i], &x[..i]);
-        x[i] = (x[i] - s) / l[(i, i)];
-    }
+    solve_lower_in_place(l, &mut x);
     x
 }
 
+/// Forward substitution into a caller-owned buffer (zero-allocation path).
+/// `x` holds b on entry and the solution on exit.
+pub fn solve_lower_in_place(l: &Matrix, x: &mut [f64]) {
+    let n = l.rows;
+    debug_assert_eq!(x.len(), n);
+    for i in 0..n {
+        let s = dot(&l.data[i * n..i * n + i], &x[..i]);
+        x[i] = (x[i] - s) / l.data[i * n + i];
+    }
+}
+
 /// Solve Lᵀ x = b for lower-triangular L (backward substitution).
+///
+/// Column-oriented (saxpy) form: once x[i] is final, its contribution is
+/// subtracted from all earlier entries by streaming *row i* of L, which is
+/// contiguous in the row-major layout — instead of gathering the strided
+/// column L[k][i] per unknown. Same arithmetic, sequential memory access;
+/// this is the backward-substitution half of every K⁻¹-column solve in
+/// [`cho_inverse`].
 pub fn solve_lower_transpose(l: &Matrix, b: &[f64]) -> Vec<f64> {
     let n = l.rows;
     let mut x = b.to_vec();
     for i in (0..n).rev() {
-        let mut s = 0.0;
-        for k in i + 1..n {
-            s += l[(k, i)] * x[k];
+        x[i] /= l.data[i * n + i];
+        let xi = x[i];
+        let row = &l.data[i * n..i * n + i];
+        for (xk, &lik) in x[..i].iter_mut().zip(row) {
+            *xk -= lik * xi;
         }
-        x[i] = (x[i] - s) / l[(i, i)];
     }
     x
 }
@@ -292,6 +353,65 @@ mod tests {
         for (u, v) in ltz.iter().zip(&b) {
             assert!((u - v).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn cholesky_in_place_matches_out_of_place() {
+        for n in [1usize, 3, 8, 33] {
+            let a = random_spd(n, 100 + n as u64);
+            let l = cholesky(&a).unwrap();
+            let mut b = a.clone();
+            cholesky_in_place(&mut b).unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_eq!(l[(i, j)].to_bits(), b[(i, j)].to_bits(), "n={n} ({i},{j})");
+                }
+            }
+            // upper triangle still holds A (documented contract)
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(b[(i, j)], a[(i, j)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chol_append_row_matches_full_factorization() {
+        for n in [1usize, 4, 12, 40] {
+            let big = random_spd(n + 1, 7 + n as u64);
+            // principal n×n block, its factor, and the border column
+            let mut small = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    small[(i, j)] = big[(i, j)];
+                }
+            }
+            let l_small = cholesky(&small).unwrap();
+            let col: Vec<f64> = (0..n).map(|i| big[(i, n)]).collect();
+            let l_app = chol_append_row(&l_small, &col, big[(n, n)]).unwrap();
+            let l_full = cholesky(&big).unwrap();
+            assert!(l_full.max_abs_diff(&l_app) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn chol_append_row_rejects_non_pd_border() {
+        let l = cholesky(&random_spd(5, 2)).unwrap();
+        // a huge border column makes the Schur complement negative
+        let col = vec![1e6; 5];
+        assert!(chol_append_row(&l, &col, 1.0).is_err());
+    }
+
+    #[test]
+    fn solve_lower_in_place_matches_allocating() {
+        let a = random_spd(17, 21);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..17).map(|i| (i as f64 * 0.7).cos()).collect();
+        let y = solve_lower(&l, &b);
+        let mut z = b.clone();
+        solve_lower_in_place(&l, &mut z);
+        assert_eq!(y, z);
     }
 
     #[test]

@@ -132,10 +132,9 @@ fn cmd_artifacts_check(dir: &str) -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
     for &b in &rt.manifest.buckets.clone() {
         let n = (b * 3 / 4).max(1); // a live size inside this bucket
-        let x: Vec<Vec<f64>> = (0..n)
-            .map(|_| (0..rt.manifest.encoded_dim).map(|_| rng.uniform()).collect())
-            .collect();
-        let theta = Theta::default_for_dim(rt.manifest.encoded_dim);
+        let d = rt.manifest.encoded_dim;
+        let x = amt::gp::Dataset::from_fn(n, d, |_, _| rng.uniform());
+        let theta = Theta::default_for_dim(d);
         let k = amt::gp::SurrogateBackend::gram(&backend, &x, &theta);
         anyhow::ensure!(k.rows == n, "bad gram shape for bucket {b}");
         println!("kernel_matrix_n{b}: OK ({n} live rows)");

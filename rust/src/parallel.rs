@@ -1,0 +1,93 @@
+//! Order-stable data parallelism on std scoped threads.
+//!
+//! The offline vendored crate set does not include rayon, so the hot path
+//! parallelizes with `std::thread::scope` instead: items are split into
+//! contiguous chunks, one worker per chunk, and results are re-assembled
+//! in index order. Every item is computed by a pure function of its input,
+//! and all reductions downstream consume the results in index order, so
+//! parallel output is bit-identical to sequential output regardless of
+//! worker count (DESIGN.md §5 "parallelism & determinism").
+//!
+//! Worker count defaults to the machine's available parallelism and can be
+//! pinned with `AMT_THREADS` (e.g. `AMT_THREADS=1` forces the sequential
+//! path for A/B determinism checks and profiling).
+
+use std::sync::OnceLock;
+
+/// Maximum worker threads for data-parallel regions (≥ 1).
+pub fn max_threads() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        if let Ok(v) = std::env::var("AMT_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Map `f` over `items` in parallel, preserving item order in the output.
+///
+/// Chunked static scheduling: each worker owns one contiguous chunk, and
+/// the chunks are re-joined in order, so the result is exactly
+/// `items.iter().map(f).collect()` — independent of thread count.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = max_threads().min(n);
+    if workers <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| scope.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("parallel worker panicked"));
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let seq: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        let par = par_map(&items, |&x| x * x + 1);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn par_map_handles_small_inputs() {
+        assert_eq!(par_map::<u32, u32, _>(&[], |&x| x), Vec::<u32>::new());
+        assert_eq!(par_map(&[7], |&x: &u32| x + 1), vec![8]);
+        assert_eq!(par_map(&[1, 2], |&x: &u32| x * 10), vec![10, 20]);
+    }
+
+    #[test]
+    fn par_map_float_reduction_is_deterministic() {
+        // identical bits across repeated runs (order-stable reduction)
+        let items: Vec<f64> = (0..257).map(|i| (i as f64).sin()).collect();
+        let a: f64 = par_map(&items, |&x| x.exp()).iter().sum();
+        let b: f64 = par_map(&items, |&x| x.exp()).iter().sum();
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn max_threads_is_at_least_one() {
+        assert!(max_threads() >= 1);
+    }
+}

@@ -123,11 +123,24 @@ impl Rng {
 
     /// Random unit vector in `dim` dimensions (for slice-sampling directions).
     pub fn unit_vector(&mut self, dim: usize) -> Vec<f64> {
+        let mut v = vec![0.0; dim];
+        self.unit_vector_into(&mut v);
+        v
+    }
+
+    /// Fill `out` with a random unit vector without allocating (same draw
+    /// sequence as [`Rng::unit_vector`]).
+    pub fn unit_vector_into(&mut self, out: &mut [f64]) {
         loop {
-            let v: Vec<f64> = (0..dim).map(|_| self.normal()).collect();
-            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for x in out.iter_mut() {
+                *x = self.normal();
+            }
+            let norm = out.iter().map(|x| x * x).sum::<f64>().sqrt();
             if norm > 1e-12 {
-                return v.into_iter().map(|x| x / norm).collect();
+                for x in out.iter_mut() {
+                    *x /= norm;
+                }
+                return;
             }
         }
     }
@@ -212,6 +225,18 @@ mod tests {
             let v = r.unit_vector(dim);
             let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
             assert!((norm - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn unit_vector_into_matches_allocating_form() {
+        let mut a = Rng::new(31);
+        let mut b = Rng::new(31);
+        for dim in [1usize, 4, 9] {
+            let v = a.unit_vector(dim);
+            let mut w = vec![0.0; dim];
+            b.unit_vector_into(&mut w);
+            assert_eq!(v, w);
         }
     }
 

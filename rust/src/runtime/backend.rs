@@ -3,10 +3,14 @@
 //! graphs), with transparent fallback to the native backend for shapes the
 //! artifact family does not cover (encoded dim > D or train set > the
 //! largest bucket).
+//!
+//! Inputs arrive as the contiguous row-major [`Dataset`], so bucket
+//! padding is a straight row-by-row `copy_from_slice` out of the flat
+//! buffer — no per-row pointer chasing or re-marshalling.
 
 use std::sync::Arc;
 
-use crate::gp::{NativeBackend, PosteriorState, Score, SurrogateBackend, Theta};
+use crate::gp::{Dataset, NativeBackend, PosteriorState, Score, SurrogateBackend, Theta};
 use crate::linalg::Matrix;
 
 use super::{literal_matrix, literal_to_f64, literal_vec, HloRuntime};
@@ -63,13 +67,13 @@ impl HloBackend {
 
     /// Pad encoded points (n × d) into a bucket-sized row-major f64 buffer
     /// (b × D) — padded entries are zeros, which the masked graphs ignore.
-    fn pad_points(&self, x: &[Vec<f64>], b: usize) -> Vec<f64> {
+    /// Rows stream straight out of the dataset's flat buffer.
+    fn pad_points(&self, x: &Dataset, b: usize) -> Vec<f64> {
         let dd = self.runtime.manifest.encoded_dim;
+        let d = x.dim();
         let mut out = vec![0.0; b * dd];
-        for (i, row) in x.iter().enumerate() {
-            for (j, &v) in row.iter().enumerate() {
-                out[i * dd + j] = v;
-            }
+        for (i, row) in x.rows().enumerate() {
+            out[i * dd..i * dd + d].copy_from_slice(row);
         }
         out
     }
@@ -94,9 +98,9 @@ impl SurrogateBackend for HloBackend {
         "hlo"
     }
 
-    fn gram(&self, x: &[Vec<f64>], theta: &Theta) -> Matrix {
+    fn gram(&self, x: &Dataset, theta: &Theta) -> Matrix {
         let n = x.len();
-        let d = x.first().map(Vec::len).unwrap_or(0);
+        let d = x.dim();
         if self.hybrid_gram {
             // deliberate routing, not a fallback — see field docs
             return NativeBackend.gram(x, theta);
@@ -149,11 +153,11 @@ impl SurrogateBackend for HloBackend {
     fn posterior_scores(
         &self,
         post: &PosteriorState,
-        x_cand: &[Vec<f64>],
+        x_cand: &Dataset,
         y_best: f64,
     ) -> Vec<Score> {
         let n = post.x.len();
-        let d = post.x.first().map(Vec::len).unwrap_or(0);
+        let d = post.x.dim();
         // §Perf iteration 8: the local EI refinement scores ONE candidate
         // per call (sequential Nelder–Mead); padding it to the M = 256
         // artifact batch wastes 99.6% of the execution and PJRT call
@@ -180,9 +184,8 @@ impl SurrogateBackend for HloBackend {
             let theta_lit = literal_vec(&self.pad_theta(&post.theta));
             let mut kinv_pad = vec![0.0; b * b];
             for i in 0..n {
-                for j in 0..n {
-                    kinv_pad[i * b + j] = post.k_inv[(i, j)];
-                }
+                kinv_pad[i * b..i * b + n]
+                    .copy_from_slice(&post.k_inv.data[i * n..(i + 1) * n]);
             }
             let kinv_lit = literal_matrix(&kinv_pad, b, b)?;
             let mut alpha_pad = post.alpha.clone();
@@ -191,8 +194,12 @@ impl SurrogateBackend for HloBackend {
             let ybest_lit = literal_vec(&[y_best]);
 
             let mut scores = Vec::with_capacity(x_cand.len());
-            for chunk in x_cand.chunks(m_batch) {
-                let cand_lit = literal_matrix(&self.pad_points(chunk, m_batch), m_batch, dd)?;
+            let mut start = 0;
+            while start < x_cand.len() {
+                let end = (start + m_batch).min(x_cand.len());
+                let chunk = x_cand.slice(start..end);
+                let cand_lit =
+                    literal_matrix(&self.pad_points(&chunk, m_batch), m_batch, dd)?;
                 let out = self.runtime.run(
                     &format!("posterior_ei_n{b}"),
                     &[
@@ -206,6 +213,7 @@ impl SurrogateBackend for HloBackend {
                 for i in 0..chunk.len() {
                     scores.push(Score { ei: ei[i], mu: mu[i], var: var[i] });
                 }
+                start = end;
             }
             Ok(scores)
         };

@@ -11,7 +11,8 @@ use std::sync::Arc;
 
 use crate::acquisition::{propose, AcquisitionConfig, Proposal};
 use crate::gp::slice::{sample_gphp, SliceConfig};
-use crate::gp::{fit::fit_empirical_bayes, GpModel, SurrogateBackend, Theta};
+use crate::gp::{fit::fit_empirical_bayes, kernel, Dataset, GpModel, SurrogateBackend, Theta};
+use crate::linalg::{chol_append_row, Matrix};
 use crate::rng::Rng;
 use crate::sobol::Sobol;
 use crate::space::{Config, SearchSpace};
@@ -163,6 +164,12 @@ pub struct BoConfig {
     pub max_fit_points: usize,
     /// Pending-candidate handling under parallelism.
     pub async_mode: AsyncMode,
+    /// Empirical-Bayes refit cadence: reuse the cached theta and extend
+    /// its Cholesky factor by rank-1 row appends (O(N²) per new
+    /// observation) until this many rows have been appended, then run the
+    /// full marginal-likelihood optimization again. 0 disables the cache
+    /// (every refit is a full O(N³) optimization). Ignored in MCMC mode.
+    pub eb_refit_every: usize,
 }
 
 impl Default for BoConfig {
@@ -174,8 +181,22 @@ impl Default for BoConfig {
             input_warping: true,
             max_fit_points: 512,
             async_mode: AsyncMode::Exclusion,
+            eb_refit_every: 5,
         }
     }
+}
+
+/// Cached empirical-Bayes posterior basis: the fitted theta plus the
+/// Cholesky factor over the rows it covers, extendable in O(N²) per fresh
+/// observation via [`chol_append_row`] (DESIGN.md §4).
+struct EbCache {
+    theta: Theta,
+    /// Rows the factor covers (must stay a prefix of the live dataset).
+    x: Dataset,
+    /// Cholesky factor of K(x, x) + reg I under `theta`.
+    l: Matrix,
+    /// Dataset size when theta was last fully re-optimized.
+    fitted_n: usize,
 }
 
 /// GP-based Bayesian optimization: the algorithm of §4, end to end.
@@ -189,6 +210,8 @@ pub struct BayesianOptimization {
     last_theta: Option<Theta>,
     /// Observations injected by warm start (§5.3), prepended to history.
     transferred: Vec<Observation>,
+    /// Rank-1-extendable EB posterior basis.
+    eb_cache: Option<EbCache>,
 }
 
 impl BayesianOptimization {
@@ -208,6 +231,7 @@ impl BayesianOptimization {
             sobol_init: Sobol::new(dim),
             last_theta: None,
             transferred: Vec::new(),
+            eb_cache: None,
         }
     }
 
@@ -236,23 +260,69 @@ impl BayesianOptimization {
         self.space.decode(&u)
     }
 
-    /// Fit the surrogate on (transferred + live) history. Public so benches
-    /// can measure the fit in isolation.
-    pub fn fit_model(&mut self, history: &[Observation]) -> Option<GpModel> {
+    /// Encode (transferred + live) history into a contiguous dataset.
+    fn encode_history(&self, history: &[Observation]) -> (Dataset, Vec<f64>) {
         let mut all: Vec<&Observation> =
             self.transferred.iter().chain(history.iter()).collect();
         if all.len() > self.config.max_fit_points {
             let skip = all.len() - self.config.max_fit_points;
             all.drain(..skip);
         }
-        let mut xs = Vec::with_capacity(all.len());
+        let d = self.space.encoded_dim();
+        let mut xs = Dataset::with_capacity(d, all.len());
         let mut ys = Vec::with_capacity(all.len());
         for o in &all {
             if let Ok(x) = self.space.encode(&o.config) {
-                xs.push(x);
+                xs.push_row(&x);
                 ys.push(o.value);
             }
         }
+        (xs, ys)
+    }
+
+    /// Try the O(N²) empirical-Bayes refit: the cached factor must cover a
+    /// prefix of `xs`, and no more than `eb_refit_every` rows may have
+    /// accumulated since the last full theta optimization. Appended rows
+    /// extend the factor via [`chol_append_row`]. Returns the refitted
+    /// model (re-arming the cache) or `None` when a full refit is due.
+    fn try_eb_rank1(&mut self, xs: &Dataset, ys: &[f64]) -> Option<GpModel> {
+        if self.config.eb_refit_every == 0 {
+            return None;
+        }
+        let cache = self.eb_cache.take()?;
+        let d = xs.dim();
+        let covered = cache.x.len();
+        let usable = covered <= xs.len()
+            && xs.len() >= 2
+            && xs.len() - cache.fitted_n <= self.config.eb_refit_every
+            && cache.x.flat() == &xs.flat()[..covered * d];
+        if !usable {
+            return None;
+        }
+        let mut cache = cache;
+        let reg = cache.theta.noise() + kernel::JITTER;
+        let k_diag = cache.theta.amp() + reg;
+        for i in covered..xs.len() {
+            let row = xs.row(i);
+            let col = kernel::cross_row(row, &cache.x, &cache.theta);
+            match chol_append_row(&cache.l, &col, k_diag) {
+                Ok(l) => {
+                    cache.l = l;
+                    cache.x.push_row(row);
+                }
+                Err(_) => return None, // numerically degenerate ⇒ full refit
+            }
+        }
+        let model = GpModel::fit_from_factor(xs, ys, cache.theta.clone(), cache.l.clone())?;
+        self.last_theta = Some(cache.theta.clone());
+        self.eb_cache = Some(cache);
+        Some(model)
+    }
+
+    /// Fit the surrogate on (transferred + live) history. Public so benches
+    /// can measure the fit in isolation.
+    pub fn fit_model(&mut self, history: &[Observation]) -> Option<GpModel> {
+        let (xs, ys) = self.encode_history(history);
         if xs.len() < 2 {
             return None;
         }
@@ -260,25 +330,37 @@ impl BayesianOptimization {
         let (m, s) = crate::gp::normalization(&ys);
         let yn: Vec<f64> = ys.iter().map(|v| (v - m) / s).collect();
 
-        let mut thetas = match &self.config.gphp {
-            GphpMode::Mcmc(cfg) => sample_gphp(
+        if let GphpMode::EmpiricalBayes { restarts } = self.config.gphp {
+            if let Some(model) = self.try_eb_rank1(&xs, &ys) {
+                return Some(model);
+            }
+            // full O(N³) refit: optimize theta, factorize once, re-arm the
+            // rank-1 cache with the fresh factor
+            let mut theta = fit_empirical_bayes(
                 self.backend.as_ref(),
                 &xs,
                 &yn,
                 d,
-                cfg,
+                restarts,
                 &mut self.rng,
-                self.last_theta.clone(),
-            ),
-            GphpMode::EmpiricalBayes { restarts } => vec![fit_empirical_bayes(
-                self.backend.as_ref(),
-                &xs,
-                &yn,
-                d,
-                *restarts,
-                &mut self.rng,
-            )],
-        };
+            );
+            if !self.config.input_warping {
+                theta = theta.with_identity_warp();
+            }
+            self.last_theta = Some(theta.clone());
+            let model = GpModel::fit(self.backend.as_ref(), &xs, &ys, vec![theta.clone()])?;
+            self.eb_cache = Some(EbCache {
+                theta,
+                x: xs.clone(),
+                l: model.posteriors[0].l.clone(),
+                fitted_n: xs.len(),
+            });
+            return Some(model);
+        }
+
+        let GphpMode::Mcmc(cfg) = &self.config.gphp else { unreachable!() };
+        let mut thetas =
+            sample_gphp(self.backend.as_ref(), &xs, &yn, d, cfg, &mut self.rng, self.last_theta.clone());
         if !self.config.input_warping {
             thetas = thetas.into_iter().map(|t| t.with_identity_warp()).collect();
         }
@@ -456,6 +538,85 @@ mod tests {
             }
         }
         assert!(bo_wins >= 2, "BO won only {bo_wins}/3 against random");
+    }
+
+    #[test]
+    fn eb_rank1_cache_matches_full_refit_quality() {
+        // the rank-1 path must produce the same posterior as a fresh
+        // factorization under the same theta and data
+        let mut bo = BayesianOptimization::new(
+            space_2d(),
+            Arc::new(NativeBackend),
+            BoConfig {
+                init_random: 2,
+                gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                acq: AcquisitionConfig { num_anchors: 32, ..Default::default() },
+                eb_refit_every: 8,
+                ..Default::default()
+            },
+            41,
+        );
+        let mut rng = Rng::new(42);
+        let mut history = Vec::new();
+        for _ in 0..6 {
+            let c = space_2d().sample(&mut rng);
+            let v = quadratic(&c);
+            history.push(Observation { config: c, value: v });
+        }
+        // first fit: full refit, arms the cache
+        let m_full = bo.fit_model(&history).unwrap();
+        let cached_theta = bo.eb_cache.as_ref().unwrap().theta.clone();
+        // add one observation: the next fit must take the rank-1 path
+        let c = space_2d().sample(&mut rng);
+        history.push(Observation { config: c, value: 0.4 });
+        let m_rank1 = bo.fit_model(&history).unwrap();
+        assert_eq!(m_rank1.posteriors.len(), 1);
+        assert_eq!(m_rank1.posteriors[0].theta, cached_theta, "theta must be reused");
+        assert_eq!(m_rank1.posteriors[0].x.len(), 7);
+        // cross-check against a from-scratch factorization with that theta
+        let (xs, ys) = bo.encode_history(&history);
+        let reference =
+            GpModel::fit(&NativeBackend, &xs, &ys, vec![cached_theta]).unwrap();
+        let probe = Dataset::from_row(&[0.35, 0.55]);
+        let a = m_rank1.score(&NativeBackend, &probe)[0];
+        let b = reference.score(&NativeBackend, &probe)[0];
+        assert!((a.mu - b.mu).abs() < 1e-9, "{} vs {}", a.mu, b.mu);
+        assert!((a.var - b.var).abs() < 1e-9, "{} vs {}", a.var, b.var);
+        let _ = m_full;
+    }
+
+    #[test]
+    fn eb_cache_expires_after_refit_cadence() {
+        let mut bo = BayesianOptimization::new(
+            space_2d(),
+            Arc::new(NativeBackend),
+            BoConfig {
+                init_random: 2,
+                gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                acq: AcquisitionConfig { num_anchors: 32, ..Default::default() },
+                eb_refit_every: 2,
+                ..Default::default()
+            },
+            43,
+        );
+        let mut rng = Rng::new(44);
+        let mut history = Vec::new();
+        for _ in 0..5 {
+            let c = space_2d().sample(&mut rng);
+            let v = quadratic(&c);
+            history.push(Observation { config: c, value: v });
+        }
+        bo.fit_model(&history).unwrap();
+        let fitted_n = bo.eb_cache.as_ref().unwrap().fitted_n;
+        assert_eq!(fitted_n, 5);
+        // exceed the cadence: 3 appended rows > eb_refit_every = 2 forces
+        // a full refit, which re-arms the cache at the new size
+        for _ in 0..3 {
+            let c = space_2d().sample(&mut rng);
+            history.push(Observation { config: c, value: quadratic(&c) });
+        }
+        bo.fit_model(&history).unwrap();
+        assert_eq!(bo.eb_cache.as_ref().unwrap().fitted_n, 8, "full refit must re-arm");
     }
 
     #[test]

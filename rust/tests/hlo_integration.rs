@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use amt::gp::{nll, GpModel, NativeBackend, SurrogateBackend, Theta};
+use amt::gp::{nll, Dataset, GpModel, NativeBackend, SurrogateBackend, Theta};
 use amt::rng::Rng;
 use amt::runtime::{HloBackend, HloRuntime};
 
@@ -22,12 +22,11 @@ fn runtime_or_skip() -> Option<Arc<HloRuntime>> {
     }
 }
 
-fn random_data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+fn random_data(n: usize, d: usize, seed: u64) -> (Dataset, Vec<f64>) {
     let mut rng = Rng::new(seed);
-    let x: Vec<Vec<f64>> =
-        (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+    let x = Dataset::from_fn(n, d, |_, _| rng.uniform());
     let y: Vec<f64> = x
-        .iter()
+        .rows()
         .map(|p| (4.0 * p[0]).sin() + 0.5 * p[d - 1] + 0.02 * rng.normal())
         .collect();
     (x, y)
@@ -77,8 +76,7 @@ fn posterior_scores_match_native() {
     let post = &model.posteriors[0];
 
     let mut rng = Rng::new(9);
-    let cands: Vec<Vec<f64>> =
-        (0..300).map(|_| (0..4).map(|_| rng.uniform()).collect()).collect();
+    let cands = Dataset::from_fn(300, 4, |_, _| rng.uniform());
     let y_best = model.y_best_norm;
 
     let native = NativeBackend.posterior_scores(post, &cands, y_best);

@@ -6,8 +6,8 @@
 //! seed printed on assertion failure.
 
 use amt::earlystop::{CurveHistory, MedianRule, StoppingPolicy};
-use amt::gp::{expected_improvement, kernel, NativeBackend, SurrogateBackend, Theta};
-use amt::linalg::{cho_solve, cholesky, Matrix};
+use amt::gp::{expected_improvement, kernel, Dataset, NativeBackend, SurrogateBackend, Theta};
+use amt::linalg::{cho_solve, chol_append_row, cholesky, Matrix};
 use amt::rng::Rng;
 use amt::sobol::Sobol;
 use amt::space::{
@@ -104,20 +104,28 @@ fn prop_sobol_in_bounds_and_distinct() {
     }
 }
 
+fn random_dataset(rng: &mut Rng, n: usize, d: usize) -> Dataset {
+    Dataset::from_fn(n, d, |_, _| rng.uniform())
+}
+
+fn random_theta(rng: &mut Rng, d: usize) -> Theta {
+    let mut theta = Theta::default_for_dim(d);
+    for j in 0..d {
+        theta.log_ls[j] = rng.uniform_range(-2.0, 1.0);
+        theta.log_wa[j] = rng.uniform_range(-1.0, 1.0);
+        theta.log_wb[j] = rng.uniform_range(-1.0, 1.0);
+    }
+    theta
+}
+
 #[test]
 fn prop_gram_is_psd_and_symmetric() {
     for seed in 0..60u64 {
         let mut rng = Rng::new(seed);
         let n = 2 + rng.below(40);
         let d = 1 + rng.below(8);
-        let x: Vec<Vec<f64>> =
-            (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
-        let mut theta = Theta::default_for_dim(d);
-        for j in 0..d {
-            theta.log_ls[j] = rng.uniform_range(-2.0, 1.0);
-            theta.log_wa[j] = rng.uniform_range(-1.0, 1.0);
-            theta.log_wb[j] = rng.uniform_range(-1.0, 1.0);
-        }
+        let x = random_dataset(&mut rng, n, d);
+        let theta = random_theta(&mut rng, d);
         let k = kernel::gram(&x, &theta);
         for i in 0..n {
             for j in 0..n {
@@ -125,6 +133,126 @@ fn prop_gram_is_psd_and_symmetric() {
             }
         }
         assert!(cholesky(&k).is_ok(), "seed {seed}: gram not PD");
+    }
+}
+
+#[test]
+fn prop_blocked_scores_match_naive_reference() {
+    // the blocked Kx·K⁻¹ scorer must reproduce the naive per-candidate
+    // quadratic form to 1e-10 across random models and batches
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0x5C0);
+        let n = 3 + rng.below(30);
+        let d = 1 + rng.below(5);
+        let x = random_dataset(&mut rng, n, d);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let theta = random_theta(&mut rng, d);
+        let Some(model) = amt::gp::GpModel::fit(&NativeBackend, &x, &y, vec![theta]) else {
+            continue; // extreme thetas may be non-PD — rejected upstream too
+        };
+        let post = &model.posteriors[0];
+        let m = 1 + rng.below(60);
+        let cands = random_dataset(&mut rng, m, d);
+        let fast = NativeBackend.posterior_scores(post, &cands, model.y_best_norm);
+        // naive reference: mu = k·alpha, var = amp − kᵀ K⁻¹ k, per candidate
+        let kx = kernel::cross(&cands, &post.x, &post.theta);
+        let amp = post.theta.amp();
+        for i in 0..m {
+            let row = kx.row(i);
+            let mu: f64 = row.iter().zip(&post.alpha).map(|(a, b)| a * b).sum();
+            let mut quad = 0.0;
+            for a in 0..n {
+                let kinv_row = &post.k_inv.data[a * n..(a + 1) * n];
+                let dot: f64 = kinv_row.iter().zip(row).map(|(u, v)| u * v).sum();
+                quad += row[a] * dot;
+            }
+            let var = (amp - quad).max(1e-12);
+            let ei = expected_improvement(mu, var, model.y_best_norm);
+            assert!((fast[i].mu - mu).abs() < 1e-10, "seed {seed} mu[{i}]");
+            assert!((fast[i].var - var).abs() < 1e-10, "seed {seed} var[{i}]");
+            assert!((fast[i].ei - ei).abs() < 1e-10, "seed {seed} ei[{i}]");
+        }
+    }
+}
+
+#[test]
+fn prop_rank1_cholesky_update_matches_full_refactorization() {
+    // growing a GP training set one row at a time via chol_append_row must
+    // track the full O(N³) factorization to 1e-10 at every step
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0xA11);
+        let d = 1 + rng.below(4);
+        let theta = random_theta(&mut rng, d);
+        let total = 4 + rng.below(25);
+        let all = random_dataset(&mut rng, total, d);
+        let start = 2 + rng.below(total - 3);
+        let mut grown = all.slice(0..start);
+        let mut l = match cholesky(&kernel::gram(&grown, &theta)) {
+            Ok(l) => l,
+            Err(_) => continue,
+        };
+        let k_diag = theta.amp() + theta.noise() + kernel::JITTER;
+        for i in start..total {
+            let row = all.row(i);
+            let col = kernel::cross_row(row, &grown, &theta);
+            l = chol_append_row(&l, &col, k_diag).unwrap_or_else(|p| {
+                panic!("seed {seed}: append rejected at pivot {p}")
+            });
+            grown.push_row(row);
+            let full = cholesky(&kernel::gram(&grown, &theta)).unwrap();
+            let diff = full.max_abs_diff(&l);
+            assert!(diff < 1e-10, "seed {seed} rows {}: max |Δ| = {diff}", grown.len());
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_and_sequential_scoring_bit_identical() {
+    // order-stable reduction: the parallel scoring path must equal the
+    // sequential one bit for bit, for any posterior-ensemble size
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0xFA12);
+        let n = 70 + rng.below(40); // above the parallel-fit threshold
+        let d = 1 + rng.below(4);
+        let x = random_dataset(&mut rng, n, d);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let thetas: Vec<Theta> = (0..1 + rng.below(8)).map(|_| random_theta(&mut rng, d)).collect();
+        let Some(model) = amt::gp::GpModel::fit(&NativeBackend, &x, &y, thetas) else {
+            continue;
+        };
+        let cands = random_dataset(&mut rng, 64 + rng.below(200), d);
+        let par = model.score(&NativeBackend, &cands);
+        let seq = model.score_sequential(&NativeBackend, &cands);
+        for (i, (a, b)) in par.iter().zip(&seq).enumerate() {
+            assert_eq!(a.ei.to_bits(), b.ei.to_bits(), "seed {seed} ei[{i}]");
+            assert_eq!(a.mu.to_bits(), b.mu.to_bits(), "seed {seed} mu[{i}]");
+            assert_eq!(a.var.to_bits(), b.var.to_bits(), "seed {seed} var[{i}]");
+        }
+    }
+}
+
+#[test]
+fn prop_seeded_proposals_bit_identical_across_runs() {
+    // full propose (parallel anchor scoring + local refinement) from the
+    // same seed twice ⇒ identical proposals, bit for bit
+    use amt::acquisition::{propose, AcquisitionConfig};
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed ^ 0xB17);
+        let d = 1 + rng.below(3);
+        let x = random_dataset(&mut rng, 12 + rng.below(20), d);
+        let y: Vec<f64> = x.rows().map(|p| p.iter().map(|v| (v - 0.4).powi(2)).sum()).collect();
+        let Some(model) =
+            amt::gp::GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(d)])
+        else {
+            continue;
+        };
+        let cfg = AcquisitionConfig { num_anchors: 300, ..Default::default() };
+        let mut r1 = Rng::new(900 + seed);
+        let mut r2 = Rng::new(900 + seed);
+        let a = propose(&model, &NativeBackend, d, &[], &cfg, &mut r1);
+        let b = propose(&model, &NativeBackend, d, &[], &cfg, &mut r2);
+        assert_eq!(a.x, b.x, "seed {seed}");
+        assert_eq!(a.acq_value.to_bits(), b.acq_value.to_bits(), "seed {seed}");
     }
 }
 
@@ -175,8 +303,7 @@ fn prop_posterior_var_nonnegative_and_interpolation() {
         let mut rng = Rng::new(seed ^ 0xF2);
         let n = 3 + rng.below(20);
         let d = 1 + rng.below(4);
-        let x: Vec<Vec<f64>> =
-            (0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        let x = random_dataset(&mut rng, n, d);
         let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let model =
             amt::gp::GpModel::fit(&NativeBackend, &x, &y, vec![Theta::default_for_dim(d)])

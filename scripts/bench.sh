@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# Perf-trajectory harness: run the criterion-style benches at fixed sizes,
+# emit BENCH_propose.json / BENCH_gp_fit.json, and diff p50 latencies
+# against the committed baselines (DESIGN.md §8).
+#
+# Usage:
+#   scripts/bench.sh            # run + diff (fails on >TOLERANCE regressions)
+#   scripts/bench.sh --update   # run + overwrite the committed baselines
+#
+# TOLERANCE: allowed p50 slowdown ratio before the diff fails (default 1.30).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TOLERANCE="${TOLERANCE:-1.30}"
+MODE="${1:-check}"
+
+run_dir="$(mktemp -d)"
+trap 'rm -rf "$run_dir"' EXIT
+
+echo "== running benches (fresh JSON into $run_dir) =="
+AMT_BENCH_DIR="$run_dir" cargo bench --bench bo_propose
+AMT_BENCH_DIR="$run_dir" cargo bench --bench gp_fit
+
+status=0
+for f in BENCH_propose.json BENCH_gp_fit.json; do
+    fresh="$run_dir/$f"
+    if [ ! -f "$fresh" ]; then
+        echo "ERROR: bench did not produce $f" >&2
+        status=1
+        continue
+    fi
+    if [ "$MODE" = "--update" ] || [ ! -s "$f" ] || ! grep -q '"p50_s"' "$f"; then
+        # --update, or no committed baseline with real entries yet: bootstrap
+        cp "$fresh" "$f"
+        echo "baseline written: $f"
+        continue
+    fi
+    echo "== diff $f (tolerance ${TOLERANCE}x) =="
+    python3 - "$f" "$fresh" "$TOLERANCE" <<'PY' || status=1
+import json, sys
+base_path, fresh_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
+base = {e["label"]: e for e in json.load(open(base_path))["entries"]}
+fresh = {e["label"]: e for e in json.load(open(fresh_path))["entries"]}
+failed = False
+for label, fe in fresh.items():
+    be = base.get(label)
+    if be is None:
+        print(f"  NEW    {label}: p50 {fe['p50_s']*1e3:.2f}ms")
+        continue
+    ratio = fe["p50_s"] / be["p50_s"] if be["p50_s"] > 0 else float("inf")
+    mark = "OK " if ratio <= tol else "REG"
+    if ratio > tol:
+        failed = True
+    print(f"  {mark}    {label}: p50 {be['p50_s']*1e3:.2f}ms -> "
+          f"{fe['p50_s']*1e3:.2f}ms ({ratio:.2f}x)")
+for label in base:
+    if label not in fresh:
+        print(f"  GONE   {label} (present in baseline only)")
+sys.exit(1 if failed else 0)
+PY
+done
+
+if [ "$status" -ne 0 ]; then
+    echo "bench diff FAILED (regression beyond ${TOLERANCE}x or missing output)" >&2
+    echo "re-run with scripts/bench.sh --update to accept the new numbers" >&2
+fi
+exit "$status"
