@@ -2,29 +2,36 @@
 //! jobs with failure injection while the synchronous APIs stay available.
 //!
 //! Reported (mirroring the paper's post-launch statistics):
-//! * API availability (paper: ≥ 99.99% over 2020);
+//! * API availability (paper: ≥ 99.99% over 2020) and synchronous-API
+//!   latency percentiles (p50/p99) under load;
 //! * a spike of concurrent tuning jobs, each running training jobs in
 //!   parallel (paper: spikes of many hundreds of tuning jobs, requests with
-//!   5 parallel training jobs, individual clusters up to 128 accelerators);
+//!   5 parallel training jobs, individual clusters up to 128 accelerators),
+//!   multiplexed over the scheduler's **bounded worker pool** — OS threads
+//!   stay ≤ pool size + constant no matter how many jobs spike;
 //! * workflow robustness: completed evaluations vs injected failures and
 //!   the retries that absorbed them.
 //!
+//! Emits `BENCH_soak.json` (one entry per spike size; `AMT_BENCH_DIR`
+//! overrides the output directory) with p50/p95 API latency in the
+//! standard bench schema and jobs/sec, p99 latency and store-write count
+//! in the entry params — `scripts/bench.sh` diffs it like the other
+//! BENCH files.
+//!
 //! ```bash
-//! cargo run --release --example scale_soak [tuning_jobs]
+//! cargo run --release --example scale_soak [tuning_jobs ...]
 //! ```
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use amt::api::AmtService;
 use amt::config::TuningJobRequest;
-use amt::harness::print_table;
+use amt::harness::{print_table, BenchReport, BenchStats};
 use amt::platform::PlatformConfig;
 
-fn main() {
-    let num_jobs: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(200);
+/// One spike at `num_jobs` tuning jobs; returns the report entry fields.
+fn run_spike(num_jobs: usize, report: &mut BenchReport) {
     // hostile platform: real provisioning jitter + failure injection
     let platform = PlatformConfig {
         provisioning_failure_rate: 0.05,
@@ -33,9 +40,15 @@ fn main() {
     };
     let service = Arc::new(AmtService::new(platform));
 
-    eprintln!("spiking {num_jobs} tuning jobs (5 evaluations each, 5 parallel)...");
-    let started = std::time::Instant::now();
+    eprintln!(
+        "spiking {num_jobs} tuning jobs (5 evaluations each, 5 parallel) \
+         over {} pool workers...",
+        service.worker_count()
+    );
+    let started = Instant::now();
     let mut created = 0usize;
+    // per-call latencies of the synchronous APIs (create/describe/list)
+    let mut api_latencies: Vec<f64> = Vec::with_capacity(num_jobs * 2);
     for i in 0..num_jobs {
         let request = TuningJobRequest {
             name: format!("soak-{i:04}"),
@@ -47,13 +60,19 @@ fn main() {
             seed: i as u64,
             ..Default::default()
         };
+        let t = Instant::now();
         if service.create_tuning_job(request).is_ok() {
             created += 1;
         }
+        api_latencies.push(t.elapsed().as_secs_f64());
         // interleave Describe/List load against the store while jobs run
         if i % 7 == 0 {
+            let t = Instant::now();
             let _ = service.describe_tuning_job(&format!("soak-{:04}", i / 2));
+            api_latencies.push(t.elapsed().as_secs_f64());
+            let t = Instant::now();
             let _ = service.list_tuning_jobs("soak-");
+            api_latencies.push(t.elapsed().as_secs_f64());
         }
     }
 
@@ -74,12 +93,25 @@ fn main() {
         }
     }
     let wall = started.elapsed().as_secs_f64();
+    let jobs_per_sec = completed as f64 / wall;
+    if api_latencies.is_empty() {
+        eprintln!("no API calls issued for a {num_jobs}-job spike; nothing to report");
+        return;
+    }
+    // p99 is read off a sorted copy; BenchStats::from_samples sorts
+    // internally for the standard p50/p95 fields
+    let mut sorted = api_latencies;
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let p99 = sorted[((sorted.len() - 1) as f64 * 0.99) as usize];
+    let stats = BenchStats::from_samples(sorted);
 
     let calls = service.api_calls.load(std::sync::atomic::Ordering::Relaxed);
+    let store_writes = service.store().write_count();
     let rows = vec![
         vec!["tuning jobs requested".into(), num_jobs.to_string()],
         vec!["tuning jobs created".into(), created.to_string()],
         vec!["tuning jobs completed".into(), completed.to_string()],
+        vec!["scheduler pool workers".into(), service.worker_count().to_string()],
         vec!["training jobs (evaluations)".into(), evaluations.to_string()],
         vec!["injected failures surviving retries".into(), failed_evals.to_string()],
         vec!["training-job retries absorbed".into(), retries.to_string()],
@@ -89,16 +121,30 @@ fn main() {
             format!("{:.4}%", service.availability() * 100.0),
         ],
         vec![
-            "store writes".into(),
-            service.store().write_count().to_string(),
+            "API latency p50 / p99".into(),
+            format!("{} / {}", amt::harness::fmt_secs(stats.p50), amt::harness::fmt_secs(p99)),
         ],
+        vec!["store writes".into(), store_writes.to_string()],
         vec!["wall-clock for the spike".into(), format!("{wall:.1}s")],
         vec![
             "tuning-job throughput".into(),
-            format!("{:.1} jobs/s", completed as f64 / wall),
+            format!("{jobs_per_sec:.1} jobs/s"),
         ],
     ];
-    print_table("§6.5 scale soak", &["metric", "value"], &rows);
+    print_table(&format!("§6.5 scale soak ({num_jobs} jobs)"), &["metric", "value"], &rows);
+
+    report.push(
+        &format!("soak api latency jobs={num_jobs}"),
+        &[
+            ("jobs", num_jobs.to_string()),
+            ("workers", service.worker_count().to_string()),
+            ("jobs_per_sec", format!("{jobs_per_sec:.2}")),
+            ("api_p99_s", format!("{p99:.6}")),
+            ("store_writes", store_writes.to_string()),
+            ("wall_s", format!("{wall:.3}")),
+        ],
+        &stats,
+    );
 
     assert_eq!(created, num_jobs, "every create call must be accepted");
     assert_eq!(completed, num_jobs, "every workflow must terminate");
@@ -112,4 +158,17 @@ fn main() {
         (0.05 + 0.04) * 100.0,
         retries
     );
+}
+
+fn main() {
+    let sizes: Vec<usize> = std::env::args().skip(1).filter_map(|s| s.parse().ok()).collect();
+    let sizes = if sizes.is_empty() { vec![200] } else { sizes };
+    let mut report = BenchReport::new("soak");
+    for &n in &sizes {
+        run_spike(n, &mut report);
+    }
+    match report.write() {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_soak.json: {e}"),
+    }
 }

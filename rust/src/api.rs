@@ -7,28 +7,35 @@
 //! * synchronous APIs validate and persist to the metadata store before
 //!   returning (the §3.1 availability pillar — the §6.5 soak bench measures
 //!   their success rate under load);
-//! * the asynchronous tuning workflow runs on background worker threads,
-//!   one platform timeline per tuning job;
+//! * the asynchronous tuning workflow runs as a [`crate::coordinator::JobActor`]
+//!   on the multi-tenant [`crate::scheduler::Scheduler`] — a fixed worker
+//!   pool multiplexes every tuning job, each on its own platform timeline;
+//! * `wait` blocks on the job's own condvar, never on a service-wide lock,
+//!   so one slow job cannot stall Create/Describe/Stop for other tenants;
 //! * `StopHyperParameterTuningJob` flips a per-job flag the workflow
 //!   observes at its next scheduling point;
-//! * warm start resolves parent jobs *through the store*, so chained jobs
-//!   behave exactly like the §6.4 case study.
+//! * warm start resolves parent jobs *through the store* with paginated
+//!   scans, so chained jobs behave exactly like the §6.4 case study.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::TuningJobRequest;
-use crate::coordinator::{stopping_by_name, TuningJobOutcome, TuningJobRunner};
+use crate::coordinator::{stopping_by_name, JobActor, TuningJobOutcome};
 use crate::gp::{NativeBackend, SurrogateBackend};
 use crate::json::Json;
 use crate::metrics::MetricsService;
 use crate::objectives::by_name as objective_by_name;
 use crate::platform::{PlatformConfig, TrainingPlatform};
+use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::space::{config_from_json, Value};
 use crate::store::MetadataStore;
 use crate::strategies::{BayesianOptimization, BoConfig, Observation, Strategy};
 use crate::warmstart::{transfer, ParentJob, TransferOptions};
+
+/// Page size for store scans performed inside API handlers (warm-start
+/// parent resolution): bounds how long any one shard lock is held.
+const SCAN_PAGE: usize = 128;
 
 /// API error codes (the synchronous 4xx/5xx surface).
 #[derive(Debug, PartialEq, Eq)]
@@ -64,19 +71,13 @@ pub struct TuningJobSummary {
     pub best_value: Option<f64>,
 }
 
-struct JobHandle {
-    stop_flag: Arc<AtomicBool>,
-    thread: Option<std::thread::JoinHandle<TuningJobOutcome>>,
-    outcome: Option<TuningJobOutcome>,
-}
-
 /// The fully managed tuning service (in-process facade).
 pub struct AmtService {
     store: Arc<MetadataStore>,
     metrics: Arc<MetricsService>,
     platform_config: PlatformConfig,
     backend: Arc<dyn SurrogateBackend>,
-    jobs: Mutex<HashMap<String, JobHandle>>,
+    scheduler: Scheduler,
     /// API call counters for the §6.5 availability accounting.
     pub api_calls: std::sync::atomic::AtomicU64,
     /// API calls that returned an error.
@@ -95,15 +96,35 @@ impl AmtService {
         platform_config: PlatformConfig,
         backend: Arc<dyn SurrogateBackend>,
     ) -> Self {
+        Self::with_options(platform_config, backend, SchedulerConfig::default())
+    }
+
+    /// New service with explicit backend and scheduler configuration.
+    pub fn with_options(
+        platform_config: PlatformConfig,
+        backend: Arc<dyn SurrogateBackend>,
+        scheduler_config: SchedulerConfig,
+    ) -> Self {
         AmtService {
             store: Arc::new(MetadataStore::new()),
             metrics: Arc::new(MetricsService::new()),
             platform_config,
             backend,
-            jobs: Mutex::new(HashMap::new()),
+            scheduler: Scheduler::new(scheduler_config),
             api_calls: std::sync::atomic::AtomicU64::new(0),
             api_errors: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// Worker threads in the scheduler pool — the service's fixed OS-thread
+    /// budget for tuning workflows, independent of how many jobs run.
+    pub fn worker_count(&self) -> usize {
+        self.scheduler.worker_count()
+    }
+
+    /// Tuning jobs submitted and not yet finished.
+    pub fn running_jobs(&self) -> usize {
+        self.scheduler.running_jobs()
     }
 
     /// Shared metadata store (read-only use recommended).
@@ -150,16 +171,32 @@ impl AmtService {
             let pspace = objective_by_name(&pobj_name)
                 .map(|o| o.space())
                 .unwrap_or_else(|| child_space.clone());
+            // paginated scan: bounded pages instead of one whole-prefix
+            // clone under the store's shard locks
             let mut observations = Vec::new();
-            for (_, rec) in self.store.scan("training_jobs", &format!("{pname}-train-")) {
-                let Some(vj) = rec.get("final_value") else { continue };
-                let Some(v) = vj.as_f64() else { continue };
-                let Some(cfg) = rec.get("config").and_then(config_from_json) else {
-                    continue;
-                };
-                // coerce numeric strings back into the parent space types
-                let cfg = pspace.clamp(&cfg);
-                observations.push(Observation { config: cfg, value: sign * v });
+            let prefix = format!("{pname}-train-");
+            let mut cursor: Option<String> = None;
+            loop {
+                let page =
+                    self.store.scan_page("training_jobs", &prefix, cursor.as_deref(), SCAN_PAGE);
+                let Some((last_key, _)) = page.last() else { break };
+                // a partial page means the prefix is exhausted — no need
+                // for a follow-up call that would come back empty
+                let exhausted = page.len() < SCAN_PAGE;
+                cursor = Some(last_key.clone());
+                for (_, rec) in page {
+                    let Some(vj) = rec.get("final_value") else { continue };
+                    let Some(v) = vj.as_f64() else { continue };
+                    let Some(cfg) = rec.get("config").and_then(config_from_json) else {
+                        continue;
+                    };
+                    // coerce numeric strings back into the parent space types
+                    let cfg = pspace.clamp(&cfg);
+                    observations.push(Observation { config: cfg, value: sign * v });
+                }
+                if exhausted {
+                    break;
+                }
             }
             if observations.is_empty() {
                 return self.fail(ApiError::BadParent(pname.clone()));
@@ -202,15 +239,10 @@ impl AmtService {
         request: TuningJobRequest,
         objective: Arc<dyn crate::objectives::Objective>,
     ) -> Result<String, ApiError> {
+        if self.scheduler.contains(&request.name)
+            || self.store.get("tuning_jobs", &request.name).is_some()
         {
-            let jobs = self.jobs.lock().unwrap();
-            if jobs.contains_key(&request.name)
-                || self.store.get("tuning_jobs", &request.name).is_some()
-            {
-                let name = request.name.clone();
-                drop(jobs);
-                return self.fail(ApiError::AlreadyExists(name));
-            }
+            return self.fail(ApiError::AlreadyExists(request.name));
         }
 
         let sign = if objective.minimize() { 1.0 } else { -1.0 };
@@ -239,7 +271,7 @@ impl AmtService {
         let stopping = stopping_by_name(&request.early_stopping).expect("validated");
 
         let stop_flag = Arc::new(AtomicBool::new(false));
-        let runner = TuningJobRunner::new(
+        let actor = JobActor::new(
             request.clone(),
             objective,
             strategy,
@@ -249,7 +281,13 @@ impl AmtService {
             Arc::clone(&self.metrics),
             Arc::clone(&stop_flag),
         );
-        // persist the accepted request before the async workflow starts
+        // reserve the name first (atomic duplicate check), then persist the
+        // accepted request, then let workers at it — a losing concurrent
+        // create never touches the store, and the record is always in the
+        // store before the workflow can run
+        if !self.scheduler.register(actor, stop_flag) {
+            return self.fail(ApiError::AlreadyExists(request.name));
+        }
         self.store.put(
             "tuning_jobs",
             &request.name,
@@ -258,26 +296,20 @@ impl AmtService {
                 ("request", request.to_json()),
             ]),
         );
-        let thread = std::thread::spawn(move || runner.run());
-        self.jobs.lock().unwrap().insert(
-            request.name.clone(),
-            JobHandle { stop_flag, thread: Some(thread), outcome: None },
-        );
+        self.scheduler.activate(&request.name);
         Ok(request.name)
     }
 
     /// Block until a tuning job's workflow finishes; returns its outcome.
+    ///
+    /// Blocks on the job's own condvar (never a service-wide lock), so
+    /// concurrent Create/Describe/Stop/wait calls for other jobs proceed
+    /// unimpeded while this one waits.
     pub fn wait(&self, name: &str) -> Result<TuningJobOutcome, ApiError> {
-        let mut jobs = self.jobs.lock().unwrap();
-        let Some(handle) = jobs.get_mut(name) else {
-            drop(jobs);
-            return self.fail(ApiError::NotFound(name.to_string()));
-        };
-        if let Some(thread) = handle.thread.take() {
-            let outcome = thread.join().expect("tuning workflow panicked");
-            handle.outcome = Some(outcome);
+        match self.scheduler.wait(name) {
+            Some(outcome) => Ok(outcome),
+            None => self.fail(ApiError::NotFound(name.to_string())),
         }
-        Ok(handle.outcome.clone().expect("outcome present after join"))
     }
 
     /// `DescribeHyperParameterTuningJob`.
@@ -331,16 +363,15 @@ impl AmtService {
     }
 
     /// `StopHyperParameterTuningJob`: signal the workflow to stop. The
-    /// call is asynchronous, like the AWS API.
+    /// call is asynchronous, like the AWS API, and never blocks on other
+    /// jobs — it only flips the target job's stop flag.
     pub fn stop_tuning_job(&self, name: &str) -> Result<(), ApiError> {
         self.count_call();
-        let jobs = self.jobs.lock().unwrap();
-        let Some(handle) = jobs.get(name) else {
-            drop(jobs);
-            return self.fail(ApiError::NotFound(name.to_string()));
-        };
-        handle.stop_flag.store(true, Ordering::Relaxed);
-        Ok(())
+        if self.scheduler.stop(name) {
+            Ok(())
+        } else {
+            self.fail(ApiError::NotFound(name.to_string()))
+        }
     }
 
     /// Availability ratio over the service lifetime (§6.5: "API

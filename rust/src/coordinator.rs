@@ -12,6 +12,15 @@
 //! **asynchronously**: the moment one finishes, its observation updates the
 //! strategy and a fresh candidate fills the free slot (§4.4), with failed
 //! jobs retried per the §3.3 retry policy.
+//!
+//! Execution model: each tuning job is a **non-blocking [`JobActor`]** —
+//! a resumable state-machine execution ([`crate::workflow::StateMachine::step`])
+//! over its own platform timeline. [`JobActor::poll`] drains a bounded
+//! slice of [`PlatformEvent`]s and returns control, so the multi-tenant
+//! [`crate::scheduler::Scheduler`] can multiplex many jobs over a fixed
+//! worker pool. [`TuningJobRunner`] is the single-tenant wrapper that
+//! polls one actor to completion on the calling thread — its outcomes are
+//! bit-identical to the actor driven through the scheduler.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -27,7 +36,10 @@ use crate::platform::{
 use crate::space::Config;
 use crate::store::MetadataStore;
 use crate::strategies::{Observation, Strategy};
-use crate::workflow::{ExecutionStatus, RetryPolicy, StateMachine, Transition};
+use crate::workflow::{
+    Execution, ExecutionState, ExecutionStatus, RetryPolicy, StateMachine, StepOutcome,
+    Transition,
+};
 use crate::json::Json;
 
 /// Outcome of one hyperparameter evaluation.
@@ -287,13 +299,149 @@ impl LoopCtx {
     }
 }
 
-/// Drives one tuning job to completion on a dedicated platform timeline.
-pub struct TuningJobRunner {
-    ctx: LoopCtx,
+/// Build the tuning-job lifecycle machine (Validate → RunLoop → Finalize).
+/// Each `RunLoop` invocation handles at most one platform event, so a
+/// single [`StateMachine::step`] is a bounded unit of work.
+fn build_machine() -> StateMachine<LoopCtx> {
+    let mut machine: StateMachine<LoopCtx> = StateMachine::new("Validate")
+        .state("Validate", RetryPolicy::none(), |ctx: &mut LoopCtx, _| {
+            match ctx.request.validate_with_custom_objective() {
+                Ok(()) => {
+                    ctx.store.put(
+                        "tuning_jobs",
+                        &ctx.request.name,
+                        Json::obj(vec![
+                            ("status", Json::Str("InProgress".into())),
+                            ("request", ctx.request.to_json()),
+                        ]),
+                    );
+                    Transition::Next("RunLoop".into())
+                }
+                Err(e) => Transition::Fail(format!("validation: {e}")),
+            }
+        })
+        .state("RunLoop", RetryPolicy::default(), |ctx, _| {
+            // user-initiated Stop API (§3.2)
+            if ctx.stop_flag.load(Ordering::Relaxed) {
+                let ids: Vec<JobId> = ctx.in_flight.keys().copied().collect();
+                for id in ids {
+                    ctx.platform.stop_job(id);
+                }
+                while ctx.pump_one() {}
+                return Transition::Next("Finalize".into());
+            }
+            // fill free parallel slots (asynchronous scheduling, §4.4)
+            while ctx.launched < ctx.request.max_training_jobs
+                && ctx.in_flight.len() < ctx.request.max_parallel_jobs as usize
+            {
+                ctx.launch_new();
+            }
+            // advance the platform by one event
+            let progressed = ctx.pump_one();
+            let budget_done = ctx.launched >= ctx.request.max_training_jobs
+                && ctx.in_flight.is_empty();
+            if budget_done || (!progressed && ctx.in_flight.is_empty()) {
+                Transition::Next("Finalize".into())
+            } else {
+                Transition::Next("RunLoop".into())
+            }
+        })
+        .state("Finalize", RetryPolicy::none(), |ctx, _| {
+            let status = if ctx.stop_flag.load(Ordering::Relaxed) {
+                "Stopped"
+            } else {
+                "Completed"
+            };
+            ctx.store.put(
+                "tuning_jobs",
+                &ctx.request.name,
+                Json::obj(vec![
+                    ("status", Json::Str(status.into())),
+                    ("request", ctx.request.to_json()),
+                    (
+                        "evaluations",
+                        Json::Num(ctx.finished_count() as f64),
+                    ),
+                ]),
+            );
+            Transition::Succeed
+        });
+    machine.max_transitions = 4_000_000;
+    machine
 }
 
-impl TuningJobRunner {
-    /// Assemble a runner. The strategy and stopping policy are passed in
+/// Assemble the terminal outcome from a finished execution's context.
+fn finish_outcome(name: String, ctx: LoopCtx, execution: Execution) -> TuningJobOutcome {
+    // compute best in raw orientation
+    let minimize = ctx.sign > 0.0;
+    let mut best: Option<(Config, f64)> = None;
+    for e in &ctx.evaluations {
+        if let Some(v) = e.final_value {
+            // only fully completed evaluations compete for "best" when
+            // maximizing? No: the paper counts stopped jobs' last values
+            // too — they are real model scores.
+            let better = match &best {
+                None => true,
+                Some((_, b)) => {
+                    if minimize {
+                        v < *b
+                    } else {
+                        v > *b
+                    }
+                }
+            };
+            if better {
+                best = Some((e.config.clone(), v));
+            }
+        }
+    }
+    let total_billable = ctx
+        .evaluations
+        .iter()
+        .map(|e| {
+            // billable = spec-reported per training job (platform info)
+            e.ended_at - e.submitted_at
+        })
+        .sum();
+
+    TuningJobOutcome {
+        name,
+        best,
+        total_seconds: ctx.platform.now(),
+        total_billable_seconds: total_billable,
+        evaluations: ctx.evaluations,
+        status: execution.status,
+        retries: ctx.retries,
+    }
+}
+
+/// Result of one [`JobActor::poll`] work slice.
+#[derive(Debug)]
+pub enum ActorPoll {
+    /// Not terminal. `due` is the actor's current virtual time (seconds on
+    /// its own platform timeline); the scheduler's event heap uses it to
+    /// order re-polls so parked executions yield to less-advanced jobs.
+    Pending {
+        /// Virtual re-poll time for the scheduler's event heap.
+        due: f64,
+    },
+    /// Terminal: the finished outcome (boxed — it owns every evaluation).
+    Complete(Box<TuningJobOutcome>),
+}
+
+/// One tuning job as a non-blocking actor: a resumable workflow execution
+/// over a dedicated platform timeline, advanced in bounded slices by
+/// [`JobActor::poll`]. N actors multiplex over the M-worker
+/// [`crate::scheduler::Scheduler`] pool instead of N dedicated threads.
+pub struct JobActor {
+    name: String,
+    machine: StateMachine<LoopCtx>,
+    exec: ExecutionState,
+    ctx: Option<LoopCtx>,
+}
+
+impl JobActor {
+    /// Assemble an actor. The strategy and stopping policy are passed in
     /// pre-built (the API layer constructs them from the request, including
     /// warm-start transfer).
     #[allow(clippy::too_many_arguments)]
@@ -308,8 +456,14 @@ impl TuningJobRunner {
         stop_flag: Arc<AtomicBool>,
     ) -> Self {
         let sign = if objective.minimize() { 1.0 } else { -1.0 };
-        TuningJobRunner {
-            ctx: LoopCtx {
+        let name = request.name.clone();
+        let machine = build_machine();
+        let exec = machine.begin(0.0);
+        JobActor {
+            name,
+            machine,
+            exec,
+            ctx: Some(LoopCtx {
                 request,
                 objective,
                 strategy,
@@ -326,122 +480,80 @@ impl TuningJobRunner {
                 evaluations: Vec::new(),
                 retries: 0,
                 retry_budget: Vec::new(),
-            },
+            }),
+        }
+    }
+
+    /// Tuning-job name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Advance the execution by at most `max_steps` state-machine steps
+    /// (≈ platform events), yielding early when the workflow parks itself.
+    ///
+    /// Must not be called again after it returned
+    /// [`ActorPoll::Complete`].
+    pub fn poll(&mut self, max_steps: usize) -> ActorPoll {
+        for _ in 0..max_steps.max(1) {
+            let ctx = self.ctx.as_mut().expect("JobActor polled after completion");
+            match self.machine.step(&mut self.exec, ctx) {
+                StepOutcome::Ready => {}
+                StepOutcome::Parked { .. } => break,
+                StepOutcome::Done(execution) => {
+                    let ctx = self.ctx.take().expect("context present at completion");
+                    return ActorPoll::Complete(Box::new(finish_outcome(
+                        self.name.clone(),
+                        ctx,
+                        execution,
+                    )));
+                }
+            }
+        }
+        let platform_now = self
+            .ctx
+            .as_ref()
+            .map(|c| c.platform.now())
+            .unwrap_or(0.0);
+        ActorPoll::Pending { due: platform_now.max(self.exec.clock) }
+    }
+}
+
+/// Drives one tuning job to completion on a dedicated platform timeline —
+/// the single-tenant wrapper over [`JobActor`] used by tests, benches and
+/// direct embedding. Produces outcomes bit-identical to the same actor
+/// driven through the scheduler.
+pub struct TuningJobRunner {
+    actor: JobActor,
+}
+
+impl TuningJobRunner {
+    /// Assemble a runner (see [`JobActor::new`] for the parameters).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        request: TuningJobRequest,
+        objective: Arc<dyn Objective>,
+        strategy: Box<dyn Strategy>,
+        stopping: Box<dyn StoppingPolicy>,
+        platform: TrainingPlatform,
+        store: Arc<MetadataStore>,
+        metrics: Arc<MetricsService>,
+        stop_flag: Arc<AtomicBool>,
+    ) -> Self {
+        TuningJobRunner {
+            actor: JobActor::new(
+                request, objective, strategy, stopping, platform, store, metrics, stop_flag,
+            ),
         }
     }
 
     /// Execute the tuning job to completion.
     pub fn run(mut self) -> TuningJobOutcome {
-        let name = self.ctx.request.name.clone();
-        let mut machine: StateMachine<LoopCtx> = StateMachine::new("Validate")
-            .state("Validate", RetryPolicy::none(), |ctx: &mut LoopCtx, _| {
-                match ctx.request.validate_with_custom_objective() {
-                    Ok(()) => {
-                        ctx.store.put(
-                            "tuning_jobs",
-                            &ctx.request.name,
-                            Json::obj(vec![
-                                ("status", Json::Str("InProgress".into())),
-                                ("request", ctx.request.to_json()),
-                            ]),
-                        );
-                        Transition::Next("RunLoop".into())
-                    }
-                    Err(e) => Transition::Fail(format!("validation: {e}")),
-                }
-            })
-            .state("RunLoop", RetryPolicy::default(), |ctx, _| {
-                // user-initiated Stop API (§3.2)
-                if ctx.stop_flag.load(Ordering::Relaxed) {
-                    let ids: Vec<JobId> = ctx.in_flight.keys().copied().collect();
-                    for id in ids {
-                        ctx.platform.stop_job(id);
-                    }
-                    while ctx.pump_one() {}
-                    return Transition::Next("Finalize".into());
-                }
-                // fill free parallel slots (asynchronous scheduling, §4.4)
-                while ctx.launched < ctx.request.max_training_jobs
-                    && ctx.in_flight.len() < ctx.request.max_parallel_jobs as usize
-                {
-                    ctx.launch_new();
-                }
-                // advance the platform by one event
-                let progressed = ctx.pump_one();
-                let budget_done = ctx.launched >= ctx.request.max_training_jobs
-                    && ctx.in_flight.is_empty();
-                if budget_done || (!progressed && ctx.in_flight.is_empty()) {
-                    Transition::Next("Finalize".into())
-                } else {
-                    Transition::Next("RunLoop".into())
-                }
-            })
-            .state("Finalize", RetryPolicy::none(), |ctx, _| {
-                let status = if ctx.stop_flag.load(Ordering::Relaxed) {
-                    "Stopped"
-                } else {
-                    "Completed"
-                };
-                ctx.store.put(
-                    "tuning_jobs",
-                    &ctx.request.name,
-                    Json::obj(vec![
-                        ("status", Json::Str(status.into())),
-                        ("request", ctx.request.to_json()),
-                        (
-                            "evaluations",
-                            Json::Num(ctx.finished_count() as f64),
-                        ),
-                    ]),
-                );
-                Transition::Succeed
-            });
-        machine.max_transitions = 4_000_000;
-
-        let mut clock = 0.0;
-        let execution = machine.execute(&mut self.ctx, &mut clock);
-        let ctx = self.ctx;
-
-        // compute best in raw orientation
-        let minimize = ctx.sign > 0.0;
-        let mut best: Option<(Config, f64)> = None;
-        for e in &ctx.evaluations {
-            if let Some(v) = e.final_value {
-                // only fully completed evaluations compete for "best" when
-                // maximizing? No: the paper counts stopped jobs' last values
-                // too — they are real model scores.
-                let better = match &best {
-                    None => true,
-                    Some((_, b)) => {
-                        if minimize {
-                            v < *b
-                        } else {
-                            v > *b
-                        }
-                    }
-                };
-                if better {
-                    best = Some((e.config.clone(), v));
-                }
+        loop {
+            match self.actor.poll(usize::MAX) {
+                ActorPoll::Pending { .. } => {}
+                ActorPoll::Complete(outcome) => return *outcome,
             }
-        }
-        let total_billable = ctx
-            .evaluations
-            .iter()
-            .map(|e| {
-                // billable = spec-reported per training job (platform info)
-                e.ended_at - e.submitted_at
-            })
-            .sum();
-
-        TuningJobOutcome {
-            name,
-            best,
-            total_seconds: ctx.platform.now(),
-            total_billable_seconds: total_billable,
-            evaluations: ctx.evaluations,
-            status: execution.status,
-            retries: ctx.retries,
         }
     }
 }

@@ -20,6 +20,11 @@
 //! fitting / anchor scoring fan out over [`parallel`] with order-stable,
 //! bit-deterministic reduction. See `DESIGN.md` §2–§5.
 //!
+//! The service layer is multi-tenant: tuning jobs run as resumable
+//! [`coordinator::JobActor`]s multiplexed over the bounded worker pool of
+//! [`scheduler`], backed by the lock-striped sharded [`store`] and
+//! [`metrics`] services. See `DESIGN.md` §9.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the reproduced figures.
 
@@ -39,6 +44,7 @@ pub mod parallel;
 pub mod platform;
 pub mod rng;
 pub mod runtime;
+pub mod scheduler;
 pub mod sobol;
 pub mod space;
 pub mod store;

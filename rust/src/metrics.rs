@@ -5,9 +5,17 @@
 //! persisted in CloudWatch"); the workflow engine reads them back to feed
 //! the early stopper, and the figure harnesses query time series to plot
 //! best-so-far curves. Timestamps are virtual-clock seconds.
+//!
+//! Like [`crate::store::MetadataStore`], the sink is lock-striped: streams
+//! hash to one of K shards, so per-epoch emissions from many concurrent
+//! tuning jobs on the scheduler's worker pool do not contend on a single
+//! mutex. Cross-stream queries (`list_streams`) merge the shards and sort.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+
+/// Lock stripes for the stream map.
+const METRIC_SHARDS: usize = 8;
 
 /// One metric observation.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -33,10 +41,18 @@ pub struct MetricStats {
     pub last: f64,
 }
 
-/// Thread-safe metric sink keyed by `namespace/metric` streams.
-#[derive(Default)]
+/// Thread-safe, lock-striped metric sink keyed by `namespace/metric`
+/// streams.
 pub struct MetricsService {
-    streams: Mutex<BTreeMap<String, Vec<DataPoint>>>,
+    shards: Vec<Mutex<BTreeMap<String, Vec<DataPoint>>>>,
+}
+
+impl Default for MetricsService {
+    fn default() -> Self {
+        MetricsService {
+            shards: (0..METRIC_SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
+        }
+    }
 }
 
 impl MetricsService {
@@ -45,10 +61,17 @@ impl MetricsService {
         Self::default()
     }
 
+    /// Deterministic FNV-1a shard index of a stream name (same hash as the
+    /// metadata store's shard routing).
+    fn shard_of(&self, stream: &str) -> usize {
+        let h = crate::store::fnv1a(&[stream.as_bytes()]);
+        (h % self.shards.len() as u64) as usize
+    }
+
     /// Publish one point to `stream` (points must be in time order per
     /// producer; out-of-order points are inserted by timestamp).
     pub fn emit(&self, stream: &str, time: f64, value: f64) {
-        let mut streams = self.streams.lock().unwrap();
+        let mut streams = self.shards[self.shard_of(stream)].lock().unwrap();
         let s = streams.entry(stream.to_string()).or_default();
         match s.last() {
             Some(last) if last.time > time => {
@@ -61,23 +84,28 @@ impl MetricsService {
 
     /// Full series for a stream.
     pub fn series(&self, stream: &str) -> Vec<DataPoint> {
-        self.streams.lock().unwrap().get(stream).cloned().unwrap_or_default()
-    }
-
-    /// Stream names with a prefix.
-    pub fn list_streams(&self, prefix: &str) -> Vec<String> {
-        self.streams
+        self.shards[self.shard_of(stream)]
             .lock()
             .unwrap()
-            .keys()
-            .filter(|k| k.starts_with(prefix))
+            .get(stream)
             .cloned()
-            .collect()
+            .unwrap_or_default()
+    }
+
+    /// Stream names with a prefix, sorted (merged across shards).
+    pub fn list_streams(&self, prefix: &str) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for shard in &self.shards {
+            let streams = shard.lock().unwrap();
+            names.extend(streams.keys().filter(|k| k.starts_with(prefix)).cloned());
+        }
+        names.sort();
+        names
     }
 
     /// Summary statistics, if the stream has data.
     pub fn stats(&self, stream: &str) -> Option<MetricStats> {
-        let streams = self.streams.lock().unwrap();
+        let streams = self.shards[self.shard_of(stream)].lock().unwrap();
         let s = streams.get(stream)?;
         if s.is_empty() {
             return None;
@@ -152,6 +180,22 @@ mod tests {
         assert_eq!(st.last, 3.0);
         assert_eq!(m.list_streams("a/"), vec!["a/x"]);
         assert!(m.stats("missing").is_none());
+    }
+
+    #[test]
+    fn list_streams_sorted_across_shards() {
+        let m = MetricsService::new();
+        // enough streams to land on several shards
+        for i in (0..40).rev() {
+            m.emit(&format!("job/{i:02}"), 0.0, i as f64);
+        }
+        let names = m.list_streams("job/");
+        assert_eq!(names.len(), 40);
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        // per-stream reads route to the right shard
+        assert_eq!(m.series("job/07")[0].value, 7.0);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Order-stable data parallelism on std scoped threads.
+//! Order-stable data parallelism on std scoped threads, plus the
+//! long-lived [`WorkerPool`] the tuning scheduler runs on.
 //!
 //! The offline vendored crate set does not include rayon, so the hot path
 //! parallelizes with `std::thread::scope` instead: items are split into
@@ -12,7 +13,7 @@
 //! pinned with `AMT_THREADS` (e.g. `AMT_THREADS=1` forces the sequential
 //! path for A/B determinism checks and profiling).
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 /// Maximum worker threads for data-parallel regions (≥ 1).
 pub fn max_threads() -> usize {
@@ -58,6 +59,57 @@ where
     out
 }
 
+/// A fixed pool of named, long-lived OS threads.
+///
+/// Unlike [`par_map`] (fork/join over one batch), a `WorkerPool` runs one
+/// caller-supplied worker function per thread for the pool's whole
+/// lifetime — the execution substrate of [`crate::scheduler::Scheduler`],
+/// which multiplexes N tuning jobs over `workers` threads instead of
+/// spawning a thread per job. The worker function receives its worker
+/// index and is expected to loop until an external shutdown signal.
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers.max(1)` threads named `<name>-<i>`, each running
+    /// `f(i)` to completion.
+    pub fn spawn<F>(name: &str, workers: usize, f: F) -> WorkerPool
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let f = Arc::clone(&f);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || f(i))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    /// Number of threads in the pool.
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// True if the pool has no threads (never the case after `spawn`).
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Block until every worker function returns. Panics from workers are
+    /// propagated.
+    pub fn join(self) {
+        for h in self.handles {
+            h.join().expect("pool worker panicked");
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +141,19 @@ mod tests {
     #[test]
     fn max_threads_is_at_least_one() {
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_pool_runs_every_worker_and_joins() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        let pool = WorkerPool::spawn("test-pool", 4, move |i| {
+            c.fetch_add(i + 1, Ordering::SeqCst);
+        });
+        assert_eq!(pool.len(), 4);
+        pool.join();
+        // 1 + 2 + 3 + 4
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
     }
 }

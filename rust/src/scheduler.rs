@@ -1,0 +1,449 @@
+//! Multi-tenant tuning scheduler (§3.2, §6.5): N tuning jobs multiplexed
+//! over a bounded worker pool.
+//!
+//! The paper's AMT is a fully managed multi-tenant service that absorbs
+//! "spikes of many hundreds of tuning jobs" while keeping the synchronous
+//! APIs ≥ 99.99% available. This module is the execution substrate that
+//! makes the reproduction behave the same way: instead of one dedicated OS
+//! thread per tuning job busy-spinning its own workflow, a fixed
+//! [`WorkerPool`] of M ≈ num_cpus threads drains a **virtual-time event
+//! heap** of runnable [`JobActor`]s.
+//!
+//! Mechanics:
+//!
+//! * every submitted job owns one heap entry at a time, keyed by
+//!   `(virtual due time, sequence)` — parked executions (retry backoffs,
+//!   `Wait` transitions) re-enter ordered behind less-advanced jobs, which
+//!   keeps a spike of late arrivals from starving early ones;
+//! * a worker pops the earliest entry, polls the actor for a bounded batch
+//!   of state-machine steps ([`SchedulerConfig::batch_steps`]), then either
+//!   re-queues it (still pending) or publishes its outcome and wakes
+//!   waiters on the job's **own** condvar — `wait()` never holds a global
+//!   lock while blocking, so one caller waiting on a slow job cannot stall
+//!   Create/Describe/Stop traffic for other tenants;
+//! * `stop()` only flips the job's shared stop flag (the workflow observes
+//!   it at its next scheduling point), and `Describe` never touches the
+//!   scheduler at all — it reads the metadata store.
+//!
+//! Virtual due times never require real sleeping: each tuning job runs on
+//! its own discrete-event platform timeline, so the heap is purely an
+//! ordering structure (fairness across tenants), not a timer wheel.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::{ActorPoll, JobActor, TuningJobOutcome};
+use crate::parallel::{self, WorkerPool};
+
+/// Scheduler tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Worker threads in the pool (default: the machine's parallelism,
+    /// i.e. `parallel::max_threads()`, capped at 16).
+    pub workers: usize,
+    /// Max state-machine steps (≈ platform events) per poll slice before a
+    /// job is re-queued so its peers get a turn.
+    pub batch_steps: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { workers: parallel::max_threads().min(16), batch_steps: 256 }
+    }
+}
+
+/// One entry of the virtual-time event heap. Min-ordered by
+/// `(due, seq)` via `Reverse` in the heap.
+struct QueueEntry {
+    due: f64,
+    seq: u64,
+    name: String,
+}
+
+impl PartialEq for QueueEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for QueueEntry {}
+impl PartialOrd for QueueEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueueEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.due.total_cmp(&other.due).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Terminal state published by a worker.
+#[derive(Default)]
+struct SlotState {
+    outcome: Option<TuningJobOutcome>,
+    panicked: bool,
+}
+
+/// Per-job slot: the actor (while running) and its published outcome.
+/// Lock order is always `actor` before `state`; the registry lock is never
+/// held while either is taken for a blocking wait.
+struct JobSlot {
+    actor: Mutex<Option<JobActor>>,
+    state: Mutex<SlotState>,
+    done_cv: Condvar,
+    stop_flag: Arc<AtomicBool>,
+}
+
+struct Inner {
+    /// Virtual-time event heap of runnable jobs (one entry per live job).
+    heap: Mutex<BinaryHeap<Reverse<QueueEntry>>>,
+    heap_cv: Condvar,
+    /// Registry of all submitted jobs (kept after completion for wait()).
+    jobs: Mutex<HashMap<String, Arc<JobSlot>>>,
+    shutdown: AtomicBool,
+    seq: AtomicU64,
+    batch_steps: usize,
+    running: AtomicUsize,
+}
+
+/// The multi-tenant tuning scheduler.
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    pool: Option<WorkerPool>,
+    workers: usize,
+}
+
+impl Scheduler {
+    /// Start the worker pool.
+    pub fn new(config: SchedulerConfig) -> Scheduler {
+        let workers = config.workers.max(1);
+        let inner = Arc::new(Inner {
+            heap: Mutex::new(BinaryHeap::new()),
+            heap_cv: Condvar::new(),
+            jobs: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            batch_steps: config.batch_steps.max(1),
+            running: AtomicUsize::new(0),
+        });
+        let worker_inner = Arc::clone(&inner);
+        let pool = WorkerPool::spawn("amt-sched", workers, move |_worker| {
+            worker_loop(&worker_inner);
+        });
+        Scheduler { inner, pool: Some(pool), workers }
+    }
+
+    /// Number of pool workers (fixed for the scheduler's lifetime).
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    /// Jobs submitted and not yet finished.
+    pub fn running_jobs(&self) -> usize {
+        self.inner.running.load(Ordering::Relaxed)
+    }
+
+    /// True if a job with this name was ever submitted.
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.jobs.lock().unwrap().contains_key(name)
+    }
+
+    /// Atomically reserve a job name and park its actor, *without*
+    /// queueing it for execution yet. Returns false (and drops the actor)
+    /// if the name is already taken. The API layer reserves first, then
+    /// persists the accepted request to the store, then [`Scheduler::activate`]s —
+    /// so a losing concurrent create never touches the store, and no
+    /// worker can run (and finish) the job before its record is persisted.
+    pub fn register(&self, actor: JobActor, stop_flag: Arc<AtomicBool>) -> bool {
+        let name = actor.name().to_string();
+        {
+            let mut jobs = self.inner.jobs.lock().unwrap();
+            if jobs.contains_key(&name) {
+                return false;
+            }
+            jobs.insert(
+                name,
+                Arc::new(JobSlot {
+                    actor: Mutex::new(Some(actor)),
+                    state: Mutex::new(SlotState::default()),
+                    done_cv: Condvar::new(),
+                    stop_flag,
+                }),
+            );
+        }
+        self.inner.running.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Queue a previously [`Scheduler::register`]ed job onto the event
+    /// heap. Must be called exactly once per registered job.
+    pub fn activate(&self, name: &str) {
+        self.push_entry(0.0, name.to_string());
+    }
+
+    /// Reserve and immediately queue a job actor (`register` + `activate`).
+    /// Returns false (and drops the actor) if the name is already taken.
+    pub fn submit(&self, actor: JobActor, stop_flag: Arc<AtomicBool>) -> bool {
+        let name = actor.name().to_string();
+        if !self.register(actor, stop_flag) {
+            return false;
+        }
+        self.activate(&name);
+        true
+    }
+
+    fn push_entry(&self, due: f64, name: String) {
+        push_entry(&self.inner, due, name);
+    }
+
+    /// Signal a job to stop at its next scheduling point. Returns false
+    /// for unknown names; true for known jobs, running or finished.
+    pub fn stop(&self, name: &str) -> bool {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() };
+        match slot {
+            Some(slot) => {
+                slot.stop_flag.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Block until the named job finishes; `None` for unknown names.
+    ///
+    /// The registry lock is released before blocking (each job has its own
+    /// condvar), so concurrent Create/Stop/wait calls on other jobs are
+    /// never serialized behind this one.
+    pub fn wait(&self, name: &str) -> Option<TuningJobOutcome> {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() }?;
+        let mut state = slot.state.lock().unwrap();
+        while state.outcome.is_none() && !state.panicked {
+            state = slot.done_cv.wait(state).unwrap();
+        }
+        if state.panicked {
+            // surface worker panics like the old thread-join path did
+            panic!("tuning workflow panicked");
+        }
+        state.outcome.clone()
+    }
+
+    /// Non-blocking probe for a finished outcome.
+    pub fn try_outcome(&self, name: &str) -> Option<TuningJobOutcome> {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() }?;
+        let state = slot.state.lock().unwrap();
+        state.outcome.clone()
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        // set the predicate under the heap mutex: a worker between its
+        // shutdown check and cv.wait holds that mutex, so this store
+        // cannot interleave there (no lost wakeup)
+        {
+            let _guard = self.inner.heap.lock().unwrap();
+            self.inner.shutdown.store(true, Ordering::SeqCst);
+        }
+        self.inner.heap_cv.notify_all();
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+    }
+}
+
+/// Allocate a sequence number and queue `(due, seq, name)` on the event
+/// heap — the single queueing path shared by submit/activate and the
+/// worker re-queue, so ordering rules live in one place.
+fn push_entry(inner: &Inner, due: f64, name: String) {
+    let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
+    inner.heap.lock().unwrap().push(Reverse(QueueEntry { due, seq, name }));
+    inner.heap_cv.notify_one();
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        // pop the earliest-due entry, or sleep until one arrives
+        let entry = {
+            let mut heap = inner.heap.lock().unwrap();
+            loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(Reverse(e)) = heap.pop() {
+                    break e;
+                }
+                heap = inner.heap_cv.wait(heap).unwrap();
+            }
+        };
+        let slot = { inner.jobs.lock().unwrap().get(&entry.name).cloned() };
+        let Some(slot) = slot else { continue };
+
+        // poll a bounded slice; the actor mutex is per-job, so workers on
+        // other jobs are untouched. catch_unwind keeps one poisonous job
+        // from taking the whole pool down (§3.3 robustness).
+        let mut actor_guard = slot.actor.lock().unwrap();
+        let Some(actor) = actor_guard.as_mut() else { continue };
+        let polled = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            actor.poll(inner.batch_steps)
+        }));
+        match polled {
+            Ok(ActorPoll::Pending { due }) => {
+                drop(actor_guard);
+                push_entry(inner, due, entry.name);
+            }
+            Ok(ActorPoll::Complete(outcome)) => {
+                *actor_guard = None; // release strategy/platform resources
+                drop(actor_guard);
+                let mut state = slot.state.lock().unwrap();
+                // decrement before publishing: a waiter that observes the
+                // outcome must never still see this job in running_jobs()
+                inner.running.fetch_sub(1, Ordering::Relaxed);
+                state.outcome = Some(*outcome);
+                drop(state);
+                slot.done_cv.notify_all();
+            }
+            Err(_) => {
+                *actor_guard = None;
+                drop(actor_guard);
+                let mut state = slot.state.lock().unwrap();
+                inner.running.fetch_sub(1, Ordering::Relaxed);
+                state.panicked = true;
+                drop(state);
+                slot.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TuningJobRequest;
+    use crate::coordinator::stopping_by_name;
+    use crate::gp::NativeBackend;
+    use crate::metrics::MetricsService;
+    use crate::objectives::Objective;
+    use crate::platform::{PlatformConfig, TrainingPlatform};
+    use crate::store::MetadataStore;
+
+    fn actor(name: &str, evals: u32, seed: u64, stop_flag: Arc<AtomicBool>) -> JobActor {
+        let request = TuningJobRequest {
+            name: name.into(),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: evals,
+            max_parallel_jobs: 2,
+            seed,
+            ..Default::default()
+        };
+        let objective: Arc<dyn Objective> =
+            crate::objectives::by_name("branin").unwrap().into();
+        let strategy = crate::strategies::by_name(
+            "random",
+            &objective.space(),
+            Arc::new(NativeBackend),
+            seed,
+        )
+        .unwrap();
+        JobActor::new(
+            request,
+            objective,
+            strategy,
+            stopping_by_name("off").unwrap(),
+            TrainingPlatform::new(PlatformConfig::noiseless(), seed),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            stop_flag,
+        )
+    }
+
+    #[test]
+    fn jobs_complete_through_the_pool() {
+        let sched = Scheduler::new(SchedulerConfig { workers: 2, batch_steps: 16 });
+        for i in 0..8u64 {
+            let flag = Arc::new(AtomicBool::new(false));
+            assert!(sched.submit(actor(&format!("s-{i}"), 3, i, Arc::clone(&flag)), flag));
+        }
+        for i in 0..8u64 {
+            let out = sched.wait(&format!("s-{i}")).unwrap();
+            assert_eq!(out.evaluations.len(), 3);
+        }
+        assert_eq!(sched.running_jobs(), 0);
+        assert_eq!(sched.worker_count(), 2);
+    }
+
+    #[test]
+    fn duplicate_submissions_rejected() {
+        let sched = Scheduler::new(SchedulerConfig { workers: 1, batch_steps: 64 });
+        let f1 = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::new(AtomicBool::new(false));
+        assert!(sched.submit(actor("dup", 2, 1, Arc::clone(&f1)), f1));
+        assert!(!sched.submit(actor("dup", 2, 2, Arc::clone(&f2)), f2));
+        assert!(sched.wait("dup").is_some());
+    }
+
+    #[test]
+    fn wait_on_unknown_job_is_none() {
+        let sched = Scheduler::new(SchedulerConfig::default());
+        assert!(sched.wait("ghost").is_none());
+        assert!(sched.try_outcome("ghost").is_none());
+        assert!(!sched.stop("ghost"));
+    }
+
+    #[test]
+    fn stop_flag_reaches_the_actor() {
+        let sched = Scheduler::new(SchedulerConfig { workers: 1, batch_steps: 8 });
+        let flag = Arc::new(AtomicBool::new(false));
+        assert!(sched.submit(actor("stoppable", 10_000, 3, Arc::clone(&flag)), flag));
+        assert!(sched.stop("stoppable"));
+        let out = sched.wait("stoppable").unwrap();
+        assert!(out.evaluations.len() < 10_000);
+    }
+
+    #[test]
+    fn outcomes_identical_to_direct_runner() {
+        // the same seeded job through the pool and run-to-completion
+        let direct = crate::coordinator::TuningJobRunner::new(
+            TuningJobRequest {
+                name: "ref".into(),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: 5,
+                max_parallel_jobs: 2,
+                seed: 17,
+                ..Default::default()
+            },
+            crate::objectives::by_name("branin").unwrap().into(),
+            crate::strategies::by_name(
+                "random",
+                &crate::objectives::by_name("branin").unwrap().space(),
+                Arc::new(NativeBackend),
+                17,
+            )
+            .unwrap(),
+            stopping_by_name("off").unwrap(),
+            TrainingPlatform::new(PlatformConfig::noiseless(), 17),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+        .run();
+
+        let sched = Scheduler::new(SchedulerConfig { workers: 3, batch_steps: 7 });
+        let flag = Arc::new(AtomicBool::new(false));
+        assert!(sched.submit(actor("ref", 5, 17, Arc::clone(&flag)), flag));
+        let pooled = sched.wait("ref").unwrap();
+
+        assert_eq!(direct.evaluations.len(), pooled.evaluations.len());
+        for (a, b) in direct.evaluations.iter().zip(&pooled.evaluations) {
+            assert_eq!(a.training_job_name, b.training_job_name);
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.final_value, b.final_value);
+            assert_eq!(a.ended_at.to_bits(), b.ended_at.to_bits());
+        }
+        assert_eq!(direct.total_seconds.to_bits(), pooled.total_seconds.to_bits());
+    }
+}

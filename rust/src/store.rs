@@ -7,19 +7,34 @@
 //!
 //! * per-item version numbers with **conditional writes** (optimistic
 //!   concurrency for the workflow engine's state transitions),
-//! * prefix listing (List* APIs),
+//! * prefix listing (List* APIs) with **pagination** ([`MetadataStore::scan_page`]),
 //! * JSON snapshot persistence (durability stand-in).
 //!
-//! The store is `Sync`; the API layer shares it across tuning-job worker
-//! threads.
+//! The store is **lock-striped into K shards** hashed by `(table, key)`
+//! (DynamoDB's partitioning, scaled down): point operations lock exactly
+//! one shard, so the scheduler's worker pool writing on behalf of many
+//! concurrent tuning jobs does not serialize on one global mutex. Prefix
+//! `scan`/`list_keys` visit the shards one at a time, range-bound each
+//! shard's BTreeMap to the prefix instead of cloning whole tables, and
+//! merge-sort the per-shard results — output order is identical to the
+//! old single-lock store's. Like DynamoDB's Scan, cross-shard reads are
+//! *not* point-in-time atomic with respect to concurrent writers (each
+//! shard is read consistently, but a writer may land between shards);
+//! [`MetadataStore::snapshot`] is the exception — it holds every shard
+//! lock and is a true point-in-time capture.
 
 use std::collections::BTreeMap;
+use std::ops::Bound;
 use std::sync::Mutex;
 
 use crate::json::{self, Json};
 
 /// Version assigned to an item on each successful write.
 pub type Version = u64;
+
+/// Default shard count (lock stripes). Kept modest: each shard is a
+/// BTreeMap behind its own mutex, and the workload is dozens-of-writers.
+const DEFAULT_SHARDS: usize = 16;
 
 /// Conditional-write failure.
 #[derive(Debug, PartialEq, Eq)]
@@ -40,30 +55,105 @@ impl std::fmt::Display for StoreError {
 
 impl std::error::Error for StoreError {}
 
+/// One lock stripe: its slice of every table, keyed `table → key → item`.
 #[derive(Default)]
-struct Table {
-    items: BTreeMap<String, (Version, Json)>,
+struct Shard {
+    tables: BTreeMap<String, BTreeMap<String, (Version, Json)>>,
 }
 
-/// In-memory, thread-safe metadata store with DynamoDB-like semantics.
-#[derive(Default)]
+impl Shard {
+    /// Collect `(key, version, value)` for keys with `prefix`, starting
+    /// strictly after `start_after` (pagination cursor), at most `limit`
+    /// entries. Range-bounded: never walks or clones the whole table.
+    fn scan_prefix(
+        &self,
+        table: &str,
+        prefix: &str,
+        start_after: Option<&str>,
+        limit: usize,
+    ) -> Vec<(String, Version, Json)> {
+        let Some(t) = self.tables.get(table) else { return Vec::new() };
+        // keys sharing a prefix are contiguous in sorted order, so start at
+        // max(prefix inclusive, cursor exclusive) and stop at the first
+        // non-matching key
+        let lower: Bound<&str> = match start_after {
+            Some(sa) if sa >= prefix => Bound::Excluded(sa),
+            _ => Bound::Included(prefix),
+        };
+        let mut out = Vec::new();
+        for (k, (ver, v)) in t.range::<str, _>((lower, Bound::Unbounded)) {
+            if !k.starts_with(prefix) {
+                break;
+            }
+            out.push((k.clone(), *ver, v.clone()));
+            if out.len() >= limit {
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// In-memory, thread-safe metadata store with DynamoDB-like semantics,
+/// lock-striped into shards hashed by `(table, key)`.
 pub struct MetadataStore {
-    tables: Mutex<BTreeMap<String, Table>>,
+    shards: Vec<Mutex<Shard>>,
     writes: std::sync::atomic::AtomicU64,
 }
 
+impl Default for MetadataStore {
+    fn default() -> Self {
+        Self::with_shards(DEFAULT_SHARDS)
+    }
+}
+
+/// FNV-1a over a sequence of byte slices — the shard-routing hash shared
+/// by [`MetadataStore`] and [`crate::metrics::MetricsService`].
+pub(crate) fn fnv1a(parts: &[&[u8]]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
 impl MetadataStore {
-    /// Empty store.
+    /// Empty store with the default shard count.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Empty store with an explicit shard count (≥ 1). `with_shards(1)`
+    /// is the old single-lock store — the reference the sharded scan
+    /// property tests compare against.
+    pub fn with_shards(shards: usize) -> Self {
+        let shards = shards.max(1);
+        MetadataStore {
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            writes: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Number of lock stripes.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Deterministic FNV-1a shard index of `(table, key)`.
+    fn shard_of(&self, table: &str, key: &str) -> usize {
+        let h = fnv1a(&[table.as_bytes(), &[0], key.as_bytes()]);
+        (h % self.shards.len() as u64) as usize
+    }
+
     /// Unconditional put; returns the new version.
     pub fn put(&self, table: &str, key: &str, value: Json) -> Version {
-        let mut tables = self.tables.lock().unwrap();
-        let t = tables.entry(table.to_string()).or_default();
-        let next = t.items.get(key).map(|(v, _)| v + 1).unwrap_or(1);
-        t.items.insert(key.to_string(), (next, value));
+        let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        let t = shard.tables.entry(table.to_string()).or_default();
+        let next = t.get(key).map(|(v, _)| v + 1).unwrap_or(1);
+        t.insert(key.to_string(), (next, value));
         self.writes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         next
     }
@@ -78,9 +168,9 @@ impl MetadataStore {
         value: Json,
         expected: Option<Version>,
     ) -> Result<Version, StoreError> {
-        let mut tables = self.tables.lock().unwrap();
-        let t = tables.entry(table.to_string()).or_default();
-        let actual = t.items.get(key).map(|(v, _)| *v);
+        let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        let t = shard.tables.entry(table.to_string()).or_default();
+        let actual = t.get(key).map(|(v, _)| *v);
         match (expected, actual) {
             (None, None) => {}
             (Some(e), Some(a)) if e == a => {}
@@ -93,54 +183,87 @@ impl MetadataStore {
             }
         }
         let next = actual.map(|v| v + 1).unwrap_or(1);
-        t.items.insert(key.to_string(), (next, value));
+        t.insert(key.to_string(), (next, value));
         self.writes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Ok(next)
     }
 
     /// Read an item with its version.
     pub fn get(&self, table: &str, key: &str) -> Option<(Version, Json)> {
-        let tables = self.tables.lock().unwrap();
-        tables.get(table)?.items.get(key).cloned()
+        let shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        shard.tables.get(table)?.get(key).cloned()
     }
 
     /// Delete an item; true if it existed.
     pub fn delete(&self, table: &str, key: &str) -> bool {
-        let mut tables = self.tables.lock().unwrap();
-        tables
+        let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        shard
+            .tables
             .get_mut(table)
-            .map(|t| t.items.remove(key).is_some())
+            .map(|t| t.remove(key).is_some())
             .unwrap_or(false)
     }
 
-    /// Keys with the given prefix (List* API support).
+    /// Keys with the given prefix (List* API support), in sorted order.
     pub fn list_keys(&self, table: &str, prefix: &str) -> Vec<String> {
-        let tables = self.tables.lock().unwrap();
-        tables
-            .get(table)
-            .map(|t| {
-                t.items
-                    .keys()
-                    .filter(|k| k.starts_with(prefix))
-                    .cloned()
-                    .collect()
-            })
-            .unwrap_or_default()
+        let mut keys: Vec<String> = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            keys.extend(
+                shard
+                    .scan_prefix(table, prefix, None, usize::MAX)
+                    .into_iter()
+                    .map(|(k, _, _)| k),
+            );
+        }
+        keys.sort();
+        keys
     }
 
-    /// All (key, value) pairs with the given prefix.
+    /// All (key, value) pairs with the given prefix, key-sorted.
     pub fn scan(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
-        let tables = self.tables.lock().unwrap();
-        tables
-            .get(table)
-            .map(|t| {
-                t.items
-                    .iter()
-                    .filter(|(k, _)| k.starts_with(prefix))
-                    .map(|(k, (_, v))| (k.clone(), v.clone()))
-                    .collect()
-            })
-            .unwrap_or_default()
+        let mut items: Vec<(String, Json)> = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            items.extend(
+                shard
+                    .scan_prefix(table, prefix, None, usize::MAX)
+                    .into_iter()
+                    .map(|(k, _, v)| (k, v)),
+            );
+        }
+        items.sort_by(|a, b| a.0.cmp(&b.0));
+        items
+    }
+
+    /// Paginated prefix scan: at most `limit` key-sorted (key, value)
+    /// pairs with keys strictly greater than `start_after` (pass the last
+    /// key of the previous page as the cursor; `None` starts at the
+    /// beginning). An empty result means the scan is exhausted. Each shard
+    /// lock is held only long enough to pull its own ≤ `limit` candidates.
+    pub fn scan_page(
+        &self,
+        table: &str,
+        prefix: &str,
+        start_after: Option<&str>,
+        limit: usize,
+    ) -> Vec<(String, Json)> {
+        if limit == 0 {
+            return Vec::new();
+        }
+        let mut items: Vec<(String, Json)> = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            items.extend(
+                shard
+                    .scan_prefix(table, prefix, start_after, limit)
+                    .into_iter()
+                    .map(|(k, _, v)| (k, v)),
+            );
+        }
+        items.sort_by(|a, b| a.0.cmp(&b.0));
+        items.truncate(limit);
+        items
     }
 
     /// Total successful writes (availability accounting for §6.5).
@@ -148,19 +271,37 @@ impl MetadataStore {
         self.writes.load(std::sync::atomic::Ordering::Relaxed)
     }
 
-    /// Serialize the whole store to pretty JSON.
+    /// Serialize the whole store to pretty JSON. Shards are merged into
+    /// one sorted `table → key` object, so the format is identical across
+    /// shard counts (and to the pre-sharding store).
+    ///
+    /// Unlike prefix scans, a snapshot is a **point-in-time** durability
+    /// operation: all shard locks are held simultaneously (acquired in
+    /// index order; point ops only ever hold one, so this cannot
+    /// deadlock), so a restored snapshot is always a state that actually
+    /// existed.
     pub fn snapshot(&self) -> String {
-        let tables = self.tables.lock().unwrap();
+        let guards: Vec<_> = self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let mut merged: BTreeMap<String, BTreeMap<String, (Version, Json)>> = BTreeMap::new();
+        for shard in &guards {
+            for (name, t) in shard.tables.iter() {
+                let m = merged.entry(name.clone()).or_default();
+                for (k, item) in t {
+                    m.insert(k.clone(), item.clone());
+                }
+            }
+        }
+        drop(guards);
         let mut obj = BTreeMap::new();
-        for (name, t) in tables.iter() {
+        for (name, t) in merged {
             let mut items = BTreeMap::new();
-            for (k, (ver, v)) in &t.items {
+            for (k, (ver, v)) in t {
                 items.insert(
-                    k.clone(),
-                    Json::obj(vec![("version", Json::Num(*ver as f64)), ("value", v.clone())]),
+                    k,
+                    Json::obj(vec![("version", Json::Num(ver as f64)), ("value", v)]),
                 );
             }
-            obj.insert(name.clone(), Json::Obj(items));
+            obj.insert(name, Json::Obj(items));
         }
         Json::Obj(obj).to_pretty()
     }
@@ -172,25 +313,25 @@ impl MetadataStore {
             .as_obj()
             .ok_or_else(|| StoreError::Corrupt("top level must be object".into()))?;
         let store = MetadataStore::new();
-        {
-            let mut tables = store.tables.lock().unwrap();
-            for (name, items) in obj {
-                let mut table = Table::default();
-                let items = items
-                    .as_obj()
-                    .ok_or_else(|| StoreError::Corrupt("table must be object".into()))?;
-                for (k, entry) in items {
-                    let ver = entry
-                        .get("version")
-                        .and_then(Json::as_i64)
-                        .ok_or_else(|| StoreError::Corrupt("missing version".into()))?;
-                    let value = entry
-                        .get("value")
-                        .cloned()
-                        .ok_or_else(|| StoreError::Corrupt("missing value".into()))?;
-                    table.items.insert(k.clone(), (ver as Version, value));
-                }
-                tables.insert(name.clone(), table);
+        for (name, items) in obj {
+            let items = items
+                .as_obj()
+                .ok_or_else(|| StoreError::Corrupt("table must be object".into()))?;
+            for (k, entry) in items {
+                let ver = entry
+                    .get("version")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| StoreError::Corrupt("missing version".into()))?;
+                let value = entry
+                    .get("value")
+                    .cloned()
+                    .ok_or_else(|| StoreError::Corrupt("missing value".into()))?;
+                let mut shard = store.shards[store.shard_of(name, k)].lock().unwrap();
+                shard
+                    .tables
+                    .entry(name.clone())
+                    .or_default()
+                    .insert(k.clone(), (ver as Version, value));
             }
         }
         Ok(store)
@@ -247,6 +388,70 @@ mod tests {
         assert_eq!(s.list_keys("jobs", "tune-"), vec!["tune-1", "tune-2"]);
         assert_eq!(s.scan("jobs", "train-").len(), 1);
         assert!(s.list_keys("nope", "").is_empty());
+    }
+
+    #[test]
+    fn scan_page_paginates_in_key_order() {
+        let s = MetadataStore::new();
+        for i in 0..25 {
+            s.put("jobs", &format!("run-{i:03}"), Json::Num(i as f64));
+        }
+        s.put("jobs", "other", Json::Null);
+        let mut seen = Vec::new();
+        let mut cursor: Option<String> = None;
+        loop {
+            let page = s.scan_page("jobs", "run-", cursor.as_deref(), 7);
+            if page.is_empty() {
+                break;
+            }
+            assert!(page.len() <= 7);
+            cursor = Some(page.last().unwrap().0.clone());
+            seen.extend(page.into_iter().map(|(k, _)| k));
+        }
+        let full: Vec<String> = s.scan("jobs", "run-").into_iter().map(|(k, _)| k).collect();
+        assert_eq!(seen, full);
+        assert_eq!(seen.len(), 25);
+        // limit 0 and exhausted cursors return empty pages
+        assert!(s.scan_page("jobs", "run-", None, 0).is_empty());
+        assert!(s.scan_page("jobs", "run-", Some("run-999"), 5).is_empty());
+        // missing tables scan empty
+        assert!(s.scan_page("nope", "", None, 5).is_empty());
+    }
+
+    #[test]
+    fn shard_counts_do_not_change_observable_behavior() {
+        for shards in [1, 3, 16] {
+            let s = MetadataStore::with_shards(shards);
+            assert_eq!(s.shard_count(), shards);
+            for i in 0..40 {
+                s.put("t", &format!("k-{i:02}"), Json::Num(i as f64));
+            }
+            s.put("u", "k-00", Json::Bool(true)); // same key, other table
+            assert_eq!(s.list_keys("t", "k-").len(), 40);
+            assert_eq!(s.scan("t", "k-1").len(), 10);
+            assert_eq!(s.get("t", "k-07").unwrap().1, Json::Num(7.0));
+            assert_eq!(s.get("u", "k-00").unwrap().1, Json::Bool(true));
+            // sorted output regardless of shard layout
+            let keys = s.list_keys("t", "");
+            let mut sorted = keys.clone();
+            sorted.sort();
+            assert_eq!(keys, sorted);
+        }
+    }
+
+    #[test]
+    fn snapshot_identical_across_shard_counts() {
+        let fill = |s: &MetadataStore| {
+            for i in 0..30 {
+                s.put("a", &format!("x{i}"), Json::Num(i as f64));
+                s.put("b", &format!("y{i}"), Json::Str(format!("v{i}")));
+            }
+        };
+        let one = MetadataStore::with_shards(1);
+        let many = MetadataStore::with_shards(8);
+        fill(&one);
+        fill(&many);
+        assert_eq!(one.snapshot(), many.snapshot());
     }
 
     #[test]

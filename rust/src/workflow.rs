@@ -9,6 +9,16 @@
 //! (§3.3's "built-in retry mechanism to guarantee robustness") executing on
 //! the virtual clock, recording a full execution history for the
 //! Describe API.
+//!
+//! Executions are **resumable**: [`StateMachine::begin`] creates an
+//! [`ExecutionState`] cursor and [`StateMachine::step`] advances it by one
+//! handler invocation, returning control to the caller after every state.
+//! `Wait` transitions and retry backoffs *park* the execution
+//! ([`StepOutcome::Parked`]) instead of looping, so a scheduler can
+//! multiplex many executions over a bounded worker pool and order parked
+//! ones on a virtual-time event heap ([`crate::scheduler`]).
+//! [`StateMachine::execute`] is the run-to-completion convenience wrapper
+//! over the same step loop.
 
 /// Outcome returned by a state handler.
 #[derive(Clone, Debug, PartialEq)]
@@ -99,6 +109,51 @@ impl Execution {
     }
 }
 
+/// Outcome of advancing an execution by one [`StateMachine::step`].
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// The next state is immediately runnable; step again when convenient.
+    Ready,
+    /// The execution parked itself for `seconds` of virtual time (a `Wait`
+    /// transition or a retry backoff). The cursor's clock has already been
+    /// advanced; a scheduler may use `seconds` to order parked executions.
+    Parked {
+        /// Virtual seconds of the wait that just started.
+        seconds: f64,
+    },
+    /// The execution reached a terminal state.
+    Done(Execution),
+}
+
+/// Resumable cursor over one execution of a [`StateMachine`].
+///
+/// Owns everything that used to live on `execute`'s stack — current state,
+/// attempt counter, step history and the virtual clock — so an execution
+/// can be advanced one state at a time and suspended in between.
+pub struct ExecutionState {
+    current: usize,
+    attempt: u32,
+    transitions: usize,
+    steps: Vec<StepRecord>,
+    /// Virtual clock local to this execution (seconds).
+    pub clock: f64,
+    finished: Option<Execution>,
+}
+
+impl ExecutionState {
+    /// True once the execution reached a terminal state.
+    pub fn is_finished(&self) -> bool {
+        self.finished.is_some()
+    }
+
+    /// Terminal status and finish time, once finished. The full step
+    /// history is carried by the [`StepOutcome::Done`] of the step that
+    /// reached the terminal state, not retained here.
+    pub fn result(&self) -> Option<&Execution> {
+        self.finished.as_ref()
+    }
+}
+
 /// A named-state workflow.
 pub struct StateMachine<C> {
     states: Vec<State<C>>,
@@ -126,100 +181,141 @@ impl<C> StateMachine<C> {
         self.states.iter().position(|s| s.name == name)
     }
 
-    /// Run to a terminal state, advancing `clock` through waits/backoffs.
-    pub fn execute(&mut self, ctx: &mut C, clock: &mut f64) -> Execution {
-        let mut steps = Vec::new();
-        let mut current = match self.index_of(&self.start.clone()) {
-            Some(i) => i,
+    /// Begin a resumable execution with its virtual clock at `clock`.
+    pub fn begin(&self, clock: f64) -> ExecutionState {
+        let mut exec = ExecutionState {
+            current: 0,
+            attempt: 1,
+            transitions: 0,
+            steps: Vec::new(),
+            clock,
+            finished: None,
+        };
+        match self.index_of(&self.start) {
+            Some(i) => exec.current = i,
             None => {
-                return Execution {
+                exec.finished = Some(Execution {
                     status: ExecutionStatus::Failed(format!(
                         "start state '{}' not found",
                         self.start
                     )),
-                    steps,
-                    finished_at: *clock,
-                }
-            }
-        };
-        let mut attempt = 1u32;
-        for _ in 0..self.max_transitions {
-            let name = self.states[current].name.clone();
-            let retry = self.states[current].retry;
-            let tr = (self.states[current].handler)(ctx, *clock);
-            steps.push(StepRecord {
-                state: name.clone(),
-                attempt,
-                time: *clock,
-                outcome: format!("{tr:?}"),
-            });
-            match tr {
-                Transition::Succeed => {
-                    return Execution {
-                        status: ExecutionStatus::Succeeded,
-                        steps,
-                        finished_at: *clock,
-                    }
-                }
-                Transition::Fail(e) => {
-                    return Execution {
-                        status: ExecutionStatus::Failed(e),
-                        steps,
-                        finished_at: *clock,
-                    }
-                }
-                Transition::Next(next) => {
-                    attempt = 1;
-                    match self.index_of(&next) {
-                        Some(i) => current = i,
-                        None => {
-                            return Execution {
-                                status: ExecutionStatus::Failed(format!(
-                                    "unknown state '{next}'"
-                                )),
-                                steps,
-                                finished_at: *clock,
-                            }
-                        }
-                    }
-                }
-                Transition::Wait { seconds, then } => {
-                    *clock += seconds.max(0.0);
-                    attempt = 1;
-                    match self.index_of(&then) {
-                        Some(i) => current = i,
-                        None => {
-                            return Execution {
-                                status: ExecutionStatus::Failed(format!(
-                                    "unknown state '{then}'"
-                                )),
-                                steps,
-                                finished_at: *clock,
-                            }
-                        }
-                    }
-                }
-                Transition::Retryable(err) => {
-                    if attempt >= retry.max_attempts {
-                        return Execution {
-                            status: ExecutionStatus::Failed(format!(
-                                "state '{name}' exhausted {} attempts: {err}",
-                                retry.max_attempts
-                            )),
-                            steps,
-                            finished_at: *clock,
-                        };
-                    }
-                    *clock += retry.interval_seconds
-                        * retry.backoff_rate.powi(attempt as i32 - 1);
-                    attempt += 1;
-                }
+                    steps: Vec::new(),
+                    finished_at: clock,
+                });
             }
         }
-        Execution {
-            status: ExecutionStatus::Failed("transition budget exhausted".into()),
-            steps,
-            finished_at: *clock,
+        exec
+    }
+
+    fn finish(exec: &mut ExecutionState, status: ExecutionStatus) -> StepOutcome {
+        let done = Execution {
+            status,
+            steps: std::mem::take(&mut exec.steps),
+            finished_at: exec.clock,
+        };
+        // keep only a lightweight terminal marker: the full step history
+        // (up to max_transitions records) is delivered exactly once, to
+        // the caller of the step that finished — no doubled allocation
+        exec.finished = Some(Execution {
+            status: done.status.clone(),
+            steps: Vec::new(),
+            finished_at: done.finished_at,
+        });
+        StepOutcome::Done(done)
+    }
+
+    /// Advance `exec` by exactly one handler invocation.
+    ///
+    /// Returns [`StepOutcome::Ready`] when the next state can run
+    /// immediately, [`StepOutcome::Parked`] when the execution entered a
+    /// wait/backoff (its clock already advanced past it), and
+    /// [`StepOutcome::Done`] at a terminal state. The full step history is
+    /// carried by the `Done` of the step that finished; stepping an
+    /// already-finished execution returns `Done` again with the terminal
+    /// status and time but an empty history.
+    pub fn step(&mut self, exec: &mut ExecutionState, ctx: &mut C) -> StepOutcome {
+        if let Some(done) = &exec.finished {
+            return StepOutcome::Done(done.clone());
+        }
+        if exec.transitions >= self.max_transitions {
+            return Self::finish(
+                exec,
+                ExecutionStatus::Failed("transition budget exhausted".into()),
+            );
+        }
+        exec.transitions += 1;
+        let name = self.states[exec.current].name.clone();
+        let retry = self.states[exec.current].retry;
+        let tr = (self.states[exec.current].handler)(ctx, exec.clock);
+        exec.steps.push(StepRecord {
+            state: name.clone(),
+            attempt: exec.attempt,
+            time: exec.clock,
+            outcome: format!("{tr:?}"),
+        });
+        match tr {
+            Transition::Succeed => Self::finish(exec, ExecutionStatus::Succeeded),
+            Transition::Fail(e) => Self::finish(exec, ExecutionStatus::Failed(e)),
+            Transition::Next(next) => {
+                exec.attempt = 1;
+                match self.index_of(&next) {
+                    Some(i) => {
+                        exec.current = i;
+                        StepOutcome::Ready
+                    }
+                    None => Self::finish(
+                        exec,
+                        ExecutionStatus::Failed(format!("unknown state '{next}'")),
+                    ),
+                }
+            }
+            Transition::Wait { seconds, then } => {
+                let seconds = seconds.max(0.0);
+                exec.clock += seconds;
+                exec.attempt = 1;
+                match self.index_of(&then) {
+                    Some(i) => {
+                        exec.current = i;
+                        StepOutcome::Parked { seconds }
+                    }
+                    None => Self::finish(
+                        exec,
+                        ExecutionStatus::Failed(format!("unknown state '{then}'")),
+                    ),
+                }
+            }
+            Transition::Retryable(err) => {
+                if exec.attempt >= retry.max_attempts {
+                    return Self::finish(
+                        exec,
+                        ExecutionStatus::Failed(format!(
+                            "state '{name}' exhausted {} attempts: {err}",
+                            retry.max_attempts
+                        )),
+                    );
+                }
+                let backoff =
+                    retry.interval_seconds * retry.backoff_rate.powi(exec.attempt as i32 - 1);
+                exec.clock += backoff;
+                exec.attempt += 1;
+                StepOutcome::Parked { seconds: backoff }
+            }
+        }
+    }
+
+    /// Run to a terminal state, advancing `clock` through waits/backoffs.
+    /// Equivalent to driving [`StateMachine::step`] in a tight loop; kept
+    /// for callers that own a whole timeline (tests, direct runners).
+    pub fn execute(&mut self, ctx: &mut C, clock: &mut f64) -> Execution {
+        let mut exec = self.begin(*clock);
+        loop {
+            match self.step(&mut exec, ctx) {
+                StepOutcome::Ready | StepOutcome::Parked { .. } => {}
+                StepOutcome::Done(done) => {
+                    *clock = exec.clock;
+                    return done;
+                }
+            }
         }
     }
 }
@@ -312,6 +408,134 @@ mod tests {
         let mut clock = 0.0;
         let ex = m.execute(&mut (), &mut clock);
         assert!(matches!(ex.status, ExecutionStatus::Failed(ref e) if e.contains("ghost")));
+    }
+
+    #[test]
+    fn step_parks_on_wait_and_resumes() {
+        let mut m: StateMachine<u32> = StateMachine::new("a")
+            .state("a", RetryPolicy::none(), |c: &mut u32, _| {
+                *c += 1;
+                Transition::Wait { seconds: 12.5, then: "b".into() }
+            })
+            .state("b", RetryPolicy::none(), |c: &mut u32, t| {
+                assert!(t >= 12.5);
+                *c += 10;
+                Transition::Succeed
+            });
+        let mut ctx = 0u32;
+        let mut exec = m.begin(0.0);
+        // first step runs "a" and parks for the wait
+        match m.step(&mut exec, &mut ctx) {
+            StepOutcome::Parked { seconds } => assert_eq!(seconds, 12.5),
+            other => panic!("expected Parked, got {other:?}"),
+        }
+        assert!(!exec.is_finished());
+        assert_eq!(exec.clock, 12.5);
+        assert_eq!(ctx, 1);
+        // resuming later runs "b" to completion
+        match m.step(&mut exec, &mut ctx) {
+            StepOutcome::Done(done) => {
+                assert_eq!(done.status, ExecutionStatus::Succeeded);
+                assert_eq!(done.steps.len(), 2);
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        assert_eq!(ctx, 11);
+        assert!(exec.is_finished());
+        assert_eq!(exec.result().unwrap().status, ExecutionStatus::Succeeded);
+    }
+
+    #[test]
+    fn step_parks_on_retry_backoff() {
+        struct Ctx {
+            failures_left: u32,
+        }
+        let mut m: StateMachine<Ctx> = StateMachine::new("flaky").state(
+            "flaky",
+            RetryPolicy { max_attempts: 3, interval_seconds: 4.0, backoff_rate: 2.0 },
+            |ctx: &mut Ctx, _| {
+                if ctx.failures_left > 0 {
+                    ctx.failures_left -= 1;
+                    Transition::Retryable("boom".into())
+                } else {
+                    Transition::Succeed
+                }
+            },
+        );
+        let mut ctx = Ctx { failures_left: 2 };
+        let mut exec = m.begin(0.0);
+        let mut parked = Vec::new();
+        loop {
+            match m.step(&mut exec, &mut ctx) {
+                StepOutcome::Parked { seconds } => parked.push(seconds),
+                StepOutcome::Ready => {}
+                StepOutcome::Done(done) => {
+                    assert_eq!(done.status, ExecutionStatus::Succeeded);
+                    break;
+                }
+            }
+        }
+        // exponential backoff: 4, then 8, each returned as a park
+        assert_eq!(parked, vec![4.0, 8.0]);
+        assert_eq!(exec.clock, 12.0);
+    }
+
+    #[test]
+    fn step_and_execute_agree() {
+        // same machine driven both ways produces identical histories
+        let build = || -> StateMachine<Vec<u32>> {
+            StateMachine::new("a")
+                .state("a", RetryPolicy::none(), |c: &mut Vec<u32>, _| {
+                    c.push(1);
+                    Transition::Wait { seconds: 3.0, then: "b".into() }
+                })
+                .state("b", RetryPolicy::none(), |c: &mut Vec<u32>, _| {
+                    c.push(2);
+                    if c.len() < 5 {
+                        Transition::Next("b".into())
+                    } else {
+                        Transition::Succeed
+                    }
+                })
+        };
+        let mut direct_ctx = Vec::new();
+        let mut clock = 0.0;
+        let direct = build().execute(&mut direct_ctx, &mut clock);
+
+        let mut stepped_ctx = Vec::new();
+        let mut m = build();
+        let mut exec = m.begin(0.0);
+        let stepped = loop {
+            if let StepOutcome::Done(done) = m.step(&mut exec, &mut stepped_ctx) {
+                break done;
+            }
+        };
+        assert_eq!(direct_ctx, stepped_ctx);
+        assert_eq!(direct.status, stepped.status);
+        assert_eq!(direct.steps, stepped.steps);
+        assert_eq!(direct.finished_at, stepped.finished_at);
+        assert_eq!(clock, exec.clock);
+    }
+
+    #[test]
+    fn stepping_finished_execution_is_stable() {
+        let mut m: StateMachine<()> =
+            StateMachine::new("a").state("a", RetryPolicy::none(), |_, _| Transition::Succeed);
+        let mut exec = m.begin(0.0);
+        let first = match m.step(&mut exec, &mut ()) {
+            StepOutcome::Done(d) => d,
+            other => panic!("expected Done, got {other:?}"),
+        };
+        match m.step(&mut exec, &mut ()) {
+            StepOutcome::Done(second) => {
+                assert_eq!(first.status, second.status);
+                assert_eq!(first.finished_at, second.finished_at);
+                // the full history was delivered with the finishing step
+                assert_eq!(first.steps.len(), 1);
+                assert!(second.steps.is_empty());
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
     }
 
     #[test]

@@ -358,6 +358,108 @@ fn prop_store_versions_strictly_increase() {
 }
 
 #[test]
+fn prop_sharded_store_scans_match_single_lock_reference() {
+    // the lock-striped store must be observationally identical to the old
+    // single-lock store: same versions, same sorted scans/listings, and
+    // scan_page pagination reassembles exactly the full scan
+    use amt::json::Json;
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xA11CE);
+        let sharded = MetadataStore::with_shards(2 + rng.below(14));
+        let reference = MetadataStore::with_shards(1);
+        let tables = ["tuning_jobs", "training_jobs", "misc"];
+        for step in 0..300 {
+            let table = tables[rng.below(tables.len())];
+            let key = format!(
+                "{}-{:03}",
+                ["job", "train", "x"][rng.below(3)],
+                rng.below(40)
+            );
+            match rng.below(5) {
+                0..=1 => {
+                    let v = Json::Num(step as f64);
+                    assert_eq!(
+                        sharded.put(table, &key, v.clone()),
+                        reference.put(table, &key, v),
+                        "seed {seed} step {step}"
+                    );
+                }
+                2 => {
+                    // both stores hold identical state, so conditioning on
+                    // the reference's current version must behave the same
+                    let expected = if rng.uniform() < 0.7 {
+                        reference.get(table, &key).map(|(v, _)| v)
+                    } else {
+                        Some(rng.below(5) as u64 + 1) // often stale
+                    };
+                    let v = Json::Str(format!("s{step}"));
+                    assert_eq!(
+                        sharded.put_if(table, &key, v.clone(), expected),
+                        reference.put_if(table, &key, v, expected),
+                        "seed {seed} step {step}"
+                    );
+                }
+                3 => {
+                    assert_eq!(
+                        sharded.delete(table, &key),
+                        reference.delete(table, &key),
+                        "seed {seed} step {step}"
+                    );
+                }
+                _ => {
+                    assert_eq!(
+                        sharded.get(table, &key),
+                        reference.get(table, &key),
+                        "seed {seed} step {step}"
+                    );
+                }
+            }
+        }
+        // full observational equality across prefixes and tables
+        for table in tables {
+            for prefix in ["", "job", "job-0", "train-01", "x-", "nope"] {
+                assert_eq!(
+                    sharded.list_keys(table, prefix),
+                    reference.list_keys(table, prefix),
+                    "seed {seed} table {table} prefix {prefix}"
+                );
+                assert_eq!(
+                    sharded.scan(table, prefix),
+                    reference.scan(table, prefix),
+                    "seed {seed} table {table} prefix {prefix}"
+                );
+            }
+            // pagination at a random page size reassembles the full scan
+            let page_size = 1 + rng.below(9);
+            let mut paged = Vec::new();
+            let mut cursor: Option<String> = None;
+            loop {
+                let page = sharded.scan_page(table, "", cursor.as_deref(), page_size);
+                if page.is_empty() {
+                    break;
+                }
+                assert!(page.len() <= page_size, "seed {seed}");
+                cursor = Some(page.last().unwrap().0.clone());
+                paged.extend(page);
+            }
+            assert_eq!(paged, reference.scan(table, ""), "seed {seed} table {table}");
+        }
+        // snapshots are byte-identical, and restoring one preserves versions
+        assert_eq!(sharded.snapshot(), reference.snapshot(), "seed {seed}");
+        let restored = MetadataStore::restore(&sharded.snapshot()).unwrap();
+        for table in tables {
+            for key in reference.list_keys(table, "") {
+                assert_eq!(
+                    restored.get(table, &key),
+                    reference.get(table, &key),
+                    "seed {seed} table {table} key {key}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_parallelism_never_exceeded() {
     // from the evaluation records of real tuning runs: at no virtual time
     // do more than L evaluations overlap

@@ -1,0 +1,279 @@
+//! Multi-tenant scheduler integration: a spike of tuning jobs multiplexed
+//! over the bounded worker pool, with concurrent Create/Describe/Stop/wait
+//! traffic — the §3.2/§6.5 service behavior the thread-per-job design
+//! could not provide. Asserts: no deadlock (the test terminating *is* the
+//! property), correct terminal statuses, per-key store version
+//! monotonicity under concurrent observation, a bounded OS-thread budget,
+//! and scheduler outcomes bit-identical to the direct single-tenant
+//! runner.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::coordinator::{stopping_by_name, TuningJobRunner};
+use amt::gp::NativeBackend;
+use amt::metrics::MetricsService;
+use amt::platform::{PlatformConfig, TrainingPlatform};
+use amt::scheduler::SchedulerConfig;
+use amt::store::MetadataStore;
+
+fn spike_request(i: usize, evals: u32) -> TuningJobRequest {
+    TuningJobRequest {
+        name: format!("spike-{i:03}"),
+        objective: "branin".into(),
+        // cheap strategies keep 64 jobs fast; the scheduling machinery is
+        // identical for BO
+        strategy: if i % 2 == 0 { "random" } else { "sobol" }.into(),
+        max_training_jobs: evals,
+        max_parallel_jobs: 3,
+        seed: i as u64,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn spike_of_64_jobs_on_bounded_pool() {
+    let svc = Arc::new(AmtService::new(PlatformConfig::noiseless()));
+    let n = 64usize;
+
+    // the pool is fixed before any job exists and stays well below the
+    // job count: 64 tuning jobs must share ≤ min(cores, 16) workers
+    assert!(svc.worker_count() <= amt::parallel::max_threads().min(16));
+    assert!(svc.worker_count() >= 1);
+
+    for i in 0..n {
+        svc.create_tuning_job(spike_request(i, 3)).unwrap();
+        // interleave synchronous API load during the spike
+        if i % 5 == 0 {
+            let _ = svc.describe_tuning_job(&format!("spike-{:03}", i / 2));
+            let _ = svc.list_tuning_jobs("spike-");
+        }
+    }
+
+    // stop every 8th job mid-flight
+    for i in (0..n).step_by(8) {
+        svc.stop_tuning_job(&format!("spike-{i:03}")).unwrap();
+    }
+
+    // concurrent store observers: per-key versions must be monotone while
+    // the worker pool writes on behalf of all 64 jobs
+    let done = Arc::new(AtomicBool::new(false));
+    let observers: Vec<_> = (0..3usize)
+        .map(|o| {
+            let svc = Arc::clone(&svc);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let store = svc.store();
+                let mut last: Vec<u64> = vec![0; 64];
+                while !done.load(Ordering::Relaxed) {
+                    for (i, slot) in last.iter_mut().enumerate() {
+                        if i % 3 != o {
+                            continue;
+                        }
+                        if let Some((ver, _)) = store.get("tuning_jobs", &format!("spike-{i:03}"))
+                        {
+                            assert!(
+                                ver >= *slot,
+                                "version regressed for spike-{i:03}: {ver} < {slot}"
+                            );
+                            *slot = ver;
+                        }
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        })
+        .collect();
+
+    // wait for every job from several threads at once (wait() must not
+    // serialize behind a service-wide lock)
+    let waiters: Vec<_> = (0..4)
+        .map(|w| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                for i in (w..64).step_by(4) {
+                    let out = svc.wait(&format!("spike-{i:03}")).unwrap();
+                    assert!(out.evaluations.len() <= 3);
+                }
+            })
+        })
+        .collect();
+    for w in waiters {
+        w.join().unwrap();
+    }
+    done.store(true, Ordering::Relaxed);
+    for o in observers {
+        o.join().unwrap();
+    }
+
+    // every job reached a correct terminal status
+    for i in 0..n {
+        let d = svc.describe_tuning_job(&format!("spike-{i:03}")).unwrap();
+        assert!(
+            ["Completed", "Stopped"].contains(&d.status.as_str()),
+            "spike-{i:03} ended as {}",
+            d.status
+        );
+        if i % 8 != 0 {
+            // non-stopped jobs ran their full budget
+            assert_eq!(d.status, "Completed", "spike-{i:03}");
+            assert_eq!(d.evaluations, 3, "spike-{i:03}");
+        }
+    }
+    assert_eq!(svc.list_tuning_jobs("spike-").len(), n);
+    assert_eq!(svc.running_jobs(), 0);
+    assert_eq!(svc.availability(), 1.0);
+}
+
+#[test]
+fn wait_does_not_block_other_api_calls() {
+    // Under the old thread-per-job service, wait() joined the runner thread
+    // while holding the service-wide jobs mutex, so this test deadlocked:
+    // the waiter held the lock until "slow" finished, and stop_tuning_job
+    // needed the lock to ever finish it.
+    let svc = Arc::new(AmtService::new(PlatformConfig::noiseless()));
+    let slow = TuningJobRequest {
+        name: "slow".into(),
+        objective: "branin".into(),
+        strategy: "random".into(),
+        max_training_jobs: 10_000,
+        max_parallel_jobs: 1,
+        ..Default::default()
+    };
+    svc.create_tuning_job(slow).unwrap();
+
+    let waiter = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || svc.wait("slow").unwrap())
+    };
+
+    // while "slow" is being waited on, the synchronous APIs stay live
+    let mut quick = spike_request(0, 2);
+    quick.name = "quick".into();
+    svc.create_tuning_job(quick).unwrap();
+    assert_eq!(svc.wait("quick").unwrap().evaluations.len(), 2);
+    assert!(svc.describe_tuning_job("slow").is_ok());
+
+    // and Stop is what ends the waited-on job
+    svc.stop_tuning_job("slow").unwrap();
+    let out = waiter.join().unwrap();
+    assert!(out.evaluations.len() < 10_000);
+    assert_eq!(svc.describe_tuning_job("slow").unwrap().status, "Stopped");
+}
+
+#[test]
+fn scheduler_outcome_bit_identical_to_direct_runner() {
+    // acceptance criterion: seeded single-job outcomes through the
+    // multi-tenant scheduler match the pre-refactor run-to-completion
+    // runner bit for bit — noisy platform config included
+    let request = TuningJobRequest {
+        name: "bitident".into(),
+        objective: "branin".into(),
+        strategy: "random".into(),
+        max_training_jobs: 8,
+        max_parallel_jobs: 3,
+        seed: 1234,
+        ..Default::default()
+    };
+    let objective: Arc<dyn amt::objectives::Objective> =
+        amt::objectives::by_name("branin").unwrap().into();
+    let strategy = amt::strategies::by_name(
+        "random",
+        &objective.space(),
+        Arc::new(NativeBackend),
+        request.seed,
+    )
+    .unwrap();
+    let direct = TuningJobRunner::new(
+        request.clone(),
+        Arc::clone(&objective),
+        strategy,
+        stopping_by_name("off").unwrap(),
+        TrainingPlatform::new(PlatformConfig::default(), request.seed),
+        Arc::new(MetadataStore::new()),
+        Arc::new(MetricsService::new()),
+        Arc::new(AtomicBool::new(false)),
+    )
+    .run();
+
+    // tiny pool + tiny batch: maximum interleaving with other tenants
+    let svc = AmtService::with_options(
+        PlatformConfig::default(),
+        Arc::new(NativeBackend),
+        SchedulerConfig { workers: 2, batch_steps: 3 },
+    );
+    for i in 0..6 {
+        svc.create_tuning_job(spike_request(i, 2)).unwrap();
+    }
+    svc.create_tuning_job(request).unwrap();
+    let pooled = svc.wait("bitident").unwrap();
+
+    assert_eq!(direct.evaluations.len(), pooled.evaluations.len());
+    for (a, b) in direct.evaluations.iter().zip(&pooled.evaluations) {
+        assert_eq!(a.training_job_name, b.training_job_name);
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.curve.len(), b.curve.len());
+        for (x, y) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(
+            a.final_value.map(f64::to_bits),
+            b.final_value.map(f64::to_bits)
+        );
+        assert_eq!(a.status, b.status);
+        assert_eq!(a.stopped_early, b.stopped_early);
+        assert_eq!(a.attempts, b.attempts);
+        assert_eq!(a.submitted_at.to_bits(), b.submitted_at.to_bits());
+        assert_eq!(a.ended_at.to_bits(), b.ended_at.to_bits());
+    }
+    assert_eq!(direct.total_seconds.to_bits(), pooled.total_seconds.to_bits());
+    assert_eq!(
+        direct.total_billable_seconds.to_bits(),
+        pooled.total_billable_seconds.to_bits()
+    );
+    assert_eq!(direct.retries, pooled.retries);
+    assert_eq!(direct.status, pooled.status);
+}
+
+#[test]
+fn stress_create_stop_wait_interleaving() {
+    // rapid-fire create/stop/wait cycles across a small pool: exercises
+    // slot reuse, re-queueing and the stop path racing job completion
+    let svc = Arc::new(AmtService::with_options(
+        PlatformConfig::noiseless(),
+        Arc::new(NativeBackend),
+        SchedulerConfig { workers: 3, batch_steps: 16 },
+    ));
+    for round in 0..4u64 {
+        for i in 0..16u64 {
+            let r = TuningJobRequest {
+                name: format!("stress-{round}-{i}"),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: if i % 2 == 0 { 2 } else { 200 },
+                max_parallel_jobs: 2,
+                seed: round * 100 + i,
+                ..Default::default()
+            };
+            svc.create_tuning_job(r).unwrap();
+        }
+        // stop the long ones immediately — may race their first events
+        for i in (1..16u64).step_by(2) {
+            svc.stop_tuning_job(&format!("stress-{round}-{i}")).unwrap();
+        }
+        for i in 0..16u64 {
+            let name = format!("stress-{round}-{i}");
+            let out = svc.wait(&name).unwrap();
+            if i % 2 == 0 {
+                assert_eq!(out.evaluations.len(), 2);
+            } else {
+                assert!(out.evaluations.len() <= 200);
+            }
+            let status = svc.describe_tuning_job(&name).unwrap().status;
+            assert!(["Completed", "Stopped"].contains(&status.as_str()), "{name}: {status}");
+        }
+    }
+    assert_eq!(svc.running_jobs(), 0);
+}

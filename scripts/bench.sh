@@ -1,7 +1,12 @@
 #!/usr/bin/env bash
-# Perf-trajectory harness: run the criterion-style benches at fixed sizes,
-# emit BENCH_propose.json / BENCH_gp_fit.json, and diff p50 latencies
-# against the committed baselines (DESIGN.md §8).
+# Perf-trajectory harness: run the criterion-style benches at fixed sizes
+# plus the §6.5 scale-soak example, emit BENCH_propose.json /
+# BENCH_gp_fit.json / BENCH_soak.json, and diff p50 latencies against the
+# committed baselines (DESIGN.md §8).
+#
+# BENCH_soak.json entries are the synchronous-API latency distribution at
+# 200- and 1000-job spikes on the multi-tenant scheduler; jobs/sec, p99
+# latency and the store write count ride along in each entry's params.
 #
 # Usage:
 #   scripts/bench.sh            # run + diff (fails on >TOLERANCE regressions)
@@ -20,9 +25,11 @@ trap 'rm -rf "$run_dir"' EXIT
 echo "== running benches (fresh JSON into $run_dir) =="
 AMT_BENCH_DIR="$run_dir" cargo bench --bench bo_propose
 AMT_BENCH_DIR="$run_dir" cargo bench --bench gp_fit
+echo "== running scale soak (200- and 1000-job spikes) =="
+AMT_BENCH_DIR="$run_dir" cargo run --release --example scale_soak -- 200 1000
 
 status=0
-for f in BENCH_propose.json BENCH_gp_fit.json; do
+for f in BENCH_propose.json BENCH_gp_fit.json BENCH_soak.json; do
     fresh="$run_dir/$f"
     if [ ! -f "$fresh" ]; then
         echo "ERROR: bench did not produce $f" >&2
