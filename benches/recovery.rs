@@ -1,0 +1,123 @@
+//! Durability-engine benchmark (DESIGN.md §10): WAL append throughput,
+//! WAL replay rate, and recovery-on-open time for a 200-job store.
+//! Emits `BENCH_recovery.json` (schema in `harness::BenchReport`;
+//! `AMT_BENCH_DIR` overrides the output directory).
+//! `cargo bench --bench recovery`.
+
+use std::path::PathBuf;
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::durability::wal::{Wal, WalRecord, WAL_FILE};
+use amt::harness::{bench, BenchReport};
+use amt::json::Json;
+use amt::platform::PlatformConfig;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "amt-bench-recovery-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn main() {
+    let mut report = BenchReport::new("recovery");
+    const WAL_RECORDS: usize = 100_000;
+    const RECOVERY_JOBS: usize = 200;
+
+    // --- WAL append throughput (fsync off: framing + buffering + one
+    // write, the cost the store's hot path pays per mutation) ---
+    let append_dir = tmpdir("append");
+    let stats = bench("wal append+commit 100k puts", 1, 5, || {
+        let wal = Wal::create(&append_dir).unwrap();
+        wal.set_fsync(false);
+        for i in 0..WAL_RECORDS {
+            wal.append(&WalRecord::Put {
+                table: "training_jobs".into(),
+                key: format!("job-{:05}", i % 1000),
+                version: (i / 1000 + 1) as u64,
+                value: Json::obj(vec![
+                    ("status", Json::Str("Completed".into())),
+                    ("final_value", Json::Num(i as f64 * 0.5)),
+                ]),
+            });
+        }
+        wal.commit().unwrap();
+    });
+    report.push(
+        "wal_append_100k",
+        &[
+            ("records", WAL_RECORDS.to_string()),
+            ("records_per_sec", format!("{:.0}", WAL_RECORDS as f64 / stats.p50)),
+            ("fsync", "off".into()),
+        ],
+        &stats,
+    );
+
+    // --- WAL replay (scan) rate over the same file ---
+    let wal_path = append_dir.join(WAL_FILE);
+    let stats = bench("wal scan 100k records", 1, 5, || {
+        let scan = Wal::scan(&wal_path).unwrap();
+        assert_eq!(scan.records.len(), WAL_RECORDS);
+        std::hint::black_box(scan.valid_len);
+    });
+    report.push(
+        "wal_replay_100k",
+        &[
+            ("records", WAL_RECORDS.to_string()),
+            ("records_per_sec", format!("{:.0}", WAL_RECORDS as f64 / stats.p50)),
+        ],
+        &stats,
+    );
+
+    // --- recovery-on-open for a 200-job service (WAL-only: no snapshot,
+    // so open replays the whole mutation history) ---
+    let svc_dir = tmpdir("open200");
+    let wal_records;
+    {
+        let svc = AmtService::open(&svc_dir, PlatformConfig::noiseless()).unwrap();
+        svc.wal().unwrap().set_fsync(false); // prep speed; replay is unaffected
+        for i in 0..RECOVERY_JOBS {
+            svc.create_tuning_job(TuningJobRequest {
+                name: format!("rec-{i:04}"),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: 2,
+                max_parallel_jobs: 2,
+                seed: i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        for i in 0..RECOVERY_JOBS {
+            svc.wait(&format!("rec-{i:04}")).unwrap();
+        }
+        svc.wal().unwrap().commit().unwrap();
+        wal_records = Wal::scan(&svc_dir.join(WAL_FILE)).unwrap().records.len();
+        // drop without close(): crash-style teardown, WAL-only recovery
+    }
+    let stats = bench("open: recover 200 completed jobs", 0, 3, || {
+        let svc = AmtService::open(&svc_dir, PlatformConfig::noiseless()).unwrap();
+        assert_eq!(svc.list_tuning_jobs("rec-").len(), RECOVERY_JOBS);
+        std::hint::black_box(svc.recovered_jobs().len());
+    });
+    report.push(
+        "recovery_open_200_jobs",
+        &[
+            ("jobs", RECOVERY_JOBS.to_string()),
+            ("wal_records", wal_records.to_string()),
+            ("records_per_sec", format!("{:.0}", wal_records as f64 / stats.p50)),
+        ],
+        &stats,
+    );
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_recovery.json: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&append_dir);
+    let _ = std::fs::remove_dir_all(&svc_dir);
+}

@@ -17,18 +17,20 @@
 //! * warm start resolves parent jobs *through the store* with paginated
 //!   scans, so chained jobs behave exactly like the §6.4 case study.
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::config::TuningJobRequest;
 use crate::coordinator::{stopping_by_name, JobActor, TuningJobOutcome};
+use crate::durability::{recovery, snapshot, wal::Wal};
 use crate::gp::{NativeBackend, SurrogateBackend};
 use crate::json::Json;
 use crate::metrics::MetricsService;
 use crate::objectives::by_name as objective_by_name;
 use crate::platform::{PlatformConfig, TrainingPlatform};
 use crate::scheduler::{Scheduler, SchedulerConfig};
-use crate::space::{config_from_json, Value};
+use crate::space::{config_from_json, Config, Value};
 use crate::store::MetadataStore;
 use crate::strategies::{BayesianOptimization, BoConfig, Observation, Strategy};
 use crate::warmstart::{transfer, ParentJob, TransferOptions};
@@ -78,11 +80,21 @@ pub struct AmtService {
     platform_config: PlatformConfig,
     backend: Arc<dyn SurrogateBackend>,
     scheduler: Scheduler,
+    /// Durability log (None for the in-memory-only constructors).
+    wal: Option<Arc<Wal>>,
+    /// Durability directory `open` was pointed at.
+    data_dir: Option<PathBuf>,
+    /// Names of the non-terminal jobs `open` resumed, name-sorted.
+    recovered: Vec<String>,
     /// API call counters for the §6.5 availability accounting.
     pub api_calls: std::sync::atomic::AtomicU64,
     /// API calls that returned an error.
     pub api_errors: std::sync::atomic::AtomicU64,
 }
+
+/// The durable service handle (`TuningService::open` / `close` in the
+/// durability-engine design) — the same facade, named for the role.
+pub type TuningService = AmtService;
 
 impl AmtService {
     /// New service with the native surrogate backend.
@@ -111,9 +123,183 @@ impl AmtService {
             platform_config,
             backend,
             scheduler: Scheduler::new(scheduler_config),
+            wal: None,
+            data_dir: None,
+            recovered: Vec::new(),
             api_calls: std::sync::atomic::AtomicU64::new(0),
             api_errors: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// Open a **durable** service rooted at `dir` with the native
+    /// backend: load per-shard snapshots, replay the WAL tail, and resume
+    /// every non-terminal tuning job (see
+    /// [`AmtService::open_with_options`]).
+    pub fn open(dir: impl AsRef<Path>, platform_config: PlatformConfig) -> crate::Result<Self> {
+        Self::open_with_options(
+            dir,
+            platform_config,
+            Arc::new(NativeBackend),
+            SchedulerConfig::default(),
+        )
+    }
+
+    /// Open a durable service: recovery-on-open.
+    ///
+    /// Rebuilds the store and metrics from `dir` (snapshots + WAL tail —
+    /// an empty or absent directory yields a fresh durable service),
+    /// attaches the reopened WAL to every write path, then re-`activate`s
+    /// each tuning job whose persisted status is still `InProgress`:
+    /// its partial records are reset and the job replays
+    /// deterministically from its request seed, finishing with exactly
+    /// the trajectory — and final store contents — of an uninterrupted
+    /// run (`rust/tests/durability_integration.rs` pins this at random
+    /// WAL cut points). For bit-identity the service must be reopened
+    /// with the same `platform_config` the jobs originally ran under.
+    ///
+    /// Jobs whose objective is not in the registry (custom-algorithm
+    /// jobs) cannot be re-instantiated from metadata alone and are marked
+    /// `Failed` in the store instead of resumed.
+    pub fn open_with_options(
+        dir: impl AsRef<Path>,
+        platform_config: PlatformConfig,
+        backend: Arc<dyn SurrogateBackend>,
+        scheduler_config: SchedulerConfig,
+    ) -> crate::Result<Self> {
+        let recovered = recovery::open(dir.as_ref())?;
+        let scheduler = Scheduler::new(scheduler_config);
+        scheduler.set_wal(Arc::clone(&recovered.wal));
+        let mut svc = AmtService {
+            store: recovered.store,
+            metrics: recovered.metrics,
+            platform_config,
+            backend,
+            scheduler,
+            wal: Some(Arc::clone(&recovered.wal)),
+            data_dir: Some(dir.as_ref().to_path_buf()),
+            recovered: Vec::new(),
+            api_calls: std::sync::atomic::AtomicU64::new(0),
+            api_errors: std::sync::atomic::AtomicU64::new(0),
+        };
+        for job in &recovered.jobs {
+            if job.status != "InProgress" {
+                continue;
+            }
+            let persisted_request = job.request.clone().unwrap_or(Json::Null);
+            let request = job
+                .request
+                .as_ref()
+                .and_then(TuningJobRequest::from_json);
+            let Some(request) = request else {
+                svc.mark_unrecoverable(
+                    &job.name,
+                    "persisted request unparseable",
+                    persisted_request,
+                );
+                continue;
+            };
+            let Some(objective) = objective_by_name(&request.objective) else {
+                svc.mark_unrecoverable(
+                    &job.name,
+                    "custom/unknown objective cannot be re-instantiated",
+                    persisted_request,
+                );
+                continue;
+            };
+            if let Err(e) = request.validate_with_custom_objective() {
+                svc.mark_unrecoverable(
+                    &job.name,
+                    &format!("persisted request invalid: {e}"),
+                    persisted_request,
+                );
+                continue;
+            }
+            // the transfer observations persisted at the original create
+            // (if any) — read before the reset deletes them
+            let persisted_transfer = svc
+                .store
+                .get("warm_start", &request.name)
+                .and_then(|(_, j)| observations_from_json(&j));
+            // reset the partial records, then drive the job through the
+            // ordinary create path: deterministic replay re-produces every
+            // put (same order ⇒ same values and versions) and runs on to
+            // completion
+            svc.reset_job_state(&request.name);
+            let name = request.name.clone();
+            let result = match persisted_transfer {
+                Some(obs) => svc.create_prepared(request, objective.into(), obs),
+                None => svc.create_with_objective(request, objective.into()),
+            };
+            match result {
+                Ok(_) => svc.recovered.push(name),
+                Err(e) => svc.mark_unrecoverable(
+                    &name,
+                    &format!("resume failed: {e}"),
+                    persisted_request,
+                ),
+            }
+        }
+        Ok(svc)
+    }
+
+    /// Delete every store record and metric stream a job wrote, so its
+    /// deterministic replay starts from a clean slate (versions restart
+    /// at 1, exactly like an uninterrupted run). The deletions go through
+    /// the logged paths, keeping the WAL a faithful mutation history.
+    /// The `{name}-train-` prefixes cannot reach a sibling job's records:
+    /// job names may not contain `-train-` (request validation), so no
+    /// other job name is an extension of this prefix.
+    fn reset_job_state(&self, name: &str) {
+        self.store.delete("tuning_jobs", name);
+        self.store.delete("warm_start", name);
+        for key in self.store.list_keys("training_jobs", &format!("{name}-train-")) {
+            self.store.delete("training_jobs", &key);
+        }
+        self.metrics.remove_streams(&format!("{name}-train-"));
+        self.metrics.remove_streams(&format!("{name}/"));
+    }
+
+    /// Persist a `Failed` terminal record for a job recovery could not
+    /// resume, carrying the original request wire JSON (the caller holds
+    /// it — the store record may already have been reset).
+    fn mark_unrecoverable(&self, name: &str, reason: &str, request: Json) {
+        self.store.put(
+            "tuning_jobs",
+            name,
+            Json::obj(vec![
+                ("status", Json::Str("Failed".into())),
+                ("request", request),
+                ("failure_reason", Json::Str(reason.into())),
+            ]),
+        );
+    }
+
+    /// Names of the non-terminal jobs recovery resumed, name-sorted.
+    pub fn recovered_jobs(&self) -> &[String] {
+        &self.recovered
+    }
+
+    /// The durability WAL, when this service was `open`ed durably.
+    pub fn wal(&self) -> Option<Arc<Wal>> {
+        self.wal.clone()
+    }
+
+    /// Write a per-shard point-in-time snapshot of the current state to
+    /// the durability directory (bounding future WAL replay). No-op for
+    /// in-memory services.
+    pub fn checkpoint(&self) -> crate::Result<()> {
+        if let (Some(wal), Some(dir)) = (&self.wal, &self.data_dir) {
+            wal.commit()?;
+            snapshot::write_snapshot(dir, &self.store, &self.metrics, wal)?;
+        }
+        Ok(())
+    }
+
+    /// Close a durable service: final WAL commit + per-shard snapshot.
+    /// Jobs still in flight stay `InProgress` in the snapshot and are
+    /// resumed by the next [`AmtService::open`].
+    pub fn close(self) -> crate::Result<()> {
+        self.checkpoint()
     }
 
     /// Worker threads in the scheduler pool — the service's fixed OS-thread
@@ -247,6 +433,26 @@ impl AmtService {
 
         let sign = if objective.minimize() { 1.0 } else { -1.0 };
         let transferred = self.resolve_parents_for(&request, sign, &objective.space())?;
+        self.create_prepared(request, objective, transferred)
+    }
+
+    /// Final leg of job creation, with the warm-start transfer
+    /// observations already resolved. They are persisted to the
+    /// `warm_start` table *before* the job record, so recovery re-enters
+    /// here with exactly the observations the original create computed —
+    /// a resumed warm-start child never re-resolves against parents that
+    /// may themselves still be mid-replay.
+    fn create_prepared(
+        &self,
+        request: TuningJobRequest,
+        objective: Arc<dyn crate::objectives::Objective>,
+        transferred: Vec<Observation>,
+    ) -> Result<String, ApiError> {
+        let transfer_json = if transferred.is_empty() {
+            None
+        } else {
+            Some(observations_to_json(&transferred))
+        };
 
         // build the strategy (BO gets the warm-start observations)
         let strategy: Box<dyn Strategy> = match request.strategy.as_str() {
@@ -287,6 +493,16 @@ impl AmtService {
         // store before the workflow can run
         if !self.scheduler.register(actor, stop_flag) {
             return self.fail(ApiError::AlreadyExists(request.name));
+        }
+        // warm-start observations first, job record second: any WAL
+        // prefix containing the job record also contains the transfer
+        // data its recovery needs
+        if let Some(tj) = transfer_json {
+            self.store.put(
+                "warm_start",
+                &request.name,
+                Json::obj(vec![("observations", tj)]),
+            );
         }
         self.store.put(
             "tuning_jobs",
@@ -390,6 +606,61 @@ impl AmtService {
 /// Convenience for tests/benches: extract a numeric HP from a config.
 pub fn config_num(config: &crate::space::Config, key: &str) -> Option<f64> {
     config.get(key).and_then(Value::as_f64)
+}
+
+/// Wire form of warm-start transfer observations (the `warm_start`
+/// table's `observations` field). Unlike the untyped
+/// [`crate::space::config_to_json`] (whose reader collapses ints to
+/// floats), values are tagged by variant — `Int` as `{"int": n}` — so
+/// the round trip is exact and a recovered child's strategy seeds with
+/// *exactly* the observations the original create resolved (f64s
+/// round-trip bit-exactly through the JSON layer).
+fn observations_to_json(obs: &[Observation]) -> Json {
+    let value_json = |v: &Value| match v {
+        Value::Float(f) => Json::Num(*f),
+        Value::Int(i) => Json::obj(vec![("int", Json::Num(*i as f64))]),
+        Value::Cat(s) => Json::Str(s.clone()),
+    };
+    Json::Arr(
+        obs.iter()
+            .map(|o| {
+                Json::obj(vec![
+                    (
+                        "config",
+                        Json::Obj(
+                            o.config
+                                .iter()
+                                .map(|(k, v)| (k.clone(), value_json(v)))
+                                .collect(),
+                        ),
+                    ),
+                    ("value", Json::Num(o.value)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn observations_from_json(record: &Json) -> Option<Vec<Observation>> {
+    let value_back = |j: &Json| -> Option<Value> {
+        match j {
+            Json::Num(n) => Some(Value::Float(*n)),
+            Json::Str(s) => Some(Value::Cat(s.clone())),
+            Json::Obj(_) => Some(Value::Int(j.get("int")?.as_i64()?)),
+            _ => None,
+        }
+    };
+    let arr = record.get("observations")?.as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for entry in arr {
+        let cobj = entry.get("config")?.as_obj()?;
+        let mut config = Config::new();
+        for (k, vj) in cobj {
+            config.insert(k.clone(), value_back(vj)?);
+        }
+        out.push(Observation { config, value: entry.get("value")?.as_f64()? });
+    }
+    Some(out)
 }
 
 #[cfg(test)]

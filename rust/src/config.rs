@@ -30,6 +30,10 @@ pub struct TuningJobRequest {
     pub warm_start_parents: Vec<String>,
     /// Per-evaluation retry budget for failed training jobs (§3.3).
     pub max_retries_per_job: u32,
+    /// Fair-share weight of this tenant on the multi-tenant scheduler
+    /// (Autotune-style): under contention a weight-w job drains ~w× the
+    /// poll slices of a weight-1 job. 1 = the default equal share.
+    pub tenant_weight: u32,
 }
 
 impl Default for TuningJobRequest {
@@ -45,6 +49,7 @@ impl Default for TuningJobRequest {
             seed: 0,
             warm_start_parents: Vec::new(),
             max_retries_per_job: 2,
+            tenant_weight: 1,
         }
     }
 }
@@ -90,7 +95,11 @@ impl TuningJobRequest {
     /// built-in algorithms, custom algorithms ..."): everything except the
     /// built-in objective-registry membership check.
     pub fn validate_with_custom_objective(&self) -> Result<(), ValidationError> {
-        if self.name.is_empty() || self.name.len() > 64 {
+        // `-train-` is the reserved separator for per-training-job record
+        // keys and metric streams (`{job}-train-NNNN…`): forbidding it in
+        // job names keeps those prefix namespaces unambiguous, which
+        // crash recovery relies on when it resets a job's partial state.
+        if self.name.is_empty() || self.name.len() > 64 || self.name.contains("-train-") {
             return Err(ValidationError::BadName(self.name.clone()));
         }
         if !STRATEGIES.contains(&self.strategy.as_str()) {
@@ -107,6 +116,9 @@ impl TuningJobRequest {
         }
         if self.instance_count == 0 || self.instance_count > 128 {
             return Err(ValidationError::BadLimits("instance_count".into()));
+        }
+        if self.tenant_weight == 0 || self.tenant_weight > 100 {
+            return Err(ValidationError::BadLimits("tenant_weight".into()));
         }
         Ok(())
     }
@@ -129,6 +141,7 @@ impl TuningJobRequest {
                 ),
             ),
             ("max_retries_per_job", Json::Num(self.max_retries_per_job as f64)),
+            ("tenant_weight", Json::Num(self.tenant_weight as f64)),
         ])
     }
 
@@ -157,6 +170,7 @@ impl TuningJobRequest {
                 })
                 .unwrap_or_default(),
             max_retries_per_job: get_u32("max_retries_per_job", d.max_retries_per_job),
+            tenant_weight: get_u32("tenant_weight", d.tenant_weight),
         })
     }
 }
@@ -174,6 +188,11 @@ mod tests {
     fn validation_catches_errors() {
         let mut r = TuningJobRequest::default();
         r.name = String::new();
+        assert!(matches!(r.validate(), Err(ValidationError::BadName(_))));
+
+        // the training-record namespace separator is reserved
+        let mut r = TuningJobRequest::default();
+        r.name = "sneaky-train-0000".into();
         assert!(matches!(r.validate(), Err(ValidationError::BadName(_))));
 
         let mut r = TuningJobRequest::default();
@@ -195,6 +214,10 @@ mod tests {
         let mut r = TuningJobRequest::default();
         r.instance_count = 1000;
         assert!(matches!(r.validate(), Err(ValidationError::BadLimits(_))));
+
+        let mut r = TuningJobRequest::default();
+        r.tenant_weight = 0;
+        assert!(matches!(r.validate(), Err(ValidationError::BadLimits(_))));
     }
 
     #[test]
@@ -203,6 +226,7 @@ mod tests {
         r.name = "my-job".into();
         r.warm_start_parents = vec!["parent-1".into(), "parent-2".into()];
         r.seed = 77;
+        r.tenant_weight = 3;
         let j = r.to_json();
         let back = TuningJobRequest::from_json(&crate::json::parse(&j.to_string()).unwrap())
             .unwrap();

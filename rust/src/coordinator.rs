@@ -27,6 +27,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::config::TuningJobRequest;
+use crate::durability::wal::{Wal, WalRecord};
 use crate::earlystop::{CurveHistory, StoppingPolicy};
 use crate::metrics::MetricsService;
 use crate::objectives::Objective;
@@ -438,6 +439,11 @@ pub struct JobActor {
     machine: StateMachine<LoopCtx>,
     exec: ExecutionState,
     ctx: Option<LoopCtx>,
+    /// Fair-share weight from the request (scheduler heap key).
+    tenant_weight: u32,
+    /// Optional durability log: when attached, the actor checkpoints its
+    /// [`ExecutionState`] cursor at every `Pending` boundary.
+    wal: Option<Arc<Wal>>,
 }
 
 impl JobActor {
@@ -457,12 +463,15 @@ impl JobActor {
     ) -> Self {
         let sign = if objective.minimize() { 1.0 } else { -1.0 };
         let name = request.name.clone();
+        let tenant_weight = request.tenant_weight.max(1);
         let machine = build_machine();
         let exec = machine.begin(0.0);
         JobActor {
             name,
             machine,
             exec,
+            tenant_weight,
+            wal: None,
             ctx: Some(LoopCtx {
                 request,
                 objective,
@@ -487,6 +496,19 @@ impl JobActor {
     /// Tuning-job name.
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Fair-share weight from the request (≥ 1).
+    pub fn tenant_weight(&self) -> u32 {
+        self.tenant_weight
+    }
+
+    /// Attach the durability WAL: every subsequent `Pending` boundary
+    /// appends a `Checkpoint` record with the serialized execution
+    /// cursor. The scheduler wires this automatically for durable
+    /// services.
+    pub fn set_wal(&mut self, wal: Arc<Wal>) {
+        self.wal = Some(wal);
     }
 
     /// Advance the execution by at most `max_steps` state-machine steps
@@ -515,6 +537,15 @@ impl JobActor {
             .as_ref()
             .map(|c| c.platform.now())
             .unwrap_or(0.0);
+        // checkpoint the cursor at the Parked/Pending boundary (§3.3
+        // robustness): recovery reads the last checkpoint per job for
+        // progress reporting before deterministically replaying it
+        if let Some(wal) = &self.wal {
+            wal.append(&WalRecord::Checkpoint {
+                job: self.name.clone(),
+                exec: self.exec.to_json(),
+            });
+        }
         ActorPoll::Pending { due: platform_now.max(self.exec.clock) }
     }
 }

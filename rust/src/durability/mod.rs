@@ -1,0 +1,67 @@
+//! Durability engine (DESIGN.md §10): write-ahead log, per-shard
+//! snapshots and crash recovery for the tuning service.
+//!
+//! The paper's AMT is *fully managed*: the metadata/state layer must
+//! survive process restarts without losing tuning-job progress (§3.2's
+//! DynamoDB-backed store is the backbone of that guarantee). This module
+//! is the reproduction's stand-in for that persistence tier:
+//!
+//! * [`wal`] — append-only, length-prefixed + CRC-checksummed record log
+//!   of every store/metrics mutation, group-committed per scheduler tick;
+//! * [`snapshot`] — per-shard point-in-time snapshots written with a WAL
+//!   high-water mark, replacing the merge-everything
+//!   [`crate::store::MetadataStore::snapshot`] blob for service
+//!   persistence (the legacy blob remains accepted on recovery);
+//! * [`recovery`] — `open(dir)` loads the shard snapshots, replays the
+//!   WAL tail, rebuilds [`crate::workflow::ExecutionState`] cursors from
+//!   job checkpoints and inventories every tuning job so the API layer
+//!   can re-`activate` the non-terminal ones.
+//!
+//! A job interrupted at an arbitrary WAL offset and recovered through
+//! [`crate::api::AmtService::open`] finishes with exactly the trajectory
+//! of an uninterrupted run (property-tested in
+//! `rust/tests/durability_integration.rs`): every tuning job is a pure
+//! function of its request seed on its own discrete-event timeline, so
+//! recovery resets the job's partial records and replays it
+//! deterministically from the start — same puts in the same order ⇒ same
+//! values *and* versions. The on-disk format defined here is also the
+//! wire format the planned distributed backend will ship between
+//! processes (ROADMAP).
+
+pub mod recovery;
+pub mod snapshot;
+pub mod wal;
+
+/// Durability-layer failure: an I/O error or a corrupt snapshot/manifest.
+/// Torn WAL tails are *not* errors — they are truncated during recovery.
+#[derive(Debug)]
+pub enum DurabilityError {
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// Unparseable or schema-violating snapshot/manifest content.
+    Corrupt(String),
+}
+
+impl From<std::io::Error> for DurabilityError {
+    fn from(e: std::io::Error) -> Self {
+        DurabilityError::Io(e)
+    }
+}
+
+impl std::fmt::Display for DurabilityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DurabilityError::Io(e) => write!(f, "durability io error: {e}"),
+            DurabilityError::Corrupt(m) => write!(f, "durability corruption: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DurabilityError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DurabilityError::Io(e) => Some(e),
+            DurabilityError::Corrupt(_) => None,
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Crash recovery: snapshot load → WAL tail replay → job inventory.
+//!
+//! `open(dir)` rebuilds the durable service state in three steps:
+//!
+//! 1. **Load shard snapshots** (or a legacy single-blob `snapshot.json`)
+//!    into a fresh store/metrics pair via raw inserts — exact versions,
+//!    no WAL emission.
+//! 2. **Replay the WAL tail**: store records with `lsn > store_hwm` and
+//!    metric records with `lsn > metrics_hwm` are applied through the
+//!    *same* code paths the live service uses (raw version-preserving
+//!    inserts for puts, the ordinary `emit` insertion logic for points),
+//!    so the rebuilt structures are byte-identical to the pre-crash
+//!    in-memory state up to the last group commit. A torn tail is
+//!    truncated, never an error. Checkpoint records are collected
+//!    regardless of the marks (they describe job progress, not store
+//!    state) — the last one per job wins.
+//! 3. **Inventory tuning jobs** from the rebuilt store: every
+//!    `tuning_jobs` record becomes a [`RecoveredJob`] with its persisted
+//!    request and, when available, the deserialized
+//!    [`crate::workflow::ExecutionState`] cursor from its last
+//!    checkpoint. The API layer re-`activate`s the non-terminal ones
+//!    (status `InProgress`) on the scheduler via deterministic replay —
+//!    see `DESIGN.md` §10 for why replay-from-seed is exact.
+//!
+//! The WAL is then reopened for append at the end of its valid prefix
+//! with a continuing LSN sequence, and attached to the store/metrics so
+//! every post-recovery mutation is logged again.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::snapshot::{self, Manifest};
+use super::wal::{Wal, WalRecord};
+use super::DurabilityError;
+use crate::json::Json;
+use crate::metrics::MetricsService;
+use crate::store::MetadataStore;
+use crate::workflow::ExecutionState;
+
+/// One tuning job found in the recovered store.
+pub struct RecoveredJob {
+    /// Tuning-job name (`tuning_jobs` key).
+    pub name: String,
+    /// Persisted status: "InProgress" jobs are non-terminal and need
+    /// resumption; anything else is left as recovered.
+    pub status: String,
+    /// The persisted `TuningJobRequest` wire JSON, when present.
+    pub request: Option<Json>,
+    /// Cursor rebuilt from the job's last WAL checkpoint, when present.
+    /// Progress reporting only — resumption replays deterministically.
+    pub checkpoint: Option<ExecutionState>,
+}
+
+/// Everything `open` rebuilds from a durability directory.
+pub struct RecoveredState {
+    /// Store rebuilt from snapshot + WAL tail, WAL already attached.
+    pub store: Arc<MetadataStore>,
+    /// Metrics rebuilt the same way, WAL already attached.
+    pub metrics: Arc<MetricsService>,
+    /// The WAL, reopened for append after its valid prefix.
+    pub wal: Arc<Wal>,
+    /// Manifest of the snapshot that seeded recovery, if one existed.
+    pub manifest: Option<Manifest>,
+    /// WAL records applied during replay (after high-water-mark
+    /// filtering; checkpoints count).
+    pub replayed_records: usize,
+    /// True if a torn/corrupt WAL tail was truncated.
+    pub dropped_tail: bool,
+    /// Every tuning job present in the recovered store, name-sorted.
+    pub jobs: Vec<RecoveredJob>,
+}
+
+/// Rebuild durable state from `dir` (which may be empty or absent: that
+/// yields a fresh store, a fresh WAL and no jobs).
+pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
+    std::fs::create_dir_all(dir)?;
+    let store = Arc::new(MetadataStore::new());
+    let metrics = Arc::new(MetricsService::new());
+
+    let manifest = snapshot::load_snapshot(dir, &store, &metrics)?;
+    let (store_hwm, metrics_hwm, mut next_lsn) = match &manifest {
+        Some(m) => (m.store_hwm, m.metrics_hwm, m.next_lsn),
+        None => (0, 0, 1),
+    };
+
+    let wal_path = dir.join(super::wal::WAL_FILE);
+    let scan = Wal::scan(&wal_path)?;
+    let mut replayed = 0usize;
+    let mut checkpoints: std::collections::BTreeMap<String, Json> = Default::default();
+    for (lsn, rec) in &scan.records {
+        match rec {
+            WalRecord::Put { table, key, version, value } if *lsn > store_hwm => {
+                store.insert_raw(table, key, *version, value.clone());
+                replayed += 1;
+            }
+            WalRecord::Delete { table, key } if *lsn > store_hwm => {
+                // WAL not yet attached: applies without re-logging
+                store.delete(table, key);
+                replayed += 1;
+            }
+            WalRecord::Emit { stream, time, value } if *lsn > metrics_hwm => {
+                // same insertion logic as the live path ⇒ identical series
+                metrics.emit(stream, *time, *value);
+                replayed += 1;
+            }
+            WalRecord::RemoveStreams { prefix } if *lsn > metrics_hwm => {
+                metrics.remove_streams(prefix);
+                replayed += 1;
+            }
+            WalRecord::Checkpoint { job, exec } => {
+                checkpoints.insert(job.clone(), exec.clone());
+                replayed += 1;
+            }
+            _ => {} // already contained in the snapshot
+        }
+        next_lsn = next_lsn.max(lsn + 1);
+    }
+
+    // reopen for append after the valid prefix, truncating any torn tail
+    let wal = Arc::new(Wal::open_at(dir, next_lsn, scan.valid_len)?);
+    store.attach_wal(Arc::clone(&wal));
+    metrics.attach_wal(Arc::clone(&wal));
+
+    // inventory tuning jobs (scan is key-sorted ⇒ deterministic order)
+    let jobs = store
+        .scan("tuning_jobs", "")
+        .into_iter()
+        .map(|(name, rec)| {
+            let checkpoint =
+                checkpoints.remove(&name).as_ref().and_then(ExecutionState::from_json);
+            RecoveredJob {
+                status: rec
+                    .get("status")
+                    .and_then(Json::as_str)
+                    .unwrap_or("Unknown")
+                    .to_string(),
+                request: rec.get("request").cloned(),
+                checkpoint,
+                name,
+            }
+        })
+        .collect();
+
+    Ok(RecoveredState {
+        store,
+        metrics,
+        wal,
+        manifest,
+        replayed_records: replayed,
+        dropped_tail: scan.dropped_tail,
+        jobs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "amt-rec-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn empty_dir_yields_fresh_state() {
+        let dir = tmp("empty");
+        let r = open(&dir).unwrap();
+        assert!(r.jobs.is_empty());
+        assert_eq!(r.replayed_records, 0);
+        assert!(!r.dropped_tail);
+        assert!(r.manifest.is_none());
+        // the reopened WAL is live: mutations are logged and survive
+        r.store.put("t", "k", Json::Num(1.0));
+        r.wal.commit().unwrap();
+        let again = open(&dir).unwrap();
+        assert_eq!(again.replayed_records, 1);
+        assert_eq!(again.store.get("t", "k").unwrap(), (1, Json::Num(1.0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_only_recovery_restores_versions_and_series() {
+        let dir = tmp("walonly");
+        {
+            let r = open(&dir).unwrap();
+            r.store.put("jobs", "a", Json::Num(1.0));
+            r.store.put("jobs", "a", Json::Num(2.0)); // version 2
+            r.store.put("jobs", "gone", Json::Null);
+            r.store.delete("jobs", "gone");
+            r.metrics.emit("a/loss", 5.0, 0.5);
+            r.metrics.emit("a/loss", 2.0, 0.9); // out-of-order insert
+            r.wal.commit().unwrap();
+        }
+        let r = open(&dir).unwrap();
+        assert_eq!(r.store.get("jobs", "a").unwrap(), (2, Json::Num(2.0)));
+        assert!(r.store.get("jobs", "gone").is_none());
+        let times: Vec<f64> = r.metrics.series("a/loss").iter().map(|p| p.time).collect();
+        assert_eq!(times, vec![2.0, 5.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_plus_tail_skips_contained_records() {
+        let dir = tmp("hwm");
+        {
+            let r = open(&dir).unwrap();
+            r.store.put("t", "before", Json::Num(1.0));
+            r.metrics.emit("s", 1.0, 1.0);
+            r.wal.commit().unwrap();
+            super::super::snapshot::write_snapshot(&dir, &r.store, &r.metrics, &r.wal)
+                .unwrap();
+            r.store.put("t", "after", Json::Num(2.0));
+            r.metrics.emit("s", 2.0, 2.0);
+            r.wal.commit().unwrap();
+        }
+        let r = open(&dir).unwrap();
+        // only the post-snapshot records replay; pre-snapshot ones load
+        // from the shard files and must not double-apply
+        assert_eq!(r.replayed_records, 2);
+        assert_eq!(r.store.get("t", "before").unwrap().0, 1);
+        assert_eq!(r.store.get("t", "after").unwrap().0, 1);
+        assert_eq!(r.metrics.series("s").len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,358 @@
+//! Per-shard point-in-time snapshots with WAL high-water marks.
+//!
+//! A snapshot is the compaction half of the durability engine: each
+//! store/metrics lock stripe is captured and written to its own file, and
+//! a manifest records the WAL LSN up to which each component's effects
+//! are contained (`store_hwm` / `metrics_hwm`). Recovery loads the shard
+//! files and replays only the WAL records *after* the relevant mark.
+//!
+//! Point-in-time protocol (the skew fix, with a regression test in
+//! `rust/tests/durability_integration.rs`): **all** of a component's
+//! shard guards are captured simultaneously before anything is cloned,
+//! and its high-water mark is read from the WAL while those guards are
+//! held — no writer can be inside a shard critical section at that
+//! instant, so every record with `lsn ≤ hwm` is fully contained in the
+//! capture and every record after it is fully excluded. The store and
+//! metrics captures happen one after the other with *independent* marks,
+//! so the two components never need their guards held together (no
+//! cross-component lock ordering).
+//!
+//! Shard files are serialized concurrently ([`crate::parallel::par_map`])
+//! after the guards drop, written via temp-file + rename, and the
+//! manifest is renamed into place last — a crash mid-snapshot leaves the
+//! previous manifest (and a longer WAL replay), never a half snapshot.
+//!
+//! Each store shard file uses the same `table → key → {version, value}`
+//! schema as the legacy single-blob [`crate::store::MetadataStore::snapshot`],
+//! which remains accepted on recovery for old `snapshot.json` dumps.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use super::wal::Wal;
+use super::DurabilityError;
+use crate::json::{self, Json};
+use crate::metrics::MetricsService;
+use crate::parallel;
+use crate::store::{MetadataStore, Version};
+
+/// Manifest file name inside a durability directory.
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+/// Legacy single-blob snapshot accepted by recovery when no manifest
+/// exists (produced by `MetadataStore::snapshot()` in earlier versions).
+pub const LEGACY_SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// Snapshot metadata: shard counts and per-component WAL high-water marks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Store shard files (`store-NN.json`).
+    pub store_shards: usize,
+    /// Metrics shard files (`metrics-NN.json`).
+    pub metric_shards: usize,
+    /// Every store mutation with `lsn ≤ store_hwm` is in the snapshot.
+    pub store_hwm: u64,
+    /// Every metrics mutation with `lsn ≤ metrics_hwm` is in the snapshot.
+    pub metrics_hwm: u64,
+    /// First LSN the reopened WAL should hand out.
+    pub next_lsn: u64,
+}
+
+impl Manifest {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Num(1.0)),
+            ("store_shards", Json::Num(self.store_shards as f64)),
+            ("metric_shards", Json::Num(self.metric_shards as f64)),
+            ("store_hwm", Json::Num(self.store_hwm as f64)),
+            ("metrics_hwm", Json::Num(self.metrics_hwm as f64)),
+            ("next_lsn", Json::Num(self.next_lsn as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Manifest> {
+        if j.get("format")?.as_i64()? != 1 {
+            return None;
+        }
+        Some(Manifest {
+            store_shards: j.get("store_shards")?.as_i64()? as usize,
+            metric_shards: j.get("metric_shards")?.as_i64()? as usize,
+            store_hwm: j.get("store_hwm")?.as_i64()? as u64,
+            metrics_hwm: j.get("metrics_hwm")?.as_i64()? as u64,
+            next_lsn: j.get("next_lsn")?.as_i64()? as u64,
+        })
+    }
+}
+
+fn store_shard_file(i: usize) -> String {
+    format!("store-{i:02}.json")
+}
+
+fn metrics_shard_file(i: usize) -> String {
+    format!("metrics-{i:02}.json")
+}
+
+/// Write `text` to `path` atomically (temp file + fsync + rename +
+/// directory fsync). The directory sync makes the rename itself durable
+/// before the caller proceeds — crucial for the manifest-last protocol:
+/// every shard-file rename must hit disk before the manifest rename
+/// does, or a power loss could persist a manifest that points at stale
+/// shard entries.
+fn write_atomic(path: &Path, text: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        // fsync the directory entry (POSIX); advisory on platforms that
+        // refuse to open directories
+        if let Ok(d) = File::open(parent) {
+            d.sync_all()?;
+        }
+    }
+    Ok(())
+}
+
+/// Serialize one store shard's tables in the legacy blob schema.
+fn store_shard_to_json(
+    tables: &BTreeMap<String, BTreeMap<String, (Version, Json)>>,
+) -> Json {
+    let mut obj = BTreeMap::new();
+    for (name, t) in tables {
+        let mut items = BTreeMap::new();
+        for (k, (ver, v)) in t {
+            items.insert(
+                k.clone(),
+                Json::obj(vec![("version", Json::Num(*ver as f64)), ("value", v.clone())]),
+            );
+        }
+        obj.insert(name.clone(), Json::Obj(items));
+    }
+    Json::Obj(obj)
+}
+
+/// Apply one store shard file (or a whole legacy blob — same schema) into
+/// `store` via raw inserts (exact versions, no WAL emission). Routing by
+/// the live store's own hash makes loading shard-count agnostic.
+pub fn apply_store_blob(store: &MetadataStore, j: &Json) -> Result<(), DurabilityError> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| DurabilityError::Corrupt("store shard: top level must be object".into()))?;
+    for (table, items) in obj {
+        let items = items
+            .as_obj()
+            .ok_or_else(|| DurabilityError::Corrupt("store shard: table must be object".into()))?;
+        for (key, entry) in items {
+            let ver = entry
+                .get("version")
+                .and_then(Json::as_i64)
+                .ok_or_else(|| DurabilityError::Corrupt("store shard: missing version".into()))?;
+            let value = entry
+                .get("value")
+                .cloned()
+                .ok_or_else(|| DurabilityError::Corrupt("store shard: missing value".into()))?;
+            store.insert_raw(table, key, ver as Version, value);
+        }
+    }
+    Ok(())
+}
+
+/// Serialize one metrics shard: `stream → [[time, value], ...]`.
+fn metrics_shard_to_json(streams: &BTreeMap<String, Vec<crate::metrics::DataPoint>>) -> Json {
+    let mut obj = BTreeMap::new();
+    for (name, points) in streams {
+        obj.insert(
+            name.clone(),
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| Json::Arr(vec![Json::Num(p.time), Json::Num(p.value)]))
+                    .collect(),
+            ),
+        );
+    }
+    Json::Obj(obj)
+}
+
+fn apply_metrics_blob(metrics: &MetricsService, j: &Json) -> Result<(), DurabilityError> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| DurabilityError::Corrupt("metrics shard: top level must be object".into()))?;
+    for (stream, points) in obj {
+        let points = points
+            .as_arr()
+            .ok_or_else(|| DurabilityError::Corrupt("metrics shard: stream must be array".into()))?;
+        let mut series = Vec::with_capacity(points.len());
+        for p in points {
+            let pair = p.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                DurabilityError::Corrupt("metrics shard: point must be [t, v]".into())
+            })?;
+            let (Some(t), Some(v)) = (pair[0].as_f64(), pair[1].as_f64()) else {
+                return Err(DurabilityError::Corrupt(
+                    "metrics shard: non-numeric point".into(),
+                ));
+            };
+            series.push(crate::metrics::DataPoint { time: t, value: v });
+        }
+        metrics.insert_raw_stream(stream, series);
+    }
+    Ok(())
+}
+
+/// Capture a point-in-time snapshot of `store` + `metrics` and write it
+/// under `dir`: per-shard files first, manifest (rename) last.
+pub fn write_snapshot(
+    dir: &Path,
+    store: &MetadataStore,
+    metrics: &MetricsService,
+    wal: &Wal,
+) -> Result<Manifest, DurabilityError> {
+    std::fs::create_dir_all(dir)?;
+    let (store_shards, store_hwm) = store.capture_for_snapshot();
+    let (metric_shards, metrics_hwm) = metrics.capture_for_snapshot();
+    let manifest = Manifest {
+        store_shards: store_shards.len(),
+        metric_shards: metric_shards.len(),
+        store_hwm,
+        metrics_hwm,
+        next_lsn: wal.last_lsn() + 1,
+    };
+
+    // guards are released; serialize the captured shards concurrently
+    let store_texts = parallel::par_map(&store_shards, |tables| {
+        store_shard_to_json(tables).to_pretty()
+    });
+    let metric_texts =
+        parallel::par_map(&metric_shards, |streams| metrics_shard_to_json(streams).to_pretty());
+
+    for (i, text) in store_texts.iter().enumerate() {
+        write_atomic(&dir.join(store_shard_file(i)), text)?;
+    }
+    for (i, text) in metric_texts.iter().enumerate() {
+        write_atomic(&dir.join(metrics_shard_file(i)), text)?;
+    }
+    write_atomic(&dir.join(MANIFEST_FILE), &manifest.to_json().to_pretty())?;
+    Ok(manifest)
+}
+
+/// Load the snapshot under `dir` (if any) into fresh `store`/`metrics`.
+/// Returns the manifest when a per-shard snapshot was loaded, `None` when
+/// the directory has neither a manifest nor a legacy blob. A legacy
+/// `snapshot.json` (single-blob `MetadataStore::snapshot()` output) is
+/// accepted and loaded with zero high-water marks.
+pub fn load_snapshot(
+    dir: &Path,
+    store: &MetadataStore,
+    metrics: &MetricsService,
+) -> Result<Option<Manifest>, DurabilityError> {
+    let manifest_path = dir.join(MANIFEST_FILE);
+    if manifest_path.exists() {
+        let text = std::fs::read_to_string(&manifest_path)?;
+        let parsed = json::parse(&text)
+            .map_err(|e| DurabilityError::Corrupt(format!("manifest: {e}")))?;
+        let manifest = Manifest::from_json(&parsed)
+            .ok_or_else(|| DurabilityError::Corrupt("manifest: bad fields".into()))?;
+        for i in 0..manifest.store_shards {
+            let text = std::fs::read_to_string(dir.join(store_shard_file(i)))?;
+            let parsed = json::parse(&text)
+                .map_err(|e| DurabilityError::Corrupt(format!("store shard {i}: {e}")))?;
+            apply_store_blob(store, &parsed)?;
+        }
+        for i in 0..manifest.metric_shards {
+            let text = std::fs::read_to_string(dir.join(metrics_shard_file(i)))?;
+            let parsed = json::parse(&text)
+                .map_err(|e| DurabilityError::Corrupt(format!("metrics shard {i}: {e}")))?;
+            apply_metrics_blob(metrics, &parsed)?;
+        }
+        return Ok(Some(manifest));
+    }
+    let legacy_path = dir.join(LEGACY_SNAPSHOT_FILE);
+    if legacy_path.exists() {
+        let text = std::fs::read_to_string(&legacy_path)?;
+        let parsed = json::parse(&text)
+            .map_err(|e| DurabilityError::Corrupt(format!("legacy snapshot: {e}")))?;
+        apply_store_blob(store, &parsed)?;
+        return Ok(Some(Manifest {
+            store_shards: 0,
+            metric_shards: 0,
+            store_hwm: 0,
+            metrics_hwm: 0,
+            next_lsn: 1,
+        }));
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "amt-snap-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_store_and_metrics() {
+        let dir = tmp("roundtrip");
+        let store = MetadataStore::new();
+        let metrics = MetricsService::new();
+        let wal = Wal::create(&dir).unwrap();
+        for i in 0..40 {
+            store.put("jobs", &format!("j-{i:02}"), Json::Num(i as f64));
+            metrics.emit(&format!("s-{i:02}/loss"), i as f64, -(i as f64));
+        }
+        store.put("jobs", "j-00", Json::Str("v2".into())); // version 2
+        let manifest = write_snapshot(&dir, &store, &metrics, &wal).unwrap();
+        assert_eq!(manifest.store_shards, store.shard_count());
+
+        let restored = MetadataStore::new();
+        let rmetrics = MetricsService::new();
+        let loaded = load_snapshot(&dir, &restored, &rmetrics).unwrap().unwrap();
+        assert_eq!(loaded, manifest);
+        // byte-identical to the legacy merged snapshot of the original
+        assert_eq!(restored.snapshot(), store.snapshot());
+        assert_eq!(rmetrics.series("s-07/loss"), metrics.series("s-07/loss"));
+        assert_eq!(rmetrics.list_streams(""), metrics.list_streams(""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_single_blob_still_loads() {
+        let dir = tmp("legacy");
+        let store = MetadataStore::new();
+        store.put("t", "k", Json::obj(vec![("a", Json::Num(2.0))]));
+        store.put("t", "k", Json::obj(vec![("a", Json::Num(3.0))]));
+        std::fs::write(dir.join(LEGACY_SNAPSHOT_FILE), store.snapshot()).unwrap();
+
+        let restored = MetadataStore::new();
+        let metrics = MetricsService::new();
+        let manifest = load_snapshot(&dir, &restored, &metrics).unwrap().unwrap();
+        assert_eq!(manifest.next_lsn, 1);
+        assert_eq!(restored.get("t", "k"), store.get("t", "k"));
+        assert_eq!(restored.get("t", "k").unwrap().0, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_loads_nothing() {
+        let dir = tmp("empty");
+        let store = MetadataStore::new();
+        let metrics = MetricsService::new();
+        assert!(load_snapshot(&dir, &store, &metrics).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

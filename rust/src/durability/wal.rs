@@ -1,0 +1,478 @@
+//! Write-ahead log: append-only, length-prefixed, checksummed record log
+//! of every metadata-store and metrics mutation (plus job checkpoints).
+//!
+//! The WAL is the incremental half of the durability engine (DESIGN.md
+//! §10). Mutations append records to an in-memory buffer from inside the
+//! store/metrics shard critical sections — so WAL order equals
+//! application order for any single key or stream — and the scheduler
+//! **group-commits** the buffer (one `write` + `fsync` for every record
+//! accumulated during a poll slice) at heap-drain boundaries. A crash
+//! loses at most the records appended since the last commit, and what
+//! survives on disk is always a prefix of the logical record stream.
+//!
+//! On-disk framing, per record:
+//!
+//! ```text
+//! [len: u32 LE] [crc32(payload): u32 LE] [payload: len bytes]
+//! ```
+//!
+//! where the payload is the compact JSON of the record (including its
+//! LSN). Replay stops at the first frame that is truncated, oversized,
+//! fails its checksum or fails to parse — a torn tail is *dropped*, never
+//! an error (`scan` reports `dropped_tail` so recovery can truncate the
+//! file back to the valid prefix before appending).
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+use crate::json::{self, Json};
+use crate::store::Version;
+
+/// WAL file name inside a durability directory.
+pub const WAL_FILE: &str = "wal.log";
+
+/// Upper bound on one record's payload (corruption guard: a garbage
+/// length prefix must not trigger a giant allocation).
+const MAX_RECORD_BYTES: u32 = 1 << 26;
+
+/// One logged mutation. `Put` carries the *resulting* version so replay
+/// restores exact item versions without re-deriving them.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalRecord {
+    /// Store write (unconditional or conditional) that succeeded.
+    Put { table: String, key: String, version: Version, value: Json },
+    /// Store delete that removed an existing item.
+    Delete { table: String, key: String },
+    /// Metric data point published to a stream.
+    Emit { stream: String, time: f64, value: f64 },
+    /// Bulk removal of every metric stream with a name prefix (used when
+    /// recovery resets a job's partial state before deterministic replay).
+    RemoveStreams { prefix: String },
+    /// Job-actor checkpoint: the serialized [`crate::workflow::ExecutionState`]
+    /// cursor at a `Parked`/`Pending` boundary. Informational for
+    /// recovery (progress reporting); resume correctness comes from
+    /// deterministic replay, not from the cursor.
+    Checkpoint { job: String, exec: Json },
+}
+
+impl WalRecord {
+    fn to_json(&self, lsn: u64) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("lsn", Json::Num(lsn as f64))];
+        match self {
+            WalRecord::Put { table, key, version, value } => {
+                fields.push(("op", Json::Str("put".into())));
+                fields.push(("table", Json::Str(table.clone())));
+                fields.push(("key", Json::Str(key.clone())));
+                fields.push(("ver", Json::Num(*version as f64)));
+                fields.push(("value", value.clone()));
+            }
+            WalRecord::Delete { table, key } => {
+                fields.push(("op", Json::Str("del".into())));
+                fields.push(("table", Json::Str(table.clone())));
+                fields.push(("key", Json::Str(key.clone())));
+            }
+            WalRecord::Emit { stream, time, value } => {
+                fields.push(("op", Json::Str("emit".into())));
+                fields.push(("stream", Json::Str(stream.clone())));
+                fields.push(("t", Json::Num(*time)));
+                fields.push(("v", Json::Num(*value)));
+            }
+            WalRecord::RemoveStreams { prefix } => {
+                fields.push(("op", Json::Str("rmstreams".into())));
+                fields.push(("prefix", Json::Str(prefix.clone())));
+            }
+            WalRecord::Checkpoint { job, exec } => {
+                fields.push(("op", Json::Str("ckpt".into())));
+                fields.push(("job", Json::Str(job.clone())));
+                fields.push(("exec", exec.clone()));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Option<(u64, WalRecord)> {
+        let lsn = j.get("lsn")?.as_i64()? as u64;
+        let op = j.get("op")?.as_str()?;
+        let rec = match op {
+            "put" => WalRecord::Put {
+                table: j.get("table")?.as_str()?.to_string(),
+                key: j.get("key")?.as_str()?.to_string(),
+                version: j.get("ver")?.as_i64()? as Version,
+                value: j.get("value")?.clone(),
+            },
+            "del" => WalRecord::Delete {
+                table: j.get("table")?.as_str()?.to_string(),
+                key: j.get("key")?.as_str()?.to_string(),
+            },
+            "emit" => WalRecord::Emit {
+                stream: j.get("stream")?.as_str()?.to_string(),
+                time: j.get("t")?.as_f64()?,
+                value: j.get("v")?.as_f64()?,
+            },
+            "rmstreams" => {
+                WalRecord::RemoveStreams { prefix: j.get("prefix")?.as_str()?.to_string() }
+            }
+            "ckpt" => WalRecord::Checkpoint {
+                job: j.get("job")?.as_str()?.to_string(),
+                exec: j.get("exec")?.clone(),
+            },
+            _ => return None,
+        };
+        Some((lsn, rec))
+    }
+}
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320) over a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+struct WalInner {
+    file: File,
+    /// Appended-but-uncommitted frames (group-commit buffer).
+    buf: Vec<u8>,
+    /// Bytes known durably on disk (file length after the last
+    /// successful commit).
+    synced_len: u64,
+    /// A previous commit failed partway: the file may end in a torn
+    /// fragment past `synced_len`; the next commit rewinds before
+    /// writing, so committed frames are never stranded behind a gap.
+    dirty: bool,
+}
+
+/// The append-only log. `append` is infallible and lock-cheap: the LSN
+/// comes from an atomic counter and the payload is serialized *outside*
+/// the inner mutex, which only guards the buffer push — so the 16-way
+/// sharded store does not re-serialize behind one serialization lock.
+/// `commit` writes and fsyncs whatever accumulated; on failure the
+/// buffer is retained and the file is rewound to the last durable
+/// length on the next attempt (no records are lost while the process
+/// lives, and the on-disk log never contains a frame gap). The inner
+/// mutex is always the innermost lock in the system: store/metrics
+/// shard guards may be held while appending, never the other way
+/// around.
+///
+/// Frames enter the file in buffer-push order, which for any single key
+/// or stream equals mutation order (appends happen inside the shard
+/// critical section); across independent keys LSNs may interleave
+/// non-monotonically, which replay tolerates (records are filtered by
+/// LSN individually, never assumed sorted).
+pub struct Wal {
+    path: PathBuf,
+    fsync: std::sync::atomic::AtomicBool,
+    next_lsn: std::sync::atomic::AtomicU64,
+    inner: Mutex<WalInner>,
+}
+
+/// Result of scanning a WAL file: the valid record prefix, the byte
+/// offset where each frame ends, and whether a torn/corrupt tail was
+/// dropped.
+pub struct WalScan {
+    /// `(lsn, record)` pairs in file order.
+    pub records: Vec<(u64, WalRecord)>,
+    /// Byte offset just past each valid frame (`frame_ends[i]` is the
+    /// file length that contains exactly records `0..=i`).
+    pub frame_ends: Vec<u64>,
+    /// Total valid prefix length in bytes.
+    pub valid_len: u64,
+    /// True if bytes past `valid_len` were ignored (torn write or
+    /// corruption).
+    pub dropped_tail: bool,
+}
+
+impl Wal {
+    /// Open (creating if absent) the WAL at `dir/wal.log`, truncate it to
+    /// `valid_len` (discarding any torn tail) and position appends after
+    /// it. `next_lsn` seeds the LSN counter (1 for a fresh log).
+    pub fn open_at(dir: &Path, next_lsn: u64, valid_len: u64) -> std::io::Result<Wal> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(WAL_FILE);
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).open(&path)?;
+        file.set_len(valid_len)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok(Wal {
+            path,
+            fsync: std::sync::atomic::AtomicBool::new(true),
+            next_lsn: std::sync::atomic::AtomicU64::new(next_lsn.max(1)),
+            inner: Mutex::new(WalInner {
+                file,
+                buf: Vec::new(),
+                synced_len: valid_len,
+                dirty: false,
+            }),
+        })
+    }
+
+    /// Fresh WAL in `dir` (LSNs from 1, any existing file truncated).
+    pub fn create(dir: &Path) -> std::io::Result<Wal> {
+        Self::open_at(dir, 1, 0)
+    }
+
+    /// Toggle fsync-on-commit (bench mode: off measures append/write cost
+    /// without physical-disk latency). Durability tests keep the default.
+    pub fn set_fsync(&self, fsync: bool) {
+        self.fsync.store(fsync, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Path of the log file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record to the group-commit buffer; returns its LSN.
+    /// Infallible: I/O happens at [`Wal::commit`]. Serialization and
+    /// checksumming run outside the buffer mutex.
+    pub fn append(&self, rec: &WalRecord) -> u64 {
+        let lsn = self.next_lsn.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let payload = rec.to_json(lsn).to_string().into_bytes();
+        let crc = crc32(&payload);
+        let mut inner = self.inner.lock().unwrap();
+        inner.buf.reserve(8 + payload.len());
+        inner.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        inner.buf.extend_from_slice(&crc.to_le_bytes());
+        inner.buf.extend_from_slice(&payload);
+        lsn
+    }
+
+    /// Last LSN handed out (0 if none yet).
+    pub fn last_lsn(&self) -> u64 {
+        self.next_lsn.load(std::sync::atomic::Ordering::Relaxed) - 1
+    }
+
+    /// Group commit: write every buffered frame and fsync. No-op when the
+    /// buffer is empty (cheap to call at every scheduler tick).
+    ///
+    /// Failure-safe: on error the buffer is **kept** (the records retry
+    /// at the next commit) and the file is marked dirty, so the next
+    /// attempt first rewinds to the last durable length — a partial
+    /// `write` can never strand later frames behind a torn fragment.
+    pub fn commit(&self) -> std::io::Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let WalInner { file, buf, synced_len, dirty } = &mut *inner;
+        if *dirty {
+            file.set_len(*synced_len)?;
+            file.seek(SeekFrom::Start(*synced_len))?;
+            *dirty = false;
+        }
+        if buf.is_empty() {
+            return Ok(());
+        }
+        let mut result = file.write_all(buf);
+        if result.is_ok() && self.fsync.load(std::sync::atomic::Ordering::Relaxed) {
+            result = file.sync_all();
+        }
+        match result {
+            Ok(()) => {
+                *synced_len += buf.len() as u64;
+                buf.clear();
+                Ok(())
+            }
+            Err(e) => {
+                *dirty = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Scan a WAL file, returning the valid record prefix. A truncated,
+    /// oversized, checksum-failing or unparseable frame ends the scan
+    /// (the tail is dropped); this function never fails on torn writes —
+    /// only on I/O errors reading the file.
+    pub fn scan(path: &Path) -> std::io::Result<WalScan> {
+        let mut bytes = Vec::new();
+        match File::open(path) {
+            Ok(mut f) => {
+                f.read_to_end(&mut bytes)?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e),
+        }
+        let mut records = Vec::new();
+        let mut frame_ends = Vec::new();
+        let mut pos = 0usize;
+        loop {
+            if pos + 8 > bytes.len() {
+                break; // no room for a header: end (or torn header)
+            }
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+            let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+            if len > MAX_RECORD_BYTES {
+                break; // corrupt length prefix
+            }
+            let start = pos + 8;
+            let end = start + len as usize;
+            if end > bytes.len() {
+                break; // torn payload
+            }
+            let payload = &bytes[start..end];
+            if crc32(payload) != crc {
+                break; // checksum failure
+            }
+            let Ok(text) = std::str::from_utf8(payload) else { break };
+            let Ok(parsed) = json::parse(text) else { break };
+            let Some((lsn, rec)) = WalRecord::from_json(&parsed) else { break };
+            records.push((lsn, rec));
+            frame_ends.push(end as u64);
+            pos = end;
+        }
+        let valid_len = *frame_ends.last().unwrap_or(&0);
+        let dropped_tail = (valid_len as usize) < bytes.len();
+        Ok(WalScan { records, frame_ends, valid_len, dropped_tail })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "amt-wal-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Put {
+                table: "jobs".into(),
+                key: "a".into(),
+                version: 3,
+                value: Json::obj(vec![("x", Json::Num(1.5))]),
+            },
+            WalRecord::Emit { stream: "a/loss".into(), time: 2.25, value: -0.125 },
+            WalRecord::Delete { table: "jobs".into(), key: "a".into() },
+            WalRecord::RemoveStreams { prefix: "a/".into() },
+            WalRecord::Checkpoint {
+                job: "a".into(),
+                exec: Json::obj(vec![("clock", Json::Num(7.5))]),
+            },
+        ]
+    }
+
+    #[test]
+    fn append_commit_scan_roundtrip() {
+        let dir = tmp("roundtrip");
+        let wal = Wal::create(&dir).unwrap();
+        let recs = sample_records();
+        for r in &recs {
+            wal.append(r);
+        }
+        wal.commit().unwrap();
+        let scan = Wal::scan(&wal.path().to_path_buf()).unwrap();
+        assert_eq!(scan.records.len(), recs.len());
+        assert!(!scan.dropped_tail);
+        for (i, (lsn, rec)) in scan.records.iter().enumerate() {
+            assert_eq!(*lsn, i as u64 + 1);
+            assert_eq!(rec, &recs[i]);
+        }
+        // uncommitted appends are not on disk
+        wal.append(&recs[0]);
+        let scan2 = Wal::scan(&dir.join(WAL_FILE)).unwrap();
+        assert_eq!(scan2.records.len(), recs.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn floats_roundtrip_bit_exact() {
+        let dir = tmp("bits");
+        let wal = Wal::create(&dir).unwrap();
+        let vals = [1.0 / 3.0, 1e-300, 123456.789012345, f64::MIN_POSITIVE];
+        for (i, &v) in vals.iter().enumerate() {
+            wal.append(&WalRecord::Emit { stream: format!("s{i}"), time: v, value: -v });
+        }
+        wal.commit().unwrap();
+        let scan = Wal::scan(&dir.join(WAL_FILE)).unwrap();
+        for (i, (_, rec)) in scan.records.iter().enumerate() {
+            let WalRecord::Emit { time, value, .. } = rec else { panic!("wrong op") };
+            assert_eq!(time.to_bits(), vals[i].to_bits());
+            assert_eq!(value.to_bits(), (-vals[i]).to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_and_corruption_drop_cleanly() {
+        let dir = tmp("torn");
+        let wal = Wal::create(&dir).unwrap();
+        for r in sample_records() {
+            wal.append(&r);
+        }
+        wal.commit().unwrap();
+        let path = dir.join(WAL_FILE);
+        let full = std::fs::read(&path).unwrap();
+        let clean = Wal::scan(&path).unwrap();
+
+        // torn mid-record: cut 3 bytes into the third frame's payload
+        let cut = clean.frame_ends[1] as usize + 11;
+        std::fs::write(&path, &full[..cut]).unwrap();
+        let scan = Wal::scan(&path).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert!(scan.dropped_tail);
+        assert_eq!(scan.valid_len, clean.frame_ends[1]);
+
+        // checksum corruption in the middle: records before survive,
+        // everything from the bad frame on is dropped
+        let mut corrupt = full.clone();
+        let victim = clean.frame_ends[2] as usize + 12; // inside frame 4
+        corrupt[victim] ^= 0xFF;
+        std::fs::write(&path, &corrupt).unwrap();
+        let scan = Wal::scan(&path).unwrap();
+        assert_eq!(scan.records.len(), 3);
+        assert!(scan.dropped_tail);
+
+        // reopening at the valid prefix truncates the bad tail and
+        // continues the LSN sequence
+        let last = scan.records.last().unwrap().0;
+        let wal = Wal::open_at(&dir, last + 1, scan.valid_len).unwrap();
+        let lsn = wal.append(&WalRecord::Delete { table: "t".into(), key: "k".into() });
+        assert_eq!(lsn, 4);
+        wal.commit().unwrap();
+        let scan = Wal::scan(&path).unwrap();
+        assert_eq!(scan.records.len(), 4);
+        assert!(!scan.dropped_tail);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_missing_file_is_empty() {
+        let dir = tmp("missing");
+        let scan = Wal::scan(&dir.join(WAL_FILE)).unwrap();
+        assert!(scan.records.is_empty());
+        assert_eq!(scan.valid_len, 0);
+        assert!(!scan.dropped_tail);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // standard test vector: CRC-32 of "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

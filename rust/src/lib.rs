@@ -22,8 +22,15 @@
 //!
 //! The service layer is multi-tenant: tuning jobs run as resumable
 //! [`coordinator::JobActor`]s multiplexed over the bounded worker pool of
-//! [`scheduler`], backed by the lock-striped sharded [`store`] and
-//! [`metrics`] services. See `DESIGN.md` §9.
+//! [`scheduler`] with weighted fair-share ordering, backed by the
+//! lock-striped sharded [`store`] and [`metrics`] services. See
+//! `DESIGN.md` §9.
+//!
+//! The service is crash-recoverable: [`durability`] provides a
+//! group-committed write-ahead log of every store/metrics mutation,
+//! per-shard point-in-time snapshots, and recovery-on-open
+//! ([`api::AmtService::open`]) that resumes in-flight tuning jobs with
+//! bit-identical trajectories. See `DESIGN.md` §10.
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the reproduced figures.
@@ -32,6 +39,7 @@ pub mod acquisition;
 pub mod api;
 pub mod config;
 pub mod coordinator;
+pub mod durability;
 pub mod earlystop;
 pub mod gp;
 pub mod harness;

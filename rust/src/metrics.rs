@@ -12,7 +12,9 @@
 //! mutex. Cross-stream queries (`list_streams`) merge the shards and sort.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::durability::wal::{Wal, WalRecord};
 
 /// Lock stripes for the stream map.
 const METRIC_SHARDS: usize = 8;
@@ -45,12 +47,17 @@ pub struct MetricStats {
 /// streams.
 pub struct MetricsService {
     shards: Vec<Mutex<BTreeMap<String, Vec<DataPoint>>>>,
+    /// Optional write-ahead log (see [`crate::durability`]): once
+    /// attached, every emission appends a record inside its shard
+    /// critical section, so per-stream WAL order equals series order.
+    wal: OnceLock<Arc<Wal>>,
 }
 
 impl Default for MetricsService {
     fn default() -> Self {
         MetricsService {
             shards: (0..METRIC_SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            wal: OnceLock::new(),
         }
     }
 }
@@ -68,10 +75,19 @@ impl MetricsService {
         (h % self.shards.len() as u64) as usize
     }
 
+    /// Attach a write-ahead log. Emissions from this point on emit WAL
+    /// records; at most one WAL can ever be attached (later calls no-op).
+    pub fn attach_wal(&self, wal: Arc<Wal>) {
+        let _ = self.wal.set(wal);
+    }
+
     /// Publish one point to `stream` (points must be in time order per
     /// producer; out-of-order points are inserted by timestamp).
     pub fn emit(&self, stream: &str, time: f64, value: f64) {
         let mut streams = self.shards[self.shard_of(stream)].lock().unwrap();
+        if let Some(w) = self.wal.get() {
+            w.append(&WalRecord::Emit { stream: stream.to_string(), time, value });
+        }
         let s = streams.entry(stream.to_string()).or_default();
         match s.last() {
             Some(last) if last.time > time => {
@@ -80,6 +96,51 @@ impl MetricsService {
             }
             _ => s.push(DataPoint { time, value }),
         }
+    }
+
+    /// Remove every stream whose name starts with `prefix`; returns how
+    /// many were dropped. Used by crash recovery to reset a resumed job's
+    /// partial series before deterministic replay. All shard guards are
+    /// held across the WAL append *and* the removals, so a concurrent
+    /// snapshot capture (which also takes every guard) observes either
+    /// none of the removal (record past its high-water mark ⇒ replayed)
+    /// or all of it (record at or below the mark ⇒ contained) — the
+    /// removed streams can never resurrect on recovery.
+    pub fn remove_streams(&self, prefix: &str) -> usize {
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        if let Some(w) = self.wal.get() {
+            w.append(&WalRecord::RemoveStreams { prefix: prefix.to_string() });
+        }
+        let mut removed = 0;
+        for streams in guards.iter_mut() {
+            let doomed: Vec<String> =
+                streams.keys().filter(|k| k.starts_with(prefix)).cloned().collect();
+            removed += doomed.len();
+            for k in doomed {
+                streams.remove(&k);
+            }
+        }
+        removed
+    }
+
+    /// Raw whole-series insert: the snapshot-restore path. Bypasses the
+    /// WAL (recovery must not re-log what it replays).
+    pub(crate) fn insert_raw_stream(&self, stream: &str, points: Vec<DataPoint>) {
+        let mut streams = self.shards[self.shard_of(stream)].lock().unwrap();
+        streams.insert(stream.to_string(), points);
+    }
+
+    /// Point-in-time capture for per-shard snapshots: clones every
+    /// shard's streams while **all** shard guards are held, reading the
+    /// WAL high-water mark under the same guards (see
+    /// [`crate::store::MetadataStore::capture_for_snapshot`]).
+    pub(crate) fn capture_for_snapshot(
+        &self,
+    ) -> (Vec<BTreeMap<String, Vec<DataPoint>>>, u64) {
+        let guards: Vec<_> = self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let hwm = self.wal.get().map(|w| w.last_lsn()).unwrap_or(0);
+        let data = guards.iter().map(|g| (*g).clone()).collect();
+        (data, hwm)
     }
 
     /// Full series for a stream.
@@ -196,6 +257,21 @@ mod tests {
         assert_eq!(names, sorted);
         // per-stream reads route to the right shard
         assert_eq!(m.series("job/07")[0].value, 7.0);
+    }
+
+    #[test]
+    fn remove_streams_by_prefix() {
+        let m = MetricsService::new();
+        for i in 0..20 {
+            m.emit(&format!("job-a-train-{i:02}/loss"), 0.0, i as f64);
+        }
+        m.emit("job-a/evaluations", 0.0, 1.0);
+        m.emit("job-b/evaluations", 0.0, 1.0);
+        assert_eq!(m.remove_streams("job-a-train-"), 20);
+        assert_eq!(m.remove_streams("job-a/"), 1);
+        assert_eq!(m.remove_streams("job-a-train-"), 0);
+        assert!(m.list_streams("job-a").is_empty());
+        assert_eq!(m.list_streams("job-b/"), vec!["job-b/evaluations"]);
     }
 
     #[test]

@@ -12,9 +12,16 @@
 //! Mechanics:
 //!
 //! * every submitted job owns one heap entry at a time, keyed by
-//!   `(virtual due time, sequence)` — parked executions (retry backoffs,
-//!   `Wait` transitions) re-enter ordered behind less-advanced jobs, which
-//!   keeps a spike of late arrivals from starving early ones;
+//!   `(virtual due time ÷ tenant weight, sequence)` — parked executions
+//!   (retry backoffs, `Wait` transitions) re-enter ordered behind
+//!   less-advanced jobs, which keeps a spike of late arrivals from
+//!   starving early ones. The tenant weight (from
+//!   `CreateHyperParameterTuningJob`'s `tenant_weight`, default 1) is a
+//!   fair-share multiplier: a weight-w job's virtual time is discounted
+//!   w×, so under contention it drains ~w× the poll slices of a weight-1
+//!   peer (Autotune-style weighted fair queueing); weight 1 divides by
+//!   1.0 exactly, so single-weight workloads order identically to the
+//!   unweighted scheduler;
 //! * a worker pops the earliest entry, polls the actor for a bounded batch
 //!   of state-machine steps ([`SchedulerConfig::batch_steps`]), then either
 //!   re-queues it (still pending) or publishes its outcome and wakes
@@ -33,9 +40,10 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crate::coordinator::{ActorPoll, JobActor, TuningJobOutcome};
+use crate::durability::wal::Wal;
 use crate::parallel::{self, WorkerPool};
 
 /// Scheduler tuning knobs.
@@ -56,7 +64,8 @@ impl Default for SchedulerConfig {
 }
 
 /// One entry of the virtual-time event heap. Min-ordered by
-/// `(due, seq)` via `Reverse` in the heap.
+/// `(due ÷ tenant weight, seq)` via `Reverse` in the heap — `due` here is
+/// already weight-discounted by [`push_entry`].
 struct QueueEntry {
     due: f64,
     seq: u64,
@@ -95,6 +104,10 @@ struct JobSlot {
     state: Mutex<SlotState>,
     done_cv: Condvar,
     stop_flag: Arc<AtomicBool>,
+    /// Fair-share weight (≥ 1): heap entries are keyed by `due / weight`.
+    weight: f64,
+    /// Poll slices this job has received (fair-share observability).
+    polls: AtomicU64,
 }
 
 struct Inner {
@@ -107,6 +120,17 @@ struct Inner {
     seq: AtomicU64,
     batch_steps: usize,
     running: AtomicUsize,
+    /// Durability log: workers group-commit it at every heap-drain
+    /// boundary (one fsync per poll slice, covering every record the
+    /// slice appended), and commit *before* publishing an outcome so a
+    /// waiter normally never observes a completion the WAL hasn't made
+    /// durable. A failed commit keeps its records buffered in the WAL
+    /// (retried at the next tick), is retried once immediately, and is
+    /// counted in `wal_commit_errors` — the outcome is still published,
+    /// so the invariant is best-effort under disk errors; monitor the
+    /// counter.
+    wal: OnceLock<Arc<Wal>>,
+    wal_commit_errors: AtomicU64,
 }
 
 /// The multi-tenant tuning scheduler.
@@ -128,6 +152,8 @@ impl Scheduler {
             seq: AtomicU64::new(0),
             batch_steps: config.batch_steps.max(1),
             running: AtomicUsize::new(0),
+            wal: OnceLock::new(),
+            wal_commit_errors: AtomicU64::new(0),
         });
         let worker_inner = Arc::clone(&inner);
         let pool = WorkerPool::spawn("amt-sched", workers, move |_worker| {
@@ -139,6 +165,27 @@ impl Scheduler {
     /// Number of pool workers (fixed for the scheduler's lifetime).
     pub fn worker_count(&self) -> usize {
         self.workers
+    }
+
+    /// Attach the durability WAL: workers group-commit it at heap-drain
+    /// boundaries, and every actor registered from now on checkpoints to
+    /// it. At most one WAL can ever be attached (later calls no-op).
+    pub fn set_wal(&self, wal: Arc<Wal>) {
+        let _ = self.inner.wal.set(wal);
+    }
+
+    /// WAL group commits that failed even after a retry (records stay
+    /// buffered and retry at later ticks; a crash before a successful
+    /// commit loses them — alert on this counter).
+    pub fn wal_commit_errors(&self) -> u64 {
+        self.inner.wal_commit_errors.load(Ordering::Relaxed)
+    }
+
+    /// Poll slices the named job has received so far (`None` for unknown
+    /// names) — the fair-share accounting the weighted heap key acts on.
+    pub fn poll_count(&self, name: &str) -> Option<u64> {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() }?;
+        Some(slot.polls.load(Ordering::Relaxed))
     }
 
     /// Jobs submitted and not yet finished.
@@ -157,8 +204,12 @@ impl Scheduler {
     /// persists the accepted request to the store, then [`Scheduler::activate`]s —
     /// so a losing concurrent create never touches the store, and no
     /// worker can run (and finish) the job before its record is persisted.
-    pub fn register(&self, actor: JobActor, stop_flag: Arc<AtomicBool>) -> bool {
+    pub fn register(&self, mut actor: JobActor, stop_flag: Arc<AtomicBool>) -> bool {
+        if let Some(wal) = self.inner.wal.get() {
+            actor.set_wal(Arc::clone(wal));
+        }
         let name = actor.name().to_string();
+        let weight = actor.tenant_weight().max(1) as f64;
         {
             let mut jobs = self.inner.jobs.lock().unwrap();
             if jobs.contains_key(&name) {
@@ -171,6 +222,8 @@ impl Scheduler {
                     state: Mutex::new(SlotState::default()),
                     done_cv: Condvar::new(),
                     stop_flag,
+                    weight,
+                    polls: AtomicU64::new(0),
                 }),
             );
         }
@@ -181,7 +234,10 @@ impl Scheduler {
     /// Queue a previously [`Scheduler::register`]ed job onto the event
     /// heap. Must be called exactly once per registered job.
     pub fn activate(&self, name: &str) {
-        self.push_entry(0.0, name.to_string());
+        let weight = {
+            self.inner.jobs.lock().unwrap().get(name).map(|s| s.weight).unwrap_or(1.0)
+        };
+        push_entry(&self.inner, 0.0, weight, name.to_string());
     }
 
     /// Reserve and immediately queue a job actor (`register` + `activate`).
@@ -193,10 +249,6 @@ impl Scheduler {
         }
         self.activate(&name);
         true
-    }
-
-    fn push_entry(&self, due: f64, name: String) {
-        push_entry(&self.inner, due, name);
     }
 
     /// Signal a job to stop at its next scheduling point. Returns false
@@ -254,13 +306,29 @@ impl Drop for Scheduler {
     }
 }
 
-/// Allocate a sequence number and queue `(due, seq, name)` on the event
-/// heap — the single queueing path shared by submit/activate and the
-/// worker re-queue, so ordering rules live in one place.
-fn push_entry(inner: &Inner, due: f64, name: String) {
+/// Allocate a sequence number and queue `(due / weight, seq, name)` on
+/// the event heap — the single queueing path shared by submit/activate
+/// and the worker re-queue, so ordering rules live in one place. The
+/// weight discount implements fair-share scheduling: a weight-w tenant's
+/// virtual time counts 1/w, so it is popped ~w× as often under
+/// contention (weight 1.0 divides exactly ⇒ unweighted ordering).
+fn push_entry(inner: &Inner, due: f64, weight: f64, name: String) {
     let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
+    let due = due / weight.max(1.0);
     inner.heap.lock().unwrap().push(Reverse(QueueEntry { due, seq, name }));
     inner.heap_cv.notify_one();
+}
+
+/// Group-commit the WAL (if attached), retrying once. A persistent
+/// failure is counted, never propagated: the records stay buffered in
+/// the WAL (it rewinds any torn fragment and retries them at the next
+/// tick), so no mutation is dropped while the process lives.
+fn commit_wal(inner: &Inner) {
+    if let Some(wal) = inner.wal.get() {
+        if wal.commit().is_err() && wal.commit().is_err() {
+            inner.wal_commit_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 fn worker_loop(inner: &Inner) {
@@ -286,17 +354,26 @@ fn worker_loop(inner: &Inner) {
         // from taking the whole pool down (§3.3 robustness).
         let mut actor_guard = slot.actor.lock().unwrap();
         let Some(actor) = actor_guard.as_mut() else { continue };
+        slot.polls.fetch_add(1, Ordering::Relaxed);
         let polled = std::panic::catch_unwind(AssertUnwindSafe(|| {
             actor.poll(inner.batch_steps)
         }));
         match polled {
             Ok(ActorPoll::Pending { due }) => {
                 drop(actor_guard);
-                push_entry(inner, due, entry.name);
+                push_entry(inner, due, slot.weight, entry.name);
+                // group commit: one fsync covers every record this poll
+                // slice appended (store puts, metric emits, checkpoint)
+                commit_wal(inner);
             }
             Ok(ActorPoll::Complete(outcome)) => {
                 *actor_guard = None; // release strategy/platform resources
                 drop(actor_guard);
+                // durability before acknowledgment: the terminal store
+                // records must be on disk before any waiter can observe
+                // the outcome (best-effort under disk errors — see
+                // `Inner::wal`)
+                commit_wal(inner);
                 let mut state = slot.state.lock().unwrap();
                 // decrement before publishing: a waiter that observes the
                 // outcome must never still see this job in running_jobs()
@@ -308,6 +385,7 @@ fn worker_loop(inner: &Inner) {
             Err(_) => {
                 *actor_guard = None;
                 drop(actor_guard);
+                commit_wal(inner);
                 let mut state = slot.state.lock().unwrap();
                 inner.running.fetch_sub(1, Ordering::Relaxed);
                 state.panicked = true;
@@ -330,6 +408,16 @@ mod tests {
     use crate::store::MetadataStore;
 
     fn actor(name: &str, evals: u32, seed: u64, stop_flag: Arc<AtomicBool>) -> JobActor {
+        actor_with_weight(name, evals, seed, 1, stop_flag)
+    }
+
+    fn actor_with_weight(
+        name: &str,
+        evals: u32,
+        seed: u64,
+        weight: u32,
+        stop_flag: Arc<AtomicBool>,
+    ) -> JobActor {
         let request = TuningJobRequest {
             name: name.into(),
             objective: "branin".into(),
@@ -337,6 +425,7 @@ mod tests {
             max_training_jobs: evals,
             max_parallel_jobs: 2,
             seed,
+            tenant_weight: weight,
             ..Default::default()
         };
         let objective: Arc<dyn Objective> =
@@ -401,6 +490,43 @@ mod tests {
         assert!(sched.stop("stoppable"));
         let out = sched.wait("stoppable").unwrap();
         assert!(out.evaluations.len() < 10_000);
+    }
+
+    /// Fair-share: with one worker under contention, a weight-2 tenant
+    /// should drain ~2× the poll slices of a weight-1 tenant running the
+    /// same workload (the heap discounts its virtual time 2×).
+    #[test]
+    fn weighted_tenant_drains_proportionally_more_polls() {
+        let sched = Scheduler::new(SchedulerConfig { workers: 1, batch_steps: 4 });
+        let fh = Arc::new(AtomicBool::new(false));
+        let fl = Arc::new(AtomicBool::new(false));
+        assert!(sched.submit(
+            actor_with_weight("heavy", 5000, 9, 2, Arc::clone(&fh)),
+            Arc::clone(&fh)
+        ));
+        assert!(sched.submit(
+            actor_with_weight("light", 5000, 9, 1, Arc::clone(&fl)),
+            Arc::clone(&fl)
+        ));
+        // sample both counters once enough slices accumulated
+        let (h, l) = loop {
+            let h = sched.poll_count("heavy").unwrap();
+            let l = sched.poll_count("light").unwrap();
+            if h + l >= 600 {
+                break (h, l);
+            }
+            std::thread::yield_now();
+        };
+        sched.stop("heavy");
+        sched.stop("light");
+        sched.wait("heavy").unwrap();
+        sched.wait("light").unwrap();
+        let ratio = h as f64 / l.max(1) as f64;
+        assert!(
+            ratio > 1.4 && ratio < 3.0,
+            "heavy/light poll ratio {ratio:.2} outside ~2x band (h={h}, l={l})"
+        );
+        assert!(sched.poll_count("ghost").is_none());
     }
 
     #[test]

@@ -25,8 +25,9 @@
 
 use std::collections::BTreeMap;
 use std::ops::Bound;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::durability::wal::{Wal, WalRecord};
 use crate::json::{self, Json};
 
 /// Version assigned to an item on each successful write.
@@ -99,6 +100,10 @@ impl Shard {
 pub struct MetadataStore {
     shards: Vec<Mutex<Shard>>,
     writes: std::sync::atomic::AtomicU64,
+    /// Optional write-ahead log: once attached, every successful mutation
+    /// appends a record *inside* its shard critical section, so WAL order
+    /// equals application order per key (DESIGN.md §10).
+    wal: OnceLock<Arc<Wal>>,
 }
 
 impl Default for MetadataStore {
@@ -134,7 +139,14 @@ impl MetadataStore {
         MetadataStore {
             shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
             writes: std::sync::atomic::AtomicU64::new(0),
+            wal: OnceLock::new(),
         }
+    }
+
+    /// Attach a write-ahead log. Mutations from this point on emit WAL
+    /// records; at most one WAL can ever be attached (later calls no-op).
+    pub fn attach_wal(&self, wal: Arc<Wal>) {
+        let _ = self.wal.set(wal);
     }
 
     /// Number of lock stripes.
@@ -153,9 +165,43 @@ impl MetadataStore {
         let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
         let t = shard.tables.entry(table.to_string()).or_default();
         let next = t.get(key).map(|(v, _)| v + 1).unwrap_or(1);
+        if let Some(w) = self.wal.get() {
+            w.append(&WalRecord::Put {
+                table: table.to_string(),
+                key: key.to_string(),
+                version: next,
+                value: value.clone(),
+            });
+        }
         t.insert(key.to_string(), (next, value));
         self.writes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         next
+    }
+
+    /// Raw insert with an explicit version: the snapshot-restore / WAL-replay
+    /// path. Bypasses the WAL (recovery must not re-log what it replays)
+    /// and the write counter.
+    pub(crate) fn insert_raw(&self, table: &str, key: &str, version: Version, value: Json) {
+        let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        shard
+            .tables
+            .entry(table.to_string())
+            .or_default()
+            .insert(key.to_string(), (version, value));
+    }
+
+    /// Point-in-time capture for per-shard snapshots: clones every
+    /// shard's tables while **all** shard guards are held, and reads the
+    /// WAL high-water mark under the same guards — no writer can be
+    /// inside a critical section at that instant, so the mark exactly
+    /// separates contained from not-contained records (DESIGN.md §10).
+    pub(crate) fn capture_for_snapshot(
+        &self,
+    ) -> (Vec<BTreeMap<String, BTreeMap<String, (Version, Json)>>>, u64) {
+        let guards: Vec<_> = self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let hwm = self.wal.get().map(|w| w.last_lsn()).unwrap_or(0);
+        let data = guards.iter().map(|g| g.tables.clone()).collect();
+        (data, hwm)
     }
 
     /// Conditional put: succeeds only if the stored version matches
@@ -183,6 +229,14 @@ impl MetadataStore {
             }
         }
         let next = actual.map(|v| v + 1).unwrap_or(1);
+        if let Some(w) = self.wal.get() {
+            w.append(&WalRecord::Put {
+                table: table.to_string(),
+                key: key.to_string(),
+                version: next,
+                value: value.clone(),
+            });
+        }
         t.insert(key.to_string(), (next, value));
         self.writes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Ok(next)
@@ -197,11 +251,20 @@ impl MetadataStore {
     /// Delete an item; true if it existed.
     pub fn delete(&self, table: &str, key: &str) -> bool {
         let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
-        shard
+        let removed = shard
             .tables
             .get_mut(table)
             .map(|t| t.remove(key).is_some())
-            .unwrap_or(false)
+            .unwrap_or(false);
+        if removed {
+            if let Some(w) = self.wal.get() {
+                w.append(&WalRecord::Delete {
+                    table: table.to_string(),
+                    key: key.to_string(),
+                });
+            }
+        }
+        removed
     }
 
     /// Keys with the given prefix (List* API support), in sorted order.
@@ -275,6 +338,11 @@ impl MetadataStore {
     /// one sorted `table → key` object, so the format is identical across
     /// shard counts (and to the pre-sharding store).
     ///
+    /// Service persistence now goes through [`crate::durability`]
+    /// (per-shard snapshot files + WAL replay); this merged blob remains
+    /// for debugging dumps, state comparison in tests, and the legacy
+    /// `restore()` path, which recovery still accepts.
+    ///
     /// Unlike prefix scans, a snapshot is a **point-in-time** durability
     /// operation: all shard locks are held simultaneously (acquired in
     /// index order; point ops only ever hold one, so this cannot
@@ -326,12 +394,7 @@ impl MetadataStore {
                     .get("value")
                     .cloned()
                     .ok_or_else(|| StoreError::Corrupt("missing value".into()))?;
-                let mut shard = store.shards[store.shard_of(name, k)].lock().unwrap();
-                shard
-                    .tables
-                    .entry(name.clone())
-                    .or_default()
-                    .insert(k.clone(), (ver as Version, value));
+                store.insert_raw(name, k, ver as Version, value);
             }
         }
         Ok(store)
@@ -484,6 +547,71 @@ mod tests {
         assert!(MetadataStore::restore("not json").is_err());
         assert!(MetadataStore::restore("[1,2]").is_err());
         assert!(MetadataStore::restore(r#"{"t": {"k": {"value": 1}}}"#).is_err());
+    }
+
+    /// Regression: a snapshot must be a state that actually existed. A
+    /// single writer bumps key `alpha` then key `beta` (hashed to
+    /// different shards with high probability); a snapshot that visited
+    /// shards without holding all guards could observe `beta > alpha` or
+    /// `alpha - beta > 1`, neither of which ever exists.
+    #[test]
+    fn snapshot_is_point_in_time_under_concurrent_writers() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let s = Arc::new(MetadataStore::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let s = Arc::clone(&s);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    i += 1;
+                    s.put("inv", "alpha", Json::Num(i as f64));
+                    s.put("inv", "beta", Json::Num(i as f64));
+                }
+            })
+        };
+        for _ in 0..200 {
+            let snap = s.snapshot();
+            let r = MetadataStore::restore(&snap).unwrap();
+            let a = r.get("inv", "alpha").map(|(_, v)| v.as_f64().unwrap()).unwrap_or(0.0);
+            let b = r.get("inv", "beta").map(|(_, v)| v.as_f64().unwrap()).unwrap_or(0.0);
+            assert!(a >= b, "snapshot saw beta={b} ahead of alpha={a}");
+            assert!(a - b <= 1.0, "snapshot skew: alpha={a} beta={b}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn attached_wal_records_every_mutation_in_order() {
+        use crate::durability::wal::{Wal, WalRecord};
+        use std::sync::Arc;
+        let dir = std::env::temp_dir().join(format!(
+            "amt-store-wal-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let s = MetadataStore::new();
+        s.put("t", "pre-wal", Json::Null); // before attach: unlogged
+        s.attach_wal(Arc::new(Wal::create(&dir).unwrap()));
+        s.put("t", "k", Json::Num(1.0));
+        s.put_if("t", "k", Json::Num(2.0), Some(1)).unwrap();
+        assert!(s.put_if("t", "k", Json::Num(9.0), Some(7)).is_err()); // unlogged
+        s.delete("t", "k");
+        assert!(!s.delete("t", "k")); // no-op delete: unlogged
+        s.wal.get().unwrap().commit().unwrap();
+        let scan = Wal::scan(&dir.join(crate::durability::wal::WAL_FILE)).unwrap();
+        let recs: Vec<&WalRecord> = scan.records.iter().map(|(_, r)| r).collect();
+        assert_eq!(recs.len(), 3);
+        assert!(matches!(recs[0], WalRecord::Put { version: 1, .. }));
+        assert!(matches!(recs[1], WalRecord::Put { version: 2, .. }));
+        assert!(matches!(recs[2], WalRecord::Delete { .. }));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

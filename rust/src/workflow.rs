@@ -20,6 +20,8 @@
 //! [`StateMachine::execute`] is the run-to-completion convenience wrapper
 //! over the same step loop.
 
+use crate::json::Json;
+
 /// Outcome returned by a state handler.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Transition {
@@ -151,6 +153,74 @@ impl ExecutionState {
     /// reached the terminal state, not retained here.
     pub fn result(&self) -> Option<&Execution> {
         self.finished.as_ref()
+    }
+
+    /// JSON wire form of the cursor — what a [`crate::durability`] WAL
+    /// checkpoint carries. The step history is deliberately *not*
+    /// serialized (it can run to `max_transitions` records and is
+    /// delivered exactly once with the finishing step); only its length
+    /// is recorded, so a checkpoint stays O(1) no matter how long the
+    /// execution has run. Recovery uses these cursors for progress
+    /// reporting — resumption itself replays deterministically.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("current", Json::Num(self.current as f64)),
+            ("attempt", Json::Num(self.attempt as f64)),
+            ("transitions", Json::Num(self.transitions as f64)),
+            ("clock", Json::Num(self.clock)),
+            ("steps_recorded", Json::Num(self.steps.len() as f64)),
+            (
+                "finished",
+                match &self.finished {
+                    None => Json::Null,
+                    Some(e) => {
+                        let status = match &e.status {
+                            ExecutionStatus::Succeeded => Json::Str("Succeeded".into()),
+                            ExecutionStatus::Failed(msg) => {
+                                Json::obj(vec![("Failed", Json::Str(msg.clone()))])
+                            }
+                        };
+                        Json::obj(vec![
+                            ("status", status),
+                            ("finished_at", Json::Num(e.finished_at)),
+                        ])
+                    }
+                },
+            ),
+        ])
+    }
+
+    /// Rebuild a cursor from its wire form. The step history comes back
+    /// empty (see [`ExecutionState::to_json`]); everything that governs
+    /// where the execution stands — state index, attempt counter,
+    /// transition count, virtual clock, terminal marker — round-trips
+    /// exactly (`clock` bit-exactly: the JSON writer prints the shortest
+    /// representation that re-parses to the same f64).
+    pub fn from_json(j: &Json) -> Option<ExecutionState> {
+        let finished = match j.get("finished") {
+            None | Some(Json::Null) => None,
+            Some(f) => {
+                let status = match f.get("status")? {
+                    Json::Str(s) if s == "Succeeded" => ExecutionStatus::Succeeded,
+                    other => ExecutionStatus::Failed(
+                        other.get("Failed")?.as_str()?.to_string(),
+                    ),
+                };
+                Some(Execution {
+                    status,
+                    steps: Vec::new(),
+                    finished_at: f.get("finished_at")?.as_f64()?,
+                })
+            }
+        };
+        Some(ExecutionState {
+            current: j.get("current")?.as_i64()? as usize,
+            attempt: j.get("attempt")?.as_i64()? as u32,
+            transitions: j.get("transitions")?.as_i64()? as usize,
+            steps: Vec::new(),
+            clock: j.get("clock")?.as_f64()?,
+            finished,
+        })
     }
 }
 
@@ -536,6 +606,51 @@ mod tests {
             }
             other => panic!("expected Done, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn execution_state_json_roundtrip() {
+        let mut m: StateMachine<u32> = StateMachine::new("a")
+            .state("a", RetryPolicy::none(), |c: &mut u32, _| {
+                *c += 1;
+                Transition::Wait { seconds: 12.25, then: "b".into() }
+            })
+            .state("b", RetryPolicy::none(), |_, _| Transition::Succeed);
+        let mut ctx = 0u32;
+        let mut exec = m.begin(0.0);
+        assert!(matches!(m.step(&mut exec, &mut ctx), StepOutcome::Parked { .. }));
+
+        // mid-flight cursor round-trips, clock bit-exactly
+        let j = exec.to_json();
+        let back = ExecutionState::from_json(&crate::json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.clock.to_bits(), exec.clock.to_bits());
+        assert!(!back.is_finished());
+        assert_eq!(j.get("steps_recorded").unwrap().as_i64(), Some(1));
+        // the rebuilt cursor resumes on the same machine
+        let mut back = back;
+        assert!(matches!(m.step(&mut back, &mut ctx), StepOutcome::Done(_)));
+
+        // terminal cursors round-trip status + finish time
+        m.step(&mut exec, &mut ctx);
+        let j = exec.to_json();
+        let back = ExecutionState::from_json(&crate::json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert!(back.is_finished());
+        assert_eq!(back.result().unwrap().status, ExecutionStatus::Succeeded);
+        assert_eq!(back.result().unwrap().finished_at, 12.25);
+
+        // failed executions keep their message
+        let mut fm: StateMachine<()> =
+            StateMachine::new("x").state("x", RetryPolicy::none(), |_, _| {
+                Transition::Fail("boom".into())
+            });
+        let mut fexec = fm.begin(0.0);
+        fm.step(&mut fexec, &mut ());
+        let back = ExecutionState::from_json(&fexec.to_json()).unwrap();
+        assert!(
+            matches!(back.result().unwrap().status, ExecutionStatus::Failed(ref e) if e == "boom")
+        );
     }
 
     #[test]

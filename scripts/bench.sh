@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
 # Perf-trajectory harness: run the criterion-style benches at fixed sizes
 # plus the §6.5 scale-soak example, emit BENCH_propose.json /
-# BENCH_gp_fit.json / BENCH_soak.json, and diff p50 latencies against the
-# committed baselines (DESIGN.md §8).
+# BENCH_gp_fit.json / BENCH_recovery.json / BENCH_soak.json, and diff p50
+# latencies against the committed baselines (DESIGN.md §8).
+#
+# BENCH_recovery.json entries are the durability engine's trajectory
+# (DESIGN.md §10): WAL append throughput, WAL replay records/sec, and
+# recovery-on-open time for a 200-job store.
 #
 # BENCH_soak.json entries are the synchronous-API latency distribution at
 # 200- and 1000-job spikes on the multi-tenant scheduler; jobs/sec, p99
@@ -25,11 +29,13 @@ trap 'rm -rf "$run_dir"' EXIT
 echo "== running benches (fresh JSON into $run_dir) =="
 AMT_BENCH_DIR="$run_dir" cargo bench --bench bo_propose
 AMT_BENCH_DIR="$run_dir" cargo bench --bench gp_fit
+echo "== running recovery bench (WAL append/replay + 200-job open) =="
+AMT_BENCH_DIR="$run_dir" cargo bench --bench recovery
 echo "== running scale soak (200- and 1000-job spikes) =="
 AMT_BENCH_DIR="$run_dir" cargo run --release --example scale_soak -- 200 1000
 
 status=0
-for f in BENCH_propose.json BENCH_gp_fit.json BENCH_soak.json; do
+for f in BENCH_propose.json BENCH_gp_fit.json BENCH_recovery.json BENCH_soak.json; do
     fresh="$run_dir/$f"
     if [ ! -f "$fresh" ]; then
         echo "ERROR: bench did not produce $f" >&2

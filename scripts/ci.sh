@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# One-command tier-1 gate for toolchain machines (and CI): release build
+# plus the full test suite — exactly the verify line ROADMAP.md names.
+#
+# Usage:
+#   scripts/ci.sh          # build + test
+#   scripts/ci.sh --bench  # additionally run the perf-trajectory harness
+#                          # (scripts/bench.sh: fails on p50 regressions)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 verify: cargo build --release =="
+cargo build --release
+
+echo "== tier-1 verify: cargo test -q =="
+cargo test -q
+
+if [ "${1:-}" = "--bench" ]; then
+    echo "== perf trajectory: scripts/bench.sh =="
+    scripts/bench.sh
+fi
+
+echo "ci: OK"
