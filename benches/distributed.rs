@@ -1,0 +1,188 @@
+//! Distributed-plane benchmark (DESIGN.md §11): frame encode/decode
+//! throughput, loopback leader⇄worker round-trip latency, and a 200-job
+//! soak through the loopback `RemoteWorkerPool`. Emits
+//! `BENCH_distributed.json` (schema in `harness::BenchReport`;
+//! `AMT_BENCH_DIR` overrides the output directory).
+//! `cargo bench --bench distributed`.
+
+use std::time::{Duration, Instant};
+
+use amt::config::TuningJobRequest;
+use amt::distributed::proto::{Message, PollReply};
+use amt::distributed::worker::spawn_loopback_worker;
+use amt::distributed::{frame, transport::Transport};
+use amt::durability::wal::WalRecord;
+use amt::harness::{bench, BenchReport, BenchStats};
+use amt::json::Json;
+use amt::platform::PlatformConfig;
+
+/// A representative `StoreDelta`: one poll slice's worth of records.
+fn sample_delta() -> Message {
+    let mut records = Vec::new();
+    for i in 0..16u64 {
+        records.push((
+            i + 1,
+            WalRecord::Put {
+                table: "training_jobs".into(),
+                key: format!("soak-0001-train-{i:04}"),
+                version: 1,
+                value: Json::obj(vec![
+                    ("tuning_job", Json::Str("soak-0001".into())),
+                    ("status", Json::Str("Completed".into())),
+                    ("final_value", Json::Num(0.123456789 * i as f64)),
+                    ("attempts", Json::Num(1.0)),
+                ]),
+            },
+        ));
+        records.push((
+            i + 100,
+            WalRecord::Emit {
+                stream: format!("soak-0001-train-{i:04}/objective"),
+                time: 30.0 * i as f64,
+                value: 1.0 / (1.0 + i as f64),
+            },
+        ));
+    }
+    Message::StoreDelta { job: "soak-0001".into(), records }
+}
+
+fn main() {
+    let mut report = BenchReport::new("distributed");
+    const FRAMES: usize = 2_000;
+
+    // --- frame + message encode throughput (the worker's per-slice
+    // serialization cost) ---
+    let msg = sample_delta();
+    let encoded = msg.encode();
+    let frame_bytes = encoded.len();
+    let stats = bench("delta encode 2k frames (32 recs each)", 1, 5, || {
+        for _ in 0..FRAMES {
+            std::hint::black_box(msg.encode());
+        }
+    });
+    report.push(
+        "frame_encode",
+        &[
+            ("frames", FRAMES.to_string()),
+            ("frame_bytes", frame_bytes.to_string()),
+            (
+                "mb_per_sec",
+                format!("{:.1}", FRAMES as f64 * frame_bytes as f64 / stats.p50 / 1e6),
+            ),
+        ],
+        &stats,
+    );
+
+    // --- decode throughput (the leader's per-slice parse cost) ---
+    let stats = bench("delta decode 2k frames", 1, 5, || {
+        for _ in 0..FRAMES {
+            let (payload, _) = frame::decode(&encoded).unwrap().unwrap();
+            std::hint::black_box(Message::decode(&payload).unwrap());
+        }
+    });
+    report.push(
+        "frame_decode",
+        &[
+            ("frames", FRAMES.to_string()),
+            ("frame_bytes", frame_bytes.to_string()),
+            (
+                "mb_per_sec",
+                format!("{:.1}", FRAMES as f64 * frame_bytes as f64 / stats.p50 / 1e6),
+            ),
+        ],
+        &stats,
+    );
+
+    // --- loopback round-trip latency: PollRequest for an unknown job →
+    // Rejected (pure protocol overhead, no tuning work) ---
+    let (mut leader, _fault, handle) = spawn_loopback_worker("bench-rtt");
+    const ROUNDTRIPS: usize = 1_000;
+    let stats = bench("loopback round-trip x1000", 1, 5, || {
+        for _ in 0..ROUNDTRIPS {
+            leader
+                .send(&Message::PollRequest { job: "nope".into(), max_steps: 1 })
+                .unwrap();
+            loop {
+                match leader.recv(Duration::from_secs(10)).unwrap() {
+                    Some(Message::PollResult {
+                        reply: PollReply::Rejected { .. }, ..
+                    }) => break,
+                    Some(_) => {} // Hello / heartbeats
+                    None => panic!("worker went quiet"),
+                }
+            }
+        }
+    });
+    report.push(
+        "loopback_rtt",
+        &[
+            ("roundtrips", ROUNDTRIPS.to_string()),
+            ("rtt_us_p50", format!("{:.1}", stats.p50 / ROUNDTRIPS as f64 * 1e6)),
+        ],
+        &stats,
+    );
+    leader.send(&Message::Drain).unwrap();
+    handle.join().unwrap();
+
+    // --- 200-job soak through the loopback RemoteWorkerPool ---
+    const SOAK_JOBS: usize = 200;
+    const WORKERS: usize = 4;
+    let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..WORKERS {
+        let (t, _fault, h) = spawn_loopback_worker(&format!("bench-soak-{i}"));
+        transports.push(t);
+        handles.push(h);
+    }
+    let service =
+        amt::api::AmtService::with_remote_workers(PlatformConfig::default(), transports);
+    let started = Instant::now();
+    let mut latencies = Vec::with_capacity(SOAK_JOBS);
+    for i in 0..SOAK_JOBS {
+        let t = Instant::now();
+        service
+            .create_tuning_job(TuningJobRequest {
+                name: format!("dsoak-{i:04}"),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: 5,
+                max_parallel_jobs: 5,
+                seed: i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+        latencies.push(t.elapsed().as_secs_f64());
+    }
+    let mut evaluations = 0usize;
+    for i in 0..SOAK_JOBS {
+        let outcome = service.wait(&format!("dsoak-{i:04}")).unwrap();
+        evaluations += outcome.evaluations.len();
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let stats = BenchStats::from_samples(latencies);
+    println!(
+        "distributed soak: {SOAK_JOBS} jobs / {evaluations} evaluations over {WORKERS} \
+         loopback workers in {wall:.1}s ({:.1} jobs/s)",
+        SOAK_JOBS as f64 / wall
+    );
+    report.push(
+        "remote_soak_200",
+        &[
+            ("jobs", SOAK_JOBS.to_string()),
+            ("workers", WORKERS.to_string()),
+            ("evaluations", evaluations.to_string()),
+            ("jobs_per_sec", format!("{:.2}", SOAK_JOBS as f64 / wall)),
+            ("wall_s", format!("{wall:.3}")),
+        ],
+        &stats,
+    );
+    drop(service);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    match report.write() {
+        Ok(path) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_distributed.json: {e}"),
+    }
+}

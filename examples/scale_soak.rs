@@ -18,8 +18,13 @@
 //! in the entry params — `scripts/bench.sh` diffs it like the other
 //! BENCH files.
 //!
+//! With `--distributed N`, each spike additionally runs through the
+//! distributed plane (DESIGN.md §11): N loopback workers hosting the
+//! actors behind the full wire protocol, so one binary covers both
+//! execution planes.
+//!
 //! ```bash
-//! cargo run --release --example scale_soak [tuning_jobs ...]
+//! cargo run --release --example scale_soak [tuning_jobs ...] [--distributed N]
 //! ```
 
 use std::sync::Arc;
@@ -27,24 +32,44 @@ use std::time::Instant;
 
 use amt::api::AmtService;
 use amt::config::TuningJobRequest;
+use amt::distributed::worker::spawn_loopback_worker;
 use amt::harness::{print_table, BenchReport, BenchStats};
 use amt::platform::PlatformConfig;
 
-/// One spike at `num_jobs` tuning jobs; returns the report entry fields.
-fn run_spike(num_jobs: usize, report: &mut BenchReport) {
+/// One spike at `num_jobs` tuning jobs (over `distributed` loopback
+/// workers when > 0); returns the report entry fields.
+fn run_spike(num_jobs: usize, distributed: usize, report: &mut BenchReport) {
     // hostile platform: real provisioning jitter + failure injection
     let platform = PlatformConfig {
         provisioning_failure_rate: 0.05,
         training_failure_rate: 0.04,
         ..Default::default()
     };
-    let service = Arc::new(AmtService::new(platform));
+    let mut worker_handles = Vec::new();
+    let service = if distributed > 0 {
+        let mut transports = Vec::new();
+        for i in 0..distributed {
+            let (t, _fault, h) = spawn_loopback_worker(&format!("soak-{i}"));
+            transports.push(t);
+            worker_handles.push(h);
+        }
+        Arc::new(AmtService::with_remote_workers(platform, transports))
+    } else {
+        Arc::new(AmtService::new(platform))
+    };
 
-    eprintln!(
-        "spiking {num_jobs} tuning jobs (5 evaluations each, 5 parallel) \
-         over {} pool workers...",
-        service.worker_count()
-    );
+    if distributed > 0 {
+        eprintln!(
+            "spiking {num_jobs} tuning jobs (5 evaluations each, 5 parallel) \
+             over {distributed} loopback remote workers..."
+        );
+    } else {
+        eprintln!(
+            "spiking {num_jobs} tuning jobs (5 evaluations each, 5 parallel) \
+             over {} pool workers...",
+            service.worker_count()
+        );
+    }
     let started = Instant::now();
     let mut created = 0usize;
     // per-call latencies of the synchronous APIs (create/describe/list)
@@ -107,11 +132,16 @@ fn run_spike(num_jobs: usize, report: &mut BenchReport) {
 
     let calls = service.api_calls.load(std::sync::atomic::Ordering::Relaxed);
     let store_writes = service.store().write_count();
+    let execution_plane = if distributed > 0 {
+        format!("distributed ({distributed} loopback workers)")
+    } else {
+        format!("in-process ({} pool workers)", service.worker_count())
+    };
     let rows = vec![
         vec!["tuning jobs requested".into(), num_jobs.to_string()],
         vec!["tuning jobs created".into(), created.to_string()],
         vec!["tuning jobs completed".into(), completed.to_string()],
-        vec!["scheduler pool workers".into(), service.worker_count().to_string()],
+        vec!["execution plane".into(), execution_plane],
         vec!["training jobs (evaluations)".into(), evaluations.to_string()],
         vec!["injected failures surviving retries".into(), failed_evals.to_string()],
         vec!["training-job retries absorbed".into(), retries.to_string()],
@@ -133,11 +163,17 @@ fn run_spike(num_jobs: usize, report: &mut BenchReport) {
     ];
     print_table(&format!("§6.5 scale soak ({num_jobs} jobs)"), &["metric", "value"], &rows);
 
+    let label = if distributed > 0 {
+        format!("soak api latency jobs={num_jobs} distributed={distributed}")
+    } else {
+        format!("soak api latency jobs={num_jobs}")
+    };
     report.push(
-        &format!("soak api latency jobs={num_jobs}"),
+        &label,
         &[
             ("jobs", num_jobs.to_string()),
             ("workers", service.worker_count().to_string()),
+            ("remote_workers", distributed.to_string()),
             ("jobs_per_sec", format!("{jobs_per_sec:.2}")),
             ("api_p99_s", format!("{p99:.6}")),
             ("store_writes", store_writes.to_string()),
@@ -158,14 +194,40 @@ fn run_spike(num_jobs: usize, report: &mut BenchReport) {
         (0.05 + 0.04) * 100.0,
         retries
     );
+
+    // remote workers drain when the service (and its pool) drops
+    drop(service);
+    for h in worker_handles {
+        let _ = h.join();
+    }
 }
 
 fn main() {
-    let sizes: Vec<usize> = std::env::args().skip(1).filter_map(|s| s.parse().ok()).collect();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut sizes = Vec::new();
+    let mut distributed = 0usize;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--distributed" {
+            distributed = args
+                .get(i + 1)
+                .and_then(|v| v.parse().ok())
+                .expect("--distributed needs a worker count");
+            i += 2;
+        } else {
+            if let Ok(n) = args[i].parse() {
+                sizes.push(n);
+            }
+            i += 1;
+        }
+    }
     let sizes = if sizes.is_empty() { vec![200] } else { sizes };
     let mut report = BenchReport::new("soak");
     for &n in &sizes {
-        run_spike(n, &mut report);
+        run_spike(n, 0, &mut report);
+        if distributed > 0 {
+            run_spike(n, distributed, &mut report);
+        }
     }
     match report.write() {
         Ok(path) => eprintln!("wrote {}", path.display()),

@@ -23,16 +23,18 @@ use std::sync::Arc;
 
 use crate::config::TuningJobRequest;
 use crate::coordinator::{stopping_by_name, JobActor, TuningJobOutcome};
-use crate::durability::{recovery, snapshot, wal::Wal};
+use crate::distributed::leader::{RemoteConfig, RemoteJobSpec, RemoteWorkerPool};
+use crate::distributed::transport::Transport;
+use crate::durability::{recovery, snapshot, wal::Wal, DurabilityOptions};
 use crate::gp::{NativeBackend, SurrogateBackend};
 use crate::json::Json;
 use crate::metrics::MetricsService;
 use crate::objectives::by_name as objective_by_name;
 use crate::platform::{PlatformConfig, TrainingPlatform};
 use crate::scheduler::{Scheduler, SchedulerConfig};
-use crate::space::{config_from_json, Config, Value};
+use crate::space::{config_from_json, Value};
 use crate::store::MetadataStore;
-use crate::strategies::{BayesianOptimization, BoConfig, Observation, Strategy};
+use crate::strategies::{Observation, Strategy};
 use crate::warmstart::{transfer, ParentJob, TransferOptions};
 
 /// Page size for store scans performed inside API handlers (warm-start
@@ -80,8 +82,15 @@ pub struct AmtService {
     platform_config: PlatformConfig,
     backend: Arc<dyn SurrogateBackend>,
     scheduler: Scheduler,
+    /// Remote execution plane: jobs whose objective lives in the
+    /// registry dispatch here when attached; custom-objective jobs (and
+    /// everything else when absent) run on the local scheduler.
+    remote: Option<Arc<RemoteWorkerPool>>,
     /// Durability log (None for the in-memory-only constructors).
     wal: Option<Arc<Wal>>,
+    /// Auto-checkpoint trigger installed on every execution plane's
+    /// group-commit path (None when `auto_checkpoint_bytes` is unset).
+    post_commit_hook: Option<Arc<dyn Fn() + Send + Sync>>,
     /// Durability directory `open` was pointed at.
     data_dir: Option<PathBuf>,
     /// Names of the non-terminal jobs `open` resumed, name-sorted.
@@ -123,12 +132,59 @@ impl AmtService {
             platform_config,
             backend,
             scheduler: Scheduler::new(scheduler_config),
+            remote: None,
             wal: None,
+            post_commit_hook: None,
             data_dir: None,
             recovered: Vec::new(),
             api_calls: std::sync::atomic::AtomicU64::new(0),
             api_errors: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// In-memory service whose registry-objective jobs execute on a
+    /// remote worker pool over the given transports (loopback or
+    /// socket), native backend, default scheduler/remote configuration.
+    pub fn with_remote_workers(
+        platform_config: PlatformConfig,
+        transports: Vec<Box<dyn Transport>>,
+    ) -> Self {
+        let mut svc = Self::new(platform_config);
+        svc.attach_remote_workers(transports, RemoteConfig::default());
+        svc
+    }
+
+    /// Attach a remote execution plane: from now on, every created job
+    /// whose objective is in the registry dispatches to these workers
+    /// (the distributed plane, DESIGN.md §11); custom-objective jobs
+    /// stay on the local scheduler, since a remote worker cannot rebuild
+    /// an arbitrary objective from its name. Deltas apply into this
+    /// service's store/metrics — and its WAL, when the service was
+    /// opened durably. Call before creating jobs; jobs resumed by a
+    /// durable `open` ran on the local plane already and are untouched.
+    pub fn attach_remote_workers(
+        &mut self,
+        transports: Vec<Box<dyn Transport>>,
+        config: RemoteConfig,
+    ) {
+        let pool = RemoteWorkerPool::new(
+            transports,
+            Arc::clone(&self.store),
+            Arc::clone(&self.metrics),
+            self.wal.clone(),
+            config,
+        );
+        // the auto-checkpoint trigger bounds the WAL no matter which
+        // plane does the committing
+        if let Some(hook) = &self.post_commit_hook {
+            pool.set_post_commit(Arc::clone(hook));
+        }
+        self.remote = Some(Arc::new(pool));
+    }
+
+    /// The attached remote worker pool, if any.
+    pub fn remote_pool(&self) -> Option<Arc<RemoteWorkerPool>> {
+        self.remote.clone()
     }
 
     /// Open a **durable** service rooted at `dir` with the native
@@ -166,16 +222,60 @@ impl AmtService {
         backend: Arc<dyn SurrogateBackend>,
         scheduler_config: SchedulerConfig,
     ) -> crate::Result<Self> {
+        Self::open_with_durability(
+            dir,
+            platform_config,
+            backend,
+            scheduler_config,
+            DurabilityOptions::default(),
+        )
+    }
+
+    /// [`AmtService::open_with_options`] plus durability tuning: with
+    /// `auto_checkpoint_bytes` set, the service snapshots and compacts
+    /// its WAL automatically whenever a group commit leaves the log
+    /// larger than the threshold, so the log stays bounded over any
+    /// service lifetime without manual `checkpoint()` calls.
+    pub fn open_with_durability(
+        dir: impl AsRef<Path>,
+        platform_config: PlatformConfig,
+        backend: Arc<dyn SurrogateBackend>,
+        scheduler_config: SchedulerConfig,
+        durability: DurabilityOptions,
+    ) -> crate::Result<Self> {
         let recovered = recovery::open(dir.as_ref())?;
         let scheduler = Scheduler::new(scheduler_config);
         scheduler.set_wal(Arc::clone(&recovered.wal));
+        let mut post_commit_hook: Option<Arc<dyn Fn() + Send + Sync>> = None;
+        if let Some(limit) = durability.auto_checkpoint_bytes {
+            // one checkpoint at a time; concurrent committers skip
+            let busy = Arc::new(AtomicBool::new(false));
+            let wal = Arc::clone(&recovered.wal);
+            let store = Arc::clone(&recovered.store);
+            let metrics = Arc::clone(&recovered.metrics);
+            let snap_dir = dir.as_ref().to_path_buf();
+            let hook: Arc<dyn Fn() + Send + Sync> = Arc::new(move || {
+                if wal.synced_len() <= limit || busy.swap(true, Ordering::Acquire) {
+                    return;
+                }
+                if let Ok(manifest) = snapshot::write_snapshot(&snap_dir, &store, &metrics, &wal)
+                {
+                    let _ = wal.compact(manifest.store_hwm, manifest.metrics_hwm);
+                }
+                busy.store(false, Ordering::Release);
+            });
+            scheduler.set_post_commit(Arc::clone(&hook));
+            post_commit_hook = Some(hook);
+        }
         let mut svc = AmtService {
             store: recovered.store,
             metrics: recovered.metrics,
             platform_config,
             backend,
             scheduler,
+            remote: None,
             wal: Some(Arc::clone(&recovered.wal)),
+            post_commit_hook,
             data_dir: Some(dir.as_ref().to_path_buf()),
             recovered: Vec::new(),
             api_calls: std::sync::atomic::AtomicU64::new(0),
@@ -219,7 +319,7 @@ impl AmtService {
             let persisted_transfer = svc
                 .store
                 .get("warm_start", &request.name)
-                .and_then(|(_, j)| observations_from_json(&j));
+                .and_then(|(_, j)| observations_from_json(j.get("observations")?));
             // reset the partial records, then drive the job through the
             // ordinary create path: deterministic replay re-produces every
             // put (same order ⇒ same values and versions) and runs on to
@@ -227,8 +327,8 @@ impl AmtService {
             svc.reset_job_state(&request.name);
             let name = request.name.clone();
             let result = match persisted_transfer {
-                Some(obs) => svc.create_prepared(request, objective.into(), obs),
-                None => svc.create_with_objective(request, objective.into()),
+                Some(obs) => svc.create_prepared(request, objective.into(), obs, true),
+                None => svc.create_with_objective(request, objective.into(), true),
             };
             match result {
                 Ok(_) => svc.recovered.push(name),
@@ -242,36 +342,18 @@ impl AmtService {
         Ok(svc)
     }
 
-    /// Delete every store record and metric stream a job wrote, so its
-    /// deterministic replay starts from a clean slate (versions restart
-    /// at 1, exactly like an uninterrupted run). The deletions go through
-    /// the logged paths, keeping the WAL a faithful mutation history.
-    /// The `{name}-train-` prefixes cannot reach a sibling job's records:
-    /// job names may not contain `-train-` (request validation), so no
-    /// other job name is an extension of this prefix.
+    /// Reset a job's records for deterministic replay (see
+    /// [`reset_job_records`] — the deletions go through the logged
+    /// paths, keeping the WAL a faithful mutation history).
     fn reset_job_state(&self, name: &str) {
-        self.store.delete("tuning_jobs", name);
-        self.store.delete("warm_start", name);
-        for key in self.store.list_keys("training_jobs", &format!("{name}-train-")) {
-            self.store.delete("training_jobs", &key);
-        }
-        self.metrics.remove_streams(&format!("{name}-train-"));
-        self.metrics.remove_streams(&format!("{name}/"));
+        reset_job_records(&self.store, &self.metrics, name);
     }
 
     /// Persist a `Failed` terminal record for a job recovery could not
     /// resume, carrying the original request wire JSON (the caller holds
     /// it — the store record may already have been reset).
     fn mark_unrecoverable(&self, name: &str, reason: &str, request: Json) {
-        self.store.put(
-            "tuning_jobs",
-            name,
-            Json::obj(vec![
-                ("status", Json::Str("Failed".into())),
-                ("request", request),
-                ("failure_reason", Json::Str(reason.into())),
-            ]),
-        );
+        persist_job_failed(&self.store, name, request, reason);
     }
 
     /// Names of the non-terminal jobs recovery resumed, name-sorted.
@@ -285,12 +367,17 @@ impl AmtService {
     }
 
     /// Write a per-shard point-in-time snapshot of the current state to
-    /// the durability directory (bounding future WAL replay). No-op for
-    /// in-memory services.
+    /// the durability directory, then compact the WAL: the committed
+    /// prefix both high-water marks cover is truncated away, so the log
+    /// holds only records the snapshot does not (recovery after
+    /// compaction is bit-identical — the dropped records were exactly
+    /// the ones replay would have skipped). No-op for in-memory
+    /// services.
     pub fn checkpoint(&self) -> crate::Result<()> {
         if let (Some(wal), Some(dir)) = (&self.wal, &self.data_dir) {
             wal.commit()?;
-            snapshot::write_snapshot(dir, &self.store, &self.metrics, wal)?;
+            let manifest = snapshot::write_snapshot(dir, &self.store, &self.metrics, wal)?;
+            wal.compact(manifest.store_hwm, manifest.metrics_hwm)?;
         }
         Ok(())
     }
@@ -308,9 +395,10 @@ impl AmtService {
         self.scheduler.worker_count()
     }
 
-    /// Tuning jobs submitted and not yet finished.
+    /// Tuning jobs submitted and not yet finished (both planes).
     pub fn running_jobs(&self) -> usize {
         self.scheduler.running_jobs()
+            + self.remote.as_ref().map(|r| r.running_jobs()).unwrap_or(0)
     }
 
     /// Shared metadata store (read-only use recommended).
@@ -401,7 +489,7 @@ impl AmtService {
         }
         let objective: Arc<dyn crate::objectives::Objective> =
             objective_by_name(&request.objective).expect("validated").into();
-        self.create_with_objective(request, objective)
+        self.create_with_objective(request, objective, true)
     }
 
     /// Tune a *custom algorithm* (the paper: "AMT can be used with built-in
@@ -417,15 +505,18 @@ impl AmtService {
         if let Err(e) = request.validate_with_custom_objective() {
             return self.fail(ApiError::Validation(e.to_string()));
         }
-        self.create_with_objective(request, objective)
+        // a custom objective only exists in this process: never remote
+        self.create_with_objective(request, objective, false)
     }
 
     fn create_with_objective(
         &self,
         request: TuningJobRequest,
         objective: Arc<dyn crate::objectives::Objective>,
+        remote_ok: bool,
     ) -> Result<String, ApiError> {
         if self.scheduler.contains(&request.name)
+            || self.remote.as_ref().is_some_and(|r| r.contains(&request.name))
             || self.store.get("tuning_jobs", &request.name).is_some()
         {
             return self.fail(ApiError::AlreadyExists(request.name));
@@ -433,7 +524,7 @@ impl AmtService {
 
         let sign = if objective.minimize() { 1.0 } else { -1.0 };
         let transferred = self.resolve_parents_for(&request, sign, &objective.space())?;
-        self.create_prepared(request, objective, transferred)
+        self.create_prepared(request, objective, transferred, remote_ok)
     }
 
     /// Final leg of job creation, with the warm-start transfer
@@ -447,6 +538,7 @@ impl AmtService {
         request: TuningJobRequest,
         objective: Arc<dyn crate::objectives::Objective>,
         transferred: Vec<Observation>,
+        remote_ok: bool,
     ) -> Result<String, ApiError> {
         let transfer_json = if transferred.is_empty() {
             None
@@ -454,26 +546,40 @@ impl AmtService {
             Some(observations_to_json(&transferred))
         };
 
-        // build the strategy (BO gets the warm-start observations)
-        let strategy: Box<dyn Strategy> = match request.strategy.as_str() {
-            "bayesian" | "bo" => {
-                let mut bo = BayesianOptimization::new(
-                    objective.space(),
-                    Arc::clone(&self.backend),
-                    BoConfig::default(),
-                    request.seed,
+        // registry-objective jobs dispatch to the remote plane when one
+        // is attached: same reserve → persist → activate discipline, but
+        // the worker rebuilds the actor from the shipped request instead
+        // of receiving one built here
+        if remote_ok {
+            if let Some(remote) = &self.remote {
+                debug_assert!(
+                    objective_by_name(&request.objective).is_some(),
+                    "remote_ok implies a registry objective"
                 );
-                bo.add_transferred(transferred);
-                Box::new(bo)
+                let spec = RemoteJobSpec {
+                    request: request.clone(),
+                    platform: self.platform_config.clone(),
+                    transfer: transferred,
+                };
+                if !remote.register(spec) {
+                    return self.fail(ApiError::AlreadyExists(request.name));
+                }
+                persist_job_seeds(&self.store, &request, transfer_json);
+                remote.activate(&request.name);
+                return Ok(request.name);
             }
-            other => crate::strategies::by_name(
-                other,
-                &objective.space(),
-                Arc::clone(&self.backend),
-                request.seed,
-            )
-            .expect("validated strategy"),
-        };
+        }
+
+        // build the strategy (BO gets the warm-start observations) —
+        // the shared construction path remote workers also use
+        let strategy: Box<dyn Strategy> = crate::strategies::for_request(
+            &request.strategy,
+            &objective.space(),
+            Arc::clone(&self.backend),
+            request.seed,
+            transferred,
+        )
+        .expect("validated strategy");
         let stopping = stopping_by_name(&request.early_stopping).expect("validated");
 
         let stop_flag = Arc::new(AtomicBool::new(false));
@@ -494,24 +600,7 @@ impl AmtService {
         if !self.scheduler.register(actor, stop_flag) {
             return self.fail(ApiError::AlreadyExists(request.name));
         }
-        // warm-start observations first, job record second: any WAL
-        // prefix containing the job record also contains the transfer
-        // data its recovery needs
-        if let Some(tj) = transfer_json {
-            self.store.put(
-                "warm_start",
-                &request.name,
-                Json::obj(vec![("observations", tj)]),
-            );
-        }
-        self.store.put(
-            "tuning_jobs",
-            &request.name,
-            Json::obj(vec![
-                ("status", Json::Str("InProgress".into())),
-                ("request", request.to_json()),
-            ]),
-        );
+        persist_job_seeds(&self.store, &request, transfer_json);
         self.scheduler.activate(&request.name);
         Ok(request.name)
     }
@@ -522,10 +611,15 @@ impl AmtService {
     /// concurrent Create/Describe/Stop/wait calls for other jobs proceed
     /// unimpeded while this one waits.
     pub fn wait(&self, name: &str) -> Result<TuningJobOutcome, ApiError> {
-        match self.scheduler.wait(name) {
-            Some(outcome) => Ok(outcome),
-            None => self.fail(ApiError::NotFound(name.to_string())),
+        if let Some(outcome) = self.scheduler.wait(name) {
+            return Ok(outcome);
         }
+        if let Some(remote) = &self.remote {
+            if let Some(outcome) = remote.wait(name) {
+                return Ok(outcome);
+            }
+        }
+        self.fail(ApiError::NotFound(name.to_string()))
     }
 
     /// `DescribeHyperParameterTuningJob`.
@@ -583,7 +677,9 @@ impl AmtService {
     /// jobs — it only flips the target job's stop flag.
     pub fn stop_tuning_job(&self, name: &str) -> Result<(), ApiError> {
         self.count_call();
-        if self.scheduler.stop(name) {
+        if self.scheduler.stop(name)
+            || self.remote.as_ref().is_some_and(|r| r.stop(name))
+        {
             Ok(())
         } else {
             self.fail(ApiError::NotFound(name.to_string()))
@@ -608,32 +704,81 @@ pub fn config_num(config: &crate::space::Config, key: &str) -> Option<f64> {
     config.get(key).and_then(Value::as_f64)
 }
 
-/// Wire form of warm-start transfer observations (the `warm_start`
-/// table's `observations` field). Unlike the untyped
-/// [`crate::space::config_to_json`] (whose reader collapses ints to
-/// floats), values are tagged by variant — `Int` as `{"int": n}` — so
-/// the round trip is exact and a recovered child's strategy seeds with
-/// *exactly* the observations the original create resolved (f64s
-/// round-trip bit-exactly through the JSON layer).
-fn observations_to_json(obs: &[Observation]) -> Json {
-    let value_json = |v: &Value| match v {
-        Value::Float(f) => Json::Num(*f),
-        Value::Int(i) => Json::obj(vec![("int", Json::Num(*i as f64))]),
-        Value::Cat(s) => Json::Str(s.clone()),
-    };
+/// Delete every store record and metric stream a job wrote, so its
+/// deterministic replay starts from a clean slate (versions restart at
+/// 1, exactly like an uninterrupted run). Shared by recovery-on-open
+/// and the distributed leader's worker-death repair — the record/stream
+/// namespace layout lives only here. The `{name}-train-` prefixes
+/// cannot reach a sibling job's records: job names may not contain
+/// `-train-` (request validation), so no other job name is an extension
+/// of this prefix.
+pub(crate) fn reset_job_records(store: &MetadataStore, metrics: &MetricsService, name: &str) {
+    store.delete("tuning_jobs", name);
+    store.delete("warm_start", name);
+    for key in store.list_keys("training_jobs", &format!("{name}-train-")) {
+        store.delete("training_jobs", &key);
+    }
+    metrics.remove_streams(&format!("{name}-train-"));
+    metrics.remove_streams(&format!("{name}/"));
+}
+
+/// Persist an accepted job's seed records: warm-start observations
+/// first (when any), the `InProgress` job record second — any WAL
+/// prefix containing the job record also contains the transfer data its
+/// recovery needs. The single definition of the job-record shape,
+/// shared by `create_prepared` (both planes) and the leader's
+/// worker-death reseed.
+pub(crate) fn persist_job_seeds(
+    store: &MetadataStore,
+    request: &TuningJobRequest,
+    transfer_json: Option<Json>,
+) {
+    if let Some(tj) = transfer_json {
+        store.put("warm_start", &request.name, Json::obj(vec![("observations", tj)]));
+    }
+    store.put(
+        "tuning_jobs",
+        &request.name,
+        Json::obj(vec![
+            ("status", Json::Str("InProgress".into())),
+            ("request", request.to_json()),
+        ]),
+    );
+}
+
+/// Persist a `Failed` terminal job record (recovery that cannot resume,
+/// a remote worker rejecting a job, a death with no replacement worker).
+pub(crate) fn persist_job_failed(
+    store: &MetadataStore,
+    name: &str,
+    request: Json,
+    reason: &str,
+) {
+    store.put(
+        "tuning_jobs",
+        name,
+        Json::obj(vec![
+            ("status", Json::Str("Failed".into())),
+            ("request", request),
+            ("failure_reason", Json::Str(reason.into())),
+        ]),
+    );
+}
+
+/// Wire form of warm-start transfer observations: the `warm_start`
+/// table's `observations` field and the distributed `Assign` message's
+/// `transfer` field. Values use the type-tagged encoding
+/// ([`crate::space::config_to_json_typed`]) — `Int` as `{"int": n}` —
+/// so the round trip is exact and a recovered or remotely-hosted
+/// child's strategy seeds with *exactly* the observations the original
+/// create resolved (f64s round-trip bit-exactly through the JSON
+/// layer).
+pub(crate) fn observations_to_json(obs: &[Observation]) -> Json {
     Json::Arr(
         obs.iter()
             .map(|o| {
                 Json::obj(vec![
-                    (
-                        "config",
-                        Json::Obj(
-                            o.config
-                                .iter()
-                                .map(|(k, v)| (k.clone(), value_json(v)))
-                                .collect(),
-                        ),
-                    ),
+                    ("config", crate::space::config_to_json_typed(&o.config)),
                     ("value", Json::Num(o.value)),
                 ])
             })
@@ -641,24 +786,15 @@ fn observations_to_json(obs: &[Observation]) -> Json {
     )
 }
 
-fn observations_from_json(record: &Json) -> Option<Vec<Observation>> {
-    let value_back = |j: &Json| -> Option<Value> {
-        match j {
-            Json::Num(n) => Some(Value::Float(*n)),
-            Json::Str(s) => Some(Value::Cat(s.clone())),
-            Json::Obj(_) => Some(Value::Int(j.get("int")?.as_i64()?)),
-            _ => None,
-        }
-    };
-    let arr = record.get("observations")?.as_arr()?;
+/// Reader for [`observations_to_json`] (takes the array).
+pub(crate) fn observations_from_json(arr: &Json) -> Option<Vec<Observation>> {
+    let arr = arr.as_arr()?;
     let mut out = Vec::with_capacity(arr.len());
     for entry in arr {
-        let cobj = entry.get("config")?.as_obj()?;
-        let mut config = Config::new();
-        for (k, vj) in cobj {
-            config.insert(k.clone(), value_back(vj)?);
-        }
-        out.push(Observation { config, value: entry.get("value")?.as_f64()? });
+        out.push(Observation {
+            config: crate::space::config_from_json_typed(entry.get("config")?)?,
+            value: entry.get("value")?.as_f64()?,
+        });
     }
     Some(out)
 }
@@ -752,6 +888,39 @@ mod tests {
         r.strategy = "bayesian".into();
         r.warm_start_parents = vec!["never-existed".into()];
         assert!(matches!(svc.create_tuning_job(r), Err(ApiError::BadParent(_))));
+    }
+
+    #[test]
+    fn remote_plane_runs_registry_jobs() {
+        use crate::distributed::worker::spawn_loopback_worker;
+        let mut transports = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..2 {
+            let (t, _fault, h) = spawn_loopback_worker(&format!("api-{i}"));
+            transports.push(t);
+            handles.push(h);
+        }
+        let svc = AmtService::with_remote_workers(PlatformConfig::noiseless(), transports);
+        let name = svc.create_tuning_job(quick_request("remote-a", 4)).unwrap();
+        let out = svc.wait(&name).unwrap();
+        assert_eq!(out.evaluations.len(), 4);
+        let d = svc.describe_tuning_job(&name).unwrap();
+        assert_eq!(d.status, "Completed");
+        assert_eq!(d.evaluations, 4);
+        // name uniqueness holds across the remote plane too
+        assert!(matches!(
+            svc.create_tuning_job(quick_request("remote-a", 2)),
+            Err(ApiError::AlreadyExists(_))
+        ));
+        // stop on the remote plane is reachable through the same API
+        svc.create_tuning_job(quick_request("remote-b", 400)).unwrap();
+        svc.stop_tuning_job("remote-b").unwrap();
+        let out = svc.wait("remote-b").unwrap();
+        assert!(out.evaluations.len() < 400);
+        drop(svc);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

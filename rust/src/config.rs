@@ -34,6 +34,17 @@ pub struct TuningJobRequest {
     /// (Autotune-style): under contention a weight-w job drains ~w× the
     /// poll slices of a weight-1 job. 1 = the default equal share.
     pub tenant_weight: u32,
+    /// Tenant identity for in-flight quota accounting. Empty (the
+    /// default) = no shared quota: the job is accounted on its own and
+    /// scheduling order is exactly the legacy weighted-heap order.
+    pub tenant: String,
+    /// Cap on *concurrent* poll slices across all jobs of this tenant
+    /// (on top of the virtual-time discount `tenant_weight` applies):
+    /// a quota-q tenant never occupies more than q pool workers at
+    /// once. 0 (the default) = unlimited, preserving legacy ordering.
+    /// Jobs sharing a `tenant` should carry the same `max_in_flight`
+    /// (the most recently registered non-zero value wins).
+    pub max_in_flight: u32,
 }
 
 impl Default for TuningJobRequest {
@@ -50,6 +61,8 @@ impl Default for TuningJobRequest {
             warm_start_parents: Vec::new(),
             max_retries_per_job: 2,
             tenant_weight: 1,
+            tenant: String::new(),
+            max_in_flight: 0,
         }
     }
 }
@@ -120,6 +133,12 @@ impl TuningJobRequest {
         if self.tenant_weight == 0 || self.tenant_weight > 100 {
             return Err(ValidationError::BadLimits("tenant_weight".into()));
         }
+        if self.tenant.len() > 64 {
+            return Err(ValidationError::BadLimits("tenant".into()));
+        }
+        if self.max_in_flight > 1000 {
+            return Err(ValidationError::BadLimits("max_in_flight".into()));
+        }
         Ok(())
     }
 
@@ -142,6 +161,8 @@ impl TuningJobRequest {
             ),
             ("max_retries_per_job", Json::Num(self.max_retries_per_job as f64)),
             ("tenant_weight", Json::Num(self.tenant_weight as f64)),
+            ("tenant", Json::Str(self.tenant.clone())),
+            ("max_in_flight", Json::Num(self.max_in_flight as f64)),
         ])
     }
 
@@ -171,6 +192,8 @@ impl TuningJobRequest {
                 .unwrap_or_default(),
             max_retries_per_job: get_u32("max_retries_per_job", d.max_retries_per_job),
             tenant_weight: get_u32("tenant_weight", d.tenant_weight),
+            tenant: get_str("tenant", &d.tenant),
+            max_in_flight: get_u32("max_in_flight", d.max_in_flight),
         })
     }
 }
@@ -218,6 +241,10 @@ mod tests {
         let mut r = TuningJobRequest::default();
         r.tenant_weight = 0;
         assert!(matches!(r.validate(), Err(ValidationError::BadLimits(_))));
+
+        let mut r = TuningJobRequest::default();
+        r.max_in_flight = 5000;
+        assert!(matches!(r.validate(), Err(ValidationError::BadLimits(_))));
     }
 
     #[test]
@@ -227,6 +254,8 @@ mod tests {
         r.warm_start_parents = vec!["parent-1".into(), "parent-2".into()];
         r.seed = 77;
         r.tenant_weight = 3;
+        r.tenant = "acme".into();
+        r.max_in_flight = 2;
         let j = r.to_json();
         let back = TuningJobRequest::from_json(&crate::json::parse(&j.to_string()).unwrap())
             .unwrap();

@@ -441,6 +441,10 @@ pub struct JobActor {
     ctx: Option<LoopCtx>,
     /// Fair-share weight from the request (scheduler heap key).
     tenant_weight: u32,
+    /// Tenant identity for in-flight quota accounting ("" = none).
+    tenant: String,
+    /// Concurrent-poll-slice cap for the tenant (0 = unlimited).
+    max_in_flight: u32,
     /// Optional durability log: when attached, the actor checkpoints its
     /// [`ExecutionState`] cursor at every `Pending` boundary.
     wal: Option<Arc<Wal>>,
@@ -464,6 +468,8 @@ impl JobActor {
         let sign = if objective.minimize() { 1.0 } else { -1.0 };
         let name = request.name.clone();
         let tenant_weight = request.tenant_weight.max(1);
+        let tenant = request.tenant.clone();
+        let max_in_flight = request.max_in_flight;
         let machine = build_machine();
         let exec = machine.begin(0.0);
         JobActor {
@@ -471,6 +477,8 @@ impl JobActor {
             machine,
             exec,
             tenant_weight,
+            tenant,
+            max_in_flight,
             wal: None,
             ctx: Some(LoopCtx {
                 request,
@@ -501,6 +509,16 @@ impl JobActor {
     /// Fair-share weight from the request (≥ 1).
     pub fn tenant_weight(&self) -> u32 {
         self.tenant_weight
+    }
+
+    /// Tenant identity from the request (empty = no shared quota).
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Tenant in-flight quota from the request (0 = unlimited).
+    pub fn max_in_flight(&self) -> u32 {
+        self.max_in_flight
     }
 
     /// Attach the durability WAL: every subsequent `Pending` boundary

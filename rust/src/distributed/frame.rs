@@ -1,0 +1,117 @@
+//! Message framing for the distributed execution plane — the WAL's
+//! on-wire frame discipline ([`crate::durability::wal`]) applied to a
+//! byte stream between processes:
+//!
+//! ```text
+//! [len: u32 LE] [crc32(payload): u32 LE] [payload: len bytes]
+//! ```
+//!
+//! where the payload is the compact JSON of one protocol message
+//! ([`crate::distributed::proto::Message`]). Sharing the framing (and
+//! the JSON layer's bit-exact f64 encoding) means a `StoreDelta`'s
+//! records arrive at the leader byte-for-byte equivalent to what a local
+//! WAL append would have produced.
+//!
+//! Unlike WAL replay — where a torn tail is silently dropped — a corrupt
+//! frame on a live connection is an **error**: there is no valid way to
+//! resynchronize a byte stream after garbage, so transports surface
+//! `InvalidData` and the peer is treated as dead (its jobs requeue).
+
+use crate::durability::wal::crc32;
+
+/// Frame header size: length + checksum.
+pub const HEADER_BYTES: usize = 8;
+
+/// Upper bound on one message payload (matches the WAL's corruption
+/// guard: a garbage length prefix must not trigger a giant allocation).
+pub const MAX_FRAME_BYTES: u32 = 1 << 26;
+
+/// Frame a payload for the wire.
+pub fn encode(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((payload, consumed)))` — a complete, checksum-valid frame;
+///   the caller drains `consumed` bytes.
+/// * `Ok(None)` — `buf` holds only a partial frame; read more bytes.
+/// * `Err` — oversized length prefix or checksum mismatch: the stream is
+///   unrecoverable.
+pub fn decode(buf: &[u8]) -> std::io::Result<Option<(Vec<u8>, usize)>> {
+    if buf.len() < HEADER_BYTES {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let crc = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds maximum"),
+        ));
+    }
+    let end = HEADER_BYTES + len as usize;
+    if buf.len() < end {
+        return Ok(None);
+    }
+    let payload = &buf[HEADER_BYTES..end];
+    if crc32(payload) != crc {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame checksum mismatch",
+        ));
+    }
+    Ok(Some((payload.to_vec(), end)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let payload = br#"{"op":"heartbeat","t":0.1}"#;
+        let framed = encode(payload);
+        assert_eq!(framed.len(), HEADER_BYTES + payload.len());
+        let (back, consumed) = decode(&framed).unwrap().unwrap();
+        assert_eq!(back, payload);
+        assert_eq!(consumed, framed.len());
+        // empty payload frames are legal
+        let (empty, n) = decode(&encode(b"")).unwrap().unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(n, HEADER_BYTES);
+    }
+
+    #[test]
+    fn partial_frames_ask_for_more() {
+        let framed = encode(b"hello world");
+        for cut in 0..framed.len() {
+            assert!(decode(&framed[..cut]).unwrap().is_none(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_in_sequence() {
+        let mut stream = encode(b"first");
+        stream.extend_from_slice(&encode(b"second"));
+        let (a, n) = decode(&stream).unwrap().unwrap();
+        assert_eq!(a, b"first");
+        let (b, m) = decode(&stream[n..]).unwrap().unwrap();
+        assert_eq!(b, b"second");
+        assert_eq!(n + m, stream.len());
+    }
+
+    #[test]
+    fn corruption_is_an_error_not_a_drop() {
+        let mut framed = encode(b"payload-bytes");
+        framed[HEADER_BYTES + 3] ^= 0xFF;
+        assert!(decode(&framed).is_err());
+        let mut oversized = encode(b"x");
+        oversized[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&oversized).is_err());
+    }
+}

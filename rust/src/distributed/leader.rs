@@ -1,0 +1,798 @@
+//! Leader-side remote worker pool: the distributed counterpart of the
+//! in-process [`crate::scheduler::Scheduler`].
+//!
+//! A [`RemoteWorkerPool`] exposes the same dispatch surface the
+//! scheduler gives the API layer (`register` / `activate` / `stop` /
+//! `wait` / `try_outcome` / `poll_count` / `running_jobs`), but instead
+//! of polling actors on pool threads it drives one **driver thread per
+//! worker connection**, each draining a per-worker virtual-time event
+//! heap keyed exactly like the scheduler's (`(due ÷ tenant_weight,
+//! seq)`) and speaking the [`super::proto`] protocol:
+//!
+//! ```text
+//! pop job → [Assign once] → [Stop if requested] → PollRequest
+//!        ← StoreDelta (applied to the leader store/metrics in order)
+//!        ← PollResult (Pending → requeue · Complete → publish)
+//! ```
+//!
+//! Deltas are applied through the leader's ordinary `store.put` /
+//! `metrics.emit` paths — versions are recomputed *at the leader*, so
+//! final store contents (values **and** versions) are bit-identical to
+//! the same jobs run on the in-process pool, and when a durability WAL
+//! is attached every applied record is logged and group-committed per
+//! slice just like a local poll slice would be.
+//!
+//! **Leases.** A worker renews its lease with every message (heartbeats
+//! while idle). A worker that stays silent past the lease — or whose
+//! link errors — is declared dead: its unfinished jobs' partial leader
+//! records are reset (the PR 3 recovery machinery, exercised live),
+//! their `warm_start`/`tuning_jobs` seeds re-persisted, and the jobs
+//! requeued from scratch on the least-loaded live worker. Deterministic
+//! replay makes the rerun finish with exactly the records of an
+//! uninterrupted run. With no live workers left, jobs fail loudly
+//! (outcome `Failed`, store record `Failed`) instead of hanging.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::TuningJobRequest;
+use crate::coordinator::TuningJobOutcome;
+use crate::durability::wal::{Wal, WalRecord};
+use crate::metrics::MetricsService;
+use crate::platform::PlatformConfig;
+use crate::scheduler::{QueueEntry, TenantQuotas};
+use crate::store::MetadataStore;
+use crate::strategies::Observation;
+use crate::workflow::ExecutionStatus;
+
+use super::proto::{Message, PollReply};
+use super::transport::Transport;
+
+/// Knobs for the remote pool.
+#[derive(Clone, Debug)]
+pub struct RemoteConfig {
+    /// Max state-machine steps per remote poll slice (the scheduler's
+    /// `batch_steps`, shipped in every `PollRequest`).
+    pub batch_steps: usize,
+    /// Worker lease: *idle* silence longer than this declares the
+    /// worker dead and requeues its jobs. Workers heartbeat at a small
+    /// fraction of the leader's lease (`DEFAULT_HEARTBEAT`).
+    pub lease: Duration,
+    /// Per-slice compute budget: how long a dispatched `PollRequest`
+    /// may go unanswered before the worker is declared dead. Workers
+    /// are single-threaded and cannot heartbeat mid-poll, so this must
+    /// comfortably exceed the slowest slice (a large BO refit can take
+    /// seconds) — it is a hang detector, not a latency bound. Link
+    /// errors are still detected immediately.
+    pub poll_timeout: Duration,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            batch_steps: 256,
+            lease: Duration::from_secs(5),
+            poll_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Everything the leader needs to (re)create one remote job: the
+/// validated request, the platform configuration and the pre-resolved
+/// warm-start observations. Kept for the job's lifetime so a worker
+/// death can re-dispatch from scratch.
+pub struct RemoteJobSpec {
+    /// The accepted tuning-job request.
+    pub request: TuningJobRequest,
+    /// Leader's platform configuration (shipped to the worker).
+    pub platform: PlatformConfig,
+    /// Warm-start transfer observations resolved at create time.
+    pub transfer: Vec<Observation>,
+}
+
+#[derive(Default)]
+struct SlotState {
+    outcome: Option<TuningJobOutcome>,
+}
+
+struct RemoteSlot {
+    spec: RemoteJobSpec,
+    weight: f64,
+    quota: Option<(String, usize)>,
+    state: Mutex<SlotState>,
+    done_cv: Condvar,
+    stop: AtomicBool,
+    /// Stop forwarded to the current worker incarnation.
+    stop_sent: AtomicBool,
+    /// Index of the worker lane hosting this job (usize::MAX = none).
+    lane: AtomicUsize,
+    /// Assign shipped to the current lane incarnation.
+    started: AtomicBool,
+    polls: AtomicU64,
+}
+
+const NO_LANE: usize = usize::MAX;
+
+struct WorkerLane {
+    heap: Mutex<BinaryHeap<Reverse<QueueEntry>>>,
+    alive: AtomicBool,
+    /// Unfinished jobs assigned here (least-loaded placement heuristic).
+    load: AtomicUsize,
+}
+
+struct LeaderInner {
+    store: Arc<MetadataStore>,
+    metrics: Arc<MetricsService>,
+    wal: Option<Arc<Wal>>,
+    batch_steps: usize,
+    lease: Duration,
+    poll_timeout: Duration,
+    jobs: Mutex<HashMap<String, Arc<RemoteSlot>>>,
+    lanes: Vec<WorkerLane>,
+    live: AtomicUsize,
+    running: AtomicUsize,
+    shutdown: AtomicBool,
+    seq: AtomicU64,
+    quotas: TenantQuotas,
+    /// Group commits that failed even after a retry (mirrors
+    /// `Scheduler::wal_commit_errors` for the remote plane).
+    wal_commit_errors: AtomicU64,
+    /// Invoked after every successful WAL group commit (the durable
+    /// service's auto-checkpoint trigger — same hook as the scheduler's,
+    /// so the WAL stays bounded no matter which plane commits).
+    post_commit: std::sync::OnceLock<Arc<dyn Fn() + Send + Sync>>,
+    /// Serializes placement decisions: activation, death repair and
+    /// quota-release routing, so concurrent worker deaths cannot strand
+    /// or duplicate a job's single heap entry.
+    route: Mutex<()>,
+}
+
+/// The leader-side remote execution plane.
+pub struct RemoteWorkerPool {
+    inner: Arc<LeaderInner>,
+    drivers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl RemoteWorkerPool {
+    /// Start one driver thread per connected worker transport. Deltas
+    /// apply into `store`/`metrics`; when `wal` is given, every applied
+    /// record is logged and group-committed per slice.
+    pub fn new(
+        transports: Vec<Box<dyn Transport>>,
+        store: Arc<MetadataStore>,
+        metrics: Arc<MetricsService>,
+        wal: Option<Arc<Wal>>,
+        config: RemoteConfig,
+    ) -> RemoteWorkerPool {
+        let lanes = (0..transports.len())
+            .map(|_| WorkerLane {
+                heap: Mutex::new(BinaryHeap::new()),
+                alive: AtomicBool::new(true),
+                load: AtomicUsize::new(0),
+            })
+            .collect();
+        let inner = Arc::new(LeaderInner {
+            store,
+            metrics,
+            wal,
+            batch_steps: config.batch_steps.max(1),
+            lease: config.lease,
+            poll_timeout: config.poll_timeout.max(config.lease),
+            jobs: Mutex::new(HashMap::new()),
+            lanes,
+            live: AtomicUsize::new(transports.len()),
+            running: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            quotas: TenantQuotas::new(),
+            wal_commit_errors: AtomicU64::new(0),
+            post_commit: std::sync::OnceLock::new(),
+            route: Mutex::new(()),
+        });
+        let drivers = transports
+            .into_iter()
+            .enumerate()
+            .map(|(idx, transport)| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("amt-lead-{idx}"))
+                    .spawn(move || driver_loop(&inner, idx, transport))
+                    .expect("failed to spawn leader driver")
+            })
+            .collect();
+        RemoteWorkerPool { inner, drivers: Mutex::new(drivers) }
+    }
+
+    /// Connected worker transports this pool was built over.
+    pub fn worker_count(&self) -> usize {
+        self.inner.lanes.len()
+    }
+
+    /// Workers whose lease is still good.
+    pub fn live_workers(&self) -> usize {
+        self.inner.live.load(Ordering::Relaxed)
+    }
+
+    /// Jobs registered and not yet finished.
+    pub fn running_jobs(&self) -> usize {
+        self.inner.running.load(Ordering::Relaxed)
+    }
+
+    /// True if a job with this name was ever registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.jobs.lock().unwrap().contains_key(name)
+    }
+
+    /// Poll slices dispatched for the named job (`None` for unknown).
+    pub fn poll_count(&self, name: &str) -> Option<u64> {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() }?;
+        Some(slot.polls.load(Ordering::Relaxed))
+    }
+
+    /// Highest concurrent slice count the named tenant ever reached.
+    pub fn tenant_high_water(&self, tenant: &str) -> usize {
+        self.inner.quotas.high_water(tenant)
+    }
+
+    /// WAL group commits that failed even after a retry (records stay
+    /// buffered in the WAL and retry at later slices — alert on this,
+    /// exactly like `Scheduler::wal_commit_errors`).
+    pub fn wal_commit_errors(&self) -> u64 {
+        self.inner.wal_commit_errors.load(Ordering::Relaxed)
+    }
+
+    /// Install a hook invoked after every successful WAL group commit
+    /// on this plane (at most once; later calls no-op). The durable API
+    /// layer installs the same auto-checkpoint trigger it gives the
+    /// scheduler, so `DurabilityOptions::auto_checkpoint_bytes` bounds
+    /// the log regardless of which plane does the committing.
+    pub fn set_post_commit(&self, hook: Arc<dyn Fn() + Send + Sync>) {
+        let _ = self.inner.post_commit.set(hook);
+    }
+
+    /// Reserve a job name without queueing it (the API layer persists
+    /// the accepted request in between, exactly like the in-process
+    /// scheduler's register/activate split). False if taken.
+    pub fn register(&self, spec: RemoteJobSpec) -> bool {
+        let name = spec.request.name.clone();
+        let weight = spec.request.tenant_weight.max(1) as f64;
+        let quota = if spec.request.tenant.is_empty() {
+            None
+        } else {
+            Some((spec.request.tenant.clone(), spec.request.max_in_flight as usize))
+        };
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        if jobs.contains_key(&name) {
+            return false;
+        }
+        jobs.insert(
+            name,
+            Arc::new(RemoteSlot {
+                spec,
+                weight,
+                quota,
+                state: Mutex::new(SlotState::default()),
+                done_cv: Condvar::new(),
+                stop: AtomicBool::new(false),
+                stop_sent: AtomicBool::new(false),
+                lane: AtomicUsize::new(NO_LANE),
+                started: AtomicBool::new(false),
+                polls: AtomicU64::new(0),
+            }),
+        );
+        drop(jobs);
+        self.inner.running.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Place a registered job on the least-loaded live worker and queue
+    /// it. Must be called exactly once per registered job.
+    pub fn activate(&self, name: &str) {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() };
+        let Some(slot) = slot else { return };
+        let _route = self.inner.route.lock().unwrap();
+        match pick_lane(&self.inner) {
+            Some(idx) => {
+                slot.lane.store(idx, Ordering::SeqCst);
+                self.inner.lanes[idx].load.fetch_add(1, Ordering::Relaxed);
+                push_lane_entry(&self.inner, idx, 0.0, slot.weight, name.to_string());
+            }
+            None => mark_failed(&self.inner, &slot, name, "no live remote workers"),
+        }
+    }
+
+    /// Signal a job to stop at its next scheduling point.
+    pub fn stop(&self, name: &str) -> bool {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() };
+        match slot {
+            Some(slot) => {
+                slot.stop.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Block until the named job finishes; `None` for unknown names.
+    pub fn wait(&self, name: &str) -> Option<TuningJobOutcome> {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() }?;
+        let mut state = slot.state.lock().unwrap();
+        while state.outcome.is_none() {
+            state = slot.done_cv.wait(state).unwrap();
+        }
+        state.outcome.clone()
+    }
+
+    /// Non-blocking probe for a finished outcome.
+    pub fn try_outcome(&self, name: &str) -> Option<TuningJobOutcome> {
+        let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() }?;
+        let state = slot.state.lock().unwrap();
+        state.outcome.clone()
+    }
+}
+
+impl Drop for RemoteWorkerPool {
+    fn drop(&mut self) {
+        // drivers poll the shutdown flag between receive slices
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        let drivers = std::mem::take(&mut *self.drivers.lock().unwrap());
+        for d in drivers {
+            let _ = d.join();
+        }
+    }
+}
+
+/// Least-loaded live lane, if any.
+fn pick_lane(inner: &LeaderInner) -> Option<usize> {
+    inner
+        .lanes
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.alive.load(Ordering::SeqCst))
+        .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
+        .map(|(i, _)| i)
+}
+
+/// Queue `(due / weight, seq, name)` on a lane's heap (same key as the
+/// in-process scheduler's `push_entry`).
+fn push_lane_entry(inner: &LeaderInner, idx: usize, due: f64, weight: f64, name: String) {
+    let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
+    let due = due / weight.max(1.0);
+    inner.lanes[idx].heap.lock().unwrap().push(Reverse(QueueEntry { due, seq, name }));
+}
+
+/// Re-push an already-discounted entry (quota release, death repair).
+fn repush_entry(inner: &LeaderInner, idx: usize, entry: QueueEntry) {
+    inner.lanes[idx].heap.lock().unwrap().push(Reverse(entry));
+}
+
+/// Apply one delta through the leader's ordinary mutation paths:
+/// versions are recomputed here, WAL records (when attached) are
+/// appended inside the store/metrics critical sections, and worker
+/// checkpoints are re-logged verbatim — the "existing durability commit
+/// path" of DESIGN.md §11.
+fn apply_delta(inner: &LeaderInner, records: &[(u64, WalRecord)]) {
+    for (_, rec) in records {
+        match rec {
+            WalRecord::Put { table, key, value, .. } => {
+                inner.store.put(table, key, value.clone());
+            }
+            WalRecord::Delete { table, key } => {
+                inner.store.delete(table, key);
+            }
+            WalRecord::Emit { stream, time, value } => {
+                inner.metrics.emit(stream, *time, *value);
+            }
+            WalRecord::RemoveStreams { prefix } => {
+                inner.metrics.remove_streams(prefix);
+            }
+            WalRecord::Checkpoint { .. } => {
+                if let Some(w) = &inner.wal {
+                    w.append(rec);
+                }
+            }
+        }
+    }
+}
+
+/// Group-commit the attached WAL, mirroring the in-process scheduler's
+/// semantics exactly: retry a failed commit once, count persistent
+/// failures (records stay buffered and retry at later slices), and run
+/// the post-commit hook (auto-checkpoint) after success.
+fn commit_wal(inner: &LeaderInner) {
+    if let Some(w) = &inner.wal {
+        if w.commit().is_err() && w.commit().is_err() {
+            inner.wal_commit_errors.fetch_add(1, Ordering::Relaxed);
+        } else if let Some(hook) = inner.post_commit.get() {
+            (**hook)();
+        }
+    }
+}
+
+/// Publish a terminal outcome and wake waiters (idempotent: a second
+/// terminal verdict for the same job changes nothing).
+fn publish(inner: &LeaderInner, slot: &RemoteSlot, outcome: TuningJobOutcome) {
+    let mut state = slot.state.lock().unwrap();
+    if state.outcome.is_some() {
+        return;
+    }
+    let lane = slot.lane.swap(NO_LANE, Ordering::SeqCst);
+    if lane != NO_LANE {
+        inner.lanes[lane].load.fetch_sub(1, Ordering::Relaxed);
+    }
+    inner.running.fetch_sub(1, Ordering::Relaxed);
+    state.outcome = Some(outcome);
+    drop(state);
+    slot.done_cv.notify_all();
+}
+
+/// Fail a job loudly: `Failed` store record (commit included) plus a
+/// `Failed` outcome for waiters.
+fn mark_failed(inner: &LeaderInner, slot: &RemoteSlot, name: &str, reason: &str) {
+    crate::api::persist_job_failed(&inner.store, name, slot.spec.request.to_json(), reason);
+    commit_wal(inner);
+    publish(
+        inner,
+        slot,
+        TuningJobOutcome {
+            name: name.to_string(),
+            evaluations: Vec::new(),
+            best: None,
+            total_seconds: 0.0,
+            total_billable_seconds: 0.0,
+            status: ExecutionStatus::Failed(reason.to_string()),
+            retries: 0,
+        },
+    );
+}
+
+/// Reset a job's partial leader-side records and re-persist its seeds,
+/// so its deterministic rerun on a new worker starts from exactly the
+/// state the original create left — the same shared helpers the API
+/// layer's recovery and `create_prepared` use, so the record shapes
+/// cannot drift apart.
+fn reset_and_reseed(inner: &LeaderInner, slot: &RemoteSlot, name: &str) {
+    crate::api::reset_job_records(&inner.store, &inner.metrics, name);
+    let transfer_json = if slot.spec.transfer.is_empty() {
+        None
+    } else {
+        Some(crate::api::observations_to_json(&slot.spec.transfer))
+    };
+    crate::api::persist_job_seeds(&inner.store, &slot.spec.request, transfer_json);
+    commit_wal(inner);
+}
+
+/// Declare worker `idx` dead and requeue its unfinished jobs.
+///
+/// `held` is the entry the dying driver had in flight (if any); jobs
+/// parked in tenant quota queues are detected by elimination (assigned
+/// to this lane, unfinished, no entry in the drained heap or in hand)
+/// and only re-seeded — their parked entry re-routes to the new lane at
+/// release time. The whole repair runs under the route lock, so a
+/// concurrent death of another worker sees a consistent picture.
+fn on_worker_death(inner: &LeaderInner, idx: usize, held: Option<QueueEntry>) {
+    let _route = inner.route.lock().unwrap();
+    let lane = &inner.lanes[idx];
+    if !lane.alive.swap(false, Ordering::SeqCst) {
+        return;
+    }
+    inner.live.fetch_sub(1, Ordering::SeqCst);
+    let mut entries: Vec<QueueEntry> = {
+        let mut heap = lane.heap.lock().unwrap();
+        std::mem::take(&mut *heap).into_iter().map(|Reverse(e)| e).collect()
+    };
+    entries.extend(held);
+    let entry_names: HashSet<String> = entries.iter().map(|e| e.name.clone()).collect();
+
+    let slots: Vec<(String, Arc<RemoteSlot>)> = {
+        let jobs = inner.jobs.lock().unwrap();
+        jobs.iter().map(|(n, s)| (n.clone(), Arc::clone(s))).collect()
+    };
+    for (name, slot) in slots {
+        if slot.lane.load(Ordering::SeqCst) != idx {
+            continue;
+        }
+        if slot.state.lock().unwrap().outcome.is_some() {
+            continue;
+        }
+        // reset + reseed, then move the job to a live lane
+        reset_and_reseed(inner, &slot, &name);
+        slot.started.store(false, Ordering::SeqCst);
+        slot.stop_sent.store(false, Ordering::SeqCst);
+        match pick_lane(inner) {
+            Some(new_idx) => {
+                lane.load.fetch_sub(1, Ordering::Relaxed);
+                inner.lanes[new_idx].load.fetch_add(1, Ordering::Relaxed);
+                slot.lane.store(new_idx, Ordering::SeqCst);
+                if !entry_names.contains(&name) {
+                    // parked in a quota queue: the release path will
+                    // route its entry to the new lane
+                    continue;
+                }
+                let entry = entries
+                    .iter()
+                    .position(|e| e.name == name)
+                    .map(|i| entries.swap_remove(i))
+                    .expect("entry present");
+                repush_entry(inner, new_idx, entry);
+            }
+            None => mark_failed(inner, &slot, &name, "remote worker died with no replacement"),
+        }
+    }
+}
+
+/// Finish a quota-accounted slice and route any released parked entry
+/// to its job's *current* lane (which may have changed under a death
+/// repair since it was parked).
+fn release_quota(inner: &LeaderInner, slot: &RemoteSlot) {
+    let Some((tenant, _)) = &slot.quota else { return };
+    let Some(d) = inner.quotas.release(tenant) else { return };
+    let _route = inner.route.lock().unwrap();
+    let target = {
+        let jobs = inner.jobs.lock().unwrap();
+        jobs.get(&d.name).map(|s| s.lane.load(Ordering::SeqCst))
+    };
+    match target {
+        Some(idx) if idx != NO_LANE && inner.lanes[idx].alive.load(Ordering::SeqCst) => {
+            repush_entry(inner, idx, QueueEntry { due: d.due, seq: d.seq, name: d.name });
+        }
+        _ => {} // job finished or failed meanwhile: entry is obsolete
+    }
+}
+
+/// One driver: owns the transport to worker `idx` and drains that
+/// worker's heap.
+fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Transport>) {
+    // short receive slices keep shutdown and death detection responsive
+    let slice = Duration::from_millis(20).min(inner.lease);
+    let mut last_seen = Instant::now();
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            let _ = transport.send(&Message::Drain);
+            let _ = transport.recv(Duration::from_millis(200));
+            return;
+        }
+        let popped = { inner.lanes[idx].heap.lock().unwrap().pop() };
+        let Some(Reverse(entry)) = popped else {
+            // idle: pump the link (heartbeats renew the lease)
+            match transport.recv(slice) {
+                Ok(Some(_)) => last_seen = Instant::now(),
+                Ok(None) => {
+                    if last_seen.elapsed() > inner.lease {
+                        on_worker_death(inner, idx, None);
+                        return;
+                    }
+                }
+                Err(_) => {
+                    on_worker_death(inner, idx, None);
+                    return;
+                }
+            }
+            continue;
+        };
+
+        let slot = { inner.jobs.lock().unwrap().get(&entry.name).cloned() };
+        let Some(slot) = slot else { continue };
+        if slot.state.lock().unwrap().outcome.is_some() {
+            continue; // already terminal: the entry is obsolete
+        }
+        let current_lane = slot.lane.load(Ordering::SeqCst);
+        if current_lane != idx {
+            // the job moved under a repair while this entry was in
+            // flight between heaps: hand it to the owning lane
+            if current_lane != NO_LANE {
+                repush_entry(inner, current_lane, entry);
+            }
+            continue;
+        }
+
+        // tenant in-flight quota gate (shared semantics with the
+        // in-process scheduler)
+        let mut quota_held = false;
+        if let Some((tenant, limit)) = &slot.quota {
+            let admitted = inner.quotas.acquire(
+                tenant,
+                *limit,
+                QueueEntry { due: entry.due, seq: entry.seq, name: entry.name.clone() },
+            );
+            if admitted.is_none() {
+                continue;
+            }
+            quota_held = true;
+        }
+
+        // drive one slice: Assign (first time on this lane) → Stop (if
+        // requested) → PollRequest → read delta(s) → PollResult
+        let name = entry.name.clone();
+        let result: std::io::Result<()> = (|| {
+            if !slot.started.swap(true, Ordering::SeqCst) {
+                transport.send(&Message::Assign {
+                    request: slot.spec.request.clone(),
+                    platform: slot.spec.platform.clone(),
+                    transfer: slot.spec.transfer.clone(),
+                })?;
+            }
+            if slot.stop.load(Ordering::Relaxed)
+                && !slot.stop_sent.swap(true, Ordering::SeqCst)
+            {
+                transport.send(&Message::Stop { job: name.clone() })?;
+            }
+            slot.polls.fetch_add(1, Ordering::Relaxed);
+            transport.send(&Message::PollRequest {
+                job: name.clone(),
+                max_steps: inner.batch_steps,
+            })
+        })();
+        if result.is_err() {
+            if quota_held {
+                release_quota(inner, &slot);
+            }
+            on_worker_death(inner, idx, Some(entry));
+            return;
+        }
+
+        // await the slice's verdict, applying deltas as they arrive
+        let mut sent_at = Instant::now();
+        let reply = loop {
+            if inner.shutdown.load(Ordering::SeqCst) {
+                if quota_held {
+                    release_quota(inner, &slot);
+                }
+                let _ = transport.send(&Message::Drain);
+                return;
+            }
+            match transport.recv(slice) {
+                Ok(Some(Message::StoreDelta { records, .. })) => {
+                    last_seen = Instant::now();
+                    sent_at = last_seen;
+                    apply_delta(inner, &records);
+                }
+                Ok(Some(Message::PollResult { job, reply })) => {
+                    last_seen = Instant::now();
+                    if job == name {
+                        break Ok(reply);
+                    }
+                    // out-of-band result (duplicate rejection): ignore
+                }
+                Ok(Some(_)) => last_seen = Instant::now(),
+                Ok(None) => {
+                    // a worker mid-poll cannot heartbeat (single
+                    // threaded), so the in-flight bound is the compute
+                    // budget, not the idle lease
+                    if sent_at.elapsed() > inner.poll_timeout {
+                        break Err(());
+                    }
+                }
+                Err(_) => break Err(()),
+            }
+        };
+        match reply {
+            Ok(PollReply::Pending { due }) => {
+                push_lane_entry(inner, idx, due, slot.weight, name);
+                if quota_held {
+                    release_quota(inner, &slot);
+                }
+                commit_wal(inner);
+            }
+            Ok(PollReply::Complete(outcome)) => {
+                if quota_held {
+                    release_quota(inner, &slot);
+                }
+                // durability before acknowledgment, like the scheduler
+                commit_wal(inner);
+                publish(inner, &slot, *outcome);
+            }
+            Ok(PollReply::Rejected { reason }) => {
+                if quota_held {
+                    release_quota(inner, &slot);
+                }
+                mark_failed(inner, &slot, &name, &format!("worker rejected job: {reason}"));
+            }
+            Err(()) => {
+                if quota_held {
+                    release_quota(inner, &slot);
+                }
+                on_worker_death(inner, idx, Some(entry));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::worker::spawn_loopback_worker;
+
+    fn spec(name: &str, evals: u32, seed: u64) -> RemoteJobSpec {
+        RemoteJobSpec {
+            request: TuningJobRequest {
+                name: name.into(),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: evals,
+                max_parallel_jobs: 2,
+                seed,
+                ..Default::default()
+            },
+            platform: PlatformConfig::noiseless(),
+            transfer: Vec::new(),
+        }
+    }
+
+    fn pool(workers: usize) -> (RemoteWorkerPool, Vec<std::thread::JoinHandle<()>>) {
+        let mut transports = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..workers {
+            let (t, _fault, h) = spawn_loopback_worker(&format!("lead-{i}"));
+            transports.push(t);
+            handles.push(h);
+        }
+        let p = RemoteWorkerPool::new(
+            transports,
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            None,
+            RemoteConfig::default(),
+        );
+        (p, handles)
+    }
+
+    #[test]
+    fn jobs_complete_through_remote_workers() {
+        let (pool, handles) = pool(2);
+        for i in 0..6u64 {
+            assert!(pool.register(spec(&format!("r-{i}"), 3, i)));
+            pool.activate(&format!("r-{i}"));
+        }
+        assert!(!pool.register(spec("r-0", 3, 0)), "duplicate names rejected");
+        for i in 0..6u64 {
+            let out = pool.wait(&format!("r-{i}")).unwrap();
+            assert_eq!(out.evaluations.len(), 3);
+            assert_eq!(out.status, ExecutionStatus::Succeeded);
+        }
+        assert_eq!(pool.running_jobs(), 0);
+        assert_eq!(pool.worker_count(), 2);
+        assert_eq!(pool.live_workers(), 2);
+        assert!(pool.poll_count("r-0").unwrap() > 0);
+        assert!(pool.poll_count("ghost").is_none());
+        assert!(pool.wait("ghost").is_none());
+        drop(pool);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stop_reaches_remote_job() {
+        let (pool, handles) = pool(1);
+        assert!(pool.register(spec("stoppable", 10_000, 3)));
+        pool.activate("stoppable");
+        assert!(pool.stop("stoppable"));
+        assert!(!pool.stop("ghost"));
+        let out = pool.wait("stoppable").unwrap();
+        assert!(out.evaluations.len() < 10_000);
+        drop(pool);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_objective_job_fails_loudly() {
+        let (pool, handles) = pool(1);
+        let mut s = spec("bad-objective", 3, 1);
+        s.request.objective = "no-such-workload".into();
+        assert!(pool.register(s));
+        pool.activate("bad-objective");
+        let out = pool.wait("bad-objective").unwrap();
+        assert!(matches!(out.status, ExecutionStatus::Failed(_)));
+        drop(pool);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

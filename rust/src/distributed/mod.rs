@@ -1,0 +1,34 @@
+//! Distributed execution plane (DESIGN.md §11): the tuning control
+//! plane and the training workloads on **separate fleets**, the way the
+//! paper's AMT actually deploys (§4's managed service: evaluations fan
+//! out across machines while the scheduler stays put).
+//!
+//! Layering, bottom to top:
+//!
+//! * [`frame`] — length+crc32 message framing, the WAL's on-disk frame
+//!   discipline applied to a byte stream;
+//! * [`proto`] — the leader⇄worker message vocabulary; `StoreDelta`s
+//!   carry literal [`crate::durability::wal::WalRecord`]s (the WAL
+//!   record format is the wire format, f64s bit-exact);
+//! * [`transport`] — one trait, two carriers: an in-process loopback
+//!   (deterministic tests, fault injection) and TCP/Unix sockets
+//!   (real multi-process deployments);
+//! * [`worker`] — hosts [`crate::coordinator::JobActor`]s next to
+//!   job-local stores whose mutations are captured via a never-committed
+//!   WAL and shipped back as deltas;
+//! * [`leader`] — the [`leader::RemoteWorkerPool`]: per-worker
+//!   virtual-time heaps with the scheduler's `(due ÷ weight, seq)` key,
+//!   lease-based liveness, delta application through the leader's store
+//!   (and durability WAL, when attached), and requeue-from-reset when a
+//!   worker dies.
+//!
+//! Single-process behavior is untouched: with the loopback transport a
+//! job's trajectory, final store contents and item versions are
+//! bit-identical to the in-process scheduler (property-tested in
+//! `rust/tests/distributed_integration.rs`).
+
+pub mod frame;
+pub mod leader;
+pub mod proto;
+pub mod transport;
+pub mod worker;

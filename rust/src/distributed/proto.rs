@@ -1,0 +1,497 @@
+//! Wire protocol of the distributed execution plane (DESIGN.md §11).
+//!
+//! Every message is one [`crate::distributed::frame`] frame whose payload
+//! is the compact JSON of a [`Message`]. The vocabulary is deliberately
+//! small — the leader drives, the worker answers:
+//!
+//! * leader → worker: [`Message::Assign`] (host this job),
+//!   [`Message::PollRequest`] (run one bounded slice),
+//!   [`Message::Stop`] (flip the job's stop flag), [`Message::Drain`]
+//!   (finish up and end the session);
+//! * worker → leader: [`Message::Hello`] (identify on connect),
+//!   [`Message::StoreDelta`] (the slice's store/metrics mutations as WAL
+//!   records, in application order), [`Message::PollResult`] (the
+//!   slice's verdict), [`Message::Heartbeat`] (lease renewal while
+//!   idle), [`Message::DrainAck`].
+//!
+//! A `StoreDelta`'s records are literal [`WalRecord`]s — the durability
+//! engine's record format *is* the wire format, so every f64 crosses the
+//! process boundary bit-exactly and the leader can apply the delta
+//! through the same store/metrics paths an in-process job would have
+//! used. Ordering guarantee: a worker sends the delta *before* the
+//! `PollResult` it belongs to, and the leader applies deltas in receipt
+//! order, so per-key mutation order on the leader equals the worker's
+//! application order.
+
+use crate::config::TuningJobRequest;
+use crate::coordinator::{EvaluationRecord, TuningJobOutcome};
+use crate::durability::wal::WalRecord;
+use crate::json::Json;
+use crate::platform::{PlatformConfig, TrainingJobStatus};
+use crate::space::{config_from_json_typed, config_to_json_typed};
+use crate::strategies::Observation;
+use crate::workflow::ExecutionStatus;
+
+/// Verdict of one remote poll slice.
+#[derive(Debug)]
+pub enum PollReply {
+    /// Not terminal; `due` is the actor's virtual re-poll time (the
+    /// leader's heap key, exactly as [`crate::coordinator::ActorPoll`]).
+    Pending {
+        /// Virtual re-poll time.
+        due: f64,
+    },
+    /// Terminal: the finished outcome.
+    Complete(Box<TuningJobOutcome>),
+    /// The worker cannot run this job (unknown objective, never
+    /// assigned, …). Terminal from the leader's perspective.
+    Rejected {
+        /// Human-readable cause.
+        reason: String,
+    },
+}
+
+/// One protocol message.
+#[derive(Debug)]
+pub enum Message {
+    /// Worker self-identification, sent once on connect.
+    Hello {
+        /// Worker label (diagnostics only).
+        worker: String,
+    },
+    /// Host a tuning job: everything a worker needs to rebuild the
+    /// [`crate::coordinator::JobActor`] — the validated request, the
+    /// leader's platform configuration (identical simulated timelines)
+    /// and the pre-resolved warm-start observations (workers never read
+    /// the leader's store).
+    Assign {
+        /// The accepted tuning-job request.
+        request: TuningJobRequest,
+        /// Leader's platform configuration.
+        platform: PlatformConfig,
+        /// Warm-start transfer observations resolved at create time.
+        transfer: Vec<Observation>,
+    },
+    /// Run one bounded poll slice of an assigned job.
+    PollRequest {
+        /// Tuning-job name.
+        job: String,
+        /// Max state-machine steps for the slice.
+        max_steps: usize,
+    },
+    /// Flip an assigned job's stop flag (observed at its next
+    /// scheduling point, like the Stop API).
+    Stop {
+        /// Tuning-job name.
+        job: String,
+    },
+    /// The store/metrics mutations of one poll slice, as WAL records in
+    /// application order (`(lsn, record)`; LSNs are worker-local and
+    /// informational — the leader re-applies through its own store).
+    StoreDelta {
+        /// Tuning-job name the slice belonged to.
+        job: String,
+        /// Ordered mutation records.
+        records: Vec<(u64, WalRecord)>,
+    },
+    /// Verdict of a poll slice (sent after its `StoreDelta`).
+    PollResult {
+        /// Tuning-job name.
+        job: String,
+        /// Pending / Complete / Rejected.
+        reply: PollReply,
+    },
+    /// Lease renewal (idle worker).
+    Heartbeat,
+    /// Leader is done with this session: finish and acknowledge.
+    Drain,
+    /// Worker acknowledges a drain; the session ends.
+    DrainAck,
+}
+
+fn status_str(s: TrainingJobStatus) -> &'static str {
+    match s {
+        TrainingJobStatus::Provisioning => "Provisioning",
+        TrainingJobStatus::InProgress => "InProgress",
+        TrainingJobStatus::Completed => "Completed",
+        TrainingJobStatus::Failed => "Failed",
+        TrainingJobStatus::Stopped => "Stopped",
+    }
+}
+
+fn status_from_str(s: &str) -> Option<TrainingJobStatus> {
+    Some(match s {
+        "Provisioning" => TrainingJobStatus::Provisioning,
+        "InProgress" => TrainingJobStatus::InProgress,
+        "Completed" => TrainingJobStatus::Completed,
+        "Failed" => TrainingJobStatus::Failed,
+        "Stopped" => TrainingJobStatus::Stopped,
+        _ => return None,
+    })
+}
+
+fn exec_status_to_json(s: &ExecutionStatus) -> Json {
+    match s {
+        ExecutionStatus::Succeeded => Json::obj(vec![("kind", Json::Str("Succeeded".into()))]),
+        ExecutionStatus::Failed(reason) => Json::obj(vec![
+            ("kind", Json::Str("Failed".into())),
+            ("reason", Json::Str(reason.clone())),
+        ]),
+    }
+}
+
+fn exec_status_from_json(j: &Json) -> Option<ExecutionStatus> {
+    match j.get("kind")?.as_str()? {
+        "Succeeded" => Some(ExecutionStatus::Succeeded),
+        "Failed" => Some(ExecutionStatus::Failed(
+            j.get("reason").and_then(Json::as_str).unwrap_or("").to_string(),
+        )),
+        _ => None,
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(Json::Num).unwrap_or(Json::Null)
+}
+
+fn eval_to_json(e: &EvaluationRecord) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(e.training_job_name.clone())),
+        ("config", config_to_json_typed(&e.config)),
+        ("curve", Json::Arr(e.curve.iter().map(|&v| Json::Num(v)).collect())),
+        ("final_value", opt_num(e.final_value)),
+        ("status", Json::Str(status_str(e.status).into())),
+        ("stopped_early", Json::Bool(e.stopped_early)),
+        ("attempts", Json::Num(e.attempts as f64)),
+        ("submitted_at", Json::Num(e.submitted_at)),
+        ("ended_at", Json::Num(e.ended_at)),
+    ])
+}
+
+fn eval_from_json(j: &Json) -> Option<EvaluationRecord> {
+    Some(EvaluationRecord {
+        training_job_name: j.get("name")?.as_str()?.to_string(),
+        config: config_from_json_typed(j.get("config")?)?,
+        curve: j.get("curve")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<_>>()?,
+        final_value: j.get("final_value").and_then(Json::as_f64),
+        status: status_from_str(j.get("status")?.as_str()?)?,
+        stopped_early: j.get("stopped_early")?.as_bool()?,
+        attempts: j.get("attempts")?.as_i64()? as u32,
+        submitted_at: j.get("submitted_at")?.as_f64()?,
+        ended_at: j.get("ended_at")?.as_f64()?,
+    })
+}
+
+/// Wire JSON of a finished outcome (f64s round-trip bit-exactly; configs
+/// use the type-tagged encoding so `Value` variants survive the trip).
+pub fn outcome_to_json(o: &TuningJobOutcome) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(o.name.clone())),
+        ("evaluations", Json::Arr(o.evaluations.iter().map(eval_to_json).collect())),
+        (
+            "best",
+            match &o.best {
+                None => Json::Null,
+                Some((cfg, v)) => Json::obj(vec![
+                    ("config", config_to_json_typed(cfg)),
+                    ("value", Json::Num(*v)),
+                ]),
+            },
+        ),
+        ("total_seconds", Json::Num(o.total_seconds)),
+        ("total_billable_seconds", Json::Num(o.total_billable_seconds)),
+        ("status", exec_status_to_json(&o.status)),
+        ("retries", Json::Num(o.retries as f64)),
+    ])
+}
+
+/// Parse the wire JSON of a finished outcome.
+pub fn outcome_from_json(j: &Json) -> Option<TuningJobOutcome> {
+    let best = match j.get("best")? {
+        Json::Null => None,
+        b => Some((config_from_json_typed(b.get("config")?)?, b.get("value")?.as_f64()?)),
+    };
+    Some(TuningJobOutcome {
+        name: j.get("name")?.as_str()?.to_string(),
+        evaluations: j
+            .get("evaluations")?
+            .as_arr()?
+            .iter()
+            .map(eval_from_json)
+            .collect::<Option<_>>()?,
+        best,
+        total_seconds: j.get("total_seconds")?.as_f64()?,
+        total_billable_seconds: j.get("total_billable_seconds")?.as_f64()?,
+        status: exec_status_from_json(j.get("status")?)?,
+        retries: j.get("retries")?.as_i64()? as u32,
+    })
+}
+
+impl Message {
+    /// Wire JSON of the message.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Message::Hello { worker } => Json::obj(vec![
+                ("type", Json::Str("hello".into())),
+                ("worker", Json::Str(worker.clone())),
+            ]),
+            Message::Assign { request, platform, transfer } => Json::obj(vec![
+                ("type", Json::Str("assign".into())),
+                ("request", request.to_json()),
+                ("platform", platform.to_json()),
+                ("transfer", crate::api::observations_to_json(transfer)),
+            ]),
+            Message::PollRequest { job, max_steps } => Json::obj(vec![
+                ("type", Json::Str("poll".into())),
+                ("job", Json::Str(job.clone())),
+                ("max_steps", Json::Num(*max_steps as f64)),
+            ]),
+            Message::Stop { job } => Json::obj(vec![
+                ("type", Json::Str("stop".into())),
+                ("job", Json::Str(job.clone())),
+            ]),
+            Message::StoreDelta { job, records } => Json::obj(vec![
+                ("type", Json::Str("delta".into())),
+                ("job", Json::Str(job.clone())),
+                (
+                    "records",
+                    Json::Arr(records.iter().map(|(lsn, r)| r.to_json(*lsn)).collect()),
+                ),
+            ]),
+            Message::PollResult { job, reply } => Json::obj(vec![
+                ("type", Json::Str("result".into())),
+                ("job", Json::Str(job.clone())),
+                (
+                    "reply",
+                    match reply {
+                        PollReply::Pending { due } => Json::obj(vec![
+                            ("kind", Json::Str("pending".into())),
+                            ("due", Json::Num(*due)),
+                        ]),
+                        PollReply::Complete(outcome) => Json::obj(vec![
+                            ("kind", Json::Str("complete".into())),
+                            ("outcome", outcome_to_json(outcome)),
+                        ]),
+                        PollReply::Rejected { reason } => Json::obj(vec![
+                            ("kind", Json::Str("rejected".into())),
+                            ("reason", Json::Str(reason.clone())),
+                        ]),
+                    },
+                ),
+            ]),
+            Message::Heartbeat => Json::obj(vec![("type", Json::Str("heartbeat".into()))]),
+            Message::Drain => Json::obj(vec![("type", Json::Str("drain".into()))]),
+            Message::DrainAck => Json::obj(vec![("type", Json::Str("drain_ack".into()))]),
+        }
+    }
+
+    /// Parse a wire JSON message.
+    pub fn from_json(j: &Json) -> Option<Message> {
+        Some(match j.get("type")?.as_str()? {
+            "hello" => Message::Hello { worker: j.get("worker")?.as_str()?.to_string() },
+            "assign" => Message::Assign {
+                request: TuningJobRequest::from_json(j.get("request")?)?,
+                platform: PlatformConfig::from_json(j.get("platform")?),
+                transfer: crate::api::observations_from_json(j.get("transfer")?)?,
+            },
+            "poll" => Message::PollRequest {
+                job: j.get("job")?.as_str()?.to_string(),
+                max_steps: j.get("max_steps")?.as_i64()? as usize,
+            },
+            "stop" => Message::Stop { job: j.get("job")?.as_str()?.to_string() },
+            "delta" => Message::StoreDelta {
+                job: j.get("job")?.as_str()?.to_string(),
+                records: j
+                    .get("records")?
+                    .as_arr()?
+                    .iter()
+                    .map(WalRecord::from_json)
+                    .collect::<Option<_>>()?,
+            },
+            "result" => {
+                let reply = j.get("reply")?;
+                Message::PollResult {
+                    job: j.get("job")?.as_str()?.to_string(),
+                    reply: match reply.get("kind")?.as_str()? {
+                        "pending" => PollReply::Pending { due: reply.get("due")?.as_f64()? },
+                        "complete" => PollReply::Complete(Box::new(outcome_from_json(
+                            reply.get("outcome")?,
+                        )?)),
+                        "rejected" => PollReply::Rejected {
+                            reason: reply.get("reason")?.as_str()?.to_string(),
+                        },
+                        _ => return None,
+                    },
+                }
+            }
+            "heartbeat" => Message::Heartbeat,
+            "drain" => Message::Drain,
+            "drain_ack" => Message::DrainAck,
+            _ => return None,
+        })
+    }
+
+    /// Frame the message for the wire (compact JSON inside one
+    /// length+crc frame).
+    pub fn encode(&self) -> Vec<u8> {
+        super::frame::encode(self.to_json().to_string().as_bytes())
+    }
+
+    /// Parse one frame payload back into a message.
+    pub fn decode(payload: &[u8]) -> std::io::Result<Message> {
+        let text = std::str::from_utf8(payload).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "message not utf-8")
+        })?;
+        let parsed = crate::json::parse(text).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("message json: {e}"))
+        })?;
+        Message::from_json(&parsed).ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "unknown message shape")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Config, Value};
+
+    fn roundtrip(msg: &Message) -> Message {
+        let framed = msg.encode();
+        let (payload, consumed) = super::super::frame::decode(&framed).unwrap().unwrap();
+        assert_eq!(consumed, framed.len());
+        Message::decode(&payload).unwrap()
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        assert!(matches!(roundtrip(&Message::Heartbeat), Message::Heartbeat));
+        assert!(matches!(roundtrip(&Message::Drain), Message::Drain));
+        assert!(matches!(roundtrip(&Message::DrainAck), Message::DrainAck));
+        assert!(matches!(
+            roundtrip(&Message::Hello { worker: "w0".into() }),
+            Message::Hello { worker } if worker == "w0"
+        ));
+        assert!(matches!(
+            roundtrip(&Message::Stop { job: "j".into() }),
+            Message::Stop { job } if job == "j"
+        ));
+        let m = roundtrip(&Message::PollRequest { job: "j".into(), max_steps: 256 });
+        assert!(matches!(m, Message::PollRequest { job, max_steps: 256 } if job == "j"));
+    }
+
+    #[test]
+    fn assign_roundtrips_request_platform_and_transfer() {
+        let mut config = Config::new();
+        config.insert("eta".into(), Value::Float(0.1));
+        config.insert("depth".into(), Value::Int(6));
+        config.insert("booster".into(), Value::Cat("gbtree".into()));
+        let msg = Message::Assign {
+            request: TuningJobRequest {
+                name: "remote-1".into(),
+                seed: 42,
+                tenant_weight: 3,
+                ..Default::default()
+            },
+            platform: PlatformConfig { provisioning_mean: 7.5, ..Default::default() },
+            transfer: vec![Observation { config, value: -1.0 / 3.0 }],
+        };
+        let Message::Assign { request, platform, transfer } = roundtrip(&msg) else {
+            panic!("wrong variant");
+        };
+        assert_eq!(request.name, "remote-1");
+        assert_eq!(request.seed, 42);
+        assert_eq!(request.tenant_weight, 3);
+        assert_eq!(platform.provisioning_mean.to_bits(), 7.5f64.to_bits());
+        assert_eq!(transfer.len(), 1);
+        assert_eq!(transfer[0].value.to_bits(), (-1.0f64 / 3.0).to_bits());
+        assert_eq!(transfer[0].config.get("depth"), Some(&Value::Int(6)));
+        assert_eq!(
+            transfer[0].config.get("booster"),
+            Some(&Value::Cat("gbtree".into()))
+        );
+    }
+
+    #[test]
+    fn delta_records_roundtrip_bit_exact() {
+        let records = vec![
+            (
+                3u64,
+                WalRecord::Put {
+                    table: "training_jobs".into(),
+                    key: "j-train-0001".into(),
+                    version: 2,
+                    value: Json::obj(vec![("final_value", Json::Num(1.0 / 3.0))]),
+                },
+            ),
+            (4u64, WalRecord::Emit { stream: "j/loss".into(), time: 1e-300, value: -0.125 }),
+        ];
+        let msg = Message::StoreDelta { job: "j".into(), records };
+        let Message::StoreDelta { job, records } = roundtrip(&msg) else {
+            panic!("wrong variant");
+        };
+        assert_eq!(job, "j");
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].0, 3);
+        let WalRecord::Put { version, value, .. } = &records[0].1 else { panic!() };
+        assert_eq!(*version, 2);
+        assert_eq!(
+            value.get("final_value").unwrap().as_f64().unwrap().to_bits(),
+            (1.0f64 / 3.0).to_bits()
+        );
+        let WalRecord::Emit { time, value, .. } = &records[1].1 else { panic!() };
+        assert_eq!(time.to_bits(), 1e-300f64.to_bits());
+        assert_eq!(value.to_bits(), (-0.125f64).to_bits());
+    }
+
+    #[test]
+    fn outcome_roundtrips_every_field() {
+        let mut config = Config::new();
+        config.insert("x".into(), Value::Float(0.25));
+        let outcome = TuningJobOutcome {
+            name: "job".into(),
+            evaluations: vec![EvaluationRecord {
+                training_job_name: "job-train-0000".into(),
+                config: config.clone(),
+                curve: vec![0.5, 1.0 / 3.0],
+                final_value: Some(1.0 / 3.0),
+                status: TrainingJobStatus::Completed,
+                stopped_early: false,
+                attempts: 2,
+                submitted_at: 1.5,
+                ended_at: 123.456789,
+            }],
+            best: Some((config, 1.0 / 3.0)),
+            total_seconds: 123.456789,
+            total_billable_seconds: 121.25,
+            status: ExecutionStatus::Succeeded,
+            retries: 1,
+        };
+        let back = outcome_from_json(&outcome_to_json(&outcome)).unwrap();
+        assert_eq!(back.name, outcome.name);
+        assert_eq!(back.retries, 1);
+        assert_eq!(back.status, ExecutionStatus::Succeeded);
+        assert_eq!(back.total_seconds.to_bits(), outcome.total_seconds.to_bits());
+        assert_eq!(back.evaluations.len(), 1);
+        let (a, b) = (&back.evaluations[0], &outcome.evaluations[0]);
+        assert_eq!(a.training_job_name, b.training_job_name);
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.curve.len(), 2);
+        assert_eq!(a.curve[1].to_bits(), b.curve[1].to_bits());
+        assert_eq!(a.final_value.unwrap().to_bits(), b.final_value.unwrap().to_bits());
+        assert_eq!(a.status, TrainingJobStatus::Completed);
+        assert_eq!(a.attempts, 2);
+        assert_eq!(a.ended_at.to_bits(), b.ended_at.to_bits());
+        assert_eq!(back.best.unwrap().1.to_bits(), (1.0f64 / 3.0).to_bits());
+        // failed executions carry their reason
+        let failed = TuningJobOutcome {
+            status: ExecutionStatus::Failed("boom".into()),
+            best: None,
+            evaluations: Vec::new(),
+            ..outcome
+        };
+        let back = outcome_from_json(&outcome_to_json(&failed)).unwrap();
+        assert_eq!(back.status, ExecutionStatus::Failed("boom".into()));
+        assert!(back.best.is_none());
+    }
+}

@@ -1,0 +1,419 @@
+//! Transports for the distributed execution plane: how framed
+//! [`Message`]s move between a leader and a worker.
+//!
+//! Two implementations of the one [`Transport`] trait:
+//!
+//! * [`loopback_pair`] — an in-process byte channel that still runs the
+//!   full encode → frame → decode pipeline, so deterministic tests (and
+//!   the bit-identity property against the in-process pool) exercise
+//!   exactly the wire path a socket would, minus the kernel. Its
+//!   [`LoopbackFault`] handle kills the link at any instant — both ends
+//!   start failing immediately, queued messages included — which is how
+//!   the worker-kill integration test simulates a dead worker process.
+//! * [`SocketTransport`] — a TCP or Unix-domain stream for real
+//!   multi-process deployments (`amt worker --listen` / `amt serve
+//!   --workers`). Reads are deadline-bounded and buffer partial frames,
+//!   so a slow peer never desynchronizes the stream.
+//!
+//! Error contract shared by both: `Ok(None)` from `recv` means "nothing
+//! arrived in time" (the caller decides about lease expiry); any `Err`
+//! means the link is dead and the peer's jobs must be requeued.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::frame;
+use super::proto::Message;
+
+/// A bidirectional, message-oriented link to one peer.
+pub trait Transport: Send {
+    /// Frame and ship one message. `Err` = the link is dead.
+    fn send(&mut self, msg: &Message) -> std::io::Result<()>;
+    /// Wait up to `timeout` for the next message. `Ok(None)` = nothing
+    /// arrived in time; `Err` = the link is dead.
+    fn recv(&mut self, timeout: Duration) -> std::io::Result<Option<Message>>;
+    /// Human-readable peer label for diagnostics.
+    fn peer(&self) -> String;
+}
+
+fn dead_link(what: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::BrokenPipe, what.to_string())
+}
+
+/// Kill switch shared by both ends of a loopback link (fault injection
+/// for worker-death tests): after [`LoopbackFault::kill`], every send
+/// and recv on either end fails immediately — queued messages are
+/// unreachable, exactly as if the peer process had died.
+pub struct LoopbackFault {
+    killed: AtomicBool,
+}
+
+impl LoopbackFault {
+    /// Sever the link permanently.
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+    }
+
+    /// True once the link was severed.
+    pub fn is_killed(&self) -> bool {
+        self.killed.load(Ordering::SeqCst)
+    }
+}
+
+/// One end of an in-process loopback link. Messages cross as framed
+/// bytes (encode on send, decode on recv), so the wire codec is fully
+/// exercised.
+pub struct LoopbackTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    fault: Arc<LoopbackFault>,
+    label: String,
+}
+
+/// Build a connected loopback pair `(leader_end, worker_end)` plus the
+/// fault handle that severs it.
+pub fn loopback_pair(label: &str) -> (LoopbackTransport, LoopbackTransport, Arc<LoopbackFault>) {
+    let (to_worker, from_leader) = mpsc::channel();
+    let (to_leader, from_worker) = mpsc::channel();
+    let fault = Arc::new(LoopbackFault { killed: AtomicBool::new(false) });
+    let leader = LoopbackTransport {
+        tx: to_worker,
+        rx: from_worker,
+        fault: Arc::clone(&fault),
+        label: format!("loopback:{label}"),
+    };
+    let worker = LoopbackTransport {
+        tx: to_leader,
+        rx: from_leader,
+        fault: Arc::clone(&fault),
+        label: format!("loopback:{label}"),
+    };
+    (leader, worker, fault)
+}
+
+impl Transport for LoopbackTransport {
+    fn send(&mut self, msg: &Message) -> std::io::Result<()> {
+        if self.fault.is_killed() {
+            return Err(dead_link("loopback link killed"));
+        }
+        self.tx.send(msg.encode()).map_err(|_| dead_link("loopback peer gone"))
+    }
+
+    fn recv(&mut self, timeout: Duration) -> std::io::Result<Option<Message>> {
+        if self.fault.is_killed() {
+            return Err(dead_link("loopback link killed"));
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(bytes) => {
+                // a kill that lands while a message is in flight still
+                // severs the link: queued bytes are part of the dead peer
+                if self.fault.is_killed() {
+                    return Err(dead_link("loopback link killed"));
+                }
+                let (payload, consumed) = frame::decode(&bytes)?
+                    .ok_or_else(|| dead_link("loopback frame truncated"))?;
+                debug_assert_eq!(consumed, bytes.len());
+                Ok(Some(Message::decode(&payload)?))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(dead_link("loopback peer gone")),
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.label.clone()
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn set_read_timeout(&self, t: Duration) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(Some(t)),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(Some(t)),
+        }
+    }
+
+    fn read_chunk(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+
+    fn write_all_flush(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => {
+                s.write_all(bytes)?;
+                s.flush()
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                s.write_all(bytes)?;
+                s.flush()
+            }
+        }
+    }
+}
+
+/// A framed TCP or Unix-domain stream transport. Addresses starting
+/// with `unix:` (or containing a `/`) are Unix socket paths; anything
+/// else is a TCP `host:port`.
+pub struct SocketTransport {
+    stream: Stream,
+    peer: String,
+    /// Bytes received but not yet forming a complete frame.
+    pending: Vec<u8>,
+}
+
+fn is_unix_addr(addr: &str) -> bool {
+    addr.starts_with("unix:") || addr.contains('/')
+}
+
+#[cfg(unix)]
+fn unix_path(addr: &str) -> &str {
+    addr.strip_prefix("unix:").unwrap_or(addr)
+}
+
+impl SocketTransport {
+    /// Connect to a listening worker/leader.
+    pub fn connect(addr: &str) -> std::io::Result<SocketTransport> {
+        let stream = if is_unix_addr(addr) {
+            #[cfg(unix)]
+            {
+                Stream::Unix(UnixStream::connect(unix_path(addr))?)
+            }
+            #[cfg(not(unix))]
+            {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Unsupported,
+                    "unix sockets unavailable on this platform",
+                ));
+            }
+        } else {
+            let s = TcpStream::connect(addr)?;
+            s.set_nodelay(true)?;
+            Stream::Tcp(s)
+        };
+        Ok(SocketTransport { stream, peer: addr.to_string(), pending: Vec::new() })
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, msg: &Message) -> std::io::Result<()> {
+        self.stream.write_all_flush(&msg.encode())
+    }
+
+    fn recv(&mut self, timeout: Duration) -> std::io::Result<Option<Message>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some((payload, consumed)) = frame::decode(&self.pending)? {
+                self.pending.drain(..consumed);
+                return Ok(Some(Message::decode(&payload)?));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            self.stream.set_read_timeout(deadline - now)?;
+            let mut chunk = [0u8; 4096];
+            match self.stream.read_chunk(&mut chunk) {
+                Ok(0) => return Err(dead_link("peer closed the connection")),
+                Ok(n) => self.pending.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // deadline-bounded read expired mid-frame: report
+                    // "nothing yet"; the partial bytes stay buffered
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+/// Listening socket for `amt worker --listen`.
+pub enum SocketListener {
+    /// TCP listener.
+    Tcp(TcpListener),
+    /// Unix-domain listener.
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl SocketListener {
+    /// Bind a listener (same address grammar as
+    /// [`SocketTransport::connect`]; an existing Unix socket file is
+    /// replaced).
+    pub fn bind(addr: &str) -> std::io::Result<SocketListener> {
+        if is_unix_addr(addr) {
+            #[cfg(unix)]
+            {
+                let path = unix_path(addr);
+                let _ = std::fs::remove_file(path);
+                return Ok(SocketListener::Unix(UnixListener::bind(path)?));
+            }
+            #[cfg(not(unix))]
+            {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Unsupported,
+                    "unix sockets unavailable on this platform",
+                ));
+            }
+        }
+        Ok(SocketListener::Tcp(TcpListener::bind(addr)?))
+    }
+
+    /// Block for the next leader connection.
+    pub fn accept(&self) -> std::io::Result<SocketTransport> {
+        match self {
+            SocketListener::Tcp(l) => {
+                let (s, peer) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(SocketTransport {
+                    stream: Stream::Tcp(s),
+                    peer: peer.to_string(),
+                    pending: Vec::new(),
+                })
+            }
+            #[cfg(unix)]
+            SocketListener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Ok(SocketTransport {
+                    stream: Stream::Unix(s),
+                    peer: "unix-peer".to_string(),
+                    pending: Vec::new(),
+                })
+            }
+        }
+    }
+
+    /// The bound address (for logs; TCP resolves the ephemeral port).
+    pub fn local_addr(&self) -> String {
+        match self {
+            SocketListener::Tcp(l) => {
+                l.local_addr().map(|a| a.to_string()).unwrap_or_default()
+            }
+            #[cfg(unix)]
+            SocketListener::Unix(l) => l
+                .local_addr()
+                .ok()
+                .and_then(|a| a.as_pathname().map(|p| p.display().to_string()))
+                .unwrap_or_default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_carries_messages_both_ways() {
+        let (mut leader, mut worker, _fault) = loopback_pair("t");
+        leader.send(&Message::PollRequest { job: "j".into(), max_steps: 8 }).unwrap();
+        let got = worker.recv(Duration::from_secs(1)).unwrap().unwrap();
+        assert!(matches!(got, Message::PollRequest { max_steps: 8, .. }));
+        worker.send(&Message::Heartbeat).unwrap();
+        assert!(matches!(
+            leader.recv(Duration::from_secs(1)).unwrap(),
+            Some(Message::Heartbeat)
+        ));
+        // nothing queued: timeout reports None, not an error
+        assert!(leader.recv(Duration::from_millis(5)).unwrap().is_none());
+        assert!(leader.peer().starts_with("loopback:"));
+    }
+
+    #[test]
+    fn killed_loopback_fails_both_ends_even_with_queued_messages() {
+        let (mut leader, mut worker, fault) = loopback_pair("kill");
+        worker.send(&Message::Heartbeat).unwrap();
+        fault.kill();
+        assert!(leader.recv(Duration::from_millis(5)).is_err());
+        assert!(leader.send(&Message::Drain).is_err());
+        assert!(worker.recv(Duration::from_millis(5)).is_err());
+        assert!(worker.send(&Message::Heartbeat).is_err());
+        assert!(fault.is_killed());
+    }
+
+    #[test]
+    fn dropped_peer_is_a_dead_link() {
+        let (mut leader, worker, _fault) = loopback_pair("drop");
+        drop(worker);
+        assert!(leader.send(&Message::Heartbeat).is_err());
+    }
+
+    #[test]
+    fn tcp_transport_roundtrip() {
+        let listener = SocketListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr();
+        let server = std::thread::spawn(move || {
+            let mut t = listener.accept().unwrap();
+            let msg = t.recv(Duration::from_secs(5)).unwrap().unwrap();
+            assert!(matches!(msg, Message::Hello { .. }));
+            t.send(&Message::DrainAck).unwrap();
+            // hold the connection open until the client is done reading
+            let _ = t.recv(Duration::from_secs(5));
+        });
+        let mut client = SocketTransport::connect(&addr).unwrap();
+        client.send(&Message::Hello { worker: "w".into() }).unwrap();
+        assert!(matches!(
+            client.recv(Duration::from_secs(5)).unwrap(),
+            Some(Message::DrainAck)
+        ));
+        assert!(client.recv(Duration::from_millis(10)).unwrap().is_none());
+        drop(client);
+        server.join().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_transport_roundtrip() {
+        let path = std::env::temp_dir().join(format!(
+            "amt-uds-{}-{}.sock",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let addr = format!("unix:{}", path.display());
+        let listener = SocketListener::bind(&addr).unwrap();
+        let server = std::thread::spawn(move || {
+            let mut t = listener.accept().unwrap();
+            let msg = t.recv(Duration::from_secs(5)).unwrap().unwrap();
+            assert!(matches!(msg, Message::Heartbeat));
+            t.send(&Message::Drain).unwrap();
+            let _ = t.recv(Duration::from_secs(5));
+        });
+        let mut client = SocketTransport::connect(&addr).unwrap();
+        client.send(&Message::Heartbeat).unwrap();
+        assert!(matches!(
+            client.recv(Duration::from_secs(5)).unwrap(),
+            Some(Message::Drain)
+        ));
+        drop(client);
+        server.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

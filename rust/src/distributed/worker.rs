@@ -1,0 +1,375 @@
+//! Worker runtime: hosts [`JobActor`]s in a (potentially remote)
+//! process and answers a leader's poll protocol.
+//!
+//! A worker owns no authoritative state. Each assigned job gets a
+//! **fresh local store and metrics service** whose only purpose is to
+//! absorb the actor's writes; both are wired to one shared *capture
+//! WAL* whose group-commit buffer is never committed to disk — after
+//! every poll slice the buffer is drained ([`Wal::take_buffer`]),
+//! decoded, and shipped to the leader as a [`Message::StoreDelta`]
+//! followed by the slice's [`Message::PollResult`]. Because the
+//! store/metrics/actor append through exactly the code paths an
+//! in-process job uses, the delta is the slice's mutation history in
+//! faithful application order, and the leader re-applying it through
+//! *its* store reproduces an in-process run bit-for-bit (values and
+//! versions; property-tested in `rust/tests/distributed_integration.rs`).
+//!
+//! The runtime is single-threaded per leader connection — one poll at a
+//! time — which is what makes a single shared capture WAL sufficient:
+//! every drained buffer belongs entirely to the slice just polled.
+//! Parallelism comes from running many workers, not threads per worker.
+//!
+//! Workers always evaluate with the native surrogate backend; a leader
+//! on a different backend should keep such jobs on its local plane.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::TuningJobRequest;
+use crate::coordinator::{stopping_by_name, ActorPoll, JobActor};
+use crate::durability::wal::Wal;
+use crate::gp::NativeBackend;
+use crate::metrics::MetricsService;
+use crate::objectives::by_name as objective_by_name;
+use crate::platform::{PlatformConfig, TrainingPlatform};
+use crate::store::MetadataStore;
+use crate::strategies::{Observation, Strategy};
+
+use super::proto::{Message, PollReply};
+use super::transport::Transport;
+
+/// Default heartbeat period for idle workers — a small fraction of the
+/// leader's default 5s lease, so many beats must go missing before a
+/// worker is declared dead.
+pub const DEFAULT_HEARTBEAT: Duration = Duration::from_millis(500);
+
+struct HostedJob {
+    actor: JobActor,
+    stop_flag: Arc<AtomicBool>,
+    /// Keep the local sinks alive for the actor's lifetime.
+    _store: Arc<MetadataStore>,
+    _metrics: Arc<MetricsService>,
+}
+
+/// Build the actor for an assignment — the worker-side mirror of the
+/// API layer's job construction (`AmtService::create_prepared`): same
+/// strategy wiring, same seeds, same platform timeline, so the actor's
+/// trajectory is bit-identical to the one the leader would have run.
+fn build_actor(
+    request: TuningJobRequest,
+    platform: PlatformConfig,
+    transfer: Vec<Observation>,
+    store: Arc<MetadataStore>,
+    metrics: Arc<MetricsService>,
+    stop_flag: Arc<AtomicBool>,
+) -> Result<JobActor, String> {
+    if let Err(e) = request.validate_with_custom_objective() {
+        return Err(format!("invalid request: {e}"));
+    }
+    let Some(objective) = objective_by_name(&request.objective) else {
+        return Err(format!("unknown objective '{}'", request.objective));
+    };
+    let objective: Arc<dyn crate::objectives::Objective> = objective.into();
+    // the same construction path the API layer uses (bit-identity
+    // across planes depends on it)
+    let strategy: Box<dyn Strategy> = crate::strategies::for_request(
+        &request.strategy,
+        &objective.space(),
+        Arc::new(NativeBackend),
+        request.seed,
+        transfer,
+    )
+    .ok_or_else(|| format!("unknown strategy '{}'", request.strategy))?;
+    let Some(stopping) = stopping_by_name(&request.early_stopping) else {
+        return Err(format!("unknown early stopping '{}'", request.early_stopping));
+    };
+    let seed = request.seed;
+    Ok(JobActor::new(
+        request,
+        objective,
+        strategy,
+        stopping,
+        TrainingPlatform::new(platform, seed),
+        store,
+        metrics,
+        stop_flag,
+    ))
+}
+
+/// One worker session: hosts jobs for a single leader connection until
+/// the leader drains it or the link dies.
+pub struct WorkerRuntime {
+    transport: Box<dyn Transport>,
+    heartbeat: Duration,
+    /// Capture WAL (never committed): drained into `StoreDelta`s.
+    capture: Arc<Wal>,
+    scratch: PathBuf,
+    jobs: HashMap<String, HostedJob>,
+    label: String,
+    /// Poll slices served (diagnostics).
+    pub polls_served: u64,
+}
+
+impl WorkerRuntime {
+    /// New runtime over a connected transport, with the default
+    /// heartbeat period.
+    pub fn new(transport: Box<dyn Transport>) -> std::io::Result<WorkerRuntime> {
+        Self::with_heartbeat(transport, DEFAULT_HEARTBEAT)
+    }
+
+    /// New runtime with an explicit heartbeat period (tests shrink it).
+    pub fn with_heartbeat(
+        transport: Box<dyn Transport>,
+        heartbeat: Duration,
+    ) -> std::io::Result<WorkerRuntime> {
+        static SESSION: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let session = SESSION.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let scratch = std::env::temp_dir()
+            .join(format!("amt-worker-{}-{session}", std::process::id()));
+        std::fs::create_dir_all(&scratch)?;
+        let capture = Arc::new(Wal::create(&scratch)?);
+        Ok(WorkerRuntime {
+            label: format!("worker-{}-{session}", std::process::id()),
+            transport,
+            heartbeat,
+            capture,
+            scratch,
+            jobs: HashMap::new(),
+            polls_served: 0,
+        })
+    }
+
+    /// Worker label (sent in the `Hello`).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn assign(
+        &mut self,
+        request: TuningJobRequest,
+        platform: PlatformConfig,
+        transfer: Vec<Observation>,
+    ) {
+        let name = request.name.clone();
+        let store = Arc::new(MetadataStore::new());
+        let metrics = Arc::new(MetricsService::new());
+        store.attach_wal(Arc::clone(&self.capture));
+        metrics.attach_wal(Arc::clone(&self.capture));
+        let stop_flag = Arc::new(AtomicBool::new(false));
+        match build_actor(
+            request,
+            platform,
+            transfer,
+            Arc::clone(&store),
+            Arc::clone(&metrics),
+            Arc::clone(&stop_flag),
+        ) {
+            Ok(mut actor) => {
+                actor.set_wal(Arc::clone(&self.capture));
+                // a re-assignment replaces any previous incarnation
+                self.jobs.insert(
+                    name,
+                    HostedJob { actor, stop_flag, _store: store, _metrics: metrics },
+                );
+            }
+            Err(reason) => {
+                // tell the leader right away; the job is terminal there
+                self.jobs.remove(&name);
+                let _ = self.transport.send(&Message::PollResult {
+                    job: name,
+                    reply: PollReply::Rejected { reason },
+                });
+            }
+        }
+    }
+
+    fn poll(&mut self, job: &str, max_steps: usize) -> std::io::Result<()> {
+        let Some(hosted) = self.jobs.get_mut(job) else {
+            return self.transport.send(&Message::PollResult {
+                job: job.to_string(),
+                reply: PollReply::Rejected { reason: "job not assigned here".into() },
+            });
+        };
+        self.polls_served += 1;
+        let poll = hosted.actor.poll(max_steps.max(1));
+        // the slice's mutations, in application order, straight out of
+        // the capture WAL's buffer — delta first, verdict second
+        let records = Wal::decode_frames(&self.capture.take_buffer()).records;
+        if !records.is_empty() {
+            self.transport.send(&Message::StoreDelta { job: job.to_string(), records })?;
+        }
+        let reply = match poll {
+            ActorPoll::Pending { due } => PollReply::Pending { due },
+            ActorPoll::Complete(outcome) => {
+                self.jobs.remove(job);
+                PollReply::Complete(outcome)
+            }
+        };
+        self.transport.send(&Message::PollResult { job: job.to_string(), reply })
+    }
+
+    /// Serve the leader until it drains the session (`Ok`) or the link
+    /// dies (`Err`). Either way the runtime is finished afterwards.
+    pub fn run(&mut self) -> std::io::Result<()> {
+        self.transport.send(&Message::Hello { worker: self.label.clone() })?;
+        loop {
+            match self.transport.recv(self.heartbeat)? {
+                None => {
+                    // idle: renew the lease
+                    self.transport.send(&Message::Heartbeat)?;
+                }
+                Some(Message::Assign { request, platform, transfer }) => {
+                    self.assign(request, platform, transfer);
+                }
+                Some(Message::PollRequest { job, max_steps }) => {
+                    self.poll(&job, max_steps)?;
+                }
+                Some(Message::Stop { job }) => {
+                    if let Some(h) = self.jobs.get(&job) {
+                        h.stop_flag.store(true, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+                Some(Message::Drain) => {
+                    let _ = self.transport.send(&Message::DrainAck);
+                    return Ok(());
+                }
+                // leader-bound messages can't arrive here; ignore
+                Some(_) => {}
+            }
+        }
+    }
+}
+
+impl Drop for WorkerRuntime {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.scratch);
+    }
+}
+
+/// Spawn an in-process loopback worker thread (the `--distributed` mode
+/// of the soak example, benches and tests): returns the leader-side
+/// transport, the fault handle, and the join handle of the worker
+/// thread, which runs until drained or killed.
+pub fn spawn_loopback_worker(
+    label: &str,
+) -> (
+    Box<dyn Transport>,
+    Arc<super::transport::LoopbackFault>,
+    std::thread::JoinHandle<()>,
+) {
+    let (leader_end, worker_end, fault) = super::transport::loopback_pair(label);
+    let handle = std::thread::Builder::new()
+        .name(format!("amt-remote-{label}"))
+        .spawn(move || {
+            if let Ok(mut runtime) = WorkerRuntime::new(Box::new(worker_end)) {
+                let _ = runtime.run();
+            }
+        })
+        .expect("failed to spawn loopback worker");
+    (Box::new(leader_end), fault, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::durability::wal::WalRecord;
+
+    fn drive(
+        transport: &mut dyn Transport,
+        job: &str,
+        max_steps: usize,
+    ) -> (Vec<(u64, WalRecord)>, PollReply) {
+        transport
+            .send(&Message::PollRequest { job: job.into(), max_steps })
+            .unwrap();
+        let mut delta = Vec::new();
+        loop {
+            match transport.recv(Duration::from_secs(10)).unwrap() {
+                Some(Message::StoreDelta { records, .. }) => delta.extend(records),
+                Some(Message::PollResult { reply, .. }) => return (delta, reply),
+                Some(_) => {}
+                None => panic!("worker went quiet"),
+            }
+        }
+    }
+
+    #[test]
+    fn hosted_job_streams_deltas_and_completes() {
+        let (mut leader, _fault, handle) = spawn_loopback_worker("unit");
+        // swallow the Hello
+        loop {
+            match leader.recv(Duration::from_secs(10)).unwrap() {
+                Some(Message::Hello { .. }) => break,
+                Some(_) | None => {}
+            }
+        }
+        let request = TuningJobRequest {
+            name: "w-unit".into(),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 3,
+            max_parallel_jobs: 2,
+            seed: 9,
+            ..Default::default()
+        };
+        leader
+            .send(&Message::Assign {
+                request,
+                platform: PlatformConfig::noiseless(),
+                transfer: Vec::new(),
+            })
+            .unwrap();
+        let mut all_records = Vec::new();
+        let outcome = loop {
+            let (delta, reply) = drive(leader.as_mut(), "w-unit", 64);
+            all_records.extend(delta);
+            match reply {
+                PollReply::Pending { .. } => {}
+                PollReply::Complete(outcome) => break outcome,
+                PollReply::Rejected { reason } => panic!("rejected: {reason}"),
+            }
+        };
+        assert_eq!(outcome.evaluations.len(), 3);
+        // the delta stream contains the job's store puts and metric emits
+        assert!(all_records.iter().any(|(_, r)| matches!(
+            r,
+            WalRecord::Put { table, .. } if table == "training_jobs"
+        )));
+        assert!(all_records.iter().any(|(_, r)| matches!(r, WalRecord::Emit { .. })));
+        // polling an unknown job is rejected, not fatal
+        let (_, reply) = drive(leader.as_mut(), "ghost", 8);
+        assert!(matches!(reply, PollReply::Rejected { .. }));
+        leader.send(&Message::Drain).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_objective_assignment_is_rejected() {
+        let (mut leader, _fault, handle) = spawn_loopback_worker("reject");
+        let request = TuningJobRequest {
+            name: "bad".into(),
+            objective: "not-a-workload".into(),
+            strategy: "random".into(),
+            ..Default::default()
+        };
+        leader
+            .send(&Message::Assign {
+                request,
+                platform: PlatformConfig::noiseless(),
+                transfer: Vec::new(),
+            })
+            .unwrap();
+        let reply = loop {
+            match leader.recv(Duration::from_secs(10)).unwrap() {
+                Some(Message::PollResult { reply, .. }) => break reply,
+                Some(_) | None => {}
+            }
+        };
+        assert!(matches!(reply, PollReply::Rejected { .. }));
+        leader.send(&Message::Drain).unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -32,6 +32,19 @@ pub mod recovery;
 pub mod snapshot;
 pub mod wal;
 
+/// Tuning knobs for a durable service opened via
+/// [`crate::api::AmtService::open_with_durability`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DurabilityOptions {
+    /// When `Some(n)`: after a scheduler group commit leaves more than
+    /// `n` bytes durably in the WAL, the service automatically runs a
+    /// `checkpoint()` (per-shard snapshot + WAL compaction) from the
+    /// committing worker thread, so a long-running service's log stays
+    /// bounded without any API-side discipline. `None` (the default)
+    /// keeps checkpoints purely manual.
+    pub auto_checkpoint_bytes: Option<u64>,
+}
+
 /// Durability-layer failure: an I/O error or a corrupt snapshot/manifest.
 /// Torn WAL tails are *not* errors — they are truncated during recovery.
 #[derive(Debug)]

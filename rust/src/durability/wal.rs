@@ -58,7 +58,10 @@ pub enum WalRecord {
 }
 
 impl WalRecord {
-    fn to_json(&self, lsn: u64) -> Json {
+    /// Wire JSON of the record with its LSN — also the payload format of
+    /// the distributed plane's `StoreDelta` messages (the WAL record
+    /// format *is* the cross-process wire format, DESIGN.md §11).
+    pub fn to_json(&self, lsn: u64) -> Json {
         let mut fields: Vec<(&str, Json)> = vec![("lsn", Json::Num(lsn as f64))];
         match self {
             WalRecord::Put { table, key, version, value } => {
@@ -92,7 +95,8 @@ impl WalRecord {
         Json::obj(fields)
     }
 
-    fn from_json(j: &Json) -> Option<(u64, WalRecord)> {
+    /// Parse the wire JSON back into `(lsn, record)`.
+    pub fn from_json(j: &Json) -> Option<(u64, WalRecord)> {
         let lsn = j.get("lsn")?.as_i64()? as u64;
         let op = j.get("op")?.as_str()?;
         let rec = match op {
@@ -258,6 +262,23 @@ impl Wal {
         self.next_lsn.load(std::sync::atomic::Ordering::Relaxed) - 1
     }
 
+    /// Bytes durably on disk after the last successful commit — the size
+    /// signal `DurabilityOptions::auto_checkpoint_bytes` triggers on.
+    pub fn synced_len(&self) -> u64 {
+        self.inner.lock().unwrap().synced_len
+    }
+
+    /// Drain the group-commit buffer *without* touching the file,
+    /// returning the accumulated frames verbatim. This is how a remote
+    /// worker's capture WAL turns a poll slice's mutations into a
+    /// `StoreDelta`: the buffered frames are decoded
+    /// ([`Wal::decode_frames`]) and shipped to the leader instead of
+    /// being committed locally. Not for use on a WAL that also commits —
+    /// taken frames will never reach this WAL's file.
+    pub fn take_buffer(&self) -> Vec<u8> {
+        std::mem::take(&mut self.inner.lock().unwrap().buf)
+    }
+
     /// Group commit: write every buffered frame and fsync. No-op when the
     /// buffer is empty (cheap to call at every scheduler tick).
     ///
@@ -306,6 +327,14 @@ impl Wal {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
             Err(e) => return Err(e),
         }
+        Ok(Self::decode_frames(&bytes))
+    }
+
+    /// Decode a byte buffer of `[len][crc][payload]` frames into its
+    /// valid record prefix — the in-memory core of [`Wal::scan`], also
+    /// used to turn a capture buffer ([`Wal::take_buffer`]) into the
+    /// records a `StoreDelta` carries.
+    pub fn decode_frames(bytes: &[u8]) -> WalScan {
         let mut records = Vec::new();
         let mut frame_ends = Vec::new();
         let mut pos = 0usize;
@@ -336,7 +365,81 @@ impl Wal {
         }
         let valid_len = *frame_ends.last().unwrap_or(&0);
         let dropped_tail = (valid_len as usize) < bytes.len();
-        Ok(WalScan { records, frame_ends, valid_len, dropped_tail })
+        WalScan { records, frame_ends, valid_len, dropped_tail }
+    }
+
+    /// Compact the on-disk log after a successful snapshot: drop every
+    /// record the snapshot's high-water marks already cover (store
+    /// records with `lsn ≤ store_hwm`, metrics records with
+    /// `lsn ≤ metrics_hwm`, checkpoints at or below both marks — a
+    /// checkpoint is a progress hint; recovery's reset-and-replay never
+    /// depends on it) and rewrite the survivors, preserving their LSNs
+    /// and order. Returns `(bytes_before, bytes_after)`.
+    ///
+    /// Crash-safe: survivors are written to a temp file that is fsynced
+    /// and renamed over the log (then the directory is fsynced), so a
+    /// crash leaves either the old full log (harmless — replay skips
+    /// covered records by LSN) or the compacted one. Uncommitted
+    /// buffered frames are untouched and land after the compacted
+    /// prefix at the next commit. Appends and commits are blocked for
+    /// the duration (the inner mutex is held).
+    pub fn compact(&self, store_hwm: u64, metrics_hwm: u64) -> std::io::Result<(u64, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.synced_len;
+        // mark dirty up front: if anything below fails the handle's
+        // position is unspecified, and the next commit must rewind to
+        // `synced_len` before writing (cleared again on success)
+        inner.dirty = true;
+        let mut bytes = vec![0u8; before as usize];
+        inner.file.seek(SeekFrom::Start(0))?;
+        inner.file.read_exact(&mut bytes)?;
+        let scan = Self::decode_frames(&bytes);
+        let ckpt_hwm = store_hwm.min(metrics_hwm);
+        let mut kept = Vec::new();
+        for (lsn, rec) in &scan.records {
+            let keep = match rec {
+                WalRecord::Put { .. } | WalRecord::Delete { .. } => *lsn > store_hwm,
+                WalRecord::Emit { .. } | WalRecord::RemoveStreams { .. } => {
+                    *lsn > metrics_hwm
+                }
+                WalRecord::Checkpoint { .. } => *lsn > ckpt_hwm,
+            };
+            if keep {
+                let payload = rec.to_json(*lsn).to_string().into_bytes();
+                kept.reserve(8 + payload.len());
+                kept.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                kept.extend_from_slice(&crc32(&payload).to_le_bytes());
+                kept.extend_from_slice(&payload);
+            }
+        }
+        let after = kept.len() as u64;
+        let tmp = self.path.with_extension("log.tmp");
+        let mut tmp_file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp)?;
+        tmp_file.write_all(&kept)?;
+        tmp_file.sync_all()?;
+        std::fs::rename(&tmp, &self.path)?;
+        // install the tmp handle as the log handle *before* anything else
+        // can fail: after the rename it IS the inode `path` names, so no
+        // reopen-by-path (which could error and strand a handle on the
+        // replaced inode) is ever needed. Its position is already at the
+        // end (we just wrote the whole content through it).
+        inner.file = tmp_file;
+        inner.synced_len = after;
+        inner.dirty = false;
+        // directory fsync last (makes the rename durable); an error here
+        // surfaces to the caller but the in-memory state already matches
+        // what `path` names
+        if let Some(parent) = self.path.parent() {
+            if let Ok(d) = File::open(parent) {
+                d.sync_all()?;
+            }
+        }
+        Ok((before, after))
     }
 }
 
@@ -466,6 +569,78 @@ mod tests {
         assert!(scan.records.is_empty());
         assert_eq!(scan.valid_len, 0);
         assert!(!scan.dropped_tail);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn take_buffer_drains_without_touching_disk() {
+        let dir = tmp("takebuf");
+        let wal = Wal::create(&dir).unwrap();
+        for r in sample_records() {
+            wal.append(&r);
+        }
+        let frames = wal.take_buffer();
+        assert!(!frames.is_empty());
+        let decoded = Wal::decode_frames(&frames);
+        assert_eq!(decoded.records.len(), sample_records().len());
+        assert!(!decoded.dropped_tail);
+        for (i, (lsn, rec)) in decoded.records.iter().enumerate() {
+            assert_eq!(*lsn, i as u64 + 1);
+            assert_eq!(rec, &sample_records()[i]);
+        }
+        // the buffer is gone: a commit writes nothing
+        wal.commit().unwrap();
+        assert_eq!(wal.synced_len(), 0);
+        assert!(Wal::scan(&dir.join(WAL_FILE)).unwrap().records.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_drops_covered_records_and_keeps_the_tail() {
+        let dir = tmp("compact");
+        let wal = Wal::create(&dir).unwrap();
+        for r in sample_records() {
+            wal.append(&r); // lsns 1..=5
+        }
+        wal.commit().unwrap();
+        let full = wal.synced_len();
+        // marks as if a snapshot captured store records through lsn 3 and
+        // metrics through lsn 2 (checkpoint lsn 5 > min(3,2) survives)
+        let (before, after) = wal.compact(3, 2).unwrap();
+        assert_eq!(before, full);
+        assert!(after < before);
+        let scan = Wal::scan(&wal.path().to_path_buf()).unwrap();
+        assert!(!scan.dropped_tail);
+        let lsns: Vec<u64> = scan.records.iter().map(|(l, _)| *l).collect();
+        // survivors: RemoveStreams (lsn 4 > metrics_hwm 2) and the
+        // checkpoint (lsn 5); Put(1)/Delete(3) ≤ store_hwm, Emit(2) ≤
+        // metrics_hwm are dropped
+        assert_eq!(lsns, vec![4, 5]);
+        assert!(matches!(scan.records[0].1, WalRecord::RemoveStreams { .. }));
+        assert!(matches!(scan.records[1].1, WalRecord::Checkpoint { .. }));
+        // appends continue cleanly after compaction
+        let lsn = wal.append(&WalRecord::Delete { table: "t".into(), key: "k".into() });
+        assert_eq!(lsn, 6);
+        wal.commit().unwrap();
+        let scan = Wal::scan(&wal.path().to_path_buf()).unwrap();
+        assert_eq!(scan.records.len(), 3);
+        assert_eq!(scan.records[2].0, 6);
+        assert_eq!(wal.synced_len(), scan.valid_len);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_with_zero_marks_is_identity() {
+        let dir = tmp("compact-id");
+        let wal = Wal::create(&dir).unwrap();
+        for r in sample_records() {
+            wal.append(&r);
+        }
+        wal.commit().unwrap();
+        let original = std::fs::read(wal.path()).unwrap();
+        let (before, after) = wal.compact(0, 0).unwrap();
+        assert_eq!(before, after);
+        assert_eq!(std::fs::read(wal.path()).unwrap(), original);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -28,9 +28,16 @@
 //!
 //! The service is crash-recoverable: [`durability`] provides a
 //! group-committed write-ahead log of every store/metrics mutation,
-//! per-shard point-in-time snapshots, and recovery-on-open
-//! ([`api::AmtService::open`]) that resumes in-flight tuning jobs with
-//! bit-identical trajectories. See `DESIGN.md` §10.
+//! per-shard point-in-time snapshots (with WAL compaction keeping the
+//! log bounded), and recovery-on-open ([`api::AmtService::open`]) that
+//! resumes in-flight tuning jobs with bit-identical trajectories. See
+//! `DESIGN.md` §10.
+//!
+//! The service scales past one process: [`distributed`] puts a framed,
+//! crc-checked wire protocol — whose delta payloads are literal WAL
+//! records — between the scheduler and a pool of remote workers
+//! ([`distributed::leader::RemoteWorkerPool`]), with lease-based
+//! liveness and requeue-from-reset on worker death. See `DESIGN.md` §11.
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the reproduced figures.
@@ -39,6 +46,7 @@ pub mod acquisition;
 pub mod api;
 pub mod config;
 pub mod coordinator;
+pub mod distributed;
 pub mod durability;
 pub mod earlystop;
 pub mod gp;

@@ -7,6 +7,13 @@
 //!   amt objectives                 list built-in workloads
 //!   amt artifacts-check [dir]      compile & smoke-run every HLO artifact
 //!   amt snapshot <path>            run a small job and dump the store
+//!   amt worker --listen <addr>     host tuning jobs for a remote leader
+//!                                  (addr: host:port or unix:/path)
+//!   amt serve --workers a,b,...    run a tuning spike with evaluations
+//!            [--jobs 16] [--objective branin] [--strategy random]
+//!            [--max-jobs 5] [--parallel 2] [--seed 0]
+//!                                  fanned out over remote workers
+//!                                  (DESIGN.md §11)
 //!
 //! (The vendored offline crate set has no clap; argument parsing is a small
 //! hand-rolled layer over std::env.)
@@ -153,6 +160,91 @@ fn cmd_artifacts_check(dir: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `amt worker`: host tuning jobs for remote leaders. Serves one leader
+/// connection at a time (the runtime is single-threaded by design — see
+/// `distributed::worker`) and goes back to accepting when a session
+/// drains or its leader disappears.
+fn cmd_worker(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use amt::distributed::transport::{SocketListener, Transport};
+    use amt::distributed::worker::WorkerRuntime;
+    let addr = flag(flags, "listen", "127.0.0.1:7070");
+    let listener = SocketListener::bind(addr)?;
+    eprintln!("amt worker listening on {}", listener.local_addr());
+    loop {
+        let transport = listener.accept()?;
+        eprintln!("leader connected: {}", transport.peer());
+        let mut runtime = WorkerRuntime::new(Box::new(transport))?;
+        match runtime.run() {
+            Ok(()) => eprintln!(
+                "session drained cleanly ({} poll slices served)",
+                runtime.polls_served
+            ),
+            Err(e) => eprintln!(
+                "leader link lost after {} poll slices: {e}",
+                runtime.polls_served
+            ),
+        }
+    }
+}
+
+/// `amt serve`: the leader half of the multi-process demo — connect to
+/// running `amt worker`s, spike a batch of tuning jobs across them and
+/// report the results.
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use amt::distributed::transport::{SocketTransport, Transport};
+    let workers = flag(flags, "workers", "");
+    if workers.is_empty() {
+        anyhow::bail!("--workers <addr,addr,...> is required (start `amt worker` first)");
+    }
+    let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+    for addr in workers.split(',').filter(|a| !a.is_empty()) {
+        transports.push(Box::new(SocketTransport::connect(addr)?));
+        eprintln!("connected to worker {addr}");
+    }
+    let jobs: usize = flag(flags, "jobs", "16").parse()?;
+    let objective = flag(flags, "objective", "branin").to_string();
+    let strategy = flag(flags, "strategy", "random").to_string();
+    let max_jobs: u32 = flag(flags, "max-jobs", "5").parse()?;
+    let parallel: u32 = flag(flags, "parallel", "2").parse()?;
+    let seed: u64 = flag(flags, "seed", "0").parse()?;
+
+    let worker_count = transports.len();
+    let service = AmtService::with_remote_workers(PlatformConfig::default(), transports);
+    let started = std::time::Instant::now();
+    for i in 0..jobs {
+        let request = TuningJobRequest {
+            name: format!("served-{i:04}"),
+            objective: objective.clone(),
+            strategy: strategy.clone(),
+            max_training_jobs: max_jobs,
+            max_parallel_jobs: parallel,
+            seed: seed ^ i as u64,
+            ..Default::default()
+        };
+        service
+            .create_tuning_job(request)
+            .map_err(|e| anyhow::anyhow!("create served-{i:04}: {e}"))?;
+    }
+    let mut evaluations = 0usize;
+    let mut failed = 0usize;
+    for i in 0..jobs {
+        let outcome = service
+            .wait(&format!("served-{i:04}"))
+            .map_err(|e| anyhow::anyhow!("wait served-{i:04}: {e}"))?;
+        evaluations += outcome.evaluations.len();
+        if outcome.status != amt::workflow::ExecutionStatus::Succeeded {
+            failed += 1;
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    println!(
+        "{jobs} tuning jobs ({evaluations} evaluations) over {worker_count} remote workers \
+         in {wall:.1}s — {:.1} jobs/s, {failed} failed",
+        jobs as f64 / wall
+    );
+    Ok(())
+}
+
 fn cmd_snapshot(path: &str) -> anyhow::Result<()> {
     let service = AmtService::new(PlatformConfig::default());
     let request = TuningJobRequest {
@@ -183,9 +275,11 @@ fn main() {
             cmd_artifacts_check(pos.get(1).map(String::as_str).unwrap_or("artifacts"))
         }
         "snapshot" => cmd_snapshot(pos.get(1).map(String::as_str).unwrap_or("store.json")),
+        "worker" => cmd_worker(&flags),
+        "serve" => cmd_serve(&flags),
         _ => {
             println!(
-                "usage: amt <tune|objectives|artifacts-check|snapshot> [--flags]\n\
+                "usage: amt <tune|objectives|artifacts-check|snapshot|worker|serve> [--flags]\n\
                  see module docs in rust/src/main.rs"
             );
             Ok(())

@@ -21,6 +21,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
+use crate::json::Json;
 use crate::objectives::Objective;
 use crate::rng::Rng;
 use crate::space::Config;
@@ -66,6 +67,42 @@ impl PlatformConfig {
             provisioning_failure_rate: 0.0,
             training_failure_rate: 0.0,
             ..Default::default()
+        }
+    }
+
+    /// JSON wire form (the distributed plane ships the leader's platform
+    /// configuration to remote workers so their simulated timelines are
+    /// bit-identical to an in-process run).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("provisioning_mean", Json::Num(self.provisioning_mean)),
+            ("provisioning_jitter", Json::Num(self.provisioning_jitter)),
+            ("fast_provisioning", Json::Bool(self.fast_provisioning)),
+            ("image_download_seconds", Json::Num(self.image_download_seconds)),
+            ("provisioning_failure_rate", Json::Num(self.provisioning_failure_rate)),
+            ("training_failure_rate", Json::Num(self.training_failure_rate)),
+            ("distributed_efficiency", Json::Num(self.distributed_efficiency)),
+        ])
+    }
+
+    /// Parse the JSON wire form (missing fields take defaults).
+    pub fn from_json(j: &Json) -> PlatformConfig {
+        let d = PlatformConfig::default();
+        let num = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        PlatformConfig {
+            provisioning_mean: num("provisioning_mean", d.provisioning_mean),
+            provisioning_jitter: num("provisioning_jitter", d.provisioning_jitter),
+            fast_provisioning: j
+                .get("fast_provisioning")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.fast_provisioning),
+            image_download_seconds: num("image_download_seconds", d.image_download_seconds),
+            provisioning_failure_rate: num(
+                "provisioning_failure_rate",
+                d.provisioning_failure_rate,
+            ),
+            training_failure_rate: num("training_failure_rate", d.training_failure_rate),
+            distributed_efficiency: num("distributed_efficiency", d.distributed_efficiency),
         }
     }
 }

@@ -65,11 +65,13 @@ impl Default for SchedulerConfig {
 
 /// One entry of the virtual-time event heap. Min-ordered by
 /// `(due ÷ tenant weight, seq)` via `Reverse` in the heap — `due` here is
-/// already weight-discounted by [`push_entry`].
-struct QueueEntry {
-    due: f64,
-    seq: u64,
-    name: String,
+/// already weight-discounted by [`push_entry`]. Shared with the
+/// distributed plane's per-worker heaps ([`crate::distributed::leader`]),
+/// which order jobs by exactly the same key.
+pub(crate) struct QueueEntry {
+    pub(crate) due: f64,
+    pub(crate) seq: u64,
+    pub(crate) name: String,
 }
 
 impl PartialEq for QueueEntry {
@@ -86,6 +88,82 @@ impl PartialOrd for QueueEntry {
 impl Ord for QueueEntry {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.due.total_cmp(&other.due).then(self.seq.cmp(&other.seq))
+    }
+}
+
+#[derive(Default)]
+struct TenantState {
+    /// Concurrent-slice cap (0 = unlimited, accounting only).
+    limit: usize,
+    /// Poll slices currently running for this tenant.
+    in_flight: usize,
+    /// Max of `in_flight` ever observed (the contention test's probe).
+    high_water: usize,
+    /// Entries parked at quota, released in `(due, seq)` order.
+    deferred: Vec<QueueEntry>,
+}
+
+/// Per-tenant in-flight quota accounting, shared by the in-process
+/// scheduler and the distributed leader. A tenant with `max_in_flight`
+/// q on its requests never has more than q poll slices running at once
+/// across the whole pool: an entry popped while the tenant is at quota
+/// is parked here and handed back when a running slice finishes. All
+/// operations are atomic under one internal mutex (always a leaf lock).
+pub(crate) struct TenantQuotas {
+    map: Mutex<HashMap<String, TenantState>>,
+}
+
+impl TenantQuotas {
+    pub(crate) fn new() -> TenantQuotas {
+        TenantQuotas { map: Mutex::new(HashMap::new()) }
+    }
+
+    /// Try to start a slice for `tenant` (cap `limit`; 0 = unlimited).
+    /// Returns the entry back on success; parks it and returns `None`
+    /// when the tenant is at quota. The decision and the parking are one
+    /// atomic step, so a concurrent release cannot strand the entry.
+    pub(crate) fn acquire(
+        &self,
+        tenant: &str,
+        limit: usize,
+        entry: QueueEntry,
+    ) -> Option<QueueEntry> {
+        let mut map = self.map.lock().unwrap();
+        let state = map.entry(tenant.to_string()).or_default();
+        if limit > 0 {
+            state.limit = limit;
+        }
+        if state.limit > 0 && state.in_flight >= state.limit {
+            state.deferred.push(entry);
+            return None;
+        }
+        state.in_flight += 1;
+        state.high_water = state.high_water.max(state.in_flight);
+        Some(entry)
+    }
+
+    /// Finish a slice for `tenant`; returns the earliest-due parked
+    /// entry (now admissible) for the caller to requeue, if any.
+    pub(crate) fn release(&self, tenant: &str) -> Option<QueueEntry> {
+        let mut map = self.map.lock().unwrap();
+        let state = map.get_mut(tenant)?;
+        state.in_flight = state.in_flight.saturating_sub(1);
+        if state.deferred.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        for i in 1..state.deferred.len() {
+            let (a, b) = (&state.deferred[i], &state.deferred[best]);
+            if a.due.total_cmp(&b.due).then(a.seq.cmp(&b.seq)).is_lt() {
+                best = i;
+            }
+        }
+        Some(state.deferred.swap_remove(best))
+    }
+
+    /// Highest concurrent slice count this tenant ever reached.
+    pub(crate) fn high_water(&self, tenant: &str) -> usize {
+        self.map.lock().unwrap().get(tenant).map(|s| s.high_water).unwrap_or(0)
     }
 }
 
@@ -106,6 +184,10 @@ struct JobSlot {
     stop_flag: Arc<AtomicBool>,
     /// Fair-share weight (≥ 1): heap entries are keyed by `due / weight`.
     weight: f64,
+    /// `(tenant, max_in_flight)` when the request named a tenant — the
+    /// in-flight quota key. `None` jobs skip quota accounting entirely
+    /// (the legacy path, bit-identical ordering).
+    quota: Option<(String, usize)>,
     /// Poll slices this job has received (fair-share observability).
     polls: AtomicU64,
 }
@@ -131,6 +213,13 @@ struct Inner {
     /// counter.
     wal: OnceLock<Arc<Wal>>,
     wal_commit_errors: AtomicU64,
+    /// Per-tenant in-flight quota accounting (`max_in_flight`).
+    quotas: TenantQuotas,
+    /// Invoked after every *successful* WAL group commit — the durable
+    /// service installs its auto-checkpoint trigger here
+    /// (`DurabilityOptions::auto_checkpoint_bytes`). Runs on the
+    /// committing worker thread with no scheduler locks held.
+    post_commit: OnceLock<Arc<dyn Fn() + Send + Sync>>,
 }
 
 /// The multi-tenant tuning scheduler.
@@ -154,6 +243,8 @@ impl Scheduler {
             running: AtomicUsize::new(0),
             wal: OnceLock::new(),
             wal_commit_errors: AtomicU64::new(0),
+            quotas: TenantQuotas::new(),
+            post_commit: OnceLock::new(),
         });
         let worker_inner = Arc::clone(&inner);
         let pool = WorkerPool::spawn("amt-sched", workers, move |_worker| {
@@ -179,6 +270,21 @@ impl Scheduler {
     /// commit loses them — alert on this counter).
     pub fn wal_commit_errors(&self) -> u64 {
         self.inner.wal_commit_errors.load(Ordering::Relaxed)
+    }
+
+    /// Install a hook invoked after every successful WAL group commit
+    /// (no scheduler locks held). At most one hook can ever be installed
+    /// (later calls no-op). The durable API layer uses this for
+    /// size-triggered automatic checkpoints.
+    pub fn set_post_commit(&self, hook: Arc<dyn Fn() + Send + Sync>) {
+        let _ = self.inner.post_commit.set(hook);
+    }
+
+    /// Highest number of poll slices the named tenant ever held
+    /// concurrently — the observable the `max_in_flight` quota bounds
+    /// (always ≤ the quota for tenants that set one).
+    pub fn tenant_high_water(&self, tenant: &str) -> usize {
+        self.inner.quotas.high_water(tenant)
     }
 
     /// Poll slices the named job has received so far (`None` for unknown
@@ -210,6 +316,11 @@ impl Scheduler {
         }
         let name = actor.name().to_string();
         let weight = actor.tenant_weight().max(1) as f64;
+        let quota = if actor.tenant().is_empty() {
+            None
+        } else {
+            Some((actor.tenant().to_string(), actor.max_in_flight() as usize))
+        };
         {
             let mut jobs = self.inner.jobs.lock().unwrap();
             if jobs.contains_key(&name) {
@@ -223,6 +334,7 @@ impl Scheduler {
                     done_cv: Condvar::new(),
                     stop_flag,
                     weight,
+                    quota,
                     polls: AtomicU64::new(0),
                 }),
             );
@@ -327,6 +439,21 @@ fn commit_wal(inner: &Inner) {
     if let Some(wal) = inner.wal.get() {
         if wal.commit().is_err() && wal.commit().is_err() {
             inner.wal_commit_errors.fetch_add(1, Ordering::Relaxed);
+        } else if let Some(hook) = inner.post_commit.get() {
+            (**hook)();
+        }
+    }
+}
+
+/// Finish a quota-accounted slice: release the tenant slot and requeue
+/// the earliest parked entry of that tenant, if one was waiting. The
+/// entry keeps its original (already weight-discounted) due and seq, so
+/// it re-enters exactly where the quota paused it.
+fn release_quota(inner: &Inner, slot: &JobSlot) {
+    if let Some((tenant, _)) = &slot.quota {
+        if let Some(entry) = inner.quotas.release(tenant) {
+            inner.heap.lock().unwrap().push(Reverse(entry));
+            inner.heap_cv.notify_one();
         }
     }
 }
@@ -349,11 +476,27 @@ fn worker_loop(inner: &Inner) {
         let slot = { inner.jobs.lock().unwrap().get(&entry.name).cloned() };
         let Some(slot) = slot else { continue };
 
+        // tenant in-flight quota gate: a tenant at its `max_in_flight`
+        // parks the entry; a finishing slice of that tenant requeues it
+        if let Some((tenant, limit)) = &slot.quota {
+            let admitted = inner.quotas.acquire(
+                tenant,
+                *limit,
+                QueueEntry { due: entry.due, seq: entry.seq, name: entry.name.clone() },
+            );
+            if admitted.is_none() {
+                continue;
+            }
+        }
+
         // poll a bounded slice; the actor mutex is per-job, so workers on
         // other jobs are untouched. catch_unwind keeps one poisonous job
         // from taking the whole pool down (§3.3 robustness).
         let mut actor_guard = slot.actor.lock().unwrap();
-        let Some(actor) = actor_guard.as_mut() else { continue };
+        let Some(actor) = actor_guard.as_mut() else {
+            release_quota(inner, &slot);
+            continue;
+        };
         slot.polls.fetch_add(1, Ordering::Relaxed);
         let polled = std::panic::catch_unwind(AssertUnwindSafe(|| {
             actor.poll(inner.batch_steps)
@@ -362,6 +505,7 @@ fn worker_loop(inner: &Inner) {
             Ok(ActorPoll::Pending { due }) => {
                 drop(actor_guard);
                 push_entry(inner, due, slot.weight, entry.name);
+                release_quota(inner, &slot);
                 // group commit: one fsync covers every record this poll
                 // slice appended (store puts, metric emits, checkpoint)
                 commit_wal(inner);
@@ -369,6 +513,7 @@ fn worker_loop(inner: &Inner) {
             Ok(ActorPoll::Complete(outcome)) => {
                 *actor_guard = None; // release strategy/platform resources
                 drop(actor_guard);
+                release_quota(inner, &slot);
                 // durability before acknowledgment: the terminal store
                 // records must be on disk before any waiter can observe
                 // the outcome (best-effort under disk errors — see
@@ -385,6 +530,7 @@ fn worker_loop(inner: &Inner) {
             Err(_) => {
                 *actor_guard = None;
                 drop(actor_guard);
+                release_quota(inner, &slot);
                 commit_wal(inner);
                 let mut state = slot.state.lock().unwrap();
                 inner.running.fetch_sub(1, Ordering::Relaxed);
@@ -418,16 +564,23 @@ mod tests {
         weight: u32,
         stop_flag: Arc<AtomicBool>,
     ) -> JobActor {
-        let request = TuningJobRequest {
-            name: name.into(),
-            objective: "branin".into(),
-            strategy: "random".into(),
-            max_training_jobs: evals,
-            max_parallel_jobs: 2,
-            seed,
-            tenant_weight: weight,
-            ..Default::default()
-        };
+        actor_from_request(
+            TuningJobRequest {
+                name: name.into(),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: evals,
+                max_parallel_jobs: 2,
+                seed,
+                tenant_weight: weight,
+                ..Default::default()
+            },
+            stop_flag,
+        )
+    }
+
+    fn actor_from_request(request: TuningJobRequest, stop_flag: Arc<AtomicBool>) -> JobActor {
+        let seed = request.seed;
         let objective: Arc<dyn Objective> =
             crate::objectives::by_name("branin").unwrap().into();
         let strategy = crate::strategies::by_name(
@@ -527,6 +680,67 @@ mod tests {
             "heavy/light poll ratio {ratio:.2} outside ~2x band (h={h}, l={l})"
         );
         assert!(sched.poll_count("ghost").is_none());
+    }
+
+    /// Per-tenant in-flight quota (`max_in_flight`): a quota-1 tenant
+    /// never holds two pool workers at once, even with two runnable jobs
+    /// and a spare worker — its second job parks until the first's slice
+    /// finishes. A quota-less tenant on the same pool does overlap,
+    /// proving the high-water probe would catch a breach.
+    #[test]
+    fn quota_one_tenant_never_holds_two_workers() {
+        let sched = Scheduler::new(SchedulerConfig { workers: 3, batch_steps: 4 });
+        let names = ["capped-a", "capped-b", "free-a", "free-b"];
+        for (name, tenant, quota) in [
+            ("capped-a", "capped", 1u32),
+            ("capped-b", "capped", 1),
+            ("free-a", "free", 0),
+            ("free-b", "free", 0),
+        ] {
+            let flag = Arc::new(AtomicBool::new(false));
+            let request = TuningJobRequest {
+                name: name.into(),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: 10_000,
+                max_parallel_jobs: 2,
+                seed: 5,
+                tenant: tenant.into(),
+                max_in_flight: quota,
+                ..Default::default()
+            };
+            assert!(sched.submit(actor_from_request(request, Arc::clone(&flag)), flag));
+        }
+        // with at most one capped slice running, two of the three workers
+        // are left for the two "free" jobs — wait for their overlap and
+        // for both capped jobs to make progress under the quota
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        while sched.tenant_high_water("free") < 2
+            || sched.poll_count("capped-a").unwrap() == 0
+            || sched.poll_count("capped-b").unwrap() == 0
+        {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "no overlap/progress: free hw {}, capped polls {}/{}",
+                sched.tenant_high_water("free"),
+                sched.poll_count("capped-a").unwrap(),
+                sched.poll_count("capped-b").unwrap()
+            );
+            std::thread::yield_now();
+        }
+        for name in names {
+            sched.stop(name);
+        }
+        for name in names {
+            sched.wait(name).unwrap();
+        }
+        assert_eq!(
+            sched.tenant_high_water("capped"),
+            1,
+            "quota-1 tenant held two workers"
+        );
+        assert!(sched.tenant_high_water("free") >= 2);
+        assert_eq!(sched.tenant_high_water("ghost"), 0);
     }
 
     #[test]

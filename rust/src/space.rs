@@ -419,6 +419,47 @@ impl Value {
     }
 }
 
+/// Type-tagged JSON form of a [`Value`]: unlike [`Value::to_json`] (whose
+/// reader collapses ints to floats), `Int` is written as `{"int": n}` so
+/// the round trip through [`value_from_json_typed`] is exact. This is the
+/// encoding the durable `warm_start` table and the distributed wire
+/// protocol use — a config shipped across a process boundary comes back
+/// with *exactly* its original variants (f64s round-trip bit-exactly
+/// through the JSON layer).
+pub fn value_to_json_typed(v: &Value) -> Json {
+    match v {
+        Value::Float(f) => Json::Num(*f),
+        Value::Int(i) => Json::obj(vec![("int", Json::Num(*i as f64))]),
+        Value::Cat(s) => Json::Str(s.clone()),
+    }
+}
+
+/// Reader for [`value_to_json_typed`].
+pub fn value_from_json_typed(j: &Json) -> Option<Value> {
+    match j {
+        Json::Num(n) => Some(Value::Float(*n)),
+        Json::Str(s) => Some(Value::Cat(s.clone())),
+        Json::Obj(_) => Some(Value::Int(j.get("int")?.as_i64()?)),
+        _ => None,
+    }
+}
+
+/// Serialize a configuration with type-tagged values (exact round trip;
+/// see [`value_to_json_typed`]).
+pub fn config_to_json_typed(config: &Config) -> Json {
+    Json::Obj(config.iter().map(|(k, v)| (k.clone(), value_to_json_typed(v))).collect())
+}
+
+/// Deserialize a type-tagged configuration.
+pub fn config_from_json_typed(j: &Json) -> Option<Config> {
+    let obj = j.as_obj()?;
+    let mut cfg = Config::new();
+    for (k, v) in obj {
+        cfg.insert(k.clone(), value_from_json_typed(v)?);
+    }
+    Some(cfg)
+}
+
 /// Serialize a configuration.
 pub fn config_to_json(config: &Config) -> Json {
     Json::Obj(config.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())

@@ -447,6 +447,30 @@ pub fn by_name(
     })
 }
 
+/// Build the strategy a validated tuning-job request names, seeding BO
+/// with warm-start transfer observations. This is the **single**
+/// construction path shared by the API layer (`AmtService`) and remote
+/// workers (`distributed::worker`): cross-plane bit-identity depends on
+/// both sides wiring strategies exactly the same way, so any change to
+/// the wiring belongs here, not in either caller.
+pub fn for_request(
+    name: &str,
+    space: &SearchSpace,
+    backend: Arc<dyn SurrogateBackend>,
+    seed: u64,
+    transferred: Vec<Observation>,
+) -> Option<Box<dyn Strategy>> {
+    match name {
+        "bayesian" | "bo" => {
+            let mut bo =
+                BayesianOptimization::new(space.clone(), backend, BoConfig::default(), seed);
+            bo.add_transferred(transferred);
+            Some(Box::new(bo))
+        }
+        other => by_name(other, space, backend, seed),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

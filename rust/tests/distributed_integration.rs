@@ -1,0 +1,351 @@
+//! Distributed-plane integration tests (DESIGN.md §11) through the
+//! public `AmtService` surface, all over the loopback transport — the
+//! full encode → frame → decode wire path, deterministically in one
+//! process.
+//!
+//! The centerpiece is the acceptance property: a 64-job spike through
+//! the `RemoteWorkerPool` finishes with **bit-identical** per-job
+//! trajectories, final store contents (values *and* versions) and
+//! metric series to the same spike on the in-process scheduler. The
+//! worker-kill test then exercises the lease/requeue machinery: jobs on
+//! a killed worker are reset and replayed on the survivor, and the
+//! final state still matches an uninterrupted run.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::coordinator::TuningJobOutcome;
+use amt::distributed::leader::RemoteConfig;
+use amt::distributed::transport::{LoopbackFault, Transport};
+use amt::distributed::worker::spawn_loopback_worker;
+use amt::platform::PlatformConfig;
+use amt::workflow::ExecutionStatus;
+
+struct WorkerSet {
+    faults: Vec<Arc<LoopbackFault>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn spawn_workers(n: usize, tag: &str) -> (Vec<Box<dyn Transport>>, WorkerSet) {
+    let mut transports = Vec::new();
+    let mut faults = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let (t, fault, h) = spawn_loopback_worker(&format!("{tag}-{i}"));
+        transports.push(t);
+        faults.push(fault);
+        handles.push(h);
+    }
+    (transports, WorkerSet { faults, handles })
+}
+
+impl WorkerSet {
+    fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The spike both planes run: a mix of objectives and strategies, a
+/// weighted tenant, and (second phase) warm-started BO children.
+fn spike_requests() -> (Vec<TuningJobRequest>, Vec<TuningJobRequest>) {
+    let mut parents = Vec::new();
+    for i in 0..4u64 {
+        parents.push(TuningJobRequest {
+            name: format!("dist-parent-{i}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 5,
+            max_parallel_jobs: 2,
+            seed: 100 + i,
+            ..Default::default()
+        });
+    }
+    let mut children = Vec::new();
+    for i in 0..58u64 {
+        children.push(TuningJobRequest {
+            name: format!("dist-{i:02}"),
+            objective: if i % 3 == 0 { "xgboost_dm" } else { "branin" }.into(),
+            strategy: "random".into(),
+            max_training_jobs: 4,
+            max_parallel_jobs: 2,
+            seed: i,
+            tenant_weight: if i % 7 == 0 { 2 } else { 1 },
+            ..Default::default()
+        });
+    }
+    // two warm-started BO children: the transfer observations must ship
+    // to the worker and seed the strategy exactly as they would locally
+    for i in 0..2u64 {
+        children.push(TuningJobRequest {
+            name: format!("dist-warm-{i}"),
+            objective: "branin".into(),
+            strategy: "bayesian".into(),
+            max_training_jobs: 3,
+            max_parallel_jobs: 1,
+            seed: 777 + i,
+            warm_start_parents: vec![format!("dist-parent-{i}")],
+            ..Default::default()
+        });
+    }
+    (parents, children)
+}
+
+fn run_spike(svc: &AmtService) -> Vec<(String, TuningJobOutcome)> {
+    let (parents, children) = spike_requests();
+    let mut outcomes = Vec::new();
+    for r in &parents {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    for r in &parents {
+        outcomes.push((r.name.clone(), svc.wait(&r.name).unwrap()));
+    }
+    for r in &children {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    for r in &children {
+        outcomes.push((r.name.clone(), svc.wait(&r.name).unwrap()));
+    }
+    outcomes
+}
+
+/// Everything the cross-plane comparison looks at, in bits.
+fn outcome_fingerprint(o: &TuningJobOutcome) -> Vec<(String, Option<u64>, u64)> {
+    o.evaluations
+        .iter()
+        .map(|e| {
+            (
+                e.training_job_name.clone(),
+                e.final_value.map(f64::to_bits),
+                e.ended_at.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn assert_services_identical(local: &AmtService, remote: &AmtService) {
+    assert_eq!(
+        local.store().snapshot(),
+        remote.store().snapshot(),
+        "store contents (values + versions) diverged across planes"
+    );
+    let streams = local.metrics().list_streams("");
+    assert_eq!(streams, remote.metrics().list_streams(""), "stream sets diverged");
+    for s in &streams {
+        let a: Vec<(u64, u64)> = local
+            .metrics()
+            .series(s)
+            .iter()
+            .map(|p| (p.time.to_bits(), p.value.to_bits()))
+            .collect();
+        let b: Vec<(u64, u64)> = remote
+            .metrics()
+            .series(s)
+            .iter()
+            .map(|p| (p.time.to_bits(), p.value.to_bits()))
+            .collect();
+        assert_eq!(a, b, "metric series '{s}' diverged");
+    }
+}
+
+/// Acceptance property: a 64-job spike through the loopback
+/// `RemoteWorkerPool` is bit-identical to the in-process pool.
+#[test]
+fn loopback_remote_pool_bit_identical_to_in_process() {
+    let local = AmtService::new(PlatformConfig::noiseless());
+    let local_outcomes = run_spike(&local);
+
+    let (transports, workers) = spawn_workers(4, "ident");
+    let remote = AmtService::with_remote_workers(PlatformConfig::noiseless(), transports);
+    let remote_outcomes = run_spike(&remote);
+
+    assert_eq!(local_outcomes.len(), 64);
+    for ((name_a, a), (name_b, b)) in local_outcomes.iter().zip(&remote_outcomes) {
+        assert_eq!(name_a, name_b);
+        assert_eq!(a.status, b.status, "{name_a}: status diverged");
+        assert_eq!(
+            outcome_fingerprint(a),
+            outcome_fingerprint(b),
+            "{name_a}: evaluation trajectory diverged"
+        );
+        assert_eq!(
+            a.total_seconds.to_bits(),
+            b.total_seconds.to_bits(),
+            "{name_a}: virtual timeline diverged"
+        );
+        match (&a.best, &b.best) {
+            (None, None) => {}
+            (Some((ca, va)), Some((cb, vb))) => {
+                assert_eq!(ca, cb, "{name_a}: best config diverged");
+                assert_eq!(va.to_bits(), vb.to_bits(), "{name_a}: best value diverged");
+            }
+            _ => panic!("{name_a}: best presence diverged"),
+        }
+    }
+    assert_services_identical(&local, &remote);
+    assert_eq!(remote.running_jobs(), 0);
+    drop(remote);
+    workers.join();
+}
+
+/// Worker failure: kill one of two workers mid-spike. Its in-flight
+/// jobs are reset and replayed on the survivor from their request seeds
+/// (requeue-from-checkpoint via the PR 3 recovery machinery), and the
+/// final state is bit-identical to a run that was never interrupted.
+#[test]
+fn killed_worker_jobs_requeue_and_match_uninterrupted_run() {
+    let requests: Vec<TuningJobRequest> = (0..6u64)
+        .map(|i| TuningJobRequest {
+            name: format!("kill-{i}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 6,
+            max_parallel_jobs: 2,
+            seed: 9000 + i,
+            ..Default::default()
+        })
+        .collect();
+
+    // uninterrupted reference on the in-process pool
+    let reference = AmtService::new(PlatformConfig::noiseless());
+    for r in &requests {
+        reference.create_tuning_job(r.clone()).unwrap();
+    }
+    let mut ref_outcomes = Vec::new();
+    for r in &requests {
+        ref_outcomes.push(reference.wait(&r.name).unwrap());
+    }
+
+    // distributed run with a mid-spike worker kill; small slices make
+    // sure jobs take many polls, so the kill lands mid-job. The default
+    // lease stays: a killed loopback link errors immediately, so death
+    // detection does not depend on lease expiry here.
+    let (transports, workers) = spawn_workers(2, "kill");
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 8, ..RemoteConfig::default() },
+    );
+    for r in &requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    // let the spike get going, then kill worker 0
+    let pool = svc.remote_pool().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let total: u64 = requests.iter().filter_map(|r| pool.poll_count(&r.name)).sum();
+        if total >= 4 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "spike never started");
+        std::thread::yield_now();
+    }
+    workers.faults[0].kill();
+
+    let mut outcomes = Vec::new();
+    for r in &requests {
+        outcomes.push(svc.wait(&r.name).unwrap());
+    }
+    assert_eq!(pool.live_workers(), 1, "killed worker still counted live");
+
+    for (a, b) in ref_outcomes.iter().zip(&outcomes) {
+        assert_eq!(b.status, ExecutionStatus::Succeeded, "{} failed", b.name);
+        assert_eq!(
+            outcome_fingerprint(a),
+            outcome_fingerprint(b),
+            "{}: trajectory diverged after worker kill",
+            a.name
+        );
+    }
+    assert_services_identical(&reference, &svc);
+    drop(svc);
+    workers.join();
+}
+
+/// Remote deltas flow through the leader's durability commit path: a
+/// durable service with remote workers survives close/reopen with the
+/// exact store the remote jobs produced.
+#[test]
+fn durable_service_with_remote_workers_recovers_after_close() {
+    let dir = std::env::temp_dir().join(format!(
+        "amt-dist-dur-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let (transports, workers) = spawn_workers(2, "durable");
+    let mut svc = AmtService::open(&dir, PlatformConfig::noiseless()).unwrap();
+    svc.attach_remote_workers(transports, RemoteConfig::default());
+    for i in 0..3u64 {
+        svc.create_tuning_job(TuningJobRequest {
+            name: format!("dur-remote-{i}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 4,
+            max_parallel_jobs: 2,
+            seed: 40 + i,
+            ..Default::default()
+        })
+        .unwrap();
+    }
+    for i in 0..3u64 {
+        let out = svc.wait(&format!("dur-remote-{i}")).unwrap();
+        assert_eq!(out.evaluations.len(), 4);
+    }
+    let snapshot_before = svc.store().snapshot();
+    svc.close().unwrap();
+    workers.join();
+
+    let reopened = AmtService::open(&dir, PlatformConfig::noiseless()).unwrap();
+    assert!(reopened.recovered_jobs().is_empty(), "terminal jobs must not resume");
+    assert_eq!(reopened.store().snapshot(), snapshot_before);
+    for i in 0..3u64 {
+        let d = reopened.describe_tuning_job(&format!("dur-remote-{i}")).unwrap();
+        assert_eq!(d.status, "Completed");
+        assert_eq!(d.evaluations, 4);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The per-tenant in-flight quota holds across remote workers too: a
+/// quota-1 tenant never occupies two workers at once.
+#[test]
+fn remote_quota_one_tenant_never_holds_two_workers() {
+    let (transports, workers) = spawn_workers(2, "quota");
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 8, ..RemoteConfig::default() },
+    );
+    for i in 0..2u64 {
+        svc.create_tuning_job(TuningJobRequest {
+            name: format!("rq-{i}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 30,
+            max_parallel_jobs: 2,
+            seed: i,
+            tenant: "capped".into(),
+            max_in_flight: 1,
+            ..Default::default()
+        })
+        .unwrap();
+    }
+    for i in 0..2u64 {
+        let out = svc.wait(&format!("rq-{i}")).unwrap();
+        assert_eq!(out.evaluations.len(), 30);
+    }
+    let pool = svc.remote_pool().unwrap();
+    assert_eq!(
+        pool.tenant_high_water("capped"),
+        1,
+        "quota-1 tenant held two remote workers"
+    );
+    drop(svc);
+    workers.join();
+}

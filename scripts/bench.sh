@@ -11,6 +11,12 @@
 # BENCH_soak.json entries are the synchronous-API latency distribution at
 # 200- and 1000-job spikes on the multi-tenant scheduler; jobs/sec, p99
 # latency and the store write count ride along in each entry's params.
+# With --distributed 4 each spike repeats through the loopback remote
+# worker pool, so both execution planes are on the perf trajectory.
+#
+# BENCH_distributed.json entries are the distributed plane's own costs
+# (DESIGN.md §11): frame encode/decode throughput, loopback round-trip
+# latency and a 200-job soak through the RemoteWorkerPool.
 #
 # Usage:
 #   scripts/bench.sh            # run + diff (fails on >TOLERANCE regressions)
@@ -31,11 +37,13 @@ AMT_BENCH_DIR="$run_dir" cargo bench --bench bo_propose
 AMT_BENCH_DIR="$run_dir" cargo bench --bench gp_fit
 echo "== running recovery bench (WAL append/replay + 200-job open) =="
 AMT_BENCH_DIR="$run_dir" cargo bench --bench recovery
-echo "== running scale soak (200- and 1000-job spikes) =="
-AMT_BENCH_DIR="$run_dir" cargo run --release --example scale_soak -- 200 1000
+echo "== running distributed bench (frame codec, loopback RTT, remote soak) =="
+AMT_BENCH_DIR="$run_dir" cargo bench --bench distributed
+echo "== running scale soak (200- and 1000-job spikes, both planes) =="
+AMT_BENCH_DIR="$run_dir" cargo run --release --example scale_soak -- 200 1000 --distributed 4
 
 status=0
-for f in BENCH_propose.json BENCH_gp_fit.json BENCH_recovery.json BENCH_soak.json; do
+for f in BENCH_propose.json BENCH_gp_fit.json BENCH_recovery.json BENCH_distributed.json BENCH_soak.json; do
     fresh="$run_dir/$f"
     if [ ! -f "$fresh" ]; then
         echo "ERROR: bench did not produce $f" >&2

@@ -12,6 +12,9 @@ cd "$(dirname "$0")/.."
 echo "== tier-1 verify: cargo build --release =="
 cargo build --release
 
+echo "== tier-1 verify: cargo build --benches --examples =="
+cargo build --release --benches --examples
+
 echo "== tier-1 verify: cargo test -q =="
 cargo test -q
 
