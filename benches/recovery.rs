@@ -1,17 +1,25 @@
-//! Durability-engine benchmark (DESIGN.md §10): WAL append throughput,
-//! WAL replay rate, and recovery-on-open time for a 200-job store.
+//! Durability-engine benchmark (DESIGN.md §10/§12): WAL append
+//! throughput, WAL replay rate, recovery-on-open time for a 200-job
+//! store, and the incremental-resume comparison — scratch-replay vs
+//! snapshot-resume recovery of a 200-job durable service killed
+//! mid-spike, with the "strategy proposals re-executed during recovery"
+//! counter (must be 0 on the snapshot fast path).
 //! Emits `BENCH_recovery.json` (schema in `harness::BenchReport`;
 //! `AMT_BENCH_DIR` overrides the output directory).
 //! `cargo bench --bench recovery`.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-use amt::api::AmtService;
+use amt::api::{AmtService, RecoveryStats};
 use amt::config::TuningJobRequest;
+use amt::coordinator::checkpoint_cursor;
 use amt::durability::wal::{Wal, WalRecord, WAL_FILE};
+use amt::gp::NativeBackend;
 use amt::harness::{bench, BenchReport};
 use amt::json::Json;
 use amt::platform::PlatformConfig;
+use amt::scheduler::SchedulerConfig;
 
 fn tmpdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!(
@@ -114,10 +122,148 @@ fn main() {
         &stats,
     );
 
+    // --- incremental resume: scratch-replay vs snapshot-resume for the
+    // same 200-job durable service killed mid-spike (DESIGN.md §12).
+    // One worker keeps slices contiguous in the WAL, so a cut right
+    // after the last checkpoint leaves every polled-but-unfinished job
+    // with an aligned v1 snapshot (fast path, 0 re-executed proposals)
+    // and unpolled jobs with only their create records (0 proposals
+    // either way). Rewriting the same prefix's checkpoints to legacy v0
+    // cursors forces the pre-v1 scratch path on identical work. ---
+    let resume_src = tmpdir("resume-src");
+    {
+        let svc = AmtService::open_with_options(
+            &resume_src,
+            PlatformConfig::noiseless(),
+            Arc::new(NativeBackend),
+            SchedulerConfig { workers: 1, batch_steps: 8 },
+        )
+        .unwrap();
+        svc.wal().unwrap().set_fsync(false);
+        for i in 0..RECOVERY_JOBS {
+            svc.create_tuning_job(TuningJobRequest {
+                name: format!("res-{i:04}"),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: 3,
+                max_parallel_jobs: 2,
+                seed: 900 + i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        for i in 0..RECOVERY_JOBS {
+            svc.wait(&format!("res-{i:04}")).unwrap();
+        }
+        svc.wal().unwrap().commit().unwrap();
+        // crash-style teardown
+    }
+    let full = std::fs::read(resume_src.join(WAL_FILE)).unwrap();
+    let scan = Wal::scan(&resume_src.join(WAL_FILE)).unwrap();
+    // kill point: right after the checkpoint at ~60% of the log
+    let ckpt_idxs: Vec<usize> = scan
+        .records
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, r))| matches!(r, WalRecord::Checkpoint { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    let cut_idx = ckpt_idxs[ckpt_idxs.len() * 6 / 10];
+    let prefix = &full[..scan.frame_ends[cut_idx] as usize];
+    // the same prefix with every checkpoint stripped to a legacy v0
+    // cursor: recovery must fall back to scratch replay
+    let v0_prefix = {
+        let dir = tmpdir("resume-v0-build");
+        let wal = Wal::create(&dir).unwrap();
+        wal.set_fsync(false);
+        for (_, rec) in &Wal::decode_frames(prefix).records {
+            let rec = match rec {
+                WalRecord::Checkpoint { job, exec } => WalRecord::Checkpoint {
+                    job: job.clone(),
+                    exec: checkpoint_cursor(exec).expect("cursor parses").to_json(),
+                },
+                other => other.clone(),
+            };
+            wal.append(&rec);
+        }
+        wal.commit().unwrap();
+        let bytes = std::fs::read(dir.join(WAL_FILE)).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        bytes
+    };
+
+    fn run_recovery(dir: &Path, bytes: &[u8]) -> RecoveryStats {
+        let _ = std::fs::remove_dir_all(dir);
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join(WAL_FILE), bytes).unwrap();
+        let svc = AmtService::open_with_options(
+            dir,
+            PlatformConfig::noiseless(),
+            Arc::new(NativeBackend),
+            SchedulerConfig { workers: 4, batch_steps: 8 },
+        )
+        .unwrap();
+        svc.wal().unwrap().set_fsync(false);
+        for name in svc.recovered_jobs().to_vec() {
+            svc.wait(&name).unwrap();
+        }
+        svc.recovery_stats()
+    }
+
+    let snap_dir = tmpdir("resume-snap");
+    let mut snap_stats = RecoveryStats::default();
+    let stats = bench("snapshot-resume: 200-job kill + open + finish", 0, 3, || {
+        snap_stats = run_recovery(&snap_dir, prefix);
+    });
+    assert_eq!(
+        snap_stats.replayed_proposals, 0,
+        "snapshot fast path must re-execute 0 strategy proposals \
+         (fast={}, scratch={})",
+        snap_stats.fast_resumed, snap_stats.scratch_resumed
+    );
+    report.push(
+        "resume_snapshot_200_jobs",
+        &[
+            ("jobs", RECOVERY_JOBS.to_string()),
+            ("fast_resumed", snap_stats.fast_resumed.to_string()),
+            ("scratch_resumed", snap_stats.scratch_resumed.to_string()),
+            ("replayed_proposals", snap_stats.replayed_proposals.to_string()),
+        ],
+        &stats,
+    );
+
+    let scratch_dir = tmpdir("resume-scratch");
+    let mut scratch_stats = RecoveryStats::default();
+    let stats = bench("scratch-replay: 200-job kill + open + finish", 0, 3, || {
+        scratch_stats = run_recovery(&scratch_dir, &v0_prefix);
+    });
+    assert_eq!(scratch_stats.fast_resumed, 0, "v0 checkpoints must not fast-path");
+    report.push(
+        "resume_scratch_200_jobs",
+        &[
+            ("jobs", RECOVERY_JOBS.to_string()),
+            ("fast_resumed", scratch_stats.fast_resumed.to_string()),
+            ("scratch_resumed", scratch_stats.scratch_resumed.to_string()),
+            ("replayed_proposals", scratch_stats.replayed_proposals.to_string()),
+        ],
+        &stats,
+    );
+    println!(
+        "resume comparison: snapshot fast={} scratch={} proposals=0 | \
+         v0 scratch={} proposals={}",
+        snap_stats.fast_resumed,
+        snap_stats.scratch_resumed,
+        scratch_stats.scratch_resumed,
+        scratch_stats.replayed_proposals
+    );
+
     match report.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("failed to write BENCH_recovery.json: {e}"),
     }
     let _ = std::fs::remove_dir_all(&append_dir);
     let _ = std::fs::remove_dir_all(&svc_dir);
+    let _ = std::fs::remove_dir_all(&resume_src);
+    let _ = std::fs::remove_dir_all(&snap_dir);
+    let _ = std::fs::remove_dir_all(&scratch_dir);
 }

@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::config::TuningJobRequest;
-use crate::coordinator::{stopping_by_name, JobActor, TuningJobOutcome};
+use crate::coordinator::{actor_from_snapshot, stopping_by_name, JobActor, TuningJobOutcome};
 use crate::distributed::leader::{RemoteConfig, RemoteJobSpec, RemoteWorkerPool};
 use crate::distributed::transport::Transport;
 use crate::durability::{recovery, snapshot, wal::Wal, DurabilityOptions};
@@ -34,7 +34,7 @@ use crate::platform::{PlatformConfig, TrainingPlatform};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::space::{config_from_json, Value};
 use crate::store::MetadataStore;
-use crate::strategies::{Observation, Strategy};
+use crate::strategies::{observations_from_json, observations_to_json, Observation, Strategy};
 use crate::warmstart::{transfer, ParentJob, TransferOptions};
 
 /// Page size for store scans performed inside API handlers (warm-start
@@ -61,6 +61,23 @@ impl std::fmt::Display for ApiError {
 }
 
 impl std::error::Error for ApiError {}
+
+/// How recovery-on-open resumed the non-terminal jobs it found
+/// (DESIGN.md §12). The split is the observable the incremental-resume
+/// property tests and `benches/recovery.rs` assert on.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryStats {
+    /// Jobs rebuilt directly from a v1 resume snapshot — O(remaining
+    /// work), zero strategy proposals re-executed.
+    pub fast_resumed: usize,
+    /// Jobs resumed by scratch replay (reset + deterministic re-create
+    /// from the request seed) — the pre-v1 path, still exact.
+    pub scratch_resumed: usize,
+    /// Strategy proposals re-executed during recovery: for each
+    /// scratch-replayed job, the evaluations that already existed before
+    /// the crash (snapshot-resumed jobs contribute 0 by construction).
+    pub replayed_proposals: u64,
+}
 
 /// Tuning-job summary returned by List/Describe.
 #[derive(Clone, Debug)]
@@ -95,6 +112,8 @@ pub struct AmtService {
     data_dir: Option<PathBuf>,
     /// Names of the non-terminal jobs `open` resumed, name-sorted.
     recovered: Vec<String>,
+    /// How those jobs were resumed (snapshot fast path vs scratch).
+    recovery_stats: RecoveryStats,
     /// API call counters for the §6.5 availability accounting.
     pub api_calls: std::sync::atomic::AtomicU64,
     /// API calls that returned an error.
@@ -137,6 +156,7 @@ impl AmtService {
             post_commit_hook: None,
             data_dir: None,
             recovered: Vec::new(),
+            recovery_stats: RecoveryStats::default(),
             api_calls: std::sync::atomic::AtomicU64::new(0),
             api_errors: std::sync::atomic::AtomicU64::new(0),
         }
@@ -278,6 +298,7 @@ impl AmtService {
             post_commit_hook,
             data_dir: Some(dir.as_ref().to_path_buf()),
             recovered: Vec::new(),
+            recovery_stats: RecoveryStats::default(),
             api_calls: std::sync::atomic::AtomicU64::new(0),
             api_errors: std::sync::atomic::AtomicU64::new(0),
         };
@@ -314,8 +335,42 @@ impl AmtService {
                 );
                 continue;
             }
-            // the transfer observations persisted at the original create
-            // (if any) — read before the reset deletes them
+            // O(remaining work) fast path (DESIGN.md §12): recovery
+            // aligned this job's store/metrics state to exactly its last
+            // v1 checkpoint, so the actor rebuilds from the snapshot and
+            // resumes mid-flight — no reset, no re-created records, zero
+            // strategy proposals re-executed
+            if let Some(snap) = &job.resume {
+                let stop_flag = Arc::new(AtomicBool::new(false));
+                match actor_from_snapshot(
+                    request.clone(),
+                    snap,
+                    Arc::clone(&svc.backend),
+                    Arc::clone(&svc.store),
+                    Arc::clone(&svc.metrics),
+                    Arc::clone(&stop_flag),
+                ) {
+                    Ok(actor) => {
+                        let due = actor.due();
+                        if svc.scheduler.register(actor, stop_flag) {
+                            svc.scheduler.activate_at(&request.name, due);
+                            svc.recovered.push(request.name.clone());
+                            svc.recovery_stats.fast_resumed += 1;
+                            continue;
+                        }
+                        // a name collision on a fresh scheduler cannot
+                        // happen; fall through to scratch defensively
+                    }
+                    Err(_) => {
+                        // schema/kind mismatch (e.g. a snapshot written
+                        // by a different build): scratch replay below is
+                        // always exact
+                    }
+                }
+            }
+            // scratch replay: the transfer observations persisted at the
+            // original create (if any) — read before the reset deletes
+            // them
             let persisted_transfer = svc
                 .store
                 .get("warm_start", &request.name)
@@ -324,6 +379,11 @@ impl AmtService {
             // ordinary create path: deterministic replay re-produces every
             // put (same order ⇒ same values and versions) and runs on to
             // completion
+            svc.recovery_stats.scratch_resumed += 1;
+            svc.recovery_stats.replayed_proposals += svc
+                .store
+                .list_keys("training_jobs", &format!("{}-train-", request.name))
+                .len() as u64;
             svc.reset_job_state(&request.name);
             let name = request.name.clone();
             let result = match persisted_transfer {
@@ -359,6 +419,13 @@ impl AmtService {
     /// Names of the non-terminal jobs recovery resumed, name-sorted.
     pub fn recovered_jobs(&self) -> &[String] {
         &self.recovered
+    }
+
+    /// How recovery-on-open resumed those jobs: snapshot fast path vs
+    /// scratch replay, and the strategy proposals re-executed (0 for
+    /// every snapshot-resumed job).
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery_stats
     }
 
     /// The durability WAL, when this service was `open`ed durably.
@@ -547,26 +614,32 @@ impl AmtService {
         };
 
         // registry-objective jobs dispatch to the remote plane when one
-        // is attached: same reserve → persist → activate discipline, but
-        // the worker rebuilds the actor from the shipped request instead
-        // of receiving one built here
+        // is attached AND a live worker runs a compatible surrogate
+        // backend (mixed-backend fleets must not evaluate this job on a
+        // different backend — bit-consistency); otherwise fall through
+        // to the local plane. Same reserve → persist → activate
+        // discipline either way, but the worker rebuilds the actor from
+        // the shipped request instead of receiving one built here.
         if remote_ok {
             if let Some(remote) = &self.remote {
                 debug_assert!(
                     objective_by_name(&request.objective).is_some(),
                     "remote_ok implies a registry objective"
                 );
-                let spec = RemoteJobSpec {
-                    request: request.clone(),
-                    platform: self.platform_config.clone(),
-                    transfer: transferred,
-                };
-                if !remote.register(spec) {
-                    return self.fail(ApiError::AlreadyExists(request.name));
+                if remote.supports_backend(self.backend.name()) {
+                    let spec = RemoteJobSpec {
+                        request: request.clone(),
+                        platform: self.platform_config.clone(),
+                        transfer: transferred,
+                        backend: self.backend.name().to_string(),
+                    };
+                    if !remote.register(spec) {
+                        return self.fail(ApiError::AlreadyExists(request.name));
+                    }
+                    persist_job_seeds(&self.store, &request, transfer_json);
+                    remote.activate(&request.name);
+                    return Ok(request.name);
                 }
-                persist_job_seeds(&self.store, &request, transfer_json);
-                remote.activate(&request.name);
-                return Ok(request.name);
             }
         }
 
@@ -763,40 +836,6 @@ pub(crate) fn persist_job_failed(
             ("failure_reason", Json::Str(reason.into())),
         ]),
     );
-}
-
-/// Wire form of warm-start transfer observations: the `warm_start`
-/// table's `observations` field and the distributed `Assign` message's
-/// `transfer` field. Values use the type-tagged encoding
-/// ([`crate::space::config_to_json_typed`]) — `Int` as `{"int": n}` —
-/// so the round trip is exact and a recovered or remotely-hosted
-/// child's strategy seeds with *exactly* the observations the original
-/// create resolved (f64s round-trip bit-exactly through the JSON
-/// layer).
-pub(crate) fn observations_to_json(obs: &[Observation]) -> Json {
-    Json::Arr(
-        obs.iter()
-            .map(|o| {
-                Json::obj(vec![
-                    ("config", crate::space::config_to_json_typed(&o.config)),
-                    ("value", Json::Num(o.value)),
-                ])
-            })
-            .collect(),
-    )
-}
-
-/// Reader for [`observations_to_json`] (takes the array).
-pub(crate) fn observations_from_json(arr: &Json) -> Option<Vec<Observation>> {
-    let arr = arr.as_arr()?;
-    let mut out = Vec::with_capacity(arr.len());
-    for entry in arr {
-        out.push(Observation {
-            config: crate::space::config_from_json_typed(entry.get("config")?)?,
-            value: entry.get("value")?.as_f64()?,
-        });
-    }
-    Some(out)
 }
 
 #[cfg(test)]

@@ -85,6 +85,41 @@ pub struct TuningJobOutcome {
     pub retries: u32,
 }
 
+impl EvaluationRecord {
+    /// JSON wire form (configs type-tagged, f64s bit-exact). Shared by
+    /// the distributed outcome codec ([`crate::distributed::proto`]) and
+    /// the resume-snapshot coordinator block (DESIGN.md §12).
+    pub fn to_json(&self) -> Json {
+        let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("name", Json::Str(self.training_job_name.clone())),
+            ("config", crate::space::config_to_json_typed(&self.config)),
+            ("curve", Json::Arr(self.curve.iter().map(|&v| Json::Num(v)).collect())),
+            ("final_value", opt_num(self.final_value)),
+            ("status", Json::Str(self.status.as_str().into())),
+            ("stopped_early", Json::Bool(self.stopped_early)),
+            ("attempts", Json::Num(self.attempts as f64)),
+            ("submitted_at", Json::Num(self.submitted_at)),
+            ("ended_at", Json::Num(self.ended_at)),
+        ])
+    }
+
+    /// Parse the JSON wire form.
+    pub fn from_json(j: &Json) -> Option<EvaluationRecord> {
+        Some(EvaluationRecord {
+            training_job_name: j.get("name")?.as_str()?.to_string(),
+            config: crate::space::config_from_json_typed(j.get("config")?)?,
+            curve: j.get("curve")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<_>>()?,
+            final_value: j.get("final_value").and_then(Json::as_f64),
+            status: TrainingJobStatus::parse(j.get("status")?.as_str()?)?,
+            stopped_early: j.get("stopped_early")?.as_bool()?,
+            attempts: j.get("attempts")?.as_i64()? as u32,
+            submitted_at: j.get("submitted_at")?.as_f64()?,
+            ended_at: j.get("ended_at")?.as_f64()?,
+        })
+    }
+}
+
 impl TuningJobOutcome {
     /// Best-so-far series over virtual time (raw orientation): one point
     /// per finished evaluation — the y-axis of Figs 3–5.
@@ -130,6 +165,113 @@ struct LoopCtx {
     retries: u32,
     /// per-eval remaining retry budget
     retry_budget: Vec<u32>,
+}
+
+/// Schema version of the checkpoint payload [`JobActor::poll`] writes.
+/// Legacy (v0) checkpoints carried the bare [`ExecutionState`] cursor;
+/// v1 payloads are full [`ResumeSnapshot`]s.
+pub const RESUME_SNAPSHOT_VERSION: i64 = 1;
+
+/// A self-sufficient mid-job state capture (schema v1, DESIGN.md §12):
+/// everything needed to rebuild a [`JobActor`] at a `Pending` boundary
+/// without replaying a single past strategy proposal — the execution
+/// cursor, the full strategy state ([`crate::strategies::StrategyState`]),
+/// the platform simulator's discrete-event state, and the coordinator
+/// run-loop state (observation history, early-stopping bands, in-flight
+/// table, evaluation records, retry budgets). A job resumed from any such
+/// snapshot produces a bit-identical remaining trajectory, evaluations,
+/// metric series and store versions versus the uninterrupted run.
+pub struct ResumeSnapshot {
+    /// Serialized [`ExecutionState`] cursor.
+    pub cursor: Json,
+    /// Serialized strategy state (kind-tagged).
+    pub strategy: Json,
+    /// Serialized [`TrainingPlatform`] discrete-event state.
+    pub platform: Json,
+    /// Serialized coordinator run-loop state.
+    pub coord: Json,
+}
+
+impl ResumeSnapshot {
+    /// Parse a checkpoint payload; `None` for legacy v0 cursor-only
+    /// payloads (which recover via scratch replay) or schema mismatches.
+    pub fn from_json(j: &Json) -> Option<ResumeSnapshot> {
+        if !is_resume_snapshot(j) {
+            return None;
+        }
+        Some(ResumeSnapshot {
+            cursor: j.get("cursor")?.clone(),
+            strategy: j.get("strategy")?.clone(),
+            platform: j.get("platform")?.clone(),
+            coord: j.get("coord")?.clone(),
+        })
+    }
+}
+
+/// Borrowing schema-tag probe: true when a checkpoint payload is a v1
+/// [`ResumeSnapshot`]. Hot paths (the leader's per-slice delta
+/// application, recovery's gating scan) use this instead of
+/// [`ResumeSnapshot::from_json`], which deep-clones the O(job state)
+/// payload.
+pub fn is_resume_snapshot(j: &Json) -> bool {
+    j.get("v").and_then(Json::as_i64) == Some(RESUME_SNAPSHOT_VERSION)
+}
+
+/// Extract the execution cursor from a checkpoint payload of either
+/// schema: a v1 [`ResumeSnapshot`]'s `cursor` field, or a legacy v0
+/// bare-cursor payload — borrowing, no payload clone. Recovery uses
+/// this for progress reporting regardless of which resume path the job
+/// takes.
+pub fn checkpoint_cursor(payload: &Json) -> Option<ExecutionState> {
+    if is_resume_snapshot(payload) {
+        ExecutionState::from_json(payload.get("cursor")?)
+    } else {
+        ExecutionState::from_json(payload)
+    }
+}
+
+impl LoopCtx {
+    /// Freeze the run-loop state into the `coord` block of a
+    /// [`ResumeSnapshot`].
+    fn coord_state_json(&self) -> Json {
+        let mut in_flight: Vec<(JobId, &InFlight)> =
+            self.in_flight.iter().map(|(id, fl)| (*id, fl)).collect();
+        in_flight.sort_by_key(|(id, _)| *id);
+        Json::obj(vec![
+            ("launched", Json::Num(self.launched as f64)),
+            ("history", crate::strategies::observations_to_json(&self.history)),
+            ("curve_history", self.curve_history.to_json()),
+            (
+                "in_flight",
+                Json::Arr(
+                    in_flight
+                        .into_iter()
+                        .map(|(id, fl)| {
+                            Json::obj(vec![
+                                ("id", Json::Num(id as f64)),
+                                ("eval", Json::Num(fl.eval_index as f64)),
+                                (
+                                    "curve_min",
+                                    Json::Arr(
+                                        fl.curve_min.iter().map(|&v| Json::Num(v)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evaluations",
+                Json::Arr(self.evaluations.iter().map(EvaluationRecord::to_json).collect()),
+            ),
+            ("retries", Json::Num(self.retries as f64)),
+            (
+                "retry_budget",
+                Json::Arr(self.retry_budget.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ),
+        ])
+    }
 }
 
 impl LoopCtx {
@@ -501,9 +643,121 @@ impl JobActor {
         }
     }
 
+    /// Rebuild a mid-flight actor from a v1 [`ResumeSnapshot`] — the
+    /// O(remaining work) resume path. `strategy` must be freshly
+    /// constructed for the same request (its frozen state, including any
+    /// warm-start transfer observations, is thawed here). On any schema
+    /// or kind mismatch the caller falls back to scratch replay.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_resume_snapshot(
+        request: TuningJobRequest,
+        objective: Arc<dyn Objective>,
+        mut strategy: Box<dyn Strategy>,
+        stopping: Box<dyn StoppingPolicy>,
+        snapshot: &Json,
+        store: Arc<MetadataStore>,
+        metrics: Arc<MetricsService>,
+        stop_flag: Arc<AtomicBool>,
+    ) -> Result<JobActor, String> {
+        let snap = ResumeSnapshot::from_json(snapshot)
+            .ok_or_else(|| "not a v1 resume snapshot".to_string())?;
+        let exec = ExecutionState::from_json(&snap.cursor)
+            .ok_or_else(|| "unparseable execution cursor".to_string())?;
+        if !strategy.restore_state(&snap.strategy) {
+            return Err("strategy state kind/schema mismatch".to_string());
+        }
+        let platform = TrainingPlatform::from_state_json(&snap.platform)
+            .ok_or_else(|| "unparseable platform state".to_string())?;
+
+        let c = &snap.coord;
+        let coord_err = || "unparseable coordinator state".to_string();
+        let launched =
+            c.get("launched").and_then(Json::as_i64).ok_or_else(coord_err)? as u32;
+        let history = c
+            .get("history")
+            .and_then(crate::strategies::observations_from_json)
+            .ok_or_else(coord_err)?;
+        let curve_history = c
+            .get("curve_history")
+            .and_then(CurveHistory::from_json)
+            .ok_or_else(coord_err)?;
+        let mut in_flight = HashMap::new();
+        for fl in c.get("in_flight").and_then(Json::as_arr).ok_or_else(coord_err)? {
+            let id = fl.get("id").and_then(Json::as_i64).ok_or_else(coord_err)? as JobId;
+            let eval_index =
+                fl.get("eval").and_then(Json::as_i64).ok_or_else(coord_err)? as usize;
+            let curve_min: Vec<f64> = fl
+                .get("curve_min")
+                .and_then(Json::as_arr)
+                .ok_or_else(coord_err)?
+                .iter()
+                .map(Json::as_f64)
+                .collect::<Option<_>>()
+                .ok_or_else(coord_err)?;
+            in_flight.insert(id, InFlight { eval_index, platform_id: id, curve_min });
+        }
+        let mut evaluations = Vec::new();
+        for e in c.get("evaluations").and_then(Json::as_arr).ok_or_else(coord_err)? {
+            evaluations.push(EvaluationRecord::from_json(e).ok_or_else(coord_err)?);
+        }
+        let retries =
+            c.get("retries").and_then(Json::as_i64).ok_or_else(coord_err)? as u32;
+        let retry_budget: Vec<u32> = c
+            .get("retry_budget")
+            .and_then(Json::as_arr)
+            .ok_or_else(coord_err)?
+            .iter()
+            .map(|v| v.as_i64().map(|n| n as u32))
+            .collect::<Option<_>>()
+            .ok_or_else(coord_err)?;
+        if retry_budget.len() != evaluations.len() {
+            return Err(coord_err());
+        }
+
+        let sign = if objective.minimize() { 1.0 } else { -1.0 };
+        let name = request.name.clone();
+        let tenant_weight = request.tenant_weight.max(1);
+        let tenant = request.tenant.clone();
+        let max_in_flight = request.max_in_flight;
+        Ok(JobActor {
+            name,
+            machine: build_machine(),
+            exec,
+            tenant_weight,
+            tenant,
+            max_in_flight,
+            wal: None,
+            ctx: Some(LoopCtx {
+                request,
+                objective,
+                strategy,
+                stopping,
+                platform,
+                store,
+                metrics,
+                stop_flag,
+                sign,
+                launched,
+                history,
+                curve_history,
+                in_flight,
+                evaluations,
+                retries,
+                retry_budget,
+            }),
+        })
+    }
+
     /// Tuning-job name.
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The actor's current virtual due time (the scheduler's heap key):
+    /// where a resumed job re-enters the event heap.
+    pub fn due(&self) -> f64 {
+        let platform_now = self.ctx.as_ref().map(|c| c.platform.now()).unwrap_or(0.0);
+        platform_now.max(self.exec.clock)
     }
 
     /// Fair-share weight from the request (≥ 1).
@@ -550,21 +804,33 @@ impl JobActor {
                 }
             }
         }
-        let platform_now = self
-            .ctx
-            .as_ref()
-            .map(|c| c.platform.now())
-            .unwrap_or(0.0);
-        // checkpoint the cursor at the Parked/Pending boundary (§3.3
-        // robustness): recovery reads the last checkpoint per job for
-        // progress reporting before deterministically replaying it
+        // checkpoint at the Parked/Pending boundary (§3.3 robustness):
+        // a v1 ResumeSnapshot makes the checkpoint self-sufficient, so
+        // durable recovery and the distributed worker-death requeue
+        // rebuild the actor here and resume with O(remaining work) —
+        // zero strategy proposals are ever re-executed (DESIGN.md §12)
         if let Some(wal) = &self.wal {
             wal.append(&WalRecord::Checkpoint {
                 job: self.name.clone(),
-                exec: self.exec.to_json(),
+                exec: self.resume_snapshot_json(),
             });
         }
-        ActorPoll::Pending { due: platform_now.max(self.exec.clock) }
+        ActorPoll::Pending { due: self.due() }
+    }
+
+    /// Freeze the whole actor into a v1 [`ResumeSnapshot`] payload. Only
+    /// valid while the actor is non-terminal (context present) — which
+    /// holds at every `Pending` boundary where [`JobActor::poll`] emits
+    /// checkpoints.
+    fn resume_snapshot_json(&self) -> Json {
+        let ctx = self.ctx.as_ref().expect("pending actor has context");
+        Json::obj(vec![
+            ("v", Json::Num(RESUME_SNAPSHOT_VERSION as f64)),
+            ("cursor", self.exec.to_json()),
+            ("strategy", ctx.strategy.state_to_json()),
+            ("platform", ctx.platform.state_to_json()),
+            ("coord", ctx.coord_state_json()),
+        ])
     }
 }
 
@@ -605,6 +871,42 @@ impl TuningJobRunner {
             }
         }
     }
+}
+
+/// Rebuild a mid-flight [`JobActor`] entirely from a validated request
+/// plus a v1 [`ResumeSnapshot`] payload — the **single** snapshot-resume
+/// construction path, shared by durable recovery-on-open
+/// ([`crate::api::AmtService::open`]) and remote workers receiving a
+/// re-`Assign` after a worker death ([`crate::distributed::worker`]).
+/// Like [`crate::strategies::for_request`], cross-path bit-identity
+/// depends on both callers wiring the rebuild exactly the same way, so
+/// changes belong here. The strategy is built fresh (with no transfer
+/// observations — the snapshot's frozen strategy state carries them) and
+/// thawed from the snapshot.
+pub fn actor_from_snapshot(
+    request: TuningJobRequest,
+    snapshot: &Json,
+    backend: Arc<dyn crate::gp::SurrogateBackend>,
+    store: Arc<MetadataStore>,
+    metrics: Arc<MetricsService>,
+    stop_flag: Arc<AtomicBool>,
+) -> Result<JobActor, String> {
+    let objective = crate::objectives::by_name(&request.objective)
+        .ok_or_else(|| format!("unknown objective '{}'", request.objective))?;
+    let objective: Arc<dyn Objective> = objective.into();
+    let strategy = crate::strategies::for_request(
+        &request.strategy,
+        &objective.space(),
+        backend,
+        request.seed,
+        Vec::new(),
+    )
+    .ok_or_else(|| format!("unknown strategy '{}'", request.strategy))?;
+    let stopping = stopping_by_name(&request.early_stopping)
+        .ok_or_else(|| format!("unknown early stopping '{}'", request.early_stopping))?;
+    JobActor::from_resume_snapshot(
+        request, objective, strategy, stopping, snapshot, store, metrics, stop_flag,
+    )
 }
 
 /// Build the stopping policy named in a request (§5.2 modes).
@@ -787,6 +1089,109 @@ mod tests {
         assert_eq!(out.evaluations.len(), 10);
         let (_, best) = out.best.unwrap();
         assert!(best < 40.0, "BO on branin should find something decent: {best}");
+    }
+
+    fn bo_actor(seed: u64) -> (TuningJobRequest, JobActor) {
+        let request = TuningJobRequest {
+            name: format!("snap-{seed}"),
+            objective: "branin".into(),
+            strategy: "bayesian".into(),
+            max_training_jobs: 5,
+            max_parallel_jobs: 2,
+            seed,
+            ..Default::default()
+        };
+        let obj: Arc<dyn Objective> = crate::objectives::by_name("branin").unwrap().into();
+        let strat = crate::strategies::for_request(
+            "bayesian",
+            &obj.space(),
+            Arc::new(NativeBackend),
+            seed,
+            Vec::new(),
+        )
+        .unwrap();
+        let actor = JobActor::new(
+            request.clone(),
+            obj,
+            strat,
+            stopping_by_name("off").unwrap(),
+            TrainingPlatform::new(PlatformConfig::noiseless(), seed),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        );
+        (request, actor)
+    }
+
+    fn drive_to_completion(mut actor: JobActor) -> TuningJobOutcome {
+        loop {
+            if let ActorPoll::Complete(outcome) = actor.poll(16) {
+                return *outcome;
+            }
+        }
+    }
+
+    /// Tentpole invariant at the unit level: freeze a BO actor at a
+    /// Pending boundary, thaw through `actor_from_snapshot` (the shared
+    /// rebuild path), and the remaining run is bit-identical to the
+    /// uninterrupted actor's.
+    #[test]
+    fn actor_resumed_from_snapshot_matches_uninterrupted_run() {
+        let (_, reference_actor) = bo_actor(33);
+        let reference = drive_to_completion(reference_actor);
+
+        let (request, mut actor) = bo_actor(33);
+        let mut slices = 0;
+        let frozen = loop {
+            match actor.poll(16) {
+                ActorPoll::Pending { .. } => {
+                    slices += 1;
+                    if slices == 5 {
+                        break actor.resume_snapshot_json();
+                    }
+                }
+                ActorPoll::Complete(_) => panic!("job finished before the freeze point"),
+            }
+        };
+        // through the JSON text round trip, like a real WAL record
+        let parsed = crate::json::parse(&frozen.to_string()).unwrap();
+        let resumed_actor = actor_from_snapshot(
+            request,
+            &parsed,
+            Arc::new(NativeBackend),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+        .unwrap();
+        assert!(resumed_actor.due() > 0.0, "resumed actor must re-enter at its clock");
+        let resumed = drive_to_completion(resumed_actor);
+
+        assert_eq!(reference.evaluations.len(), resumed.evaluations.len());
+        for (a, b) in reference.evaluations.iter().zip(&resumed.evaluations) {
+            assert_eq!(a.training_job_name, b.training_job_name);
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.final_value.map(f64::to_bits), b.final_value.map(f64::to_bits));
+            assert_eq!(a.ended_at.to_bits(), b.ended_at.to_bits());
+            assert_eq!(a.status, b.status);
+        }
+        assert_eq!(reference.total_seconds.to_bits(), resumed.total_seconds.to_bits());
+        assert_eq!(reference.retries, resumed.retries);
+        assert_eq!(reference.status, resumed.status);
+    }
+
+    /// Legacy v0 payloads (bare cursors) parse through
+    /// `checkpoint_cursor` but are rejected by the snapshot path.
+    #[test]
+    fn checkpoint_cursor_reads_both_schemas() {
+        let (_, mut actor) = bo_actor(35);
+        assert!(matches!(actor.poll(8), ActorPoll::Pending { .. }));
+        let v1 = actor.resume_snapshot_json();
+        assert!(ResumeSnapshot::from_json(&v1).is_some());
+        let cursor = checkpoint_cursor(&v1).expect("v1 cursor parses");
+        let v0 = cursor.to_json();
+        assert!(ResumeSnapshot::from_json(&v0).is_none(), "v0 must not fast-path");
+        assert!(checkpoint_cursor(&v0).is_some(), "v0 cursor still parses");
     }
 
     #[test]

@@ -24,13 +24,28 @@
 //!
 //! **Leases.** A worker renews its lease with every message (heartbeats
 //! while idle). A worker that stays silent past the lease — or whose
-//! link errors — is declared dead: its unfinished jobs' partial leader
-//! records are reset (the PR 3 recovery machinery, exercised live),
-//! their `warm_start`/`tuning_jobs` seeds re-persisted, and the jobs
-//! requeued from scratch on the least-loaded live worker. Deterministic
-//! replay makes the rerun finish with exactly the records of an
-//! uninterrupted run. With no live workers left, jobs fail loudly
-//! (outcome `Failed`, store record `Failed`) instead of hanging.
+//! link errors — is declared dead and its unfinished jobs move to the
+//! least-loaded live compatible worker. The repair is **O(remaining
+//! work)** whenever possible: every `Pending` slice's delta carries the
+//! job's v1 [`crate::coordinator::ResumeSnapshot`] checkpoint (appended
+//! by the actor at the slice boundary, so delta application is atomic
+//! per slice — the leader's store state always equals the last acked
+//! checkpoint's), and the re-`Assign` ships that snapshot so the new
+//! worker rebuilds the actor mid-flight. Jobs with no acked checkpoint
+//! yet (or whose terminal slice was in flight) fall back to the PR 3
+//! scratch path: partial leader records reset,
+//! `warm_start`/`tuning_jobs` seeds re-persisted, deterministic replay
+//! from the request seed. Both paths finish with exactly the records of
+//! an uninterrupted run. With no live compatible workers left, jobs
+//! fail loudly (outcome `Failed`, store record `Failed`) instead of
+//! hanging.
+//!
+//! **Backend pinning.** Each worker's `Hello` advertises its surrogate
+//! backend; each job's spec pins the backend it must evaluate on.
+//! Routing (activation, death repair) only considers matching lanes, so
+//! a mixed-backend fleet stays bit-consistent; the API layer checks
+//! [`RemoteWorkerPool::supports_backend`] and keeps jobs local when no
+//! compatible worker is live.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
@@ -91,6 +106,8 @@ pub struct RemoteJobSpec {
     pub platform: PlatformConfig,
     /// Warm-start transfer observations resolved at create time.
     pub transfer: Vec<Observation>,
+    /// Surrogate backend the job must evaluate on (lane routing key).
+    pub backend: String,
 }
 
 #[derive(Default)]
@@ -112,6 +129,12 @@ struct RemoteSlot {
     /// Assign shipped to the current lane incarnation.
     started: AtomicBool,
     polls: AtomicU64,
+    /// The job's last delta-acked v1 resume snapshot. Delta application
+    /// is atomic per slice and every `Pending` slice ends with its
+    /// checkpoint record, so whenever this is `Some`, the leader's
+    /// store/metrics state for the job equals exactly this snapshot's —
+    /// a worker death requeues from here with O(remaining work).
+    last_ckpt: Mutex<Option<crate::json::Json>>,
 }
 
 const NO_LANE: usize = usize::MAX;
@@ -123,6 +146,13 @@ struct WorkerLane {
     load: AtomicUsize,
 }
 
+/// Lane backends (from each worker's `Hello`), under one mutex with a
+/// condvar so routing can wait for the fleet to identify itself.
+struct LaneBackends {
+    known: Mutex<Vec<Option<String>>>,
+    hello_cv: Condvar,
+}
+
 struct LeaderInner {
     store: Arc<MetadataStore>,
     metrics: Arc<MetricsService>,
@@ -132,11 +162,18 @@ struct LeaderInner {
     poll_timeout: Duration,
     jobs: Mutex<HashMap<String, Arc<RemoteSlot>>>,
     lanes: Vec<WorkerLane>,
+    backends: LaneBackends,
     live: AtomicUsize,
     running: AtomicUsize,
     shutdown: AtomicBool,
     seq: AtomicU64,
     quotas: TenantQuotas,
+    /// Worker-death repairs that requeued from a delta-acked snapshot
+    /// (O(remaining)) vs from scratch, and — for the scratch leg — how
+    /// many already-proposed evaluations the rerun re-executes.
+    snapshot_requeues: AtomicU64,
+    scratch_requeues: AtomicU64,
+    replayed_proposals: AtomicU64,
     /// Group commits that failed even after a retry (mirrors
     /// `Scheduler::wal_commit_errors` for the remote plane).
     wal_commit_errors: AtomicU64,
@@ -182,12 +219,19 @@ impl RemoteWorkerPool {
             lease: config.lease,
             poll_timeout: config.poll_timeout.max(config.lease),
             jobs: Mutex::new(HashMap::new()),
+            backends: LaneBackends {
+                known: Mutex::new(vec![None; transports.len()]),
+                hello_cv: Condvar::new(),
+            },
             lanes,
             live: AtomicUsize::new(transports.len()),
             running: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             seq: AtomicU64::new(0),
             quotas: TenantQuotas::new(),
+            snapshot_requeues: AtomicU64::new(0),
+            scratch_requeues: AtomicU64::new(0),
+            replayed_proposals: AtomicU64::new(0),
             wal_commit_errors: AtomicU64::new(0),
             post_commit: std::sync::OnceLock::new(),
             route: Mutex::new(()),
@@ -244,6 +288,43 @@ impl RemoteWorkerPool {
         self.inner.wal_commit_errors.load(Ordering::Relaxed)
     }
 
+    /// Worker-death repairs that requeued a job from its last
+    /// delta-acked resume snapshot (the O(remaining-work) path).
+    pub fn snapshot_requeues(&self) -> u64 {
+        self.inner.snapshot_requeues.load(Ordering::Relaxed)
+    }
+
+    /// Worker-death repairs that fell back to reset + replay-from-seed.
+    pub fn scratch_requeues(&self) -> u64 {
+        self.inner.scratch_requeues.load(Ordering::Relaxed)
+    }
+
+    /// Strategy proposals re-executed across all scratch requeues (the
+    /// evaluations that already existed when the worker died; snapshot
+    /// requeues contribute 0 by construction).
+    pub fn replayed_proposals(&self) -> u64 {
+        self.inner.replayed_proposals.load(Ordering::Relaxed)
+    }
+
+    /// True when at least one live worker advertises `backend` — the
+    /// API layer's routing gate (jobs stay on the local plane
+    /// otherwise). Waits briefly (up to the lease) for lanes that have
+    /// not sent their `Hello` yet, so a just-constructed pool answers
+    /// correctly.
+    pub fn supports_backend(&self, backend: &str) -> bool {
+        await_hellos(&self.inner);
+        let known = self.inner.backends.known.lock().unwrap();
+        known.iter().enumerate().any(|(i, b)| {
+            self.inner.lanes[i].alive.load(Ordering::SeqCst)
+                && b.as_deref() == Some(backend)
+        })
+    }
+
+    /// Advertised backend of each lane (`None` = no `Hello` yet).
+    pub fn lane_backends(&self) -> Vec<Option<String>> {
+        self.inner.backends.known.lock().unwrap().clone()
+    }
+
     /// Install a hook invoked after every successful WAL group commit
     /// on this plane (at most once; later calls no-op). The durable API
     /// layer installs the same auto-checkpoint trigger it gives the
@@ -281,6 +362,7 @@ impl RemoteWorkerPool {
                 lane: AtomicUsize::new(NO_LANE),
                 started: AtomicBool::new(false),
                 polls: AtomicU64::new(0),
+                last_ckpt: Mutex::new(None),
             }),
         );
         drop(jobs);
@@ -288,19 +370,26 @@ impl RemoteWorkerPool {
         true
     }
 
-    /// Place a registered job on the least-loaded live worker and queue
-    /// it. Must be called exactly once per registered job.
+    /// Place a registered job on the least-loaded live worker running a
+    /// compatible backend and queue it. Must be called exactly once per
+    /// registered job.
     pub fn activate(&self, name: &str) {
         let slot = { self.inner.jobs.lock().unwrap().get(name).cloned() };
         let Some(slot) = slot else { return };
+        await_hellos(&self.inner);
         let _route = self.inner.route.lock().unwrap();
-        match pick_lane(&self.inner) {
+        match pick_lane(&self.inner, &slot.spec.backend) {
             Some(idx) => {
                 slot.lane.store(idx, Ordering::SeqCst);
                 self.inner.lanes[idx].load.fetch_add(1, Ordering::Relaxed);
                 push_lane_entry(&self.inner, idx, 0.0, slot.weight, name.to_string());
             }
-            None => mark_failed(&self.inner, &slot, name, "no live remote workers"),
+            None => mark_failed(
+                &self.inner,
+                &slot,
+                name,
+                &format!("no live remote workers for backend '{}'", slot.spec.backend),
+            ),
         }
     }
 
@@ -345,13 +434,47 @@ impl Drop for RemoteWorkerPool {
     }
 }
 
-/// Least-loaded live lane, if any.
-fn pick_lane(inner: &LeaderInner) -> Option<usize> {
+/// Block (bounded by the lease) until every live lane has identified
+/// its backend via `Hello` — one-time at fleet startup; a no-op after.
+fn await_hellos(inner: &LeaderInner) {
+    let deadline = Instant::now() + inner.lease;
+    let mut known = inner.backends.known.lock().unwrap();
+    loop {
+        let pending = known.iter().enumerate().any(|(i, b)| {
+            b.is_none() && inner.lanes[i].alive.load(Ordering::SeqCst)
+        });
+        if !pending || Instant::now() >= deadline {
+            return;
+        }
+        known = inner
+            .backends
+            .hello_cv
+            .wait_timeout(known, Duration::from_millis(20))
+            .unwrap()
+            .0;
+    }
+}
+
+/// Record a worker's advertised backend and wake routing waiters.
+fn note_hello(inner: &LeaderInner, idx: usize, backend: &str) {
+    let mut known = inner.backends.known.lock().unwrap();
+    if known[idx].as_deref() != Some(backend) {
+        known[idx] = Some(backend.to_string());
+    }
+    drop(known);
+    inner.backends.hello_cv.notify_all();
+}
+
+/// Least-loaded live lane whose worker runs `backend`, if any.
+fn pick_lane(inner: &LeaderInner, backend: &str) -> Option<usize> {
+    let known = inner.backends.known.lock().unwrap();
     inner
         .lanes
         .iter()
         .enumerate()
-        .filter(|(_, l)| l.alive.load(Ordering::SeqCst))
+        .filter(|(i, l)| {
+            l.alive.load(Ordering::SeqCst) && known[*i].as_deref() == Some(backend)
+        })
         .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
         .map(|(i, _)| i)
 }
@@ -373,7 +496,8 @@ fn repush_entry(inner: &LeaderInner, idx: usize, entry: QueueEntry) {
 /// versions are recomputed here, WAL records (when attached) are
 /// appended inside the store/metrics critical sections, and worker
 /// checkpoints are re-logged verbatim — the "existing durability commit
-/// path" of DESIGN.md §11.
+/// path" of DESIGN.md §11. v1 resume-snapshot checkpoints are also
+/// retained per job: they are what a worker-death repair requeues from.
 fn apply_delta(inner: &LeaderInner, records: &[(u64, WalRecord)]) {
     for (_, rec) in records {
         match rec {
@@ -389,9 +513,15 @@ fn apply_delta(inner: &LeaderInner, records: &[(u64, WalRecord)]) {
             WalRecord::RemoveStreams { prefix } => {
                 inner.metrics.remove_streams(prefix);
             }
-            WalRecord::Checkpoint { .. } => {
+            WalRecord::Checkpoint { job, exec } => {
                 if let Some(w) = &inner.wal {
                     w.append(rec);
+                }
+                if crate::coordinator::is_resume_snapshot(exec) {
+                    let slot = { inner.jobs.lock().unwrap().get(job).cloned() };
+                    if let Some(slot) = slot {
+                        *slot.last_ckpt.lock().unwrap() = Some(exec.clone());
+                    }
                 }
             }
         }
@@ -459,7 +589,7 @@ fn reset_and_reseed(inner: &LeaderInner, slot: &RemoteSlot, name: &str) {
     let transfer_json = if slot.spec.transfer.is_empty() {
         None
     } else {
-        Some(crate::api::observations_to_json(&slot.spec.transfer))
+        Some(crate::strategies::observations_to_json(&slot.spec.transfer))
     };
     crate::api::persist_job_seeds(&inner.store, &slot.spec.request, transfer_json);
     commit_wal(inner);
@@ -467,12 +597,21 @@ fn reset_and_reseed(inner: &LeaderInner, slot: &RemoteSlot, name: &str) {
 
 /// Declare worker `idx` dead and requeue its unfinished jobs.
 ///
+/// Each job requeues from its last delta-acked v1 resume snapshot when
+/// it has one and its leader-side record is still `InProgress` — the
+/// snapshot is exactly the leader's applied state, so no records are
+/// reset and the new worker resumes mid-flight with zero re-executed
+/// proposals. Jobs with no acked checkpoint, or whose terminal slice's
+/// delta landed but whose `PollResult` was lost (record already
+/// terminal — resuming would double-apply the final slice), take the
+/// scratch path: reset + reseed + deterministic replay from the seed.
+///
 /// `held` is the entry the dying driver had in flight (if any); jobs
 /// parked in tenant quota queues are detected by elimination (assigned
 /// to this lane, unfinished, no entry in the drained heap or in hand)
-/// and only re-seeded — their parked entry re-routes to the new lane at
-/// release time. The whole repair runs under the route lock, so a
-/// concurrent death of another worker sees a consistent picture.
+/// and only repaired in place — their parked entry re-routes to the new
+/// lane at release time. The whole repair runs under the route lock, so
+/// a concurrent death of another worker sees a consistent picture.
 fn on_worker_death(inner: &LeaderInner, idx: usize, held: Option<QueueEntry>) {
     let _route = inner.route.lock().unwrap();
     let lane = &inner.lanes[idx];
@@ -498,11 +637,32 @@ fn on_worker_death(inner: &LeaderInner, idx: usize, held: Option<QueueEntry>) {
         if slot.state.lock().unwrap().outcome.is_some() {
             continue;
         }
-        // reset + reseed, then move the job to a live lane
-        reset_and_reseed(inner, &slot, &name);
+        let record_in_progress = inner
+            .store
+            .get("tuning_jobs", &name)
+            .and_then(|(_, j)| j.get("status").and_then(crate::json::Json::as_str).map(String::from))
+            .is_some_and(|s| s == "InProgress");
+        let has_snapshot = slot.last_ckpt.lock().unwrap().is_some();
+        if has_snapshot && record_in_progress {
+            // O(remaining) leg: leader state == snapshot state; the
+            // re-Assign on the new lane ships the snapshot
+            inner.snapshot_requeues.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // scratch leg: reset partial records, reseed, replay
+            *slot.last_ckpt.lock().unwrap() = None;
+            inner.scratch_requeues.fetch_add(1, Ordering::Relaxed);
+            inner.replayed_proposals.fetch_add(
+                inner
+                    .store
+                    .list_keys("training_jobs", &format!("{name}-train-"))
+                    .len() as u64,
+                Ordering::Relaxed,
+            );
+            reset_and_reseed(inner, &slot, &name);
+        }
         slot.started.store(false, Ordering::SeqCst);
         slot.stop_sent.store(false, Ordering::SeqCst);
-        match pick_lane(inner) {
+        match pick_lane(inner, &slot.spec.backend) {
             Some(new_idx) => {
                 lane.load.fetch_sub(1, Ordering::Relaxed);
                 inner.lanes[new_idx].load.fetch_add(1, Ordering::Relaxed);
@@ -559,7 +719,12 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
         let Some(Reverse(entry)) = popped else {
             // idle: pump the link (heartbeats renew the lease)
             match transport.recv(slice) {
-                Ok(Some(_)) => last_seen = Instant::now(),
+                Ok(Some(msg)) => {
+                    last_seen = Instant::now();
+                    if let Message::Hello { backend, .. } = &msg {
+                        note_hello(inner, idx, backend);
+                    }
+                }
                 Ok(None) => {
                     if last_seen.elapsed() > inner.lease {
                         on_worker_death(inner, idx, None);
@@ -609,10 +774,16 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
         let name = entry.name.clone();
         let result: std::io::Result<()> = (|| {
             if !slot.started.swap(true, Ordering::SeqCst) {
+                // a repaired job carries its last delta-acked snapshot:
+                // the new worker rebuilds the actor mid-flight instead
+                // of replaying from the seed
+                let resume = slot.last_ckpt.lock().unwrap().clone();
                 transport.send(&Message::Assign {
                     request: slot.spec.request.clone(),
                     platform: slot.spec.platform.clone(),
                     transfer: slot.spec.transfer.clone(),
+                    backend: slot.spec.backend.clone(),
+                    resume,
                 })?;
             }
             if slot.stop.load(Ordering::Relaxed)
@@ -657,7 +828,12 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                     }
                     // out-of-band result (duplicate rejection): ignore
                 }
-                Ok(Some(_)) => last_seen = Instant::now(),
+                Ok(Some(msg)) => {
+                    last_seen = Instant::now();
+                    if let Message::Hello { backend, .. } = &msg {
+                        note_hello(inner, idx, backend);
+                    }
+                }
                 Ok(None) => {
                     // a worker mid-poll cannot heartbeat (single
                     // threaded), so the in-flight bound is the compute
@@ -720,6 +896,7 @@ mod tests {
             },
             platform: PlatformConfig::noiseless(),
             transfer: Vec::new(),
+            backend: "native".into(),
         }
     }
 
@@ -779,6 +956,50 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    /// Backend pinning: jobs route only to lanes advertising their
+    /// backend; a job with no compatible worker fails loudly.
+    #[test]
+    fn backend_pinning_routes_and_fails_loudly() {
+        use crate::distributed::worker::spawn_loopback_worker_with_backend;
+        let (t_native, _f1, h1) = spawn_loopback_worker("bk-native");
+        let (t_hlo, _f2, h2) = spawn_loopback_worker_with_backend("bk-hlo", "hlo");
+        let pool = RemoteWorkerPool::new(
+            vec![t_native, t_hlo],
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            None,
+            RemoteConfig::default(),
+        );
+        assert!(pool.supports_backend("native"));
+        assert!(pool.supports_backend("hlo"));
+        assert!(!pool.supports_backend("tpu"));
+        assert_eq!(
+            pool.lane_backends(),
+            vec![Some("native".to_string()), Some("hlo".to_string())]
+        );
+
+        let mut s = spec("pin-hlo", 3, 1);
+        s.backend = "hlo".into();
+        assert!(pool.register(s));
+        pool.activate("pin-hlo");
+        let out = pool.wait("pin-hlo").unwrap();
+        assert_eq!(out.status, ExecutionStatus::Succeeded, "hlo lane must host the job");
+
+        let mut s = spec("pin-nowhere", 2, 2);
+        s.backend = "tpu".into();
+        assert!(pool.register(s));
+        pool.activate("pin-nowhere");
+        let out = pool.wait("pin-nowhere").unwrap();
+        assert!(
+            matches!(out.status, ExecutionStatus::Failed(ref e) if e.contains("tpu")),
+            "incompatible job must fail loudly, got {:?}",
+            out.status
+        );
+        drop(pool);
+        h1.join().unwrap();
+        h2.join().unwrap();
     }
 
     #[test]

@@ -18,9 +18,13 @@
 //!   WAL and shipped back as deltas;
 //! * [`leader`] — the [`leader::RemoteWorkerPool`]: per-worker
 //!   virtual-time heaps with the scheduler's `(due ÷ weight, seq)` key,
-//!   lease-based liveness, delta application through the leader's store
-//!   (and durability WAL, when attached), and requeue-from-reset when a
-//!   worker dies.
+//!   surrogate-backend pinning (jobs route only to lanes advertising a
+//!   matching backend), lease-based liveness, delta application through
+//!   the leader's store (and durability WAL, when attached), and — on
+//!   worker death — requeue from the job's last delta-acked
+//!   [`crate::coordinator::ResumeSnapshot`] (O(remaining work),
+//!   DESIGN.md §12), falling back to requeue-from-reset when no
+//!   checkpoint has been acked.
 //!
 //! Single-process behavior is untouched: with the loopback transport a
 //! job's trajectory, final store contents and item versions are

@@ -27,7 +27,7 @@ use crate::config::TuningJobRequest;
 use crate::coordinator::{EvaluationRecord, TuningJobOutcome};
 use crate::durability::wal::WalRecord;
 use crate::json::Json;
-use crate::platform::{PlatformConfig, TrainingJobStatus};
+use crate::platform::PlatformConfig;
 use crate::space::{config_from_json_typed, config_to_json_typed};
 use crate::strategies::Observation;
 use crate::workflow::ExecutionStatus;
@@ -58,12 +58,19 @@ pub enum Message {
     Hello {
         /// Worker label (diagnostics only).
         worker: String,
+        /// Surrogate backend the worker evaluates with (e.g. "native").
+        /// The leader routes each job only to lanes whose backend
+        /// matches the job's — mixed-backend fleets stay bit-consistent.
+        backend: String,
     },
     /// Host a tuning job: everything a worker needs to rebuild the
     /// [`crate::coordinator::JobActor`] — the validated request, the
     /// leader's platform configuration (identical simulated timelines)
     /// and the pre-resolved warm-start observations (workers never read
-    /// the leader's store).
+    /// the leader's store). After a worker death, `resume` carries the
+    /// job's last delta-acked v1 [`crate::coordinator::ResumeSnapshot`],
+    /// and the new worker rebuilds the actor mid-flight instead of from
+    /// scratch.
     Assign {
         /// The accepted tuning-job request.
         request: TuningJobRequest,
@@ -71,6 +78,10 @@ pub enum Message {
         platform: PlatformConfig,
         /// Warm-start transfer observations resolved at create time.
         transfer: Vec<Observation>,
+        /// Surrogate backend the job must be evaluated with.
+        backend: String,
+        /// Resume snapshot for a requeued job (`None` = fresh start).
+        resume: Option<Json>,
     },
     /// Run one bounded poll slice of an assigned job.
     PollRequest {
@@ -109,27 +120,6 @@ pub enum Message {
     DrainAck,
 }
 
-fn status_str(s: TrainingJobStatus) -> &'static str {
-    match s {
-        TrainingJobStatus::Provisioning => "Provisioning",
-        TrainingJobStatus::InProgress => "InProgress",
-        TrainingJobStatus::Completed => "Completed",
-        TrainingJobStatus::Failed => "Failed",
-        TrainingJobStatus::Stopped => "Stopped",
-    }
-}
-
-fn status_from_str(s: &str) -> Option<TrainingJobStatus> {
-    Some(match s {
-        "Provisioning" => TrainingJobStatus::Provisioning,
-        "InProgress" => TrainingJobStatus::InProgress,
-        "Completed" => TrainingJobStatus::Completed,
-        "Failed" => TrainingJobStatus::Failed,
-        "Stopped" => TrainingJobStatus::Stopped,
-        _ => return None,
-    })
-}
-
 fn exec_status_to_json(s: &ExecutionStatus) -> Json {
     match s {
         ExecutionStatus::Succeeded => Json::obj(vec![("kind", Json::Str("Succeeded".into()))]),
@@ -150,44 +140,17 @@ fn exec_status_from_json(j: &Json) -> Option<ExecutionStatus> {
     }
 }
 
-fn opt_num(v: Option<f64>) -> Json {
-    v.map(Json::Num).unwrap_or(Json::Null)
-}
-
-fn eval_to_json(e: &EvaluationRecord) -> Json {
-    Json::obj(vec![
-        ("name", Json::Str(e.training_job_name.clone())),
-        ("config", config_to_json_typed(&e.config)),
-        ("curve", Json::Arr(e.curve.iter().map(|&v| Json::Num(v)).collect())),
-        ("final_value", opt_num(e.final_value)),
-        ("status", Json::Str(status_str(e.status).into())),
-        ("stopped_early", Json::Bool(e.stopped_early)),
-        ("attempts", Json::Num(e.attempts as f64)),
-        ("submitted_at", Json::Num(e.submitted_at)),
-        ("ended_at", Json::Num(e.ended_at)),
-    ])
-}
-
-fn eval_from_json(j: &Json) -> Option<EvaluationRecord> {
-    Some(EvaluationRecord {
-        training_job_name: j.get("name")?.as_str()?.to_string(),
-        config: config_from_json_typed(j.get("config")?)?,
-        curve: j.get("curve")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<_>>()?,
-        final_value: j.get("final_value").and_then(Json::as_f64),
-        status: status_from_str(j.get("status")?.as_str()?)?,
-        stopped_early: j.get("stopped_early")?.as_bool()?,
-        attempts: j.get("attempts")?.as_i64()? as u32,
-        submitted_at: j.get("submitted_at")?.as_f64()?,
-        ended_at: j.get("ended_at")?.as_f64()?,
-    })
-}
-
 /// Wire JSON of a finished outcome (f64s round-trip bit-exactly; configs
 /// use the type-tagged encoding so `Value` variants survive the trip).
+/// Evaluation records use [`EvaluationRecord::to_json`] — the same codec
+/// resume snapshots carry, so the formats cannot drift apart.
 pub fn outcome_to_json(o: &TuningJobOutcome) -> Json {
     Json::obj(vec![
         ("name", Json::Str(o.name.clone())),
-        ("evaluations", Json::Arr(o.evaluations.iter().map(eval_to_json).collect())),
+        (
+            "evaluations",
+            Json::Arr(o.evaluations.iter().map(EvaluationRecord::to_json).collect()),
+        ),
         (
             "best",
             match &o.best {
@@ -217,7 +180,7 @@ pub fn outcome_from_json(j: &Json) -> Option<TuningJobOutcome> {
             .get("evaluations")?
             .as_arr()?
             .iter()
-            .map(eval_from_json)
+            .map(EvaluationRecord::from_json)
             .collect::<Option<_>>()?,
         best,
         total_seconds: j.get("total_seconds")?.as_f64()?,
@@ -231,16 +194,21 @@ impl Message {
     /// Wire JSON of the message.
     pub fn to_json(&self) -> Json {
         match self {
-            Message::Hello { worker } => Json::obj(vec![
+            Message::Hello { worker, backend } => Json::obj(vec![
                 ("type", Json::Str("hello".into())),
                 ("worker", Json::Str(worker.clone())),
+                ("backend", Json::Str(backend.clone())),
             ]),
-            Message::Assign { request, platform, transfer } => Json::obj(vec![
-                ("type", Json::Str("assign".into())),
-                ("request", request.to_json()),
-                ("platform", platform.to_json()),
-                ("transfer", crate::api::observations_to_json(transfer)),
-            ]),
+            Message::Assign { request, platform, transfer, backend, resume } => {
+                Json::obj(vec![
+                    ("type", Json::Str("assign".into())),
+                    ("request", request.to_json()),
+                    ("platform", platform.to_json()),
+                    ("transfer", crate::strategies::observations_to_json(transfer)),
+                    ("backend", Json::Str(backend.clone())),
+                    ("resume", resume.clone().unwrap_or(Json::Null)),
+                ])
+            }
             Message::PollRequest { job, max_steps } => Json::obj(vec![
                 ("type", Json::Str("poll".into())),
                 ("job", Json::Str(job.clone())),
@@ -288,11 +256,28 @@ impl Message {
     /// Parse a wire JSON message.
     pub fn from_json(j: &Json) -> Option<Message> {
         Some(match j.get("type")?.as_str()? {
-            "hello" => Message::Hello { worker: j.get("worker")?.as_str()?.to_string() },
+            "hello" => Message::Hello {
+                worker: j.get("worker")?.as_str()?.to_string(),
+                // pre-pinning workers always evaluated natively
+                backend: j
+                    .get("backend")
+                    .and_then(Json::as_str)
+                    .unwrap_or("native")
+                    .to_string(),
+            },
             "assign" => Message::Assign {
                 request: TuningJobRequest::from_json(j.get("request")?)?,
                 platform: PlatformConfig::from_json(j.get("platform")?),
-                transfer: crate::api::observations_from_json(j.get("transfer")?)?,
+                transfer: crate::strategies::observations_from_json(j.get("transfer")?)?,
+                backend: j
+                    .get("backend")
+                    .and_then(Json::as_str)
+                    .unwrap_or("native")
+                    .to_string(),
+                resume: match j.get("resume") {
+                    None | Some(Json::Null) => None,
+                    Some(s) => Some(s.clone()),
+                },
             },
             "poll" => Message::PollRequest {
                 job: j.get("job")?.as_str()?.to_string(),
@@ -369,8 +354,15 @@ mod tests {
         assert!(matches!(roundtrip(&Message::Drain), Message::Drain));
         assert!(matches!(roundtrip(&Message::DrainAck), Message::DrainAck));
         assert!(matches!(
-            roundtrip(&Message::Hello { worker: "w0".into() }),
-            Message::Hello { worker } if worker == "w0"
+            roundtrip(&Message::Hello { worker: "w0".into(), backend: "native".into() }),
+            Message::Hello { worker, backend } if worker == "w0" && backend == "native"
+        ));
+        // a Hello without a backend field (pre-pinning worker) defaults
+        // to the native backend
+        let legacy = crate::json::parse(r#"{"type": "hello", "worker": "old"}"#).unwrap();
+        assert!(matches!(
+            Message::from_json(&legacy),
+            Some(Message::Hello { backend, .. }) if backend == "native"
         ));
         assert!(matches!(
             roundtrip(&Message::Stop { job: "j".into() }),
@@ -395,8 +387,12 @@ mod tests {
             },
             platform: PlatformConfig { provisioning_mean: 7.5, ..Default::default() },
             transfer: vec![Observation { config, value: -1.0 / 3.0 }],
+            backend: "native".into(),
+            resume: None,
         };
-        let Message::Assign { request, platform, transfer } = roundtrip(&msg) else {
+        let Message::Assign { request, platform, transfer, backend, resume } =
+            roundtrip(&msg)
+        else {
             panic!("wrong variant");
         };
         assert_eq!(request.name, "remote-1");
@@ -410,6 +406,29 @@ mod tests {
             transfer[0].config.get("booster"),
             Some(&Value::Cat("gbtree".into()))
         );
+        assert_eq!(backend, "native");
+        assert!(resume.is_none());
+    }
+
+    #[test]
+    fn assign_resume_snapshot_rides_the_wire_verbatim() {
+        let snap = crate::json::parse(
+            r#"{"v": 1, "cursor": {"clock": 0.125}, "strategy": {"kind": "random"},
+                "platform": {}, "coord": {}}"#,
+        )
+        .unwrap();
+        let msg = Message::Assign {
+            request: TuningJobRequest { name: "requeued".into(), ..Default::default() },
+            platform: PlatformConfig::default(),
+            transfer: Vec::new(),
+            backend: "hlo".into(),
+            resume: Some(snap.clone()),
+        };
+        let Message::Assign { backend, resume, .. } = roundtrip(&msg) else {
+            panic!("wrong variant");
+        };
+        assert_eq!(backend, "hlo");
+        assert_eq!(resume, Some(snap), "snapshot payload must survive verbatim");
     }
 
     #[test]

@@ -376,7 +376,9 @@ mod tests {
             let _ = t.recv(Duration::from_secs(5));
         });
         let mut client = SocketTransport::connect(&addr).unwrap();
-        client.send(&Message::Hello { worker: "w".into() }).unwrap();
+        client
+            .send(&Message::Hello { worker: "w".into(), backend: "native".into() })
+            .unwrap();
         assert!(matches!(
             client.recv(Duration::from_secs(5)).unwrap(),
             Some(Message::DrainAck)

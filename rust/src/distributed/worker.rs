@@ -19,8 +19,11 @@
 //! every drained buffer belongs entirely to the slice just polled.
 //! Parallelism comes from running many workers, not threads per worker.
 //!
-//! Workers always evaluate with the native surrogate backend; a leader
-//! on a different backend should keep such jobs on its local plane.
+//! Workers advertise their surrogate backend in the `Hello` and reject
+//! assignments pinned to a different one; the leader routes each job
+//! only to compatible lanes and the API layer falls back to local
+//! execution when no compatible worker is live, so a mixed-backend
+//! fleet stays bit-consistent.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -109,13 +112,16 @@ pub struct WorkerRuntime {
     scratch: PathBuf,
     jobs: HashMap<String, HostedJob>,
     label: String,
+    /// Surrogate backend this worker evaluates with, advertised in the
+    /// `Hello` so the leader pins compatible jobs to this lane.
+    backend: String,
     /// Poll slices served (diagnostics).
     pub polls_served: u64,
 }
 
 impl WorkerRuntime {
     /// New runtime over a connected transport, with the default
-    /// heartbeat period.
+    /// heartbeat period and the native surrogate backend.
     pub fn new(transport: Box<dyn Transport>) -> std::io::Result<WorkerRuntime> {
         Self::with_heartbeat(transport, DEFAULT_HEARTBEAT)
     }
@@ -124,6 +130,19 @@ impl WorkerRuntime {
     pub fn with_heartbeat(
         transport: Box<dyn Transport>,
         heartbeat: Duration,
+    ) -> std::io::Result<WorkerRuntime> {
+        Self::with_options(transport, heartbeat, "native")
+    }
+
+    /// New runtime with an explicit heartbeat and backend name. The
+    /// compute itself always runs the native backend in this process;
+    /// the name is the *compatibility contract* the worker advertises
+    /// and enforces: assignments pinned to a different backend are
+    /// rejected rather than silently evaluated on the wrong one.
+    pub fn with_options(
+        transport: Box<dyn Transport>,
+        heartbeat: Duration,
+        backend: &str,
     ) -> std::io::Result<WorkerRuntime> {
         static SESSION: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
         let session = SESSION.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -138,6 +157,7 @@ impl WorkerRuntime {
             capture,
             scratch,
             jobs: HashMap::new(),
+            backend: backend.to_string(),
             polls_served: 0,
         })
     }
@@ -152,21 +172,53 @@ impl WorkerRuntime {
         request: TuningJobRequest,
         platform: PlatformConfig,
         transfer: Vec<Observation>,
+        backend: String,
+        resume: Option<crate::json::Json>,
     ) {
         let name = request.name.clone();
+        if backend != self.backend {
+            // defense in depth: the leader routes by backend, but a
+            // mis-routed job must fail loudly, never evaluate wrong
+            self.jobs.remove(&name);
+            let _ = self.transport.send(&Message::PollResult {
+                job: name,
+                reply: PollReply::Rejected {
+                    reason: format!(
+                        "backend mismatch: job requires '{backend}', worker runs '{}'",
+                        self.backend
+                    ),
+                },
+            });
+            return;
+        }
         let store = Arc::new(MetadataStore::new());
         let metrics = Arc::new(MetricsService::new());
         store.attach_wal(Arc::clone(&self.capture));
         metrics.attach_wal(Arc::clone(&self.capture));
         let stop_flag = Arc::new(AtomicBool::new(false));
-        match build_actor(
-            request,
-            platform,
-            transfer,
-            Arc::clone(&store),
-            Arc::clone(&metrics),
-            Arc::clone(&stop_flag),
-        ) {
+        // a requeued job arrives with its last delta-acked resume
+        // snapshot: rebuild the actor mid-flight through the same
+        // shared path durable recovery uses — O(remaining work), no
+        // re-proposed evaluations. A fresh job builds from the request.
+        let built = match &resume {
+            Some(snap) => crate::coordinator::actor_from_snapshot(
+                request,
+                snap,
+                Arc::new(NativeBackend),
+                Arc::clone(&store),
+                Arc::clone(&metrics),
+                Arc::clone(&stop_flag),
+            ),
+            None => build_actor(
+                request,
+                platform,
+                transfer,
+                Arc::clone(&store),
+                Arc::clone(&metrics),
+                Arc::clone(&stop_flag),
+            ),
+        };
+        match built {
             Ok(mut actor) => {
                 actor.set_wal(Arc::clone(&self.capture));
                 // a re-assignment replaces any previous incarnation
@@ -214,15 +266,18 @@ impl WorkerRuntime {
     /// Serve the leader until it drains the session (`Ok`) or the link
     /// dies (`Err`). Either way the runtime is finished afterwards.
     pub fn run(&mut self) -> std::io::Result<()> {
-        self.transport.send(&Message::Hello { worker: self.label.clone() })?;
+        self.transport.send(&Message::Hello {
+            worker: self.label.clone(),
+            backend: self.backend.clone(),
+        })?;
         loop {
             match self.transport.recv(self.heartbeat)? {
                 None => {
                     // idle: renew the lease
                     self.transport.send(&Message::Heartbeat)?;
                 }
-                Some(Message::Assign { request, platform, transfer }) => {
-                    self.assign(request, platform, transfer);
+                Some(Message::Assign { request, platform, transfer, backend, resume }) => {
+                    self.assign(request, platform, transfer, backend, resume);
                 }
                 Some(Message::PollRequest { job, max_steps }) => {
                     self.poll(&job, max_steps)?;
@@ -260,11 +315,28 @@ pub fn spawn_loopback_worker(
     Arc<super::transport::LoopbackFault>,
     std::thread::JoinHandle<()>,
 ) {
+    spawn_loopback_worker_with_backend(label, "native")
+}
+
+/// [`spawn_loopback_worker`] with an explicit advertised backend name —
+/// the mixed-backend-fleet test double: routing and rejection behave
+/// exactly as they would for a worker on a genuinely different backend.
+pub fn spawn_loopback_worker_with_backend(
+    label: &str,
+    backend: &str,
+) -> (
+    Box<dyn Transport>,
+    Arc<super::transport::LoopbackFault>,
+    std::thread::JoinHandle<()>,
+) {
     let (leader_end, worker_end, fault) = super::transport::loopback_pair(label);
+    let backend = backend.to_string();
     let handle = std::thread::Builder::new()
         .name(format!("amt-remote-{label}"))
         .spawn(move || {
-            if let Ok(mut runtime) = WorkerRuntime::new(Box::new(worker_end)) {
+            if let Ok(mut runtime) =
+                WorkerRuntime::with_options(Box::new(worker_end), DEFAULT_HEARTBEAT, &backend)
+            {
                 let _ = runtime.run();
             }
         })
@@ -320,6 +392,8 @@ mod tests {
                 request,
                 platform: PlatformConfig::noiseless(),
                 transfer: Vec::new(),
+                backend: "native".into(),
+                resume: None,
             })
             .unwrap();
         let mut all_records = Vec::new();
@@ -360,6 +434,8 @@ mod tests {
                 request,
                 platform: PlatformConfig::noiseless(),
                 transfer: Vec::new(),
+                backend: "native".into(),
+                resume: None,
             })
             .unwrap();
         let reply = loop {

@@ -14,13 +14,28 @@
 //!    truncated, never an error. Checkpoint records are collected
 //!    regardless of the marks (they describe job progress, not store
 //!    state) — the last one per job wins.
+//!
+//!    **Incremental-resume alignment (DESIGN.md §12):** for every job
+//!    whose last checkpoint is a v1
+//!    [`crate::coordinator::ResumeSnapshot`] that postdates the shard
+//!    snapshot, the replay *skips* that job's own namespace records
+//!    appearing **after** the checkpoint in file order — the partial
+//!    poll slice a crash cut short. The rebuilt store/metrics state for
+//!    that job is then exactly the checkpoint's state, so the API layer
+//!    can rebuild the actor straight from the snapshot and resume with
+//!    O(remaining work): the skipped mutations are re-produced by the
+//!    resumed execution itself, with identical values *and* versions.
+//!    The skipped records are also removed from the on-disk log
+//!    (compact-style rewrite, LSNs preserved) — the resumed run
+//!    re-appends the same mutations, and keeping both copies would
+//!    double-apply metric emits on a second recovery.
 //! 3. **Inventory tuning jobs** from the rebuilt store: every
 //!    `tuning_jobs` record becomes a [`RecoveredJob`] with its persisted
-//!    request and, when available, the deserialized
-//!    [`crate::workflow::ExecutionState`] cursor from its last
-//!    checkpoint. The API layer re-`activate`s the non-terminal ones
-//!    (status `InProgress`) on the scheduler via deterministic replay —
-//!    see `DESIGN.md` §10 for why replay-from-seed is exact.
+//!    request, its last-checkpoint cursor (progress reporting) and —
+//!    when step 2 aligned its state — the resume snapshot payload. The
+//!    API layer resumes `InProgress` jobs from the snapshot when one is
+//!    present, and falls back to deterministic scratch replay (reset +
+//!    re-create, the pre-v1 path) otherwise — see `DESIGN.md` §10/§12.
 //!
 //! The WAL is then reopened for append at the end of its valid prefix
 //! with a continuing LSN sequence, and attached to the store/metrics so
@@ -32,6 +47,7 @@ use std::sync::Arc;
 use super::snapshot::{self, Manifest};
 use super::wal::{Wal, WalRecord};
 use super::DurabilityError;
+use crate::coordinator::{checkpoint_cursor, is_resume_snapshot};
 use crate::json::Json;
 use crate::metrics::MetricsService;
 use crate::store::MetadataStore;
@@ -47,8 +63,58 @@ pub struct RecoveredJob {
     /// The persisted `TuningJobRequest` wire JSON, when present.
     pub request: Option<Json>,
     /// Cursor rebuilt from the job's last WAL checkpoint, when present.
-    /// Progress reporting only — resumption replays deterministically.
+    /// Progress reporting only.
     pub checkpoint: Option<ExecutionState>,
+    /// The job's last v1 resume-snapshot payload, present only when the
+    /// replay aligned the store/metrics state to exactly that checkpoint
+    /// (see the module docs). `Some` ⇒ the job can resume with
+    /// O(remaining work); `None` ⇒ scratch replay.
+    pub resume: Option<Json>,
+}
+
+/// Which job's namespace a store record belongs to, per the record
+/// layout `crate::api::reset_job_records` owns: `tuning_jobs` /
+/// `warm_start` keys are job names, `training_jobs` keys are
+/// `{job}-train-NNNN` (and job names may not contain `-train-`, so the
+/// split is unambiguous). Unknown tables belong to no job and are never
+/// skipped.
+fn store_key_owner(table: &str, key: &str) -> Option<&str> {
+    match table {
+        "tuning_jobs" | "warm_start" => Some(key),
+        "training_jobs" => key.find("-train-").map(|i| &key[..i]),
+        _ => None,
+    }
+}
+
+/// Which job's namespace a metric stream (or removal prefix) belongs
+/// to: `{job}-train-NNNN/...` or `{job}/...`.
+fn stream_owner(name: &str) -> Option<&str> {
+    if let Some(i) = name.find("-train-") {
+        return Some(&name[..i]);
+    }
+    name.find('/').map(|i| &name[..i])
+}
+
+/// Borrow a checkpoint record's payload in place. The payloads are
+/// O(job state), so the gating/inventory passes never clone them —
+/// only each resumable job's single winning payload is cloned, once.
+fn ckpt_payload(records: &[(u64, WalRecord)], idx: usize) -> &Json {
+    match &records[idx].1 {
+        WalRecord::Checkpoint { exec, .. } => exec,
+        _ => unreachable!("checkpoint indices point at checkpoint records"),
+    }
+}
+
+/// Owning job of any WAL record, if it belongs to one.
+fn record_owner(rec: &WalRecord) -> Option<&str> {
+    match rec {
+        WalRecord::Put { table, key, .. } | WalRecord::Delete { table, key } => {
+            store_key_owner(table, key)
+        }
+        WalRecord::Emit { stream, .. } => stream_owner(stream),
+        WalRecord::RemoveStreams { prefix } => stream_owner(prefix),
+        WalRecord::Checkpoint { job, .. } => Some(job),
+    }
 }
 
 /// Everything `open` rebuilds from a durability directory.
@@ -64,6 +130,10 @@ pub struct RecoveredState {
     /// WAL records applied during replay (after high-water-mark
     /// filtering; checkpoints count).
     pub replayed_records: usize,
+    /// WAL records *skipped* by incremental-resume alignment: partial
+    /// post-checkpoint slices of jobs that will resume from snapshots
+    /// (the resumed execution re-produces them exactly).
+    pub skipped_records: usize,
     /// True if a torn/corrupt WAL tail was truncated.
     pub dropped_tail: bool,
     /// Every tuning job present in the recovered store, name-sorted.
@@ -85,9 +155,67 @@ pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
 
     let wal_path = dir.join(super::wal::WAL_FILE);
     let scan = Wal::scan(&wal_path)?;
+
+    // pass 1 — last checkpoint per job (file order). A job qualifies for
+    // incremental resume when that checkpoint is a v1 ResumeSnapshot AND
+    // it postdates the shard snapshot on both components: a shard
+    // snapshot can capture a job mid-slice (state past the job's last
+    // committed checkpoint), which only the hwm comparison can rule out
+    // — the conservative cases fall back to scratch replay, which is
+    // always exact.
+    struct LastCkpt {
+        idx: usize,
+        lsn: u64,
+    }
+    let mut last_ckpt: std::collections::BTreeMap<String, LastCkpt> = Default::default();
+    let mut finished: std::collections::BTreeSet<String> = Default::default();
+    for (idx, (lsn, rec)) in scan.records.iter().enumerate() {
+        match rec {
+            WalRecord::Checkpoint { job, .. } => {
+                last_ckpt.insert(job.clone(), LastCkpt { idx, lsn: *lsn });
+            }
+            // a terminal tuning_jobs record means the job finished: its
+            // completion must never be unwound by the skip below (it
+            // would re-run and re-acknowledge on every open)
+            WalRecord::Put { table, key, value, .. } if table == "tuning_jobs" => {
+                if value.get("status").and_then(Json::as_str) != Some("InProgress") {
+                    finished.insert(key.clone());
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut resume_at: std::collections::BTreeMap<String, usize> = Default::default();
+    for (job, c) in &last_ckpt {
+        let v1 = is_resume_snapshot(ckpt_payload(&scan.records, c.idx));
+        let past_snapshot =
+            manifest.is_none() || (c.lsn > store_hwm && c.lsn > metrics_hwm);
+        if v1 && past_snapshot && !finished.contains(job) {
+            resume_at.insert(job.clone(), c.idx);
+        }
+    }
+
+    // pass 2 — replay, skipping each resumable job's post-checkpoint
+    // tail (the partial slice the crash cut short; the resumed
+    // execution re-produces it bit-identically, versions included)
+    let skip: Vec<bool> = scan
+        .records
+        .iter()
+        .enumerate()
+        .map(|(idx, (_, rec))| {
+            record_owner(rec)
+                .and_then(|job| resume_at.get(job))
+                .is_some_and(|ckpt_idx| idx > *ckpt_idx)
+        })
+        .collect();
     let mut replayed = 0usize;
-    let mut checkpoints: std::collections::BTreeMap<String, Json> = Default::default();
-    for (lsn, rec) in &scan.records {
+    let mut skipped = 0usize;
+    for (idx, (lsn, rec)) in scan.records.iter().enumerate() {
+        next_lsn = next_lsn.max(lsn + 1);
+        if skip[idx] {
+            skipped += 1;
+            continue;
+        }
         match rec {
             WalRecord::Put { table, key, version, value } if *lsn > store_hwm => {
                 store.insert_raw(table, key, *version, value.clone());
@@ -107,17 +235,45 @@ pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
                 metrics.remove_streams(prefix);
                 replayed += 1;
             }
-            WalRecord::Checkpoint { job, exec } => {
-                checkpoints.insert(job.clone(), exec.clone());
-                replayed += 1;
+            WalRecord::Checkpoint { .. } => {
+                replayed += 1; // payloads already collected in pass 1
             }
             _ => {} // already contained in the snapshot
         }
-        next_lsn = next_lsn.max(lsn + 1);
     }
 
+    // Skipped records must leave the on-disk log too: the resumed
+    // execution re-appends the same mutations, so keeping both copies
+    // would double-apply metric emits on a *second* recovery. Rewrite
+    // the log without them (LSNs and order preserved, compact-style
+    // tmp + fsync + rename + dir fsync) so the WAL always equals the
+    // applied history; otherwise just truncate any torn tail.
+    let valid_len = if skipped > 0 {
+        let mut kept = Vec::new();
+        for (idx, (lsn, rec)) in scan.records.iter().enumerate() {
+            if skip[idx] {
+                continue;
+            }
+            rec.encode_frame(*lsn, &mut kept);
+        }
+        let tmp = wal_path.with_extension("log.tmp");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&kept)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &wal_path)?;
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all()?;
+        }
+        kept.len() as u64
+    } else {
+        scan.valid_len
+    };
+
     // reopen for append after the valid prefix, truncating any torn tail
-    let wal = Arc::new(Wal::open_at(dir, next_lsn, scan.valid_len)?);
+    let wal = Arc::new(Wal::open_at(dir, next_lsn, valid_len)?);
     store.attach_wal(Arc::clone(&wal));
     metrics.attach_wal(Arc::clone(&wal));
 
@@ -126,8 +282,12 @@ pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
         .scan("tuning_jobs", "")
         .into_iter()
         .map(|(name, rec)| {
-            let checkpoint =
-                checkpoints.remove(&name).as_ref().and_then(ExecutionState::from_json);
+            let checkpoint = last_ckpt
+                .get(&name)
+                .and_then(|c| checkpoint_cursor(ckpt_payload(&scan.records, c.idx)));
+            let resume = resume_at
+                .get(&name)
+                .map(|idx| ckpt_payload(&scan.records, *idx).clone());
             RecoveredJob {
                 status: rec
                     .get("status")
@@ -136,6 +296,7 @@ pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
                     .to_string(),
                 request: rec.get("request").cloned(),
                 checkpoint,
+                resume,
                 name,
             }
         })
@@ -147,6 +308,7 @@ pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
         wal,
         manifest,
         replayed_records: replayed,
+        skipped_records: skipped,
         dropped_tail: scan.dropped_tail,
         jobs,
     })
@@ -205,6 +367,121 @@ mod tests {
         assert!(r.store.get("jobs", "gone").is_none());
         let times: Vec<f64> = r.metrics.series("a/loss").iter().map(|p| p.time).collect();
         assert_eq!(times, vec![2.0, 5.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn fake_v1_snapshot() -> Json {
+        crate::json::parse(
+            r#"{"v": 1,
+                "cursor": {"current": 1, "attempt": 1, "transitions": 9,
+                           "clock": 1.5, "steps_recorded": 9, "finished": null},
+                "strategy": {"kind": "random"},
+                "platform": {},
+                "coord": {}}"#,
+        )
+        .unwrap()
+    }
+
+    /// Incremental-resume alignment: a resumable job's records *after*
+    /// its last v1 checkpoint (the partial slice a crash cut short) are
+    /// skipped during replay, so the rebuilt state is exactly the
+    /// checkpoint's — while other jobs' records replay untouched.
+    #[test]
+    fn post_checkpoint_tail_is_skipped_for_resumable_jobs() {
+        let dir = tmp("skiptail");
+        {
+            let r = open(&dir).unwrap();
+            r.store.put(
+                "tuning_jobs",
+                "j",
+                crate::json::parse(r#"{"status": "InProgress", "request": {"name": "j"}}"#)
+                    .unwrap(),
+            );
+            r.store.put("training_jobs", "j-train-0000", Json::Num(1.0));
+            r.metrics.emit("j-train-0000/objective", 1.0, 0.5);
+            r.wal.append(&WalRecord::Checkpoint { job: "j".into(), exec: fake_v1_snapshot() });
+            // the partial slice after the checkpoint: must not survive
+            r.store.put("training_jobs", "j-train-0001", Json::Num(2.0));
+            r.metrics.emit("j-train-0001/objective", 2.0, 0.7);
+            r.metrics.emit("j/evaluations", 2.0, 0.7);
+            // an unrelated job's record after j's checkpoint: must survive
+            r.store.put("tuning_jobs", "other", Json::Num(3.0));
+            r.wal.commit().unwrap();
+        }
+        let r = open(&dir).unwrap();
+        assert_eq!(r.skipped_records, 3, "partial slice must be skipped");
+        assert!(r.store.get("training_jobs", "j-train-0000").is_some());
+        assert!(r.store.get("training_jobs", "j-train-0001").is_none(), "tail applied");
+        assert!(r.metrics.series("j-train-0001/objective").is_empty());
+        assert!(r.metrics.series("j/evaluations").is_empty());
+        assert_eq!(r.store.get("tuning_jobs", "other").unwrap().1, Json::Num(3.0));
+        let job = r.jobs.iter().find(|j| j.name == "j").unwrap();
+        assert!(job.resume.is_some(), "v1 checkpoint must be offered for resume");
+        assert!(job.checkpoint.is_some(), "cursor parses for progress reporting");
+        drop(r);
+        // the skipped tail was rewritten out of the on-disk log: a
+        // second recovery sees a clean, already-aligned history
+        let scan = Wal::scan(&dir.join(super::super::wal::WAL_FILE)).unwrap();
+        assert!(
+            !scan.records.iter().any(|(_, rec)| matches!(
+                rec,
+                WalRecord::Put { key, .. } if key == "j-train-0001"
+            )),
+            "skipped records must leave the log"
+        );
+        let r2 = open(&dir).unwrap();
+        assert_eq!(r2.skipped_records, 0, "second recovery must find nothing to skip");
+        assert!(r2.store.get("training_jobs", "j-train-0001").is_none());
+        // legacy v0 (bare-cursor) checkpoints never align/skip
+        let dir0 = tmp("skiptail-v0");
+        {
+            let r = open(&dir0).unwrap();
+            r.store.put(
+                "tuning_jobs",
+                "j",
+                crate::json::parse(r#"{"status": "InProgress"}"#).unwrap(),
+            );
+            let cursor = fake_v1_snapshot().get("cursor").unwrap().clone();
+            r.wal.append(&WalRecord::Checkpoint { job: "j".into(), exec: cursor });
+            r.store.put("training_jobs", "j-train-0001", Json::Num(2.0));
+            r.wal.commit().unwrap();
+        }
+        let r = open(&dir0).unwrap();
+        assert_eq!(r.skipped_records, 0);
+        let job = r.jobs.iter().find(|j| j.name == "j").unwrap();
+        assert!(job.resume.is_none(), "v0 checkpoints recover via scratch replay");
+        assert!(job.checkpoint.is_some());
+        assert!(r.store.get("training_jobs", "j-train-0001").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir0);
+    }
+
+    /// A job whose terminal record postdates its last checkpoint is
+    /// finished: the skip must not unwind its completion.
+    #[test]
+    fn terminal_jobs_are_never_unwound_by_the_skip() {
+        let dir = tmp("terminal");
+        {
+            let r = open(&dir).unwrap();
+            r.store.put(
+                "tuning_jobs",
+                "done",
+                crate::json::parse(r#"{"status": "InProgress"}"#).unwrap(),
+            );
+            r.wal
+                .append(&WalRecord::Checkpoint { job: "done".into(), exec: fake_v1_snapshot() });
+            r.store.put(
+                "tuning_jobs",
+                "done",
+                crate::json::parse(r#"{"status": "Completed"}"#).unwrap(),
+            );
+            r.wal.commit().unwrap();
+        }
+        let r = open(&dir).unwrap();
+        assert_eq!(r.skipped_records, 0);
+        let job = r.jobs.iter().find(|j| j.name == "done").unwrap();
+        assert_eq!(job.status, "Completed");
+        assert!(job.resume.is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

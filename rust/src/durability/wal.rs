@@ -126,6 +126,20 @@ impl WalRecord {
         };
         Some((lsn, rec))
     }
+
+    /// Append this record's on-disk frame (`[len][crc][payload]`) to
+    /// `out` — the single frame-encoding site for batch rewrites
+    /// ([`Wal::compact`] and recovery's incremental-resume rewrite), so
+    /// the framing discipline cannot drift between them. Live appends
+    /// ([`Wal::append`]) keep their own copy only because they
+    /// deliberately serialize outside the buffer mutex.
+    pub fn encode_frame(&self, lsn: u64, out: &mut Vec<u8>) {
+        let payload = self.to_json(lsn).to_string().into_bytes();
+        out.reserve(8 + payload.len());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+    }
 }
 
 /// IEEE CRC-32 (reflected, poly 0xEDB88320) over a byte slice.
@@ -371,10 +385,20 @@ impl Wal {
     /// Compact the on-disk log after a successful snapshot: drop every
     /// record the snapshot's high-water marks already cover (store
     /// records with `lsn ≤ store_hwm`, metrics records with
-    /// `lsn ≤ metrics_hwm`, checkpoints at or below both marks — a
-    /// checkpoint is a progress hint; recovery's reset-and-replay never
-    /// depends on it) and rewrite the survivors, preserving their LSNs
-    /// and order. Returns `(bytes_before, bytes_after)`.
+    /// `lsn ≤ metrics_hwm`, checkpoints at or below both marks) and
+    /// rewrite the survivors, preserving their LSNs and order. Returns
+    /// `(bytes_before, bytes_after)`.
+    ///
+    /// Checkpoint-retention invariant (DESIGN.md §12): recovery's
+    /// snapshot fast path only trusts a job's last checkpoint when its
+    /// LSN clears **both** hwm marks, so dropping checkpoints at or
+    /// below `min(store_hwm, metrics_hwm)` can never delete a
+    /// fast-path-eligible one — it only removes progress hints whose
+    /// jobs would scratch-replay anyway. Do not loosen the retention
+    /// rule (e.g. keep only the newest checkpoint regardless of hwm)
+    /// without also revisiting that gate: a retained checkpoint that
+    /// predates snapshot-captured state would resume from the wrong
+    /// store contents.
     ///
     /// Crash-safe: survivors are written to a temp file that is fsynced
     /// and renamed over the log (then the directory is fsynced), so a
@@ -405,11 +429,7 @@ impl Wal {
                 WalRecord::Checkpoint { .. } => *lsn > ckpt_hwm,
             };
             if keep {
-                let payload = rec.to_json(*lsn).to_string().into_bytes();
-                kept.reserve(8 + payload.len());
-                kept.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-                kept.extend_from_slice(&crc32(&payload).to_le_bytes());
-                kept.extend_from_slice(&payload);
+                rec.encode_frame(*lsn, &mut kept);
             }
         }
         let after = kept.len() as u64;

@@ -52,6 +52,47 @@ impl CurveHistory {
             .collect()
     }
 
+    /// JSON wire form: the full band history every stopping policy
+    /// conditions on, frozen into [`crate::coordinator`] resume
+    /// snapshots (curve values round-trip bit-exactly, so a resumed
+    /// job's stopping decisions are identical to the uninterrupted
+    /// run's).
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        Json::Arr(
+            self.curves
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        (
+                            "values",
+                            Json::Arr(c.values.iter().map(|&v| Json::Num(v)).collect()),
+                        ),
+                        ("completed", Json::Bool(c.completed)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse the JSON wire form.
+    pub fn from_json(j: &crate::json::Json) -> Option<CurveHistory> {
+        use crate::json::Json;
+        let mut curves = Vec::new();
+        for c in j.as_arr()? {
+            curves.push(FinishedCurve {
+                values: c
+                    .get("values")?
+                    .as_arr()?
+                    .iter()
+                    .map(Json::as_f64)
+                    .collect::<Option<_>>()?,
+                completed: c.get("completed")?.as_bool()?,
+            });
+        }
+        Some(CurveHistory { curves })
+    }
+
     /// Median epoch count among completed runs (the paper's dynamic
     /// activation signal: "determined dynamically based on the duration of
     /// the fully completed hyperparameter evaluations").
@@ -335,6 +376,21 @@ mod tests {
         assert!(!rule.should_stop(&[9.9, 9.9], 2, &h));
         let rule = MedianRule { min_completed_jobs: 2, ..Default::default() };
         assert!(rule.should_stop(&[9.9, 9.9], 2, &h));
+    }
+
+    #[test]
+    fn curve_history_json_roundtrip_is_bit_exact() {
+        let mut h = CurveHistory::default();
+        h.push(vec![0.5, 1.0 / 3.0, 1e-300], true);
+        h.push(vec![0.9], false);
+        let text = h.to_json().to_string();
+        let back = CurveHistory::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.curves.len(), 2);
+        for (a, b) in h.curves.iter().zip(&back.curves) {
+            assert_eq!(a.completed, b.completed);
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.values), bits(&b.values));
+        }
     }
 
     #[test]

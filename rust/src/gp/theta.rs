@@ -148,6 +148,31 @@ impl Theta {
         lp
     }
 
+    /// JSON wire form (packed layout plus the dimension). f64s round-trip
+    /// bit-exactly through the JSON layer, so a thawed theta reproduces
+    /// kernel evaluations bit-for-bit — required by the
+    /// [`crate::coordinator`] resume snapshot, which freezes the BO
+    /// strategy's `last_theta` and EB refit cache mid-job.
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        Json::obj(vec![
+            ("d", Json::Num(self.dim() as f64)),
+            ("packed", Json::Arr(self.pack().into_iter().map(Json::Num).collect())),
+        ])
+    }
+
+    /// Parse the JSON wire form.
+    pub fn from_json(j: &crate::json::Json) -> Option<Theta> {
+        use crate::json::Json;
+        let d = j.get("d")?.as_i64()? as usize;
+        let packed: Vec<f64> =
+            j.get("packed")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<_>>()?;
+        if packed.len() != Self::packed_len(d) {
+            return None;
+        }
+        Some(Theta::unpack(&packed, d))
+    }
+
     /// Disable input warping (fix a = b = 1); used by the warping ablation.
     pub fn with_identity_warp(mut self) -> Theta {
         self.log_wa.iter_mut().for_each(|v| *v = 0.0);
@@ -206,6 +231,25 @@ mod tests {
         for (x, (lo, hi)) in v.iter().zip(Theta::bounds(d)) {
             assert!(*x >= lo && *x <= hi);
         }
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let t = Theta {
+            log_amp: 1.0 / 3.0,
+            log_noise: -6.907755278982137,
+            log_ls: vec![0.1, -0.2, 1e-300],
+            log_wa: vec![0.0, 0.125, -0.1],
+            log_wb: vec![0.2, 0.0, 0.05],
+        };
+        let text = t.to_json().to_string();
+        let back = Theta::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        for (a, b) in t.pack().iter().zip(back.pack()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // wrong packed length is rejected
+        let bad = crate::json::parse(r#"{"d": 2, "packed": [1, 2, 3]}"#).unwrap();
+        assert!(Theta::from_json(&bad).is_none());
     }
 
     #[test]

@@ -163,6 +163,18 @@ impl Json {
     }
 }
 
+/// Lossless u64 encoding. JSON numbers are f64 (53 integer bits), so raw
+/// 64-bit words — RNG state, Sobol cursors — travel as fixed-width hex
+/// strings in resume snapshots.
+pub fn u64_to_json(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Parse a [`u64_to_json`] value.
+pub fn u64_from_json(j: &Json) -> Option<u64> {
+    u64::from_str_radix(j.as_str()?, 16).ok()
+}
+
 fn write_num(out: &mut String, n: f64) {
     if n.is_finite() {
         if n.fract() == 0.0 && n.abs() < 9e15 {
@@ -404,6 +416,16 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn u64_hex_roundtrip_covers_full_range() {
+        for v in [0u64, 1, (1 << 53) + 1, u64::MAX, 0x9E37_79B9_7F4A_7C15] {
+            let j = u64_to_json(v);
+            let text = j.to_string();
+            assert_eq!(u64_from_json(&parse(&text).unwrap()), Some(v));
+        }
+        assert_eq!(u64_from_json(&Json::Num(1.0)), None);
+    }
 
     #[test]
     fn roundtrip_scalars() {

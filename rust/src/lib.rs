@@ -30,14 +30,18 @@
 //! group-committed write-ahead log of every store/metrics mutation,
 //! per-shard point-in-time snapshots (with WAL compaction keeping the
 //! log bounded), and recovery-on-open ([`api::AmtService::open`]) that
-//! resumes in-flight tuning jobs with bit-identical trajectories. See
-//! `DESIGN.md` §10.
+//! resumes in-flight tuning jobs with bit-identical trajectories —
+//! O(remaining work), not O(job so far): every checkpoint is a
+//! versioned [`coordinator::ResumeSnapshot`] carrying the full
+//! strategy/platform state, so resumed jobs re-execute zero past
+//! proposals. See `DESIGN.md` §10/§12.
 //!
 //! The service scales past one process: [`distributed`] puts a framed,
 //! crc-checked wire protocol — whose delta payloads are literal WAL
 //! records — between the scheduler and a pool of remote workers
 //! ([`distributed::leader::RemoteWorkerPool`]), with lease-based
-//! liveness and requeue-from-reset on worker death. See `DESIGN.md` §11.
+//! liveness, surrogate-backend pinning for mixed fleets, and
+//! requeue-from-snapshot on worker death. See `DESIGN.md` §11/§12.
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the reproduced figures.

@@ -139,6 +139,32 @@ pub enum TrainingJobStatus {
     Stopped,
 }
 
+impl TrainingJobStatus {
+    /// Stable wire name (shared by the distributed protocol and resume
+    /// snapshots).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TrainingJobStatus::Provisioning => "Provisioning",
+            TrainingJobStatus::InProgress => "InProgress",
+            TrainingJobStatus::Completed => "Completed",
+            TrainingJobStatus::Failed => "Failed",
+            TrainingJobStatus::Stopped => "Stopped",
+        }
+    }
+
+    /// Parse a [`TrainingJobStatus::as_str`] name.
+    pub fn parse(s: &str) -> Option<TrainingJobStatus> {
+        Some(match s {
+            "Provisioning" => TrainingJobStatus::Provisioning,
+            "InProgress" => TrainingJobStatus::InProgress,
+            "Completed" => TrainingJobStatus::Completed,
+            "Failed" => TrainingJobStatus::Failed,
+            "Stopped" => TrainingJobStatus::Stopped,
+            _ => return None,
+        })
+    }
+}
+
 /// Why a job failed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FailureReason {
@@ -147,6 +173,25 @@ pub enum FailureReason {
     /// Out-of-memory-style crash mid-training (e.g. the BO engine suggested
     /// an over-large configuration, §3.3).
     TrainingCrash,
+}
+
+impl FailureReason {
+    /// Stable wire name (resume snapshots).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FailureReason::ProvisioningError => "ProvisioningError",
+            FailureReason::TrainingCrash => "TrainingCrash",
+        }
+    }
+
+    /// Parse a [`FailureReason::as_str`] name.
+    pub fn parse(s: &str) -> Option<FailureReason> {
+        Some(match s {
+            "ProvisioningError" => FailureReason::ProvisioningError,
+            "TrainingCrash" => FailureReason::TrainingCrash,
+            _ => return None,
+        })
+    }
 }
 
 /// Observable job record.
@@ -450,6 +495,164 @@ impl TrainingPlatform {
     }
 }
 
+impl TrainingPlatform {
+    /// Freeze the entire discrete-event state — RNG words, virtual
+    /// clock, event queue, per-job records with their precomputed metric
+    /// curves — into JSON, the platform half of a
+    /// [`crate::coordinator`] resume snapshot (schema v1, DESIGN.md
+    /// §12). Every f64 round-trips bit-exactly and the queue is stored
+    /// in pop order, so a thawed platform emits exactly the remaining
+    /// event sequence of the original: no objective re-evaluation, no
+    /// replayed provisioning draws. The `PlatformConfig` rides along, so
+    /// the snapshot is self-sufficient.
+    pub fn state_to_json(&self) -> Json {
+        let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let curve = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+
+        let mut entries: Vec<&HeapEntry> = self.queue.iter().map(|r| &r.0).collect();
+        entries.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.seq.cmp(&b.seq)));
+        let queue = Json::Arr(
+            entries
+                .into_iter()
+                .map(|e| {
+                    let (kind, job, epoch) = match &e.item {
+                        Queued::Start { job } => ("start", *job, None),
+                        Queued::Epoch { job, epoch } => ("epoch", *job, Some(*epoch)),
+                        Queued::ProvisionFail { job } => ("pfail", *job, None),
+                    };
+                    Json::obj(vec![
+                        ("t", Json::Num(e.time)),
+                        ("seq", crate::json::u64_to_json(e.seq)),
+                        ("kind", Json::Str(kind.into())),
+                        ("job", Json::Num(job as f64)),
+                        (
+                            "epoch",
+                            epoch.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+
+        let mut ids: Vec<JobId> = self.jobs.keys().copied().collect();
+        ids.sort_unstable();
+        let jobs = Json::Arr(
+            ids.into_iter()
+                .map(|id| {
+                    let s = &self.jobs[&id];
+                    Json::obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("name", Json::Str(s.info.name.clone())),
+                        ("config", crate::space::config_to_json_typed(&s.info.config)),
+                        ("status", Json::Str(s.info.status.as_str().into())),
+                        ("curve", curve(&s.info.curve)),
+                        ("submitted_at", Json::Num(s.info.submitted_at)),
+                        ("started_at", opt_num(s.info.started_at)),
+                        ("ended_at", opt_num(s.info.ended_at)),
+                        (
+                            "failure",
+                            s.info
+                                .failure
+                                .map(|f| Json::Str(f.as_str().into()))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("max_epochs", Json::Num(s.info.max_epochs as f64)),
+                        ("billable_seconds", Json::Num(s.info.billable_seconds)),
+                        ("full_curve", curve(&s.full_curve)),
+                        ("epoch_seconds", Json::Num(s.epoch_seconds)),
+                        (
+                            "crash_at_epoch",
+                            s.crash_at_epoch
+                                .map(|v| Json::Num(v as f64))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("cancelled", Json::Bool(s.cancelled)),
+                    ])
+                })
+                .collect(),
+        );
+
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("rng", self.rng.state_to_json()),
+            ("now", Json::Num(self.now)),
+            ("seq", crate::json::u64_to_json(self.seq)),
+            ("next_id", Json::Num(self.next_id as f64)),
+            ("queue", queue),
+            ("jobs", jobs),
+        ])
+    }
+
+    /// Thaw a platform from [`TrainingPlatform::state_to_json`]. Returns
+    /// `None` on any schema mismatch (the caller falls back to scratch
+    /// replay).
+    pub fn from_state_json(j: &Json) -> Option<TrainingPlatform> {
+        let floats = |v: &Json| -> Option<Vec<f64>> {
+            v.as_arr()?.iter().map(Json::as_f64).collect()
+        };
+        let rng = Rng::from_state_json(j.get("rng")?)?;
+
+        let mut queue = BinaryHeap::new();
+        for e in j.get("queue")?.as_arr()? {
+            let job = e.get("job")?.as_i64()? as JobId;
+            let item = match e.get("kind")?.as_str()? {
+                "start" => Queued::Start { job },
+                "epoch" => Queued::Epoch { job, epoch: e.get("epoch")?.as_i64()? as u32 },
+                "pfail" => Queued::ProvisionFail { job },
+                _ => return None,
+            };
+            queue.push(Reverse(HeapEntry {
+                time: e.get("t")?.as_f64()?,
+                seq: crate::json::u64_from_json(e.get("seq")?)?,
+                item,
+            }));
+        }
+
+        let mut jobs = HashMap::new();
+        for rec in j.get("jobs")?.as_arr()? {
+            let id = rec.get("id")?.as_i64()? as JobId;
+            let info = TrainingJobInfo {
+                name: rec.get("name")?.as_str()?.to_string(),
+                config: crate::space::config_from_json_typed(rec.get("config")?)?,
+                status: TrainingJobStatus::parse(rec.get("status")?.as_str()?)?,
+                curve: floats(rec.get("curve")?)?,
+                submitted_at: rec.get("submitted_at")?.as_f64()?,
+                started_at: rec.get("started_at").and_then(Json::as_f64),
+                ended_at: rec.get("ended_at").and_then(Json::as_f64),
+                failure: match rec.get("failure")? {
+                    Json::Null => None,
+                    f => Some(FailureReason::parse(f.as_str()?)?),
+                },
+                max_epochs: rec.get("max_epochs")?.as_i64()? as u32,
+                billable_seconds: rec.get("billable_seconds")?.as_f64()?,
+            };
+            jobs.insert(
+                id,
+                JobState {
+                    info,
+                    full_curve: floats(rec.get("full_curve")?)?,
+                    epoch_seconds: rec.get("epoch_seconds")?.as_f64()?,
+                    crash_at_epoch: rec
+                        .get("crash_at_epoch")
+                        .and_then(Json::as_i64)
+                        .map(|v| v as u32),
+                    cancelled: rec.get("cancelled")?.as_bool()?,
+                },
+            );
+        }
+
+        Some(TrainingPlatform {
+            config: PlatformConfig::from_json(j.get("config")?),
+            rng,
+            now: j.get("now")?.as_f64()?,
+            seq: crate::json::u64_from_json(j.get("seq")?)?,
+            queue,
+            jobs,
+            next_id: j.get("next_id")?.as_i64()? as JobId,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -602,6 +805,68 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn state_roundtrip_mid_drain_emits_identical_remaining_events() {
+        // freeze after a handful of events with failures + jitter live,
+        // thaw, and require the exact remaining event sequence bit-for-bit
+        let cfg = PlatformConfig {
+            provisioning_failure_rate: 0.2,
+            training_failure_rate: 0.2,
+            ..PlatformConfig::default()
+        };
+        let mut p = TrainingPlatform::new(cfg, 21);
+        for i in 0..6 {
+            p.submit(spec(&format!("j{i}"), i));
+        }
+        for _ in 0..7 {
+            p.next_event();
+        }
+        p.stop_job(2); // a cancelled job's dropped events must survive the trip
+        let frozen = p.state_to_json().to_string();
+        let mut thawed =
+            TrainingPlatform::from_state_json(&crate::json::parse(&frozen).unwrap()).unwrap();
+        assert_eq!(thawed.now().to_bits(), p.now().to_bits());
+        loop {
+            let a = p.next_event();
+            let b = thawed.next_event();
+            match (&a, &b) {
+                (None, None) => break,
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.job(), y.job());
+                    assert_eq!(x.time().to_bits(), y.time().to_bits());
+                    assert_eq!(x, y);
+                }
+                _ => panic!("event streams diverged: {a:?} vs {b:?}"),
+            }
+        }
+        // submissions after the thaw also agree (RNG + next_id restored)
+        let ia = p.submit(spec("late", 9));
+        let ib = thawed.submit(spec("late", 9));
+        assert_eq!(ia, ib);
+        assert_eq!(
+            p.next_event().map(|e| e.time().to_bits()),
+            thawed.next_event().map(|e| e.time().to_bits())
+        );
+    }
+
+    #[test]
+    fn status_and_failure_wire_names_roundtrip() {
+        for s in [
+            TrainingJobStatus::Provisioning,
+            TrainingJobStatus::InProgress,
+            TrainingJobStatus::Completed,
+            TrainingJobStatus::Failed,
+            TrainingJobStatus::Stopped,
+        ] {
+            assert_eq!(TrainingJobStatus::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(TrainingJobStatus::parse("nope"), None);
+        for f in [FailureReason::ProvisioningError, FailureReason::TrainingCrash] {
+            assert_eq!(FailureReason::parse(f.as_str()), Some(f));
+        }
+        assert_eq!(FailureReason::parse("nope"), None);
     }
 
     #[test]

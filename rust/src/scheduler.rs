@@ -346,10 +346,19 @@ impl Scheduler {
     /// Queue a previously [`Scheduler::register`]ed job onto the event
     /// heap. Must be called exactly once per registered job.
     pub fn activate(&self, name: &str) {
+        self.activate_at(name, 0.0);
+    }
+
+    /// Queue a registered job at an explicit virtual due time. Jobs
+    /// resumed from a [`crate::coordinator::ResumeSnapshot`] re-enter
+    /// here at their checkpoint's clock ([`JobActor::due`]) instead of
+    /// `begin()`-style time zero, so a half-finished recovered job does
+    /// not jump the fair-share queue ahead of less-advanced peers.
+    pub fn activate_at(&self, name: &str, due: f64) {
         let weight = {
             self.inner.jobs.lock().unwrap().get(name).map(|s| s.weight).unwrap_or(1.0)
         };
-        push_entry(&self.inner, 0.0, weight, name.to_string());
+        push_entry(&self.inner, due.max(0.0), weight, name.to_string());
     }
 
     /// Reserve and immediately queue a job actor (`register` + `activate`).

@@ -88,6 +88,25 @@ impl Sobol {
         self.dim
     }
 
+    /// The generator cursor: `(index, x)` — everything that changes as
+    /// points are drawn (the direction numbers are a pure function of
+    /// `dim`). Used by [`crate::coordinator`] resume snapshots.
+    pub fn state(&self) -> (u64, &[u64]) {
+        (self.index, &self.x)
+    }
+
+    /// Rebuild a generator mid-sequence from a captured [`Sobol::state`].
+    /// Returns `None` when the state does not fit the dimension.
+    pub fn from_state(dim: usize, index: u64, x: &[u64]) -> Option<Sobol> {
+        if x.len() != dim {
+            return None;
+        }
+        let mut s = Sobol::new(dim);
+        s.index = index;
+        s.x.copy_from_slice(x);
+        Some(s)
+    }
+
     /// Next point in [0, 1)^dim (Gray-code order; the first emitted point is
     /// the origin-skipped point 0.5,…).
     pub fn next_point(&mut self) -> Vec<f64> {
@@ -183,5 +202,17 @@ mod tests {
     #[should_panic]
     fn rejects_oversized_dim() {
         let _ = Sobol::new(MAX_DIM + 1);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_sequence() {
+        let mut a = Sobol::new(5);
+        a.take_points(37); // advance mid-sequence
+        let (index, x) = a.state();
+        let mut b = Sobol::from_state(5, index, &x.to_vec()).unwrap();
+        for _ in 0..64 {
+            assert_eq!(a.next_point(), b.next_point());
+        }
+        assert!(Sobol::from_state(5, 1, &[0; 4]).is_none(), "dim mismatch rejected");
     }
 }

@@ -12,6 +12,7 @@ use std::sync::Arc;
 use crate::acquisition::{propose, AcquisitionConfig, Proposal};
 use crate::gp::slice::{sample_gphp, SliceConfig};
 use crate::gp::{fit::fit_empirical_bayes, kernel, Dataset, GpModel, SurrogateBackend, Theta};
+use crate::json::{self, Json};
 use crate::linalg::{chol_append_row, Matrix};
 use crate::rng::Rng;
 use crate::sobol::Sobol;
@@ -26,12 +27,121 @@ pub struct Observation {
     pub value: f64,
 }
 
+/// Wire form of a list of observations: the `warm_start` table's
+/// `observations` field, the distributed `Assign` message's `transfer`
+/// field, and the history/transfer blocks of resume snapshots. Configs
+/// use the type-tagged encoding ([`crate::space::config_to_json_typed`])
+/// and f64s round-trip bit-exactly, so a thawed strategy sees *exactly*
+/// the observations the original held.
+pub fn observations_to_json(obs: &[Observation]) -> Json {
+    Json::Arr(
+        obs.iter()
+            .map(|o| {
+                Json::obj(vec![
+                    ("config", crate::space::config_to_json_typed(&o.config)),
+                    ("value", Json::Num(o.value)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Reader for [`observations_to_json`] (takes the array).
+pub fn observations_from_json(arr: &Json) -> Option<Vec<Observation>> {
+    let arr = arr.as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for entry in arr {
+        out.push(Observation {
+            config: crate::space::config_from_json_typed(entry.get("config")?)?,
+            value: entry.get("value")?.as_f64()?,
+        });
+    }
+    Some(out)
+}
+
+/// Mid-job strategy state, frozen into versioned resume snapshots
+/// (DESIGN.md §12). `state_to_json` captures everything that changes as
+/// a strategy proposes — RNG words, Sobol/grid cursors, warm-start
+/// observations, the BO engine's MCMC warm start and EB refit cache —
+/// and `restore_state` thaws it into a freshly constructed strategy of
+/// the same kind, after which the strategy's remaining proposal stream
+/// is **bit-identical** to the uninterrupted original's. Strategies are
+/// otherwise pure functions of `(request, history, pending)`, so this
+/// state is exactly the part recovery cannot rebuild without replaying
+/// every past proposal.
+pub trait StrategyState {
+    /// Freeze the mutable strategy state (always carries a `kind` tag).
+    fn state_to_json(&self) -> Json;
+    /// Thaw a [`StrategyState::state_to_json`] payload into this
+    /// strategy. Returns false on any kind/schema mismatch, leaving the
+    /// caller to fall back to scratch replay; partial application is
+    /// allowed on a false return (the strategy must then be discarded).
+    fn restore_state(&mut self, state: &Json) -> bool;
+}
+
 /// A proposal source for the selection service.
-pub trait Strategy: Send {
+pub trait Strategy: Send + StrategyState {
     /// Short name for logs and benches.
     fn name(&self) -> &'static str;
     /// Propose the next configuration given history and pending evaluations.
     fn next_config(&mut self, history: &[Observation], pending: &[Config]) -> Config;
+}
+
+fn sobol_to_json(s: &Sobol) -> Json {
+    let (index, x) = s.state();
+    Json::obj(vec![
+        ("index", json::u64_to_json(index)),
+        ("x", Json::Arr(x.iter().map(|&w| json::u64_to_json(w)).collect())),
+    ])
+}
+
+fn sobol_from_json(dim: usize, j: &Json) -> Option<Sobol> {
+    let index = json::u64_from_json(j.get("index")?)?;
+    let x: Vec<u64> =
+        j.get("x")?.as_arr()?.iter().map(json::u64_from_json).collect::<Option<_>>()?;
+    Sobol::from_state(dim, index, &x)
+}
+
+fn dataset_to_json(d: &Dataset) -> Json {
+    Json::obj(vec![
+        ("n", Json::Num(d.len() as f64)),
+        ("d", Json::Num(d.dim() as f64)),
+        ("flat", Json::Arr(d.flat().iter().map(|&v| Json::Num(v)).collect())),
+    ])
+}
+
+fn dataset_from_json(j: &Json) -> Option<Dataset> {
+    let n = j.get("n")?.as_i64()? as usize;
+    let d = j.get("d")?.as_i64()? as usize;
+    let flat: Vec<f64> =
+        j.get("flat")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<_>>()?;
+    if flat.len() != n * d {
+        return None;
+    }
+    Some(Dataset::from_flat(n, d, flat))
+}
+
+fn matrix_to_json(m: &Matrix) -> Json {
+    Json::obj(vec![
+        ("rows", Json::Num(m.rows as f64)),
+        ("cols", Json::Num(m.cols as f64)),
+        ("data", Json::Arr(m.data.iter().map(|&v| Json::Num(v)).collect())),
+    ])
+}
+
+fn matrix_from_json(j: &Json) -> Option<Matrix> {
+    let rows = j.get("rows")?.as_i64()? as usize;
+    let cols = j.get("cols")?.as_i64()? as usize;
+    let data: Vec<f64> =
+        j.get("data")?.as_arr()?.iter().map(Json::as_f64).collect::<Option<_>>()?;
+    if data.len() != rows * cols {
+        return None;
+    }
+    Some(Matrix::from_rows(rows, cols, data))
+}
+
+fn kind_matches(state: &Json, kind: &str) -> bool {
+    state.get("kind").and_then(Json::as_str) == Some(kind)
 }
 
 // ---------------------------------------------------------------------------
@@ -60,6 +170,27 @@ impl Strategy for RandomSearch {
     }
 }
 
+impl StrategyState for RandomSearch {
+    fn state_to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("random".into())),
+            ("rng", self.rng.state_to_json()),
+        ])
+    }
+    fn restore_state(&mut self, state: &Json) -> bool {
+        if !kind_matches(state, "random") {
+            return false;
+        }
+        match state.get("rng").and_then(Rng::from_state_json) {
+            Some(rng) => {
+                self.rng = rng;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
 /// Quasi-random search on a Sobol sequence (§2.1's "pseudo-random points").
 pub struct SobolSearch {
     space: SearchSpace,
@@ -85,6 +216,27 @@ impl Strategy for SobolSearch {
             u.push(u[l % self.sobol.dim()]);
         }
         self.space.decode(&u)
+    }
+}
+
+impl StrategyState for SobolSearch {
+    fn state_to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("sobol".into())),
+            ("sobol", sobol_to_json(&self.sobol)),
+        ])
+    }
+    fn restore_state(&mut self, state: &Json) -> bool {
+        if !kind_matches(state, "sobol") {
+            return false;
+        }
+        match state.get("sobol").and_then(|s| sobol_from_json(self.sobol.dim(), s)) {
+            Some(sobol) => {
+                self.sobol = sobol;
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -118,6 +270,29 @@ impl Strategy for GridSearch {
         let c = self.grid[self.cursor % self.grid.len()].clone();
         self.cursor += 1;
         c
+    }
+}
+
+impl StrategyState for GridSearch {
+    fn state_to_json(&self) -> Json {
+        // the grid itself is a pure function of (space, k): only the
+        // cursor needs to travel
+        Json::obj(vec![
+            ("kind", Json::Str("grid".into())),
+            ("cursor", Json::Num(self.cursor as f64)),
+        ])
+    }
+    fn restore_state(&mut self, state: &Json) -> bool {
+        if !kind_matches(state, "grid") {
+            return false;
+        }
+        match state.get("cursor").and_then(Json::as_i64) {
+            Some(cursor) if cursor >= 0 => {
+                self.cursor = cursor as usize;
+                true
+            }
+            _ => false,
+        }
     }
 }
 
@@ -429,6 +604,85 @@ impl Strategy for BayesianOptimization {
     }
 }
 
+impl StrategyState for BayesianOptimization {
+    fn state_to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("bayesian".into())),
+            ("rng", self.rng.state_to_json()),
+            ("sobol_init", sobol_to_json(&self.sobol_init)),
+            (
+                "last_theta",
+                self.last_theta.as_ref().map(Theta::to_json).unwrap_or(Json::Null),
+            ),
+            ("transferred", observations_to_json(&self.transferred)),
+            (
+                "eb_cache",
+                match &self.eb_cache {
+                    None => Json::Null,
+                    // the exact Cholesky factor must travel: a fresh
+                    // factorization under the same theta is only equal
+                    // to ~1e-10, not bit-equal, and the invariant is
+                    // a bit-identical remaining proposal stream
+                    Some(c) => Json::obj(vec![
+                        ("theta", c.theta.to_json()),
+                        ("x", dataset_to_json(&c.x)),
+                        ("l", matrix_to_json(&c.l)),
+                        ("fitted_n", Json::Num(c.fitted_n as f64)),
+                    ]),
+                },
+            ),
+        ])
+    }
+
+    fn restore_state(&mut self, state: &Json) -> bool {
+        if !kind_matches(state, "bayesian") {
+            return false;
+        }
+        let Some(rng) = state.get("rng").and_then(Rng::from_state_json) else { return false };
+        let Some(sobol_init) = state
+            .get("sobol_init")
+            .and_then(|s| sobol_from_json(self.sobol_init.dim(), s))
+        else {
+            return false;
+        };
+        let last_theta = match state.get("last_theta") {
+            None | Some(Json::Null) => None,
+            Some(t) => match Theta::from_json(t) {
+                Some(t) => Some(t),
+                None => return false,
+            },
+        };
+        let Some(transferred) =
+            state.get("transferred").and_then(observations_from_json)
+        else {
+            return false;
+        };
+        let eb_cache = match state.get("eb_cache") {
+            None | Some(Json::Null) => None,
+            Some(c) => {
+                let parsed = (|| {
+                    Some(EbCache {
+                        theta: Theta::from_json(c.get("theta")?)?,
+                        x: dataset_from_json(c.get("x")?)?,
+                        l: matrix_from_json(c.get("l")?)?,
+                        fitted_n: c.get("fitted_n")?.as_i64()? as usize,
+                    })
+                })();
+                match parsed {
+                    Some(cache) => Some(cache),
+                    None => return false,
+                }
+            }
+        };
+        self.rng = rng;
+        self.sobol_init = sobol_init;
+        self.last_theta = last_theta;
+        self.transferred = transferred;
+        self.eb_cache = eb_cache;
+        true
+    }
+}
+
 /// Build a strategy by CLI name.
 pub fn by_name(
     name: &str,
@@ -736,6 +990,141 @@ mod tests {
 
     fn quadratic_i(i: usize) -> f64 {
         (i as f64 * 0.13 - 0.3).powi(2)
+    }
+
+    /// Drive `a` for `warmup` proposals, freeze, thaw into `b`, then
+    /// require the next `run` proposals (with history evolving the same
+    /// way on both sides) to be identical.
+    fn assert_resumes_identically(
+        mut a: Box<dyn Strategy>,
+        mut b: Box<dyn Strategy>,
+        warmup: usize,
+        run: usize,
+    ) {
+        let mut history = Vec::new();
+        for _ in 0..warmup {
+            let c = a.next_config(&history, &[]);
+            let v = quadratic(&c);
+            history.push(Observation { config: c, value: v });
+        }
+        let frozen = a.state_to_json().to_string();
+        assert!(
+            b.restore_state(&crate::json::parse(&frozen).unwrap()),
+            "{}: restore_state failed",
+            a.name()
+        );
+        let mut hist_b = history.clone();
+        for _ in 0..run {
+            let ca = a.next_config(&history, &[]);
+            let cb = b.next_config(&hist_b, &[]);
+            assert_eq!(ca, cb, "{}: thawed proposal stream diverged", a.name());
+            let v = quadratic(&ca);
+            history.push(Observation { config: ca, value: v });
+            hist_b.push(Observation { config: cb, value: v });
+        }
+    }
+
+    #[test]
+    fn model_free_strategy_state_roundtrips_bit_identical() {
+        let space = space_2d();
+        assert_resumes_identically(
+            Box::new(RandomSearch::new(space.clone(), 5)),
+            Box::new(RandomSearch::new(space.clone(), 5)),
+            9,
+            20,
+        );
+        assert_resumes_identically(
+            Box::new(SobolSearch::new(space.clone())),
+            Box::new(SobolSearch::new(space.clone())),
+            9,
+            20,
+        );
+        assert_resumes_identically(
+            Box::new(GridSearch::new(&space, 3)),
+            Box::new(GridSearch::new(&space, 3)),
+            5,
+            10,
+        );
+    }
+
+    #[test]
+    fn bo_state_roundtrips_bit_identical_including_eb_cache() {
+        let make = || {
+            BayesianOptimization::new(
+                space_2d(),
+                Arc::new(NativeBackend),
+                BoConfig {
+                    init_random: 2,
+                    gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                    acq: AcquisitionConfig { num_anchors: 32, ..Default::default() },
+                    eb_refit_every: 8,
+                    ..Default::default()
+                },
+                47,
+            )
+        };
+        // warm past the initial design so the EB cache is armed when frozen
+        let mut a = make();
+        let mut history = Vec::new();
+        let mut rng = Rng::new(48);
+        for _ in 0..6 {
+            let c = a.next_config(&history, &[]);
+            history.push(Observation { config: c, value: rng.uniform() });
+        }
+        assert!(a.eb_cache.is_some(), "cache must be armed before the freeze");
+        let frozen = a.state_to_json().to_string();
+        let mut b = make();
+        assert!(b.restore_state(&crate::json::parse(&frozen).unwrap()));
+        let mut hist_b = history.clone();
+        for _ in 0..4 {
+            let ca = a.next_config(&history, &[]);
+            let cb = b.next_config(&hist_b, &[]);
+            assert_eq!(ca, cb, "thawed BO proposal stream diverged");
+            let v = rng.uniform();
+            history.push(Observation { config: ca, value: v });
+            hist_b.push(Observation { config: cb, value: v });
+        }
+    }
+
+    #[test]
+    fn bo_mcmc_state_roundtrips_with_transferred_observations() {
+        let make = || {
+            let mut bo = BayesianOptimization::new(
+                space_2d(),
+                Arc::new(NativeBackend),
+                BoConfig {
+                    init_random: 2,
+                    gphp: GphpMode::Mcmc(SliceConfig::light()),
+                    acq: AcquisitionConfig { num_anchors: 32, ..Default::default() },
+                    ..Default::default()
+                },
+                51,
+            );
+            let mut prng = Rng::new(52);
+            let parent: Vec<Observation> = (0..5)
+                .map(|_| {
+                    let c = space_2d().sample(&mut prng);
+                    let v = quadratic(&c);
+                    Observation { config: c, value: v }
+                })
+                .collect();
+            bo.add_transferred(parent);
+            bo
+        };
+        assert_resumes_identically(Box::new(make()), Box::new(make()), 3, 3);
+    }
+
+    #[test]
+    fn restore_state_rejects_kind_mismatch() {
+        let space = space_2d();
+        let frozen = RandomSearch::new(space.clone(), 1).state_to_json();
+        let mut sobol = SobolSearch::new(space.clone());
+        assert!(!sobol.restore_state(&frozen));
+        let mut grid = GridSearch::new(&space, 3);
+        assert!(!grid.restore_state(&frozen));
+        let mut random = RandomSearch::new(space, 2);
+        assert!(random.restore_state(&frozen));
+        assert!(!random.restore_state(&Json::Null));
     }
 
     #[test]

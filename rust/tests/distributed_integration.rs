@@ -261,6 +261,9 @@ fn killed_worker_jobs_requeue_and_match_uninterrupted_run() {
         );
     }
     assert_services_identical(&reference, &svc);
+    // release the pool handle before the service: the pool's Drop (the
+    // last Arc) is what drains the workers
+    drop(pool);
     drop(svc);
     workers.join();
 }
@@ -312,6 +315,224 @@ fn durable_service_with_remote_workers_recovers_after_close() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Durable + distributed end-to-end kill test at scale (ROADMAP): a
+/// durable leader drives ~200 remote loopback jobs; one worker is
+/// killed mid-run AND the leader is killed (crash-style: WAL committed,
+/// no close) and reopened. Both failure legs now ride the O(remaining)
+/// resume path — the worker kill requeues from delta-acked snapshots,
+/// the reopen fast-resumes from WAL checkpoints — and the recovered
+/// final state is bit-identical to an uninterrupted in-memory run.
+#[test]
+fn durable_leader_with_200_remote_jobs_survives_worker_kill_and_reopen() {
+    const JOBS: usize = 200;
+    let requests: Vec<TuningJobRequest> = (0..JOBS as u64)
+        .map(|i| TuningJobRequest {
+            name: format!("soak-{i:03}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 2,
+            max_parallel_jobs: 2,
+            seed: 7000 + i,
+            ..Default::default()
+        })
+        .collect();
+
+    // uninterrupted in-memory reference
+    let reference = AmtService::new(PlatformConfig::noiseless());
+    for r in &requests {
+        reference.create_tuning_job(r.clone()).unwrap();
+    }
+    for r in &requests {
+        reference.wait(&r.name).unwrap();
+    }
+
+    let dir = std::env::temp_dir().join(format!(
+        "amt-dist-kill-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let (snapshot_requeues, scratch_requeues);
+    {
+        let (transports, workers) = spawn_workers(3, "soak");
+        let mut svc = amt::api::AmtService::open_with_options(
+            &dir,
+            PlatformConfig::noiseless(),
+            std::sync::Arc::new(amt::gp::NativeBackend),
+            amt::scheduler::SchedulerConfig { workers: 2, batch_steps: 8 },
+        )
+        .unwrap();
+        svc.attach_remote_workers(
+            transports,
+            RemoteConfig { batch_steps: 8, ..RemoteConfig::default() },
+        );
+        for r in &requests {
+            svc.create_tuning_job(r.clone()).unwrap();
+        }
+        // let the fleet work, then kill worker 0 mid-spike
+        let pool = svc.remote_pool().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            let total: u64 =
+                requests.iter().filter_map(|r| pool.poll_count(&r.name)).sum();
+            if total >= 2 * JOBS as u64 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "spike never got going");
+            std::thread::yield_now();
+        }
+        workers.faults[0].kill();
+        // let the repair land and more jobs finish, then kill the leader
+        // mid-run: wait for roughly half the fleet to complete
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            let done = requests
+                .iter()
+                .filter(|r| pool.try_outcome(&r.name).is_some())
+                .count();
+            if done >= JOBS / 2 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "fleet stalled after worker kill");
+            std::thread::yield_now();
+        }
+        snapshot_requeues = pool.snapshot_requeues();
+        scratch_requeues = pool.scratch_requeues();
+        svc.wal().unwrap().commit().unwrap();
+        // leader kill: drop the pool handle then the service (the last
+        // Arc's Drop drains the workers); no close(), no snapshot
+        drop(pool);
+        drop(svc);
+        workers.join();
+    }
+
+    // reopen: unfinished jobs resume (snapshot fast path wherever a
+    // checkpoint was committed) and run to completion on the local plane
+    let svc = amt::api::AmtService::open_with_options(
+        &dir,
+        PlatformConfig::noiseless(),
+        std::sync::Arc::new(amt::gp::NativeBackend),
+        amt::scheduler::SchedulerConfig { workers: 2, batch_steps: 8 },
+    )
+    .unwrap();
+    for name in svc.recovered_jobs().to_vec() {
+        svc.wait(&name).unwrap();
+    }
+    let stats = svc.recovery_stats();
+    assert!(
+        stats.fast_resumed >= 1,
+        "reopen leg must exercise the snapshot fast path: {stats:?}"
+    );
+    assert!(
+        snapshot_requeues >= 1,
+        "worker-kill leg must exercise snapshot requeue \
+         (snapshot={snapshot_requeues}, scratch={scratch_requeues})"
+    );
+    for r in &requests {
+        let d = svc.describe_tuning_job(&r.name).unwrap();
+        assert_eq!(d.status, "Completed", "{} not completed", r.name);
+        assert_eq!(d.evaluations, 2, "{} wrong evaluation count", r.name);
+    }
+    assert_services_identical(&reference, &svc);
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mixed-backend fleet: the leader routes jobs only to workers whose
+/// advertised surrogate backend matches the service's, and falls back
+/// to the **local** plane when no compatible worker is live.
+#[test]
+fn mixed_backend_fleet_routes_by_backend_and_falls_back_local() {
+    use amt::distributed::worker::spawn_loopback_worker_with_backend;
+    use amt::gp::{Dataset, GramScratch, PosteriorState, Score, SurrogateBackend, Theta};
+    use amt::linalg::Matrix;
+
+    /// Test double: native math under a different compatibility name.
+    struct RenamedBackend;
+    impl SurrogateBackend for RenamedBackend {
+        fn name(&self) -> &'static str {
+            "test-hlo"
+        }
+        fn gram(&self, x: &Dataset, theta: &Theta) -> Matrix {
+            amt::gp::NativeBackend.gram(x, theta)
+        }
+        fn gram_into(&self, x: &Dataset, theta: &Theta, scratch: &mut GramScratch) {
+            amt::gp::NativeBackend.gram_into(x, theta, scratch)
+        }
+        fn posterior_scores(
+            &self,
+            post: &PosteriorState,
+            x_cand: &Dataset,
+            y_best: f64,
+        ) -> Vec<Score> {
+            amt::gp::NativeBackend.posterior_scores(post, x_cand, y_best)
+        }
+    }
+
+    // fleet of one native worker + one "test-hlo" worker
+    let spawn_fleet = || {
+        let (t0, _f0, h0) = spawn_loopback_worker("mixed-native");
+        let (t1, _f1, h1) = spawn_loopback_worker_with_backend("mixed-hlo", "test-hlo");
+        (vec![t0, t1], vec![h0, h1])
+    };
+
+    // a test-hlo service over the mixed fleet: its jobs must land on the
+    // test-hlo lane and complete remotely
+    let (transports, handles) = spawn_fleet();
+    let mut svc = AmtService::with_backend(
+        PlatformConfig::noiseless(),
+        std::sync::Arc::new(RenamedBackend),
+    );
+    svc.attach_remote_workers(transports, RemoteConfig::default());
+    let req = TuningJobRequest {
+        name: "mixed-remote".into(),
+        objective: "branin".into(),
+        strategy: "random".into(),
+        max_training_jobs: 3,
+        max_parallel_jobs: 2,
+        seed: 31,
+        ..Default::default()
+    };
+    svc.create_tuning_job(req.clone()).unwrap();
+    let out = svc.wait("mixed-remote").unwrap();
+    assert_eq!(out.status, ExecutionStatus::Succeeded);
+    let pool = svc.remote_pool().unwrap();
+    assert!(pool.contains("mixed-remote"), "compatible job must run remotely");
+    assert_eq!(
+        pool.lane_backends(),
+        vec![Some("native".to_string()), Some("test-hlo".to_string())]
+    );
+    drop(pool);
+    drop(svc);
+    for h in handles {
+        let _ = h.join();
+    }
+
+    // a test-hlo service over a native-only fleet: no compatible worker
+    // ⇒ the job runs on the local plane (and still succeeds)
+    let (t0, _f0, h0) = spawn_loopback_worker("native-only");
+    let mut svc = AmtService::with_backend(
+        PlatformConfig::noiseless(),
+        std::sync::Arc::new(RenamedBackend),
+    );
+    svc.attach_remote_workers(vec![t0], RemoteConfig::default());
+    let mut req = req;
+    req.name = "mixed-local".into();
+    svc.create_tuning_job(req).unwrap();
+    let out = svc.wait("mixed-local").unwrap();
+    assert_eq!(out.status, ExecutionStatus::Succeeded);
+    let pool = svc.remote_pool().unwrap();
+    assert!(
+        !pool.contains("mixed-local"),
+        "incompatible job must fall back to the local plane"
+    );
+    drop(pool);
+    drop(svc);
+    let _ = h0.join();
+}
+
 /// The per-tenant in-flight quota holds across remote workers too: a
 /// quota-1 tenant never occupies two workers at once.
 #[test]
@@ -346,6 +567,7 @@ fn remote_quota_one_tenant_never_holds_two_workers() {
         1,
         "quota-1 tenant held two remote workers"
     );
+    drop(pool);
     drop(svc);
     workers.join();
 }

@@ -1,0 +1,378 @@
+//! Incremental-resume integration tests (DESIGN.md §12): versioned v1
+//! resume snapshots make durable recovery and worker-death requeue
+//! O(remaining work).
+//!
+//! The acceptance property: a BO tuning job killed at **every**
+//! Pending-boundary checkpoint resumes through the snapshot fast path —
+//! zero strategy proposals re-executed — and finishes with a
+//! bit-identical trajectory, evaluation records, metric series and store
+//! contents (values *and* versions) versus the uninterrupted run, on
+//! both failure legs (durable recovery-on-open and the distributed
+//! leader's worker-death requeue). Legacy v0 cursor-only checkpoints
+//! still recover via the pre-existing scratch-replay path, bit-identical
+//! to pre-refactor behavior.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::coordinator::{checkpoint_cursor, ResumeSnapshot};
+use amt::distributed::leader::RemoteConfig;
+use amt::distributed::worker::spawn_loopback_worker;
+use amt::durability::wal::{Wal, WalRecord, WAL_FILE};
+use amt::gp::NativeBackend;
+use amt::platform::PlatformConfig;
+use amt::scheduler::SchedulerConfig;
+use amt::workflow::ExecutionStatus;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "amt-resume-it-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn open_svc(dir: &PathBuf) -> AmtService {
+    // small batch slices force plenty of Pending boundaries (checkpoints)
+    AmtService::open_with_options(
+        dir,
+        PlatformConfig::noiseless(),
+        Arc::new(NativeBackend),
+        SchedulerConfig { workers: 2, batch_steps: 8 },
+    )
+    .unwrap()
+}
+
+fn bo_request(name: &str) -> TuningJobRequest {
+    TuningJobRequest {
+        name: name.into(),
+        objective: "branin".into(),
+        strategy: "bayesian".into(),
+        max_training_jobs: 5,
+        max_parallel_jobs: 2,
+        seed: 23,
+        ..Default::default()
+    }
+}
+
+/// Everything the identity comparison looks at, in bits.
+struct Fingerprint {
+    store_snapshot: String,
+    trajectory: Vec<(u64, u64)>,
+    evaluations: Vec<(String, Option<u64>, u64)>,
+    eval_series: Vec<(u64, u64)>,
+    epoch_series: Vec<(u64, u64)>,
+}
+
+fn fingerprint(
+    svc: &AmtService,
+    outcome: &amt::coordinator::TuningJobOutcome,
+    name: &str,
+) -> Fingerprint {
+    let series_bits = |stream: &str| -> Vec<(u64, u64)> {
+        svc.metrics()
+            .series(stream)
+            .iter()
+            .map(|p| (p.time.to_bits(), p.value.to_bits()))
+            .collect()
+    };
+    Fingerprint {
+        store_snapshot: svc.store().snapshot(),
+        trajectory: outcome
+            .best_over_time(true)
+            .iter()
+            .map(|(t, v)| (t.to_bits(), v.to_bits()))
+            .collect(),
+        evaluations: outcome
+            .evaluations
+            .iter()
+            .map(|e| {
+                (
+                    e.training_job_name.clone(),
+                    e.final_value.map(f64::to_bits),
+                    e.ended_at.to_bits(),
+                )
+            })
+            .collect(),
+        eval_series: series_bits(&format!("{name}/evaluations")),
+        epoch_series: series_bits(&format!("{name}-train-0000/objective")),
+    }
+}
+
+fn assert_identical(a: &Fingerprint, b: &Fingerprint, what: &str) {
+    assert_eq!(a.store_snapshot, b.store_snapshot, "{what}: store diverged");
+    assert_eq!(a.trajectory, b.trajectory, "{what}: trajectory diverged");
+    assert_eq!(a.evaluations, b.evaluations, "{what}: evaluations diverged");
+    assert_eq!(a.eval_series, b.eval_series, "{what}: evaluations series diverged");
+    assert_eq!(a.epoch_series, b.epoch_series, "{what}: epoch series diverged");
+}
+
+/// Acceptance property, durable-recovery leg: kill right after **every**
+/// v1 checkpoint of a BO job ⇒ recovery takes the snapshot fast path
+/// (zero proposals re-executed) and the finished run is bit-identical.
+#[test]
+fn bo_job_killed_at_every_checkpoint_fast_resumes_bit_identical() {
+    let name = "resume-bo";
+    let dir = tmpdir("ref");
+    let svc = open_svc(&dir);
+    svc.create_tuning_job(bo_request(name)).unwrap();
+    let outcome = svc.wait(name).unwrap();
+    svc.wal().unwrap().commit().unwrap();
+    let reference = fingerprint(&svc, &outcome, name);
+    drop(svc); // crash-style teardown: no close(), no shard snapshot
+
+    let bytes = std::fs::read(dir.join(WAL_FILE)).unwrap();
+    let scan = Wal::scan(&dir.join(WAL_FILE)).unwrap();
+    let ckpt_cuts: Vec<usize> = scan
+        .records
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, r))| matches!(r, WalRecord::Checkpoint { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    assert!(ckpt_cuts.len() >= 5, "expected many Pending checkpoints, got {ckpt_cuts:?}");
+
+    for (n, idx) in ckpt_cuts.iter().enumerate() {
+        let len = scan.frame_ends[*idx] as usize;
+        let what = format!("kill at checkpoint {}/{}", n + 1, ckpt_cuts.len());
+        let cut_dir = tmpdir("cut");
+        std::fs::write(cut_dir.join(WAL_FILE), &bytes[..len]).unwrap();
+        let svc = open_svc(&cut_dir);
+        assert!(
+            svc.recovered_jobs().contains(&name.to_string()),
+            "{what}: job must resume"
+        );
+        let stats = svc.recovery_stats();
+        assert_eq!(stats.fast_resumed, 1, "{what}: snapshot fast path not taken");
+        assert_eq!(stats.scratch_resumed, 0, "{what}: unexpected scratch replay");
+        assert_eq!(
+            stats.replayed_proposals, 0,
+            "{what}: proposals re-executed on the fast path"
+        );
+        let outcome = svc.wait(name).unwrap();
+        let recovered = fingerprint(&svc, &outcome, name);
+        assert_identical(&reference, &recovered, &what);
+        drop(svc);
+        let _ = std::fs::remove_dir_all(&cut_dir);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Cuts that land *inside* a poll slice (between a checkpoint and the
+/// next) also fast-resume: recovery skips the partial post-checkpoint
+/// tail and the resumed execution re-produces it exactly.
+#[test]
+fn mid_slice_cuts_fast_resume_after_first_checkpoint() {
+    let name = "resume-midslice";
+    let dir = tmpdir("mid-ref");
+    let svc = open_svc(&dir);
+    let mut request = bo_request(name);
+    request.strategy = "random".into();
+    request.max_training_jobs = 6;
+    svc.create_tuning_job(request).unwrap();
+    let outcome = svc.wait(name).unwrap();
+    svc.wal().unwrap().commit().unwrap();
+    let reference = fingerprint(&svc, &outcome, name);
+    drop(svc);
+
+    let bytes = std::fs::read(dir.join(WAL_FILE)).unwrap();
+    let scan = Wal::scan(&dir.join(WAL_FILE)).unwrap();
+    let first_ckpt = scan
+        .records
+        .iter()
+        .position(|(_, r)| matches!(r, WalRecord::Checkpoint { .. }))
+        .expect("at least one checkpoint");
+    let last = scan.records.len() - 1;
+    // a spread of mid-slice record boundaries strictly after the first
+    // checkpoint and before the terminal record
+    for cut in [first_ckpt + 1, (first_ckpt + last) / 2, last - 1] {
+        let len = scan.frame_ends[cut] as usize;
+        let what = format!("mid-slice cut after record {cut}");
+        let cut_dir = tmpdir("mid-cut");
+        std::fs::write(cut_dir.join(WAL_FILE), &bytes[..len]).unwrap();
+        let svc = open_svc(&cut_dir);
+        assert!(svc.recovered_jobs().contains(&name.to_string()), "{what}: no resume");
+        let stats = svc.recovery_stats();
+        assert_eq!(stats.fast_resumed, 1, "{what}: fast path not taken");
+        assert_eq!(stats.replayed_proposals, 0, "{what}: proposals re-executed");
+        let outcome = svc.wait(name).unwrap();
+        let recovered = fingerprint(&svc, &outcome, name);
+        assert_identical(&reference, &recovered, &what);
+        drop(svc);
+        let _ = std::fs::remove_dir_all(&cut_dir);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Rewrite a WAL's v1 checkpoints into legacy v0 (bare-cursor) records,
+/// preserving record order; LSNs renumber from 1, which recovery
+/// tolerates (no manifest in these tests).
+fn rewrite_checkpoints_to_v0(dir: &PathBuf, bytes: &[u8]) {
+    let scan = Wal::decode_frames(bytes);
+    let wal = Wal::create(dir).unwrap();
+    for (_, rec) in &scan.records {
+        let rec = match rec {
+            WalRecord::Checkpoint { job, exec } => {
+                let cursor = checkpoint_cursor(exec).expect("cursor parses").to_json();
+                assert!(
+                    ResumeSnapshot::from_json(&cursor).is_none(),
+                    "v0 payload must not parse as a snapshot"
+                );
+                WalRecord::Checkpoint { job: job.clone(), exec: cursor }
+            }
+            other => other.clone(),
+        };
+        wal.append(&rec);
+    }
+    wal.commit().unwrap();
+}
+
+/// Satellite: a WAL containing only legacy v0 cursor-only checkpoints
+/// (hand-rebuilt frames) recovers via scratch replay, bit-identical to
+/// pre-refactor behavior — the migration guarantee.
+#[test]
+fn legacy_v0_checkpoints_recover_via_scratch_replay_bit_identical() {
+    let name = "resume-legacy";
+    let dir = tmpdir("legacy-ref");
+    let svc = open_svc(&dir);
+    svc.create_tuning_job(bo_request(name)).unwrap();
+    let outcome = svc.wait(name).unwrap();
+    svc.wal().unwrap().commit().unwrap();
+    let reference = fingerprint(&svc, &outcome, name);
+    drop(svc);
+
+    let bytes = std::fs::read(dir.join(WAL_FILE)).unwrap();
+    let scan = Wal::scan(&dir.join(WAL_FILE)).unwrap();
+    let n = scan.records.len();
+    for cut in [n / 3, 2 * n / 3] {
+        let what = format!("v0 cut after record {cut}/{n}");
+        let cut_dir = tmpdir("legacy-cut");
+        rewrite_checkpoints_to_v0(&cut_dir, &bytes[..scan.frame_ends[cut - 1] as usize]);
+        let svc = open_svc(&cut_dir);
+        assert!(svc.recovered_jobs().contains(&name.to_string()), "{what}: no resume");
+        let stats = svc.recovery_stats();
+        assert_eq!(stats.fast_resumed, 0, "{what}: v0 must not fast-path");
+        assert_eq!(stats.scratch_resumed, 1, "{what}: scratch replay expected");
+        assert!(
+            stats.replayed_proposals > 0,
+            "{what}: scratch replay re-executes past proposals"
+        );
+        let outcome = svc.wait(name).unwrap();
+        let recovered = fingerprint(&svc, &outcome, name);
+        assert_identical(&reference, &recovered, &what);
+        drop(svc);
+        let _ = std::fs::remove_dir_all(&cut_dir);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance property, worker-death leg: with every job checkpointed
+/// at least once (deltas acked), a killed worker's jobs requeue from
+/// their snapshots — zero proposals re-executed — and the final state is
+/// bit-identical to an uninterrupted run.
+#[test]
+fn worker_death_requeues_from_snapshot_bit_identical() {
+    let requests: Vec<TuningJobRequest> = (0..4u64)
+        .map(|i| TuningJobRequest {
+            name: format!("wd-{i}"),
+            objective: "branin".into(),
+            strategy: if i == 0 { "bayesian" } else { "random" }.into(),
+            max_training_jobs: if i == 0 { 4 } else { 8 },
+            max_parallel_jobs: 2,
+            seed: 5000 + i,
+            ..Default::default()
+        })
+        .collect();
+
+    // uninterrupted reference on the in-process pool
+    let reference = AmtService::new(PlatformConfig::noiseless());
+    for r in &requests {
+        reference.create_tuning_job(r.clone()).unwrap();
+    }
+    let mut ref_outcomes = Vec::new();
+    for r in &requests {
+        ref_outcomes.push(reference.wait(&r.name).unwrap());
+    }
+
+    let mut transports = Vec::new();
+    let mut faults = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..2 {
+        let (t, fault, h) = spawn_loopback_worker(&format!("wd-{i}"));
+        transports.push(t);
+        faults.push(fault);
+        handles.push(h);
+    }
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 8, ..RemoteConfig::default() },
+    );
+    for r in &requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    // wait until every job has served at least two slices (⇒ its first
+    // delta-acked checkpoint reached the leader), then kill worker 0
+    let pool = svc.remote_pool().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let all_checkpointed = requests
+            .iter()
+            .all(|r| pool.poll_count(&r.name).unwrap_or(0) >= 2 || pool.try_outcome(&r.name).is_some());
+        if all_checkpointed {
+            break;
+        }
+        assert!(Instant::now() < deadline, "spike never got going");
+        std::thread::yield_now();
+    }
+    faults[0].kill();
+
+    let mut outcomes = Vec::new();
+    for r in &requests {
+        outcomes.push(svc.wait(&r.name).unwrap());
+    }
+    assert_eq!(pool.live_workers(), 1);
+    // every requeue the kill caused came from a snapshot
+    assert_eq!(pool.scratch_requeues(), 0, "expected snapshot-only requeues");
+    assert_eq!(pool.replayed_proposals(), 0, "proposals re-executed after the kill");
+    assert!(
+        pool.snapshot_requeues() >= 1,
+        "the killed worker must have hosted at least one unfinished job"
+    );
+
+    for (a, b) in ref_outcomes.iter().zip(&outcomes) {
+        assert_eq!(b.status, ExecutionStatus::Succeeded, "{} failed", b.name);
+        let bits = |o: &amt::coordinator::TuningJobOutcome| -> Vec<(String, Option<u64>, u64)> {
+            o.evaluations
+                .iter()
+                .map(|e| {
+                    (
+                        e.training_job_name.clone(),
+                        e.final_value.map(f64::to_bits),
+                        e.ended_at.to_bits(),
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(bits(a), bits(b), "{}: trajectory diverged after worker kill", a.name);
+        assert_eq!(a.total_seconds.to_bits(), b.total_seconds.to_bits());
+    }
+    assert_eq!(
+        reference.store().snapshot(),
+        svc.store().snapshot(),
+        "store contents (values + versions) diverged after snapshot requeue"
+    );
+    drop(pool);
+    drop(svc);
+    for h in handles {
+        let _ = h.join();
+    }
+}

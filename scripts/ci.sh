@@ -9,6 +9,14 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ERROR: no cargo toolchain on PATH." >&2
+    echo "  This gate needs rustc/cargo (the authoring containers for PRs 1+ had" >&2
+    echo "  none — see CHANGES.md). Install a Rust toolchain (e.g. via rustup)" >&2
+    echo "  and re-run: scripts/ci.sh [--bench]" >&2
+    exit 1
+fi
+
 echo "== tier-1 verify: cargo build --release =="
 cargo build --release
 
