@@ -1,6 +1,8 @@
-//! Distributed-plane benchmark (DESIGN.md §11): frame encode/decode
-//! throughput, loopback leader⇄worker round-trip latency, and a 200-job
-//! soak through the loopback `RemoteWorkerPool`. Emits
+//! Distributed-plane benchmark (DESIGN.md §11, §13): frame
+//! encode/decode throughput, loopback leader⇄worker round-trip latency,
+//! a 200-job soak through the loopback `RemoteWorkerPool`, an elastic
+//! kill/join/drain scenario reporting fleet-size-vs-throughput, and a
+//! graceful-drain migration-latency microbench (p50/p99). Emits
 //! `BENCH_distributed.json` (schema in `harness::BenchReport`;
 //! `AMT_BENCH_DIR` overrides the output directory).
 //! `cargo bench --bench distributed`.
@@ -8,6 +10,7 @@
 use std::time::{Duration, Instant};
 
 use amt::config::TuningJobRequest;
+use amt::distributed::leader::RemoteConfig;
 use amt::distributed::proto::{Message, PollReply};
 use amt::distributed::worker::spawn_loopback_worker;
 use amt::distributed::{frame, transport::Transport};
@@ -179,6 +182,181 @@ fn main() {
     drop(service);
     for h in handles {
         h.join().unwrap();
+    }
+
+    // --- elastic fleet under load (DESIGN.md §13): per-phase throughput
+    // as the fleet shrinks to a kill, grows at a late join, and shrinks
+    // again at a graceful drain ---
+    const ELASTIC_JOBS: usize = 240;
+    let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    let mut faults = Vec::new();
+    for i in 0..3 {
+        let (t, fault, h) = spawn_loopback_worker(&format!("bench-elastic-{i}"));
+        transports.push(t);
+        faults.push(fault);
+        handles.push(h);
+    }
+    let mut service = amt::api::AmtService::new(PlatformConfig::default());
+    service.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 16, ..RemoteConfig::default() },
+    );
+    let names: Vec<String> = (0..ELASTIC_JOBS).map(|i| format!("elast-{i:04}")).collect();
+    for (i, name) in names.iter().enumerate() {
+        service
+            .create_tuning_job(TuningJobRequest {
+                name: name.clone(),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: 3,
+                max_parallel_jobs: 2,
+                seed: i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+    }
+    let pool = service.remote_pool().unwrap();
+    let await_done = |target: usize| {
+        let deadline = Instant::now() + Duration::from_secs(300);
+        loop {
+            let done = names.iter().filter(|n| pool.try_outcome(n).is_some()).count();
+            if done >= target {
+                return Instant::now();
+            }
+            assert!(Instant::now() < deadline, "elastic fleet stalled at {done}/{target}");
+            std::thread::yield_now();
+        }
+    };
+    let quarter = ELASTIC_JOBS / 4;
+    let t0 = Instant::now();
+    let t1 = await_done(quarter); // 3 workers
+    faults[0].kill();
+    let t2 = await_done(2 * quarter); // 2 workers (post-kill repair)
+    let (late_t, _late_fault, late_h) = spawn_loopback_worker("bench-elastic-late");
+    handles.push(late_h);
+    service.add_remote_worker(late_t).unwrap();
+    let t3 = await_done(3 * quarter); // 3 workers again (join + steal)
+    assert!(service.drain_remote_worker(1));
+    for name in &names {
+        service.wait(name).unwrap();
+    }
+    let t4 = Instant::now(); // 2 workers (post-drain)
+    let phase = |a: Instant, b: Instant| quarter as f64 / (b - a).as_secs_f64();
+    println!(
+        "elastic fleet: {:.1} jobs/s @3w → {:.1} @2w (kill) → {:.1} @3w (join) → {:.1} @2w (drain); \
+         steals={} requeues={}/{} replays={}",
+        phase(t0, t1),
+        phase(t1, t2),
+        phase(t2, t3),
+        phase(t3, t4),
+        pool.steals(),
+        pool.snapshot_requeues(),
+        pool.scratch_requeues(),
+        pool.replayed_proposals()
+    );
+    report.push(
+        "elastic_kill_join_drain_240",
+        &[
+            ("jobs", ELASTIC_JOBS.to_string()),
+            ("jobs_per_sec_3w", format!("{:.2}", phase(t0, t1))),
+            ("jobs_per_sec_2w_postkill", format!("{:.2}", phase(t1, t2))),
+            ("jobs_per_sec_3w_postjoin", format!("{:.2}", phase(t2, t3))),
+            ("jobs_per_sec_2w_postdrain", format!("{:.2}", phase(t3, t4))),
+            ("joins", pool.joins().to_string()),
+            ("drains", pool.drains().to_string()),
+            ("steals", pool.steals().to_string()),
+            ("replayed_proposals", pool.replayed_proposals().to_string()),
+        ],
+        &BenchStats::from_samples(vec![
+            (t1 - t0).as_secs_f64(),
+            (t2 - t1).as_secs_f64(),
+            (t3 - t2).as_secs_f64(),
+            (t4 - t3).as_secs_f64(),
+        ]),
+    );
+    drop(pool);
+    drop(service);
+    for h in handles {
+        let _ = h.join();
+    }
+
+    // --- graceful-drain migration latency under load: time from
+    // drain_worker() to the lane fully migrated + retired, repeated over
+    // a rolling fleet (always one join ahead, so two lanes stay live) ---
+    const MIG_CYCLES: usize = 12;
+    let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..2 {
+        let (t, _fault, h) = spawn_loopback_worker(&format!("bench-mig-{i}"));
+        transports.push(t);
+        handles.push(h);
+    }
+    let mut service = amt::api::AmtService::new(PlatformConfig::default());
+    service.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 4, ..RemoteConfig::default() },
+    );
+    // long-running jobs keep every drained lane loaded with work to move
+    for i in 0..8 {
+        service
+            .create_tuning_job(TuningJobRequest {
+                name: format!("mig-{i}"),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: 500,
+                max_parallel_jobs: 2,
+                seed: i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+    }
+    let pool = service.remote_pool().unwrap();
+    let mut mig_latencies = Vec::with_capacity(MIG_CYCLES);
+    for cycle in 0..MIG_CYCLES {
+        let (t, _fault, h) = spawn_loopback_worker(&format!("bench-mig-join-{cycle}"));
+        service.add_remote_worker(t).unwrap();
+        handles.push(h);
+        let t0 = Instant::now();
+        assert!(service.drain_remote_worker(cycle), "lane {cycle} should drain");
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while pool.drains() < cycle as u64 + 1 {
+            assert!(Instant::now() < deadline, "drain {cycle} never completed");
+            std::thread::yield_now();
+        }
+        mig_latencies.push(t0.elapsed().as_secs_f64());
+    }
+    for i in 0..8 {
+        let _ = service.stop_tuning_job(&format!("mig-{i}"));
+    }
+    for i in 0..8 {
+        service.wait(&format!("mig-{i}")).unwrap();
+    }
+    let mut sorted = mig_latencies.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let p99 = sorted[((sorted.len() - 1) as f64 * 0.99) as usize];
+    let stats = BenchStats::from_samples(mig_latencies);
+    println!(
+        "drain migration latency over {MIG_CYCLES} cycles: p50 {:.1}ms, p99 {:.1}ms \
+         (replays: {})",
+        stats.p50 * 1e3,
+        p99 * 1e3,
+        pool.replayed_proposals()
+    );
+    report.push(
+        "drain_migration_latency",
+        &[
+            ("cycles", MIG_CYCLES.to_string()),
+            ("migration_p50_ms", format!("{:.3}", stats.p50 * 1e3)),
+            ("migration_p99_ms", format!("{:.3}", p99 * 1e3)),
+            ("replayed_proposals", pool.replayed_proposals().to_string()),
+        ],
+        &stats,
+    );
+    drop(pool);
+    drop(service);
+    for h in handles {
+        let _ = h.join();
     }
 
     match report.write() {

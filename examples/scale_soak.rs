@@ -23,8 +23,15 @@
 //! actors behind the full wire protocol, so one binary covers both
 //! execution planes.
 //!
+//! With `--chaos`, the largest spike also runs once over an *elastic*
+//! fleet under fault injection (DESIGN.md §13): three loopback workers,
+//! one killed mid-run, a fresh one joining mid-run, one drained
+//! gracefully — the entry's params report the fleet's `joins` /
+//! `drains` / `steals` / requeue / replay counters.
+//!
 //! ```bash
-//! cargo run --release --example scale_soak [tuning_jobs ...] [--distributed N]
+//! cargo run --release --example scale_soak [tuning_jobs ...] \
+//!     [--distributed N] [--chaos]
 //! ```
 
 use std::sync::Arc;
@@ -202,10 +209,126 @@ fn run_spike(num_jobs: usize, distributed: usize, report: &mut BenchReport) {
     }
 }
 
+/// One elastic chaos spike (DESIGN.md §13): `num_jobs` tuning jobs over
+/// a 3-worker loopback fleet that loses a worker to a kill, gains a
+/// fresh one mid-run, and drains another gracefully. Asserts every job
+/// still completes; reports throughput plus the fleet's liveness and
+/// migration counters.
+fn run_chaos(num_jobs: usize, report: &mut BenchReport) {
+    use amt::distributed::leader::RemoteConfig;
+    let platform = PlatformConfig {
+        provisioning_failure_rate: 0.05,
+        training_failure_rate: 0.04,
+        ..Default::default()
+    };
+    let mut transports = Vec::new();
+    let mut faults = Vec::new();
+    let mut worker_handles = Vec::new();
+    for i in 0..3 {
+        let (t, fault, h) = spawn_loopback_worker(&format!("chaos-{i}"));
+        transports.push(t);
+        faults.push(fault);
+        worker_handles.push(h);
+    }
+    let mut service = AmtService::new(platform);
+    service.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 16, ..RemoteConfig::default() },
+    );
+    eprintln!(
+        "chaos spike: {num_jobs} tuning jobs over an elastic 3-worker fleet \
+         (kill + join + drain mid-run)..."
+    );
+    let started = Instant::now();
+    let mut api_latencies: Vec<f64> = Vec::with_capacity(num_jobs);
+    for i in 0..num_jobs {
+        let request = TuningJobRequest {
+            name: format!("chaos-{i:04}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 3,
+            max_parallel_jobs: 2,
+            seed: i as u64,
+            ..Default::default()
+        };
+        let t = Instant::now();
+        service.create_tuning_job(request).expect("create must be accepted");
+        api_latencies.push(t.elapsed().as_secs_f64());
+    }
+
+    let pool = service.remote_pool().expect("remote plane attached");
+    // let the fleet get going so the chaos lands mid-run
+    let names: Vec<String> = (0..num_jobs).map(|i| format!("chaos-{i:04}")).collect();
+    let deadline = Instant::now() + std::time::Duration::from_secs(120);
+    loop {
+        let total: u64 = names.iter().filter_map(|n| pool.poll_count(n)).sum();
+        if total >= (num_jobs as u64 / 4).max(2) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "chaos fleet never got going");
+        std::thread::yield_now();
+    }
+    faults[0].kill(); // abrupt death
+    let (late_t, _late_fault, late_h) = spawn_loopback_worker("chaos-late");
+    service.add_remote_worker(late_t); // late join (triggers stealing)
+    worker_handles.push(late_h);
+    service.drain_remote_worker(1); // graceful drain
+
+    let mut completed = 0usize;
+    for name in &names {
+        if service.wait(name).is_ok() {
+            completed += 1;
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let jobs_per_sec = completed as f64 / wall;
+    let rows = vec![
+        vec!["tuning jobs completed".into(), format!("{completed}/{num_jobs}")],
+        vec!["workers killed / joined / drained".into(), "1 / 1 / 1".into()],
+        vec!["queued jobs stolen".into(), pool.steals().to_string()],
+        vec![
+            "death requeues (snapshot / scratch)".into(),
+            format!("{} / {}", pool.snapshot_requeues(), pool.scratch_requeues()),
+        ],
+        vec!["proposals re-executed".into(), pool.replayed_proposals().to_string()],
+        vec!["wall-clock".into(), format!("{wall:.1}s")],
+        vec!["throughput".into(), format!("{jobs_per_sec:.1} jobs/s")],
+    ];
+    print_table(
+        &format!("§6.5 elastic chaos soak ({num_jobs} jobs)"),
+        &["metric", "value"],
+        &rows,
+    );
+
+    let stats = BenchStats::from_samples(api_latencies);
+    report.push(
+        &format!("soak chaos jobs={num_jobs}"),
+        &[
+            ("jobs", num_jobs.to_string()),
+            ("jobs_per_sec", format!("{jobs_per_sec:.2}")),
+            ("joins", pool.joins().to_string()),
+            ("drains", pool.drains().to_string()),
+            ("steals", pool.steals().to_string()),
+            ("snapshot_requeues", pool.snapshot_requeues().to_string()),
+            ("scratch_requeues", pool.scratch_requeues().to_string()),
+            ("replayed_proposals", pool.replayed_proposals().to_string()),
+            ("wall_s", format!("{wall:.3}")),
+        ],
+        &stats,
+    );
+    assert_eq!(completed, num_jobs, "chaos must not lose work");
+    drop(pool);
+    drop(service);
+    for h in worker_handles {
+        let _ = h.join();
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut sizes = Vec::new();
     let mut distributed = 0usize;
+    let mut chaos = false;
     let mut i = 0;
     while i < args.len() {
         if args[i] == "--distributed" {
@@ -214,6 +337,9 @@ fn main() {
                 .and_then(|v| v.parse().ok())
                 .expect("--distributed needs a worker count");
             i += 2;
+        } else if args[i] == "--chaos" {
+            chaos = true;
+            i += 1;
         } else {
             if let Ok(n) = args[i].parse() {
                 sizes.push(n);
@@ -228,6 +354,9 @@ fn main() {
         if distributed > 0 {
             run_spike(n, distributed, &mut report);
         }
+    }
+    if chaos {
+        run_chaos(*sizes.iter().max().unwrap(), &mut report);
     }
     match report.write() {
         Ok(path) => eprintln!("wrote {}", path.display()),

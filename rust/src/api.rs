@@ -207,6 +207,24 @@ impl AmtService {
         self.remote.clone()
     }
 
+    /// Admit one more worker into the attached remote plane mid-run
+    /// (elastic membership, DESIGN.md §13): the transport gets its own
+    /// lane and driver thread, and queued work is rebalanced onto it as
+    /// soon as its `Hello` pins a backend. Returns the new lane index,
+    /// or `None` when no remote plane is attached.
+    pub fn add_remote_worker(&self, transport: Box<dyn Transport>) -> Option<usize> {
+        self.remote.as_ref().map(|r| r.add_worker(transport))
+    }
+
+    /// Gracefully drain a remote worker lane: its queued jobs migrate to
+    /// surviving lanes and its running jobs are checkpointed at the next
+    /// poll boundary and resumed elsewhere — zero re-executed proposals.
+    /// Returns false when no remote plane is attached or the lane is
+    /// already gone.
+    pub fn drain_remote_worker(&self, idx: usize) -> bool {
+        self.remote.as_ref().is_some_and(|r| r.drain_worker(idx))
+    }
+
     /// Open a **durable** service rooted at `dir` with the native
     /// backend: load per-shard snapshots, replay the WAL tail, and resume
     /// every non-terminal tuning job (see
@@ -384,12 +402,21 @@ impl AmtService {
                 .store
                 .list_keys("training_jobs", &format!("{}-train-", request.name))
                 .len() as u64;
+            // the reset deletes and the reseed puts must land in the WAL
+            // as one atomic unit: a commit slipping between them would
+            // persist a state with the job deleted but not re-created,
+            // which a second crash could expose (guard borrowed from a
+            // local clone; dropped before anything that could commit on
+            // this thread)
+            let wal_unit_owner = svc.wal.clone();
+            let reseed_unit = wal_unit_owner.as_ref().map(|w| w.begin_unit());
             svc.reset_job_state(&request.name);
             let name = request.name.clone();
             let result = match persisted_transfer {
                 Some(obs) => svc.create_prepared(request, objective.into(), obs, true),
                 None => svc.create_with_objective(request, objective.into(), true),
             };
+            drop(reseed_unit);
             match result {
                 Ok(_) => svc.recovered.push(name),
                 Err(e) => svc.mark_unrecoverable(

@@ -46,11 +46,29 @@
 //! a mixed-backend fleet stays bit-consistent; the API layer checks
 //! [`RemoteWorkerPool::supports_backend`] and keeps jobs local when no
 //! compatible worker is live.
+//!
+//! **Elastic membership (DESIGN.md §13).** The lane table is dynamic:
+//! workers are admitted mid-run ([`RemoteWorkerPool::add_worker`], or a
+//! leader-side accept loop over a [`SocketListener`] via
+//! [`RemoteWorkerPool::accept_workers`]), drained gracefully
+//! ([`RemoteWorkerPool::drain_worker`] — every assigned job migrates at
+//! the next slice boundary riding its retained resume snapshot, zero
+//! re-executed proposals; with no surviving compatible lane jobs are
+//! *parked*, snapshot kept, and resume at the next join), and
+//! load-balanced by **work stealing**: when lane depths skew past a
+//! threshold (and whenever a new worker's first `Hello` lands during an
+//! ongoing run), queued jobs move from the deepest to the shallowest
+//! compatible lane — the same snapshot-migration machinery as death
+//! repair, minus the death. A `Hello` whose worker name is already
+//! registered on a live lane is answered with [`Message::Deny`] and the
+//! lane is retired. Liveness counters [`RemoteWorkerPool::joins`] /
+//! [`RemoteWorkerPool::drains`] / [`RemoteWorkerPool::steals`] sit
+//! alongside the repair counters.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::config::TuningJobRequest;
@@ -64,7 +82,7 @@ use crate::strategies::Observation;
 use crate::workflow::ExecutionStatus;
 
 use super::proto::{Message, PollReply};
-use super::transport::Transport;
+use super::transport::{SocketListener, Transport};
 
 /// Knobs for the remote pool.
 #[derive(Clone, Debug)]
@@ -135,6 +153,10 @@ struct RemoteSlot {
     /// store/metrics state for the job equals exactly this snapshot's —
     /// a worker death requeues from here with O(remaining work).
     last_ckpt: Mutex<Option<crate::json::Json>>,
+    /// Queue entry of a job parked by a last-lane drain (no compatible
+    /// lane left). The snapshot above is retained with it, so the next
+    /// join resumes the job mid-flight instead of failing it.
+    parked_entry: Mutex<Option<QueueEntry>>,
 }
 
 const NO_LANE: usize = usize::MAX;
@@ -142,6 +164,9 @@ const NO_LANE: usize = usize::MAX;
 struct WorkerLane {
     heap: Mutex<BinaryHeap<Reverse<QueueEntry>>>,
     alive: AtomicBool,
+    /// Graceful-drain requested: routing skips this lane, and its own
+    /// driver migrates every assigned job at the next slice boundary.
+    draining: AtomicBool,
     /// Unfinished jobs assigned here (least-loaded placement heuristic).
     load: AtomicUsize,
 }
@@ -161,8 +186,15 @@ struct LeaderInner {
     lease: Duration,
     poll_timeout: Duration,
     jobs: Mutex<HashMap<String, Arc<RemoteSlot>>>,
-    lanes: Vec<WorkerLane>,
+    /// Dynamic lane table: append-only (indices are stable for the
+    /// pool's lifetime; dead/drained lanes stay as tombstones). Always
+    /// the *first* lock acquired when combined with `backends.known` or
+    /// `names` — snapshot and release before touching either.
+    lanes: RwLock<Vec<Arc<WorkerLane>>>,
     backends: LaneBackends,
+    /// Worker label per lane (from `Hello`): duplicate-name admission
+    /// control for reconnecting workers.
+    names: Mutex<Vec<Option<String>>>,
     live: AtomicUsize,
     running: AtomicUsize,
     shutdown: AtomicBool,
@@ -181,16 +213,28 @@ struct LeaderInner {
     /// service's auto-checkpoint trigger — same hook as the scheduler's,
     /// so the WAL stays bounded no matter which plane commits).
     post_commit: std::sync::OnceLock<Arc<dyn Fn() + Send + Sync>>,
-    /// Serializes placement decisions: activation, death repair and
-    /// quota-release routing, so concurrent worker deaths cannot strand
-    /// or duplicate a job's single heap entry.
+    /// Elastic-fleet liveness counters: workers admitted after
+    /// construction, lanes drained gracefully to completion, and queued
+    /// jobs migrated by the work-stealing rebalancer.
+    joins: AtomicU64,
+    drains: AtomicU64,
+    steals: AtomicU64,
+    /// Jobs parked with no compatible lane (drain-of-last-lane): the
+    /// rebalancer's cheap "is there orphaned work" signal.
+    parked_jobs: AtomicUsize,
+    /// Serializes placement decisions: activation, death repair,
+    /// drain migration, work stealing and quota-release routing, so
+    /// concurrent worker deaths cannot strand or duplicate a job's
+    /// single heap entry.
     route: Mutex<()>,
+    /// Driver + accept-loop join handles (here rather than on the pool
+    /// so the accept loop and `add_worker` can register new drivers).
+    drivers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 /// The leader-side remote execution plane.
 pub struct RemoteWorkerPool {
     inner: Arc<LeaderInner>,
-    drivers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl RemoteWorkerPool {
@@ -204,13 +248,6 @@ impl RemoteWorkerPool {
         wal: Option<Arc<Wal>>,
         config: RemoteConfig,
     ) -> RemoteWorkerPool {
-        let lanes = (0..transports.len())
-            .map(|_| WorkerLane {
-                heap: Mutex::new(BinaryHeap::new()),
-                alive: AtomicBool::new(true),
-                load: AtomicUsize::new(0),
-            })
-            .collect();
         let inner = Arc::new(LeaderInner {
             store,
             metrics,
@@ -220,11 +257,12 @@ impl RemoteWorkerPool {
             poll_timeout: config.poll_timeout.max(config.lease),
             jobs: Mutex::new(HashMap::new()),
             backends: LaneBackends {
-                known: Mutex::new(vec![None; transports.len()]),
+                known: Mutex::new(Vec::new()),
                 hello_cv: Condvar::new(),
             },
-            lanes,
-            live: AtomicUsize::new(transports.len()),
+            lanes: RwLock::new(Vec::new()),
+            names: Mutex::new(Vec::new()),
+            live: AtomicUsize::new(0),
             running: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             seq: AtomicU64::new(0),
@@ -233,26 +271,23 @@ impl RemoteWorkerPool {
             scratch_requeues: AtomicU64::new(0),
             replayed_proposals: AtomicU64::new(0),
             wal_commit_errors: AtomicU64::new(0),
+            joins: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            parked_jobs: AtomicUsize::new(0),
             post_commit: std::sync::OnceLock::new(),
             route: Mutex::new(()),
+            drivers: Mutex::new(Vec::new()),
         });
-        let drivers = transports
-            .into_iter()
-            .enumerate()
-            .map(|(idx, transport)| {
-                let inner = Arc::clone(&inner);
-                std::thread::Builder::new()
-                    .name(format!("amt-lead-{idx}"))
-                    .spawn(move || driver_loop(&inner, idx, transport))
-                    .expect("failed to spawn leader driver")
-            })
-            .collect();
-        RemoteWorkerPool { inner, drivers: Mutex::new(drivers) }
+        for transport in transports {
+            admit_worker(&inner, transport, false);
+        }
+        RemoteWorkerPool { inner }
     }
 
-    /// Connected worker transports this pool was built over.
+    /// Lanes ever part of this pool (including dead/drained tombstones).
     pub fn worker_count(&self) -> usize {
-        self.inner.lanes.len()
+        self.inner.lanes.read().unwrap().len()
     }
 
     /// Workers whose lease is still good.
@@ -313,16 +348,84 @@ impl RemoteWorkerPool {
     /// correctly.
     pub fn supports_backend(&self, backend: &str) -> bool {
         await_hellos(&self.inner);
+        let lanes = lanes_snapshot(&self.inner);
         let known = self.inner.backends.known.lock().unwrap();
-        known.iter().enumerate().any(|(i, b)| {
-            self.inner.lanes[i].alive.load(Ordering::SeqCst)
-                && b.as_deref() == Some(backend)
+        lanes.iter().enumerate().any(|(i, l)| {
+            l.alive.load(Ordering::SeqCst)
+                && !l.draining.load(Ordering::SeqCst)
+                && known.get(i).and_then(|b| b.as_deref()) == Some(backend)
         })
     }
 
     /// Advertised backend of each lane (`None` = no `Hello` yet).
     pub fn lane_backends(&self) -> Vec<Option<String>> {
         self.inner.backends.known.lock().unwrap().clone()
+    }
+
+    /// Admit a new worker transport into the fleet mid-run: a fresh
+    /// lane with its own heap and driver thread. Routing considers the
+    /// lane as soon as its `Hello` lands, and that first `Hello` also
+    /// triggers a rebalance so an ongoing run's queued and parked jobs
+    /// move onto the new capacity immediately. Returns the lane index.
+    pub fn add_worker(&self, transport: Box<dyn Transport>) -> usize {
+        admit_worker(&self.inner, transport, true)
+    }
+
+    /// Gracefully drain worker `idx`: its driver migrates every
+    /// assigned job to surviving compatible lanes at the next slice
+    /// boundary (each rides its retained resume snapshot — zero
+    /// re-executed proposals), sends `Drain` so the worker session ends
+    /// cleanly, and retires the lane. With no surviving compatible lane
+    /// the jobs are *parked* (snapshot kept) and resume at the next
+    /// join — never failed. Returns false for an unknown or already
+    /// dead lane.
+    pub fn drain_worker(&self, idx: usize) -> bool {
+        let lanes = self.inner.lanes.read().unwrap();
+        let Some(lane) = lanes.get(idx) else { return false };
+        if !lane.alive.load(Ordering::SeqCst) {
+            return false;
+        }
+        lane.draining.store(true, Ordering::SeqCst);
+        true
+    }
+
+    /// Dynamic-membership accept loop: admit every connection arriving
+    /// on `listener` as a new worker lane until the pool shuts down.
+    pub fn accept_workers(&self, listener: SocketListener) {
+        let inner = Arc::clone(&self.inner);
+        let handle = std::thread::Builder::new()
+            .name("amt-lead-accept".into())
+            .spawn(move || loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept_timeout(Duration::from_millis(200)) {
+                    Ok(Some(t)) => {
+                        admit_worker(&inner, Box::new(t), true);
+                    }
+                    Ok(None) => {}
+                    Err(_) => return,
+                }
+            })
+            .expect("failed to spawn leader accept loop");
+        self.inner.drivers.lock().unwrap().push(handle);
+    }
+
+    /// Workers admitted after construction (late joins).
+    pub fn joins(&self) -> u64 {
+        self.inner.joins.load(Ordering::Relaxed)
+    }
+
+    /// Lanes drained gracefully to completion.
+    pub fn drains(&self) -> u64 {
+        self.inner.drains.load(Ordering::Relaxed)
+    }
+
+    /// Queued jobs migrated between lanes by the work-stealing
+    /// rebalancer (each rides its snapshot: zero re-executed
+    /// proposals).
+    pub fn steals(&self) -> u64 {
+        self.inner.steals.load(Ordering::Relaxed)
     }
 
     /// Install a hook invoked after every successful WAL group commit
@@ -363,6 +466,7 @@ impl RemoteWorkerPool {
                 started: AtomicBool::new(false),
                 polls: AtomicU64::new(0),
                 last_ckpt: Mutex::new(None),
+                parked_entry: Mutex::new(None),
             }),
         );
         drop(jobs);
@@ -381,7 +485,7 @@ impl RemoteWorkerPool {
         match pick_lane(&self.inner, &slot.spec.backend) {
             Some(idx) => {
                 slot.lane.store(idx, Ordering::SeqCst);
-                self.inner.lanes[idx].load.fetch_add(1, Ordering::Relaxed);
+                lane(&self.inner, idx).load.fetch_add(1, Ordering::Relaxed);
                 push_lane_entry(&self.inner, idx, 0.0, slot.weight, name.to_string());
             }
             None => mark_failed(
@@ -427,53 +531,155 @@ impl Drop for RemoteWorkerPool {
     fn drop(&mut self) {
         // drivers poll the shutdown flag between receive slices
         self.inner.shutdown.store(true, Ordering::SeqCst);
-        let drivers = std::mem::take(&mut *self.drivers.lock().unwrap());
-        for d in drivers {
-            let _ = d.join();
+        // the accept loop may still be admitting (and registering new
+        // driver handles): keep draining until the vec stays empty
+        loop {
+            let drivers = std::mem::take(&mut *self.inner.drivers.lock().unwrap());
+            if drivers.is_empty() {
+                return;
+            }
+            for d in drivers {
+                let _ = d.join();
+            }
         }
+    }
+}
+
+/// Clone the lane handle at `idx`. Lanes are append-only, so indices
+/// handed to drivers stay valid for the pool's lifetime.
+fn lane(inner: &LeaderInner, idx: usize) -> Arc<WorkerLane> {
+    Arc::clone(&inner.lanes.read().unwrap()[idx])
+}
+
+/// Snapshot the lane table, dropping the lanes lock before the caller
+/// acquires any other (lanes is always the outermost of the routing
+/// locks — see the field docs).
+fn lanes_snapshot(inner: &LeaderInner) -> Vec<Arc<WorkerLane>> {
+    inner.lanes.read().unwrap().clone()
+}
+
+/// Append a new lane + driver thread for `transport`. `late` admissions
+/// (post-construction joins) count in the `joins` liveness counter.
+fn admit_worker(inner: &Arc<LeaderInner>, transport: Box<dyn Transport>, late: bool) -> usize {
+    let idx = {
+        let mut lanes = inner.lanes.write().unwrap();
+        lanes.push(Arc::new(WorkerLane {
+            heap: Mutex::new(BinaryHeap::new()),
+            alive: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            load: AtomicUsize::new(0),
+        }));
+        lanes.len() - 1
+    };
+    {
+        let mut known = inner.backends.known.lock().unwrap();
+        if known.len() <= idx {
+            known.resize(idx + 1, None);
+        }
+    }
+    {
+        let mut names = inner.names.lock().unwrap();
+        if names.len() <= idx {
+            names.resize(idx + 1, None);
+        }
+    }
+    inner.live.fetch_add(1, Ordering::SeqCst);
+    if late {
+        inner.joins.fetch_add(1, Ordering::Relaxed);
+    }
+    let handle = {
+        let inner = Arc::clone(inner);
+        std::thread::Builder::new()
+            .name(format!("amt-lead-{idx}"))
+            .spawn(move || driver_loop(&inner, idx, transport))
+            .expect("failed to spawn leader driver")
+    };
+    inner.drivers.lock().unwrap().push(handle);
+    idx
+}
+
+/// Take lane `idx` out of the fleet (idempotent).
+fn retire_lane(inner: &LeaderInner, idx: usize) {
+    if lane(inner, idx).alive.swap(false, Ordering::SeqCst) {
+        inner.live.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
 /// Block (bounded by the lease) until every live lane has identified
-/// its backend via `Hello` — one-time at fleet startup; a no-op after.
+/// its backend via `Hello` — one-time per admission; a no-op after.
 fn await_hellos(inner: &LeaderInner) {
     let deadline = Instant::now() + inner.lease;
-    let mut known = inner.backends.known.lock().unwrap();
     loop {
-        let pending = known.iter().enumerate().any(|(i, b)| {
-            b.is_none() && inner.lanes[i].alive.load(Ordering::SeqCst)
+        let lanes = lanes_snapshot(inner);
+        let known = inner.backends.known.lock().unwrap();
+        let pending = lanes.iter().enumerate().any(|(i, l)| {
+            l.alive.load(Ordering::SeqCst)
+                && known.get(i).map_or(true, Option::is_none)
         });
         if !pending || Instant::now() >= deadline {
             return;
         }
-        known = inner
+        let _unused = inner
             .backends
             .hello_cv
             .wait_timeout(known, Duration::from_millis(20))
-            .unwrap()
-            .0;
+            .unwrap();
     }
 }
 
-/// Record a worker's advertised backend and wake routing waiters.
-fn note_hello(inner: &LeaderInner, idx: usize, backend: &str) {
-    let mut known = inner.backends.known.lock().unwrap();
-    if known[idx].as_deref() != Some(backend) {
-        known[idx] = Some(backend.to_string());
+/// Verdict of a worker's `Hello` under dynamic membership.
+enum HelloVerdict {
+    /// Recorded; `first` marks the lane's first hello (join complete).
+    Accepted { first: bool },
+    /// Another live lane already registered this worker name.
+    Duplicate,
+}
+
+/// Record a worker's label + advertised backend and wake routing
+/// waiters; rejects a name already held by a different live lane.
+fn note_hello(inner: &LeaderInner, idx: usize, worker: &str, backend: &str) -> HelloVerdict {
+    let lanes = lanes_snapshot(inner);
+    {
+        let mut names = inner.names.lock().unwrap();
+        let duplicate = names.iter().enumerate().any(|(i, n)| {
+            i != idx
+                && n.as_deref() == Some(worker)
+                && lanes.get(i).is_some_and(|l| l.alive.load(Ordering::SeqCst))
+        });
+        if duplicate {
+            return HelloVerdict::Duplicate;
+        }
+        if names.len() <= idx {
+            names.resize(idx + 1, None);
+        }
+        names[idx] = Some(worker.to_string());
     }
-    drop(known);
+    let first = {
+        let mut known = inner.backends.known.lock().unwrap();
+        if known.len() <= idx {
+            known.resize(idx + 1, None);
+        }
+        let first = known[idx].is_none();
+        if known[idx].as_deref() != Some(backend) {
+            known[idx] = Some(backend.to_string());
+        }
+        first
+    };
     inner.backends.hello_cv.notify_all();
+    HelloVerdict::Accepted { first }
 }
 
-/// Least-loaded live lane whose worker runs `backend`, if any.
+/// Least-loaded live non-draining lane whose worker runs `backend`.
 fn pick_lane(inner: &LeaderInner, backend: &str) -> Option<usize> {
+    let lanes = lanes_snapshot(inner);
     let known = inner.backends.known.lock().unwrap();
-    inner
-        .lanes
+    lanes
         .iter()
         .enumerate()
         .filter(|(i, l)| {
-            l.alive.load(Ordering::SeqCst) && known[*i].as_deref() == Some(backend)
+            l.alive.load(Ordering::SeqCst)
+                && !l.draining.load(Ordering::SeqCst)
+                && known.get(*i).and_then(|b| b.as_deref()) == Some(backend)
         })
         .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
         .map(|(i, _)| i)
@@ -484,12 +690,13 @@ fn pick_lane(inner: &LeaderInner, backend: &str) -> Option<usize> {
 fn push_lane_entry(inner: &LeaderInner, idx: usize, due: f64, weight: f64, name: String) {
     let seq = inner.seq.fetch_add(1, Ordering::Relaxed);
     let due = due / weight.max(1.0);
-    inner.lanes[idx].heap.lock().unwrap().push(Reverse(QueueEntry { due, seq, name }));
+    lane(inner, idx).heap.lock().unwrap().push(Reverse(QueueEntry { due, seq, name }));
 }
 
-/// Re-push an already-discounted entry (quota release, death repair).
+/// Re-push an already-discounted entry (quota release, death repair,
+/// drain migration, steal).
 fn repush_entry(inner: &LeaderInner, idx: usize, entry: QueueEntry) {
-    inner.lanes[idx].heap.lock().unwrap().push(Reverse(entry));
+    lane(inner, idx).heap.lock().unwrap().push(Reverse(entry));
 }
 
 /// Apply one delta through the leader's ordinary mutation paths:
@@ -549,9 +756,9 @@ fn publish(inner: &LeaderInner, slot: &RemoteSlot, outcome: TuningJobOutcome) {
     if state.outcome.is_some() {
         return;
     }
-    let lane = slot.lane.swap(NO_LANE, Ordering::SeqCst);
-    if lane != NO_LANE {
-        inner.lanes[lane].load.fetch_sub(1, Ordering::Relaxed);
+    let lane_idx = slot.lane.swap(NO_LANE, Ordering::SeqCst);
+    if lane_idx != NO_LANE {
+        lane(inner, lane_idx).load.fetch_sub(1, Ordering::Relaxed);
     }
     inner.running.fetch_sub(1, Ordering::Relaxed);
     state.outcome = Some(outcome);
@@ -585,13 +792,20 @@ fn mark_failed(inner: &LeaderInner, slot: &RemoteSlot, name: &str, reason: &str)
 /// layer's recovery and `create_prepared` use, so the record shapes
 /// cannot drift apart.
 fn reset_and_reseed(inner: &LeaderInner, slot: &RemoteSlot, name: &str) {
-    crate::api::reset_job_records(&inner.store, &inner.metrics, name);
-    let transfer_json = if slot.spec.transfer.is_empty() {
-        None
-    } else {
-        Some(crate::strategies::observations_to_json(&slot.spec.transfer))
-    };
-    crate::api::persist_job_seeds(&inner.store, &slot.spec.request, transfer_json);
+    {
+        // reset deletes + reseed puts land as one atomic WAL unit: a
+        // concurrent commit (another lane's slice) cannot persist the
+        // deletes without the re-creates (the torn-reset bug)
+        let _unit = inner.wal.as_ref().map(|w| w.begin_unit());
+        crate::api::reset_job_records(&inner.store, &inner.metrics, name);
+        let transfer_json = if slot.spec.transfer.is_empty() {
+            None
+        } else {
+            Some(crate::strategies::observations_to_json(&slot.spec.transfer))
+        };
+        crate::api::persist_job_seeds(&inner.store, &slot.spec.request, transfer_json);
+        // unit guard drops here, before this thread's own commit
+    }
     commit_wal(inner);
 }
 
@@ -614,13 +828,13 @@ fn reset_and_reseed(inner: &LeaderInner, slot: &RemoteSlot, name: &str) {
 /// a concurrent death of another worker sees a consistent picture.
 fn on_worker_death(inner: &LeaderInner, idx: usize, held: Option<QueueEntry>) {
     let _route = inner.route.lock().unwrap();
-    let lane = &inner.lanes[idx];
-    if !lane.alive.swap(false, Ordering::SeqCst) {
+    let lane_ref = lane(inner, idx);
+    if !lane_ref.alive.swap(false, Ordering::SeqCst) {
         return;
     }
     inner.live.fetch_sub(1, Ordering::SeqCst);
     let mut entries: Vec<QueueEntry> = {
-        let mut heap = lane.heap.lock().unwrap();
+        let mut heap = lane_ref.heap.lock().unwrap();
         std::mem::take(&mut *heap).into_iter().map(|Reverse(e)| e).collect()
     };
     entries.extend(held);
@@ -664,8 +878,8 @@ fn on_worker_death(inner: &LeaderInner, idx: usize, held: Option<QueueEntry>) {
         slot.stop_sent.store(false, Ordering::SeqCst);
         match pick_lane(inner, &slot.spec.backend) {
             Some(new_idx) => {
-                lane.load.fetch_sub(1, Ordering::Relaxed);
-                inner.lanes[new_idx].load.fetch_add(1, Ordering::Relaxed);
+                lane_ref.load.fetch_sub(1, Ordering::Relaxed);
+                lane(inner, new_idx).load.fetch_add(1, Ordering::Relaxed);
                 slot.lane.store(new_idx, Ordering::SeqCst);
                 if !entry_names.contains(&name) {
                     // parked in a quota queue: the release path will
@@ -686,20 +900,236 @@ fn on_worker_death(inner: &LeaderInner, idx: usize, held: Option<QueueEntry>) {
 
 /// Finish a quota-accounted slice and route any released parked entry
 /// to its job's *current* lane (which may have changed under a death
-/// repair since it was parked).
+/// repair, drain or steal since it was parked). A released job left
+/// laneless by a last-lane drain is parked on its slot instead, so the
+/// next join can resume it.
 fn release_quota(inner: &LeaderInner, slot: &RemoteSlot) {
     let Some((tenant, _)) = &slot.quota else { return };
     let Some(d) = inner.quotas.release(tenant) else { return };
     let _route = inner.route.lock().unwrap();
-    let target = {
+    let released = {
         let jobs = inner.jobs.lock().unwrap();
-        jobs.get(&d.name).map(|s| s.lane.load(Ordering::SeqCst))
+        jobs.get(&d.name).map(Arc::clone)
     };
-    match target {
-        Some(idx) if idx != NO_LANE && inner.lanes[idx].alive.load(Ordering::SeqCst) => {
-            repush_entry(inner, idx, QueueEntry { due: d.due, seq: d.seq, name: d.name });
+    let Some(released) = released else { return };
+    let idx = released.lane.load(Ordering::SeqCst);
+    let entry = QueueEntry { due: d.due, seq: d.seq, name: d.name };
+    if idx != NO_LANE && lane(inner, idx).alive.load(Ordering::SeqCst) {
+        repush_entry(inner, idx, entry);
+    } else if idx == NO_LANE && released.state.lock().unwrap().outcome.is_none() {
+        // drained off its lane while quota-parked: keep it parked
+        *released.parked_entry.lock().unwrap() = Some(entry);
+        inner.parked_jobs.fetch_add(1, Ordering::SeqCst);
+    }
+    // otherwise the job finished or failed meanwhile: entry is obsolete
+}
+
+/// Load skew that triggers a steal: deepest minus shallowest eligible
+/// lane must differ by at least a whole job beyond rounding.
+const STEAL_THRESHOLD: usize = 2;
+
+/// Cheap pre-check for the idle-driver rebalance trigger: parked work
+/// exists, or eligible lane depths skew past [`STEAL_THRESHOLD`].
+fn needs_rebalance(inner: &LeaderInner) -> bool {
+    if inner.parked_jobs.load(Ordering::SeqCst) > 0 {
+        return true;
+    }
+    let lanes = lanes_snapshot(inner);
+    let known = inner.backends.known.lock().unwrap();
+    let mut min = usize::MAX;
+    let mut max = 0usize;
+    for (i, l) in lanes.iter().enumerate() {
+        if !l.alive.load(Ordering::SeqCst)
+            || l.draining.load(Ordering::SeqCst)
+            || known.get(i).map_or(true, Option::is_none)
+        {
+            continue;
         }
-        _ => {} // job finished or failed meanwhile: entry is obsolete
+        let load = l.load.load(Ordering::Relaxed);
+        min = min.min(load);
+        max = max.max(load);
+    }
+    min != usize::MAX && max >= min + STEAL_THRESHOLD
+}
+
+/// Place parked jobs, then steal queued jobs from the deepest lane to
+/// the shallowest until depths are within [`STEAL_THRESHOLD`]. Runs
+/// when a new worker's first `Hello` lands and from idle drivers when
+/// [`needs_rebalance`] fires.
+fn rebalance(inner: &LeaderInner) {
+    let _route = inner.route.lock().unwrap();
+    place_orphans_locked(inner);
+    // bounded: each iteration migrates exactly one job
+    for _ in 0..64 {
+        if !steal_one_locked(inner) {
+            return;
+        }
+    }
+}
+
+/// Re-place jobs parked by a last-lane drain (route lock held).
+fn place_orphans_locked(inner: &LeaderInner) {
+    if inner.parked_jobs.load(Ordering::SeqCst) == 0 {
+        return;
+    }
+    let slots: Vec<Arc<RemoteSlot>> = {
+        let jobs = inner.jobs.lock().unwrap();
+        jobs.values().map(Arc::clone).collect()
+    };
+    for slot in slots {
+        let Some(entry) = slot.parked_entry.lock().unwrap().take() else { continue };
+        if slot.state.lock().unwrap().outcome.is_some() {
+            inner.parked_jobs.fetch_sub(1, Ordering::SeqCst);
+            continue;
+        }
+        match pick_lane(inner, &slot.spec.backend) {
+            Some(idx) => {
+                lane(inner, idx).load.fetch_add(1, Ordering::Relaxed);
+                slot.lane.store(idx, Ordering::SeqCst);
+                repush_entry(inner, idx, entry);
+                inner.parked_jobs.fetch_sub(1, Ordering::SeqCst);
+            }
+            None => {
+                // still no compatible lane: stay parked
+                *slot.parked_entry.lock().unwrap() = Some(entry);
+            }
+        }
+    }
+}
+
+/// Migrate one queued job from the deepest to the shallowest compatible
+/// lane (route lock held). Only *queued* entries move — a job whose
+/// slice is in flight has no heap entry and is never touched, so the
+/// migrated job's next slice re-`Assign`s with its retained snapshot
+/// and the steal re-executes nothing. Returns false when no eligible
+/// migration exists.
+fn steal_one_locked(inner: &LeaderInner) -> bool {
+    let lanes = lanes_snapshot(inner);
+    let known = inner.backends.known.lock().unwrap().clone();
+    let eligible: Vec<usize> = (0..lanes.len())
+        .filter(|&i| {
+            lanes[i].alive.load(Ordering::SeqCst)
+                && !lanes[i].draining.load(Ordering::SeqCst)
+                && known.get(i).is_some_and(Option::is_some)
+        })
+        .collect();
+    if eligible.len() < 2 {
+        return false;
+    }
+    let donor = *eligible
+        .iter()
+        .max_by_key(|&&i| lanes[i].load.load(Ordering::Relaxed))
+        .expect("eligible is nonempty");
+    let donor_load = lanes[donor].load.load(Ordering::Relaxed);
+    let entries: Vec<QueueEntry> = {
+        let mut heap = lanes[donor].heap.lock().unwrap();
+        std::mem::take(&mut *heap).into_iter().map(|Reverse(e)| e).collect()
+    };
+    let mut stolen: Option<(QueueEntry, Arc<RemoteSlot>, usize)> = None;
+    let mut keep = Vec::new();
+    for entry in entries {
+        if stolen.is_some() {
+            keep.push(entry);
+            continue;
+        }
+        let slot = { inner.jobs.lock().unwrap().get(&entry.name).cloned() };
+        let Some(slot) = slot else { continue }; // unknown: obsolete entry
+        if slot.state.lock().unwrap().outcome.is_some() {
+            continue; // terminal: obsolete entry
+        }
+        let cur = slot.lane.load(Ordering::SeqCst);
+        if cur != donor {
+            // moved under a concurrent repair: hand to the owner lane
+            if cur != NO_LANE {
+                repush_entry(inner, cur, entry);
+            }
+            continue;
+        }
+        let target = eligible
+            .iter()
+            .copied()
+            .filter(|&i| {
+                i != donor && known[i].as_deref() == Some(slot.spec.backend.as_str())
+            })
+            .min_by_key(|&i| lanes[i].load.load(Ordering::Relaxed));
+        match target {
+            Some(t)
+                if donor_load
+                    >= lanes[t].load.load(Ordering::Relaxed) + STEAL_THRESHOLD =>
+            {
+                stolen = Some((entry, slot, t));
+            }
+            _ => keep.push(entry),
+        }
+    }
+    {
+        let mut heap = lanes[donor].heap.lock().unwrap();
+        for e in keep {
+            heap.push(Reverse(e));
+        }
+    }
+    let Some((entry, slot, t)) = stolen else { return false };
+    lanes[donor].load.fetch_sub(1, Ordering::Relaxed);
+    lanes[t].load.fetch_add(1, Ordering::Relaxed);
+    slot.lane.store(t, Ordering::SeqCst);
+    slot.started.store(false, Ordering::SeqCst);
+    slot.stop_sent.store(false, Ordering::SeqCst);
+    repush_entry(inner, t, entry);
+    inner.steals.fetch_add(1, Ordering::Relaxed);
+    true
+}
+
+/// Migrate every job off a draining lane. Runs on the lane's own driver
+/// *between* slices, so none of this lane's jobs is mid-slice: the
+/// leader's store state equals each job's last acked checkpoint, and
+/// the re-`Assign` on the target lane ships that snapshot — zero
+/// re-executed proposals (a never-polled job resumes fresh from its
+/// persisted seeds, also zero). With no surviving compatible lane, the
+/// job is parked (snapshot retained) for a future join — not failed.
+fn drain_lane(inner: &LeaderInner, idx: usize) {
+    let _route = inner.route.lock().unwrap();
+    let lane_ref = lane(inner, idx);
+    let mut entries: Vec<QueueEntry> = {
+        let mut heap = lane_ref.heap.lock().unwrap();
+        std::mem::take(&mut *heap).into_iter().map(|Reverse(e)| e).collect()
+    };
+    let slots: Vec<(String, Arc<RemoteSlot>)> = {
+        let jobs = inner.jobs.lock().unwrap();
+        jobs.iter().map(|(n, s)| (n.clone(), Arc::clone(s))).collect()
+    };
+    for (name, slot) in slots {
+        if slot.lane.load(Ordering::SeqCst) != idx {
+            continue;
+        }
+        if slot.state.lock().unwrap().outcome.is_some() {
+            continue;
+        }
+        slot.started.store(false, Ordering::SeqCst);
+        slot.stop_sent.store(false, Ordering::SeqCst);
+        let entry = entries
+            .iter()
+            .position(|e| e.name == name)
+            .map(|i| entries.swap_remove(i));
+        lane_ref.load.fetch_sub(1, Ordering::Relaxed);
+        match pick_lane(inner, &slot.spec.backend) {
+            Some(new_idx) => {
+                lane(inner, new_idx).load.fetch_add(1, Ordering::Relaxed);
+                slot.lane.store(new_idx, Ordering::SeqCst);
+                if let Some(entry) = entry {
+                    repush_entry(inner, new_idx, entry);
+                }
+                // entry None: parked in a tenant quota queue — the
+                // release path routes it to the new lane
+            }
+            None => {
+                slot.lane.store(NO_LANE, Ordering::SeqCst);
+                if let Some(entry) = entry {
+                    *slot.parked_entry.lock().unwrap() = Some(entry);
+                    inner.parked_jobs.fetch_add(1, Ordering::SeqCst);
+                }
+                // entry None: quota-parked — the release path parks it
+            }
+        }
     }
 }
 
@@ -715,20 +1145,54 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
             let _ = transport.recv(Duration::from_millis(200));
             return;
         }
-        let popped = { inner.lanes[idx].heap.lock().unwrap().pop() };
+        let lane_ref = lane(inner, idx);
+        if lane_ref.draining.load(Ordering::SeqCst) {
+            // graceful drain: this driver is between slices, so every
+            // job of this lane sits exactly at its last acked
+            // checkpoint — migrate them all, close the session cleanly
+            drain_lane(inner, idx);
+            let _ = transport.send(&Message::Drain);
+            let _ = transport.recv(Duration::from_millis(500));
+            retire_lane(inner, idx);
+            inner.drains.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let popped = { lane_ref.heap.lock().unwrap().pop() };
         let Some(Reverse(entry)) = popped else {
             // idle: pump the link (heartbeats renew the lease)
             match transport.recv(slice) {
                 Ok(Some(msg)) => {
                     last_seen = Instant::now();
-                    if let Message::Hello { backend, .. } = &msg {
-                        note_hello(inner, idx, backend);
+                    if let Message::Hello { worker, backend } = &msg {
+                        match note_hello(inner, idx, worker, backend) {
+                            HelloVerdict::Duplicate => {
+                                let _ = transport.send(&Message::Deny {
+                                    reason: format!(
+                                        "worker name '{worker}' is already \
+                                         registered on a live lane"
+                                    ),
+                                });
+                                retire_lane(inner, idx);
+                                return;
+                            }
+                            HelloVerdict::Accepted { first } => {
+                                if first {
+                                    // a join during an ongoing run:
+                                    // steal queued + parked work onto
+                                    // the new capacity right away
+                                    rebalance(inner);
+                                }
+                            }
+                        }
                     }
                 }
                 Ok(None) => {
                     if last_seen.elapsed() > inner.lease {
                         on_worker_death(inner, idx, None);
                         return;
+                    }
+                    if needs_rebalance(inner) {
+                        rebalance(inner);
                     }
                 }
                 Err(_) => {
@@ -830,8 +1294,10 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 }
                 Ok(Some(msg)) => {
                     last_seen = Instant::now();
-                    if let Message::Hello { backend, .. } = &msg {
-                        note_hello(inner, idx, backend);
+                    if let Message::Hello { worker, backend } = &msg {
+                        // a lane only reaches mid-slice after its first
+                        // accepted Hello, so this cannot be a duplicate
+                        let _ = note_hello(inner, idx, worker, backend);
                     }
                 }
                 Ok(None) => {

@@ -24,7 +24,13 @@
 //!   worker death — requeue from the job's last delta-acked
 //!   [`crate::coordinator::ResumeSnapshot`] (O(remaining work),
 //!   DESIGN.md §12), falling back to requeue-from-reset when no
-//!   checkpoint has been acked.
+//!   checkpoint has been acked. The fleet is **elastic** (DESIGN.md
+//!   §13): workers join mid-run (`add_worker` / an `accept_workers`
+//!   listener admitting late `Hello`s; duplicate names get a hard
+//!   `Deny`), drain gracefully (`drain_worker`: every job migrates on
+//!   its retained snapshot — zero re-executed proposals — or parks when
+//!   no compatible lane survives), and queued work is stolen from
+//!   skewed lanes onto idle ones (`joins`/`drains`/`steals` counters).
 //!
 //! Single-process behavior is untouched: with the loopback transport a
 //! job's trajectory, final store contents and item versions are

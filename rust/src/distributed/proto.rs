@@ -7,7 +7,9 @@
 //! * leader → worker: [`Message::Assign`] (host this job),
 //!   [`Message::PollRequest`] (run one bounded slice),
 //!   [`Message::Stop`] (flip the job's stop flag), [`Message::Drain`]
-//!   (finish up and end the session);
+//!   (finish up and end the session), [`Message::Deny`] (admission
+//!   rejected — e.g. a duplicate worker name; the worker must exit,
+//!   not retry);
 //! * worker → leader: [`Message::Hello`] (identify on connect),
 //!   [`Message::StoreDelta`] (the slice's store/metrics mutations as WAL
 //!   records, in application order), [`Message::PollResult`] (the
@@ -118,6 +120,13 @@ pub enum Message {
     Drain,
     /// Worker acknowledges a drain; the session ends.
     DrainAck,
+    /// Leader rejects the worker's admission (duplicate worker name,
+    /// …). A hard verdict: the worker must exit its session without
+    /// retrying, unlike a dead link which the backoff loop may retry.
+    Deny {
+        /// Human-readable cause.
+        reason: String,
+    },
 }
 
 fn exec_status_to_json(s: &ExecutionStatus) -> Json {
@@ -250,6 +259,10 @@ impl Message {
             Message::Heartbeat => Json::obj(vec![("type", Json::Str("heartbeat".into()))]),
             Message::Drain => Json::obj(vec![("type", Json::Str("drain".into()))]),
             Message::DrainAck => Json::obj(vec![("type", Json::Str("drain_ack".into()))]),
+            Message::Deny { reason } => Json::obj(vec![
+                ("type", Json::Str("deny".into())),
+                ("reason", Json::Str(reason.clone())),
+            ]),
         }
     }
 
@@ -312,6 +325,9 @@ impl Message {
             "heartbeat" => Message::Heartbeat,
             "drain" => Message::Drain,
             "drain_ack" => Message::DrainAck,
+            "deny" => Message::Deny {
+                reason: j.get("reason").and_then(Json::as_str).unwrap_or("").to_string(),
+            },
             _ => return None,
         })
     }
@@ -353,6 +369,10 @@ mod tests {
         assert!(matches!(roundtrip(&Message::Heartbeat), Message::Heartbeat));
         assert!(matches!(roundtrip(&Message::Drain), Message::Drain));
         assert!(matches!(roundtrip(&Message::DrainAck), Message::DrainAck));
+        assert!(matches!(
+            roundtrip(&Message::Deny { reason: "duplicate worker name".into() }),
+            Message::Deny { reason } if reason == "duplicate worker name"
+        ));
         assert!(matches!(
             roundtrip(&Message::Hello { worker: "w0".into(), backend: "native".into() }),
             Message::Hello { worker, backend } if worker == "w0" && backend == "native"

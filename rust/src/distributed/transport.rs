@@ -46,6 +46,27 @@ fn dead_link(what: &str) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::BrokenPipe, what.to_string())
 }
 
+/// True for "nobody is listening there (yet)" errors — the retryable
+/// class a reconnecting worker's backoff loop keeps waiting on
+/// (`ConnectionRefused`; a missing Unix socket file is mapped to it by
+/// [`SocketTransport::connect`]).
+pub fn is_not_listening(e: &std::io::Error) -> bool {
+    e.kind() == std::io::ErrorKind::ConnectionRefused
+}
+
+/// True for "the link existed and then died" errors — the class after
+/// which a reconnecting worker restarts its session (as opposed to a
+/// hard verdict like `PermissionDenied`, which must end the retry loop).
+pub fn is_dead_link(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::UnexpectedEof
+    )
+}
+
 /// Kill switch shared by both ends of a loopback link (fault injection
 /// for worker-death tests): after [`LoopbackFault::kill`], every send
 /// and recv on either end fails immediately — queued messages are
@@ -194,7 +215,20 @@ impl SocketTransport {
         let stream = if is_unix_addr(addr) {
             #[cfg(unix)]
             {
-                Stream::Unix(UnixStream::connect(unix_path(addr))?)
+                // a socket file that does not exist yet is the Unix
+                // analogue of TCP's ConnectionRefused: classify it as
+                // "not listening" so backoff loops retry it
+                let s = UnixStream::connect(unix_path(addr)).map_err(|e| {
+                    if e.kind() == std::io::ErrorKind::NotFound {
+                        std::io::Error::new(
+                            std::io::ErrorKind::ConnectionRefused,
+                            format!("no listener at {addr}"),
+                        )
+                    } else {
+                        e
+                    }
+                })?;
+                Stream::Unix(s)
             }
             #[cfg(not(unix))]
             {
@@ -286,9 +320,52 @@ impl SocketListener {
 
     /// Block for the next leader connection.
     pub fn accept(&self) -> std::io::Result<SocketTransport> {
+        self.set_nonblocking(false)?;
+        self.try_accept()
+    }
+
+    /// Wait up to `timeout` for the next connection. `Ok(None)` =
+    /// nothing arrived in time — the shape a shutdown-aware accept loop
+    /// needs (the blocking [`SocketListener::accept`] cannot observe a
+    /// shutdown flag).
+    pub fn accept_timeout(&self, timeout: Duration) -> std::io::Result<Option<SocketTransport>> {
+        self.set_nonblocking(true)?;
+        let deadline = Instant::now() + timeout;
+        let result = loop {
+            match self.try_accept() {
+                Ok(t) => break Ok(Some(t)),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if Instant::now() >= deadline {
+                        break Ok(None);
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => break Err(e),
+            }
+        };
+        let _ = self.set_nonblocking(false);
+        result
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            SocketListener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            SocketListener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// One accept attempt under the listener's current blocking mode;
+    /// an accepted stream is always switched back to blocking.
+    fn try_accept(&self) -> std::io::Result<SocketTransport> {
         match self {
             SocketListener::Tcp(l) => {
                 let (s, peer) = l.accept()?;
+                s.set_nonblocking(false)?;
                 s.set_nodelay(true)?;
                 Ok(SocketTransport {
                     stream: Stream::Tcp(s),
@@ -299,6 +376,7 @@ impl SocketListener {
             #[cfg(unix)]
             SocketListener::Unix(l) => {
                 let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
                 Ok(SocketTransport {
                     stream: Stream::Unix(s),
                     peer: "unix-peer".to_string(),
@@ -360,7 +438,55 @@ mod tests {
     fn dropped_peer_is_a_dead_link() {
         let (mut leader, worker, _fault) = loopback_pair("drop");
         drop(worker);
-        assert!(leader.send(&Message::Heartbeat).is_err());
+        let e = leader.send(&Message::Heartbeat).unwrap_err();
+        assert!(is_dead_link(&e), "dropped peer must classify as dead link, got {e:?}");
+        assert!(!is_not_listening(&e));
+    }
+
+    /// Reconnect hygiene: "leader not up yet" (retryable) must be
+    /// distinguishable from "link died mid-session" (session restart).
+    #[test]
+    fn refused_connect_classifies_as_not_listening() {
+        // bind an ephemeral port, then close it: nothing listens there
+        let addr = {
+            let l = SocketListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr()
+        };
+        let e = SocketTransport::connect(&addr).unwrap_err();
+        assert!(is_not_listening(&e), "refused connect must be not_listening, got {e:?}");
+        assert!(!is_dead_link(&e));
+        #[cfg(unix)]
+        {
+            // a Unix socket path that does not exist is the same class
+            let e = SocketTransport::connect("unix:/tmp/amt-no-such-socket.sock")
+                .unwrap_err();
+            assert!(is_not_listening(&e), "missing socket file, got {e:?}");
+        }
+    }
+
+    #[test]
+    fn accept_timeout_reports_none_then_accepts() {
+        let listener = SocketListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr();
+        // nobody connecting: times out with None, not an error
+        assert!(listener.accept_timeout(Duration::from_millis(30)).unwrap().is_none());
+        let client = std::thread::spawn(move || {
+            let mut c = SocketTransport::connect(&addr).unwrap();
+            c.send(&Message::Heartbeat).unwrap();
+            // hold the connection open until the server is done reading
+            let _ = c.recv(Duration::from_secs(5));
+        });
+        let mut t = loop {
+            if let Some(t) = listener.accept_timeout(Duration::from_secs(5)).unwrap() {
+                break t;
+            }
+        };
+        assert!(matches!(
+            t.recv(Duration::from_secs(5)).unwrap(),
+            Some(Message::Heartbeat)
+        ));
+        t.send(&Message::Drain).unwrap();
+        client.join().unwrap();
     }
 
     #[test]

@@ -291,6 +291,15 @@ impl WorkerRuntime {
                     let _ = self.transport.send(&Message::DrainAck);
                     return Ok(());
                 }
+                Some(Message::Deny { reason }) => {
+                    // a hard admission verdict (e.g. duplicate worker
+                    // name), not a link failure: reconnect loops must
+                    // exit on it instead of retrying
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::PermissionDenied,
+                        format!("leader denied worker: {reason}"),
+                    ));
+                }
                 // leader-bound messages can't arrive here; ignore
                 Some(_) => {}
             }

@@ -25,7 +25,7 @@
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Mutex, OnceLock, RwLock, RwLockReadGuard};
 
 use crate::json::{self, Json};
 use crate::store::Version;
@@ -186,7 +186,22 @@ struct WalInner {
 /// lives, and the on-disk log never contains a frame gap). The inner
 /// mutex is always the innermost lock in the system: store/metrics
 /// shard guards may be held while appending, never the other way
-/// around.
+/// around. The `unit` RwLock sits *outside* the inner mutex
+/// ([`Wal::begin_unit`] guards are acquired before any append they
+/// cover and must be dropped before the holder itself commits).
+///
+/// **Atomic units.** Some multi-record sequences must reach disk
+/// all-or-nothing *relative to concurrent committers* — e.g. a job
+/// reset's deletes followed by its reseed puts: a commit (from another
+/// thread's poll slice) landing between them would persist the deletes
+/// without the re-creates, and a crash right after leaves the job
+/// deleted but not re-created. [`Wal::begin_unit`] returns a guard
+/// (shared side of an RwLock) that [`Wal::commit`] excludes (write
+/// side): appends made while holding the guard cannot be split across
+/// two commits. Units exclude *commits*, not each other — concurrent
+/// units interleave their appends freely, which is fine because
+/// atomicity is only needed per job and one job's reset runs on one
+/// thread.
 ///
 /// Frames enter the file in buffer-push order, which for any single key
 /// or stream equals mutation order (appends happen inside the shard
@@ -197,7 +212,18 @@ pub struct Wal {
     path: PathBuf,
     fsync: std::sync::atomic::AtomicBool,
     next_lsn: std::sync::atomic::AtomicU64,
+    /// Atomic-unit gate: readers are open units (multi-record append
+    /// sequences), the writer is `commit`. See the struct docs.
+    unit: RwLock<()>,
     inner: Mutex<WalInner>,
+}
+
+/// An open atomic append unit (see [`Wal::begin_unit`]): while this
+/// guard lives, no commit can run, so every record appended under it
+/// reaches disk in one group commit. Drop it *before* committing on the
+/// same thread, or the commit deadlocks on its own unit.
+pub struct AtomicUnit<'a> {
+    _guard: RwLockReadGuard<'a, ()>,
 }
 
 /// Result of scanning a WAL file: the valid record prefix, the byte
@@ -231,6 +257,7 @@ impl Wal {
             path,
             fsync: std::sync::atomic::AtomicBool::new(true),
             next_lsn: std::sync::atomic::AtomicU64::new(next_lsn.max(1)),
+            unit: RwLock::new(()),
             inner: Mutex::new(WalInner {
                 file,
                 buf: Vec::new(),
@@ -271,6 +298,16 @@ impl Wal {
         lsn
     }
 
+    /// Open an atomic append unit: until the returned guard drops,
+    /// [`Wal::commit`] blocks, so a multi-record sequence (e.g. a job
+    /// reset's deletes + its reseed puts) cannot be torn across two
+    /// group commits by a concurrent committer — and therefore cannot
+    /// be torn across a crash between them. The holder must drop the
+    /// guard before committing on its own thread.
+    pub fn begin_unit(&self) -> AtomicUnit<'_> {
+        AtomicUnit { _guard: self.unit.read().unwrap() }
+    }
+
     /// Last LSN handed out (0 if none yet).
     pub fn last_lsn(&self) -> u64 {
         self.next_lsn.load(std::sync::atomic::Ordering::Relaxed) - 1
@@ -301,6 +338,8 @@ impl Wal {
     /// attempt first rewinds to the last durable length — a partial
     /// `write` can never strand later frames behind a torn fragment.
     pub fn commit(&self) -> std::io::Result<()> {
+        // wait out open atomic units so their appends land whole
+        let _excl = self.unit.write().unwrap();
         let mut inner = self.inner.lock().unwrap();
         let WalInner { file, buf, synced_len, dirty } = &mut *inner;
         if *dirty {
@@ -466,6 +505,8 @@ impl Wal {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
 
     fn tmp(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!(
@@ -661,6 +702,48 @@ mod tests {
         let (before, after) = wal.compact(0, 0).unwrap();
         assert_eq!(before, after);
         assert_eq!(std::fs::read(wal.path()).unwrap(), original);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression for the torn scratch-reset bug: a reset's Delete and
+    /// its reseed Put are separate appends, and a concurrent commit
+    /// landing between them used to persist the delete without the
+    /// re-create (a crash right after leaves the job deleted, gone from
+    /// recovery's inventory). Under an atomic unit the committer blocks
+    /// until both records are buffered, so any commit that persists the
+    /// Delete persists the Put with it.
+    #[test]
+    fn atomic_unit_excludes_commit_between_appends() {
+        let dir = tmp("unit");
+        let wal = Arc::new(Wal::create(&dir).unwrap());
+        let unit = wal.begin_unit();
+        wal.append(&WalRecord::Delete { table: "tuning_jobs".into(), key: "j".into() });
+        // a committer arriving mid-unit must not split the sequence
+        let committer = {
+            let wal = Arc::clone(&wal);
+            std::thread::spawn(move || wal.commit().unwrap())
+        };
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(
+            wal.synced_len(),
+            0,
+            "commit must not land while the reset unit is open"
+        );
+        wal.append(&WalRecord::Put {
+            table: "tuning_jobs".into(),
+            key: "j".into(),
+            version: 1,
+            value: Json::obj(vec![("status", Json::Str("InProgress".into()))]),
+        });
+        drop(unit);
+        committer.join().unwrap();
+        // whichever commit won, the disk now has both records or —
+        // had the process crashed before any commit — neither
+        wal.commit().unwrap();
+        let scan = Wal::scan(&wal.path().to_path_buf()).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert!(matches!(scan.records[0].1, WalRecord::Delete { .. }));
+        assert!(matches!(scan.records[1].1, WalRecord::Put { .. }));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -9,11 +9,17 @@
 //!   amt snapshot <path>            run a small job and dump the store
 //!   amt worker --listen <addr>     host tuning jobs for a remote leader
 //!                                  (addr: host:port or unix:/path)
+//!   amt worker --connect <addr>    dial an `amt serve --listen` leader
+//!                                  instead; reconnects with capped
+//!                                  exponential backoff + jitter when the
+//!                                  leader is down or the link dies
+//!                                  (DESIGN.md §13)
 //!   amt serve --workers a,b,...    run a tuning spike with evaluations
-//!            [--jobs 16] [--objective branin] [--strategy random]
-//!            [--max-jobs 5] [--parallel 2] [--seed 0]
-//!                                  fanned out over remote workers
-//!                                  (DESIGN.md §11)
+//!            [--listen <addr>] [--jobs 16] [--objective branin]
+//!            [--strategy random] [--max-jobs 5] [--parallel 2] [--seed 0]
+//!                                  fanned out over remote workers; with
+//!                                  --listen, workers may also join the
+//!                                  fleet mid-run (DESIGN.md §11, §13)
 //!
 //! (The vendored offline crate set has no clap; argument parsing is a small
 //! hand-rolled layer over std::env.)
@@ -167,6 +173,9 @@ fn cmd_artifacts_check(dir: &str) -> anyhow::Result<()> {
 fn cmd_worker(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     use amt::distributed::transport::{SocketListener, Transport};
     use amt::distributed::worker::WorkerRuntime;
+    if let Some(addr) = flags.get("connect") {
+        return cmd_worker_connect(addr);
+    }
     let addr = flag(flags, "listen", "127.0.0.1:7070");
     let listener = SocketListener::bind(addr)?;
     eprintln!("amt worker listening on {}", listener.local_addr());
@@ -187,14 +196,76 @@ fn cmd_worker(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
 }
 
+/// `amt worker --connect`: dial the leader instead of listening for it
+/// (the symmetric membership direction, DESIGN.md §13). Reconnects with
+/// capped exponential backoff + jitter while the leader is not up yet
+/// (`ConnectionRefused`) and after a dead link; exits cleanly on a
+/// graceful drain, and hard-exits on a leader `Deny` (surfaced as
+/// `PermissionDenied`, e.g. a duplicate worker name) — retrying a hard
+/// verdict would loop forever.
+fn cmd_worker_connect(addr: &str) -> anyhow::Result<()> {
+    use amt::distributed::transport::{is_not_listening, SocketTransport, Transport};
+    use amt::distributed::worker::WorkerRuntime;
+    const BASE: std::time::Duration = std::time::Duration::from_millis(200);
+    const CAP: std::time::Duration = std::time::Duration::from_secs(10);
+    // jitter keeps a restarted fleet from hammering the leader in lockstep
+    let seed = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64)
+        .unwrap_or(0)
+        ^ std::process::id() as u64;
+    let mut rng = Rng::new(seed);
+    let mut delay = BASE;
+    loop {
+        let transport = match SocketTransport::connect(addr) {
+            Ok(t) => t,
+            Err(e) if is_not_listening(&e) => {
+                let jittered = delay.mul_f64(1.0 + 0.25 * rng.uniform());
+                eprintln!("leader at {addr} not up yet, retrying in {jittered:?}");
+                std::thread::sleep(jittered);
+                delay = (delay * 2).min(CAP);
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        };
+        eprintln!("connected to leader {}", transport.peer());
+        delay = BASE; // a live leader resets the backoff clock
+        let mut runtime = WorkerRuntime::new(Box::new(transport))?;
+        match runtime.run() {
+            Ok(()) => {
+                eprintln!(
+                    "session drained cleanly ({} poll slices served)",
+                    runtime.polls_served
+                );
+                return Ok(());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::PermissionDenied => {
+                anyhow::bail!("{e}");
+            }
+            Err(e) => {
+                eprintln!(
+                    "leader link lost after {} poll slices: {e} — reconnecting",
+                    runtime.polls_served
+                );
+            }
+        }
+    }
+}
+
 /// `amt serve`: the leader half of the multi-process demo — connect to
 /// running `amt worker`s, spike a batch of tuning jobs across them and
-/// report the results.
+/// report the results. With `--listen`, also accepts workers that dial
+/// in (`amt worker --connect`) before and during the run.
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    use amt::distributed::transport::{SocketTransport, Transport};
+    use amt::distributed::transport::{SocketListener, SocketTransport, Transport};
     let workers = flag(flags, "workers", "");
-    if workers.is_empty() {
-        anyhow::bail!("--workers <addr,addr,...> is required (start `amt worker` first)");
+    let listen = flag(flags, "listen", "");
+    if workers.is_empty() && listen.is_empty() {
+        anyhow::bail!(
+            "--workers <addr,addr,...> or --listen <addr> is required \
+             (start `amt worker` first, or have workers dial in with \
+             `amt worker --connect <addr>`)"
+        );
     }
     let mut transports: Vec<Box<dyn Transport>> = Vec::new();
     for addr in workers.split(',').filter(|a| !a.is_empty()) {
@@ -208,8 +279,24 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let parallel: u32 = flag(flags, "parallel", "2").parse()?;
     let seed: u64 = flag(flags, "seed", "0").parse()?;
 
-    let worker_count = transports.len();
     let service = AmtService::with_remote_workers(PlatformConfig::default(), transports);
+    let pool = service.remote_pool().expect("remote plane attached");
+    if !listen.is_empty() {
+        let listener = SocketListener::bind(listen)?;
+        eprintln!("accepting workers on {}", listener.local_addr());
+        pool.accept_workers(listener);
+        if workers.is_empty() {
+            // no pre-connected workers: wait for the first dial-in so the
+            // spike has somewhere to run
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+            while pool.live_workers() == 0 {
+                if std::time::Instant::now() >= deadline {
+                    anyhow::bail!("no worker connected to {listen} within 60s");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+    }
     let started = std::time::Instant::now();
     for i in 0..jobs {
         let request = TuningJobRequest {
@@ -237,10 +324,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
     }
     let wall = started.elapsed().as_secs_f64();
+    let worker_count = pool.worker_count();
     println!(
         "{jobs} tuning jobs ({evaluations} evaluations) over {worker_count} remote workers \
-         in {wall:.1}s — {:.1} jobs/s, {failed} failed",
-        jobs as f64 / wall
+         in {wall:.1}s — {:.1} jobs/s, {failed} failed ({} joined mid-run)",
+        jobs as f64 / wall,
+        pool.joins()
     );
     Ok(())
 }

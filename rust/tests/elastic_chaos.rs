@@ -1,0 +1,445 @@
+//! Elastic-fleet chaos tests (DESIGN.md §13): dynamic membership,
+//! graceful drain and work stealing under fault injection, all over the
+//! loopback transport so every leg runs the full wire path
+//! deterministically in one process.
+//!
+//! The centerpiece is the chaos soak: 1000 tuning jobs across a fleet
+//! that loses two workers to kills, gains one mid-run, and drains one
+//! gracefully — with zero lost or duplicated work, zero re-executed
+//! proposals on the snapshot-path migrations (drain + steal), and a
+//! final store bit-identical to an uninterrupted single-fleet run. The
+//! smaller `fast_chaos_smoke` variant is the CI gate (`scripts/ci.sh`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::distributed::leader::{RemoteConfig, RemoteWorkerPool};
+use amt::distributed::proto::Message;
+use amt::distributed::transport::{loopback_pair, LoopbackFault, Transport};
+use amt::distributed::worker::spawn_loopback_worker;
+use amt::metrics::MetricsService;
+use amt::platform::PlatformConfig;
+use amt::store::MetadataStore;
+use amt::workflow::ExecutionStatus;
+
+struct WorkerSet {
+    faults: Vec<Arc<LoopbackFault>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn spawn_workers(n: usize, tag: &str) -> (Vec<Box<dyn Transport>>, WorkerSet) {
+    let mut transports = Vec::new();
+    let mut faults = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let (t, fault, h) = spawn_loopback_worker(&format!("{tag}-{i}"));
+        transports.push(t);
+        faults.push(fault);
+        handles.push(h);
+    }
+    (transports, WorkerSet { faults, handles })
+}
+
+impl WorkerSet {
+    fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn chaos_requests(tag: &str, n: usize, evals: u32, seed_base: u64) -> Vec<TuningJobRequest> {
+    (0..n as u64)
+        .map(|i| TuningJobRequest {
+            name: format!("{tag}-{i:04}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: evals,
+            max_parallel_jobs: 2,
+            seed: seed_base + i,
+            ..Default::default()
+        })
+        .collect()
+}
+
+/// Run the same requests on the in-process pool: the uninterrupted
+/// reference every chaos run must match in bits.
+fn reference_run(requests: &[TuningJobRequest]) -> AmtService {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    for r in requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    for r in requests {
+        svc.wait(&r.name).unwrap();
+    }
+    svc
+}
+
+fn assert_services_identical(local: &AmtService, remote: &AmtService) {
+    assert_eq!(
+        local.store().snapshot(),
+        remote.store().snapshot(),
+        "store contents (values + versions) diverged"
+    );
+    let streams = local.metrics().list_streams("");
+    assert_eq!(streams, remote.metrics().list_streams(""), "stream sets diverged");
+    for s in &streams {
+        let a: Vec<(u64, u64)> = local
+            .metrics()
+            .series(s)
+            .iter()
+            .map(|p| (p.time.to_bits(), p.value.to_bits()))
+            .collect();
+        let b: Vec<(u64, u64)> = remote
+            .metrics()
+            .series(s)
+            .iter()
+            .map(|p| (p.time.to_bits(), p.value.to_bits()))
+            .collect();
+        assert_eq!(a, b, "metric series '{s}' diverged");
+    }
+}
+
+/// Wait until the fleet has served at least `polls` slices across the
+/// given jobs (the chaos event must land mid-run, not before it starts).
+fn await_polls(pool: &RemoteWorkerPool, requests: &[TuningJobRequest], polls: u64) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let total: u64 = requests.iter().filter_map(|r| pool.poll_count(&r.name)).sum();
+        if total >= polls {
+            return;
+        }
+        assert!(Instant::now() < deadline, "fleet never got going");
+        std::thread::yield_now();
+    }
+}
+
+fn await_live(pool: &RemoteWorkerPool, n: usize) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while pool.live_workers() != n {
+        assert!(Instant::now() < deadline, "live_workers never reached {n}");
+        std::thread::yield_now();
+    }
+}
+
+/// The CI chaos smoke (`scripts/ci.sh`): 64 jobs over 2 workers; one
+/// worker killed mid-run, a fresh one joins, the other original drains
+/// gracefully. No lost or duplicated work, the drain/steal legs replay
+/// nothing, and the final state matches an uninterrupted run in bits.
+#[test]
+fn fast_chaos_smoke_64_jobs_kill_join_drain() {
+    let requests = chaos_requests("smoke", 64, 3, 5000);
+    let reference = reference_run(&requests);
+
+    let (transports, workers) = spawn_workers(2, "smoke");
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 8, ..RemoteConfig::default() },
+    );
+    for r in &requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    let pool = svc.remote_pool().unwrap();
+    await_polls(&pool, &requests, 8);
+
+    // kill #1: worker 0 dies; its jobs requeue onto the survivor.
+    // on_worker_death retires the lane and requeues synchronously, so
+    // once live drops the repair (and any replays it cost) is complete.
+    workers.faults[0].kill();
+    await_live(&pool, 1);
+    let replays_after_kill = pool.replayed_proposals();
+
+    // join: a fresh worker dials in mid-run and gets stolen work
+    let (late_t, _late_fault, late_h) = spawn_loopback_worker("smoke-late");
+    svc.add_remote_worker(late_t).unwrap();
+
+    // graceful drain of the other original worker: its queued + running
+    // jobs migrate from checkpoints — nothing re-executes
+    assert!(svc.drain_remote_worker(1), "lane 1 should be drainable");
+
+    let mut outcomes = Vec::new();
+    for r in &requests {
+        outcomes.push(svc.wait(&r.name).unwrap());
+    }
+    for o in &outcomes {
+        assert_eq!(o.status, ExecutionStatus::Succeeded, "{} failed", o.name);
+    }
+    assert_eq!(pool.joins(), 1, "late worker not counted as a join");
+    // the drains counter lands after the drain handshake, which can
+    // trail the last job completion by a moment
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while pool.drains() == 0 {
+        assert!(Instant::now() < deadline, "drain never completed");
+        std::thread::yield_now();
+    }
+    assert_eq!(
+        pool.replayed_proposals(),
+        replays_after_kill,
+        "join/steal/drain legs must replay nothing (snapshot path only)"
+    );
+    assert_services_identical(&reference, &svc);
+    assert_eq!(svc.running_jobs(), 0);
+    drop(pool);
+    drop(svc);
+    workers.join();
+    let _ = late_h.join();
+}
+
+/// The acceptance soak: 1000 jobs; two kills, one late join, one
+/// graceful drain — all mid-run. Every job succeeds exactly once, the
+/// elastic legs replay zero proposals, and the final store is
+/// bit-identical to an uninterrupted run.
+#[test]
+fn chaos_soak_1000_jobs_survives_kills_join_and_drain() {
+    let requests = chaos_requests("chaos", 1000, 2, 9000);
+    let reference = reference_run(&requests);
+
+    let (transports, workers) = spawn_workers(3, "chaos");
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 16, ..RemoteConfig::default() },
+    );
+    for r in &requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    let pool = svc.remote_pool().unwrap();
+    await_polls(&pool, &requests, 32);
+
+    // kill #1 (abrupt death: lease/requeue machinery)
+    workers.faults[0].kill();
+    await_live(&pool, 2);
+    let replays_after_kill = pool.replayed_proposals();
+
+    // late join: the new lane's first Hello triggers a rebalance that
+    // steals queued work from the (deep) surviving lanes
+    let (late_t, _late_fault, late_h) = spawn_loopback_worker("chaos-late");
+    svc.add_remote_worker(late_t).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while pool.steals() == 0 {
+        assert!(Instant::now() < deadline, "join never triggered a steal");
+        std::thread::yield_now();
+    }
+    assert_eq!(
+        pool.replayed_proposals(),
+        replays_after_kill,
+        "steals must move work without re-executing it"
+    );
+
+    // graceful drain of an original worker
+    assert!(svc.drain_remote_worker(1), "lane 1 should be drainable");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while pool.drains() == 0 {
+        assert!(Instant::now() < deadline, "drain never completed");
+        std::thread::yield_now();
+    }
+    assert_eq!(
+        pool.replayed_proposals(),
+        replays_after_kill,
+        "a graceful drain must migrate from checkpoints, replaying nothing"
+    );
+
+    // kill #2: another abrupt death; the late joiner carries the rest
+    workers.faults[2].kill();
+
+    let mut outcomes = Vec::new();
+    for r in &requests {
+        outcomes.push(svc.wait(&r.name).unwrap());
+    }
+    // zero lost work: every job reaches Succeeded exactly once; zero
+    // duplicated work: the bit-identity check below would catch any
+    // double-applied evaluation as a version/value divergence
+    for o in &outcomes {
+        assert_eq!(o.status, ExecutionStatus::Succeeded, "{} failed", o.name);
+        assert_eq!(o.evaluations.len(), 2, "{} wrong evaluation count", o.name);
+    }
+    assert!(pool.joins() >= 1, "soak must exercise a late join");
+    assert!(pool.drains() >= 1, "soak must exercise a graceful drain");
+    assert!(pool.steals() >= 1, "soak must exercise work stealing");
+    assert_services_identical(&reference, &svc);
+    assert_eq!(svc.running_jobs(), 0);
+    drop(pool);
+    drop(svc);
+    workers.join();
+    let _ = late_h.join();
+}
+
+/// Membership edge: a worker that says Hello during an active run gets
+/// queued work stolen onto it — and stealing re-executes nothing.
+#[test]
+fn late_hello_gets_stolen_work() {
+    let requests = chaos_requests("steal", 12, 4, 2000);
+    let (transports, workers) = spawn_workers(1, "steal");
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 4, ..RemoteConfig::default() },
+    );
+    for r in &requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    let pool = svc.remote_pool().unwrap();
+    await_polls(&pool, &requests, 2);
+
+    let (late_t, _late_fault, late_h) = spawn_loopback_worker("steal-late");
+    let lane = svc.add_remote_worker(late_t).unwrap();
+    assert_eq!(lane, 1, "late worker should get the next lane index");
+
+    for r in &requests {
+        let out = svc.wait(&r.name).unwrap();
+        assert_eq!(out.status, ExecutionStatus::Succeeded, "{} failed", r.name);
+    }
+    assert_eq!(pool.joins(), 1);
+    assert!(pool.steals() >= 1, "a 12-deep lane vs an idle joiner must steal");
+    assert_eq!(pool.replayed_proposals(), 0, "steals must not re-execute proposals");
+    assert_eq!(pool.scratch_requeues(), 0, "no deaths: nothing may take the scratch path");
+    drop(pool);
+    drop(svc);
+    workers.join();
+    let _ = late_h.join();
+}
+
+/// Membership edge: a worker killed *while draining* falls back to the
+/// death-repair path — jobs still finish exactly once whichever leg
+/// (drain migration or death requeue) wins the race.
+#[test]
+fn worker_killed_mid_drain_falls_back_to_death_repair() {
+    let requests = chaos_requests("middrain", 8, 3, 6000);
+    let reference = reference_run(&requests);
+
+    let (transports, workers) = spawn_workers(2, "middrain");
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 8, ..RemoteConfig::default() },
+    );
+    for r in &requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    let pool = svc.remote_pool().unwrap();
+    await_polls(&pool, &requests, 4);
+
+    // drain and kill the same worker back to back: the driver may see
+    // the drain flag first (graceful leg) or the dead link first (repair
+    // leg) — both must converge on the survivor with no lost work
+    assert!(svc.drain_remote_worker(0));
+    workers.faults[0].kill();
+
+    for r in &requests {
+        let out = svc.wait(&r.name).unwrap();
+        assert_eq!(out.status, ExecutionStatus::Succeeded, "{} failed", r.name);
+    }
+    await_live(&pool, 1);
+    assert_services_identical(&reference, &svc);
+    drop(pool);
+    drop(svc);
+    workers.join();
+}
+
+/// Membership edge: two workers announcing the same name — the second
+/// Hello is rejected with a hard `Deny` (the reconnect loop must exit,
+/// not retry) and the fleet keeps exactly one live lane.
+#[test]
+fn duplicate_worker_names_rejected() {
+    let store = Arc::new(MetadataStore::new());
+    let metrics = Arc::new(MetricsService::new());
+    let pool = RemoteWorkerPool::new(
+        Vec::new(),
+        Arc::clone(&store),
+        metrics,
+        None,
+        RemoteConfig::default(),
+    );
+
+    // drive the protocol by hand from the worker ends so both lanes
+    // claim the same name (real workers embed their pid in the label)
+    let (leader0, mut end0, _f0) = loopback_pair("dup-0");
+    let (leader1, mut end1, _f1) = loopback_pair("dup-1");
+    assert_eq!(pool.add_worker(Box::new(leader0)), 0);
+    assert_eq!(pool.add_worker(Box::new(leader1)), 1);
+
+    end0.send(&Message::Hello { worker: "dup".into(), backend: "native".into() }).unwrap();
+    // wait for lane 0's Hello to be accepted before contending
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while pool.lane_backends().first() != Some(&Some("native".to_string())) {
+        assert!(Instant::now() < deadline, "first Hello never accepted");
+        std::thread::yield_now();
+    }
+
+    end1.send(&Message::Hello { worker: "dup".into(), backend: "native".into() }).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let verdict = loop {
+        assert!(Instant::now() < deadline, "leader never answered the duplicate");
+        match end1.recv(Duration::from_millis(200)).unwrap() {
+            Some(msg) => break msg,
+            None => continue,
+        }
+    };
+    match verdict {
+        Message::Deny { reason } => {
+            assert!(reason.contains("dup"), "Deny should name the offender: {reason}")
+        }
+        other => panic!("expected Deny for a duplicate name, got {other:?}"),
+    }
+    // Deny is sent just before the lane is retired: poll for the count
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while pool.live_workers() != 1 {
+        assert!(Instant::now() < deadline, "duplicate lane never retired");
+        std::thread::yield_now();
+    }
+    assert_eq!(pool.joins(), 2, "both admissions count as joins");
+    drop(pool);
+}
+
+/// Membership edge: draining the *last* lane parks its jobs instead of
+/// failing them — they stay InProgress until a new worker joins, then
+/// resume from their checkpoints with zero replays.
+#[test]
+fn drain_of_last_lane_parks_jobs_until_a_worker_joins() {
+    let requests = chaos_requests("park", 3, 12, 8000);
+    let (transports, workers) = spawn_workers(1, "park");
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 4, ..RemoteConfig::default() },
+    );
+    for r in &requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    let pool = svc.remote_pool().unwrap();
+    await_polls(&pool, &requests, 3);
+
+    assert!(svc.drain_remote_worker(0));
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while pool.drains() == 0 {
+        assert!(Instant::now() < deadline, "drain never completed");
+        std::thread::yield_now();
+    }
+    assert_eq!(pool.live_workers(), 0);
+    // no surviving lane: the jobs must be parked, not failed
+    assert_eq!(svc.running_jobs(), 3, "drained jobs must stay pending");
+    for r in &requests {
+        assert!(
+            pool.try_outcome(&r.name).is_none(),
+            "{} must not have a (failure) outcome while parked",
+            r.name
+        );
+    }
+
+    // a fresh worker joins: the parked jobs place onto it and finish
+    let (late_t, _late_fault, late_h) = spawn_loopback_worker("park-late");
+    svc.add_remote_worker(late_t).unwrap();
+    for r in &requests {
+        let out = svc.wait(&r.name).unwrap();
+        assert_eq!(out.status, ExecutionStatus::Succeeded, "{} failed", r.name);
+        assert_eq!(out.evaluations.len(), 12);
+    }
+    assert_eq!(pool.replayed_proposals(), 0, "parked jobs must resume from checkpoints");
+    drop(pool);
+    drop(svc);
+    workers.join();
+    let _ = late_h.join();
+}

@@ -26,6 +26,13 @@ cargo build --release --benches --examples
 echo "== tier-1 verify: cargo test -q =="
 cargo test -q
 
+# fast elastic-fleet chaos smoke (DESIGN.md §13): 64 jobs through a
+# kill + late join + graceful drain, bit-identical to an uninterrupted
+# run. Redundant with the full suite above on clean runs, but called out
+# so a chaos regression fails with its own named step.
+echo "== chaos smoke: kill + join + drain (64 jobs) =="
+cargo test -q --release --test elastic_chaos fast_chaos_smoke
+
 if [ "${1:-}" = "--bench" ]; then
     echo "== perf trajectory: scripts/bench.sh =="
     scripts/bench.sh
