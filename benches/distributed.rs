@@ -1,8 +1,11 @@
 //! Distributed-plane benchmark (DESIGN.md §11, §13): frame
 //! encode/decode throughput, loopback leader⇄worker round-trip latency,
-//! a 200-job soak through the loopback `RemoteWorkerPool`, an elastic
-//! kill/join/drain scenario reporting fleet-size-vs-throughput, and a
-//! graceful-drain migration-latency microbench (p50/p99). Emits
+//! a 200-job soak through the loopback `RemoteWorkerPool` (now also
+//! reporting messages-per-slice and store writes-per-lock, DESIGN.md
+//! §14), an elastic kill/join/drain scenario reporting
+//! fleet-size-vs-throughput, a graceful-drain migration-latency
+//! microbench (p50/p99), a batched-vs-per-record delta-application
+//! comparison, and a cross-driver group-commit fan-in scenario. Emits
 //! `BENCH_distributed.json` (schema in `harness::BenchReport`;
 //! `AMT_BENCH_DIR` overrides the output directory).
 //! `cargo bench --bench distributed`.
@@ -163,10 +166,21 @@ fn main() {
     }
     let wall = started.elapsed().as_secs_f64();
     let stats = BenchStats::from_samples(latencies);
+    // throughput-plane counters (DESIGN.md §14): the coalesced wire
+    // averages ~1 worker→leader frame per slice (legacy pair: 2), and
+    // the batched apply amortizes shard locks over whole slices
+    // (per-record baseline: ≥1 lock per write)
+    let pool = service.remote_pool().unwrap();
+    let polls = pool.polls_dispatched().max(1);
+    let slice_msgs = pool.slice_messages();
+    let store_locks = service.store().shard_lock_acquisitions().max(1);
+    let store_writes = service.store().write_count();
     println!(
         "distributed soak: {SOAK_JOBS} jobs / {evaluations} evaluations over {WORKERS} \
-         loopback workers in {wall:.1}s ({:.1} jobs/s)",
-        SOAK_JOBS as f64 / wall
+         loopback workers in {wall:.1}s ({:.1} jobs/s); {:.2} msgs/slice, {:.2} writes/lock",
+        SOAK_JOBS as f64 / wall,
+        slice_msgs as f64 / polls as f64,
+        store_writes as f64 / store_locks as f64
     );
     report.push(
         "remote_soak_200",
@@ -176,9 +190,16 @@ fn main() {
             ("evaluations", evaluations.to_string()),
             ("jobs_per_sec", format!("{:.2}", SOAK_JOBS as f64 / wall)),
             ("wall_s", format!("{wall:.3}")),
+            ("slice_messages", slice_msgs.to_string()),
+            ("polls", polls.to_string()),
+            ("msgs_per_slice", format!("{:.2}", slice_msgs as f64 / polls as f64)),
+            ("store_shard_locks", store_locks.to_string()),
+            ("store_writes", store_writes.to_string()),
+            ("writes_per_lock", format!("{:.2}", store_writes as f64 / store_locks as f64)),
         ],
         &stats,
     );
+    drop(pool);
     drop(service);
     for h in handles {
         h.join().unwrap();
@@ -358,6 +379,151 @@ fn main() {
     for h in handles {
         let _ = h.join();
     }
+
+    // --- batched vs per-record delta application (DESIGN.md §14): the
+    // leader's apply cost for a slice of 16 puts + 16 emits, WAL
+    // attached (fsync off: measure locks + appends, not the disk) ---
+    use amt::durability::wal::Wal;
+    use amt::metrics::MetricsService;
+    use amt::store::{MetadataStore, StoreBatchOp};
+    use std::sync::Arc;
+    const APPLY_SLICES: usize = 400;
+    let bench_dir = std::env::temp_dir().join(format!(
+        "amt-bench-throughput-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&bench_dir);
+    let attach = |name: &str| {
+        let wal = Arc::new(Wal::create(&bench_dir.join(name)).unwrap());
+        wal.set_fsync(false);
+        let store = MetadataStore::new();
+        let metrics = MetricsService::new();
+        store.attach_wal(Arc::clone(&wal));
+        metrics.attach_wal(Arc::clone(&wal));
+        (store, metrics, wal)
+    };
+    let slice_puts: Vec<(String, Json)> = (0..16usize)
+        .map(|i| (format!("apply-train-{i:04}"), Json::Num(i as f64)))
+        .collect();
+    let slice_emits: Vec<(String, f64, f64)> = (0..16usize)
+        .map(|i| (format!("apply-{i:02}/objective"), i as f64, 0.5))
+        .collect();
+
+    let (store, metrics, wal) = attach("per-record");
+    let stats_per = bench("delta apply per-record (400 slices x 32 recs)", 1, 5, || {
+        for _ in 0..APPLY_SLICES {
+            for (key, value) in &slice_puts {
+                store.put("training_jobs", key, value.clone());
+            }
+            for (stream, time, value) in &slice_emits {
+                metrics.emit(stream, *time, *value);
+            }
+            wal.commit().unwrap();
+        }
+    });
+    let locks_per = store.shard_lock_acquisitions() + metrics.shard_lock_acquisitions();
+    report.push(
+        "delta_apply_per_record",
+        &[
+            ("slices", APPLY_SLICES.to_string()),
+            ("records_per_slice", "32".into()),
+            ("shard_locks", locks_per.to_string()),
+        ],
+        &stats_per,
+    );
+
+    let (store, metrics, wal) = attach("batched");
+    let stats_bat = bench("delta apply batched (400 slices x 32 recs)", 1, 5, || {
+        for _ in 0..APPLY_SLICES {
+            let ops: Vec<StoreBatchOp<'_>> = slice_puts
+                .iter()
+                .map(|(key, value)| StoreBatchOp::Put {
+                    table: "training_jobs",
+                    key,
+                    value,
+                })
+                .collect();
+            store.put_batch(&ops);
+            let points: Vec<(&str, f64, f64)> = slice_emits
+                .iter()
+                .map(|(stream, time, value)| (stream.as_str(), *time, *value))
+                .collect();
+            metrics.emit_batch(&points);
+            wal.commit().unwrap();
+        }
+    });
+    let locks_bat = store.shard_lock_acquisitions() + metrics.shard_lock_acquisitions();
+    println!(
+        "delta apply: per-record p50 {:.1}ms / {} locks, batched p50 {:.1}ms / {} locks \
+         ({:.1}x lock reduction)",
+        stats_per.p50 * 1e3,
+        locks_per,
+        stats_bat.p50 * 1e3,
+        locks_bat,
+        locks_per as f64 / locks_bat.max(1) as f64
+    );
+    report.push(
+        "delta_apply_batched",
+        &[
+            ("slices", APPLY_SLICES.to_string()),
+            ("records_per_slice", "32".into()),
+            ("shard_locks", locks_bat.to_string()),
+            (
+                "lock_reduction",
+                format!("{:.1}", locks_per as f64 / locks_bat.max(1) as f64),
+            ),
+            ("speedup_p50", format!("{:.2}", stats_per.p50 / stats_bat.p50)),
+        ],
+        &stats_bat,
+    );
+
+    // --- cross-driver group-commit fan-in: 8 committers hammer one WAL
+    // (fsync ON — sharing the fsync is the point) with a 1ms coalescing
+    // window; physical fsyncs should land well under the request count ---
+    const COMMITTERS: usize = 8;
+    const COMMITS_EACH: usize = 40;
+    let wal = Arc::new(Wal::create(&bench_dir.join("group-commit")).unwrap());
+    wal.set_commit_window(Duration::from_millis(1));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..COMMITTERS {
+            let wal = Arc::clone(&wal);
+            scope.spawn(move || {
+                for c in 0..COMMITS_EACH {
+                    wal.append(&WalRecord::Emit {
+                        stream: format!("gc-{t}"),
+                        time: c as f64,
+                        value: 0.0,
+                    });
+                    wal.commit().unwrap();
+                }
+            });
+        }
+    });
+    let gc_wall = t0.elapsed().as_secs_f64();
+    let fsyncs = wal.commits();
+    let coalesced = wal.coalesced();
+    let requested = (COMMITTERS * COMMITS_EACH) as u64;
+    println!(
+        "group commit: {requested} commit requests from {COMMITTERS} threads → {fsyncs} \
+         physical write+fsync cycles ({coalesced} coalesced) in {:.2}s",
+        gc_wall
+    );
+    report.push(
+        "group_commit_fanin",
+        &[
+            ("committers", COMMITTERS.to_string()),
+            ("commit_requests", requested.to_string()),
+            ("physical_commits", fsyncs.to_string()),
+            ("coalesced", coalesced.to_string()),
+            (
+                "fanin",
+                format!("{:.2}", requested as f64 / fsyncs.max(1) as f64),
+            ),
+        ],
+        &BenchStats::from_samples(vec![gc_wall]),
+    );
+    let _ = std::fs::remove_dir_all(&bench_dir);
 
     match report.write() {
         Ok(path) => eprintln!("wrote {}", path.display()),

@@ -273,7 +273,10 @@ impl AmtService {
     /// `auto_checkpoint_bytes` set, the service snapshots and compacts
     /// its WAL automatically whenever a group commit leaves the log
     /// larger than the threshold, so the log stays bounded over any
-    /// service lifetime without manual `checkpoint()` calls.
+    /// service lifetime without manual `checkpoint()` calls; with
+    /// `group_commit_window` set, a commit leader lingers that long
+    /// before capturing the buffer so concurrent committers share one
+    /// write+fsync.
     pub fn open_with_durability(
         dir: impl AsRef<Path>,
         platform_config: PlatformConfig,
@@ -282,6 +285,11 @@ impl AmtService {
         durability: DurabilityOptions,
     ) -> crate::Result<Self> {
         let recovered = recovery::open(dir.as_ref())?;
+        if let Some(window) = durability.group_commit_window {
+            // lets concurrent committers (lane drivers, scheduler
+            // workers) pile onto one write+fsync
+            recovered.wal.set_commit_window(window);
+        }
         let scheduler = Scheduler::new(scheduler_config);
         scheduler.set_wal(Arc::clone(&recovered.wal));
         let mut post_commit_hook: Option<Arc<dyn Fn() + Send + Sync>> = None;

@@ -35,14 +35,18 @@ pub fn encode(payload: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Try to decode one frame from the front of `buf`.
+/// Try to decode one frame from the front of `buf`, **borrowing** the
+/// payload from the input — the zero-copy primitive both transports
+/// parse from (a received message is parsed and dropped immediately, so
+/// an owned copy of the payload would be pure overhead).
 ///
 /// * `Ok(Some((payload, consumed)))` — a complete, checksum-valid frame;
-///   the caller drains `consumed` bytes.
+///   the payload borrows `buf[HEADER_BYTES..consumed]` and the caller
+///   drains `consumed` bytes once done with it.
 /// * `Ok(None)` — `buf` holds only a partial frame; read more bytes.
 /// * `Err` — oversized length prefix or checksum mismatch: the stream is
 ///   unrecoverable.
-pub fn decode(buf: &[u8]) -> std::io::Result<Option<(Vec<u8>, usize)>> {
+pub fn decode_borrowed(buf: &[u8]) -> std::io::Result<Option<(&[u8], usize)>> {
     if buf.len() < HEADER_BYTES {
         return Ok(None);
     }
@@ -65,7 +69,13 @@ pub fn decode(buf: &[u8]) -> std::io::Result<Option<(Vec<u8>, usize)>> {
             "frame checksum mismatch",
         ));
     }
-    Ok(Some((payload.to_vec(), end)))
+    Ok(Some((payload, end)))
+}
+
+/// [`decode_borrowed`] with an owned payload, for callers that must hold
+/// the bytes past the life of `buf`.
+pub fn decode(buf: &[u8]) -> std::io::Result<Option<(Vec<u8>, usize)>> {
+    Ok(decode_borrowed(buf)?.map(|(payload, end)| (payload.to_vec(), end)))
 }
 
 #[cfg(test)]

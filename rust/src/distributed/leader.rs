@@ -10,17 +10,20 @@
 //! seq)`) and speaking the [`super::proto`] protocol:
 //!
 //! ```text
-//! pop job → [Assign once] → [Stop if requested] → PollRequest
-//!        ← StoreDelta (applied to the leader store/metrics in order)
-//!        ← PollResult (Pending → requeue · Complete → publish)
+//! pop job → [Assign once · Stop if requested · PollRequest] (one Batch)
+//!        ← SliceResult (records applied, then the verdict:
+//!                       Pending → requeue · Complete → publish)
 //! ```
 //!
-//! Deltas are applied through the leader's ordinary `store.put` /
-//! `metrics.emit` paths — versions are recomputed *at the leader*, so
-//! final store contents (values **and** versions) are bit-identical to
-//! the same jobs run on the in-process pool, and when a durability WAL
-//! is attached every applied record is logged and group-committed per
-//! slice just like a local poll slice would be.
+//! Deltas are applied through the leader's ordinary batched mutation
+//! paths (`store.put_batch` / `metrics.emit_batch`) — versions are
+//! recomputed *at the leader*, so final store contents (values **and**
+//! versions) are bit-identical to the same jobs run on the in-process
+//! pool, and when a durability WAL is attached every applied record is
+//! logged and group-committed per slice just like a local poll slice
+//! would be (concurrent lane drivers share one write+fsync via the
+//! WAL's group-commit ticket). Legacy workers reporting a slice as
+//! `StoreDelta` + `PollResult` interoperate unchanged.
 //!
 //! **Leases.** A worker renews its lease with every message (heartbeats
 //! while idle). A worker that stays silent past the lease — or whose
@@ -67,7 +70,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -77,7 +80,7 @@ use crate::durability::wal::{Wal, WalRecord};
 use crate::metrics::MetricsService;
 use crate::platform::PlatformConfig;
 use crate::scheduler::{QueueEntry, TenantQuotas};
-use crate::store::MetadataStore;
+use crate::store::{MetadataStore, StoreBatchOp};
 use crate::strategies::Observation;
 use crate::workflow::ExecutionStatus;
 
@@ -169,6 +172,10 @@ struct WorkerLane {
     draining: AtomicBool,
     /// Unfinished jobs assigned here (least-loaded placement heuristic).
     load: AtomicUsize,
+    /// Wire protocol generation from the worker's `Hello` (1 until one
+    /// arrives — the legacy two-message dialect, which cannot decode
+    /// `Batch`). The driver only coalesces control bursts for ≥ 2.
+    proto: AtomicU32,
 }
 
 /// Lane backends (from each worker's `Hello`), under one mutex with a
@@ -209,6 +216,15 @@ struct LeaderInner {
     /// Group commits that failed even after a retry (mirrors
     /// `Scheduler::wal_commit_errors` for the remote plane).
     wal_commit_errors: AtomicU64,
+    /// Worker→leader slice-carrying messages received (`SliceResult`,
+    /// plus legacy `StoreDelta` / `PollResult`). Against `polls_sent`
+    /// this is the throughput plane's frames-per-slice observable:
+    /// coalesced workers hold it at ~1 per slice, two-message workers
+    /// at ~2.
+    slice_messages: AtomicU64,
+    /// Poll slices dispatched across all jobs (pool-wide denominator
+    /// for `slice_messages`).
+    polls_sent: AtomicU64,
     /// Invoked after every successful WAL group commit (the durable
     /// service's auto-checkpoint trigger — same hook as the scheduler's,
     /// so the WAL stays bounded no matter which plane commits).
@@ -271,6 +287,8 @@ impl RemoteWorkerPool {
             scratch_requeues: AtomicU64::new(0),
             replayed_proposals: AtomicU64::new(0),
             wal_commit_errors: AtomicU64::new(0),
+            slice_messages: AtomicU64::new(0),
+            polls_sent: AtomicU64::new(0),
             joins: AtomicU64::new(0),
             drains: AtomicU64::new(0),
             steals: AtomicU64::new(0),
@@ -321,6 +339,20 @@ impl RemoteWorkerPool {
     /// exactly like `Scheduler::wal_commit_errors`).
     pub fn wal_commit_errors(&self) -> u64 {
         self.inner.wal_commit_errors.load(Ordering::Relaxed)
+    }
+
+    /// Worker→leader slice-carrying messages received across the pool's
+    /// lifetime (one per `SliceResult`; legacy workers contribute one
+    /// per `StoreDelta` *and* one per `PollResult`).
+    pub fn slice_messages(&self) -> u64 {
+        self.inner.slice_messages.load(Ordering::Relaxed)
+    }
+
+    /// Poll slices dispatched across all jobs — divide
+    /// [`RemoteWorkerPool::slice_messages`] by this for the pool's
+    /// frames-per-slice ratio (~1 coalesced, ~2 legacy).
+    pub fn polls_dispatched(&self) -> u64 {
+        self.inner.polls_sent.load(Ordering::Relaxed)
     }
 
     /// Worker-death repairs that requeued a job from its last
@@ -568,6 +600,7 @@ fn admit_worker(inner: &Arc<LeaderInner>, transport: Box<dyn Transport>, late: b
             alive: AtomicBool::new(true),
             draining: AtomicBool::new(false),
             load: AtomicUsize::new(0),
+            proto: AtomicU32::new(1),
         }));
         lanes.len() - 1
     };
@@ -635,10 +668,20 @@ enum HelloVerdict {
     Duplicate,
 }
 
-/// Record a worker's label + advertised backend and wake routing
-/// waiters; rejects a name already held by a different live lane.
-fn note_hello(inner: &LeaderInner, idx: usize, worker: &str, backend: &str) -> HelloVerdict {
+/// Record a worker's label, advertised backend and wire protocol
+/// generation, and wake routing waiters; rejects a name already held by
+/// a different live lane.
+fn note_hello(
+    inner: &LeaderInner,
+    idx: usize,
+    worker: &str,
+    backend: &str,
+    proto: u32,
+) -> HelloVerdict {
     let lanes = lanes_snapshot(inner);
+    if let Some(l) = lanes.get(idx) {
+        l.proto.store(proto.max(1), Ordering::SeqCst);
+    }
     {
         let mut names = inner.names.lock().unwrap();
         let duplicate = names.iter().enumerate().any(|(i, n)| {
@@ -699,28 +742,61 @@ fn repush_entry(inner: &LeaderInner, idx: usize, entry: QueueEntry) {
     lane(inner, idx).heap.lock().unwrap().push(Reverse(entry));
 }
 
+/// Flush the batched-application runs accumulated by [`apply_delta`]:
+/// the pending store ops as one [`MetadataStore::put_batch`], then the
+/// pending metric points as one [`MetricsService::emit_batch`]. Store
+/// and metrics are disjoint state spaces and each run preserves its own
+/// per-key / per-stream input order, so flushing the two runs
+/// back-to-back is state-identical to the interleaved per-record
+/// application a delta used to get.
+fn flush_delta_runs<'a>(
+    inner: &LeaderInner,
+    store_ops: &mut Vec<StoreBatchOp<'a>>,
+    emits: &mut Vec<(&'a str, f64, f64)>,
+) {
+    if !store_ops.is_empty() {
+        inner.store.put_batch(store_ops);
+        store_ops.clear();
+    }
+    if !emits.is_empty() {
+        inner.metrics.emit_batch(emits);
+        emits.clear();
+    }
+}
+
 /// Apply one delta through the leader's ordinary mutation paths:
 /// versions are recomputed here, WAL records (when attached) are
 /// appended inside the store/metrics critical sections, and worker
 /// checkpoints are re-logged verbatim — the "existing durability commit
 /// path" of DESIGN.md §11. v1 resume-snapshot checkpoints are also
 /// retained per job: they are what a worker-death repair requeues from.
+///
+/// Application is **batched**: consecutive puts/deletes and emits
+/// accumulate into runs applied via `put_batch` / `emit_batch` — one
+/// shard-lock acquisition per touched shard per run instead of one per
+/// record. `RemoveStreams` and `Checkpoint` are barriers (a removal must
+/// observe the emits before it; a checkpoint must be logged after the
+/// records it covers), so runs flush there and at the end of the delta.
 fn apply_delta(inner: &LeaderInner, records: &[(u64, WalRecord)]) {
+    let mut store_ops: Vec<StoreBatchOp<'_>> = Vec::new();
+    let mut emits: Vec<(&str, f64, f64)> = Vec::new();
     for (_, rec) in records {
         match rec {
             WalRecord::Put { table, key, value, .. } => {
-                inner.store.put(table, key, value.clone());
+                store_ops.push(StoreBatchOp::Put { table, key, value });
             }
             WalRecord::Delete { table, key } => {
-                inner.store.delete(table, key);
+                store_ops.push(StoreBatchOp::Delete { table, key });
             }
             WalRecord::Emit { stream, time, value } => {
-                inner.metrics.emit(stream, *time, *value);
+                emits.push((stream, *time, *value));
             }
             WalRecord::RemoveStreams { prefix } => {
+                flush_delta_runs(inner, &mut store_ops, &mut emits);
                 inner.metrics.remove_streams(prefix);
             }
             WalRecord::Checkpoint { job, exec } => {
+                flush_delta_runs(inner, &mut store_ops, &mut emits);
                 if let Some(w) = &inner.wal {
                     w.append(rec);
                 }
@@ -733,19 +809,18 @@ fn apply_delta(inner: &LeaderInner, records: &[(u64, WalRecord)]) {
             }
         }
     }
+    flush_delta_runs(inner, &mut store_ops, &mut emits);
 }
 
-/// Group-commit the attached WAL, mirroring the in-process scheduler's
-/// semantics exactly: retry a failed commit once, count persistent
-/// failures (records stay buffered and retry at later slices), and run
-/// the post-commit hook (auto-checkpoint) after success.
+/// Group-commit the attached WAL through the shared durability helper —
+/// the in-process scheduler's exact semantics (retry a failed commit
+/// once, count persistent failures while the records stay buffered and
+/// retry at later slices, run the post-commit auto-checkpoint hook after
+/// success). Concurrent lane drivers committing here piggyback on one
+/// in-flight write+fsync ([`Wal::commit`]'s group-commit ticket).
 fn commit_wal(inner: &LeaderInner) {
     if let Some(w) = &inner.wal {
-        if w.commit().is_err() && w.commit().is_err() {
-            inner.wal_commit_errors.fetch_add(1, Ordering::Relaxed);
-        } else if let Some(hook) = inner.post_commit.get() {
-            (**hook)();
-        }
+        crate::durability::commit_with_retry(w, &inner.wal_commit_errors, inner.post_commit.get());
     }
 }
 
@@ -1163,8 +1238,8 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
             match transport.recv(slice) {
                 Ok(Some(msg)) => {
                     last_seen = Instant::now();
-                    if let Message::Hello { worker, backend } = &msg {
-                        match note_hello(inner, idx, worker, backend) {
+                    if let Message::Hello { worker, backend, proto } = &msg {
+                        match note_hello(inner, idx, worker, backend, *proto) {
                             HelloVerdict::Duplicate => {
                                 let _ = transport.send(&Message::Deny {
                                     reason: format!(
@@ -1234,32 +1309,42 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
         }
 
         // drive one slice: Assign (first time on this lane) → Stop (if
-        // requested) → PollRequest → read delta(s) → PollResult
+        // requested) → PollRequest, coalesced into ONE Batch frame when
+        // more than the PollRequest is due → read the SliceResult
         let name = entry.name.clone();
         let result: std::io::Result<()> = (|| {
+            let mut burst = Vec::new();
             if !slot.started.swap(true, Ordering::SeqCst) {
                 // a repaired job carries its last delta-acked snapshot:
                 // the new worker rebuilds the actor mid-flight instead
                 // of replaying from the seed
                 let resume = slot.last_ckpt.lock().unwrap().clone();
-                transport.send(&Message::Assign {
+                burst.push(Message::Assign {
                     request: slot.spec.request.clone(),
                     platform: slot.spec.platform.clone(),
                     transfer: slot.spec.transfer.clone(),
                     backend: slot.spec.backend.clone(),
                     resume,
-                })?;
+                });
             }
             if slot.stop.load(Ordering::Relaxed)
                 && !slot.stop_sent.swap(true, Ordering::SeqCst)
             {
-                transport.send(&Message::Stop { job: name.clone() })?;
+                burst.push(Message::Stop { job: name.clone() });
             }
             slot.polls.fetch_add(1, Ordering::Relaxed);
-            transport.send(&Message::PollRequest {
+            inner.polls_sent.fetch_add(1, Ordering::Relaxed);
+            burst.push(Message::PollRequest {
                 job: name.clone(),
                 max_steps: inner.batch_steps,
-            })
+            });
+            // a generation-1 worker cannot decode Batch: fall back to
+            // one frame per message for it
+            if burst.len() == 1 || lane_ref.proto.load(Ordering::SeqCst) < 2 {
+                burst.iter().try_for_each(|m| transport.send(m))
+            } else {
+                transport.send(&Message::Batch { messages: burst })
+            }
         })();
         if result.is_err() {
             if quota_held {
@@ -1280,13 +1365,29 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 return;
             }
             match transport.recv(slice) {
+                Ok(Some(Message::SliceResult { job, records, reply })) => {
+                    last_seen = Instant::now();
+                    sent_at = last_seen;
+                    inner.slice_messages.fetch_add(1, Ordering::Relaxed);
+                    // one coalesced frame: mutations apply before the
+                    // verdict is acted on, exactly as in the legacy
+                    // delta-then-result order
+                    apply_delta(inner, &records);
+                    if job == name {
+                        break Ok(reply);
+                    }
+                    // out-of-band result (mis-poll rejection): ignore
+                }
+                // legacy two-message workers: still first-class
                 Ok(Some(Message::StoreDelta { records, .. })) => {
                     last_seen = Instant::now();
                     sent_at = last_seen;
+                    inner.slice_messages.fetch_add(1, Ordering::Relaxed);
                     apply_delta(inner, &records);
                 }
                 Ok(Some(Message::PollResult { job, reply })) => {
                     last_seen = Instant::now();
+                    inner.slice_messages.fetch_add(1, Ordering::Relaxed);
                     if job == name {
                         break Ok(reply);
                     }
@@ -1294,10 +1395,10 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 }
                 Ok(Some(msg)) => {
                     last_seen = Instant::now();
-                    if let Message::Hello { worker, backend } = &msg {
+                    if let Message::Hello { worker, backend, proto } = &msg {
                         // a lane only reaches mid-slice after its first
                         // accepted Hello, so this cannot be a duplicate
-                        let _ = note_hello(inner, idx, worker, backend);
+                        let _ = note_hello(inner, idx, worker, backend, *proto);
                     }
                 }
                 Ok(None) => {

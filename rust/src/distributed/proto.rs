@@ -11,19 +11,28 @@
 //!   rejected — e.g. a duplicate worker name; the worker must exit,
 //!   not retry);
 //! * worker → leader: [`Message::Hello`] (identify on connect),
-//!   [`Message::StoreDelta`] (the slice's store/metrics mutations as WAL
-//!   records, in application order), [`Message::PollResult`] (the
-//!   slice's verdict), [`Message::Heartbeat`] (lease renewal while
-//!   idle), [`Message::DrainAck`].
+//!   [`Message::SliceResult`] (the slice's store/metrics mutations plus
+//!   its verdict as ONE message), [`Message::Heartbeat`] (lease renewal
+//!   while idle), [`Message::DrainAck`].
 //!
-//! A `StoreDelta`'s records are literal [`WalRecord`]s — the durability
+//! A slice's records are literal [`WalRecord`]s — the durability
 //! engine's record format *is* the wire format, so every f64 crosses the
 //! process boundary bit-exactly and the leader can apply the delta
 //! through the same store/metrics paths an in-process job would have
-//! used. Ordering guarantee: a worker sends the delta *before* the
-//! `PollResult` it belongs to, and the leader applies deltas in receipt
-//! order, so per-key mutation order on the leader equals the worker's
-//! application order.
+//! used. Ordering guarantee: the leader applies a slice's records before
+//! acting on its reply, and applies slices in receipt order, so per-key
+//! mutation order on the leader equals the worker's application order.
+//!
+//! **Wire compatibility.** Pre-coalescing workers reported each slice as
+//! two messages — [`Message::StoreDelta`] followed by
+//! [`Message::PollResult`] — and both remain fully decodable and
+//! handled: a new leader accepts either form, and a new worker's
+//! `SliceResult` carries the `records` and `reply` fields with exactly
+//! the encodings those two messages used, so nothing about the record or
+//! reply format forked. [`Message::Batch`] likewise wraps ordinary
+//! messages verbatim: receivers unwrap and dispatch each element in
+//! order, which is semantically identical to (and cheaper than) the
+//! elements arriving as separate frames.
 
 use crate::config::TuningJobRequest;
 use crate::coordinator::{EvaluationRecord, TuningJobOutcome};
@@ -33,6 +42,14 @@ use crate::platform::PlatformConfig;
 use crate::space::{config_from_json_typed, config_to_json_typed};
 use crate::strategies::Observation;
 use crate::workflow::ExecutionStatus;
+
+/// Wire protocol generation this build speaks, advertised in the
+/// `Hello`. Generation 1 (the field absent on the wire) reports slices
+/// as `StoreDelta` + `PollResult` pairs and does not decode
+/// [`Message::Batch`]; generation 2 coalesces slices into
+/// [`Message::SliceResult`] and accepts batched control bursts. Leaders
+/// never send a `Batch` to a generation-1 lane.
+pub const PROTO_VERSION: u32 = 2;
 
 /// Verdict of one remote poll slice.
 #[derive(Debug)]
@@ -64,6 +81,10 @@ pub enum Message {
         /// The leader routes each job only to lanes whose backend
         /// matches the job's — mixed-backend fleets stay bit-consistent.
         backend: String,
+        /// Wire protocol generation ([`PROTO_VERSION`]); absent on the
+        /// wire = 1 (a pre-coalescing worker). The leader only sends
+        /// `Batch` frames to lanes advertising ≥ 2.
+        proto: u32,
     },
     /// Host a tuning job: everything a worker needs to rebuild the
     /// [`crate::coordinator::JobActor`] — the validated request, the
@@ -108,11 +129,38 @@ pub enum Message {
         records: Vec<(u64, WalRecord)>,
     },
     /// Verdict of a poll slice (sent after its `StoreDelta`).
+    ///
+    /// Legacy two-message form — current workers send one
+    /// [`Message::SliceResult`] instead; kept decodable so old workers
+    /// interoperate with new leaders.
     PollResult {
         /// Tuning-job name.
         job: String,
         /// Pending / Complete / Rejected.
         reply: PollReply,
+    },
+    /// One poll slice, coalesced: the mutations *and* the verdict in a
+    /// single frame. Replaces the `StoreDelta` + `PollResult` pair (half
+    /// the frames, one syscall per slice on socket transports) with the
+    /// identical field encodings, and keeps their invariant structurally:
+    /// records precede the reply within one message, so the leader
+    /// cannot observe the verdict before the mutations it summarizes.
+    SliceResult {
+        /// Tuning-job name the slice belonged to.
+        job: String,
+        /// Ordered mutation records (as [`Message::StoreDelta`]).
+        records: Vec<(u64, WalRecord)>,
+        /// Slice verdict (as [`Message::PollResult`]).
+        reply: PollReply,
+    },
+    /// Several messages in one frame, dispatched in order by the
+    /// receiver. The leader wraps per-lane control bursts (rebalance
+    /// `Assign`/`Stop` floods, multi-job `PollRequest` dispatch) so a
+    /// burst costs one frame + one write instead of N. Nesting a `Batch`
+    /// inside a `Batch` is not produced and not accepted.
+    Batch {
+        /// The wrapped messages, in dispatch order.
+        messages: Vec<Message>,
     },
     /// Lease renewal (idle worker).
     Heartbeat,
@@ -147,6 +195,35 @@ fn exec_status_from_json(j: &Json) -> Option<ExecutionStatus> {
         )),
         _ => None,
     }
+}
+
+/// Wire JSON of a slice verdict — one codec shared by the legacy
+/// `PollResult` message and the coalesced `SliceResult`, so the two
+/// forms cannot drift apart.
+fn poll_reply_to_json(reply: &PollReply) -> Json {
+    match reply {
+        PollReply::Pending { due } => Json::obj(vec![
+            ("kind", Json::Str("pending".into())),
+            ("due", Json::Num(*due)),
+        ]),
+        PollReply::Complete(outcome) => Json::obj(vec![
+            ("kind", Json::Str("complete".into())),
+            ("outcome", outcome_to_json(outcome)),
+        ]),
+        PollReply::Rejected { reason } => Json::obj(vec![
+            ("kind", Json::Str("rejected".into())),
+            ("reason", Json::Str(reason.clone())),
+        ]),
+    }
+}
+
+fn poll_reply_from_json(j: &Json) -> Option<PollReply> {
+    Some(match j.get("kind")?.as_str()? {
+        "pending" => PollReply::Pending { due: j.get("due")?.as_f64()? },
+        "complete" => PollReply::Complete(Box::new(outcome_from_json(j.get("outcome")?)?)),
+        "rejected" => PollReply::Rejected { reason: j.get("reason")?.as_str()?.to_string() },
+        _ => return None,
+    })
 }
 
 /// Wire JSON of a finished outcome (f64s round-trip bit-exactly; configs
@@ -203,10 +280,11 @@ impl Message {
     /// Wire JSON of the message.
     pub fn to_json(&self) -> Json {
         match self {
-            Message::Hello { worker, backend } => Json::obj(vec![
+            Message::Hello { worker, backend, proto } => Json::obj(vec![
                 ("type", Json::Str("hello".into())),
                 ("worker", Json::Str(worker.clone())),
                 ("backend", Json::Str(backend.clone())),
+                ("proto", Json::Num(*proto as f64)),
             ]),
             Message::Assign { request, platform, transfer, backend, resume } => {
                 Json::obj(vec![
@@ -238,23 +316,20 @@ impl Message {
             Message::PollResult { job, reply } => Json::obj(vec![
                 ("type", Json::Str("result".into())),
                 ("job", Json::Str(job.clone())),
+                ("reply", poll_reply_to_json(reply)),
+            ]),
+            Message::SliceResult { job, records, reply } => Json::obj(vec![
+                ("type", Json::Str("slice".into())),
+                ("job", Json::Str(job.clone())),
                 (
-                    "reply",
-                    match reply {
-                        PollReply::Pending { due } => Json::obj(vec![
-                            ("kind", Json::Str("pending".into())),
-                            ("due", Json::Num(*due)),
-                        ]),
-                        PollReply::Complete(outcome) => Json::obj(vec![
-                            ("kind", Json::Str("complete".into())),
-                            ("outcome", outcome_to_json(outcome)),
-                        ]),
-                        PollReply::Rejected { reason } => Json::obj(vec![
-                            ("kind", Json::Str("rejected".into())),
-                            ("reason", Json::Str(reason.clone())),
-                        ]),
-                    },
+                    "records",
+                    Json::Arr(records.iter().map(|(lsn, r)| r.to_json(*lsn)).collect()),
                 ),
+                ("reply", poll_reply_to_json(reply)),
+            ]),
+            Message::Batch { messages } => Json::obj(vec![
+                ("type", Json::Str("batch".into())),
+                ("messages", Json::Arr(messages.iter().map(Message::to_json).collect())),
             ]),
             Message::Heartbeat => Json::obj(vec![("type", Json::Str("heartbeat".into()))]),
             Message::Drain => Json::obj(vec![("type", Json::Str("drain".into()))]),
@@ -277,6 +352,8 @@ impl Message {
                     .and_then(Json::as_str)
                     .unwrap_or("native")
                     .to_string(),
+                // pre-coalescing workers are generation 1
+                proto: j.get("proto").and_then(Json::as_i64).unwrap_or(1) as u32,
             },
             "assign" => Message::Assign {
                 request: TuningJobRequest::from_json(j.get("request")?)?,
@@ -306,21 +383,32 @@ impl Message {
                     .map(WalRecord::from_json)
                     .collect::<Option<_>>()?,
             },
-            "result" => {
-                let reply = j.get("reply")?;
-                Message::PollResult {
-                    job: j.get("job")?.as_str()?.to_string(),
-                    reply: match reply.get("kind")?.as_str()? {
-                        "pending" => PollReply::Pending { due: reply.get("due")?.as_f64()? },
-                        "complete" => PollReply::Complete(Box::new(outcome_from_json(
-                            reply.get("outcome")?,
-                        )?)),
-                        "rejected" => PollReply::Rejected {
-                            reason: reply.get("reason")?.as_str()?.to_string(),
-                        },
-                        _ => return None,
-                    },
+            "result" => Message::PollResult {
+                job: j.get("job")?.as_str()?.to_string(),
+                reply: poll_reply_from_json(j.get("reply")?)?,
+            },
+            "slice" => Message::SliceResult {
+                job: j.get("job")?.as_str()?.to_string(),
+                records: j
+                    .get("records")?
+                    .as_arr()?
+                    .iter()
+                    .map(WalRecord::from_json)
+                    .collect::<Option<_>>()?,
+                reply: poll_reply_from_json(j.get("reply")?)?,
+            },
+            "batch" => {
+                let messages = j
+                    .get("messages")?
+                    .as_arr()?
+                    .iter()
+                    .map(Message::from_json)
+                    .collect::<Option<Vec<_>>>()?;
+                // nested batches are not part of the protocol
+                if messages.iter().any(|m| matches!(m, Message::Batch { .. })) {
+                    return None;
                 }
+                Message::Batch { messages }
             }
             "heartbeat" => Message::Heartbeat,
             "drain" => Message::Drain,
@@ -374,15 +462,20 @@ mod tests {
             Message::Deny { reason } if reason == "duplicate worker name"
         ));
         assert!(matches!(
-            roundtrip(&Message::Hello { worker: "w0".into(), backend: "native".into() }),
-            Message::Hello { worker, backend } if worker == "w0" && backend == "native"
+            roundtrip(&Message::Hello {
+                worker: "w0".into(),
+                backend: "native".into(),
+                proto: PROTO_VERSION,
+            }),
+            Message::Hello { worker, backend, proto: PROTO_VERSION }
+                if worker == "w0" && backend == "native"
         ));
-        // a Hello without a backend field (pre-pinning worker) defaults
-        // to the native backend
+        // a Hello without backend/proto fields (pre-pinning,
+        // pre-coalescing worker) defaults to native, generation 1
         let legacy = crate::json::parse(r#"{"type": "hello", "worker": "old"}"#).unwrap();
         assert!(matches!(
             Message::from_json(&legacy),
-            Some(Message::Hello { backend, .. }) if backend == "native"
+            Some(Message::Hello { backend, proto: 1, .. }) if backend == "native"
         ));
         assert!(matches!(
             roundtrip(&Message::Stop { job: "j".into() }),
@@ -481,6 +574,84 @@ mod tests {
         let WalRecord::Emit { time, value, .. } = &records[1].1 else { panic!() };
         assert_eq!(time.to_bits(), 1e-300f64.to_bits());
         assert_eq!(value.to_bits(), (-0.125f64).to_bits());
+    }
+
+    #[test]
+    fn slice_result_roundtrips_and_matches_two_message_encodings() {
+        let records = vec![
+            (
+                7u64,
+                WalRecord::Put {
+                    table: "training_jobs".into(),
+                    key: "j-train-0002".into(),
+                    version: 5,
+                    value: Json::obj(vec![("v", Json::Num(-0.5))]),
+                },
+            ),
+            (8u64, WalRecord::Emit { stream: "j/loss".into(), time: 2.5, value: 1.0 / 3.0 }),
+        ];
+        let msg = Message::SliceResult {
+            job: "j".into(),
+            records: records.clone(),
+            reply: PollReply::Pending { due: 12.25 },
+        };
+        let Message::SliceResult { job, records: back, reply } = roundtrip(&msg) else {
+            panic!("wrong variant");
+        };
+        assert_eq!(job, "j");
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, 7);
+        let WalRecord::Emit { time, value, .. } = &back[1].1 else { panic!() };
+        assert_eq!(time.to_bits(), 2.5f64.to_bits());
+        assert_eq!(value.to_bits(), (1.0f64 / 3.0).to_bits());
+        assert!(matches!(reply, PollReply::Pending { due } if due.to_bits() == 12.25f64.to_bits()));
+        // field encodings are literally the legacy messages': the slice's
+        // "records" json equals StoreDelta's, its "reply" json equals
+        // PollResult's
+        let slice = msg.to_json();
+        let delta =
+            Message::StoreDelta { job: "j".into(), records }.to_json();
+        let result = Message::PollResult {
+            job: "j".into(),
+            reply: PollReply::Pending { due: 12.25 },
+        }
+        .to_json();
+        assert_eq!(
+            slice.get("records").unwrap().to_string(),
+            delta.get("records").unwrap().to_string()
+        );
+        assert_eq!(
+            slice.get("reply").unwrap().to_string(),
+            result.get("reply").unwrap().to_string()
+        );
+    }
+
+    #[test]
+    fn batch_roundtrips_in_order_and_rejects_nesting() {
+        let msg = Message::Batch {
+            messages: vec![
+                Message::Stop { job: "a".into() },
+                Message::PollRequest { job: "b".into(), max_steps: 64 },
+                Message::PollRequest { job: "c".into(), max_steps: 64 },
+            ],
+        };
+        let Message::Batch { messages } = roundtrip(&msg) else { panic!("wrong variant") };
+        assert_eq!(messages.len(), 3);
+        assert!(matches!(&messages[0], Message::Stop { job } if job == "a"));
+        assert!(matches!(&messages[1], Message::PollRequest { job, .. } if job == "b"));
+        assert!(matches!(&messages[2], Message::PollRequest { job, .. } if job == "c"));
+        // a batch inside a batch is a protocol violation, not a message
+        let nested = Json::obj(vec![
+            ("type", Json::Str("batch".into())),
+            (
+                "messages",
+                Json::Arr(vec![Json::obj(vec![
+                    ("type", Json::Str("batch".into())),
+                    ("messages", Json::Arr(Vec::new())),
+                ])]),
+            ),
+        ]);
+        assert!(Message::from_json(&nested).is_none());
     }
 
     #[test]

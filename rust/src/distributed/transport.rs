@@ -137,10 +137,12 @@ impl Transport for LoopbackTransport {
                 if self.fault.is_killed() {
                     return Err(dead_link("loopback link killed"));
                 }
-                let (payload, consumed) = frame::decode(&bytes)?
+                // zero-copy parse: the payload is borrowed straight from
+                // the received buffer, never re-allocated
+                let (payload, consumed) = frame::decode_borrowed(&bytes)?
                     .ok_or_else(|| dead_link("loopback frame truncated"))?;
                 debug_assert_eq!(consumed, bytes.len());
-                Ok(Some(Message::decode(&payload)?))
+                Ok(Some(Message::decode(payload)?))
             }
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => Err(dead_link("loopback peer gone")),
@@ -254,9 +256,15 @@ impl Transport for SocketTransport {
     fn recv(&mut self, timeout: Duration) -> std::io::Result<Option<Message>> {
         let deadline = Instant::now() + timeout;
         loop {
-            if let Some((payload, consumed)) = frame::decode(&self.pending)? {
+            // zero-copy parse: decode the message while the payload still
+            // borrows `pending`, then drain the consumed prefix
+            let parsed = match frame::decode_borrowed(&self.pending)? {
+                Some((payload, consumed)) => Some((Message::decode(payload)?, consumed)),
+                None => None,
+            };
+            if let Some((msg, consumed)) = parsed {
                 self.pending.drain(..consumed);
-                return Ok(Some(Message::decode(&payload)?));
+                return Ok(Some(msg));
             }
             let now = Instant::now();
             if now >= deadline {
@@ -503,7 +511,7 @@ mod tests {
         });
         let mut client = SocketTransport::connect(&addr).unwrap();
         client
-            .send(&Message::Hello { worker: "w".into(), backend: "native".into() })
+            .send(&Message::Hello { worker: "w".into(), backend: "native".into(), proto: 2 })
             .unwrap();
         assert!(matches!(
             client.recv(Duration::from_secs(5)).unwrap(),

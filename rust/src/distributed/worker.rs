@@ -6,8 +6,11 @@
 //! absorb the actor's writes; both are wired to one shared *capture
 //! WAL* whose group-commit buffer is never committed to disk — after
 //! every poll slice the buffer is drained ([`Wal::take_buffer`]),
-//! decoded, and shipped to the leader as a [`Message::StoreDelta`]
-//! followed by the slice's [`Message::PollResult`]. Because the
+//! decoded, and shipped to the leader as ONE coalesced
+//! [`Message::SliceResult`] carrying the slice's mutation records and
+//! its verdict (pre-coalescing workers sent the same content as a
+//! `StoreDelta` + `PollResult` pair, which leaders still accept).
+//! Because the
 //! store/metrics/actor append through exactly the code paths an
 //! in-process job uses, the delta is the slice's mutation history in
 //! faithful application order, and the leader re-applying it through
@@ -240,19 +243,19 @@ impl WorkerRuntime {
 
     fn poll(&mut self, job: &str, max_steps: usize) -> std::io::Result<()> {
         let Some(hosted) = self.jobs.get_mut(job) else {
-            return self.transport.send(&Message::PollResult {
+            return self.transport.send(&Message::SliceResult {
                 job: job.to_string(),
+                records: Vec::new(),
                 reply: PollReply::Rejected { reason: "job not assigned here".into() },
             });
         };
         self.polls_served += 1;
         let poll = hosted.actor.poll(max_steps.max(1));
         // the slice's mutations, in application order, straight out of
-        // the capture WAL's buffer — delta first, verdict second
+        // the capture WAL's buffer, coalesced with the verdict into one
+        // frame (records precede the reply within the message, so the
+        // delta-before-verdict invariant holds structurally)
         let records = Wal::decode_frames(&self.capture.take_buffer()).records;
-        if !records.is_empty() {
-            self.transport.send(&Message::StoreDelta { job: job.to_string(), records })?;
-        }
         let reply = match poll {
             ActorPoll::Pending { due } => PollReply::Pending { due },
             ActorPoll::Complete(outcome) => {
@@ -260,7 +263,50 @@ impl WorkerRuntime {
                 PollReply::Complete(outcome)
             }
         };
-        self.transport.send(&Message::PollResult { job: job.to_string(), reply })
+        self.transport.send(&Message::SliceResult { job: job.to_string(), records, reply })
+    }
+
+    /// Dispatch one leader message; `Flow::Drained` ends the session.
+    fn handle(&mut self, msg: Message) -> std::io::Result<Flow> {
+        match msg {
+            Message::Assign { request, platform, transfer, backend, resume } => {
+                self.assign(request, platform, transfer, backend, resume);
+            }
+            Message::PollRequest { job, max_steps } => {
+                self.poll(&job, max_steps)?;
+            }
+            Message::Stop { job } => {
+                if let Some(h) = self.jobs.get(&job) {
+                    h.stop_flag.store(true, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            Message::Batch { messages } => {
+                // a leader control burst: dispatch in order, exactly as
+                // if the elements had arrived as separate frames
+                for m in messages {
+                    match self.handle(m)? {
+                        Flow::Continue => {}
+                        Flow::Drained => return Ok(Flow::Drained),
+                    }
+                }
+            }
+            Message::Drain => {
+                let _ = self.transport.send(&Message::DrainAck);
+                return Ok(Flow::Drained);
+            }
+            Message::Deny { reason } => {
+                // a hard admission verdict (e.g. duplicate worker
+                // name), not a link failure: reconnect loops must
+                // exit on it instead of retrying
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::PermissionDenied,
+                    format!("leader denied worker: {reason}"),
+                ));
+            }
+            // leader-bound messages can't arrive here; ignore
+            _ => {}
+        }
+        Ok(Flow::Continue)
     }
 
     /// Serve the leader until it drains the session (`Ok`) or the link
@@ -269,6 +315,7 @@ impl WorkerRuntime {
         self.transport.send(&Message::Hello {
             worker: self.label.clone(),
             backend: self.backend.clone(),
+            proto: super::proto::PROTO_VERSION,
         })?;
         loop {
             match self.transport.recv(self.heartbeat)? {
@@ -276,35 +323,22 @@ impl WorkerRuntime {
                     // idle: renew the lease
                     self.transport.send(&Message::Heartbeat)?;
                 }
-                Some(Message::Assign { request, platform, transfer, backend, resume }) => {
-                    self.assign(request, platform, transfer, backend, resume);
-                }
-                Some(Message::PollRequest { job, max_steps }) => {
-                    self.poll(&job, max_steps)?;
-                }
-                Some(Message::Stop { job }) => {
-                    if let Some(h) = self.jobs.get(&job) {
-                        h.stop_flag.store(true, std::sync::atomic::Ordering::Relaxed);
+                Some(msg) => {
+                    if let Flow::Drained = self.handle(msg)? {
+                        return Ok(());
                     }
                 }
-                Some(Message::Drain) => {
-                    let _ = self.transport.send(&Message::DrainAck);
-                    return Ok(());
-                }
-                Some(Message::Deny { reason }) => {
-                    // a hard admission verdict (e.g. duplicate worker
-                    // name), not a link failure: reconnect loops must
-                    // exit on it instead of retrying
-                    return Err(std::io::Error::new(
-                        std::io::ErrorKind::PermissionDenied,
-                        format!("leader denied worker: {reason}"),
-                    ));
-                }
-                // leader-bound messages can't arrive here; ignore
-                Some(_) => {}
             }
         }
     }
+}
+
+/// Control-flow verdict of [`WorkerRuntime::handle`].
+enum Flow {
+    /// Keep serving the session.
+    Continue,
+    /// The leader drained the session: exit cleanly.
+    Drained,
 }
 
 impl Drop for WorkerRuntime {
@@ -369,8 +403,13 @@ mod tests {
         let mut delta = Vec::new();
         loop {
             match transport.recv(Duration::from_secs(10)).unwrap() {
+                // legacy two-message form, still legal on the wire
                 Some(Message::StoreDelta { records, .. }) => delta.extend(records),
                 Some(Message::PollResult { reply, .. }) => return (delta, reply),
+                Some(Message::SliceResult { records, reply, .. }) => {
+                    delta.extend(records);
+                    return (delta, reply);
+                }
                 Some(_) => {}
                 None => panic!("worker went quiet"),
             }

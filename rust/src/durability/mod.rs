@@ -43,6 +43,33 @@ pub struct DurabilityOptions {
     /// bounded without any API-side discipline. `None` (the default)
     /// keeps checkpoints purely manual.
     pub auto_checkpoint_bytes: Option<u64>,
+    /// When `Some(w)`: a WAL group-commit leader waits `w` before
+    /// capturing the buffer ([`wal::Wal::set_commit_window`]), so
+    /// concurrent lane drivers and scheduler workers finishing slices at
+    /// nearly the same time share one `write`+`fsync`. `None` (the
+    /// default) commits immediately — coalescing still happens whenever
+    /// commits genuinely overlap, just without the extra linger.
+    pub group_commit_window: Option<std::time::Duration>,
+}
+
+/// Group-commit `wal`, retrying once on failure. The shared
+/// commit-and-count discipline of both execution planes (the in-process
+/// scheduler's heap-drain boundary and the distributed leader's slice
+/// boundary): a persistent failure is counted in `failures` and never
+/// propagated — the records stay buffered inside the WAL (which rewinds
+/// any torn fragment first) and retry at the next commit, so no mutation
+/// is dropped while the process lives. `post_commit` runs only after a
+/// *successful* commit (the durable service's auto-checkpoint trigger).
+pub fn commit_with_retry(
+    wal: &wal::Wal,
+    failures: &std::sync::atomic::AtomicU64,
+    post_commit: Option<&std::sync::Arc<dyn Fn() + Send + Sync>>,
+) {
+    if wal.commit().is_err() && wal.commit().is_err() {
+        failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    } else if let Some(hook) = post_commit {
+        (**hook)();
+    }
 }
 
 /// Durability-layer failure: an I/O error or a corrupt snapshot/manifest.

@@ -50,7 +50,7 @@ use super::DurabilityError;
 use crate::coordinator::{checkpoint_cursor, is_resume_snapshot};
 use crate::json::Json;
 use crate::metrics::MetricsService;
-use crate::store::MetadataStore;
+use crate::store::{MetadataStore, StoreBatchOp};
 use crate::workflow::ExecutionState;
 
 /// One tuning job found in the recovered store.
@@ -210,6 +210,16 @@ pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
         .collect();
     let mut replayed = 0usize;
     let mut skipped = 0usize;
+    // Replay is batched: raw-put/delete and emit runs accumulate and
+    // flush through `put_batch` / `emit_batch` — one shard-lock
+    // acquisition per touched shard per run, with the per-key /
+    // per-stream application order (and hence final state) identical to
+    // the old record-at-a-time loop. The WAL is not attached yet, so
+    // nothing re-logs; `PutRaw` preserves versions exactly and `emit`'s
+    // insertion logic is shared with `emit_batch`. `RemoveStreams` is a
+    // barrier: the emits before it must land before the removal runs.
+    let mut store_ops: Vec<StoreBatchOp<'_>> = Vec::new();
+    let mut emits: Vec<(&str, f64, f64)> = Vec::new();
     for (idx, (lsn, rec)) in scan.records.iter().enumerate() {
         next_lsn = next_lsn.max(lsn + 1);
         if skip[idx] {
@@ -218,20 +228,31 @@ pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
         }
         match rec {
             WalRecord::Put { table, key, version, value } if *lsn > store_hwm => {
-                store.insert_raw(table, key, *version, value.clone());
+                store_ops.push(StoreBatchOp::PutRaw {
+                    table,
+                    key,
+                    version: *version,
+                    value,
+                });
                 replayed += 1;
             }
             WalRecord::Delete { table, key } if *lsn > store_hwm => {
-                // WAL not yet attached: applies without re-logging
-                store.delete(table, key);
+                store_ops.push(StoreBatchOp::Delete { table, key });
                 replayed += 1;
             }
             WalRecord::Emit { stream, time, value } if *lsn > metrics_hwm => {
-                // same insertion logic as the live path ⇒ identical series
-                metrics.emit(stream, *time, *value);
+                emits.push((stream, *time, *value));
                 replayed += 1;
             }
             WalRecord::RemoveStreams { prefix } if *lsn > metrics_hwm => {
+                if !store_ops.is_empty() {
+                    store.put_batch(&store_ops);
+                    store_ops.clear();
+                }
+                if !emits.is_empty() {
+                    metrics.emit_batch(&emits);
+                    emits.clear();
+                }
                 metrics.remove_streams(prefix);
                 replayed += 1;
             }
@@ -240,6 +261,12 @@ pub fn open(dir: &Path) -> Result<RecoveredState, DurabilityError> {
             }
             _ => {} // already contained in the snapshot
         }
+    }
+    if !store_ops.is_empty() {
+        store.put_batch(&store_ops);
+    }
+    if !emits.is_empty() {
+        metrics.emit_batch(&emits);
     }
 
     // Skipped records must leave the on-disk log too: the resumed

@@ -22,10 +22,13 @@
 //! an error (`scan` reports `dropped_tail` so recovery can truncate the
 //! file back to the valid prefix before appending).
 
+use std::cell::RefCell;
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::{Mutex, OnceLock, RwLock, RwLockReadGuard};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
+use std::time::Duration;
 
 use crate::json::{self, Json};
 use crate::store::Version;
@@ -128,18 +131,34 @@ impl WalRecord {
     }
 
     /// Append this record's on-disk frame (`[len][crc][payload]`) to
-    /// `out` — the single frame-encoding site for batch rewrites
+    /// `out` — the single frame-encoding site for live appends
+    /// ([`Wal::append`]/[`Wal::append_batch`]) and batch rewrites
     /// ([`Wal::compact`] and recovery's incremental-resume rewrite), so
-    /// the framing discipline cannot drift between them. Live appends
-    /// ([`Wal::append`]) keep their own copy only because they
-    /// deliberately serialize outside the buffer mutex.
+    /// the framing discipline cannot drift between them. The JSON
+    /// payload is serialized through a reusable thread-local `String`
+    /// (no per-record `String`/`Vec` allocation on the hot path).
     pub fn encode_frame(&self, lsn: u64, out: &mut Vec<u8>) {
-        let payload = self.to_json(lsn).to_string().into_bytes();
-        out.reserve(8 + payload.len());
-        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        out.extend_from_slice(&crc32(&payload).to_le_bytes());
-        out.extend_from_slice(&payload);
+        thread_local! {
+            static PAYLOAD: RefCell<String> = RefCell::new(String::new());
+        }
+        PAYLOAD.with(|cell| {
+            let mut payload = cell.borrow_mut();
+            payload.clear();
+            self.to_json(lsn).write_compact(&mut payload);
+            let bytes = payload.as_bytes();
+            out.reserve(8 + bytes.len());
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(&crc32(bytes).to_le_bytes());
+            out.extend_from_slice(bytes);
+        });
     }
+}
+
+thread_local! {
+    /// Reusable frame scratch for [`Wal::append`] / [`Wal::append_batch`]:
+    /// frames are serialized here *outside* the buffer mutex, then copied
+    /// into the group-commit buffer in a single locked extend.
+    static FRAME_SCRATCH: RefCell<Vec<u8>> = RefCell::new(Vec::new());
 }
 
 /// IEEE CRC-32 (reflected, poly 0xEDB88320) over a byte slice.
@@ -176,6 +195,26 @@ struct WalInner {
     dirty: bool,
 }
 
+/// Cross-caller group-commit coordination (see [`Wal::commit`]): one
+/// *leader* runs the physical `write`+`fsync`; concurrent callers whose
+/// records are already covered by the in-flight buffer become
+/// *followers* and just wait for the leader's result.
+struct GcState {
+    /// A leader is currently inside [`Wal::commit_leader`].
+    committing: bool,
+    /// The in-flight leader has captured the buffer (acquired the inner
+    /// mutex): records appended after this point are NOT covered by the
+    /// in-flight write, so later callers must not piggyback on it.
+    sealed: bool,
+    /// Completed commit attempts (generation counter, success or not).
+    gen: u64,
+    /// Generation of the most recent *successful* commit. A follower
+    /// waiting on generation `g` is durable once `last_ok_gen >= g`:
+    /// failed commits retain the buffer, so any later successful commit
+    /// covers every earlier caller's records too.
+    last_ok_gen: u64,
+}
+
 /// The append-only log. `append` is infallible and lock-cheap: the LSN
 /// comes from an atomic counter and the payload is serialized *outside*
 /// the inner mutex, which only guards the buffer push — so the 16-way
@@ -210,12 +249,26 @@ struct WalInner {
 /// LSN individually, never assumed sorted).
 pub struct Wal {
     path: PathBuf,
-    fsync: std::sync::atomic::AtomicBool,
-    next_lsn: std::sync::atomic::AtomicU64,
+    fsync: AtomicBool,
+    next_lsn: AtomicU64,
     /// Atomic-unit gate: readers are open units (multi-record append
     /// sequences), the writer is `commit`. See the struct docs.
     unit: RwLock<()>,
     inner: Mutex<WalInner>,
+    /// Group-commit coordination. Lock order: `gc` is taken either on
+    /// its own, or *after* `inner` (the seal point inside
+    /// [`Wal::commit_leader`]) — never the other way around.
+    gc: Mutex<GcState>,
+    gc_cv: Condvar,
+    /// Physical commits performed (non-empty `write`+`fsync` batches).
+    commits: AtomicU64,
+    /// Callers whose commit piggybacked on another caller's in-flight
+    /// write+fsync instead of issuing their own.
+    coalesced: AtomicU64,
+    /// Bounded coalescing window in nanoseconds: how long a commit
+    /// leader waits before capturing the buffer, giving concurrent
+    /// drivers time to fan in. 0 (default) commits immediately.
+    window_nanos: AtomicU64,
 }
 
 /// An open atomic append unit (see [`Wal::begin_unit`]): while this
@@ -255,8 +308,8 @@ impl Wal {
         file.seek(SeekFrom::End(0))?;
         Ok(Wal {
             path,
-            fsync: std::sync::atomic::AtomicBool::new(true),
-            next_lsn: std::sync::atomic::AtomicU64::new(next_lsn.max(1)),
+            fsync: AtomicBool::new(true),
+            next_lsn: AtomicU64::new(next_lsn.max(1)),
             unit: RwLock::new(()),
             inner: Mutex::new(WalInner {
                 file,
@@ -264,6 +317,16 @@ impl Wal {
                 synced_len: valid_len,
                 dirty: false,
             }),
+            gc: Mutex::new(GcState {
+                committing: false,
+                sealed: false,
+                gen: 0,
+                last_ok_gen: 0,
+            }),
+            gc_cv: Condvar::new(),
+            commits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            window_nanos: AtomicU64::new(0),
         })
     }
 
@@ -275,7 +338,27 @@ impl Wal {
     /// Toggle fsync-on-commit (bench mode: off measures append/write cost
     /// without physical-disk latency). Durability tests keep the default.
     pub fn set_fsync(&self, fsync: bool) {
-        self.fsync.store(fsync, std::sync::atomic::Ordering::Relaxed);
+        self.fsync.store(fsync, Ordering::Relaxed);
+    }
+
+    /// Bounded coalescing window for group commit: a commit leader
+    /// sleeps this long before capturing the buffer, so concurrent lane
+    /// drivers finishing slices at nearly the same time share one
+    /// `write`+`fsync` instead of queueing N of them. The default (zero)
+    /// commits immediately — correct in all cases, just less coalesced.
+    pub fn set_commit_window(&self, window: Duration) {
+        self.window_nanos.store(window.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Physical commits performed (non-empty `write`+`fsync` batches).
+    pub fn commits(&self) -> u64 {
+        self.commits.load(Ordering::Relaxed)
+    }
+
+    /// Commit calls that piggybacked on another caller's in-flight
+    /// write+fsync (group-commit fan-in; see [`Wal::commit`]).
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
     }
 
     /// Path of the log file.
@@ -285,17 +368,40 @@ impl Wal {
 
     /// Append one record to the group-commit buffer; returns its LSN.
     /// Infallible: I/O happens at [`Wal::commit`]. Serialization and
-    /// checksumming run outside the buffer mutex.
+    /// checksumming run outside the buffer mutex (into a reusable
+    /// thread-local scratch); the mutex only guards one buffer extend.
     pub fn append(&self, rec: &WalRecord) -> u64 {
-        let lsn = self.next_lsn.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let payload = rec.to_json(lsn).to_string().into_bytes();
-        let crc = crc32(&payload);
-        let mut inner = self.inner.lock().unwrap();
-        inner.buf.reserve(8 + payload.len());
-        inner.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        inner.buf.extend_from_slice(&crc.to_le_bytes());
-        inner.buf.extend_from_slice(&payload);
+        let lsn = self.next_lsn.fetch_add(1, Ordering::Relaxed);
+        FRAME_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            scratch.clear();
+            rec.encode_frame(lsn, &mut scratch);
+            self.inner.lock().unwrap().buf.extend_from_slice(&scratch);
+        });
         lsn
+    }
+
+    /// Append a batch of records in order; returns the LSN of the last
+    /// one (or [`Wal::last_lsn`] for an empty batch). Byte-identical to
+    /// N sequential [`Wal::append`] calls — the batch reserves a
+    /// contiguous LSN block up front, serializes every frame outside the
+    /// buffer mutex into the thread-local scratch, and extends the
+    /// commit buffer in ONE locked operation (one lock acquisition and
+    /// one copy instead of N).
+    pub fn append_batch(&self, recs: &[WalRecord]) -> u64 {
+        if recs.is_empty() {
+            return self.last_lsn();
+        }
+        let first = self.next_lsn.fetch_add(recs.len() as u64, Ordering::Relaxed);
+        FRAME_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            scratch.clear();
+            for (i, rec) in recs.iter().enumerate() {
+                rec.encode_frame(first + i as u64, &mut scratch);
+            }
+            self.inner.lock().unwrap().buf.extend_from_slice(&scratch);
+        });
+        first + recs.len() as u64 - 1
     }
 
     /// Open an atomic append unit: until the returned guard drops,
@@ -333,14 +439,91 @@ impl Wal {
     /// Group commit: write every buffered frame and fsync. No-op when the
     /// buffer is empty (cheap to call at every scheduler tick).
     ///
+    /// **Cross-caller coalescing.** Any records a caller appended are in
+    /// the buffer *before* it calls `commit`, so when another caller's
+    /// commit is already in flight and has not yet captured the buffer
+    /// (`sealed == false`), this caller's records are guaranteed to ride
+    /// in that write — it just waits for the in-flight result instead of
+    /// issuing a second `write`+`fsync` (counted in [`Wal::coalesced`]).
+    /// If the in-flight commit has already sealed, the caller waits for
+    /// it to finish and then retries, typically becoming the next
+    /// leader. An optional [`Wal::set_commit_window`] makes the leader
+    /// linger before sealing so near-simultaneous drivers fan in.
+    ///
     /// Failure-safe: on error the buffer is **kept** (the records retry
     /// at the next commit) and the file is marked dirty, so the next
     /// attempt first rewinds to the last durable length — a partial
     /// `write` can never strand later frames behind a torn fragment.
+    /// A follower observing its covering commit fail gets an error too;
+    /// because failed commits retain the buffer, any *later* successful
+    /// commit also makes the follower's records durable.
     pub fn commit(&self) -> std::io::Result<()> {
+        loop {
+            let mut gc = self.gc.lock().unwrap();
+            if !gc.committing {
+                // become the leader for the next physical commit
+                gc.committing = true;
+                gc.sealed = false;
+                drop(gc);
+                let window = self.window_nanos.load(Ordering::Relaxed);
+                if window > 0 {
+                    std::thread::sleep(Duration::from_nanos(window));
+                }
+                let result = self.commit_leader();
+                let mut gc = self.gc.lock().unwrap();
+                gc.gen += 1;
+                if result.is_ok() {
+                    gc.last_ok_gen = gc.gen;
+                }
+                gc.committing = false;
+                gc.sealed = false;
+                self.gc_cv.notify_all();
+                return result;
+            }
+            if !gc.sealed {
+                // piggyback: our records were buffered before this point
+                // and the in-flight leader has not captured the buffer
+                // yet (`sealed` flips only under the inner mutex), so
+                // its write is guaranteed to cover them.
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                let target = gc.gen + 1;
+                loop {
+                    if gc.last_ok_gen >= target {
+                        return Ok(());
+                    }
+                    if gc.gen >= target && !gc.committing {
+                        // the covering commit (and no successor) ran and
+                        // failed; the buffer was retained — surface the
+                        // failure so the caller's retry path engages
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::Other,
+                            "group commit failed",
+                        ));
+                    }
+                    gc = self.gc_cv.wait(gc).unwrap();
+                }
+            }
+            // sealed: the in-flight write no longer covers new records —
+            // wait for it to finish, then retry (possibly as leader)
+            let target = gc.gen + 1;
+            while gc.gen < target && gc.committing {
+                gc = self.gc_cv.wait(gc).unwrap();
+            }
+        }
+    }
+
+    /// The physical half of [`Wal::commit`], run by the group-commit
+    /// leader only: capture the buffer (sealing the group), rewind a
+    /// dirty tail, then one `write_all` + `sync_all` for everything
+    /// accumulated.
+    fn commit_leader(&self) -> std::io::Result<()> {
         // wait out open atomic units so their appends land whole
         let _excl = self.unit.write().unwrap();
         let mut inner = self.inner.lock().unwrap();
+        // seal point: from here on, newly appended records are not part
+        // of the buffer this commit writes (gc after inner — see the
+        // lock-order note on the `gc` field)
+        self.gc.lock().unwrap().sealed = true;
         let WalInner { file, buf, synced_len, dirty } = &mut *inner;
         if *dirty {
             file.set_len(*synced_len)?;
@@ -351,11 +534,12 @@ impl Wal {
             return Ok(());
         }
         let mut result = file.write_all(buf);
-        if result.is_ok() && self.fsync.load(std::sync::atomic::Ordering::Relaxed) {
+        if result.is_ok() && self.fsync.load(Ordering::Relaxed) {
             result = file.sync_all();
         }
         match result {
             Ok(()) => {
+                self.commits.fetch_add(1, Ordering::Relaxed);
                 *synced_len += buf.len() as u64;
                 buf.clear();
                 Ok(())
@@ -744,6 +928,74 @@ mod tests {
         assert_eq!(scan.records.len(), 2);
         assert!(matches!(scan.records[0].1, WalRecord::Delete { .. }));
         assert!(matches!(scan.records[1].1, WalRecord::Put { .. }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `append_batch` must be byte-identical to N sequential `append`s:
+    /// same LSNs, same frame bytes, same file contents after commit.
+    #[test]
+    fn append_batch_is_byte_identical_to_sequential_appends() {
+        let dir_a = tmp("batch-a");
+        let dir_b = tmp("batch-b");
+        let wal_a = Wal::create(&dir_a).unwrap();
+        let wal_b = Wal::create(&dir_b).unwrap();
+        let recs = sample_records();
+        let mut last = 0;
+        for r in &recs {
+            last = wal_a.append(r);
+        }
+        let batch_last = wal_b.append_batch(&recs);
+        assert_eq!(batch_last, last, "batch must hand out the same LSN block");
+        wal_a.commit().unwrap();
+        wal_b.commit().unwrap();
+        let bytes_a = std::fs::read(wal_a.path()).unwrap();
+        let bytes_b = std::fs::read(wal_b.path()).unwrap();
+        assert_eq!(bytes_a, bytes_b, "on-disk log must be bit-identical");
+        // empty batch: no LSNs consumed, nothing buffered
+        assert_eq!(wal_b.append_batch(&[]), batch_last);
+        assert_eq!(wal_b.last_lsn(), batch_last);
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    }
+
+    /// Group-commit fan-in, deterministically: an open atomic unit
+    /// blocks the first committer (the leader) *before* it seals the
+    /// buffer, so every further concurrent committer piggybacks on its
+    /// write. One physical commit, N-1 coalesced callers.
+    #[test]
+    fn concurrent_commits_coalesce_into_one_write() {
+        let dir = tmp("coalesce");
+        let wal = Arc::new(Wal::create(&dir).unwrap());
+        let unit = wal.begin_unit();
+        wal.append(&WalRecord::Delete { table: "t".into(), key: "k0".into() });
+        const N: usize = 4;
+        let committers: Vec<_> = (0..N)
+            .map(|i| {
+                let wal = Arc::clone(&wal);
+                std::thread::spawn(move || {
+                    wal.append(&WalRecord::Delete {
+                        table: "t".into(),
+                        key: format!("k{}", i + 1),
+                    });
+                    wal.commit().unwrap();
+                })
+            })
+            .collect();
+        // let every committer reach the group-commit gate: the leader is
+        // parked in `unit.write()` (pre-seal), the rest are followers
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while wal.coalesced() < (N - 1) as u64 {
+            assert!(std::time::Instant::now() < deadline, "followers never queued");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(unit);
+        for c in committers {
+            c.join().unwrap();
+        }
+        assert_eq!(wal.commits(), 1, "one physical write+fsync for all callers");
+        assert_eq!(wal.coalesced(), (N - 1) as u64);
+        let scan = Wal::scan(&wal.path().to_path_buf()).unwrap();
+        assert_eq!(scan.records.len(), N + 1, "every caller's record is durable");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

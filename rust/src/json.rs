@@ -90,6 +90,14 @@ impl Json {
         out
     }
 
+    /// Compact serialization into a caller-owned buffer — the
+    /// allocation-free variant of [`Json::to_string`] for hot encoders
+    /// (the WAL frame writer) that reuse one scratch `String` across
+    /// many records.
+    pub fn write_compact(&self, out: &mut String) {
+        self.write(out);
+    }
+
     /// Pretty serialization (2-space indent) for human-readable snapshots.
     pub fn to_pretty(&self) -> String {
         let mut out = String::new();

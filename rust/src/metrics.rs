@@ -12,7 +12,7 @@
 //! mutex. Cross-stream queries (`list_streams`) merge the shards and sort.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 use crate::durability::wal::{Wal, WalRecord};
 
@@ -47,6 +47,10 @@ pub struct MetricStats {
 /// streams.
 pub struct MetricsService {
     shards: Vec<Mutex<BTreeMap<String, Vec<DataPoint>>>>,
+    /// Shard-guard acquisitions made by mutation paths (emit/remove/raw
+    /// inserts/batches) — same batching observable as
+    /// [`crate::store::MetadataStore::shard_lock_acquisitions`].
+    shard_locks: std::sync::atomic::AtomicU64,
     /// Optional write-ahead log (see [`crate::durability`]): once
     /// attached, every emission appends a record inside its shard
     /// critical section, so per-stream WAL order equals series order.
@@ -57,6 +61,7 @@ impl Default for MetricsService {
     fn default() -> Self {
         MetricsService {
             shards: (0..METRIC_SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            shard_locks: std::sync::atomic::AtomicU64::new(0),
             wal: OnceLock::new(),
         }
     }
@@ -81,20 +86,79 @@ impl MetricsService {
         let _ = self.wal.set(wal);
     }
 
-    /// Publish one point to `stream` (points must be in time order per
-    /// producer; out-of-order points are inserted by timestamp).
-    pub fn emit(&self, stream: &str, time: f64, value: f64) {
-        let mut streams = self.shards[self.shard_of(stream)].lock().unwrap();
-        if let Some(w) = self.wal.get() {
-            w.append(&WalRecord::Emit { stream: stream.to_string(), time, value });
-        }
-        let s = streams.entry(stream.to_string()).or_default();
+    /// Acquire one shard guard on a mutation path, counting it in
+    /// [`MetricsService::shard_lock_acquisitions`].
+    fn lock_shard(&self, idx: usize) -> MutexGuard<'_, BTreeMap<String, Vec<DataPoint>>> {
+        self.shard_locks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.shards[idx].lock().unwrap()
+    }
+
+    /// Shard-guard acquisitions made by mutation paths so far — the
+    /// observable [`MetricsService::emit_batch`] reduces (one
+    /// acquisition per distinct shard per batch instead of one per
+    /// point).
+    pub fn shard_lock_acquisitions(&self) -> u64 {
+        self.shard_locks.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Insert one point into its series — the single insertion rule
+    /// (`emit` and `emit_batch` share it, so series contents cannot
+    /// drift between the per-point and batched paths).
+    fn insert_point(s: &mut Vec<DataPoint>, time: f64, value: f64) {
         match s.last() {
             Some(last) if last.time > time => {
                 let idx = s.partition_point(|p| p.time <= time);
                 s.insert(idx, DataPoint { time, value });
             }
             _ => s.push(DataPoint { time, value }),
+        }
+    }
+
+    /// Publish one point to `stream` (points must be in time order per
+    /// producer; out-of-order points are inserted by timestamp).
+    pub fn emit(&self, stream: &str, time: f64, value: f64) {
+        let mut streams = self.lock_shard(self.shard_of(stream));
+        if let Some(w) = self.wal.get() {
+            w.append(&WalRecord::Emit { stream: stream.to_string(), time, value });
+        }
+        let s = streams.entry(stream.to_string()).or_default();
+        Self::insert_point(s, time, value);
+    }
+
+    /// Publish a batch of `(stream, time, value)` points — observably
+    /// identical to emitting them one at a time in order (same series
+    /// contents, same WAL records in the same order), but each distinct
+    /// shard is locked once per batch and the WAL records land in one
+    /// locked extend ([`Wal::append_batch`]). Guards are acquired in
+    /// ascending shard-index order (the subset discipline of
+    /// `remove_streams`' all-guards acquisition, so multi-guard holders
+    /// cannot deadlock); the WAL append happens with every touched guard
+    /// held, keeping per-stream WAL order equal to series order.
+    pub fn emit_batch(&self, points: &[(&str, f64, f64)]) {
+        if points.is_empty() {
+            return;
+        }
+        let idxs: Vec<usize> = points.iter().map(|(s, _, _)| self.shard_of(s)).collect();
+        let mut unique = idxs.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        let mut guards: BTreeMap<usize, MutexGuard<'_, BTreeMap<String, Vec<DataPoint>>>> =
+            unique.iter().map(|&i| (i, self.lock_shard(i))).collect();
+        if let Some(w) = self.wal.get() {
+            let recs: Vec<WalRecord> = points
+                .iter()
+                .map(|(stream, time, value)| WalRecord::Emit {
+                    stream: (*stream).to_string(),
+                    time: *time,
+                    value: *value,
+                })
+                .collect();
+            w.append_batch(&recs);
+        }
+        for ((stream, time, value), idx) in points.iter().zip(&idxs) {
+            let streams = guards.get_mut(idx).unwrap();
+            let s = streams.entry((*stream).to_string()).or_default();
+            Self::insert_point(s, *time, *value);
         }
     }
 
@@ -107,6 +171,8 @@ impl MetricsService {
     /// or all of it (record at or below the mark ⇒ contained) — the
     /// removed streams can never resurrect on recovery.
     pub fn remove_streams(&self, prefix: &str) -> usize {
+        self.shard_locks
+            .fetch_add(self.shards.len() as u64, std::sync::atomic::Ordering::Relaxed);
         let mut guards: Vec<_> = self.shards.iter().map(|s| s.lock().unwrap()).collect();
         if let Some(w) = self.wal.get() {
             w.append(&WalRecord::RemoveStreams { prefix: prefix.to_string() });
@@ -126,7 +192,7 @@ impl MetricsService {
     /// Raw whole-series insert: the snapshot-restore path. Bypasses the
     /// WAL (recovery must not re-log what it replays).
     pub(crate) fn insert_raw_stream(&self, stream: &str, points: Vec<DataPoint>) {
-        let mut streams = self.shards[self.shard_of(stream)].lock().unwrap();
+        let mut streams = self.lock_shard(self.shard_of(stream));
         streams.insert(stream.to_string(), points);
     }
 
@@ -272,6 +338,57 @@ mod tests {
         assert_eq!(m.remove_streams("job-a-train-"), 0);
         assert!(m.list_streams("job-a").is_empty());
         assert_eq!(m.list_streams("job-b/"), vec!["job-b/evaluations"]);
+    }
+
+    /// `emit_batch` must be observably identical to per-point `emit`s:
+    /// same series (out-of-order inserts included), same WAL bytes, and
+    /// one shard-lock acquisition per distinct shard instead of one per
+    /// point.
+    #[test]
+    fn emit_batch_matches_per_point_emits() {
+        use crate::durability::wal::Wal;
+        use std::sync::Arc;
+        let tmp = |tag: &str| {
+            std::env::temp_dir().join(format!(
+                "amt-metrics-batch-{tag}-{}-{}",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .as_nanos()
+            ))
+        };
+        let (dir_a, dir_b) = (tmp("a"), tmp("b"));
+        let (one, batch) = (MetricsService::new(), MetricsService::new());
+        one.attach_wal(Arc::new(Wal::create(&dir_a).unwrap()));
+        batch.attach_wal(Arc::new(Wal::create(&dir_b).unwrap()));
+        let points: Vec<(String, f64, f64)> = (0..40)
+            .map(|i| (format!("job/{}", i % 7), (40 - i) as f64, i as f64 * 0.25))
+            .collect();
+        for (s, t, v) in &points {
+            one.emit(s, *t, *v);
+        }
+        let before = batch.shard_lock_acquisitions();
+        let borrowed: Vec<(&str, f64, f64)> =
+            points.iter().map(|(s, t, v)| (s.as_str(), *t, *v)).collect();
+        batch.emit_batch(&borrowed);
+        let took = batch.shard_lock_acquisitions() - before;
+        assert!(took <= METRIC_SHARDS as u64, "batch took {took} shard locks");
+        assert!(took < points.len() as u64);
+        assert_eq!(one.list_streams(""), batch.list_streams(""));
+        for s in one.list_streams("") {
+            assert_eq!(one.series(&s), batch.series(&s), "series {s} diverged");
+        }
+        one.wal.get().unwrap().commit().unwrap();
+        batch.wal.get().unwrap().commit().unwrap();
+        assert_eq!(
+            std::fs::read(one.wal.get().unwrap().path()).unwrap(),
+            std::fs::read(batch.wal.get().unwrap().path()).unwrap(),
+            "WAL bytes must be identical"
+        );
+        batch.emit_batch(&[]); // empty batch is a no-op
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
     }
 
     #[test]

@@ -440,17 +440,18 @@ fn push_entry(inner: &Inner, due: f64, weight: f64, name: String) {
     inner.heap_cv.notify_one();
 }
 
-/// Group-commit the WAL (if attached), retrying once. A persistent
-/// failure is counted, never propagated: the records stay buffered in
-/// the WAL (it rewinds any torn fragment and retries them at the next
-/// tick), so no mutation is dropped while the process lives.
+/// Group-commit the WAL (if attached) through the shared
+/// retry-once-and-count helper ([`crate::durability::commit_with_retry`]
+/// — one discipline for both execution planes). Concurrent workers
+/// committing at the same heap-drain boundary coalesce into one
+/// `write`+`fsync` inside the WAL itself.
 fn commit_wal(inner: &Inner) {
     if let Some(wal) = inner.wal.get() {
-        if wal.commit().is_err() && wal.commit().is_err() {
-            inner.wal_commit_errors.fetch_add(1, Ordering::Relaxed);
-        } else if let Some(hook) = inner.post_commit.get() {
-            (**hook)();
-        }
+        crate::durability::commit_with_retry(
+            wal,
+            &inner.wal_commit_errors,
+            inner.post_commit.get(),
+        );
     }
 }
 

@@ -25,7 +25,7 @@
 
 use std::collections::BTreeMap;
 use std::ops::Bound;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 use crate::durability::wal::{Wal, WalRecord};
 use crate::json::{self, Json};
@@ -95,11 +95,66 @@ impl Shard {
     }
 }
 
+/// One operation of a [`MetadataStore::put_batch`] call. Borrowed
+/// fields: the batch path exists to cut per-record overhead, so callers
+/// hand in references and only what actually lands in the store (or the
+/// WAL) is cloned — exactly the clones the per-record path makes.
+pub enum StoreBatchOp<'a> {
+    /// Unconditional put — same semantics as [`MetadataStore::put`]
+    /// (next version derived from the stored item, WAL-logged).
+    Put {
+        /// Target table.
+        table: &'a str,
+        /// Item key.
+        key: &'a str,
+        /// Value to store.
+        value: &'a Json,
+    },
+    /// Version-preserving raw insert — the snapshot-restore / WAL-replay
+    /// path (same semantics as the internal `insert_raw`: bypasses the
+    /// WAL and the write counter; recovery must not re-log what it
+    /// replays).
+    PutRaw {
+        /// Target table.
+        table: &'a str,
+        /// Item key.
+        key: &'a str,
+        /// Exact version to restore.
+        version: Version,
+        /// Value to store.
+        value: &'a Json,
+    },
+    /// Delete — same semantics as [`MetadataStore::delete`] (logged only
+    /// if the item existed).
+    Delete {
+        /// Target table.
+        table: &'a str,
+        /// Item key.
+        key: &'a str,
+    },
+}
+
+impl StoreBatchOp<'_> {
+    fn table_key(&self) -> (&str, &str) {
+        match self {
+            StoreBatchOp::Put { table, key, .. }
+            | StoreBatchOp::PutRaw { table, key, .. }
+            | StoreBatchOp::Delete { table, key } => (table, key),
+        }
+    }
+}
+
 /// In-memory, thread-safe metadata store with DynamoDB-like semantics,
 /// lock-striped into shards hashed by `(table, key)`.
 pub struct MetadataStore {
     shards: Vec<Mutex<Shard>>,
     writes: std::sync::atomic::AtomicU64,
+    /// Shard-guard acquisitions made by mutation paths (put/put_if/
+    /// delete/raw inserts/batches). Observability for the throughput
+    /// plane: batched application takes each distinct shard lock once
+    /// per batch instead of once per record, and the soak bench asserts
+    /// the reduction on this counter.
+    shard_locks: std::sync::atomic::AtomicU64,
     /// Optional write-ahead log: once attached, every successful mutation
     /// appends a record *inside* its shard critical section, so WAL order
     /// equals application order per key (DESIGN.md §10).
@@ -139,6 +194,7 @@ impl MetadataStore {
         MetadataStore {
             shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
             writes: std::sync::atomic::AtomicU64::new(0),
+            shard_locks: std::sync::atomic::AtomicU64::new(0),
             wal: OnceLock::new(),
         }
     }
@@ -160,9 +216,23 @@ impl MetadataStore {
         (h % self.shards.len() as u64) as usize
     }
 
+    /// Acquire one shard guard on a mutation path, counting it in
+    /// [`MetadataStore::shard_lock_acquisitions`].
+    fn lock_shard(&self, idx: usize) -> MutexGuard<'_, Shard> {
+        self.shard_locks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.shards[idx].lock().unwrap()
+    }
+
+    /// Shard-guard acquisitions made by mutation paths so far — the
+    /// observable [`MetadataStore::put_batch`] reduces (one acquisition
+    /// per distinct shard per batch instead of one per record).
+    pub fn shard_lock_acquisitions(&self) -> u64 {
+        self.shard_locks.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
     /// Unconditional put; returns the new version.
     pub fn put(&self, table: &str, key: &str, value: Json) -> Version {
-        let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        let mut shard = self.lock_shard(self.shard_of(table, key));
         let t = shard.tables.entry(table.to_string()).or_default();
         let next = t.get(key).map(|(v, _)| v + 1).unwrap_or(1);
         if let Some(w) = self.wal.get() {
@@ -182,12 +252,100 @@ impl MetadataStore {
     /// path. Bypasses the WAL (recovery must not re-log what it replays)
     /// and the write counter.
     pub(crate) fn insert_raw(&self, table: &str, key: &str, version: Version, value: Json) {
-        let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        let mut shard = self.lock_shard(self.shard_of(table, key));
         shard
             .tables
             .entry(table.to_string())
             .or_default()
             .insert(key.to_string(), (version, value));
+    }
+
+    /// Apply a batch of mutations, locking each distinct shard **once**
+    /// and appending all WAL records in one locked extend
+    /// ([`Wal::append_batch`]) — observably identical to applying the
+    /// ops one at a time in order (same versions, same values, same WAL
+    /// bytes when single-threaded), but with one lock acquisition per
+    /// shard and one WAL buffer operation per batch instead of one per
+    /// record. Returns one version per op, aligned with the input
+    /// (`Delete` yields 0).
+    ///
+    /// Guards are acquired in ascending shard-index order — a subset of
+    /// the total order [`MetadataStore::snapshot`] and
+    /// `capture_for_snapshot` use for their all-shards acquisition, so
+    /// multi-guard holders can never deadlock each other; point ops only
+    /// ever hold one guard. The WAL append happens while every touched
+    /// shard guard is still held, preserving the invariant that WAL
+    /// order equals application order per key.
+    pub fn put_batch(&self, ops: &[StoreBatchOp<'_>]) -> Vec<Version> {
+        if ops.is_empty() {
+            return Vec::new();
+        }
+        let idxs: Vec<usize> = ops
+            .iter()
+            .map(|op| {
+                let (table, key) = op.table_key();
+                self.shard_of(table, key)
+            })
+            .collect();
+        let mut unique = idxs.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        let mut guards: BTreeMap<usize, MutexGuard<'_, Shard>> =
+            unique.iter().map(|&i| (i, self.lock_shard(i))).collect();
+        let log = self.wal.get().is_some();
+        let mut wal_recs: Vec<WalRecord> = Vec::new();
+        let mut versions = Vec::with_capacity(ops.len());
+        let mut writes = 0u64;
+        for (op, idx) in ops.iter().zip(&idxs) {
+            let shard = guards.get_mut(idx).unwrap();
+            match op {
+                StoreBatchOp::Put { table, key, value } => {
+                    let t = shard.tables.entry((*table).to_string()).or_default();
+                    let next = t.get(*key).map(|(v, _)| v + 1).unwrap_or(1);
+                    if log {
+                        wal_recs.push(WalRecord::Put {
+                            table: (*table).to_string(),
+                            key: (*key).to_string(),
+                            version: next,
+                            value: (*value).clone(),
+                        });
+                    }
+                    t.insert((*key).to_string(), (next, (*value).clone()));
+                    writes += 1;
+                    versions.push(next);
+                }
+                StoreBatchOp::PutRaw { table, key, version, value } => {
+                    shard
+                        .tables
+                        .entry((*table).to_string())
+                        .or_default()
+                        .insert((*key).to_string(), (*version, (*value).clone()));
+                    versions.push(*version);
+                }
+                StoreBatchOp::Delete { table, key } => {
+                    let removed = shard
+                        .tables
+                        .get_mut(*table)
+                        .map(|t| t.remove(*key).is_some())
+                        .unwrap_or(false);
+                    if removed && log {
+                        wal_recs.push(WalRecord::Delete {
+                            table: (*table).to_string(),
+                            key: (*key).to_string(),
+                        });
+                    }
+                    versions.push(0);
+                }
+            }
+        }
+        if let Some(w) = self.wal.get() {
+            w.append_batch(&wal_recs);
+        }
+        drop(guards);
+        if writes > 0 {
+            self.writes.fetch_add(writes, std::sync::atomic::Ordering::Relaxed);
+        }
+        versions
     }
 
     /// Point-in-time capture for per-shard snapshots: clones every
@@ -214,7 +372,7 @@ impl MetadataStore {
         value: Json,
         expected: Option<Version>,
     ) -> Result<Version, StoreError> {
-        let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        let mut shard = self.lock_shard(self.shard_of(table, key));
         let t = shard.tables.entry(table.to_string()).or_default();
         let actual = t.get(key).map(|(v, _)| *v);
         match (expected, actual) {
@@ -250,7 +408,7 @@ impl MetadataStore {
 
     /// Delete an item; true if it existed.
     pub fn delete(&self, table: &str, key: &str) -> bool {
-        let mut shard = self.shards[self.shard_of(table, key)].lock().unwrap();
+        let mut shard = self.lock_shard(self.shard_of(table, key));
         let removed = shard
             .tables
             .get_mut(table)
@@ -612,6 +770,77 @@ mod tests {
         assert!(matches!(recs[1], WalRecord::Put { version: 2, .. }));
         assert!(matches!(recs[2], WalRecord::Delete { .. }));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `put_batch` must be observably identical to per-record ops: same
+    /// versions returned, same store contents, same WAL bytes — with one
+    /// shard-lock acquisition per distinct shard instead of one per op.
+    #[test]
+    fn put_batch_matches_per_record_reference() {
+        use crate::durability::wal::Wal;
+        let tmp = |tag: &str| {
+            std::env::temp_dir().join(format!(
+                "amt-store-batch-{tag}-{}-{}",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .as_nanos()
+            ))
+        };
+        let (dir_a, dir_b) = (tmp("a"), tmp("b"));
+        let (one, batch) = (MetadataStore::new(), MetadataStore::new());
+        one.attach_wal(Arc::new(Wal::create(&dir_a).unwrap()));
+        batch.attach_wal(Arc::new(Wal::create(&dir_b).unwrap()));
+        let vals: Vec<Json> = (0..24).map(|i| Json::Num(i as f64 * 0.5)).collect();
+        // per-record reference: re-puts (version bumps), deletes of
+        // existing and missing keys
+        let mut ref_versions = Vec::new();
+        for i in 0..24 {
+            ref_versions.push(one.put("t", &format!("k{}", i % 9), vals[i].clone()));
+        }
+        ref_versions.push(if one.delete("t", "k0") { 0 } else { 0 });
+        one.delete("t", "no-such-key");
+        // the same sequence as one batch
+        let mut ops: Vec<StoreBatchOp<'_>> = Vec::new();
+        let keys: Vec<String> = (0..24).map(|i| format!("k{}", i % 9)).collect();
+        for i in 0..24 {
+            ops.push(StoreBatchOp::Put { table: "t", key: &keys[i], value: &vals[i] });
+        }
+        ops.push(StoreBatchOp::Delete { table: "t", key: "k0" });
+        ops.push(StoreBatchOp::Delete { table: "t", key: "no-such-key" });
+        let before = batch.shard_lock_acquisitions();
+        let versions = batch.put_batch(&ops);
+        let took = batch.shard_lock_acquisitions() - before;
+        assert!(took <= batch.shard_count() as u64, "batch took {took} shard locks");
+        assert!(took < ops.len() as u64);
+        assert_eq!(&versions[..24], &ref_versions[..24]);
+        assert_eq!(versions[24], 0);
+        assert_eq!(versions[25], 0);
+        assert_eq!(one.snapshot(), batch.snapshot(), "store contents diverged");
+        assert_eq!(one.write_count(), batch.write_count());
+        one.wal.get().unwrap().commit().unwrap();
+        batch.wal.get().unwrap().commit().unwrap();
+        assert_eq!(
+            std::fs::read(one.wal.get().unwrap().path()).unwrap(),
+            std::fs::read(batch.wal.get().unwrap().path()).unwrap(),
+            "WAL bytes must be identical"
+        );
+        // PutRaw restores exact versions without logging (replay path)
+        let raw = MetadataStore::new();
+        raw.attach_wal(Arc::new(Wal::create(&tmp("raw")).unwrap()));
+        raw.put_batch(&[StoreBatchOp::PutRaw {
+            table: "t",
+            key: "r",
+            version: 7,
+            value: &Json::Null,
+        }]);
+        assert_eq!(raw.get("t", "r").unwrap().0, 7);
+        assert_eq!(raw.write_count(), 0);
+        assert_eq!(raw.wal.get().unwrap().last_lsn(), 0, "raw inserts are unlogged");
+        assert!(batch.put_batch(&[]).is_empty());
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
     }
 
     #[test]

@@ -303,7 +303,10 @@ fn auto_checkpoint_keeps_wal_bounded_and_state_exact() {
         PlatformConfig::noiseless(),
         Arc::new(NativeBackend),
         SchedulerConfig { workers: 2, batch_steps: 8 },
-        amt::durability::DurabilityOptions { auto_checkpoint_bytes: Some(limit) },
+        amt::durability::DurabilityOptions {
+            auto_checkpoint_bytes: Some(limit),
+            ..Default::default()
+        },
     )
     .unwrap();
     for r in &requests {

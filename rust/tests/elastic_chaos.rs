@@ -361,7 +361,7 @@ fn duplicate_worker_names_rejected() {
     assert_eq!(pool.add_worker(Box::new(leader0)), 0);
     assert_eq!(pool.add_worker(Box::new(leader1)), 1);
 
-    end0.send(&Message::Hello { worker: "dup".into(), backend: "native".into() }).unwrap();
+    end0.send(&Message::Hello { worker: "dup".into(), backend: "native".into(), proto: 2 }).unwrap();
     // wait for lane 0's Hello to be accepted before contending
     let deadline = Instant::now() + Duration::from_secs(30);
     while pool.lane_backends().first() != Some(&Some("native".to_string())) {
@@ -369,7 +369,7 @@ fn duplicate_worker_names_rejected() {
         std::thread::yield_now();
     }
 
-    end1.send(&Message::Hello { worker: "dup".into(), backend: "native".into() }).unwrap();
+    end1.send(&Message::Hello { worker: "dup".into(), backend: "native".into(), proto: 2 }).unwrap();
     let deadline = Instant::now() + Duration::from_secs(30);
     let verdict = loop {
         assert!(Instant::now() < deadline, "leader never answered the duplicate");

@@ -568,3 +568,191 @@ fn prop_json_roundtrip_arbitrary_configs() {
         }
     }
 }
+
+/// The batched mutation paths (`put_batch`, `emit_batch`, and the
+/// `Wal::append_batch` they ride on) must be **bit-identical** to the
+/// per-record paths: same returned versions, same store snapshot, same
+/// metric series, and — single-threaded, with the same record order —
+/// byte-identical WAL files. A recovery replay of the batch-built WAL
+/// (which itself uses the batched `PutRaw` path) must then reproduce
+/// the exact live state.
+#[test]
+fn prop_batched_mutations_bit_identical_to_per_record() {
+    use amt::durability::recovery;
+    use amt::durability::wal::{Wal, WAL_FILE};
+    use amt::json::Json;
+    use amt::metrics::MetricsService;
+    use amt::store::{MetadataStore, StoreBatchOp};
+    use std::sync::Arc;
+
+    enum OpSpec {
+        Put { table: &'static str, key: String, value: Json },
+        Del { table: &'static str, key: String },
+        Emit { stream: String, time: f64, value: f64 },
+    }
+
+    let base = std::env::temp_dir().join(format!(
+        "amt-prop-batch-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0xBA7C);
+        // avoid "tuning_jobs": recovery scans it for resumable jobs
+        let tables = ["training_jobs", "metrics_meta", "misc"];
+        let mut specs: Vec<OpSpec> = Vec::new();
+        for step in 0..220 {
+            match rng.below(6) {
+                0..=2 => specs.push(OpSpec::Put {
+                    table: tables[rng.below(3)],
+                    key: format!("k-{:02}", rng.below(30)),
+                    value: if rng.uniform() < 0.5 {
+                        Json::Num(step as f64 + rng.uniform())
+                    } else {
+                        Json::obj(vec![("s", Json::Str(format!("v{step}")))])
+                    },
+                }),
+                3 => specs.push(OpSpec::Del {
+                    table: tables[rng.below(3)],
+                    key: format!("k-{:02}", rng.below(30)),
+                }),
+                _ => specs.push(OpSpec::Emit {
+                    stream: format!("job-{}/loss", rng.below(6)),
+                    time: step as f64,
+                    value: rng.uniform(),
+                }),
+            }
+        }
+
+        let dir_ref = base.join(format!("ref-{seed}"));
+        let dir_bat = base.join(format!("bat-{seed}"));
+        let wal_ref = Arc::new(Wal::create(&dir_ref).unwrap());
+        let wal_bat = Arc::new(Wal::create(&dir_bat).unwrap());
+        let store_ref = MetadataStore::new();
+        let store_bat = MetadataStore::new();
+        let metrics_ref = MetricsService::new();
+        let metrics_bat = MetricsService::new();
+        store_ref.attach_wal(Arc::clone(&wal_ref));
+        metrics_ref.attach_wal(Arc::clone(&wal_ref));
+        store_bat.attach_wal(Arc::clone(&wal_bat));
+        metrics_bat.attach_wal(Arc::clone(&wal_bat));
+
+        // reference: one call per record, in order
+        let mut versions_ref: Vec<u64> = Vec::new();
+        for spec in &specs {
+            match spec {
+                OpSpec::Put { table, key, value } => {
+                    versions_ref.push(store_ref.put(table, key, value.clone()))
+                }
+                OpSpec::Del { table, key } => {
+                    store_ref.delete(table, key);
+                }
+                OpSpec::Emit { stream, time, value } => {
+                    metrics_ref.emit(stream, *time, *value)
+                }
+            }
+        }
+
+        // batch side: maximal homogeneous runs (store ops vs emits),
+        // randomly split further so batch sizes vary from 1 upward.
+        // Run order preserves record order, so the WAL files must match
+        // byte for byte.
+        let mut split = Rng::new(seed ^ 0x5911);
+        let mut versions_bat: Vec<u64> = Vec::new();
+        let mut i = 0;
+        while i < specs.len() {
+            let store_kind = !matches!(specs[i], OpSpec::Emit { .. });
+            let mut j = i;
+            while j < specs.len()
+                && store_kind != matches!(specs[j], OpSpec::Emit { .. })
+                && (j == i || split.uniform() > 0.3)
+            {
+                j += 1;
+            }
+            if store_kind {
+                let ops: Vec<StoreBatchOp<'_>> = specs[i..j]
+                    .iter()
+                    .map(|s| match s {
+                        OpSpec::Put { table, key, value } => {
+                            StoreBatchOp::Put { table, key, value }
+                        }
+                        OpSpec::Del { table, key } => StoreBatchOp::Delete { table, key },
+                        OpSpec::Emit { .. } => unreachable!(),
+                    })
+                    .collect();
+                let got = store_bat.put_batch(&ops);
+                assert_eq!(got.len(), ops.len(), "seed {seed}");
+                for (op, v) in specs[i..j].iter().zip(&got) {
+                    match op {
+                        OpSpec::Put { .. } => versions_bat.push(*v),
+                        OpSpec::Del { .. } => assert_eq!(*v, 0, "seed {seed}"),
+                        OpSpec::Emit { .. } => unreachable!(),
+                    }
+                }
+            } else {
+                let points: Vec<(&str, f64, f64)> = specs[i..j]
+                    .iter()
+                    .map(|s| match s {
+                        OpSpec::Emit { stream, time, value } => {
+                            (stream.as_str(), *time, *value)
+                        }
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                metrics_bat.emit_batch(&points);
+            }
+            i = j;
+        }
+
+        assert_eq!(versions_ref, versions_bat, "seed {seed}: versions diverged");
+        assert_eq!(
+            store_ref.snapshot(),
+            store_bat.snapshot(),
+            "seed {seed}: store state diverged"
+        );
+        assert_eq!(
+            store_ref.write_count(),
+            store_bat.write_count(),
+            "seed {seed}"
+        );
+        let mut streams = metrics_ref.list_streams("");
+        streams.extend(metrics_bat.list_streams(""));
+        streams.sort();
+        streams.dedup();
+        for s in &streams {
+            assert_eq!(
+                metrics_ref.series(s),
+                metrics_bat.series(s),
+                "seed {seed}: series {s} diverged"
+            );
+        }
+
+        wal_ref.commit().unwrap();
+        wal_bat.commit().unwrap();
+        let bytes_ref = std::fs::read(dir_ref.join(WAL_FILE)).unwrap();
+        let bytes_bat = std::fs::read(dir_bat.join(WAL_FILE)).unwrap();
+        assert_eq!(bytes_ref, bytes_bat, "seed {seed}: WAL files diverged");
+
+        // recovery replays the batch-built WAL through the batched
+        // PutRaw/emit paths and must land on the exact live state
+        let recovered = recovery::open(&dir_bat).unwrap();
+        assert!(recovered.replayed_records > 0, "seed {seed}");
+        assert_eq!(
+            recovered.store.snapshot(),
+            store_bat.snapshot(),
+            "seed {seed}: recovered store diverged"
+        );
+        for s in &streams {
+            assert_eq!(
+                recovered.metrics.series(s),
+                metrics_bat.series(s),
+                "seed {seed}: recovered series {s} diverged"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}

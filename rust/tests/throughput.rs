@@ -1,0 +1,336 @@
+//! Throughput-plane integration tests (DESIGN.md §14): coalesced wire
+//! slices, protocol-generation interop with pre-coalescing workers, and
+//! the cross-driver WAL group commit — all over the loopback transport,
+//! deterministically in one process.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::coordinator::TuningJobOutcome;
+use amt::distributed::leader::{RemoteConfig, RemoteJobSpec, RemoteWorkerPool};
+use amt::distributed::proto::{Message, PollReply, PROTO_VERSION};
+use amt::distributed::transport::{loopback_pair, Transport};
+use amt::distributed::worker::spawn_loopback_worker;
+use amt::durability::wal::WalRecord;
+use amt::durability::DurabilityOptions;
+use amt::gp::NativeBackend;
+use amt::json::Json;
+use amt::metrics::MetricsService;
+use amt::platform::PlatformConfig;
+use amt::scheduler::SchedulerConfig;
+use amt::store::MetadataStore;
+use amt::workflow::ExecutionStatus;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "amt-throughput-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+/// Wire compatibility, old worker → new leader: a scripted generation-1
+/// worker (no `proto` awareness beyond advertising 1, slices reported as
+/// the legacy `StoreDelta` + `PollResult` pair, no `Batch` decoding)
+/// completes a job on a current leader. The leader must never send it a
+/// `Batch` frame, must apply the two-message slice through the batched
+/// mutation paths (versions recomputed at the leader), and must count
+/// two slice messages for the one dispatched poll.
+#[test]
+fn legacy_two_message_worker_interoperates_with_new_leader() {
+    let (leader_end, mut worker_end, _fault) = loopback_pair("legacy");
+
+    let scripted = std::thread::spawn(move || {
+        worker_end
+            .send(&Message::Hello {
+                worker: "legacy".into(),
+                backend: "native".into(),
+                proto: 1,
+            })
+            .unwrap();
+        loop {
+            match worker_end.recv(Duration::from_millis(25)) {
+                Err(_) => return, // leader gone: pool dropped
+                Ok(Some(Message::Batch { .. })) => {
+                    panic!("leader sent Batch to a generation-1 worker")
+                }
+                Ok(Some(Message::Assign { .. })) => {}
+                Ok(Some(Message::PollRequest { job, .. })) => {
+                    let records = vec![
+                        (
+                            1u64,
+                            WalRecord::Put {
+                                table: "training_jobs".into(),
+                                key: format!("{job}-train-0000"),
+                                // worker-local version: the leader must
+                                // ignore it and derive its own
+                                version: 77,
+                                value: Json::obj(vec![(
+                                    "status",
+                                    Json::Str("Completed".into()),
+                                )]),
+                            },
+                        ),
+                        (
+                            2u64,
+                            WalRecord::Emit {
+                                stream: format!("{job}/loss"),
+                                time: 1.0,
+                                value: 0.25,
+                            },
+                        ),
+                    ];
+                    worker_end
+                        .send(&Message::StoreDelta { job: job.clone(), records })
+                        .unwrap();
+                    let outcome = TuningJobOutcome {
+                        name: job.clone(),
+                        evaluations: Vec::new(),
+                        best: None,
+                        total_seconds: 1.0,
+                        total_billable_seconds: 1.0,
+                        status: ExecutionStatus::Succeeded,
+                        retries: 0,
+                    };
+                    worker_end
+                        .send(&Message::PollResult {
+                            job,
+                            reply: PollReply::Complete(Box::new(outcome)),
+                        })
+                        .unwrap();
+                }
+                Ok(Some(Message::Drain)) => {
+                    let _ = worker_end.send(&Message::DrainAck);
+                    return;
+                }
+                Ok(Some(_)) => {}
+                Ok(None) => {
+                    if worker_end.send(&Message::Heartbeat).is_err() {
+                        return;
+                    }
+                }
+            }
+        }
+    });
+
+    let store = Arc::new(MetadataStore::new());
+    let metrics = Arc::new(MetricsService::new());
+    let pool = RemoteWorkerPool::new(
+        vec![Box::new(leader_end)],
+        Arc::clone(&store),
+        Arc::clone(&metrics),
+        None,
+        RemoteConfig::default(),
+    );
+    assert!(pool.register(RemoteJobSpec {
+        request: TuningJobRequest {
+            name: "legacy-job".into(),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 1,
+            max_parallel_jobs: 1,
+            seed: 1,
+            ..Default::default()
+        },
+        platform: PlatformConfig::noiseless(),
+        transfer: Vec::new(),
+        backend: "native".into(),
+    }));
+    pool.activate("legacy-job");
+    let out = pool.wait("legacy-job").expect("legacy worker never completed the job");
+    assert_eq!(out.status, ExecutionStatus::Succeeded);
+
+    // the two-message slice went through the leader's batched apply:
+    // value present, version derived by the leader (1, not the
+    // worker-local 77), metric point landed
+    let (version, value) = store
+        .get("training_jobs", "legacy-job-train-0000")
+        .expect("delta record missing at the leader");
+    assert_eq!(version, 1);
+    assert_eq!(value.get("status").and_then(Json::as_str), Some("Completed"));
+    assert_eq!(metrics.series("legacy-job/loss").len(), 1);
+
+    // legacy wire cost: exactly two frames for the one dispatched slice
+    assert_eq!(pool.polls_dispatched(), 1);
+    assert_eq!(pool.slice_messages(), 2);
+
+    drop(pool);
+    scripted.join().unwrap();
+}
+
+/// Wire compatibility, new worker → scripted leader: a current worker
+/// advertises generation ≥ 2, decodes a `Batch` control burst, and
+/// reports every slice as exactly ONE `SliceResult` frame — never the
+/// legacy `StoreDelta` + `PollResult` pair.
+#[test]
+fn coalesced_worker_reports_each_slice_as_one_frame() {
+    let (mut leader, _fault, handle) = spawn_loopback_worker("coalesce");
+
+    match leader.recv(Duration::from_secs(5)).unwrap() {
+        Some(Message::Hello { proto, .. }) => assert!(proto >= PROTO_VERSION),
+        other => panic!("expected Hello first, got {other:?}"),
+    }
+
+    let request = TuningJobRequest {
+        name: "coalesce-job".into(),
+        objective: "branin".into(),
+        strategy: "random".into(),
+        max_training_jobs: 3,
+        max_parallel_jobs: 1,
+        seed: 7,
+        ..Default::default()
+    };
+    // assign + first poll as one Batch frame: the worker must dispatch
+    // the wrapped messages in order
+    leader
+        .send(&Message::Batch {
+            messages: vec![
+                Message::Assign {
+                    request,
+                    platform: PlatformConfig::noiseless(),
+                    transfer: Vec::new(),
+                    backend: "native".into(),
+                    resume: None,
+                },
+                Message::PollRequest { job: "coalesce-job".into(), max_steps: 8 },
+            ],
+        })
+        .unwrap();
+
+    let mut polls = 1u64;
+    let mut slices = 0u64;
+    let mut total_records = 0usize;
+    let outcome = loop {
+        match leader.recv(Duration::from_secs(10)).unwrap() {
+            Some(Message::Heartbeat) => {}
+            Some(Message::SliceResult { job, records, reply }) => {
+                assert_eq!(job, "coalesce-job");
+                slices += 1;
+                total_records += records.len();
+                match reply {
+                    PollReply::Pending { .. } => {
+                        polls += 1;
+                        leader
+                            .send(&Message::PollRequest {
+                                job: "coalesce-job".into(),
+                                max_steps: 8,
+                            })
+                            .unwrap();
+                    }
+                    PollReply::Complete(out) => break *out,
+                    PollReply::Rejected { reason } => {
+                        panic!("worker rejected the job: {reason}")
+                    }
+                }
+            }
+            Some(Message::StoreDelta { .. }) | Some(Message::PollResult { .. }) => {
+                panic!("current worker sent a legacy two-message slice")
+            }
+            other => panic!("unexpected worker message: {other:?}"),
+        }
+    };
+
+    assert_eq!(outcome.status, ExecutionStatus::Succeeded);
+    assert_eq!(outcome.evaluations.len(), 3);
+    // one frame per slice, and every dispatched poll was answered by
+    // exactly one SliceResult
+    assert_eq!(slices, polls);
+    assert!(total_records > 0, "slices carried no mutation records");
+
+    leader.send(&Message::Drain).unwrap();
+    loop {
+        match leader.recv(Duration::from_secs(5)).unwrap() {
+            Some(Message::DrainAck) => break,
+            Some(Message::Heartbeat) | Some(Message::SliceResult { .. }) => {}
+            other => panic!("expected DrainAck, got {other:?}"),
+        }
+    }
+    drop(leader);
+    handle.join().unwrap();
+}
+
+/// End-to-end throughput smoke (the CI `throughput_smoke` step): a
+/// durable leader with a group-commit window drives a small loopback
+/// fleet. Concurrent lane drivers must share fsyncs (`wal_coalesced >
+/// 0`), and the coalesced wire must average well under the legacy two
+/// frames per slice.
+#[test]
+fn throughput_smoke() {
+    let dir = temp_dir("smoke");
+    let (transports, workers) = {
+        let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let (t, _fault, h) = spawn_loopback_worker(&format!("smoke-{i}"));
+            transports.push(t);
+            handles.push(h);
+        }
+        (transports, handles)
+    };
+    let mut svc = AmtService::open_with_durability(
+        &dir,
+        PlatformConfig::noiseless(),
+        Arc::new(NativeBackend),
+        SchedulerConfig::default(),
+        DurabilityOptions {
+            auto_checkpoint_bytes: None,
+            group_commit_window: Some(Duration::from_millis(3)),
+        },
+    )
+    .unwrap();
+    svc.attach_remote_workers(transports, RemoteConfig::default());
+
+    for i in 0..16u64 {
+        svc.create_tuning_job(TuningJobRequest {
+            name: format!("smoke-{i:02}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 4,
+            max_parallel_jobs: 2,
+            seed: 500 + i,
+            ..Default::default()
+        })
+        .unwrap();
+    }
+    for i in 0..16u64 {
+        let out = svc.wait(&format!("smoke-{i:02}")).unwrap();
+        assert_eq!(out.status, ExecutionStatus::Succeeded);
+        assert_eq!(out.evaluations.len(), 4);
+    }
+
+    let wal = svc.wal().expect("durable service has a WAL");
+    assert!(wal.commits() > 0);
+    assert!(
+        wal.coalesced() > 0,
+        "concurrent lane drivers never shared a group commit"
+    );
+
+    let pool = svc.remote_pool().expect("remote plane attached");
+    let polls = pool.polls_dispatched();
+    let msgs = pool.slice_messages();
+    // the pool shuts its drivers down when the last Arc drops: release
+    // ours before close() so the workers see their links die and exit
+    drop(pool);
+    assert!(polls > 0);
+    // legacy wire cost is exactly 2 frames per slice; the coalesced wire
+    // must stay well under that (1 per answered slice, so ≤ polls — a
+    // few heartbeat-adjacent races are tolerated)
+    assert!(
+        msgs <= polls + polls / 2,
+        "slice messages not halved: {msgs} messages for {polls} polls"
+    );
+
+    // the batched mutation paths really were exercised
+    assert!(svc.store().shard_lock_acquisitions() > 0);
+
+    svc.close().unwrap();
+    for h in workers {
+        let _ = h.join();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

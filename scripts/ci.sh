@@ -33,6 +33,13 @@ cargo test -q
 echo "== chaos smoke: kill + join + drain (64 jobs) =="
 cargo test -q --release --test elastic_chaos fast_chaos_smoke
 
+# throughput smoke (DESIGN.md §14): a small durable loopback fleet with a
+# group-commit window. Asserts concurrent lane drivers shared fsyncs
+# (wal_coalesced > 0) and the coalesced wire stayed well under the legacy
+# two frames per slice.
+echo "== throughput smoke: group commit + coalesced slices (16 jobs) =="
+cargo test -q --release --test throughput throughput_smoke
+
 if [ "${1:-}" = "--bench" ]; then
     echo "== perf trajectory: scripts/bench.sh =="
     scripts/bench.sh
