@@ -2,7 +2,8 @@
 //! encode/decode throughput, loopback leader⇄worker round-trip latency,
 //! a 200-job soak through the loopback `RemoteWorkerPool` (now also
 //! reporting messages-per-slice and store writes-per-lock, DESIGN.md
-//! §14), an elastic kill/join/drain scenario reporting
+//! §14, plus real per-op p50/p99/p999 latency histograms from the
+//! telemetry plane, §15), an elastic kill/join/drain scenario reporting
 //! fleet-size-vs-throughput, a graceful-drain migration-latency
 //! microbench (p50/p99), a batched-vs-per-record delta-application
 //! comparison, and a cross-driver group-commit fan-in scenario. Emits
@@ -199,6 +200,24 @@ fn main() {
         ],
         &stats,
     );
+    // per-op latency histograms from the telemetry plane (DESIGN.md §15):
+    // real p50/p99/p999 for the soak's wire round-trips and store batches
+    let snap = service.telemetry_snapshot();
+    for metric in ["leader.rtt_us", "store.put_batch_us", "scheduler.poll_slice_us"] {
+        if let Some(h) = snap.histogram(metric) {
+            if h.count > 0 {
+                println!(
+                    "  {metric}: n={} p50={}µs p99={}µs p999={}µs",
+                    h.count, h.p50, h.p99, h.p999
+                );
+                report.push_histogram(
+                    &format!("remote_soak_200 {metric}"),
+                    &[("jobs", SOAK_JOBS.to_string()), ("metric", metric.to_string())],
+                    h,
+                );
+            }
+        }
+    }
     drop(pool);
     drop(service);
     for h in handles {

@@ -16,7 +16,12 @@
 //! overrides the output directory) with p50/p95 API latency in the
 //! standard bench schema and jobs/sec, p99 latency and store-write count
 //! in the entry params — `scripts/bench.sh` diffs it like the other
-//! BENCH files.
+//! BENCH files. Each spike also emits the telemetry plane's per-op
+//! latency histograms (`scheduler.poll_slice_us`, `store.put_batch_us`,
+//! and for distributed spikes `wal.commit_us` / `leader.rtt_us`) with
+//! real p50/p99/p999 in the entry params, plus one telemetry-overhead
+//! entry comparing instrumented vs `telemetry::set_enabled(false)`
+//! throughput (budget: ≤ 3%, DESIGN.md §15).
 //!
 //! With `--distributed N`, each spike additionally runs through the
 //! distributed plane (DESIGN.md §11): N loopback workers hosting the
@@ -202,11 +207,85 @@ fn run_spike(num_jobs: usize, distributed: usize, report: &mut BenchReport) {
         retries
     );
 
+    // per-op latency histograms from the telemetry plane (DESIGN.md §15)
+    let snap = service.telemetry_snapshot();
+    let plane_tag = if distributed > 0 {
+        format!(" distributed={distributed}")
+    } else {
+        String::new()
+    };
+    for metric in
+        ["scheduler.poll_slice_us", "store.put_batch_us", "wal.commit_us", "leader.rtt_us"]
+    {
+        if let Some(h) = snap.histogram(metric) {
+            if h.count > 0 {
+                report.push_histogram(
+                    &format!("soak {metric} jobs={num_jobs}{plane_tag}"),
+                    &[("jobs", num_jobs.to_string()), ("metric", metric.to_string())],
+                    h,
+                );
+            }
+        }
+    }
+
     // remote workers drain when the service (and its pool) drops
     drop(service);
     for h in worker_handles {
         let _ = h.join();
     }
+}
+
+/// Telemetry-overhead check: the same in-process spike run instrumented
+/// and with `telemetry::set_enabled(false)`, reporting the throughput of
+/// each and the fraction lost to instrumentation. The plane's budget is
+/// ≤ 3% (DESIGN.md §15); a miss is reported loudly but not fatal —
+/// wall-clock ratios on shared CI hardware are too noisy to assert on.
+fn run_overhead_compare(num_jobs: usize, report: &mut BenchReport) {
+    fn timed_spike(num_jobs: usize, tag: &str) -> f64 {
+        let service = AmtService::new(PlatformConfig::default());
+        let started = Instant::now();
+        for i in 0..num_jobs {
+            let request = TuningJobRequest {
+                name: format!("{tag}-{i:04}"),
+                objective: "branin".into(),
+                strategy: "random".into(),
+                max_training_jobs: 5,
+                max_parallel_jobs: 5,
+                seed: i as u64,
+                ..Default::default()
+            };
+            service.create_tuning_job(request).expect("create must be accepted");
+        }
+        for i in 0..num_jobs {
+            service.wait(&format!("{tag}-{i:04}")).expect("job must terminate");
+        }
+        num_jobs as f64 / started.elapsed().as_secs_f64()
+    }
+    eprintln!("telemetry-overhead check: {num_jobs} jobs instrumented vs disabled...");
+    let on = timed_spike(num_jobs, "ovh-on");
+    amt::telemetry::set_enabled(false);
+    let off = timed_spike(num_jobs, "ovh-off");
+    amt::telemetry::set_enabled(true);
+    let overhead = (off - on) / off;
+    println!(
+        "\ntelemetry overhead: {on:.1} jobs/s instrumented vs {off:.1} jobs/s disabled \
+         ({:+.2}% throughput)",
+        -overhead * 100.0
+    );
+    if overhead > 0.03 {
+        eprintln!("WARNING: telemetry overhead {:.2}% exceeds the 3% budget", overhead * 100.0);
+    }
+    let stats = BenchStats::from_samples(vec![1.0 / on, 1.0 / off]);
+    report.push(
+        &format!("soak telemetry overhead jobs={num_jobs}"),
+        &[
+            ("jobs", num_jobs.to_string()),
+            ("jobs_per_sec_instrumented", format!("{on:.2}")),
+            ("jobs_per_sec_disabled", format!("{off:.2}")),
+            ("overhead_frac", format!("{overhead:.4}")),
+        ],
+        &stats,
+    );
 }
 
 /// One elastic chaos spike (DESIGN.md §13): `num_jobs` tuning jobs over
@@ -358,6 +437,7 @@ fn main() {
     if chaos {
         run_chaos(*sizes.iter().max().unwrap(), &mut report);
     }
+    run_overhead_compare(*sizes.iter().max().unwrap(), &mut report);
     match report.write() {
         Ok(path) => eprintln!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_soak.json: {e}"),

@@ -35,6 +35,7 @@ use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::space::{config_from_json, Value};
 use crate::store::MetadataStore;
 use crate::strategies::{observations_from_json, observations_to_json, Observation, Strategy};
+use crate::telemetry::{self, MetricSnapshot, MetricValue, TelemetrySnapshot};
 use crate::warmstart::{transfer, ParentJob, TransferOptions};
 
 /// Page size for store scans performed inside API handlers (warm-start
@@ -513,6 +514,59 @@ impl AmtService {
         Arc::clone(&self.metrics)
     }
 
+    /// One typed, JSON-serializable view of **every** metric this
+    /// service exports (DESIGN.md §15): the per-instance registries of
+    /// the store (`store.*`), metrics sink (`metrics.*`), local
+    /// scheduler (`scheduler.*`), WAL (`wal.*`, when durable) and
+    /// remote pool (`leader.*`, when attached), plus the service-level
+    /// API/availability counters (`api.*`), recovery-on-open stats
+    /// (`recovery.*`) and trace-sink health (`trace.*`). Backs
+    /// `amt stats` and the bench harness's histogram emission.
+    pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
+        let rs = self.recovery_stats;
+        let counter = |name: &str, v: u64| MetricSnapshot {
+            name: name.to_string(),
+            value: MetricValue::Counter(v),
+        };
+        let service = vec![
+            counter("api.calls", self.api_calls.load(Ordering::Relaxed)),
+            counter("api.errors", self.api_errors.load(Ordering::Relaxed)),
+            counter("recovery.fast_resumed", rs.fast_resumed as u64),
+            counter("recovery.scratch_resumed", rs.scratch_resumed as u64),
+            counter("recovery.replayed_proposals", rs.replayed_proposals),
+            counter("trace.minted", telemetry::trace::minted()),
+            counter("trace.dropped", telemetry::trace::dropped()),
+        ];
+        let mut parts = vec![
+            service,
+            self.store.telemetry_metrics(),
+            self.metrics.telemetry_metrics(),
+            self.scheduler.telemetry_metrics(),
+        ];
+        if let Some(wal) = &self.wal {
+            parts.push(wal.telemetry_metrics());
+        }
+        if let Some(remote) = &self.remote {
+            parts.push(remote.telemetry_metrics());
+        }
+        TelemetrySnapshot::from_parts(parts)
+    }
+
+    /// Drain the process-global slice-lifecycle trace ring (oldest
+    /// first, destructive). `amt trace <job>` and post-run analysis
+    /// consume this; tests sharing the process should prefer
+    /// [`AmtService::traces_for`].
+    pub fn drain_traces(&self) -> Vec<telemetry::trace::TraceEvent> {
+        telemetry::trace::drain()
+    }
+
+    /// Non-destructive view of one job's trace events, oldest first
+    /// (propose → dispatch → worker_poll → delta_apply → group_commit →
+    /// outcome for a distributed job).
+    pub fn traces_for(&self, job: &str) -> Vec<telemetry::trace::TraceEvent> {
+        telemetry::trace::for_job(job)
+    }
+
     fn count_call(&self) {
         self.api_calls.fetch_add(1, Ordering::Relaxed);
     }
@@ -647,6 +701,10 @@ impl AmtService {
         } else {
             Some(observations_to_json(&transferred))
         };
+
+        // mint the job's lifecycle trace id at submission (the remote
+        // plane's register() re-mint is an idempotent no-op)
+        telemetry::trace::ensure_trace(&request.name);
 
         // registry-objective jobs dispatch to the remote plane when one
         // is attached AND a live worker runs a compatible surrogate

@@ -82,6 +82,7 @@ use crate::platform::PlatformConfig;
 use crate::scheduler::{QueueEntry, TenantQuotas};
 use crate::store::{MetadataStore, StoreBatchOp};
 use crate::strategies::Observation;
+use crate::telemetry::{self, Counter, Gauge, Histogram, MetricSnapshot};
 use crate::workflow::ExecutionStatus;
 
 use super::proto::{Message, PollReply};
@@ -207,37 +208,52 @@ struct LeaderInner {
     shutdown: AtomicBool,
     seq: AtomicU64,
     quotas: TenantQuotas,
+    /// This pool's metric registry (every counter/gauge/histogram below
+    /// is a handle into it, under `leader.*` names). Per-instance, never
+    /// global: tests assert exact counts on isolated pools.
+    telemetry: telemetry::Registry,
     /// Worker-death repairs that requeued from a delta-acked snapshot
     /// (O(remaining)) vs from scratch, and — for the scratch leg — how
     /// many already-proposed evaluations the rerun re-executes.
-    snapshot_requeues: AtomicU64,
-    scratch_requeues: AtomicU64,
-    replayed_proposals: AtomicU64,
+    /// Registry names: `leader.snapshot_requeues` /
+    /// `leader.scratch_requeues` / `leader.replayed_proposals`.
+    snapshot_requeues: Arc<Counter>,
+    scratch_requeues: Arc<Counter>,
+    replayed_proposals: Arc<Counter>,
     /// Group commits that failed even after a retry (mirrors
     /// `Scheduler::wal_commit_errors` for the remote plane).
-    wal_commit_errors: AtomicU64,
+    /// Registry name: `leader.wal_commit_errors`.
+    wal_commit_errors: Arc<Counter>,
     /// Worker→leader slice-carrying messages received (`SliceResult`,
     /// plus legacy `StoreDelta` / `PollResult`). Against `polls_sent`
     /// this is the throughput plane's frames-per-slice observable:
     /// coalesced workers hold it at ~1 per slice, two-message workers
-    /// at ~2.
-    slice_messages: AtomicU64,
+    /// at ~2. Registry name: `leader.slice_messages`.
+    slice_messages: Arc<Counter>,
     /// Poll slices dispatched across all jobs (pool-wide denominator
-    /// for `slice_messages`).
-    polls_sent: AtomicU64,
+    /// for `slice_messages`). Registry name: `leader.polls_dispatched`.
+    polls_sent: Arc<Counter>,
+    /// Dispatch→verdict round-trip latency per slice (µs), recorded on
+    /// every slice that returns a verdict. Registry name:
+    /// `leader.rtt_us`.
+    rtt_us: Arc<Histogram>,
     /// Invoked after every successful WAL group commit (the durable
     /// service's auto-checkpoint trigger — same hook as the scheduler's,
     /// so the WAL stays bounded no matter which plane commits).
     post_commit: std::sync::OnceLock<Arc<dyn Fn() + Send + Sync>>,
     /// Elastic-fleet liveness counters: workers admitted after
     /// construction, lanes drained gracefully to completion, and queued
-    /// jobs migrated by the work-stealing rebalancer.
-    joins: AtomicU64,
-    drains: AtomicU64,
-    steals: AtomicU64,
+    /// jobs migrated by the work-stealing rebalancer. Registry names:
+    /// `leader.joins` / `leader.drains` / `leader.steals`.
+    joins: Arc<Counter>,
+    drains: Arc<Counter>,
+    steals: Arc<Counter>,
     /// Jobs parked with no compatible lane (drain-of-last-lane): the
-    /// rebalancer's cheap "is there orphaned work" signal.
-    parked_jobs: AtomicUsize,
+    /// rebalancer's cheap "is there orphaned work" signal. All
+    /// mutations happen under the `route` lock (whose release fences
+    /// them); the lock-free read in `needs_rebalance` is a tolerant
+    /// pre-check. Registry name: `leader.parked_jobs`.
+    parked_jobs: Arc<Gauge>,
     /// Serializes placement decisions: activation, death repair,
     /// drain migration, work stealing and quota-release routing, so
     /// concurrent worker deaths cannot strand or duplicate a job's
@@ -264,6 +280,7 @@ impl RemoteWorkerPool {
         wal: Option<Arc<Wal>>,
         config: RemoteConfig,
     ) -> RemoteWorkerPool {
+        let reg = telemetry::Registry::new();
         let inner = Arc::new(LeaderInner {
             store,
             metrics,
@@ -283,16 +300,18 @@ impl RemoteWorkerPool {
             shutdown: AtomicBool::new(false),
             seq: AtomicU64::new(0),
             quotas: TenantQuotas::new(),
-            snapshot_requeues: AtomicU64::new(0),
-            scratch_requeues: AtomicU64::new(0),
-            replayed_proposals: AtomicU64::new(0),
-            wal_commit_errors: AtomicU64::new(0),
-            slice_messages: AtomicU64::new(0),
-            polls_sent: AtomicU64::new(0),
-            joins: AtomicU64::new(0),
-            drains: AtomicU64::new(0),
-            steals: AtomicU64::new(0),
-            parked_jobs: AtomicUsize::new(0),
+            snapshot_requeues: reg.counter("leader.snapshot_requeues"),
+            scratch_requeues: reg.counter("leader.scratch_requeues"),
+            replayed_proposals: reg.counter("leader.replayed_proposals"),
+            wal_commit_errors: reg.counter("leader.wal_commit_errors"),
+            slice_messages: reg.counter("leader.slice_messages"),
+            polls_sent: reg.counter("leader.polls_dispatched"),
+            rtt_us: reg.histogram("leader.rtt_us"),
+            joins: reg.counter("leader.joins"),
+            drains: reg.counter("leader.drains"),
+            steals: reg.counter("leader.steals"),
+            parked_jobs: reg.gauge("leader.parked_jobs"),
+            telemetry: reg,
             post_commit: std::sync::OnceLock::new(),
             route: Mutex::new(()),
             drivers: Mutex::new(Vec::new()),
@@ -336,41 +355,56 @@ impl RemoteWorkerPool {
 
     /// WAL group commits that failed even after a retry (records stay
     /// buffered in the WAL and retry at later slices — alert on this,
-    /// exactly like `Scheduler::wal_commit_errors`).
+    /// exactly like `Scheduler::wal_commit_errors`). Shim over registry
+    /// metric `leader.wal_commit_errors`; prefer
+    /// [`RemoteWorkerPool::telemetry_metrics`].
     pub fn wal_commit_errors(&self) -> u64 {
-        self.inner.wal_commit_errors.load(Ordering::Relaxed)
+        self.inner.wal_commit_errors.get()
     }
 
     /// Worker→leader slice-carrying messages received across the pool's
     /// lifetime (one per `SliceResult`; legacy workers contribute one
-    /// per `StoreDelta` *and* one per `PollResult`).
+    /// per `StoreDelta` *and* one per `PollResult`). Shim over registry
+    /// metric `leader.slice_messages`.
     pub fn slice_messages(&self) -> u64 {
-        self.inner.slice_messages.load(Ordering::Relaxed)
+        self.inner.slice_messages.get()
     }
 
     /// Poll slices dispatched across all jobs — divide
     /// [`RemoteWorkerPool::slice_messages`] by this for the pool's
-    /// frames-per-slice ratio (~1 coalesced, ~2 legacy).
+    /// frames-per-slice ratio (~1 coalesced, ~2 legacy). Shim over
+    /// registry metric `leader.polls_dispatched`.
     pub fn polls_dispatched(&self) -> u64 {
-        self.inner.polls_sent.load(Ordering::Relaxed)
+        self.inner.polls_sent.get()
     }
 
     /// Worker-death repairs that requeued a job from its last
-    /// delta-acked resume snapshot (the O(remaining-work) path).
+    /// delta-acked resume snapshot (the O(remaining-work) path). Shim
+    /// over registry metric `leader.snapshot_requeues`.
     pub fn snapshot_requeues(&self) -> u64 {
-        self.inner.snapshot_requeues.load(Ordering::Relaxed)
+        self.inner.snapshot_requeues.get()
     }
 
     /// Worker-death repairs that fell back to reset + replay-from-seed.
+    /// Shim over registry metric `leader.scratch_requeues`.
     pub fn scratch_requeues(&self) -> u64 {
-        self.inner.scratch_requeues.load(Ordering::Relaxed)
+        self.inner.scratch_requeues.get()
     }
 
     /// Strategy proposals re-executed across all scratch requeues (the
     /// evaluations that already existed when the worker died; snapshot
-    /// requeues contribute 0 by construction).
+    /// requeues contribute 0 by construction). Shim over registry
+    /// metric `leader.replayed_proposals`.
     pub fn replayed_proposals(&self) -> u64 {
-        self.inner.replayed_proposals.load(Ordering::Relaxed)
+        self.inner.replayed_proposals.get()
+    }
+
+    /// Point-in-time snapshot of this pool's metric registry (names
+    /// under `leader.*`, including the `leader.rtt_us` dispatch→verdict
+    /// latency histogram) — one part of
+    /// [`crate::api::AmtService::telemetry_snapshot`].
+    pub fn telemetry_metrics(&self) -> Vec<MetricSnapshot> {
+        self.inner.telemetry.snapshot()
     }
 
     /// True when at least one live worker advertises `backend` — the
@@ -443,21 +477,23 @@ impl RemoteWorkerPool {
         self.inner.drivers.lock().unwrap().push(handle);
     }
 
-    /// Workers admitted after construction (late joins).
+    /// Workers admitted after construction (late joins). Shim over
+    /// registry metric `leader.joins`.
     pub fn joins(&self) -> u64 {
-        self.inner.joins.load(Ordering::Relaxed)
+        self.inner.joins.get()
     }
 
-    /// Lanes drained gracefully to completion.
+    /// Lanes drained gracefully to completion. Shim over registry
+    /// metric `leader.drains`.
     pub fn drains(&self) -> u64 {
-        self.inner.drains.load(Ordering::Relaxed)
+        self.inner.drains.get()
     }
 
     /// Queued jobs migrated between lanes by the work-stealing
     /// rebalancer (each rides its snapshot: zero re-executed
-    /// proposals).
+    /// proposals). Shim over registry metric `leader.steals`.
     pub fn steals(&self) -> u64 {
-        self.inner.steals.load(Ordering::Relaxed)
+        self.inner.steals.get()
     }
 
     /// Install a hook invoked after every successful WAL group commit
@@ -485,7 +521,7 @@ impl RemoteWorkerPool {
             return false;
         }
         jobs.insert(
-            name,
+            name.clone(),
             Arc::new(RemoteSlot {
                 spec,
                 weight,
@@ -503,6 +539,9 @@ impl RemoteWorkerPool {
         );
         drop(jobs);
         self.inner.running.fetch_add(1, Ordering::Relaxed);
+        // mint the job's trace id at submission: the `propose` phase is
+        // the lifecycle anchor every later wire-carried phase hangs off
+        telemetry::trace::ensure_trace(&name);
         true
     }
 
@@ -618,7 +657,7 @@ fn admit_worker(inner: &Arc<LeaderInner>, transport: Box<dyn Transport>, late: b
     }
     inner.live.fetch_add(1, Ordering::SeqCst);
     if late {
-        inner.joins.fetch_add(1, Ordering::Relaxed);
+        inner.joins.inc();
     }
     let handle = {
         let inner = Arc::clone(inner);
@@ -820,7 +859,11 @@ fn apply_delta(inner: &LeaderInner, records: &[(u64, WalRecord)]) {
 /// in-flight write+fsync ([`Wal::commit`]'s group-commit ticket).
 fn commit_wal(inner: &LeaderInner) {
     if let Some(w) = &inner.wal {
-        crate::durability::commit_with_retry(w, &inner.wal_commit_errors, inner.post_commit.get());
+        crate::durability::commit_with_retry(
+            w,
+            inner.wal_commit_errors.as_atomic(),
+            inner.post_commit.get(),
+        );
     }
 }
 
@@ -935,17 +978,16 @@ fn on_worker_death(inner: &LeaderInner, idx: usize, held: Option<QueueEntry>) {
         if has_snapshot && record_in_progress {
             // O(remaining) leg: leader state == snapshot state; the
             // re-Assign on the new lane ships the snapshot
-            inner.snapshot_requeues.fetch_add(1, Ordering::Relaxed);
+            inner.snapshot_requeues.inc();
         } else {
             // scratch leg: reset partial records, reseed, replay
             *slot.last_ckpt.lock().unwrap() = None;
-            inner.scratch_requeues.fetch_add(1, Ordering::Relaxed);
-            inner.replayed_proposals.fetch_add(
+            inner.scratch_requeues.inc();
+            inner.replayed_proposals.add(
                 inner
                     .store
                     .list_keys("training_jobs", &format!("{name}-train-"))
                     .len() as u64,
-                Ordering::Relaxed,
             );
             reset_and_reseed(inner, &slot, &name);
         }
@@ -994,7 +1036,7 @@ fn release_quota(inner: &LeaderInner, slot: &RemoteSlot) {
     } else if idx == NO_LANE && released.state.lock().unwrap().outcome.is_none() {
         // drained off its lane while quota-parked: keep it parked
         *released.parked_entry.lock().unwrap() = Some(entry);
-        inner.parked_jobs.fetch_add(1, Ordering::SeqCst);
+        inner.parked_jobs.add(1);
     }
     // otherwise the job finished or failed meanwhile: entry is obsolete
 }
@@ -1006,7 +1048,7 @@ const STEAL_THRESHOLD: usize = 2;
 /// Cheap pre-check for the idle-driver rebalance trigger: parked work
 /// exists, or eligible lane depths skew past [`STEAL_THRESHOLD`].
 fn needs_rebalance(inner: &LeaderInner) -> bool {
-    if inner.parked_jobs.load(Ordering::SeqCst) > 0 {
+    if inner.parked_jobs.get() > 0 {
         return true;
     }
     let lanes = lanes_snapshot(inner);
@@ -1044,7 +1086,7 @@ fn rebalance(inner: &LeaderInner) {
 
 /// Re-place jobs parked by a last-lane drain (route lock held).
 fn place_orphans_locked(inner: &LeaderInner) {
-    if inner.parked_jobs.load(Ordering::SeqCst) == 0 {
+    if inner.parked_jobs.get() == 0 {
         return;
     }
     let slots: Vec<Arc<RemoteSlot>> = {
@@ -1054,7 +1096,7 @@ fn place_orphans_locked(inner: &LeaderInner) {
     for slot in slots {
         let Some(entry) = slot.parked_entry.lock().unwrap().take() else { continue };
         if slot.state.lock().unwrap().outcome.is_some() {
-            inner.parked_jobs.fetch_sub(1, Ordering::SeqCst);
+            inner.parked_jobs.add(-1);
             continue;
         }
         match pick_lane(inner, &slot.spec.backend) {
@@ -1062,7 +1104,7 @@ fn place_orphans_locked(inner: &LeaderInner) {
                 lane(inner, idx).load.fetch_add(1, Ordering::Relaxed);
                 slot.lane.store(idx, Ordering::SeqCst);
                 repush_entry(inner, idx, entry);
-                inner.parked_jobs.fetch_sub(1, Ordering::SeqCst);
+                inner.parked_jobs.add(-1);
             }
             None => {
                 // still no compatible lane: stay parked
@@ -1150,7 +1192,7 @@ fn steal_one_locked(inner: &LeaderInner) -> bool {
     slot.started.store(false, Ordering::SeqCst);
     slot.stop_sent.store(false, Ordering::SeqCst);
     repush_entry(inner, t, entry);
-    inner.steals.fetch_add(1, Ordering::Relaxed);
+    inner.steals.inc();
     true
 }
 
@@ -1200,7 +1242,7 @@ fn drain_lane(inner: &LeaderInner, idx: usize) {
                 slot.lane.store(NO_LANE, Ordering::SeqCst);
                 if let Some(entry) = entry {
                     *slot.parked_entry.lock().unwrap() = Some(entry);
-                    inner.parked_jobs.fetch_add(1, Ordering::SeqCst);
+                    inner.parked_jobs.add(1);
                 }
                 // entry None: quota-parked — the release path parks it
             }
@@ -1229,7 +1271,7 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
             let _ = transport.send(&Message::Drain);
             let _ = transport.recv(Duration::from_millis(500));
             retire_lane(inner, idx);
-            inner.drains.fetch_add(1, Ordering::Relaxed);
+            inner.drains.inc();
             return;
         }
         let popped = { lane_ref.heap.lock().unwrap().pop() };
@@ -1325,6 +1367,9 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                     transfer: slot.spec.transfer.clone(),
                     backend: slot.spec.backend.clone(),
                     resume,
+                    // a gen-3 worker echoes this id on every
+                    // SliceResult; earlier generations never see it
+                    trace: telemetry::trace::trace_id(&name),
                 });
             }
             if slot.stop.load(Ordering::Relaxed)
@@ -1333,7 +1378,7 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 burst.push(Message::Stop { job: name.clone() });
             }
             slot.polls.fetch_add(1, Ordering::Relaxed);
-            inner.polls_sent.fetch_add(1, Ordering::Relaxed);
+            inner.polls_sent.inc();
             burst.push(Message::PollRequest {
                 job: name.clone(),
                 max_steps: inner.batch_steps,
@@ -1353,9 +1398,11 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
             on_worker_death(inner, idx, Some(entry));
             return;
         }
+        telemetry::trace::event_for(&name, "dispatch");
 
         // await the slice's verdict, applying deltas as they arrive
-        let mut sent_at = Instant::now();
+        let dispatched = Instant::now();
+        let mut sent_at = dispatched;
         let reply = loop {
             if inner.shutdown.load(Ordering::SeqCst) {
                 if quota_held {
@@ -1365,15 +1412,25 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 return;
             }
             match transport.recv(slice) {
-                Ok(Some(Message::SliceResult { job, records, reply })) => {
+                Ok(Some(Message::SliceResult { job, records, reply, trace })) => {
                     last_seen = Instant::now();
                     sent_at = last_seen;
-                    inner.slice_messages.fetch_add(1, Ordering::Relaxed);
+                    inner.slice_messages.inc();
+                    // the echoed trace id proves the wire field made
+                    // the full round trip — a pre-gen-3 worker echoes
+                    // nothing and the phase is simply absent
+                    if job == name
+                        && trace.is_some()
+                        && trace == telemetry::trace::trace_id(&name)
+                    {
+                        telemetry::trace::event_for(&name, "worker_poll");
+                    }
                     // one coalesced frame: mutations apply before the
                     // verdict is acted on, exactly as in the legacy
                     // delta-then-result order
                     apply_delta(inner, &records);
                     if job == name {
+                        telemetry::trace::event_for(&name, "delta_apply");
                         break Ok(reply);
                     }
                     // out-of-band result (mis-poll rejection): ignore
@@ -1382,12 +1439,12 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 Ok(Some(Message::StoreDelta { records, .. })) => {
                     last_seen = Instant::now();
                     sent_at = last_seen;
-                    inner.slice_messages.fetch_add(1, Ordering::Relaxed);
+                    inner.slice_messages.inc();
                     apply_delta(inner, &records);
                 }
                 Ok(Some(Message::PollResult { job, reply })) => {
                     last_seen = Instant::now();
-                    inner.slice_messages.fetch_add(1, Ordering::Relaxed);
+                    inner.slice_messages.inc();
                     if job == name {
                         break Ok(reply);
                     }
@@ -1412,13 +1469,17 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 Err(_) => break Err(()),
             }
         };
+        if reply.is_ok() && telemetry::enabled() {
+            inner.rtt_us.record_duration(dispatched.elapsed());
+        }
         match reply {
             Ok(PollReply::Pending { due }) => {
-                push_lane_entry(inner, idx, due, slot.weight, name);
+                push_lane_entry(inner, idx, due, slot.weight, name.clone());
                 if quota_held {
                     release_quota(inner, &slot);
                 }
                 commit_wal(inner);
+                telemetry::trace::event_for(&name, "group_commit");
             }
             Ok(PollReply::Complete(outcome)) => {
                 if quota_held {
@@ -1426,13 +1487,20 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 }
                 // durability before acknowledgment, like the scheduler
                 commit_wal(inner);
+                telemetry::trace::event_for(&name, "group_commit");
                 publish(inner, &slot, *outcome);
+                telemetry::trace::event_for(&name, "outcome");
+                // the ring keeps the job's events; the name→id binding
+                // is released so the sink's map stays bounded
+                telemetry::trace::forget(&name);
             }
             Ok(PollReply::Rejected { reason }) => {
                 if quota_held {
                     release_quota(inner, &slot);
                 }
                 mark_failed(inner, &slot, &name, &format!("worker rejected job: {reason}"));
+                telemetry::trace::event_for(&name, "outcome");
+                telemetry::trace::forget(&name);
             }
             Err(()) => {
                 if quota_held {

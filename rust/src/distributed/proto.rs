@@ -47,9 +47,15 @@ use crate::workflow::ExecutionStatus;
 /// `Hello`. Generation 1 (the field absent on the wire) reports slices
 /// as `StoreDelta` + `PollResult` pairs and does not decode
 /// [`Message::Batch`]; generation 2 coalesces slices into
-/// [`Message::SliceResult`] and accepts batched control bursts. Leaders
-/// never send a `Batch` to a generation-1 lane.
-pub const PROTO_VERSION: u32 = 2;
+/// [`Message::SliceResult`] and accepts batched control bursts; a
+/// generation-3 peer additionally carries the optional telemetry
+/// `trace` id on `Assign`/`SliceResult` (DESIGN.md §15). The trace
+/// field is absent-on-wire compatible in both directions: older
+/// decoders ignore the extra key, and newer decoders map an absent or
+/// null key to `None` — so generation bumps never gate it; it simply
+/// drops off cleanly against a pre-trace peer. Leaders still never send
+/// a `Batch` to a generation-1 lane.
+pub const PROTO_VERSION: u32 = 3;
 
 /// Verdict of one remote poll slice.
 #[derive(Debug)]
@@ -105,6 +111,11 @@ pub enum Message {
         backend: String,
         /// Resume snapshot for a requeued job (`None` = fresh start).
         resume: Option<Json>,
+        /// Telemetry trace id minted at submission (DESIGN.md §15);
+        /// `None` when tracing is off or the peer predates it. The
+        /// worker remembers it and echoes it on every `SliceResult`
+        /// for this job.
+        trace: Option<u64>,
     },
     /// Run one bounded poll slice of an assigned job.
     PollRequest {
@@ -152,6 +163,10 @@ pub enum Message {
         records: Vec<(u64, WalRecord)>,
         /// Slice verdict (as [`Message::PollResult`]).
         reply: PollReply,
+        /// Echo of the job's `Assign` trace id — lets the leader pin
+        /// the `worker_poll` trace phase to the exact slice that the
+        /// remote end ran. `None` from pre-trace workers.
+        trace: Option<u64>,
     },
     /// Several messages in one frame, dispatched in order by the
     /// receiver. The leader wraps per-lane control bursts (rebalance
@@ -194,6 +209,26 @@ fn exec_status_from_json(j: &Json) -> Option<ExecutionStatus> {
             j.get("reason").and_then(Json::as_str).unwrap_or("").to_string(),
         )),
         _ => None,
+    }
+}
+
+/// Wire JSON of the optional telemetry trace id: `None` encodes as
+/// `null` (indistinguishable, by design, from the key being absent on
+/// a pre-trace peer's frame).
+fn trace_to_json(trace: Option<u64>) -> Json {
+    match trace {
+        None => Json::Null,
+        Some(id) => Json::Num(id as f64),
+    }
+}
+
+/// Parse the optional trace id off a message object: absent, `null`,
+/// or malformed all read as `None` — a pre-trace peer's frames and a
+/// tracing peer's frames decode through the same path.
+fn trace_from_json(j: &Json) -> Option<u64> {
+    match j.get("trace") {
+        None | Some(Json::Null) => None,
+        Some(t) => t.as_i64().map(|v| v as u64),
     }
 }
 
@@ -286,7 +321,7 @@ impl Message {
                 ("backend", Json::Str(backend.clone())),
                 ("proto", Json::Num(*proto as f64)),
             ]),
-            Message::Assign { request, platform, transfer, backend, resume } => {
+            Message::Assign { request, platform, transfer, backend, resume, trace } => {
                 Json::obj(vec![
                     ("type", Json::Str("assign".into())),
                     ("request", request.to_json()),
@@ -294,6 +329,7 @@ impl Message {
                     ("transfer", crate::strategies::observations_to_json(transfer)),
                     ("backend", Json::Str(backend.clone())),
                     ("resume", resume.clone().unwrap_or(Json::Null)),
+                    ("trace", trace_to_json(*trace)),
                 ])
             }
             Message::PollRequest { job, max_steps } => Json::obj(vec![
@@ -318,7 +354,7 @@ impl Message {
                 ("job", Json::Str(job.clone())),
                 ("reply", poll_reply_to_json(reply)),
             ]),
-            Message::SliceResult { job, records, reply } => Json::obj(vec![
+            Message::SliceResult { job, records, reply, trace } => Json::obj(vec![
                 ("type", Json::Str("slice".into())),
                 ("job", Json::Str(job.clone())),
                 (
@@ -326,6 +362,7 @@ impl Message {
                     Json::Arr(records.iter().map(|(lsn, r)| r.to_json(*lsn)).collect()),
                 ),
                 ("reply", poll_reply_to_json(reply)),
+                ("trace", trace_to_json(*trace)),
             ]),
             Message::Batch { messages } => Json::obj(vec![
                 ("type", Json::Str("batch".into())),
@@ -368,6 +405,7 @@ impl Message {
                     None | Some(Json::Null) => None,
                     Some(s) => Some(s.clone()),
                 },
+                trace: trace_from_json(j),
             },
             "poll" => Message::PollRequest {
                 job: j.get("job")?.as_str()?.to_string(),
@@ -396,6 +434,7 @@ impl Message {
                     .map(WalRecord::from_json)
                     .collect::<Option<_>>()?,
                 reply: poll_reply_from_json(j.get("reply")?)?,
+                trace: trace_from_json(j),
             },
             "batch" => {
                 let messages = j
@@ -502,12 +541,14 @@ mod tests {
             transfer: vec![Observation { config, value: -1.0 / 3.0 }],
             backend: "native".into(),
             resume: None,
+            trace: None,
         };
-        let Message::Assign { request, platform, transfer, backend, resume } =
+        let Message::Assign { request, platform, transfer, backend, resume, trace } =
             roundtrip(&msg)
         else {
             panic!("wrong variant");
         };
+        assert!(trace.is_none());
         assert_eq!(request.name, "remote-1");
         assert_eq!(request.seed, 42);
         assert_eq!(request.tenant_weight, 3);
@@ -536,6 +577,7 @@ mod tests {
             transfer: Vec::new(),
             backend: "hlo".into(),
             resume: Some(snap.clone()),
+            trace: None,
         };
         let Message::Assign { backend, resume, .. } = roundtrip(&msg) else {
             panic!("wrong variant");
@@ -594,8 +636,10 @@ mod tests {
             job: "j".into(),
             records: records.clone(),
             reply: PollReply::Pending { due: 12.25 },
+            trace: None,
         };
-        let Message::SliceResult { job, records: back, reply } = roundtrip(&msg) else {
+        let Message::SliceResult { job, records: back, reply, trace: _ } = roundtrip(&msg)
+        else {
             panic!("wrong variant");
         };
         assert_eq!(job, "j");
@@ -624,6 +668,51 @@ mod tests {
             slice.get("reply").unwrap().to_string(),
             result.get("reply").unwrap().to_string()
         );
+    }
+
+    #[test]
+    fn trace_ids_roundtrip_and_absent_on_wire_reads_as_none() {
+        // present → survives the frame bit-exactly
+        let msg = Message::SliceResult {
+            job: "t".into(),
+            records: Vec::new(),
+            reply: PollReply::Pending { due: 1.0 },
+            trace: Some(424_242),
+        };
+        let Message::SliceResult { trace, .. } = roundtrip(&msg) else { panic!() };
+        assert_eq!(trace, Some(424_242));
+        let msg = Message::Assign {
+            request: TuningJobRequest { name: "t".into(), ..Default::default() },
+            platform: PlatformConfig::default(),
+            transfer: Vec::new(),
+            backend: "native".into(),
+            resume: None,
+            trace: Some(7),
+        };
+        let Message::Assign { trace, .. } = roundtrip(&msg) else { panic!() };
+        assert_eq!(trace, Some(7));
+
+        // a generation-2 peer's frame has NO trace key at all — decode
+        // hand-built JSON without it, exactly what such a peer emits
+        let gen2 = crate::json::parse(
+            r#"{"type": "slice", "job": "t", "records": [],
+                "reply": {"kind": "pending", "due": 2.0}}"#,
+        )
+        .unwrap();
+        let Some(Message::SliceResult { trace, .. }) = Message::from_json(&gen2) else {
+            panic!("gen-2 slice frame must decode");
+        };
+        assert_eq!(trace, None, "absent trace key must read as None");
+        // and a null trace key (this build's None encoding) likewise
+        let null = crate::json::parse(
+            r#"{"type": "slice", "job": "t", "records": [],
+                "reply": {"kind": "pending", "due": 2.0}, "trace": null}"#,
+        )
+        .unwrap();
+        let Some(Message::SliceResult { trace, .. }) = Message::from_json(&null) else {
+            panic!("null-trace slice frame must decode");
+        };
+        assert_eq!(trace, None);
     }
 
     #[test]

@@ -55,6 +55,9 @@ pub const DEFAULT_HEARTBEAT: Duration = Duration::from_millis(500);
 struct HostedJob {
     actor: JobActor,
     stop_flag: Arc<AtomicBool>,
+    /// Telemetry trace id from the `Assign`, echoed on every
+    /// `SliceResult` for this job (DESIGN.md §15).
+    trace: Option<u64>,
     /// Keep the local sinks alive for the actor's lifetime.
     _store: Arc<MetadataStore>,
     _metrics: Arc<MetricsService>,
@@ -177,6 +180,7 @@ impl WorkerRuntime {
         transfer: Vec<Observation>,
         backend: String,
         resume: Option<crate::json::Json>,
+        trace: Option<u64>,
     ) {
         let name = request.name.clone();
         if backend != self.backend {
@@ -227,7 +231,7 @@ impl WorkerRuntime {
                 // a re-assignment replaces any previous incarnation
                 self.jobs.insert(
                     name,
-                    HostedJob { actor, stop_flag, _store: store, _metrics: metrics },
+                    HostedJob { actor, stop_flag, trace, _store: store, _metrics: metrics },
                 );
             }
             Err(reason) => {
@@ -247,9 +251,11 @@ impl WorkerRuntime {
                 job: job.to_string(),
                 records: Vec::new(),
                 reply: PollReply::Rejected { reason: "job not assigned here".into() },
+                trace: None,
             });
         };
         self.polls_served += 1;
+        let trace = hosted.trace;
         let poll = hosted.actor.poll(max_steps.max(1));
         // the slice's mutations, in application order, straight out of
         // the capture WAL's buffer, coalesced with the verdict into one
@@ -263,14 +269,19 @@ impl WorkerRuntime {
                 PollReply::Complete(outcome)
             }
         };
-        self.transport.send(&Message::SliceResult { job: job.to_string(), records, reply })
+        self.transport.send(&Message::SliceResult {
+            job: job.to_string(),
+            records,
+            reply,
+            trace,
+        })
     }
 
     /// Dispatch one leader message; `Flow::Drained` ends the session.
     fn handle(&mut self, msg: Message) -> std::io::Result<Flow> {
         match msg {
-            Message::Assign { request, platform, transfer, backend, resume } => {
-                self.assign(request, platform, transfer, backend, resume);
+            Message::Assign { request, platform, transfer, backend, resume, trace } => {
+                self.assign(request, platform, transfer, backend, resume, trace);
             }
             Message::PollRequest { job, max_steps } => {
                 self.poll(&job, max_steps)?;
@@ -442,6 +453,7 @@ mod tests {
                 transfer: Vec::new(),
                 backend: "native".into(),
                 resume: None,
+                trace: None,
             })
             .unwrap();
         let mut all_records = Vec::new();
@@ -484,6 +496,7 @@ mod tests {
                 transfer: Vec::new(),
                 backend: "native".into(),
                 resume: None,
+                trace: None,
             })
             .unwrap();
         let reply = loop {

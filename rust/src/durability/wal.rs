@@ -27,7 +27,7 @@ use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock, RwLockReadGuard};
 use std::time::Duration;
 
 use crate::json::{self, Json};
@@ -260,11 +260,19 @@ pub struct Wal {
     /// [`Wal::commit_leader`]) — never the other way around.
     gc: Mutex<GcState>,
     gc_cv: Condvar,
+    /// This WAL's metric registry (per-instance). The handles below are
+    /// cached into it under `wal.*` names.
+    telemetry: crate::telemetry::Registry,
     /// Physical commits performed (non-empty `write`+`fsync` batches).
-    commits: AtomicU64,
+    /// Registry name: `wal.commits`.
+    commits: Arc<crate::telemetry::Counter>,
     /// Callers whose commit piggybacked on another caller's in-flight
-    /// write+fsync instead of issuing their own.
-    coalesced: AtomicU64,
+    /// write+fsync instead of issuing their own. Registry name:
+    /// `wal.coalesced`.
+    coalesced: Arc<crate::telemetry::Counter>,
+    /// Latency of the physical commit leg (`write`+`fsync`, µs),
+    /// recorded per leader commit. Registry name: `wal.commit_us`.
+    commit_us: Arc<crate::telemetry::Histogram>,
     /// Bounded coalescing window in nanoseconds: how long a commit
     /// leader waits before capturing the buffer, giving concurrent
     /// drivers time to fan in. 0 (default) commits immediately.
@@ -306,6 +314,7 @@ impl Wal {
             OpenOptions::new().read(true).write(true).create(true).open(&path)?;
         file.set_len(valid_len)?;
         file.seek(SeekFrom::End(0))?;
+        let reg = crate::telemetry::Registry::new();
         Ok(Wal {
             path,
             fsync: AtomicBool::new(true),
@@ -324,8 +333,10 @@ impl Wal {
                 last_ok_gen: 0,
             }),
             gc_cv: Condvar::new(),
-            commits: AtomicU64::new(0),
-            coalesced: AtomicU64::new(0),
+            commits: reg.counter("wal.commits"),
+            coalesced: reg.counter("wal.coalesced"),
+            commit_us: reg.histogram("wal.commit_us"),
+            telemetry: reg,
             window_nanos: AtomicU64::new(0),
         })
     }
@@ -351,14 +362,25 @@ impl Wal {
     }
 
     /// Physical commits performed (non-empty `write`+`fsync` batches).
+    /// Shim over registry metric `wal.commits`; prefer
+    /// [`Wal::telemetry_metrics`].
     pub fn commits(&self) -> u64 {
-        self.commits.load(Ordering::Relaxed)
+        self.commits.get()
     }
 
     /// Commit calls that piggybacked on another caller's in-flight
-    /// write+fsync (group-commit fan-in; see [`Wal::commit`]).
+    /// write+fsync (group-commit fan-in; see [`Wal::commit`]). Shim
+    /// over registry metric `wal.coalesced`.
     pub fn coalesced(&self) -> u64 {
-        self.coalesced.load(Ordering::Relaxed)
+        self.coalesced.get()
+    }
+
+    /// Point-in-time snapshot of this WAL's metric registry (names
+    /// under `wal.*`, including the `wal.commit_us` physical-commit
+    /// latency histogram) — one part of
+    /// [`crate::api::AmtService::telemetry_snapshot`].
+    pub fn telemetry_metrics(&self) -> Vec<crate::telemetry::MetricSnapshot> {
+        self.telemetry.snapshot()
     }
 
     /// Path of the log file.
@@ -469,7 +491,12 @@ impl Wal {
                 if window > 0 {
                     std::thread::sleep(Duration::from_nanos(window));
                 }
+                let commit_t0 = crate::telemetry::enabled()
+                    .then(std::time::Instant::now);
                 let result = self.commit_leader();
+                if let (Some(t0), Ok(())) = (commit_t0, &result) {
+                    self.commit_us.record_duration(t0.elapsed());
+                }
                 let mut gc = self.gc.lock().unwrap();
                 gc.gen += 1;
                 if result.is_ok() {
@@ -485,7 +512,7 @@ impl Wal {
                 // and the in-flight leader has not captured the buffer
                 // yet (`sealed` flips only under the inner mutex), so
                 // its write is guaranteed to cover them.
-                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                self.coalesced.inc();
                 let target = gc.gen + 1;
                 loop {
                     if gc.last_ok_gen >= target {
@@ -539,7 +566,7 @@ impl Wal {
         }
         match result {
             Ok(()) => {
-                self.commits.fetch_add(1, Ordering::Relaxed);
+                self.commits.inc();
                 *synced_len += buf.len() as u64;
                 buf.clear();
                 Ok(())

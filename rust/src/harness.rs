@@ -126,6 +126,34 @@ impl BenchReport {
         ]));
     }
 
+    /// Record a per-operation latency histogram (telemetry plane,
+    /// DESIGN.md §15) as a report entry. Maps the µs summary onto the
+    /// seconds-based schema (`p50_s` keyed so `scripts/bench.sh` can diff
+    /// it like any timed case; the p95 slot carries p99 — the closest tail
+    /// the log-bucketed histogram exports) and carries the full tail in
+    /// `params` (`p50_us`/`p99_us`/`p999_us`/`max_us`/`count`).
+    pub fn push_histogram(
+        &mut self,
+        label: &str,
+        params: &[(&str, String)],
+        h: &crate::telemetry::HistSummary,
+    ) {
+        let stats = BenchStats {
+            iters: h.count as usize,
+            mean: h.mean_us() / 1e6,
+            p50: h.p50 as f64 / 1e6,
+            p95: h.p99 as f64 / 1e6,
+            min: h.min as f64 / 1e6,
+        };
+        let mut extended: Vec<(&str, String)> = params.to_vec();
+        extended.push(("p50_us", h.p50.to_string()));
+        extended.push(("p99_us", h.p99.to_string()));
+        extended.push(("p999_us", h.p999.to_string()));
+        extended.push(("max_us", h.max.to_string()));
+        extended.push(("count", h.count.to_string()));
+        self.push(label, &extended, &stats);
+    }
+
     /// The report as a JSON value.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![

@@ -69,6 +69,7 @@ pub mod sobol;
 pub mod space;
 pub mod store;
 pub mod strategies;
+pub mod telemetry;
 pub mod warmstart;
 pub mod workflow;
 

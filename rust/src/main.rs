@@ -19,7 +19,20 @@
 //!            [--strategy random] [--max-jobs 5] [--parallel 2] [--seed 0]
 //!                                  fanned out over remote workers; with
 //!                                  --listen, workers may also join the
-//!                                  fleet mid-run (DESIGN.md §11, §13)
+//!                                  fleet mid-run (DESIGN.md §11, §13);
+//!                                  prints one telemetry line per
+//!                                  subsystem at shutdown (DESIGN.md §15)
+//!   amt stats [--jobs 4] [--distributed 0] [--json]
+//!                                  run a short spike against an
+//!                                  in-process (or loopback-distributed)
+//!                                  fleet and print the full telemetry
+//!                                  snapshot: counters, gauges, and
+//!                                  latency histograms (p50/p99/p999)
+//!   amt trace [job] [--workers 2] [--max-jobs 4]
+//!                                  run one job over loopback workers and
+//!                                  print its slice lifecycle: propose →
+//!                                  dispatch → worker_poll → delta_apply
+//!                                  → group_commit → outcome
 //!
 //! (The vendored offline crate set has no clap; argument parsing is a small
 //! hand-rolled layer over std::env.)
@@ -331,6 +344,150 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         jobs as f64 / wall,
         pool.joins()
     );
+    print_serve_telemetry(&service);
+    Ok(())
+}
+
+/// One telemetry line per subsystem at `amt serve` shutdown: the fleet
+/// counters, repair/recovery work, WAL commit stats and store traffic
+/// that previously only surfaced in tests.
+fn print_serve_telemetry(service: &AmtService) {
+    let snap = service.telemetry_snapshot();
+    let c = |name: &str| snap.counter(name).unwrap_or(0);
+    eprintln!(
+        "leader: polls_dispatched={} slice_messages={} joins={} drains={} steals={}",
+        c("leader.polls_dispatched"),
+        c("leader.slice_messages"),
+        c("leader.joins"),
+        c("leader.drains"),
+        c("leader.steals"),
+    );
+    eprintln!(
+        "repair: snapshot_requeues={} scratch_requeues={} replayed_proposals={}",
+        c("leader.snapshot_requeues"),
+        c("leader.scratch_requeues"),
+        c("leader.replayed_proposals"),
+    );
+    eprintln!(
+        "recovery: fast_resumed={} scratch_resumed={} replayed_proposals={}",
+        c("recovery.fast_resumed"),
+        c("recovery.scratch_resumed"),
+        c("recovery.replayed_proposals"),
+    );
+    eprintln!(
+        "wal: commits={} coalesced={} commit_errors={}",
+        c("wal.commits"),
+        c("wal.coalesced"),
+        c("leader.wal_commit_errors") + c("scheduler.wal_commit_errors"),
+    );
+    eprintln!(
+        "store: writes={} shard_lock_acquisitions={}",
+        c("store.writes"),
+        c("store.shard_lock_acquisitions"),
+    );
+    if let Some(rtt) = snap.histogram("leader.rtt_us") {
+        eprintln!(
+            "rtt: n={} p50={}µs p99={}µs max={}µs",
+            rtt.count, rtt.p50, rtt.p99, rtt.max
+        );
+    }
+}
+
+/// `amt stats`: run a short tuning spike — purely in-process by default,
+/// or over a `--distributed N` loopback worker fleet — then print the
+/// service's full telemetry snapshot (DESIGN.md §15). `--json` emits the
+/// same snapshot as one JSON object for scripting.
+fn cmd_stats(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use amt::distributed::worker::spawn_loopback_worker;
+    let jobs: usize = flag(flags, "jobs", "4").parse()?;
+    let distributed: usize = flag(flags, "distributed", "0").parse()?;
+    let json = flags.contains_key("json");
+    let service = if distributed > 0 {
+        let mut transports = Vec::new();
+        for i in 0..distributed {
+            let (transport, _fault, _handle) = spawn_loopback_worker(&format!("stats-w{i}"));
+            transports.push(transport);
+        }
+        AmtService::with_remote_workers(PlatformConfig::default(), transports)
+    } else {
+        AmtService::new(PlatformConfig::default())
+    };
+    for i in 0..jobs {
+        let request = TuningJobRequest {
+            name: format!("stats-{i:03}"),
+            objective: flag(flags, "objective", "branin").to_string(),
+            strategy: "random".into(),
+            max_training_jobs: flag(flags, "max-jobs", "4").parse()?,
+            max_parallel_jobs: 2,
+            seed: i as u64,
+            ..Default::default()
+        };
+        service
+            .create_tuning_job(request)
+            .map_err(|e| anyhow::anyhow!("create stats-{i:03}: {e}"))?;
+    }
+    for i in 0..jobs {
+        service
+            .wait(&format!("stats-{i:03}"))
+            .map_err(|e| anyhow::anyhow!("wait stats-{i:03}: {e}"))?;
+    }
+    let snap = service.telemetry_snapshot();
+    if json {
+        println!("{}", snap.to_json().to_string());
+    } else {
+        print!("{}", snap.render_table());
+    }
+    Ok(())
+}
+
+/// `amt trace [job]`: run one tuning job over an in-process loopback
+/// worker fleet and print its reconstructed slice lifecycle from the
+/// trace ring — each phase with absolute time since the first event and
+/// the delta from the previous phase.
+fn cmd_trace(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use amt::distributed::worker::spawn_loopback_worker;
+    let job = pos.get(1).map(String::as_str).unwrap_or("trace-demo").to_string();
+    let workers: usize = flag(flags, "workers", "2").parse()?;
+    let mut transports = Vec::new();
+    for i in 0..workers {
+        let (transport, _fault, _handle) = spawn_loopback_worker(&format!("trace-w{i}"));
+        transports.push(transport);
+    }
+    let service = AmtService::with_remote_workers(PlatformConfig::default(), transports);
+    let request = TuningJobRequest {
+        name: job.clone(),
+        objective: flag(flags, "objective", "branin").to_string(),
+        strategy: "random".into(),
+        max_training_jobs: flag(flags, "max-jobs", "4").parse()?,
+        max_parallel_jobs: 2,
+        seed: flag(flags, "seed", "0").parse()?,
+        ..Default::default()
+    };
+    service
+        .create_tuning_job(request)
+        .map_err(|e| anyhow::anyhow!("create {job}: {e}"))?;
+    service.wait(&job).map_err(|e| anyhow::anyhow!("wait {job}: {e}"))?;
+    let events = service.traces_for(&job);
+    anyhow::ensure!(
+        !events.is_empty(),
+        "no trace events recorded for '{job}' (telemetry disabled or sampled out?)"
+    );
+    println!(
+        "trace {:#018x} — job '{job}' ({} events)",
+        events[0].trace_id,
+        events.len()
+    );
+    let t0 = events[0].t_us;
+    let mut prev = t0;
+    for ev in &events {
+        println!(
+            "  +{:>9}µs  (Δ{:>8}µs)  {}",
+            ev.t_us - t0,
+            ev.t_us - prev,
+            ev.phase
+        );
+        prev = ev.t_us;
+    }
     Ok(())
 }
 
@@ -366,9 +523,12 @@ fn main() {
         "snapshot" => cmd_snapshot(pos.get(1).map(String::as_str).unwrap_or("store.json")),
         "worker" => cmd_worker(&flags),
         "serve" => cmd_serve(&flags),
+        "stats" => cmd_stats(&flags),
+        "trace" => cmd_trace(&pos, &flags),
         _ => {
             println!(
-                "usage: amt <tune|objectives|artifacts-check|snapshot|worker|serve> [--flags]\n\
+                "usage: amt <tune|objectives|artifacts-check|snapshot|worker|serve|stats|trace> \
+                 [--flags]\n\
                  see module docs in rust/src/main.rs"
             );
             Ok(())

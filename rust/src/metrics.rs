@@ -47,10 +47,14 @@ pub struct MetricStats {
 /// streams.
 pub struct MetricsService {
     shards: Vec<Mutex<BTreeMap<String, Vec<DataPoint>>>>,
+    /// This service's metric registry (per-instance; names under
+    /// `metrics.*`).
+    telemetry: crate::telemetry::Registry,
     /// Shard-guard acquisitions made by mutation paths (emit/remove/raw
     /// inserts/batches) — same batching observable as
     /// [`crate::store::MetadataStore::shard_lock_acquisitions`].
-    shard_locks: std::sync::atomic::AtomicU64,
+    /// Registry name: `metrics.shard_lock_acquisitions`.
+    shard_locks: Arc<crate::telemetry::Counter>,
     /// Optional write-ahead log (see [`crate::durability`]): once
     /// attached, every emission appends a record inside its shard
     /// critical section, so per-stream WAL order equals series order.
@@ -59,9 +63,11 @@ pub struct MetricsService {
 
 impl Default for MetricsService {
     fn default() -> Self {
+        let reg = crate::telemetry::Registry::new();
         MetricsService {
             shards: (0..METRIC_SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
-            shard_locks: std::sync::atomic::AtomicU64::new(0),
+            shard_locks: reg.counter("metrics.shard_lock_acquisitions"),
+            telemetry: reg,
             wal: OnceLock::new(),
         }
     }
@@ -89,16 +95,25 @@ impl MetricsService {
     /// Acquire one shard guard on a mutation path, counting it in
     /// [`MetricsService::shard_lock_acquisitions`].
     fn lock_shard(&self, idx: usize) -> MutexGuard<'_, BTreeMap<String, Vec<DataPoint>>> {
-        self.shard_locks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.shard_locks.inc();
         self.shards[idx].lock().unwrap()
     }
 
     /// Shard-guard acquisitions made by mutation paths so far — the
     /// observable [`MetricsService::emit_batch`] reduces (one
     /// acquisition per distinct shard per batch instead of one per
-    /// point).
+    /// point). Shim over registry metric
+    /// `metrics.shard_lock_acquisitions`; prefer
+    /// [`MetricsService::telemetry_metrics`].
     pub fn shard_lock_acquisitions(&self) -> u64 {
-        self.shard_locks.load(std::sync::atomic::Ordering::Relaxed)
+        self.shard_locks.get()
+    }
+
+    /// Point-in-time snapshot of this service's metric registry (names
+    /// under `metrics.*`) — one part of
+    /// [`crate::api::AmtService::telemetry_snapshot`].
+    pub fn telemetry_metrics(&self) -> Vec<crate::telemetry::MetricSnapshot> {
+        self.telemetry.snapshot()
     }
 
     /// Insert one point into its series — the single insertion rule

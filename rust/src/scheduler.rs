@@ -212,7 +212,20 @@ struct Inner {
     /// so the invariant is best-effort under disk errors; monitor the
     /// counter.
     wal: OnceLock<Arc<Wal>>,
-    wal_commit_errors: AtomicU64,
+    /// This scheduler's metric registry (per-instance — tests assert
+    /// exact counts on isolated schedulers). Counter/histogram fields
+    /// below are cached handles into it, under `scheduler.*` names.
+    telemetry: crate::telemetry::Registry,
+    /// Registry name: `scheduler.wal_commit_errors`.
+    wal_commit_errors: Arc<crate::telemetry::Counter>,
+    /// Poll slices dispatched across all jobs — the pool-wide
+    /// aggregate of every slot's `polls` (previously unnamed; the
+    /// remote plane's counterpart is `leader.polls_dispatched`).
+    /// Registry name: `scheduler.polls_dispatched`.
+    polls_dispatched: Arc<crate::telemetry::Counter>,
+    /// Wall-clock latency of one `JobActor::poll` slice (µs).
+    /// Registry name: `scheduler.poll_slice_us`.
+    poll_slice_us: Arc<crate::telemetry::Histogram>,
     /// Per-tenant in-flight quota accounting (`max_in_flight`).
     quotas: TenantQuotas,
     /// Invoked after every *successful* WAL group commit — the durable
@@ -233,6 +246,7 @@ impl Scheduler {
     /// Start the worker pool.
     pub fn new(config: SchedulerConfig) -> Scheduler {
         let workers = config.workers.max(1);
+        let reg = crate::telemetry::Registry::new();
         let inner = Arc::new(Inner {
             heap: Mutex::new(BinaryHeap::new()),
             heap_cv: Condvar::new(),
@@ -242,7 +256,10 @@ impl Scheduler {
             batch_steps: config.batch_steps.max(1),
             running: AtomicUsize::new(0),
             wal: OnceLock::new(),
-            wal_commit_errors: AtomicU64::new(0),
+            wal_commit_errors: reg.counter("scheduler.wal_commit_errors"),
+            polls_dispatched: reg.counter("scheduler.polls_dispatched"),
+            poll_slice_us: reg.histogram("scheduler.poll_slice_us"),
+            telemetry: reg,
             quotas: TenantQuotas::new(),
             post_commit: OnceLock::new(),
         });
@@ -267,9 +284,27 @@ impl Scheduler {
 
     /// WAL group commits that failed even after a retry (records stay
     /// buffered and retry at later ticks; a crash before a successful
-    /// commit loses them — alert on this counter).
+    /// commit loses them — alert on this counter). Shim over registry
+    /// metric `scheduler.wal_commit_errors`; prefer
+    /// [`Scheduler::telemetry_metrics`].
     pub fn wal_commit_errors(&self) -> u64 {
-        self.inner.wal_commit_errors.load(Ordering::Relaxed)
+        self.inner.wal_commit_errors.get()
+    }
+
+    /// Poll slices dispatched across all jobs since construction — the
+    /// pool-wide denominator matching
+    /// `RemoteWorkerPool::polls_dispatched` on the remote plane. Shim
+    /// over registry metric `scheduler.polls_dispatched`.
+    pub fn polls_dispatched(&self) -> u64 {
+        self.inner.polls_dispatched.get()
+    }
+
+    /// Point-in-time snapshot of this scheduler's metric registry
+    /// (names under `scheduler.*`, including the
+    /// `scheduler.poll_slice_us` latency histogram) — one part of
+    /// [`crate::api::AmtService::telemetry_snapshot`].
+    pub fn telemetry_metrics(&self) -> Vec<crate::telemetry::MetricSnapshot> {
+        self.inner.telemetry.snapshot()
     }
 
     /// Install a hook invoked after every successful WAL group commit
@@ -449,7 +484,7 @@ fn commit_wal(inner: &Inner) {
     if let Some(wal) = inner.wal.get() {
         crate::durability::commit_with_retry(
             wal,
-            &inner.wal_commit_errors,
+            inner.wal_commit_errors.as_atomic(),
             inner.post_commit.get(),
         );
     }
@@ -508,9 +543,14 @@ fn worker_loop(inner: &Inner) {
             continue;
         };
         slot.polls.fetch_add(1, Ordering::Relaxed);
+        inner.polls_dispatched.inc();
+        let slice_t0 = crate::telemetry::enabled().then(std::time::Instant::now);
         let polled = std::panic::catch_unwind(AssertUnwindSafe(|| {
             actor.poll(inner.batch_steps)
         }));
+        if let Some(t0) = slice_t0 {
+            inner.poll_slice_us.record_duration(t0.elapsed());
+        }
         match polled {
             Ok(ActorPoll::Pending { due }) => {
                 drop(actor_guard);

@@ -148,13 +148,21 @@ impl StoreBatchOp<'_> {
 /// lock-striped into shards hashed by `(table, key)`.
 pub struct MetadataStore {
     shards: Vec<Mutex<Shard>>,
-    writes: std::sync::atomic::AtomicU64,
+    /// This store's metric registry (per-instance). Handles below are
+    /// cached into it under `store.*` names.
+    telemetry: crate::telemetry::Registry,
+    /// Registry name: `store.writes`.
+    writes: Arc<crate::telemetry::Counter>,
     /// Shard-guard acquisitions made by mutation paths (put/put_if/
     /// delete/raw inserts/batches). Observability for the throughput
     /// plane: batched application takes each distinct shard lock once
     /// per batch instead of once per record, and the soak bench asserts
-    /// the reduction on this counter.
-    shard_locks: std::sync::atomic::AtomicU64,
+    /// the reduction on this counter. Registry name:
+    /// `store.shard_lock_acquisitions`.
+    shard_locks: Arc<crate::telemetry::Counter>,
+    /// Latency of one [`MetadataStore::put_batch`] call (µs). Registry
+    /// name: `store.put_batch_us`.
+    put_batch_us: Arc<crate::telemetry::Histogram>,
     /// Optional write-ahead log: once attached, every successful mutation
     /// appends a record *inside* its shard critical section, so WAL order
     /// equals application order per key (DESIGN.md §10).
@@ -191,10 +199,13 @@ impl MetadataStore {
     /// property tests compare against.
     pub fn with_shards(shards: usize) -> Self {
         let shards = shards.max(1);
+        let reg = crate::telemetry::Registry::new();
         MetadataStore {
             shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
-            writes: std::sync::atomic::AtomicU64::new(0),
-            shard_locks: std::sync::atomic::AtomicU64::new(0),
+            writes: reg.counter("store.writes"),
+            shard_locks: reg.counter("store.shard_lock_acquisitions"),
+            put_batch_us: reg.histogram("store.put_batch_us"),
+            telemetry: reg,
             wal: OnceLock::new(),
         }
     }
@@ -219,15 +230,25 @@ impl MetadataStore {
     /// Acquire one shard guard on a mutation path, counting it in
     /// [`MetadataStore::shard_lock_acquisitions`].
     fn lock_shard(&self, idx: usize) -> MutexGuard<'_, Shard> {
-        self.shard_locks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.shard_locks.inc();
         self.shards[idx].lock().unwrap()
     }
 
     /// Shard-guard acquisitions made by mutation paths so far — the
     /// observable [`MetadataStore::put_batch`] reduces (one acquisition
-    /// per distinct shard per batch instead of one per record).
+    /// per distinct shard per batch instead of one per record). Shim
+    /// over registry metric `store.shard_lock_acquisitions`; prefer
+    /// [`MetadataStore::telemetry_metrics`].
     pub fn shard_lock_acquisitions(&self) -> u64 {
-        self.shard_locks.load(std::sync::atomic::Ordering::Relaxed)
+        self.shard_locks.get()
+    }
+
+    /// Point-in-time snapshot of this store's metric registry (names
+    /// under `store.*`, including the `store.put_batch_us` latency
+    /// histogram) — one part of
+    /// [`crate::api::AmtService::telemetry_snapshot`].
+    pub fn telemetry_metrics(&self) -> Vec<crate::telemetry::MetricSnapshot> {
+        self.telemetry.snapshot()
     }
 
     /// Unconditional put; returns the new version.
@@ -244,7 +265,7 @@ impl MetadataStore {
             });
         }
         t.insert(key.to_string(), (next, value));
-        self.writes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.writes.inc();
         next
     }
 
@@ -280,6 +301,7 @@ impl MetadataStore {
         if ops.is_empty() {
             return Vec::new();
         }
+        let batch_t0 = crate::telemetry::enabled().then(std::time::Instant::now);
         let idxs: Vec<usize> = ops
             .iter()
             .map(|op| {
@@ -343,7 +365,10 @@ impl MetadataStore {
         }
         drop(guards);
         if writes > 0 {
-            self.writes.fetch_add(writes, std::sync::atomic::Ordering::Relaxed);
+            self.writes.add(writes);
+        }
+        if let Some(t0) = batch_t0 {
+            self.put_batch_us.record_duration(t0.elapsed());
         }
         versions
     }
@@ -396,7 +421,7 @@ impl MetadataStore {
             });
         }
         t.insert(key.to_string(), (next, value));
-        self.writes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.writes.inc();
         Ok(next)
     }
 
@@ -487,9 +512,10 @@ impl MetadataStore {
         items
     }
 
-    /// Total successful writes (availability accounting for §6.5).
+    /// Total successful writes (availability accounting for §6.5). Shim
+    /// over registry metric `store.writes`.
     pub fn write_count(&self) -> u64 {
-        self.writes.load(std::sync::atomic::Ordering::Relaxed)
+        self.writes.get()
     }
 
     /// Serialize the whole store to pretty JSON. Shards are merged into

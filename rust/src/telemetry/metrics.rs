@@ -1,0 +1,327 @@
+//! Lock-free metric primitives: [`Counter`], [`Gauge`], and the
+//! log-linear latency [`Histogram`] (DESIGN.md §15).
+//!
+//! Histogram bucket math (HdrHistogram-style log-linear, integer-only
+//! so boundaries are bit-deterministic on every platform): values are
+//! unsigned integers (µs by convention). Values `0..=7` get exact
+//! unit-width buckets `0..=7`. A value `v ≥ 8` with `b = floor(log2 v)`
+//! lands in bucket `8 + (b-3)*4 + ((v >> (b-2)) & 3)` — each power-of-2
+//! range is split into 4 linear sub-buckets, so the relative bucket
+//! width is ≤ 1/4 everywhere (quantiles report the bucket's lower
+//! bound, which is within 25% below the true value). 256 bucket slots
+//! cover all of `u64` (the largest index, at `v = u64::MAX`, is 251).
+//!
+//! Buckets are plain relaxed `AtomicU64`s: recording is 5 relaxed RMWs
+//! (count, sum, min, max, bucket), merging is commutative addition —
+//! per-shard or per-thread histograms merged in ANY order report
+//! identical quantiles (property-tested in `rust/tests/telemetry.rs`).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Monotonic event counter. Always counts (not gated on
+/// [`super::enabled`]): a relaxed fetch-add is cheaper than a
+/// mispredicted branch, and test suites assert exact counts.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// The raw atomic behind the counter — for pre-registry interfaces
+    /// that take `&AtomicU64` (e.g.
+    /// [`crate::durability::commit_with_retry`]'s failure counter).
+    #[inline]
+    pub fn as_atomic(&self) -> &AtomicU64 {
+        &self.value
+    }
+}
+
+/// Last-write-wins signed gauge (fleet sizes, parked-job counts).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.value.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram bucket slots (covers all of `u64`; see module
+/// docs for the index formula — max used index is 251).
+pub const BUCKETS: usize = 256;
+
+/// Log-linear latency histogram: lock-free, mergeable, with exact
+/// min/max/count/sum alongside the bucketed distribution.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Deterministic bucket index for `v` (see module docs).
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        if v < 8 {
+            v as usize
+        } else {
+            let b = 63 - v.leading_zeros() as usize; // floor(log2 v), ≥ 3
+            8 + (b - 3) * 4 + ((v >> (b - 2)) & 3) as usize
+        }
+    }
+
+    /// Inclusive lower bound of bucket `idx` — the value quantiles
+    /// report for samples that landed there.
+    #[inline]
+    pub fn bucket_lower(idx: usize) -> u64 {
+        if idx < 8 {
+            idx as u64
+        } else {
+            let b = (idx - 8) / 4 + 3;
+            let sub = ((idx - 8) % 4) as u64;
+            (1u64 << b) + sub * (1u64 << (b - 2))
+        }
+    }
+
+    /// Record one sample. 5 relaxed atomic RMWs, no locks, no
+    /// allocation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`] as whole microseconds.
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    /// Fold another histogram into this one. Pure addition (plus
+    /// min/max folds), so merging N shards is commutative and
+    /// associative — any merge order yields identical quantiles.
+    pub fn merge_from(&self, other: &Histogram) {
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// The value at quantile `q` (0.0–1.0): the lower bound of the
+    /// bucket containing the rank-`ceil(q·n)` sample, clamped into
+    /// `[min, max]` so degenerate low-count reads stay sane. 0 when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        let mut value = 0u64;
+        for (idx, bucket) in self.buckets.iter().enumerate() {
+            cum += bucket.load(Ordering::Relaxed);
+            if cum >= rank {
+                value = Self::bucket_lower(idx);
+                break;
+            }
+        }
+        let min = self.min.load(Ordering::Relaxed);
+        let max = self.max.load(Ordering::Relaxed);
+        value.clamp(min.min(max), max)
+    }
+
+    /// Point-in-time summary (the exported form).
+    pub fn summary(&self) -> HistSummary {
+        let count = self.count.load(Ordering::Relaxed);
+        HistSummary {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+            max: self.max.load(Ordering::Relaxed),
+            p50: self.quantile(0.50),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Histogram({:?})", self.summary())
+    }
+}
+
+/// Exported summary of a [`Histogram`]: exact count/sum/min/max plus
+/// bucketed p50/p99/p999. All values in the histogram's unit (µs by
+/// convention).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
+impl HistSummary {
+    /// Mean in the histogram's unit (µs by convention); 0.0 when empty.
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_and_monotone() {
+        // unit-width linear region
+        for v in 0u64..8 {
+            assert_eq!(Histogram::bucket_index(v), v as usize);
+            assert_eq!(Histogram::bucket_lower(v as usize), v);
+        }
+        // every bucket's lower bound maps back to that bucket, and
+        // lower bounds strictly increase
+        let top = Histogram::bucket_index(u64::MAX);
+        assert!(top < BUCKETS, "u64::MAX index {top} must fit");
+        let mut prev = 0u64;
+        for idx in 1..=top {
+            let lower = Histogram::bucket_lower(idx);
+            assert_eq!(
+                Histogram::bucket_index(lower),
+                idx,
+                "lower bound {lower} must land in its own bucket {idx}"
+            );
+            assert!(lower > prev, "bucket lowers must be strictly increasing at {idx}");
+            prev = lower;
+        }
+        // one past a lower bound stays in the same bucket; the next
+        // lower bound starts the next bucket
+        assert_eq!(Histogram::bucket_index(8), Histogram::bucket_index(9));
+        assert_ne!(Histogram::bucket_index(8), Histogram::bucket_index(10));
+    }
+
+    #[test]
+    fn quantiles_track_exact_values_in_the_linear_region() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 5, 6, 7] {
+            h.record(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 7);
+        assert_eq!(s.p50, 4); // rank ceil(0.5·7)=4 → value 4, exact
+        assert_eq!(s.p99, 7);
+        assert_eq!(s.p999, 7);
+        assert_eq!(s.sum, 28);
+    }
+
+    #[test]
+    fn single_sample_summary_is_that_sample_in_every_percentile() {
+        let h = Histogram::new();
+        h.record(123_456);
+        let s = h.summary();
+        assert_eq!((s.count, s.min, s.max), (1, 123_456, 123_456));
+        // bucketed percentiles clamp into [min, max] = the exact value
+        assert_eq!(s.p50, 123_456);
+        assert_eq!(s.p999, 123_456);
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_recording_into_one() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let one = Histogram::new();
+        for v in 0..1000u64 {
+            let x = v * v % 7919;
+            if v % 2 == 0 { a.record(x) } else { b.record(x) }
+            one.record(x);
+        }
+        let merged = Histogram::new();
+        merged.merge_from(&b);
+        merged.merge_from(&a);
+        assert_eq!(merged.summary(), one.summary());
+    }
+
+    #[test]
+    fn empty_histogram_summarizes_to_zeros() {
+        let s = Histogram::new().summary();
+        assert_eq!(s, HistSummary::default());
+    }
+}

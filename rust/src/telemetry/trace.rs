@@ -1,0 +1,211 @@
+//! Slice-lifecycle tracing (DESIGN.md §15): per-job trace ids minted at
+//! submission and carried through the `Assign`/`SliceResult` wire
+//! frames, with cheap structured events in a bounded in-memory ring.
+//!
+//! The trace sink is process-global (unlike metric registries):
+//! [`crate::distributed::worker::WorkerRuntime`] has no service handle,
+//! and in loopback tests the leader and worker share one process, so a
+//! global sink is the only sink both sides can reach. Consumers filter
+//! by job name ([`for_job`]) — job names are unique per test/service —
+//! or drain everything ([`drain`], the `AmtService::drain_traces`
+//! backing).
+//!
+//! Phase vocabulary (one complete distributed slice lifecycle):
+//! `propose` (job accepted, trace minted) → `dispatch` (leader sent the
+//! poll burst) → `worker_poll` (the `SliceResult` echoed our trace id —
+//! recorded by the *leader*, so the wire field is load-bearing) →
+//! `delta_apply` (slice records applied to store/metrics) →
+//! `group_commit` (WAL commit covering the slice) → `outcome` (terminal
+//! verdict published). Every phase except `propose`/`outcome` repeats
+//! per slice.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Ring capacity: old events are dropped (and counted) past this.
+const RING_CAP: usize = 65_536;
+
+/// One structured trace event. `t_us` is microseconds on the process
+/// clock ([`super::now_us`]).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub trace_id: u64,
+    pub job: String,
+    pub phase: &'static str,
+    pub t_us: u64,
+}
+
+struct Sink {
+    ring: Mutex<VecDeque<TraceEvent>>,
+    jobs: Mutex<HashMap<String, u64>>,
+    next_id: AtomicU64,
+    dropped: AtomicU64,
+    /// Sample 1-in-N jobs (by name hash); 1 = trace every job.
+    sample_every: AtomicU64,
+}
+
+fn sink() -> &'static Sink {
+    static SINK: OnceLock<Sink> = OnceLock::new();
+    SINK.get_or_init(|| Sink {
+        ring: Mutex::new(VecDeque::with_capacity(1024)),
+        jobs: Mutex::new(HashMap::new()),
+        next_id: AtomicU64::new(1),
+        dropped: AtomicU64::new(0),
+        sample_every: AtomicU64::new(1),
+    })
+}
+
+/// FNV-1a — the store's shard hash, reused so sampling is a pure
+/// deterministic function of the job name.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Trace 1-in-`n` jobs (deterministic by job-name hash). `n = 1`
+/// (default) traces every job; `n = 0` is clamped to 1.
+pub fn set_sampling(n: u64) {
+    sink().sample_every.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Mint (or look up) the trace id for `job`, recording the `propose`
+/// event on first mint. Returns `None` when telemetry is disabled or
+/// the job is sampled out — callers just skip tracing then.
+pub fn ensure_trace(job: &str) -> Option<u64> {
+    if super::disabled() {
+        return None;
+    }
+    let s = sink();
+    if let Some(&id) = s.jobs.lock().unwrap().get(job) {
+        return Some(id);
+    }
+    let every = s.sample_every.load(Ordering::Relaxed);
+    if every > 1 && fnv1a(job) % every != 0 {
+        return None;
+    }
+    let id = {
+        let mut jobs = s.jobs.lock().unwrap();
+        // double-checked under the lock: a concurrent submit of the
+        // same name must not mint two ids
+        if let Some(&id) = jobs.get(job) {
+            return Some(id);
+        }
+        let id = s.next_id.fetch_add(1, Ordering::Relaxed);
+        jobs.insert(job.to_string(), id);
+        id
+    };
+    event(id, job, "propose");
+    Some(id)
+}
+
+/// The already-minted trace id for `job`, if any (and telemetry is on).
+pub fn trace_id(job: &str) -> Option<u64> {
+    if super::disabled() {
+        return None;
+    }
+    sink().jobs.lock().unwrap().get(job).copied()
+}
+
+/// Record one event into the bounded ring. No-op when disabled.
+pub fn event(trace_id: u64, job: &str, phase: &'static str) {
+    if super::disabled() {
+        return;
+    }
+    let ev = TraceEvent { trace_id, job: job.to_string(), phase, t_us: super::now_us() };
+    let s = sink();
+    let mut ring = s.ring.lock().unwrap();
+    if ring.len() >= RING_CAP {
+        ring.pop_front();
+        s.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+    ring.push_back(ev);
+}
+
+/// Record `phase` for `job` if it has a minted trace id — the common
+/// call shape on the leader's hot path.
+#[inline]
+pub fn event_for(job: &str, phase: &'static str) {
+    if super::disabled() {
+        return;
+    }
+    if let Some(id) = trace_id(job) {
+        event(id, job, phase);
+    }
+}
+
+/// Drain the whole ring (oldest first). Destructive and process-global
+/// — prefer [`for_job`] inside tests that share the process.
+pub fn drain() -> Vec<TraceEvent> {
+    sink().ring.lock().unwrap().drain(..).collect()
+}
+
+/// Non-destructive view of one job's events, oldest first.
+pub fn for_job(job: &str) -> Vec<TraceEvent> {
+    sink().ring.lock().unwrap().iter().filter(|e| e.job == job).cloned().collect()
+}
+
+/// Forget a finished job's name→id binding (the ring keeps its events
+/// until they age out). Bounds the map under job churn.
+pub fn forget(job: &str) {
+    sink().jobs.lock().unwrap().remove(job);
+}
+
+/// Total trace ids minted since process start.
+pub fn minted() -> u64 {
+    sink().next_id.load(Ordering::Relaxed) - 1
+}
+
+/// Events dropped to the ring bound since process start.
+pub fn dropped() -> u64 {
+    sink().dropped.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_is_idempotent_and_records_propose_once() {
+        let job = "trace-unit-mint";
+        let a = ensure_trace(job).expect("telemetry defaults on");
+        let b = ensure_trace(job).unwrap();
+        assert_eq!(a, b, "same job must keep one trace id");
+        assert_eq!(trace_id(job), Some(a));
+        let proposes =
+            for_job(job).iter().filter(|e| e.phase == "propose").count();
+        assert_eq!(proposes, 1);
+        forget(job);
+        assert_eq!(trace_id(job), None);
+        // events survive forget(): the ring is the record of what ran
+        assert!(!for_job(job).is_empty());
+    }
+
+    #[test]
+    fn events_are_ordered_and_filtered_per_job() {
+        let job = "trace-unit-order";
+        let id = ensure_trace(job).unwrap();
+        for phase in ["dispatch", "worker_poll", "delta_apply", "group_commit", "outcome"] {
+            event(id, job, phase);
+        }
+        let events = for_job(job);
+        let phases: Vec<&str> = events.iter().map(|e| e.phase).collect();
+        assert_eq!(
+            phases,
+            vec!["propose", "dispatch", "worker_poll", "delta_apply", "group_commit", "outcome"]
+        );
+        assert!(events.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        assert!(events.iter().all(|e| e.trace_id == id));
+        forget(job);
+    }
+
+    // NOTE: sampling and the enabled flag are process-global, and lib
+    // unit tests run in parallel threads of one binary — toggling them
+    // here would race other tests' ensure_trace calls. Their behavior
+    // is covered in `rust/tests/telemetry.rs`, which serializes the
+    // toggles inside a single #[test].
+}

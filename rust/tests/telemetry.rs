@@ -1,0 +1,243 @@
+//! Telemetry-plane integration tests (DESIGN.md §15), isolated in their
+//! own test binary because they exercise PROCESS-GLOBAL state: the
+//! counting `#[global_allocator]` for the zero-overhead assertion, and
+//! the `telemetry::set_enabled` / `trace::set_sampling` switches that
+//! other binaries' tests must never see flipped. Within this binary,
+//! every global toggle is confined to a single `#[test]` and restored
+//! before it returns.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use amt::telemetry::{self, Histogram, Registry};
+
+// --- counting allocator: per-thread allocation counter over System ---
+//
+// Thread-local so parallel test threads don't pollute each other's
+// counts; `try_with` because the allocator can be called during TLS
+// teardown, when the Cell is already gone.
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+/// Deterministic pseudo-random sample stream (splitmix64) so the
+/// property test needs no RNG seed plumbing.
+fn samples(seed: u64, n: usize) -> Vec<u64> {
+    let mut state = seed;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z = z ^ (z >> 31);
+            // spread across the interesting range: sub-bucket exact
+            // values, mid-range, and large tails
+            match z % 4 {
+                0 => z % 8,
+                1 => z % 1_000,
+                2 => z % 1_000_000,
+                _ => z % 10_000_000_000,
+            }
+        })
+        .collect()
+}
+
+/// Reference quantile matching the histogram's convention: the
+/// rank-`ceil(q·n)` sample of the sorted vector.
+fn reference_quantile(sorted: &[u64], q: f64) -> u64 {
+    let n = sorted.len() as u64;
+    let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+    sorted[rank as usize - 1]
+}
+
+/// A reported quantile must sit at or below the true sample value, and
+/// within one log-bucket's relative width (≤ 1/4) of it.
+fn assert_within_one_bucket(reported: u64, reference: u64, what: &str) {
+    assert!(
+        reported <= reference,
+        "{what}: reported {reported} above true sample {reference}"
+    );
+    let slack = reference as f64 * 0.25 + 1.0;
+    assert!(
+        (reference - reported) as f64 <= slack,
+        "{what}: reported {reported} more than one bucket below {reference}"
+    );
+}
+
+/// Histogram correctness property: for random sample sets split across
+/// shards, (1) quantiles are identical no matter how the shards are
+/// merged (commutative + associative bucket addition), and (2) every
+/// quantile matches a sorted-vector reference within one bucket's
+/// relative error, with min/max/count exact.
+#[test]
+fn histogram_merge_is_order_invariant_and_tracks_reference() {
+    for seed in [1u64, 7, 42, 1234] {
+        let values = samples(seed, 4_000);
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+
+        // split the stream across 8 shards round-robin, as concurrent
+        // recorders would
+        const SHARDS: usize = 8;
+        let shards: Vec<Histogram> = (0..SHARDS).map(|_| Histogram::new()).collect();
+        for (i, &v) in values.iter().enumerate() {
+            shards[i % SHARDS].record(v);
+        }
+
+        // merge order A: left to right
+        let forward = Histogram::new();
+        for s in &shards {
+            forward.merge_from(s);
+        }
+        // merge order B: right to left
+        let backward = Histogram::new();
+        for s in shards.iter().rev() {
+            backward.merge_from(s);
+        }
+        // merge order C: pairwise tree
+        let tree = Histogram::new();
+        for pair in shards.chunks(2) {
+            let partial = Histogram::new();
+            for s in pair {
+                partial.merge_from(s);
+            }
+            tree.merge_from(&partial);
+        }
+
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let f = forward.quantile(q);
+            assert_eq!(f, backward.quantile(q), "merge order changed q={q} (seed {seed})");
+            assert_eq!(f, tree.quantile(q), "tree merge changed q={q} (seed {seed})");
+            assert_within_one_bucket(
+                f,
+                reference_quantile(&sorted, q),
+                &format!("seed {seed} q={q}"),
+            );
+        }
+        let s = forward.summary();
+        assert_eq!(s.count, values.len() as u64);
+        assert_eq!(s.min, sorted[0]);
+        assert_eq!(s.max, *sorted.last().unwrap());
+        assert_eq!(s.sum, values.iter().sum::<u64>());
+    }
+}
+
+/// Zero-overhead property: once a registry's handles exist (warm-up),
+/// the hot-path operations — counter inc/add, gauge set/add, histogram
+/// record, the `disabled()` fast check, and cached-handle re-lookup via
+/// snapshot-free reads — allocate NOTHING.
+#[test]
+fn registry_hot_path_does_not_allocate_after_warmup() {
+    let reg = Registry::new();
+    // warm-up: create every handle and touch every path once (first
+    // record faults in nothing — the histogram's buckets are inline —
+    // but keep warm-up and measurement strictly separated anyway)
+    let counter = reg.counter("hot.counter");
+    let gauge = reg.gauge("hot.gauge");
+    let hist = reg.histogram("hot.hist_us");
+    counter.inc();
+    gauge.set(1);
+    hist.record(17);
+    let _ = telemetry::disabled();
+
+    let before = allocs_on_this_thread();
+    for i in 0..10_000u64 {
+        counter.inc();
+        counter.add(3);
+        gauge.add(1);
+        gauge.set(i as i64);
+        hist.record(i * 37 % 1_000_000);
+        // the kill-switch check is part of the hot path; its value is
+        // irrelevant here (the flag test may flip it concurrently)
+        std::hint::black_box(telemetry::disabled());
+    }
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "hot-path metric operations allocated {} times",
+        after - before
+    );
+
+    // reading values back is also allocation-free
+    let before = allocs_on_this_thread();
+    let total = counter.get() + hist.count() + gauge.get().unsigned_abs();
+    let after = allocs_on_this_thread();
+    assert!(total > 0);
+    assert_eq!(after - before, 0, "metric reads allocated");
+}
+
+/// The global enable switch and trace sampling, exercised serially in
+/// ONE test so no parallel test in this binary observes the flags mid
+/// flip. Disabled telemetry must mint no trace ids and record no
+/// events; sampling must keep a deterministic subset of jobs.
+#[test]
+fn enabled_flag_and_sampling_gate_the_trace_plane() {
+    // -- disabled: no ids, no events --
+    telemetry::set_enabled(false);
+    assert!(telemetry::disabled());
+    assert_eq!(telemetry::trace::ensure_trace("flag-off-job"), None);
+    telemetry::trace::event_for("flag-off-job", "propose");
+    assert!(telemetry::trace::for_job("flag-off-job").is_empty());
+
+    // -- re-enabled: the same job now mints and records --
+    telemetry::set_enabled(true);
+    assert!(telemetry::enabled());
+    let id = telemetry::trace::ensure_trace("flag-off-job").expect("enabled mints an id");
+    assert_eq!(telemetry::trace::trace_id("flag-off-job"), Some(id));
+    telemetry::trace::event_for("flag-off-job", "dispatch");
+    let events = telemetry::trace::for_job("flag-off-job");
+    // ensure_trace records "propose" at mint, then our explicit dispatch
+    let phases: Vec<&str> = events.iter().map(|e| e.phase).collect();
+    assert_eq!(phases, vec!["propose", "dispatch"]);
+    telemetry::trace::forget("flag-off-job");
+
+    // -- sampling: with 1-in-2 sampling over many names, some jobs get
+    // ids and some don't, deterministically by name hash --
+    telemetry::trace::set_sampling(2);
+    let mut sampled = 0usize;
+    let mut skipped = 0usize;
+    for i in 0..64 {
+        let name = format!("sample-probe-{i}");
+        match telemetry::trace::ensure_trace(&name) {
+            Some(_) => sampled += 1,
+            None => skipped += 1,
+        }
+        // same name → same verdict (the decision is a pure name hash)
+        let again = telemetry::trace::ensure_trace(&name);
+        assert_eq!(again.is_some(), telemetry::trace::trace_id(&name).is_some());
+        telemetry::trace::forget(&name);
+    }
+    telemetry::trace::set_sampling(1);
+    assert!(sampled > 0, "1-in-2 sampling kept nothing out of 64 jobs");
+    assert!(skipped > 0, "1-in-2 sampling skipped nothing out of 64 jobs");
+
+    // -- back at 1-in-1, every job is traced again --
+    assert!(telemetry::trace::ensure_trace("sample-probe-final").is_some());
+    telemetry::trace::forget("sample-probe-final");
+}

@@ -1,7 +1,9 @@
 //! Throughput-plane integration tests (DESIGN.md §14): coalesced wire
 //! slices, protocol-generation interop with pre-coalescing workers, and
 //! the cross-driver WAL group commit — all over the loopback transport,
-//! deterministically in one process.
+//! deterministically in one process. Also hosts the telemetry-plane wire
+//! tests (DESIGN.md §15): trace-id echo across generations and the CI
+//! `telemetry_smoke` end-to-end lifecycle check.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -196,6 +198,7 @@ fn coalesced_worker_reports_each_slice_as_one_frame() {
                     transfer: Vec::new(),
                     backend: "native".into(),
                     resume: None,
+                    trace: None,
                 },
                 Message::PollRequest { job: "coalesce-job".into(), max_steps: 8 },
             ],
@@ -208,8 +211,10 @@ fn coalesced_worker_reports_each_slice_as_one_frame() {
     let outcome = loop {
         match leader.recv(Duration::from_secs(10)).unwrap() {
             Some(Message::Heartbeat) => {}
-            Some(Message::SliceResult { job, records, reply }) => {
+            Some(Message::SliceResult { job, records, reply, trace }) => {
                 assert_eq!(job, "coalesce-job");
+                // no trace id was assigned, so none may be invented
+                assert_eq!(trace, None);
                 slices += 1;
                 total_records += records.len();
                 match reply {
@@ -241,6 +246,162 @@ fn coalesced_worker_reports_each_slice_as_one_frame() {
     // exactly one SliceResult
     assert_eq!(slices, polls);
     assert!(total_records > 0, "slices carried no mutation records");
+
+    leader.send(&Message::Drain).unwrap();
+    loop {
+        match leader.recv(Duration::from_secs(5)).unwrap() {
+            Some(Message::DrainAck) => break,
+            Some(Message::Heartbeat) | Some(Message::SliceResult { .. }) => {}
+            other => panic!("expected DrainAck, got {other:?}"),
+        }
+    }
+    drop(leader);
+    handle.join().unwrap();
+}
+
+/// Trace-id wire compatibility, gen-3 both sides: an `Assign` carrying a
+/// trace id must have that id echoed verbatim on EVERY `SliceResult` the
+/// worker reports for the job — the leader keys its `worker_poll` trace
+/// phase off the echo, so a dropped or altered id silently kills the
+/// lifecycle reconstruction.
+#[test]
+fn gen3_worker_echoes_trace_id_on_every_slice() {
+    let (mut leader, _fault, handle) = spawn_loopback_worker("trace-echo");
+
+    match leader.recv(Duration::from_secs(5)).unwrap() {
+        Some(Message::Hello { proto, .. }) => assert!(proto >= PROTO_VERSION),
+        other => panic!("expected Hello first, got {other:?}"),
+    }
+
+    let request = TuningJobRequest {
+        name: "trace-echo-job".into(),
+        objective: "branin".into(),
+        strategy: "random".into(),
+        max_training_jobs: 3,
+        max_parallel_jobs: 1,
+        seed: 11,
+        ..Default::default()
+    };
+    leader
+        .send(&Message::Batch {
+            messages: vec![
+                Message::Assign {
+                    request,
+                    platform: PlatformConfig::noiseless(),
+                    transfer: Vec::new(),
+                    backend: "native".into(),
+                    resume: None,
+                    trace: Some(42),
+                },
+                Message::PollRequest { job: "trace-echo-job".into(), max_steps: 8 },
+            ],
+        })
+        .unwrap();
+
+    let mut slices = 0u64;
+    loop {
+        match leader.recv(Duration::from_secs(10)).unwrap() {
+            Some(Message::Heartbeat) => {}
+            Some(Message::SliceResult { job, reply, trace, .. }) => {
+                assert_eq!(job, "trace-echo-job");
+                assert_eq!(trace, Some(42), "slice {slices} lost the trace id");
+                slices += 1;
+                match reply {
+                    PollReply::Pending { .. } => leader
+                        .send(&Message::PollRequest {
+                            job: "trace-echo-job".into(),
+                            max_steps: 8,
+                        })
+                        .unwrap(),
+                    PollReply::Complete(out) => {
+                        assert_eq!(out.status, ExecutionStatus::Succeeded);
+                        break;
+                    }
+                    PollReply::Rejected { reason } => {
+                        panic!("worker rejected the job: {reason}")
+                    }
+                }
+            }
+            other => panic!("unexpected worker message: {other:?}"),
+        }
+    }
+    assert!(slices > 0);
+
+    leader.send(&Message::Drain).unwrap();
+    loop {
+        match leader.recv(Duration::from_secs(5)).unwrap() {
+            Some(Message::DrainAck) => break,
+            Some(Message::Heartbeat) | Some(Message::SliceResult { .. }) => {}
+            other => panic!("expected DrainAck, got {other:?}"),
+        }
+    }
+    drop(leader);
+    handle.join().unwrap();
+}
+
+/// Trace-id wire compatibility, gen-2 leader → gen-3 worker: a leader
+/// that predates trace ids sends `Assign` frames with no `trace` field —
+/// which decodes as `None` at the worker (covered at the frame level in
+/// `proto::tests`). The worker must complete the job normally and report
+/// `trace: None` on every slice rather than minting an id of its own;
+/// the reverse direction (gen-1 worker with no trace awareness at all →
+/// current leader) is `legacy_two_message_worker_interoperates_with_new_leader`.
+#[test]
+fn gen2_leader_without_trace_ids_interoperates_with_gen3_worker() {
+    let (mut leader, _fault, handle) = spawn_loopback_worker("trace-gen2");
+
+    match leader.recv(Duration::from_secs(5)).unwrap() {
+        Some(Message::Hello { proto, .. }) => assert!(proto >= PROTO_VERSION),
+        other => panic!("expected Hello first, got {other:?}"),
+    }
+
+    let request = TuningJobRequest {
+        name: "gen2-job".into(),
+        objective: "branin".into(),
+        strategy: "random".into(),
+        max_training_jobs: 2,
+        max_parallel_jobs: 1,
+        seed: 13,
+        ..Default::default()
+    };
+    leader
+        .send(&Message::Batch {
+            messages: vec![
+                Message::Assign {
+                    request,
+                    platform: PlatformConfig::noiseless(),
+                    transfer: Vec::new(),
+                    backend: "native".into(),
+                    resume: None,
+                    trace: None,
+                },
+                Message::PollRequest { job: "gen2-job".into(), max_steps: 8 },
+            ],
+        })
+        .unwrap();
+
+    loop {
+        match leader.recv(Duration::from_secs(10)).unwrap() {
+            Some(Message::Heartbeat) => {}
+            Some(Message::SliceResult { job, reply, trace, .. }) => {
+                assert_eq!(job, "gen2-job");
+                assert_eq!(trace, None, "worker invented a trace id");
+                match reply {
+                    PollReply::Pending { .. } => leader
+                        .send(&Message::PollRequest { job: "gen2-job".into(), max_steps: 8 })
+                        .unwrap(),
+                    PollReply::Complete(out) => {
+                        assert_eq!(out.status, ExecutionStatus::Succeeded);
+                        break;
+                    }
+                    PollReply::Rejected { reason } => {
+                        panic!("worker rejected the job: {reason}")
+                    }
+                }
+            }
+            other => panic!("unexpected worker message: {other:?}"),
+        }
+    }
 
     leader.send(&Message::Drain).unwrap();
     loop {
@@ -327,6 +488,111 @@ fn throughput_smoke() {
 
     // the batched mutation paths really were exercised
     assert!(svc.store().shard_lock_acquisitions() > 0);
+
+    svc.close().unwrap();
+    for h in workers {
+        let _ = h.join();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end telemetry smoke (the CI `telemetry_smoke` step,
+/// DESIGN.md §15): a durable 16-job loopback fleet must leave behind
+/// (1) nonzero `wal.commit_us` / `leader.rtt_us` / `store.put_batch_us`
+/// latency samples, (2) one complete propose → dispatch → worker_poll →
+/// delta_apply → group_commit → outcome trace per job, and (3) a
+/// telemetry snapshot whose JSON (the `amt stats --json` surface) parses
+/// back through the crate's own parser.
+#[test]
+fn telemetry_smoke() {
+    let dir = temp_dir("telemetry");
+    let (transports, workers) = {
+        let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let (t, _fault, h) = spawn_loopback_worker(&format!("tsmoke-{i}"));
+            transports.push(t);
+            handles.push(h);
+        }
+        (transports, handles)
+    };
+    let mut svc = AmtService::open_with_durability(
+        &dir,
+        PlatformConfig::noiseless(),
+        Arc::new(NativeBackend),
+        SchedulerConfig::default(),
+        DurabilityOptions {
+            auto_checkpoint_bytes: None,
+            group_commit_window: Some(Duration::from_millis(3)),
+        },
+    )
+    .unwrap();
+    svc.attach_remote_workers(transports, RemoteConfig::default());
+
+    for i in 0..16u64 {
+        svc.create_tuning_job(TuningJobRequest {
+            name: format!("tsmoke-{i:02}"),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 4,
+            max_parallel_jobs: 2,
+            seed: 900 + i,
+            ..Default::default()
+        })
+        .unwrap();
+    }
+    for i in 0..16u64 {
+        let out = svc.wait(&format!("tsmoke-{i:02}")).unwrap();
+        assert_eq!(out.status, ExecutionStatus::Succeeded);
+    }
+
+    // (2) every job reconstructs a full slice lifecycle from the ring
+    const PHASES: [&str; 6] =
+        ["propose", "dispatch", "worker_poll", "delta_apply", "group_commit", "outcome"];
+    for i in 0..16u64 {
+        let name = format!("tsmoke-{i:02}");
+        let events = svc.traces_for(&name);
+        assert!(!events.is_empty(), "no trace events for {name}");
+        let id = events[0].trace_id;
+        assert!(events.iter().all(|e| e.trace_id == id), "mixed trace ids for {name}");
+        assert!(
+            events.windows(2).all(|w| w[0].t_us <= w[1].t_us),
+            "trace timestamps for {name} not monotone"
+        );
+        let phases: Vec<&str> = events.iter().map(|e| e.phase).collect();
+        for phase in PHASES {
+            assert!(phases.contains(&phase), "{name} missing phase {phase}: {phases:?}");
+        }
+        assert_eq!(phases.first(), Some(&"propose"), "{name} did not start at propose");
+        assert_eq!(phases.last(), Some(&"outcome"), "{name} did not end at outcome");
+    }
+
+    // (1) the latency histograms saw real samples on every layer
+    let snap = svc.telemetry_snapshot();
+    let hist_count =
+        |name: &str| snap.histogram(name).map_or(0, |h| h.count);
+    assert!(hist_count("wal.commit_us") > 0, "no WAL commit latency samples");
+    assert!(hist_count("leader.rtt_us") > 0, "no wire round-trip samples");
+    assert!(hist_count("store.put_batch_us") > 0, "no store batch samples");
+    assert!(snap.counter("wal.commits").unwrap_or(0) > 0);
+    assert!(snap.counter("leader.polls_dispatched").unwrap_or(0) > 0);
+    assert!(snap.counter("leader.slice_messages").unwrap_or(0) > 0);
+    assert!(snap.counter("store.writes").unwrap_or(0) > 0);
+    assert_eq!(snap.counter("leader.joins"), Some(4));
+
+    // (3) the JSON export round-trips through the crate parser
+    let text = snap.to_json().to_string();
+    let parsed = amt::json::parse(&text).expect("stats JSON must parse");
+    let wal_hist = parsed.get("wal.commit_us").expect("wal.commit_us in JSON");
+    assert!(wal_hist.get("count").and_then(Json::as_i64).unwrap_or(0) > 0);
+    for field in ["p50_us", "p99_us", "p999_us", "min_us", "max_us", "mean_us"] {
+        assert!(wal_hist.get(field).is_some(), "histogram JSON missing {field}");
+    }
+    assert_eq!(
+        parsed.get("leader.joins").and_then(Json::as_i64),
+        Some(4),
+        "counter JSON mismatch"
+    );
 
     svc.close().unwrap();
     for h in workers {

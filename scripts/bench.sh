@@ -51,7 +51,14 @@ for f in BENCH_propose.json BENCH_gp_fit.json BENCH_recovery.json BENCH_distribu
         continue
     fi
     if [ "$MODE" = "--update" ] || [ ! -s "$f" ] || ! grep -q '"p50_s"' "$f"; then
-        # --update, or no committed baseline with real entries yet: bootstrap
+        # --update, or no committed baseline with real entries yet: bootstrap.
+        # Never let an empty placeholder (a run whose entries all failed to
+        # produce p50_s) clobber a populated baseline.
+        if grep -q '"p50_s"' "$f" 2>/dev/null && ! grep -q '"p50_s"' "$fresh"; then
+            echo "ERROR: refusing to overwrite populated $f with an empty placeholder" >&2
+            status=1
+            continue
+        fi
         cp "$fresh" "$f"
         echo "baseline written: $f"
         continue

@@ -40,6 +40,13 @@ cargo test -q --release --test elastic_chaos fast_chaos_smoke
 echo "== throughput smoke: group commit + coalesced slices (16 jobs) =="
 cargo test -q --release --test throughput throughput_smoke
 
+# telemetry smoke (DESIGN.md §15): a 16-job durable loopback fleet must
+# leave nonzero wal.commit_us latency samples, one complete propose →
+# … → outcome trace per job, and a telemetry snapshot whose JSON (the
+# `amt stats --json` surface) parses back through the crate's own parser.
+echo "== telemetry smoke: metrics + trace lifecycle (16 jobs) =="
+cargo test -q --release --test throughput telemetry_smoke
+
 if [ "${1:-}" = "--bench" ]; then
     echo "== perf trajectory: scripts/bench.sh =="
     scripts/bench.sh
