@@ -1,0 +1,97 @@
+//! Load-observatory perf trajectory → BENCH_load.json (DESIGN.md §16).
+//!
+//! Runs the canned mixed chaos workload (every create flavor, polling
+//! traffic, kill / late-join / drain on a 3-worker loopback fleet) and
+//! emits:
+//!   - one histogram entry per op kind (`load.create_us`, …) with
+//!     p50/p99/p999 in seconds via `BenchReport::push_histogram`;
+//!   - one entry per phase with the achieved-vs-target throughput in the
+//!     params and the phase wall time as the sample;
+//!   - one overall entry (total ops/sec over the whole run).
+//!
+//! Invariant observers run as part of the workload; the bench aborts if
+//! any fails — a perf number from a run that lost jobs is meaningless.
+
+use amt::harness::{BenchReport, BenchStats};
+use amt::load::{Runner, Workload};
+
+fn main() {
+    let workload = Workload::canned_mixed("bench-load", 42, 3);
+    let runner = Runner::new(workload).expect("canned workload is valid");
+    println!(
+        "load bench: {} planned ops, {} chaos events",
+        runner.plan().ops.len(),
+        runner.plan().chaos_count()
+    );
+    let report = runner.run().expect("load run completes");
+    assert!(
+        report.all_passed(),
+        "invariant observers failed — refusing to emit perf numbers:\n{}",
+        report.observers.render()
+    );
+
+    let mut bench = BenchReport::new("load");
+    let jobs = report.jobs_created.to_string();
+
+    for op in ["create", "describe", "list", "stop", "wait"] {
+        let name = format!("load.{op}_us");
+        if let Some(h) = report.snapshot.histogram(&name) {
+            if h.count == 0 {
+                continue;
+            }
+            bench.push_histogram(
+                &format!("mixed {name}"),
+                &[
+                    ("metric", name.clone()),
+                    ("ops", h.count.to_string()),
+                    ("jobs", jobs.clone()),
+                ],
+                h,
+            );
+            println!(
+                "  {name}: n={} p50={}us p99={}us p999={}us",
+                h.count, h.p50, h.p99, h.p999
+            );
+        }
+    }
+
+    for phase in &report.phases {
+        bench.push(
+            &format!("mixed phase {}", phase.kind.as_str()),
+            &[
+                ("ops", phase.ops.to_string()),
+                ("target_rate", format!("{:.1}", phase.target_rate)),
+                ("achieved_rate", format!("{:.1}", phase.achieved_rate)),
+            ],
+            &BenchStats::from_samples(vec![phase.wall_s.max(1e-9)]),
+        );
+        println!(
+            "  phase {}: {} ops, target {:.0}/s achieved {:.0}/s",
+            phase.kind.as_str(),
+            phase.ops,
+            phase.target_rate,
+            phase.achieved_rate
+        );
+    }
+
+    let overall_rate = report.ops_executed as f64 / report.wall_s.max(1e-9);
+    bench.push(
+        "mixed overall",
+        &[
+            ("ops", report.ops_executed.to_string()),
+            ("jobs", jobs),
+            ("evaluations", report.evaluations.to_string()),
+            ("chaos", report.chaos_fired.to_string()),
+            ("achieved_rate", format!("{overall_rate:.1}")),
+        ],
+        &BenchStats::from_samples(vec![report.wall_s.max(1e-9)]),
+    );
+
+    let path = bench.write().expect("write BENCH_load.json");
+    println!(
+        "load bench: {} ops at {:.0} ops/s overall -> {}",
+        report.ops_executed,
+        overall_rate,
+        path.display()
+    );
+}

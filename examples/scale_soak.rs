@@ -288,89 +288,49 @@ fn run_overhead_compare(num_jobs: usize, report: &mut BenchReport) {
     );
 }
 
-/// One elastic chaos spike (DESIGN.md §13): `num_jobs` tuning jobs over
-/// a 3-worker loopback fleet that loses a worker to a kill, gains a
-/// fresh one mid-run, and drains another gracefully. Asserts every job
-/// still completes; reports throughput plus the fleet's liveness and
-/// migration counters.
+/// One elastic chaos spike, now driven through the load observatory
+/// (DESIGN.md §16): the canned mixed workload — every create flavor plus
+/// describe/list/stop/wait polling across three weighted tenants — scaled
+/// so its create count approximates `num_jobs`, over a 3-worker loopback
+/// fleet that loses a worker to a kill, gains a fresh one mid-run, and
+/// drains another gracefully. The runner's invariant observers (job
+/// conservation, counter conservation, store-version monotonicity,
+/// bit-identity vs an uninterrupted reference) replace the old
+/// hand-rolled completed == created assert.
 fn run_chaos(num_jobs: usize, report: &mut BenchReport) {
-    use amt::distributed::leader::RemoteConfig;
-    let platform = PlatformConfig {
-        provisioning_failure_rate: 0.05,
-        training_failure_rate: 0.04,
-        ..Default::default()
-    };
-    let mut transports = Vec::new();
-    let mut faults = Vec::new();
-    let mut worker_handles = Vec::new();
-    for i in 0..3 {
-        let (t, fault, h) = spawn_loopback_worker(&format!("chaos-{i}"));
-        transports.push(t);
-        faults.push(fault);
-        worker_handles.push(h);
-    }
-    let mut service = AmtService::new(platform);
-    service.attach_remote_workers(
-        transports,
-        RemoteConfig { batch_steps: 16, ..RemoteConfig::default() },
-    );
+    use amt::load::{Runner, Workload};
+    // canned_mixed plans 80·scale ops of which the mix makes ~63% creates.
+    let scale = (num_jobs as u32 / 50).max(1);
+    let runner = Runner::new(Workload::canned_mixed("soak-chaos", 2024, scale))
+        .expect("canned workload is valid");
     eprintln!(
-        "chaos spike: {num_jobs} tuning jobs over an elastic 3-worker fleet \
-         (kill + join + drain mid-run)..."
+        "chaos spike: {} mixed ops (~{num_jobs} creates requested) over an \
+         elastic 3-worker fleet (kill + join + drain mid-run)...",
+        runner.plan().ops.len()
     );
-    let started = Instant::now();
-    let mut api_latencies: Vec<f64> = Vec::with_capacity(num_jobs);
-    for i in 0..num_jobs {
-        let request = TuningJobRequest {
-            name: format!("chaos-{i:04}"),
-            objective: "branin".into(),
-            strategy: "random".into(),
-            max_training_jobs: 3,
-            max_parallel_jobs: 2,
-            seed: i as u64,
-            ..Default::default()
-        };
-        let t = Instant::now();
-        service.create_tuning_job(request).expect("create must be accepted");
-        api_latencies.push(t.elapsed().as_secs_f64());
-    }
-
-    let pool = service.remote_pool().expect("remote plane attached");
-    // let the fleet get going so the chaos lands mid-run
-    let names: Vec<String> = (0..num_jobs).map(|i| format!("chaos-{i:04}")).collect();
-    let deadline = Instant::now() + std::time::Duration::from_secs(120);
-    loop {
-        let total: u64 = names.iter().filter_map(|n| pool.poll_count(n)).sum();
-        if total >= (num_jobs as u64 / 4).max(2) {
-            break;
-        }
-        assert!(Instant::now() < deadline, "chaos fleet never got going");
-        std::thread::yield_now();
-    }
-    faults[0].kill(); // abrupt death
-    let (late_t, _late_fault, late_h) = spawn_loopback_worker("chaos-late");
-    service.add_remote_worker(late_t); // late join (triggers stealing)
-    worker_handles.push(late_h);
-    service.drain_remote_worker(1); // graceful drain
-
-    let mut completed = 0usize;
-    for name in &names {
-        if service.wait(name).is_ok() {
-            completed += 1;
-        }
-    }
-    let wall = started.elapsed().as_secs_f64();
-    let jobs_per_sec = completed as f64 / wall;
+    let run = runner.run().expect("chaos workload completes");
+    assert!(
+        run.all_passed(),
+        "invariant observers failed under chaos:\n{}",
+        run.observers.render()
+    );
+    let jobs_per_sec = run.jobs_created as f64 / run.wall_s.max(1e-9);
     let rows = vec![
-        vec!["tuning jobs completed".into(), format!("{completed}/{num_jobs}")],
-        vec!["workers killed / joined / drained".into(), "1 / 1 / 1".into()],
-        vec!["queued jobs stolen".into(), pool.steals().to_string()],
+        vec!["mixed ops executed".into(), run.ops_executed.to_string()],
+        vec!["tuning jobs created".into(), run.jobs_created.to_string()],
+        vec!["training jobs (evaluations)".into(), run.evaluations.to_string()],
+        vec!["chaos events fired".into(), run.chaos_fired.to_string()],
+        vec!["queued jobs stolen".into(), run.pool.steals.to_string()],
         vec![
             "death requeues (snapshot / scratch)".into(),
-            format!("{} / {}", pool.snapshot_requeues(), pool.scratch_requeues()),
+            format!("{} / {}", run.pool.snapshot_requeues, run.pool.scratch_requeues),
         ],
-        vec!["proposals re-executed".into(), pool.replayed_proposals().to_string()],
-        vec!["wall-clock".into(), format!("{wall:.1}s")],
+        vec!["proposals re-executed".into(), run.pool.replayed_proposals.to_string()],
+        vec![
+            "invariant observers".into(),
+            format!("{} PASS", run.observers.checks.len()),
+        ],
+        vec!["wall-clock".into(), format!("{:.1}s", run.wall_s)],
         vec!["throughput".into(), format!("{jobs_per_sec:.1} jobs/s")],
     ];
     print_table(
@@ -379,27 +339,28 @@ fn run_chaos(num_jobs: usize, report: &mut BenchReport) {
         &rows,
     );
 
-    let stats = BenchStats::from_samples(api_latencies);
-    report.push(
-        &format!("soak chaos jobs={num_jobs}"),
-        &[
-            ("jobs", num_jobs.to_string()),
-            ("jobs_per_sec", format!("{jobs_per_sec:.2}")),
-            ("joins", pool.joins().to_string()),
-            ("drains", pool.drains().to_string()),
-            ("steals", pool.steals().to_string()),
-            ("snapshot_requeues", pool.snapshot_requeues().to_string()),
-            ("scratch_requeues", pool.scratch_requeues().to_string()),
-            ("replayed_proposals", pool.replayed_proposals().to_string()),
-            ("wall_s", format!("{wall:.3}")),
-        ],
-        &stats,
-    );
-    assert_eq!(completed, num_jobs, "chaos must not lose work");
-    drop(pool);
-    drop(service);
-    for h in worker_handles {
-        let _ = h.join();
+    // Same label and param keys as the pre-observatory entry so committed
+    // baselines diff cleanly; the sample distribution is now the runner's
+    // real per-create latency histogram.
+    let params = [
+        ("jobs", run.jobs_created.to_string()),
+        ("jobs_per_sec", format!("{jobs_per_sec:.2}")),
+        ("joins", run.pool.joins.to_string()),
+        ("drains", run.pool.drains.to_string()),
+        ("steals", run.pool.steals.to_string()),
+        ("snapshot_requeues", run.pool.snapshot_requeues.to_string()),
+        ("scratch_requeues", run.pool.scratch_requeues.to_string()),
+        ("replayed_proposals", run.pool.replayed_proposals.to_string()),
+        ("wall_s", format!("{:.3}", run.wall_s)),
+    ];
+    let label = format!("soak chaos jobs={num_jobs}");
+    match run.snapshot.histogram("load.create_us") {
+        Some(h) if h.count > 0 => report.push_histogram(&label, &params, h),
+        _ => report.push(
+            &label,
+            &params,
+            &BenchStats::from_samples(vec![run.wall_s.max(1e-9)]),
+        ),
     }
 }
 

@@ -520,8 +520,10 @@ impl AmtService {
     /// scheduler (`scheduler.*`), WAL (`wal.*`, when durable) and
     /// remote pool (`leader.*`, when attached), plus the service-level
     /// API/availability counters (`api.*`), recovery-on-open stats
-    /// (`recovery.*`) and trace-sink health (`trace.*`). Backs
-    /// `amt stats` and the bench harness's histogram emission.
+    /// (`recovery.*`) and trace-sink health (`telemetry.trace_minted` /
+    /// `telemetry.trace_dropped` — the latter counts events the bounded
+    /// 65 536-event ring overwrote, so ring overflow is never silent).
+    /// Backs `amt stats` and the bench harness's histogram emission.
     pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
         let rs = self.recovery_stats;
         let counter = |name: &str, v: u64| MetricSnapshot {
@@ -534,8 +536,8 @@ impl AmtService {
             counter("recovery.fast_resumed", rs.fast_resumed as u64),
             counter("recovery.scratch_resumed", rs.scratch_resumed as u64),
             counter("recovery.replayed_proposals", rs.replayed_proposals),
-            counter("trace.minted", telemetry::trace::minted()),
-            counter("trace.dropped", telemetry::trace::dropped()),
+            counter("telemetry.trace_minted", telemetry::trace::minted()),
+            counter("telemetry.trace_dropped", telemetry::trace::dropped()),
         ];
         let mut parts = vec![
             service,

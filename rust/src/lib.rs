@@ -43,6 +43,11 @@
 //! liveness, surrogate-backend pinning for mixed fleets, and
 //! requeue-from-snapshot on worker death. See `DESIGN.md` §11/§12.
 //!
+//! The whole stack is continuously exercised by [`load`] — a declarative
+//! load & chaos observatory: JSON-specified mixed workloads with per-op
+//! SLO histograms and invariant observers riding the elastic-fleet and
+//! recovery machinery. See `DESIGN.md` §16.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the reproduced figures.
 
@@ -57,6 +62,7 @@ pub mod gp;
 pub mod harness;
 pub mod json;
 pub mod linalg;
+pub mod load;
 pub mod metrics;
 pub mod multiobjective;
 pub mod objectives;

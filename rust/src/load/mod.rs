@@ -1,0 +1,37 @@
+//! Always-on load & chaos observatory (DESIGN.md §16).
+//!
+//! Declarative mixed workloads against the full service surface, with
+//! built-in chaos injection and invariant observers:
+//!
+//! - [`Workload`] — a JSON-codable spec: weighted multi-tenant create
+//!   traffic (BO / random / grid / warm-start / early-stopping /
+//!   multi-objective), polling ops (describe / list / stop / wait), a
+//!   steady / ramp / burst throughput schedule, and a chaos track (worker
+//!   kills, late joins, graceful drains, leader close+reopen). A seeded
+//!   RNG expands the spec into a deterministic [`Plan`], so every soak is
+//!   replayable bit-for-bit.
+//! - [`Runner`] — drives the plan against [`crate::api::AmtService`] on
+//!   either execution plane, records per-op SLO histograms
+//!   (`load.create_us`, `load.describe_us`, `load.list_us`,
+//!   `load.stop_us`, `load.wait_us`) and fires the chaos track through
+//!   the elastic-fleet and durability surfaces.
+//! - [`ObserverReport`] — invariant observers evaluated between phases
+//!   and at the end: zero lost/duplicated jobs, terminal status for every
+//!   job, store-version monotonicity, conservation of the fleet's
+//!   join/drain/steal/WAL counters, replay attribution (zero replayed
+//!   proposals on snapshot-path legs), and bit-identity of probe jobs
+//!   against an uninterrupted reference run.
+//!
+//! Surfaces: `amt load <workload.json>` (CLI), the `Runner` API (tests:
+//! `rust/tests/load_harness.rs`), and `benches/load.rs` → BENCH_load.json.
+
+pub mod observers;
+pub mod runner;
+pub mod workload;
+
+pub use observers::{ObserverCheck, ObserverReport, VersionWatch};
+pub use runner::{PhaseReport, PoolTotals, RecoveryTotals, RunReport, Runner};
+pub use workload::{
+    ChaosAction, ChaosSpec, CreateOp, JobShape, OpKind, OpMix, PhaseKind, PhaseSpec, Plan,
+    Plane, PlannedOp, ScalarizedBiObjective, TenantSpec, Workload,
+};

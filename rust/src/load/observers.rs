@@ -1,0 +1,92 @@
+//! Invariant observers for the load & chaos observatory.
+//!
+//! Observers are cheap assertions evaluated between phases and at the end of
+//! a run: they consume only public service surfaces (the metadata store, the
+//! pool/recovery counters, job outcomes) and report pass/fail with a
+//! human-readable detail line, so a chaos soak fails loudly instead of
+//! silently converging to a wrong state.
+
+use std::collections::BTreeMap;
+
+use crate::json::Json;
+use crate::store::MetadataStore;
+
+/// One evaluated invariant.
+#[derive(Clone, Debug)]
+pub struct ObserverCheck {
+    pub name: &'static str,
+    pub passed: bool,
+    pub detail: String,
+}
+
+/// All invariants evaluated over a run.
+#[derive(Clone, Debug, Default)]
+pub struct ObserverReport {
+    pub checks: Vec<ObserverCheck>,
+}
+
+impl ObserverReport {
+    pub fn push(&mut self, name: &'static str, passed: bool, detail: String) {
+        self.checks.push(ObserverCheck { name, passed, detail });
+    }
+
+    pub fn all_passed(&self) -> bool {
+        self.checks.iter().all(|c| c.passed)
+    }
+
+    pub fn failed(&self) -> Vec<&ObserverCheck> {
+        self.checks.iter().filter(|c| !c.passed).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.checks {
+            let mark = if c.passed { "PASS" } else { "FAIL" };
+            out.push_str(&format!("  {mark}  {:<26} {}\n", c.name, c.detail));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.checks
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("name", Json::Str(c.name.to_string())),
+                        ("passed", Json::Bool(c.passed)),
+                        ("detail", Json::Str(c.detail.clone())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Watches per-key store versions across observations and records any
+/// decrease — store versions must be monotone even across a leader
+/// close+reopen (they are rebuilt from the WAL/snapshot, never reset).
+#[derive(Default)]
+pub struct VersionWatch {
+    last: BTreeMap<String, u64>,
+    pub violations: Vec<String>,
+    pub observations: u64,
+}
+
+impl VersionWatch {
+    pub fn observe(&mut self, store: &MetadataStore, table: &str, prefix: &str) {
+        self.observations += 1;
+        for key in store.list_keys(table, prefix) {
+            if let Some((version, _)) = store.get(table, &key) {
+                if let Some(prev) = self.last.get(&key) {
+                    if version < *prev {
+                        self.violations.push(format!(
+                            "{table}/{key}: version regressed {prev} -> {version}"
+                        ));
+                    }
+                }
+                self.last.insert(key, version);
+            }
+        }
+    }
+}

@@ -1,0 +1,912 @@
+//! Executes a [`Workload`] plan against a live [`AmtService`].
+//!
+//! The runner owns the whole lifecycle: service construction on either
+//! plane (local scheduler or loopback distributed fleet, optionally
+//! durable), paced execution of the planned op stream, chaos injection
+//! through the elastic-fleet / recovery surfaces, per-op SLO histograms
+//! (`load.create_us`, `load.describe_us`, …) in its own telemetry
+//! [`Registry`], and the invariant observers evaluated between phases and
+//! at the end. `run()` returns a [`RunReport`] merging the service's
+//! telemetry snapshot with the runner's own, plus every observer verdict.
+
+use std::collections::{BTreeSet, HashMap};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::api::{AmtService, ApiError};
+use crate::distributed::transport::{LoopbackFault, Transport};
+use crate::distributed::worker::spawn_loopback_worker;
+use crate::distributed::leader::RemoteConfig;
+use crate::durability::DurabilityOptions;
+use crate::gp::NativeBackend;
+use crate::json::Json;
+use crate::platform::PlatformConfig;
+use crate::scheduler::SchedulerConfig;
+use crate::telemetry::{Histogram, Registry, TelemetrySnapshot};
+
+use super::observers::{ObserverReport, VersionWatch};
+use super::workload::{
+    ChaosAction, CreateOp, OpKind, Plan, PlannedOp, PhaseKind, PhaseSpec, Plane,
+    ScalarizedBiObjective, Workload,
+};
+use crate::coordinator::TuningJobOutcome;
+
+/// Per-phase throughput accounting.
+#[derive(Clone, Debug)]
+pub struct PhaseReport {
+    pub kind: PhaseKind,
+    pub ops: u32,
+    /// Mean target rate over the phase (0 = unpaced).
+    pub target_rate: f64,
+    pub achieved_rate: f64,
+    pub wall_s: f64,
+}
+
+/// Conserved elastic-fleet counters, accumulated across every pool epoch
+/// (a leader reopen starts a new pool; totals absorb the old one first).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolTotals {
+    pub joins: u64,
+    pub drains: u64,
+    pub steals: u64,
+    pub snapshot_requeues: u64,
+    pub scratch_requeues: u64,
+    pub replayed_proposals: u64,
+    pub wal_commit_errors: u64,
+}
+
+/// Recovery-on-open totals accumulated across leader reopens.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryTotals {
+    pub fast_resumed: usize,
+    pub scratch_resumed: usize,
+    pub replayed_proposals: u64,
+}
+
+/// Everything a finished run reports.
+pub struct RunReport {
+    pub workload_name: String,
+    pub wall_s: f64,
+    pub ops_executed: u64,
+    pub ops_failed: u64,
+    pub jobs_created: u64,
+    pub evaluations: u64,
+    pub chaos_fired: u64,
+    /// Warm-start creates degraded to plain creates at runtime (parent
+    /// finished without a completed observation, e.g. stopped early).
+    pub degraded_creates: u64,
+    pub phases: Vec<PhaseReport>,
+    pub observers: ObserverReport,
+    pub pool: PoolTotals,
+    pub recovery: RecoveryTotals,
+    /// Service metrics merged with the runner's `load.*` histograms.
+    pub snapshot: TelemetrySnapshot,
+}
+
+impl RunReport {
+    /// True iff every invariant observer passed.
+    pub fn all_passed(&self) -> bool {
+        self.observers.all_passed()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::Str(self.workload_name.clone())),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("ops_executed", Json::Num(self.ops_executed as f64)),
+            ("ops_failed", Json::Num(self.ops_failed as f64)),
+            ("jobs_created", Json::Num(self.jobs_created as f64)),
+            ("evaluations", Json::Num(self.evaluations as f64)),
+            ("chaos_fired", Json::Num(self.chaos_fired as f64)),
+            ("degraded_creates", Json::Num(self.degraded_creates as f64)),
+            (
+                "phases",
+                Json::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("kind", Json::Str(p.kind.as_str().to_string())),
+                                ("ops", Json::Num(p.ops as f64)),
+                                ("target_rate", Json::Num(p.target_rate)),
+                                ("achieved_rate", Json::Num(p.achieved_rate)),
+                                ("wall_s", Json::Num(p.wall_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("joins", Json::Num(self.pool.joins as f64)),
+                    ("drains", Json::Num(self.pool.drains as f64)),
+                    ("steals", Json::Num(self.pool.steals as f64)),
+                    ("snapshot_requeues", Json::Num(self.pool.snapshot_requeues as f64)),
+                    ("scratch_requeues", Json::Num(self.pool.scratch_requeues as f64)),
+                    ("replayed_proposals", Json::Num(self.pool.replayed_proposals as f64)),
+                    ("wal_commit_errors", Json::Num(self.pool.wal_commit_errors as f64)),
+                ]),
+            ),
+            ("observers", self.observers.to_json()),
+            ("all_passed", Json::Bool(self.all_passed())),
+            ("telemetry", self.snapshot.to_json()),
+        ])
+    }
+
+    /// Human-readable multi-line summary (the non-`--json` CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let rate = if self.wall_s > 0.0 { self.ops_executed as f64 / self.wall_s } else { 0.0 };
+        out.push_str(&format!(
+            "workload {}: {} ops in {:.2}s ({:.0} ops/s), {} jobs, {} evaluations, \
+             {} chaos events, {} op errors\n",
+            self.workload_name,
+            self.ops_executed,
+            self.wall_s,
+            rate,
+            self.jobs_created,
+            self.evaluations,
+            self.chaos_fired,
+            self.ops_failed,
+        ));
+        for p in &self.phases {
+            let target = if p.target_rate > 0.0 {
+                format!("target {:.0}/s", p.target_rate)
+            } else {
+                "unpaced".to_string()
+            };
+            out.push_str(&format!(
+                "  phase {:<7} {:>5} ops  {}  achieved {:.0}/s in {:.2}s\n",
+                p.kind.as_str(),
+                p.ops,
+                target,
+                p.achieved_rate,
+                p.wall_s,
+            ));
+        }
+        out.push_str(&format!(
+            "  fleet: joins={} drains={} steals={} snapshot_requeues={} \
+             scratch_requeues={} replayed={} wal_errors={}\n",
+            self.pool.joins,
+            self.pool.drains,
+            self.pool.steals,
+            self.pool.snapshot_requeues,
+            self.pool.scratch_requeues,
+            self.pool.replayed_proposals,
+            self.pool.wal_commit_errors,
+        ));
+        for name in ["create", "describe", "list", "stop", "wait"] {
+            if let Some(h) = self.snapshot.histogram(&format!("load.{name}_us")) {
+                if h.count > 0 {
+                    out.push_str(&format!(
+                        "  load.{:<12} n={:<6} p50={}us p99={}us p999={}us max={}us\n",
+                        format!("{name}_us"),
+                        h.count,
+                        h.p50,
+                        h.p99,
+                        h.p999,
+                        h.max,
+                    ));
+                }
+            }
+        }
+        out.push_str("observers:\n");
+        out.push_str(&self.observers.render());
+        out
+    }
+}
+
+struct Fleet {
+    tag: String,
+    spawned: usize,
+    faults: Vec<Arc<LoopbackFault>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Fleet {
+    fn new(tag: &str) -> Fleet {
+        Fleet { tag: tag.to_string(), spawned: 0, faults: Vec::new(), handles: Vec::new() }
+    }
+
+    fn spawn_one(&mut self) -> Box<dyn Transport> {
+        let label = format!("{}-w{}", self.tag, self.spawned);
+        self.spawned += 1;
+        let (transport, fault, handle) = spawn_loopback_worker(&label);
+        self.faults.push(fault);
+        self.handles.push(handle);
+        transport
+    }
+
+    /// Join every worker thread of the current epoch. Must only be called
+    /// after the leader-side transports dropped (pool closed), which is
+    /// what makes loopback workers exit.
+    fn join_all(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.faults.clear();
+    }
+}
+
+struct LedgerEntry {
+    name: String,
+    created: bool,
+    waited: bool,
+}
+
+/// Drives one [`Workload`] to completion. Cheap to construct (planning
+/// only); `run()` owns the service lifecycle.
+pub struct Runner {
+    workload: Workload,
+    plan: Plan,
+    report_every: Option<Duration>,
+}
+
+impl Runner {
+    pub fn new(workload: Workload) -> Result<Runner, String> {
+        workload.validate()?;
+        let plan = workload.plan();
+        Ok(Runner { workload, plan, report_every: None })
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Runner, String> {
+        Runner::new(Workload::from_json_str(text)?)
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    /// The expanded deterministic op sequence (what the determinism
+    /// property test compares).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Emit a one-line live stats report (stderr) at most this often.
+    pub fn set_report_every(&mut self, every: Option<Duration>) {
+        self.report_every = every;
+    }
+
+    /// Execute the workload and evaluate every invariant observer.
+    pub fn run(&self) -> Result<RunReport, String> {
+        Exec::new(self)?.run()
+    }
+}
+
+/// Mutable state of one run.
+struct Exec<'a> {
+    wl: &'a Workload,
+    plan: &'a Plan,
+    report_every: Option<Duration>,
+    registry: Registry,
+    h_create: Arc<Histogram>,
+    h_describe: Arc<Histogram>,
+    h_list: Arc<Histogram>,
+    h_stop: Arc<Histogram>,
+    h_wait: Arc<Histogram>,
+    service: Option<AmtService>,
+    fleet: Fleet,
+    data_dir: Option<PathBuf>,
+    ledger: Vec<LedgerEntry>,
+    name_to_seq: HashMap<String, usize>,
+    probe_seqs: BTreeSet<usize>,
+    outcomes: HashMap<usize, TuningJobOutcome>,
+    watch: VersionWatch,
+    pool: PoolTotals,
+    recovery: RecoveryTotals,
+    // Conservation expectations for the current pool epoch.
+    epoch_initial_workers: u64,
+    epoch_joins_fired: u64,
+    epoch_drains_fired: u64,
+    expected_joins: u64,
+    expected_drains: u64,
+    ops_executed: u64,
+    ops_failed: u64,
+    evaluations: u64,
+    chaos_fired: u64,
+    degraded_creates: u64,
+}
+
+impl<'a> Exec<'a> {
+    fn new(runner: &'a Runner) -> Result<Exec<'a>, String> {
+        let registry = Registry::default();
+        let h_create = registry.histogram("load.create_us");
+        let h_describe = registry.histogram("load.describe_us");
+        let h_list = registry.histogram("load.list_us");
+        let h_stop = registry.histogram("load.stop_us");
+        let h_wait = registry.histogram("load.wait_us");
+        // Probes for the bit-identity observer: registry-objective creates
+        // with no warm-start parent and no planned stop, so their outcome
+        // is a pure function of (request, platform) on any plane.
+        let stops: BTreeSet<usize> = runner.plan.stop_targets().into_iter().collect();
+        let probe_seqs: BTreeSet<usize> = runner
+            .plan
+            .creates()
+            .into_iter()
+            .filter(|c| {
+                matches!(
+                    c.kind,
+                    OpKind::CreateBo
+                        | OpKind::CreateRandom
+                        | OpKind::CreateGrid
+                        | OpKind::CreateEarlyStopping
+                )
+            })
+            .filter(|c| c.request.warm_start_parents.is_empty())
+            .filter(|c| !stops.contains(&c.seq))
+            .take(3)
+            .map(|c| c.seq)
+            .collect();
+        let data_dir = if runner.workload.durable {
+            Some(std::env::temp_dir().join(format!(
+                "amt-load-{}-{}",
+                std::process::id(),
+                runner.workload.name
+            )))
+        } else {
+            None
+        };
+        Ok(Exec {
+            wl: &runner.workload,
+            plan: &runner.plan,
+            report_every: runner.report_every,
+            registry,
+            h_create,
+            h_describe,
+            h_list,
+            h_stop,
+            h_wait,
+            service: None,
+            fleet: Fleet::new(&runner.workload.name),
+            data_dir,
+            ledger: Vec::new(),
+            name_to_seq: HashMap::new(),
+            probe_seqs,
+            outcomes: HashMap::new(),
+            watch: VersionWatch::default(),
+            pool: PoolTotals::default(),
+            recovery: RecoveryTotals::default(),
+            epoch_initial_workers: 0,
+            epoch_joins_fired: 0,
+            epoch_drains_fired: 0,
+            expected_joins: 0,
+            expected_drains: 0,
+            ops_executed: 0,
+            ops_failed: 0,
+            evaluations: 0,
+            chaos_fired: 0,
+            degraded_creates: 0,
+        })
+    }
+
+    fn platform(&self) -> PlatformConfig {
+        if self.wl.noiseless {
+            PlatformConfig::noiseless()
+        } else {
+            PlatformConfig::default()
+        }
+    }
+
+    fn svc(&self) -> &AmtService {
+        self.service.as_ref().expect("service alive during run")
+    }
+
+    fn open_service(&mut self) -> Result<(), String> {
+        let mut svc = if let Some(dir) = &self.data_dir {
+            AmtService::open_with_durability(
+                dir,
+                self.platform(),
+                Arc::new(NativeBackend),
+                SchedulerConfig::default(),
+                DurabilityOptions::default(),
+            )
+            .map_err(|e| format!("open durable service: {e}"))?
+        } else {
+            AmtService::new(self.platform())
+        };
+        let rs = svc.recovery_stats();
+        self.recovery.fast_resumed += rs.fast_resumed;
+        self.recovery.scratch_resumed += rs.scratch_resumed;
+        self.recovery.replayed_proposals += rs.replayed_proposals;
+        if self.wl.plane == Plane::Distributed {
+            let transports: Vec<Box<dyn Transport>> =
+                (0..self.wl.workers).map(|_| self.fleet.spawn_one()).collect();
+            svc.attach_remote_workers(
+                transports,
+                RemoteConfig { batch_steps: 16, ..RemoteConfig::default() },
+            );
+            self.epoch_initial_workers = self.wl.workers as u64;
+            self.expected_joins += self.wl.workers as u64;
+        }
+        self.epoch_joins_fired = 0;
+        self.epoch_drains_fired = 0;
+        self.service = Some(svc);
+        Ok(())
+    }
+
+    /// Wait (bounded) for the current epoch's join/drain counters to
+    /// converge, then fold the pool's conserved counters into the totals.
+    /// Called before every pool teardown and at the end of the run, so
+    /// reopen epochs never lose counts.
+    fn absorb_pool(&mut self) {
+        let Some(pool) = self.svc().remote_pool() else { return };
+        let want_joins = self.epoch_initial_workers + self.epoch_joins_fired;
+        let want_drains = self.epoch_drains_fired;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while (pool.joins() < want_joins || pool.drains() < want_drains)
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.pool.joins += pool.joins();
+        self.pool.drains += pool.drains();
+        self.pool.steals += pool.steals();
+        self.pool.snapshot_requeues += pool.snapshot_requeues();
+        self.pool.scratch_requeues += pool.scratch_requeues();
+        self.pool.replayed_proposals += pool.replayed_proposals();
+        self.pool.wal_commit_errors += pool.wal_commit_errors();
+        self.epoch_initial_workers = 0;
+    }
+
+    fn fire_chaos(&mut self, index: usize) -> Result<(), String> {
+        self.chaos_fired += 1;
+        match self.wl.chaos[index].action {
+            ChaosAction::KillWorker(w) => {
+                if let Some(fault) = self.fleet.faults.get(w) {
+                    fault.kill();
+                }
+            }
+            ChaosAction::JoinWorker => {
+                let transport = self.fleet.spawn_one();
+                if self.svc().add_remote_worker(transport).is_some() {
+                    self.epoch_joins_fired += 1;
+                    self.expected_joins += 1;
+                }
+            }
+            ChaosAction::DrainWorker(w) => {
+                if self.svc().drain_remote_worker(w) {
+                    self.epoch_drains_fired += 1;
+                    self.expected_drains += 1;
+                }
+            }
+            ChaosAction::ReopenLeader => {
+                // Outcomes are consumed by `wait` and do not survive a
+                // reopen (the store keeps the terminal record, not the
+                // in-memory outcome) — so secure the bit-identity probes
+                // first. Everything else rides the recovery path.
+                let probes: Vec<usize> = self
+                    .probe_seqs
+                    .iter()
+                    .copied()
+                    .filter(|&seq| seq < self.ledger.len())
+                    .collect();
+                for seq in probes {
+                    self.wait_job(seq, false);
+                }
+                self.absorb_pool();
+                let svc = self.service.take().expect("service alive");
+                svc.close().map_err(|e| format!("close leader: {e}"))?;
+                self.fleet.join_all();
+                self.open_service()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until `name` finishes and fold its outcome into the run
+    /// accounting. Service `wait` is consuming, so each job is waited at
+    /// most once; `timed` controls whether the wait lands in
+    /// `load.wait_us` (warm-start parent barriers are untimed).
+    fn wait_job(&mut self, seq: usize, timed: bool) {
+        if !self.ledger[seq].created || self.ledger[seq].waited {
+            return;
+        }
+        let name = self.ledger[seq].name.clone();
+        let start = Instant::now();
+        let result = self.svc().wait(&name);
+        if timed {
+            self.h_wait.record_duration(start.elapsed());
+        }
+        self.ledger[seq].waited = true;
+        match result {
+            Ok(outcome) => {
+                self.evaluations += outcome.evaluations.len() as u64;
+                if self.probe_seqs.contains(&seq) {
+                    self.outcomes.insert(seq, outcome);
+                }
+            }
+            Err(_) => {
+                // A job that completed before a leader reopen has no
+                // waitable outcome on the reopened service — its terminal
+                // store record is the ground truth. Only a genuinely
+                // non-terminal job is an op failure.
+                let terminal = self
+                    .svc()
+                    .describe_tuning_job(&name)
+                    .map(|s| s.status != "InProgress")
+                    .unwrap_or(false);
+                if !terminal {
+                    self.ops_failed += 1;
+                }
+            }
+        }
+    }
+
+    fn exec_create(&mut self, c: &CreateOp) {
+        // Warm-start parents must hold a completed observation before the
+        // child resolves them: barrier on any still-running parent first.
+        for parent in c.request.warm_start_parents.clone() {
+            if let Some(&pseq) = self.name_to_seq.get(&parent) {
+                self.wait_job(pseq, false);
+            }
+        }
+        let start = Instant::now();
+        let mut result = if let Some(theta) = c.theta {
+            self.svc().create_custom_tuning_job(
+                c.request.clone(),
+                Arc::new(ScalarizedBiObjective::new(theta)),
+            )
+        } else {
+            self.svc().create_tuning_job(c.request.clone())
+        };
+        if matches!(result, Err(ApiError::BadParent(_))) {
+            // Parent finished without a completed observation (stopped or
+            // failed): degrade to a plain create, keeping the planned name
+            // and seed so the ledger stays dense.
+            self.degraded_creates += 1;
+            let mut request = c.request.clone();
+            request.warm_start_parents.clear();
+            result = self.svc().create_tuning_job(request);
+        }
+        self.h_create.record_duration(start.elapsed());
+        let created = result.is_ok();
+        if !created {
+            self.ops_failed += 1;
+        }
+        debug_assert_eq!(c.seq, self.ledger.len());
+        self.name_to_seq.insert(c.request.name.clone(), c.seq);
+        self.ledger.push(LedgerEntry { name: c.request.name.clone(), created, waited: false });
+    }
+
+    fn exec_op(&mut self, op: &PlannedOp) -> Result<(), String> {
+        match op {
+            PlannedOp::Create(c) => self.exec_create(c),
+            PlannedOp::Describe { target } => {
+                let name = self.ledger[*target].name.clone();
+                let start = Instant::now();
+                let result = self.svc().describe_tuning_job(&name);
+                self.h_describe.record_duration(start.elapsed());
+                if result.is_err() && self.ledger[*target].created {
+                    self.ops_failed += 1;
+                }
+            }
+            PlannedOp::List => {
+                let prefix = format!("{}-", self.wl.name);
+                let start = Instant::now();
+                let _ = self.svc().list_tuning_jobs(&prefix);
+                self.h_list.record_duration(start.elapsed());
+            }
+            PlannedOp::Stop { target } => {
+                let name = self.ledger[*target].name.clone();
+                let start = Instant::now();
+                // NotFound simply means the job already reached a terminal
+                // state — stop is asynchronous and racing completion is the
+                // expected case under load.
+                let _ = self.svc().stop_tuning_job(&name);
+                self.h_stop.record_duration(start.elapsed());
+            }
+            PlannedOp::Wait { target } => {
+                if self.ledger[*target].created && !self.ledger[*target].waited {
+                    self.wait_job(*target, true);
+                } else {
+                    // Already consumed: a describe keeps the polling
+                    // pressure (and the op count) without double-waiting.
+                    let name = self.ledger[*target].name.clone();
+                    let start = Instant::now();
+                    let _ = self.svc().describe_tuning_job(&name);
+                    self.h_wait.record_duration(start.elapsed());
+                }
+            }
+            PlannedOp::Chaos { index } => self.fire_chaos(*index)?,
+            PlannedOp::PhaseEnd { .. } => unreachable!("handled by the phase loop"),
+        }
+        Ok(())
+    }
+
+    fn run(mut self) -> Result<RunReport, String> {
+        if let Some(dir) = &self.data_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+        self.open_service()?;
+        let run_start = Instant::now();
+        let mut last_report = Instant::now();
+        let mut phases: Vec<PhaseReport> = Vec::new();
+        let mut phase_idx = 0usize;
+        let mut phase_start = Instant::now();
+        let mut phase_ops = 0u32;
+        let mut due_s = 0.0f64;
+        let prefix = format!("{}-", self.wl.name);
+
+        for op in &self.plan.ops {
+            if let PlannedOp::PhaseEnd { phase } = op {
+                let spec = &self.wl.phases[*phase];
+                let wall = phase_start.elapsed().as_secs_f64();
+                phases.push(PhaseReport {
+                    kind: spec.kind,
+                    ops: phase_ops,
+                    target_rate: target_rate(spec),
+                    achieved_rate: if wall > 0.0 { phase_ops as f64 / wall } else { 0.0 },
+                    wall_s: wall,
+                });
+                // Mid-run observer: store versions must stay monotone at
+                // every phase boundary, chaos or not.
+                let store = self.svc().store();
+                self.watch.observe(store.as_ref(), "tuning_jobs", &prefix);
+                phase_idx += 1;
+                phase_start = Instant::now();
+                phase_ops = 0;
+                due_s = 0.0;
+                continue;
+            }
+            if let PlannedOp::Chaos { index } = op {
+                self.fire_chaos(*index)?;
+                continue;
+            }
+            // Pace against the schedule (wall clock only).
+            if !self.wl.virtual_clock {
+                let spec = &self.wl.phases[phase_idx];
+                let rate = rate_at(spec, phase_ops);
+                if rate > 0.0 {
+                    due_s += 1.0 / rate;
+                    let target = phase_start + Duration::from_secs_f64(due_s);
+                    let now = Instant::now();
+                    if target > now {
+                        std::thread::sleep(target - now);
+                    }
+                }
+            }
+            self.exec_op(op)?;
+            self.ops_executed += 1;
+            phase_ops += 1;
+            if let Some(every) = self.report_every {
+                if last_report.elapsed() >= every {
+                    last_report = Instant::now();
+                    self.live_line(run_start);
+                }
+            }
+        }
+
+        // Drain: every created job must reach a terminal state.
+        for seq in 0..self.ledger.len() {
+            self.wait_job(seq, true);
+        }
+        self.absorb_pool();
+        let store = self.svc().store();
+        self.watch.observe(store.as_ref(), "tuning_jobs", &prefix);
+        drop(store);
+
+        let snapshot = TelemetrySnapshot::from_parts(vec![
+            self.svc().telemetry_snapshot().metrics,
+            self.registry.snapshot(),
+        ]);
+        let observers = self.final_observers(&snapshot, &prefix);
+        let wall_s = run_start.elapsed().as_secs_f64();
+
+        // Teardown: close (checkpoint) durable services, then join the
+        // worker threads freed by the pool drop.
+        if let Some(svc) = self.service.take() {
+            if self.data_dir.is_some() {
+                svc.close().map_err(|e| format!("close service: {e}"))?;
+            }
+        }
+        self.fleet.join_all();
+        if let Some(dir) = &self.data_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+
+        Ok(RunReport {
+            workload_name: self.wl.name.clone(),
+            wall_s,
+            ops_executed: self.ops_executed,
+            ops_failed: self.ops_failed,
+            jobs_created: self.ledger.iter().filter(|l| l.created).count() as u64,
+            evaluations: self.evaluations,
+            chaos_fired: self.chaos_fired,
+            degraded_creates: self.degraded_creates,
+            phases,
+            observers,
+            pool: self.pool,
+            recovery: self.recovery,
+            snapshot,
+        })
+    }
+
+    fn live_line(&self, run_start: Instant) {
+        let snap = self.svc().telemetry_snapshot();
+        let calls = snap.counter("api.calls").unwrap_or(0);
+        let steals = snap.counter("leader.steals").unwrap_or(0);
+        let create = self.h_create.summary();
+        let wait = self.h_wait.summary();
+        eprintln!(
+            "[load {:>6.1}s] ops={}/{} jobs={} api.calls={} steals={} \
+             create p99={}us wait p99={}us",
+            run_start.elapsed().as_secs_f64(),
+            self.ops_executed,
+            self.plan.ops.len(),
+            self.ledger.len(),
+            calls,
+            steals,
+            create.p99,
+            wait.p99,
+        );
+    }
+
+    fn final_observers(&mut self, snapshot: &TelemetrySnapshot, prefix: &str) -> ObserverReport {
+        let mut report = ObserverReport::default();
+        let store = self.svc().store();
+
+        // 1. Zero lost or duplicated jobs: the store's view of the job
+        //    namespace must equal the runner's ledger exactly.
+        let stored: BTreeSet<String> = store.list_keys("tuning_jobs", prefix).into_iter().collect();
+        let created: BTreeSet<String> = self
+            .ledger
+            .iter()
+            .filter(|l| l.created)
+            .map(|l| l.name.clone())
+            .collect();
+        let lost: Vec<&String> = created.difference(&stored).collect();
+        let phantom: Vec<&String> = stored.difference(&created).collect();
+        report.push(
+            "jobs_conserved",
+            lost.is_empty() && phantom.is_empty(),
+            format!(
+                "{} created, {} stored, {} lost, {} phantom",
+                created.len(),
+                stored.len(),
+                lost.len(),
+                phantom.len()
+            ),
+        );
+
+        // 2. Every job reached a terminal state.
+        let mut in_progress = 0u64;
+        for l in self.ledger.iter().filter(|l| l.created) {
+            match self.svc().describe_tuning_job(&l.name) {
+                Ok(summary) if summary.status == "InProgress" => in_progress += 1,
+                Ok(_) => {}
+                Err(_) => in_progress += 1,
+            }
+        }
+        report.push(
+            "terminal_status",
+            in_progress == 0,
+            format!("{} of {} jobs non-terminal after drain", in_progress, created.len()),
+        );
+
+        // 3. Store versions never regressed across phases or reopens.
+        report.push(
+            "store_version_monotonic",
+            self.watch.violations.is_empty(),
+            if self.watch.violations.is_empty() {
+                format!("{} observations, no regressions", self.watch.observations)
+            } else {
+                self.watch.violations.join("; ")
+            },
+        );
+
+        // 4. Conserved fleet counters: every admitted worker was counted
+        //    joined, every drain completed, and no WAL commit ever failed
+        //    on either plane.
+        let sched_wal = snapshot.counter("scheduler.wal_commit_errors").unwrap_or(0);
+        let joins_ok = self.wl.plane != Plane::Distributed
+            || (self.pool.joins == self.expected_joins
+                && self.pool.drains == self.expected_drains);
+        report.push(
+            "counter_conservation",
+            joins_ok && self.pool.wal_commit_errors == 0 && sched_wal == 0,
+            format!(
+                "joins={}/{} drains={}/{} steals={} wal_errors={}+{}",
+                self.pool.joins,
+                self.expected_joins,
+                self.pool.drains,
+                self.expected_drains,
+                self.pool.steals,
+                self.pool.wal_commit_errors,
+                sched_wal
+            ),
+        );
+
+        // 5. Replays only ever come from scratch legs: snapshot-path
+        //    requeues and snapshot-resumed recoveries re-execute zero
+        //    strategy proposals.
+        let replays = self.pool.replayed_proposals + self.recovery.replayed_proposals;
+        let scratch_legs = self.pool.scratch_requeues + self.recovery.scratch_resumed as u64;
+        report.push(
+            "replays_attributable",
+            replays == 0 || scratch_legs > 0,
+            format!(
+                "{} replayed proposals across {} scratch legs \
+                 (snapshot legs: {} requeues + {} resumes, all exact)",
+                replays,
+                scratch_legs,
+                self.pool.snapshot_requeues,
+                self.recovery.fast_resumed
+            ),
+        );
+
+        // 6. Bit-identity: probe jobs from the chaos run must match an
+        //    uninterrupted single-job reference run on the local plane.
+        let (passed, detail) = self.bit_identity();
+        report.push("bit_identity", passed, detail);
+
+        report
+    }
+
+    fn bit_identity(&self) -> (bool, String) {
+        if self.probe_seqs.is_empty() {
+            return (true, "no eligible probe jobs in plan (skipped)".to_string());
+        }
+        let reference = AmtService::new(self.platform());
+        let creates = self.plan.creates();
+        let mut compared = 0usize;
+        for &seq in &self.probe_seqs {
+            let Some(main_outcome) = self.outcomes.get(&seq) else {
+                return (false, format!("probe seq {seq} has no recorded outcome"));
+            };
+            let c = creates.iter().find(|c| c.seq == seq).expect("probe seq in plan");
+            if let Err(e) = reference.create_tuning_job(c.request.clone()) {
+                return (false, format!("reference create {}: {e:?}", c.request.name));
+            }
+            let reference_outcome = match reference.wait(&c.request.name) {
+                Ok(o) => o,
+                Err(e) => return (false, format!("reference wait {}: {e:?}", c.request.name)),
+            };
+            if fingerprint(main_outcome) != fingerprint(&reference_outcome) {
+                return (
+                    false,
+                    format!("{} diverged from uninterrupted reference run", c.request.name),
+                );
+            }
+            compared += 1;
+        }
+        (true, format!("{compared} probe jobs bit-identical to uninterrupted reference"))
+    }
+}
+
+/// Mean target rate of a phase, for reporting (0 = unpaced).
+fn target_rate(spec: &PhaseSpec) -> f64 {
+    match spec.kind {
+        PhaseKind::Steady => spec.rate,
+        PhaseKind::Ramp => (spec.rate + spec.rate_end) / 2.0,
+        PhaseKind::Burst => 0.0,
+    }
+}
+
+/// Instantaneous target rate before the `j`-th op of a phase.
+fn rate_at(spec: &PhaseSpec, j: u32) -> f64 {
+    match spec.kind {
+        PhaseKind::Steady => spec.rate,
+        PhaseKind::Ramp => {
+            let span = (spec.ops.saturating_sub(1)).max(1) as f64;
+            spec.rate + (spec.rate_end - spec.rate) * (j as f64 / span)
+        }
+        PhaseKind::Burst => 0.0,
+    }
+}
+
+/// Exact string form of an outcome: per-evaluation JSON (bit-exact f64s,
+/// virtual timestamps), best value bits, and workflow status.
+fn fingerprint(outcome: &TuningJobOutcome) -> String {
+    let evals =
+        Json::Arr(outcome.evaluations.iter().map(|e| e.to_json()).collect()).to_string();
+    let best = outcome
+        .best
+        .as_ref()
+        .map(|(config, value)| format!("{config:?}|{:016x}", value.to_bits()))
+        .unwrap_or_else(|| "none".to_string());
+    format!("{evals}::{best}::{:?}", outcome.status)
+}

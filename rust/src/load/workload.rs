@@ -1,0 +1,904 @@
+//! Declarative workload specification for the load & chaos observatory.
+//!
+//! A [`Workload`] is a JSON-codable description (via the crate's own
+//! `json.rs`, like `PlatformConfig`) of a mixed operation stream against
+//! [`crate::api::AmtService`]: weighted create traffic (BO / random / grid /
+//! warm-start / early-stopping / multi-objective) across weighted tenants
+//! with in-flight quotas, polling traffic (describe / list / stop / wait), a
+//! throughput schedule of steady / ramp / burst phases, and an inline chaos
+//! track (worker kills, late joins, graceful drains, leader close+reopen).
+//!
+//! `Workload::plan()` expands the spec into a concrete [`Plan`] — the exact
+//! op sequence with fully-built `TuningJobRequest`s and chaos firing points —
+//! using a single seeded [`Rng`], so the same spec + seed always yields the
+//! bit-identical plan (property-tested in `rust/tests/load_harness.rs`).
+
+use crate::config::TuningJobRequest;
+use crate::json::{self, Json};
+use crate::objectives::{Analytic, Objective};
+use crate::rng::Rng;
+use crate::space::{Config, SearchSpace};
+
+/// One operation kind in the mix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    CreateBo,
+    CreateRandom,
+    CreateGrid,
+    CreateWarmStart,
+    CreateEarlyStopping,
+    CreateMultiObjective,
+    Describe,
+    List,
+    Stop,
+    Wait,
+}
+
+impl OpKind {
+    /// Every kind, in canonical order (used by the JSON codec docs).
+    pub const ALL: [OpKind; 10] = [
+        OpKind::CreateBo,
+        OpKind::CreateRandom,
+        OpKind::CreateGrid,
+        OpKind::CreateWarmStart,
+        OpKind::CreateEarlyStopping,
+        OpKind::CreateMultiObjective,
+        OpKind::Describe,
+        OpKind::List,
+        OpKind::Stop,
+        OpKind::Wait,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OpKind::CreateBo => "create_bo",
+            OpKind::CreateRandom => "create_random",
+            OpKind::CreateGrid => "create_grid",
+            OpKind::CreateWarmStart => "create_warm_start",
+            OpKind::CreateEarlyStopping => "create_early_stopping",
+            OpKind::CreateMultiObjective => "create_multiobjective",
+            OpKind::Describe => "describe",
+            OpKind::List => "list",
+            OpKind::Stop => "stop",
+            OpKind::Wait => "wait",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OpKind> {
+        OpKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+
+    /// Whether this kind creates a tuning job.
+    pub fn is_create(self) -> bool {
+        matches!(
+            self,
+            OpKind::CreateBo
+                | OpKind::CreateRandom
+                | OpKind::CreateGrid
+                | OpKind::CreateWarmStart
+                | OpKind::CreateEarlyStopping
+                | OpKind::CreateMultiObjective
+        )
+    }
+}
+
+/// A tenant lane: all creates drawn for this tenant carry its fair-share
+/// weight and in-flight quota (0 = unlimited).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    pub weight: u32,
+    pub max_in_flight: u32,
+}
+
+/// One weighted entry in the operation mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpMix {
+    pub op: OpKind,
+    pub weight: u32,
+}
+
+/// Throughput shape of one phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Constant target rate.
+    Steady,
+    /// Linear interpolation from `rate` to `rate_end` across the phase.
+    Ramp,
+    /// Unpaced: issue ops as fast as the service absorbs them.
+    Burst,
+}
+
+impl PhaseKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PhaseKind::Steady => "steady",
+            PhaseKind::Ramp => "ramp",
+            PhaseKind::Burst => "burst",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PhaseKind> {
+        match s {
+            "steady" => Some(PhaseKind::Steady),
+            "ramp" => Some(PhaseKind::Ramp),
+            "burst" => Some(PhaseKind::Burst),
+            _ => None,
+        }
+    }
+}
+
+/// One phase of the throughput schedule. Rates are ops/second of wall (or
+/// virtual) clock; `rate == 0` means unpaced regardless of kind.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PhaseSpec {
+    pub kind: PhaseKind,
+    pub ops: u32,
+    pub rate: f64,
+    pub rate_end: f64,
+}
+
+/// A chaos event riding the elastic-fleet / recovery machinery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Hard-kill worker lane `worker` (index into the initial fleet).
+    KillWorker(usize),
+    /// Spawn and admit one extra loopback worker mid-run.
+    JoinWorker,
+    /// Gracefully drain worker lane `worker`.
+    DrainWorker(usize),
+    /// Close the (durable) leader and reopen it from disk mid-run.
+    ReopenLeader,
+}
+
+/// A chaos event pinned to a position in the op stream: it fires just
+/// before the `at_op`-th operation (0-based, across all phases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub at_op: u32,
+    pub action: ChaosAction,
+}
+
+/// Shape shared by every created tuning job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobShape {
+    pub objective: String,
+    pub max_training_jobs: u32,
+    pub max_parallel_jobs: u32,
+    pub max_retries_per_job: u32,
+}
+
+impl Default for JobShape {
+    fn default() -> Self {
+        JobShape {
+            objective: "branin".to_string(),
+            max_training_jobs: 3,
+            max_parallel_jobs: 2,
+            max_retries_per_job: 2,
+        }
+    }
+}
+
+/// Which execution plane the runner drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    /// In-process actor scheduler.
+    Local,
+    /// Loopback distributed worker fleet (RemoteWorkerPool).
+    Distributed,
+}
+
+impl Plane {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Plane::Local => "local",
+            Plane::Distributed => "distributed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Plane> {
+        match s {
+            "local" => Some(Plane::Local),
+            "distributed" => Some(Plane::Distributed),
+            _ => None,
+        }
+    }
+}
+
+/// The full declarative workload (DESIGN.md §16).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    /// Prefix for every created job name (`{name}-{seq:05}`).
+    pub name: String,
+    /// Master seed: same spec + seed ⇒ bit-identical plan.
+    pub seed: u64,
+    pub plane: Plane,
+    /// Initial fleet size on the distributed plane.
+    pub workers: usize,
+    /// Open the service durably (WAL + snapshots); required for
+    /// `ReopenLeader` chaos.
+    pub durable: bool,
+    /// `false` paces phases against the wall clock; `true` skips pacing
+    /// sleeps entirely (virtual clock — CI-friendly).
+    pub virtual_clock: bool,
+    /// Use the noiseless platform model (deterministic objective curves).
+    pub noiseless: bool,
+    pub tenants: Vec<TenantSpec>,
+    pub mix: Vec<OpMix>,
+    pub job: JobShape,
+    pub phases: Vec<PhaseSpec>,
+    pub chaos: Vec<ChaosSpec>,
+}
+
+impl Workload {
+    /// Total ops across all phases.
+    pub fn total_ops(&self) -> u32 {
+        self.phases.iter().map(|p| p.ops).sum()
+    }
+
+    /// Canonical name of the `seq`-th created job.
+    pub fn job_name(&self, seq: usize) -> String {
+        format!("{}-{seq:05}", self.name)
+    }
+
+    /// The canned mixed workload used by `load_smoke`, `benches/load.rs`,
+    /// `amt load --canned` and `scale_soak --chaos`: three tenants, every
+    /// create flavor plus polling traffic, a steady→ramp→burst schedule and
+    /// a kill / late-join / drain chaos track on a 3-worker loopback fleet.
+    /// `scale` multiplies the per-phase op counts.
+    pub fn canned_mixed(name: &str, seed: u64, scale: u32) -> Workload {
+        let s = scale.max(1);
+        Workload {
+            name: name.to_string(),
+            seed,
+            plane: Plane::Distributed,
+            workers: 3,
+            durable: false,
+            virtual_clock: true,
+            noiseless: true,
+            tenants: vec![
+                TenantSpec { name: "acme".into(), weight: 3, max_in_flight: 4 },
+                TenantSpec { name: "zephyr".into(), weight: 2, max_in_flight: 2 },
+                TenantSpec { name: "solo".into(), weight: 1, max_in_flight: 0 },
+            ],
+            mix: vec![
+                OpMix { op: OpKind::CreateBo, weight: 2 },
+                OpMix { op: OpKind::CreateRandom, weight: 6 },
+                OpMix { op: OpKind::CreateGrid, weight: 3 },
+                OpMix { op: OpKind::CreateWarmStart, weight: 2 },
+                OpMix { op: OpKind::CreateEarlyStopping, weight: 2 },
+                OpMix { op: OpKind::CreateMultiObjective, weight: 2 },
+                OpMix { op: OpKind::Describe, weight: 5 },
+                OpMix { op: OpKind::List, weight: 2 },
+                OpMix { op: OpKind::Stop, weight: 1 },
+                OpMix { op: OpKind::Wait, weight: 2 },
+            ],
+            job: JobShape::default(),
+            phases: vec![
+                PhaseSpec { kind: PhaseKind::Steady, ops: 30 * s, rate: 150.0, rate_end: 150.0 },
+                PhaseSpec { kind: PhaseKind::Ramp, ops: 30 * s, rate: 75.0, rate_end: 300.0 },
+                PhaseSpec { kind: PhaseKind::Burst, ops: 20 * s, rate: 0.0, rate_end: 0.0 },
+            ],
+            chaos: vec![
+                ChaosSpec { at_op: 20 * s, action: ChaosAction::KillWorker(0) },
+                ChaosSpec { at_op: 40 * s, action: ChaosAction::JoinWorker },
+                ChaosSpec { at_op: 60 * s, action: ChaosAction::DrainWorker(1) },
+            ],
+        }
+    }
+
+    /// A small durable local-plane workload whose chaos track closes and
+    /// reopens the leader mid-run, exercising the recovery path under load.
+    pub fn canned_reopen(name: &str, seed: u64) -> Workload {
+        Workload {
+            name: name.to_string(),
+            seed,
+            plane: Plane::Local,
+            workers: 0,
+            durable: true,
+            virtual_clock: true,
+            noiseless: true,
+            tenants: vec![TenantSpec { name: "acme".into(), weight: 1, max_in_flight: 0 }],
+            mix: vec![
+                OpMix { op: OpKind::CreateRandom, weight: 5 },
+                OpMix { op: OpKind::CreateBo, weight: 1 },
+                OpMix { op: OpKind::Describe, weight: 3 },
+                OpMix { op: OpKind::Wait, weight: 2 },
+            ],
+            job: JobShape::default(),
+            phases: vec![PhaseSpec { kind: PhaseKind::Burst, ops: 24, rate: 0.0, rate_end: 0.0 }],
+            chaos: vec![ChaosSpec { at_op: 12, action: ChaosAction::ReopenLeader }],
+        }
+    }
+
+    /// Structural validation; returns the first problem found.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() || self.name.len() > 40 {
+            return Err("workload name must be 1..=40 chars".into());
+        }
+        if self.name.contains("-train-") {
+            return Err("workload name must not contain \"-train-\"".into());
+        }
+        if self.tenants.is_empty() {
+            return Err("workload needs at least one tenant".into());
+        }
+        for t in &self.tenants {
+            if t.name.len() > 64 {
+                return Err(format!("tenant name too long: {}", t.name));
+            }
+            if t.weight == 0 || t.weight > 100 {
+                return Err(format!("tenant {} weight must be 1..=100", t.name));
+            }
+            if t.max_in_flight > 1000 {
+                return Err(format!("tenant {} max_in_flight must be <= 1000", t.name));
+            }
+        }
+        if self.mix.is_empty() {
+            return Err("workload needs a non-empty op mix".into());
+        }
+        if !self.mix.iter().any(|m| m.op.is_create() && m.weight > 0) {
+            return Err("op mix needs at least one create kind with weight > 0".into());
+        }
+        if self.mix.iter().map(|m| m.weight as u64).sum::<u64>() == 0 {
+            return Err("op mix weights sum to zero".into());
+        }
+        if self.phases.is_empty() {
+            return Err("workload needs at least one phase".into());
+        }
+        for (i, p) in self.phases.iter().enumerate() {
+            if p.ops == 0 {
+                return Err(format!("phase {i} has zero ops"));
+            }
+            if !p.rate.is_finite() || p.rate < 0.0 || !p.rate_end.is_finite() || p.rate_end < 0.0 {
+                return Err(format!("phase {i} rates must be finite and >= 0"));
+            }
+        }
+        if self.job.max_training_jobs == 0 || self.job.max_training_jobs > 10_000 {
+            return Err("job.max_training_jobs must be 1..=10000".into());
+        }
+        if self.job.max_parallel_jobs == 0 || self.job.max_parallel_jobs > 100 {
+            return Err("job.max_parallel_jobs must be 1..=100".into());
+        }
+        let total = self.total_ops();
+        for (i, c) in self.chaos.iter().enumerate() {
+            if c.at_op >= total {
+                return Err(format!("chaos[{i}] at_op {} beyond total ops {total}", c.at_op));
+            }
+            match c.action {
+                ChaosAction::KillWorker(w) | ChaosAction::DrainWorker(w) => {
+                    if self.plane != Plane::Distributed {
+                        return Err(format!("chaos[{i}] needs the distributed plane"));
+                    }
+                    if w >= self.workers {
+                        return Err(format!(
+                            "chaos[{i}] worker index {w} out of range (workers = {})",
+                            self.workers
+                        ));
+                    }
+                }
+                ChaosAction::JoinWorker => {
+                    if self.plane != Plane::Distributed {
+                        return Err(format!("chaos[{i}] needs the distributed plane"));
+                    }
+                }
+                ChaosAction::ReopenLeader => {
+                    if !self.durable {
+                        return Err(format!("chaos[{i}] reopen_leader requires durable: true"));
+                    }
+                }
+            }
+        }
+        if self.plane == Plane::Distributed && self.workers == 0 {
+            return Err("distributed plane needs workers >= 1".into());
+        }
+        Ok(())
+    }
+
+    // -- JSON codec ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", json::u64_to_json(self.seed)),
+            ("plane", Json::Str(self.plane.as_str().to_string())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("durable", Json::Bool(self.durable)),
+            ("clock", Json::Str(
+                if self.virtual_clock { "virtual" } else { "wall" }.to_string(),
+            )),
+            ("platform", Json::Str(
+                if self.noiseless { "noiseless" } else { "default" }.to_string(),
+            )),
+            (
+                "tenants",
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("name", Json::Str(t.name.clone())),
+                                ("weight", Json::Num(t.weight as f64)),
+                                ("max_in_flight", Json::Num(t.max_in_flight as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "mix",
+                Json::Arr(
+                    self.mix
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("op", Json::Str(m.op.as_str().to_string())),
+                                ("weight", Json::Num(m.weight as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "job",
+                Json::obj(vec![
+                    ("objective", Json::Str(self.job.objective.clone())),
+                    ("max_training_jobs", Json::Num(self.job.max_training_jobs as f64)),
+                    ("max_parallel_jobs", Json::Num(self.job.max_parallel_jobs as f64)),
+                    ("max_retries_per_job", Json::Num(self.job.max_retries_per_job as f64)),
+                ]),
+            ),
+            (
+                "phases",
+                Json::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("kind", Json::Str(p.kind.as_str().to_string())),
+                                ("ops", Json::Num(p.ops as f64)),
+                                ("rate", Json::Num(p.rate)),
+                                ("rate_end", Json::Num(p.rate_end)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "chaos",
+                Json::Arr(
+                    self.chaos
+                        .iter()
+                        .map(|c| {
+                            let (action, worker) = match c.action {
+                                ChaosAction::KillWorker(w) => ("kill_worker", Some(w)),
+                                ChaosAction::JoinWorker => ("join_worker", None),
+                                ChaosAction::DrainWorker(w) => ("drain_worker", Some(w)),
+                                ChaosAction::ReopenLeader => ("reopen_leader", None),
+                            };
+                            let mut pairs = vec![
+                                ("at_op", Json::Num(c.at_op as f64)),
+                                ("action", Json::Str(action.to_string())),
+                            ];
+                            if let Some(w) = worker {
+                                pairs.push(("worker", Json::Num(w as f64)));
+                            }
+                            Json::obj(pairs)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Workload, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("workload: missing \"name\"")?
+            .to_string();
+        // Seed: accept both the crate's lossless hex form and a plain number.
+        let seed = match j.get("seed") {
+            None => 0,
+            Some(v) => json::u64_from_json(v)
+                .or_else(|| v.as_i64().map(|n| n as u64))
+                .ok_or("workload: bad \"seed\"")?,
+        };
+        let plane = match j.get("plane").and_then(Json::as_str) {
+            None => Plane::Distributed,
+            Some(s) => Plane::parse(s).ok_or_else(|| format!("workload: unknown plane {s:?}"))?,
+        };
+        let workers = j.get("workers").and_then(Json::as_i64).unwrap_or(3).max(0) as usize;
+        let durable = j.get("durable").and_then(Json::as_bool).unwrap_or(false);
+        let virtual_clock = match j.get("clock").and_then(Json::as_str) {
+            None => false,
+            Some("virtual") => true,
+            Some("wall") => false,
+            Some(s) => return Err(format!("workload: unknown clock {s:?}")),
+        };
+        let noiseless = match j.get("platform").and_then(Json::as_str) {
+            None | Some("noiseless") => true,
+            Some("default") => false,
+            Some(s) => return Err(format!("workload: unknown platform {s:?}")),
+        };
+        let mut tenants = Vec::new();
+        if let Some(arr) = j.get("tenants").and_then(Json::as_arr) {
+            for t in arr {
+                tenants.push(TenantSpec {
+                    name: t
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or("tenant: missing \"name\"")?
+                        .to_string(),
+                    weight: t.get("weight").and_then(Json::as_i64).unwrap_or(1) as u32,
+                    max_in_flight: t.get("max_in_flight").and_then(Json::as_i64).unwrap_or(0)
+                        as u32,
+                });
+            }
+        }
+        if tenants.is_empty() {
+            tenants.push(TenantSpec { name: String::new(), weight: 1, max_in_flight: 0 });
+        }
+        let mut mix = Vec::new();
+        if let Some(arr) = j.get("mix").and_then(Json::as_arr) {
+            for m in arr {
+                let op_str = m.get("op").and_then(Json::as_str).ok_or("mix: missing \"op\"")?;
+                let op = OpKind::parse(op_str)
+                    .ok_or_else(|| format!("mix: unknown op {op_str:?}"))?;
+                mix.push(OpMix {
+                    op,
+                    weight: m.get("weight").and_then(Json::as_i64).unwrap_or(1) as u32,
+                });
+            }
+        }
+        let job = match j.get("job") {
+            None => JobShape::default(),
+            Some(g) => {
+                let d = JobShape::default();
+                JobShape {
+                    objective: g
+                        .get("objective")
+                        .and_then(Json::as_str)
+                        .unwrap_or(&d.objective)
+                        .to_string(),
+                    max_training_jobs: g
+                        .get("max_training_jobs")
+                        .and_then(Json::as_i64)
+                        .unwrap_or(d.max_training_jobs as i64) as u32,
+                    max_parallel_jobs: g
+                        .get("max_parallel_jobs")
+                        .and_then(Json::as_i64)
+                        .unwrap_or(d.max_parallel_jobs as i64) as u32,
+                    max_retries_per_job: g
+                        .get("max_retries_per_job")
+                        .and_then(Json::as_i64)
+                        .unwrap_or(d.max_retries_per_job as i64) as u32,
+                }
+            }
+        };
+        let mut phases = Vec::new();
+        if let Some(arr) = j.get("phases").and_then(Json::as_arr) {
+            for p in arr {
+                let kind_str =
+                    p.get("kind").and_then(Json::as_str).ok_or("phase: missing \"kind\"")?;
+                let kind = PhaseKind::parse(kind_str)
+                    .ok_or_else(|| format!("phase: unknown kind {kind_str:?}"))?;
+                let rate = p.get("rate").and_then(Json::as_f64).unwrap_or(0.0);
+                phases.push(PhaseSpec {
+                    kind,
+                    ops: p.get("ops").and_then(Json::as_i64).unwrap_or(0) as u32,
+                    rate,
+                    rate_end: p.get("rate_end").and_then(Json::as_f64).unwrap_or(rate),
+                });
+            }
+        }
+        let mut chaos = Vec::new();
+        if let Some(arr) = j.get("chaos").and_then(Json::as_arr) {
+            for c in arr {
+                let at_op = c.get("at_op").and_then(Json::as_i64).unwrap_or(0) as u32;
+                let action_str =
+                    c.get("action").and_then(Json::as_str).ok_or("chaos: missing \"action\"")?;
+                let worker = c.get("worker").and_then(Json::as_i64).unwrap_or(0) as usize;
+                let action = match action_str {
+                    "kill_worker" => ChaosAction::KillWorker(worker),
+                    "join_worker" => ChaosAction::JoinWorker,
+                    "drain_worker" => ChaosAction::DrainWorker(worker),
+                    "reopen_leader" => ChaosAction::ReopenLeader,
+                    other => return Err(format!("chaos: unknown action {other:?}")),
+                };
+                chaos.push(ChaosSpec { at_op, action });
+            }
+        }
+        Ok(Workload {
+            name,
+            seed,
+            plane,
+            workers,
+            durable,
+            virtual_clock,
+            noiseless,
+            tenants,
+            mix,
+            job,
+            phases,
+            chaos,
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Workload, String> {
+        let j = json::parse(text).map_err(|e| format!("workload JSON parse error: {e:?}"))?;
+        Workload::from_json(&j)
+    }
+
+    // -- Planner ------------------------------------------------------------
+
+    /// Expand the spec into the concrete deterministic op sequence. A single
+    /// `Rng::new(seed)` drives every draw (op kind, tenant, per-job seed,
+    /// scalarization weight, poll target), so two plans from the same spec
+    /// are bit-identical and chaos soaks are replayable.
+    pub fn plan(&self) -> Plan {
+        let mut rng = Rng::new(self.seed);
+        let mut ops: Vec<PlannedOp> = Vec::new();
+        let mut creates: Vec<OpKind> = Vec::new();
+        // Seqs eligible as warm-start parents: registry objectives only
+        // (custom multi-objective jobs cannot be resolved as parents).
+        let mut warm_eligible: Vec<usize> = Vec::new();
+        let mut fired = vec![false; self.chaos.len()];
+        let mix_total: usize = self.mix.iter().map(|m| m.weight as usize).sum();
+        let tenant_total: usize = self.tenants.iter().map(|t| t.weight as usize).sum();
+        let mut global: u32 = 0;
+
+        for (phase_idx, phase) in self.phases.iter().enumerate() {
+            for _ in 0..phase.ops {
+                for (ci, c) in self.chaos.iter().enumerate() {
+                    if !fired[ci] && c.at_op <= global {
+                        fired[ci] = true;
+                        ops.push(PlannedOp::Chaos { index: ci });
+                    }
+                }
+                let mut kind = self.draw_mix(&mut rng, mix_total);
+                // Deterministic plan-time degradations: polls with nothing
+                // to poll become lists; warm starts with no eligible parent
+                // become plain random creates.
+                if matches!(kind, OpKind::Describe | OpKind::Stop | OpKind::Wait)
+                    && creates.is_empty()
+                {
+                    kind = OpKind::List;
+                }
+                if kind == OpKind::CreateWarmStart && warm_eligible.is_empty() {
+                    kind = OpKind::CreateRandom;
+                }
+                if kind.is_create() {
+                    let tenant = self.draw_tenant(&mut rng, tenant_total);
+                    let seq = creates.len();
+                    // Keep generated seeds < 2^48 so the Num(f64) codec in
+                    // TuningJobRequest round-trips them exactly.
+                    let job_seed = rng.next_u64() >> 16;
+                    let mut theta = None;
+                    let mut parents = Vec::new();
+                    let (strategy, early, objective) = match kind {
+                        OpKind::CreateBo => ("bayesian", "off", self.job.objective.clone()),
+                        OpKind::CreateRandom => ("random", "off", self.job.objective.clone()),
+                        OpKind::CreateGrid => ("grid", "off", self.job.objective.clone()),
+                        OpKind::CreateWarmStart => {
+                            let p = warm_eligible[rng.below(warm_eligible.len())];
+                            parents.push(self.job_name(p));
+                            ("bayesian", "off", self.job.objective.clone())
+                        }
+                        OpKind::CreateEarlyStopping => {
+                            ("random", "median", self.job.objective.clone())
+                        }
+                        OpKind::CreateMultiObjective => {
+                            theta = Some(0.1 + 0.8 * rng.uniform());
+                            ("random", "off", "scalarized-bi".to_string())
+                        }
+                        _ => unreachable!(),
+                    };
+                    let t = &self.tenants[tenant];
+                    let request = TuningJobRequest {
+                        name: self.job_name(seq),
+                        objective,
+                        strategy: strategy.to_string(),
+                        max_training_jobs: self.job.max_training_jobs,
+                        max_parallel_jobs: self.job.max_parallel_jobs,
+                        early_stopping: early.to_string(),
+                        seed: job_seed,
+                        warm_start_parents: parents,
+                        max_retries_per_job: self.job.max_retries_per_job,
+                        tenant_weight: t.weight,
+                        tenant: t.name.clone(),
+                        max_in_flight: t.max_in_flight,
+                        ..TuningJobRequest::default()
+                    };
+                    if kind != OpKind::CreateMultiObjective {
+                        warm_eligible.push(seq);
+                    }
+                    creates.push(kind);
+                    ops.push(PlannedOp::Create(CreateOp { seq, kind, tenant, theta, request }));
+                } else {
+                    let op = match kind {
+                        OpKind::Describe => {
+                            PlannedOp::Describe { target: rng.below(creates.len()) }
+                        }
+                        OpKind::List => PlannedOp::List,
+                        OpKind::Stop => PlannedOp::Stop { target: rng.below(creates.len()) },
+                        OpKind::Wait => PlannedOp::Wait { target: rng.below(creates.len()) },
+                        _ => unreachable!(),
+                    };
+                    ops.push(op);
+                }
+                global += 1;
+            }
+            ops.push(PlannedOp::PhaseEnd { phase: phase_idx });
+        }
+        // Any chaos entry validated as in-range has fired by now; fire
+        // stragglers defensively anyway so counts always reconcile.
+        for (ci, _) in self.chaos.iter().enumerate() {
+            if !fired[ci] {
+                ops.push(PlannedOp::Chaos { index: ci });
+            }
+        }
+        Plan { ops, creates: creates.len() }
+    }
+
+    fn draw_mix(&self, rng: &mut Rng, total: usize) -> OpKind {
+        let mut roll = rng.below(total);
+        for m in &self.mix {
+            if roll < m.weight as usize {
+                return m.op;
+            }
+            roll -= m.weight as usize;
+        }
+        self.mix.last().expect("mix validated non-empty").op
+    }
+
+    fn draw_tenant(&self, rng: &mut Rng, total: usize) -> usize {
+        let mut roll = rng.below(total);
+        for (i, t) in self.tenants.iter().enumerate() {
+            if roll < t.weight as usize {
+                return i;
+            }
+            roll -= t.weight as usize;
+        }
+        self.tenants.len() - 1
+    }
+}
+
+/// One fully-resolved create operation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CreateOp {
+    /// Creation sequence number (names are `{workload}-{seq:05}`).
+    pub seq: usize,
+    pub kind: OpKind,
+    /// Index into `Workload::tenants`.
+    pub tenant: usize,
+    /// Scalarization weight for multi-objective creates.
+    pub theta: Option<f64>,
+    /// The complete request submitted to the service.
+    pub request: TuningJobRequest,
+}
+
+/// One planned operation. Poll targets are creation sequence numbers
+/// resolved at plan time, so the whole sequence is deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlannedOp {
+    Create(CreateOp),
+    Describe { target: usize },
+    List,
+    Stop { target: usize },
+    Wait { target: usize },
+    /// Fire `Workload::chaos[index]`.
+    Chaos { index: usize },
+    /// End of `Workload::phases[phase]`: run mid-run observers.
+    PhaseEnd { phase: usize },
+}
+
+/// The expanded deterministic op sequence.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Plan {
+    pub ops: Vec<PlannedOp>,
+    /// Number of create operations in `ops`.
+    pub creates: usize,
+}
+
+impl Plan {
+    /// Creation-sequence numbers targeted by a planned `Stop`.
+    pub fn stop_targets(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                PlannedOp::Stop { target } => Some(*target),
+                _ => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// All planned creates, in sequence order.
+    pub fn creates(&self) -> Vec<&CreateOp> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                PlannedOp::Create(c) => Some(c),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Number of chaos firing points in the plan.
+    pub fn chaos_count(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, PlannedOp::Chaos { .. }))
+            .count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-objective scalarization
+// ---------------------------------------------------------------------------
+
+/// Bi-objective workload scalarized with an augmented-Chebyshev combination
+/// (the ParEGO construction): objective one is the Branin value, objective
+/// two a deterministic "resource cost" proxy derived from the config's
+/// numeric magnitude. Submitted through `create_custom_tuning_job`, which
+/// always runs on the local scheduler even when a remote plane is attached.
+pub struct ScalarizedBiObjective {
+    base: Analytic,
+    theta: f64,
+}
+
+impl ScalarizedBiObjective {
+    pub fn new(theta: f64) -> Self {
+        ScalarizedBiObjective { base: Analytic::branin(), theta: theta.clamp(0.01, 0.99) }
+    }
+
+    fn scalarize(&self, quality: f64, cost: f64) -> f64 {
+        let a = self.theta * quality;
+        let b = (1.0 - self.theta) * cost;
+        a.max(b) + 0.05 * (a + b)
+    }
+}
+
+impl Objective for ScalarizedBiObjective {
+    fn name(&self) -> &str {
+        "scalarized-bi"
+    }
+
+    fn space(&self) -> SearchSpace {
+        self.base.space()
+    }
+
+    fn max_epochs(&self) -> u32 {
+        self.base.max_epochs()
+    }
+
+    fn curve(&self, config: &Config, seed: u64) -> Vec<f64> {
+        // Cost proxy in [0, 1): RMS magnitude of the numeric hyperparameters,
+        // squashed. Deterministic in the config alone.
+        let mut sq = 0.0;
+        let mut n = 0u32;
+        for v in config.values() {
+            if let Some(x) = v.as_f64() {
+                sq += x * x;
+                n += 1;
+            }
+        }
+        let rms = if n > 0 { (sq / n as f64).sqrt() } else { 0.0 };
+        let cost = rms / (1.0 + rms);
+        self.base
+            .curve(config, seed)
+            .into_iter()
+            .map(|f1| {
+                let quality = f1 / (1.0 + f1.abs());
+                self.scalarize(quality, cost)
+            })
+            .collect()
+    }
+
+    fn epoch_seconds(&self, config: &Config) -> f64 {
+        self.base.epoch_seconds(config)
+    }
+}

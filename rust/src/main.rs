@@ -33,6 +33,14 @@
 //!                                  print its slice lifecycle: propose →
 //!                                  dispatch → worker_poll → delta_apply
 //!                                  → group_commit → outcome
+//!   amt load <workload.json> [--report-every 5] [--json] [--seed N]
+//!   amt load --canned [--scale 1]  run a declarative mixed workload with
+//!                                  chaos injection (DESIGN.md §16): per-op
+//!                                  SLO histograms (load.*_us), live
+//!                                  one-line stats, and invariant observers;
+//!                                  exits non-zero if any observer fails.
+//!                                  --print-canned dumps the canned spec's
+//!                                  JSON as a starting template.
 //!
 //! (The vendored offline crate set has no clap; argument parsing is a small
 //! hand-rolled layer over std::env.)
@@ -491,6 +499,47 @@ fn cmd_trace(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
     Ok(())
 }
 
+fn cmd_load(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use amt::load::{Runner, Workload};
+    let seed: u64 = flag(flags, "seed", "42").parse()?;
+    let scale: u32 = flag(flags, "scale", "1").parse()?;
+    let workload = if flags.contains_key("canned") || flags.contains_key("print-canned") {
+        Workload::canned_mixed("cli-load", seed, scale)
+    } else if let Some(path) = pos.get(1) {
+        Workload::from_json_str(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+    } else {
+        anyhow::bail!("usage: amt load <workload.json> | amt load --canned");
+    };
+    if flags.contains_key("print-canned") {
+        println!("{}", workload.to_json().to_pretty());
+        return Ok(());
+    }
+    let mut runner = Runner::new(workload).map_err(|e| anyhow::anyhow!("workload: {e}"))?;
+    let every: u64 = flag(flags, "report-every", "5").parse()?;
+    runner.set_report_every(
+        (every > 0).then(|| std::time::Duration::from_secs(every)),
+    );
+    let report = runner.run().map_err(|e| anyhow::anyhow!("load run: {e}"))?;
+    if flags.contains_key("json") {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    anyhow::ensure!(
+        report.all_passed(),
+        "invariant observers FAILED:\n{}",
+        report
+            .observers
+            .failed()
+            .iter()
+            .map(|c| format!("  {}: {}", c.name, c.detail))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    Ok(())
+}
+
 fn cmd_snapshot(path: &str) -> anyhow::Result<()> {
     let service = AmtService::new(PlatformConfig::default());
     let request = TuningJobRequest {
@@ -525,9 +574,10 @@ fn main() {
         "serve" => cmd_serve(&flags),
         "stats" => cmd_stats(&flags),
         "trace" => cmd_trace(&pos, &flags),
+        "load" => cmd_load(&pos, &flags),
         _ => {
             println!(
-                "usage: amt <tune|objectives|artifacts-check|snapshot|worker|serve|stats|trace> \
+                "usage: amt <tune|objectives|artifacts-check|snapshot|worker|serve|stats|trace|load> \
                  [--flags]\n\
                  see module docs in rust/src/main.rs"
             );

@@ -23,8 +23,11 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
-/// Ring capacity: old events are dropped (and counted) past this.
-const RING_CAP: usize = 65_536;
+/// Ring capacity: old events are dropped past this, and every overwrite
+/// increments the `telemetry.trace_dropped` counter surfaced by
+/// [`crate::api::AmtService::telemetry_snapshot`] — overflow is never
+/// silent. Public so overflow tests can size their fill loops.
+pub const RING_CAP: usize = 65_536;
 
 /// One structured trace event. `t_us` is microseconds on the process
 /// clock ([`super::now_us`]).

@@ -1,0 +1,186 @@
+//! Load & chaos observatory integration tests (DESIGN.md §16).
+//!
+//! - determinism property: two `Runner`s built from the same workload
+//!   JSON + seed expand to the bit-identical operation sequence (op
+//!   kinds, tenants, full requests, chaos firing points), so every chaos
+//!   soak is replayable;
+//! - `load_smoke`: the CI-named mixed workload on the loopback
+//!   distributed plane with a worker kill, a late join and a graceful
+//!   drain — every invariant observer must pass and the per-op `load.*`
+//!   histograms must be nonzero;
+//! - a durable local-plane workload whose chaos track closes and reopens
+//!   the leader mid-run.
+
+use std::collections::BTreeSet;
+
+use amt::load::{ChaosAction, OpKind, PlannedOp, Runner, Workload};
+
+#[test]
+fn same_seed_plans_are_identical() {
+    let spec = Workload::canned_mixed("det-load", 1234, 1);
+    let text = spec.to_json().to_string();
+
+    let a = Runner::from_json_str(&text).expect("valid workload");
+    let b = Runner::from_json_str(&text).expect("valid workload");
+    assert_eq!(
+        a.plan(),
+        b.plan(),
+        "same workload JSON + seed must expand to the identical op sequence"
+    );
+
+    // The JSON codec round-trips the spec exactly, plan included.
+    let reparsed = Workload::from_json_str(&text).expect("roundtrip parse");
+    assert_eq!(spec, reparsed, "workload JSON roundtrip must be lossless");
+    assert_eq!(&spec.plan(), a.plan());
+
+    // Chaos firing points are part of the deterministic sequence.
+    let chaos_positions = |r: &Runner| -> Vec<(usize, usize)> {
+        r.plan()
+            .ops
+            .iter()
+            .enumerate()
+            .filter_map(|(i, op)| match op {
+                PlannedOp::Chaos { index } => Some((i, *index)),
+                _ => None,
+            })
+            .collect()
+    };
+    assert_eq!(chaos_positions(&a), chaos_positions(&b));
+    assert_eq!(chaos_positions(&a).len(), spec.chaos.len(), "every chaos entry fires once");
+
+    // A different seed reshuffles the stream (op kinds and/or configs).
+    let other = Workload::canned_mixed("det-load", 1235, 1);
+    let c = Runner::new(other).expect("valid workload");
+    assert_ne!(a.plan(), c.plan(), "different seeds must yield different plans");
+}
+
+#[test]
+fn workload_validation_rejects_bad_specs() {
+    // Chaos beyond the schedule.
+    let mut w = Workload::canned_mixed("bad-load", 1, 1);
+    w.chaos[0].at_op = w.total_ops();
+    assert!(w.validate().is_err(), "chaos past the last op must be rejected");
+
+    // Kill of a worker index outside the fleet.
+    let mut w = Workload::canned_mixed("bad-load", 1, 1);
+    w.chaos[0].action = ChaosAction::KillWorker(w.workers);
+    assert!(w.validate().is_err(), "kill of an out-of-range worker must be rejected");
+
+    // Fleet chaos requires the distributed plane.
+    let mut w = Workload::canned_mixed("bad-load", 1, 1);
+    w.plane = amt::load::Plane::Local;
+    assert!(w.validate().is_err(), "kill/join/drain on the local plane must be rejected");
+
+    // Leader reopen requires durability.
+    let mut w = Workload::canned_reopen("bad-load", 1);
+    w.durable = false;
+    assert!(w.validate().is_err(), "reopen_leader without durable must be rejected");
+
+    // A mix with no create kind can never make progress.
+    let mut w = Workload::canned_mixed("bad-load", 1, 1);
+    w.mix.retain(|m| !m.op.is_create());
+    assert!(w.validate().is_err(), "mix without creates must be rejected");
+
+    // Unknown fields in the codec fail loudly.
+    assert!(Workload::from_json_str("{\"name\":\"x\",\"plane\":\"orbital\"}").is_err());
+    assert!(Workload::from_json_str("not json").is_err());
+}
+
+/// The CI `load_smoke` step: a ~10s mixed workload (every create flavor
+/// plus describe/list/stop/wait polling) on the loopback distributed
+/// plane with one worker kill, one late join and one graceful drain. All
+/// invariant observers must pass and the SLO histograms must be nonzero.
+#[test]
+fn load_smoke_mixed_distributed_kill_drain() {
+    let workload = Workload::canned_mixed("smoke-load", 42, 1);
+    let runner = Runner::new(workload).expect("canned workload is valid");
+
+    // The canned plan really is "mixed": at least 3 distinct op kinds and
+    // at least 2 chaos events, as the acceptance criteria demand.
+    let kinds: BTreeSet<&'static str> = runner
+        .plan()
+        .ops
+        .iter()
+        .filter_map(|op| match op {
+            PlannedOp::Create(c) => Some(c.kind.as_str()),
+            PlannedOp::Describe { .. } => Some("describe"),
+            PlannedOp::List => Some("list"),
+            PlannedOp::Stop { .. } => Some("stop"),
+            PlannedOp::Wait { .. } => Some("wait"),
+            _ => None,
+        })
+        .collect();
+    assert!(kinds.len() >= 3, "canned mix degenerated to {kinds:?}");
+    assert!(runner.plan().chaos_count() >= 2, "canned plan must fire >= 2 chaos events");
+
+    let report = runner.run().expect("run completes");
+    assert!(
+        report.all_passed(),
+        "invariant observers failed:\n{}",
+        report.observers.render()
+    );
+    assert!(report.jobs_created > 0, "no jobs created");
+    assert!(report.evaluations > 0, "no evaluations recorded");
+    assert_eq!(report.chaos_fired as usize, runner.plan().chaos_count());
+    assert!(report.pool.joins >= 4, "3 initial workers + 1 late join expected");
+    assert!(report.pool.drains >= 1, "graceful drain must complete");
+
+    for name in ["load.create_us", "load.describe_us", "load.wait_us"] {
+        let h = report
+            .snapshot
+            .histogram(name)
+            .unwrap_or_else(|| panic!("{name} missing from merged snapshot"));
+        assert!(h.count > 0, "{name} recorded no operations");
+    }
+}
+
+/// Warm-start chains survive a create targeting a registry-objective
+/// parent: the plan only selects eligible parents, and the runner
+/// barriers on the parent before resolving the transfer set.
+#[test]
+fn warm_start_chains_resolve_against_finished_parents() {
+    let mut workload = Workload::canned_mixed("warm-load", 7, 1);
+    // Bias the mix hard toward warm starts so the chain is exercised.
+    for m in &mut workload.mix {
+        m.weight = match m.op {
+            OpKind::CreateRandom => 3,
+            OpKind::CreateWarmStart => 6,
+            OpKind::Describe => 2,
+            _ => 1,
+        };
+    }
+    workload.phases.truncate(1);
+    workload.phases[0].ops = 24;
+    workload.chaos.clear();
+    let runner = Runner::new(workload).expect("valid workload");
+    let has_warm = runner
+        .plan()
+        .creates()
+        .iter()
+        .any(|c| !c.request.warm_start_parents.is_empty());
+    assert!(has_warm, "biased mix produced no warm-start creates");
+    let report = runner.run().expect("run completes");
+    assert!(
+        report.all_passed(),
+        "invariant observers failed:\n{}",
+        report.observers.render()
+    );
+}
+
+/// Durable local-plane workload with a leader close+reopen mid-run: the
+/// run continues against the reopened service and the observers (version
+/// monotonicity across the reopen, replay attribution, conservation)
+/// still pass.
+#[test]
+fn reopen_leader_mid_run_keeps_invariants() {
+    let workload = Workload::canned_reopen("reopen-load", 11);
+    let runner = Runner::new(workload).expect("valid workload");
+    let report = runner.run().expect("run completes");
+    assert!(
+        report.all_passed(),
+        "invariant observers failed:\n{}",
+        report.observers.render()
+    );
+    assert_eq!(report.chaos_fired, 1, "the reopen must fire exactly once");
+    assert!(report.jobs_created > 0);
+}

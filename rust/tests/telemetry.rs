@@ -241,3 +241,54 @@ fn enabled_flag_and_sampling_gate_the_trace_plane() {
     assert!(telemetry::trace::ensure_trace("sample-probe-final").is_some());
     telemetry::trace::forget("sample-probe-final");
 }
+
+/// Satellite: trace-ring overflow must never be silent. Overfilling the
+/// bounded ring increments the dropped counter, and the counter is
+/// exported as `telemetry.trace_dropped` in every service snapshot (and
+/// therefore in the `amt stats` table).
+#[test]
+fn trace_ring_overflow_is_counted_and_exported() {
+    use amt::api::AmtService;
+    use amt::platform::PlatformConfig;
+    use amt::telemetry::trace::RING_CAP;
+
+    let job = "overflow-job";
+    let id = telemetry::trace::ensure_trace(job).expect("telemetry defaults on");
+    let dropped_before = telemetry::trace::dropped();
+    // Overfill: RING_CAP events land, then every further event evicts
+    // (and counts) one. Other tests in this binary may also be writing
+    // events concurrently, so assert a lower bound, not equality.
+    const EXCESS: usize = 128;
+    for _ in 0..RING_CAP + EXCESS {
+        telemetry::trace::event(id, job, "dispatch");
+    }
+    let newly_dropped = telemetry::trace::dropped() - dropped_before;
+    assert!(
+        newly_dropped >= EXCESS as u64,
+        "overfilling by {EXCESS} dropped only {newly_dropped} events"
+    );
+
+    // The counter rides every service telemetry snapshot by name.
+    let service = AmtService::new(PlatformConfig::noiseless());
+    let snapshot = service.telemetry_snapshot();
+    let exported = snapshot
+        .counter("telemetry.trace_dropped")
+        .expect("telemetry.trace_dropped missing from snapshot");
+    assert!(
+        exported >= newly_dropped,
+        "snapshot exported {exported} < {newly_dropped} observed drops"
+    );
+    assert!(
+        snapshot.counter("telemetry.trace_minted").is_some(),
+        "telemetry.trace_minted missing from snapshot"
+    );
+    // ... and therefore in the rendered `amt stats` table.
+    assert!(
+        snapshot.render_table().contains("telemetry.trace_dropped"),
+        "stats table must list telemetry.trace_dropped"
+    );
+
+    // Leave the global ring tidy for other tests in this binary.
+    telemetry::trace::drain();
+    telemetry::trace::forget(job);
+}

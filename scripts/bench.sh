@@ -18,6 +18,11 @@
 # (DESIGN.md §11): frame encode/decode throughput, loopback round-trip
 # latency and a 200-job soak through the RemoteWorkerPool.
 #
+# BENCH_load.json entries are the load observatory's per-op SLO trajectory
+# (DESIGN.md §16): p50/p99/p999 of load.create_us/describe_us/... across
+# the canned mixed chaos workload, plus achieved-vs-target throughput per
+# steady/ramp/burst phase. Emitted only if every invariant observer passed.
+#
 # Usage:
 #   scripts/bench.sh            # run + diff (fails on >TOLERANCE regressions)
 #   scripts/bench.sh --update   # run + overwrite the committed baselines
@@ -39,11 +44,13 @@ echo "== running recovery bench (WAL append/replay + 200-job open) =="
 AMT_BENCH_DIR="$run_dir" cargo bench --bench recovery
 echo "== running distributed bench (frame codec, loopback RTT, remote soak) =="
 AMT_BENCH_DIR="$run_dir" cargo bench --bench distributed
+echo "== running load observatory (canned mixed chaos workload, DESIGN.md §16) =="
+AMT_BENCH_DIR="$run_dir" cargo bench --bench load
 echo "== running scale soak (200- and 1000-job spikes, both planes) =="
 AMT_BENCH_DIR="$run_dir" cargo run --release --example scale_soak -- 200 1000 --distributed 4
 
 status=0
-for f in BENCH_propose.json BENCH_gp_fit.json BENCH_recovery.json BENCH_distributed.json BENCH_soak.json; do
+for f in BENCH_propose.json BENCH_gp_fit.json BENCH_recovery.json BENCH_distributed.json BENCH_soak.json BENCH_load.json; do
     fresh="$run_dir/$f"
     if [ ! -f "$fresh" ]; then
         echo "ERROR: bench did not produce $f" >&2
@@ -58,6 +65,12 @@ for f in BENCH_propose.json BENCH_gp_fit.json BENCH_recovery.json BENCH_distribu
             echo "ERROR: refusing to overwrite populated $f with an empty placeholder" >&2
             status=1
             continue
+        fi
+        if [ "$MODE" != "--update" ]; then
+            # A committed baseline with zero real entries means this file has
+            # never been measured: the diff below would trivially pass with
+            # every fresh entry marked NEW. Say so explicitly.
+            echo "WARNING: $f BASELINE MISSING — run with --update on a toolchain machine"
         fi
         cp "$fresh" "$f"
         echo "baseline written: $f"

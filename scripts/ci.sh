@@ -47,6 +47,16 @@ cargo test -q --release --test throughput throughput_smoke
 echo "== telemetry smoke: metrics + trace lifecycle (16 jobs) =="
 cargo test -q --release --test throughput telemetry_smoke
 
+# load smoke (DESIGN.md §16): ~10 s declarative mixed workload (every
+# create flavor plus describe/list/stop/wait polling) on the loopback
+# distributed plane with one worker kill, one late join and one graceful
+# drain. Every invariant observer (job conservation, terminal status,
+# store-version monotonicity, counter conservation, replay attribution,
+# bit-identity vs an uninterrupted reference) must pass and the per-op
+# load.* SLO histograms must be nonzero.
+echo "== load smoke: mixed workload + kill/join/drain observers =="
+cargo test -q --release --test load_harness load_smoke
+
 if [ "${1:-}" = "--bench" ]; then
     echo "== perf trajectory: scripts/bench.sh =="
     scripts/bench.sh
