@@ -92,6 +92,111 @@ fn main() {
         .chain(backends.iter().map(|(n, _)| *n))
         .collect();
     print_table("BO proposal p50 latency (light MCMC, 512 anchors)", &header, &rows);
+
+    // Pipeline scenarios (DESIGN.md §17): the latency left on the
+    // critical path between a landed outcome and the next launch.
+    // "sync" is the full BO round the actor runs on that path today;
+    // "pipelined-commit" is the validity check that replaces it when an
+    // idle-tail speculation commits; "cache-hit" is the store lookup
+    // that replaces a whole training job for an already-seen config.
+    let mk_bo = || {
+        BayesianOptimization::new(
+            sp.clone(),
+            Arc::new(NativeBackend) as Arc<dyn SurrogateBackend>,
+            BoConfig {
+                init_random: 4,
+                gphp: GphpMode::Mcmc(amt::gp::slice::SliceConfig::light()),
+                acq: AcquisitionConfig { num_anchors: 512, ..Default::default() },
+                ..Default::default()
+            },
+            1,
+        )
+    };
+    let n = 50;
+    let hist = history(&sp, n, n as u64);
+
+    let mut bo = mk_bo();
+    let sync_stats = bench("propose sync n=50", 1, 5, || {
+        let c = bo.next_config(&hist, &[]);
+        std::hint::black_box(c);
+    });
+    report.push(
+        "propose sync n=50",
+        &[("mode", "synchronous".to_string()), ("n", n.to_string())],
+        &sync_stats,
+    );
+
+    // speculate in the (free) idle tail, then land the real outcome
+    // bit-equal to the fantasy so every timed iteration takes the
+    // commit path
+    let base = &hist[..n - 1];
+    let landed_cfg = hist[n - 1].config.clone();
+    let mut bo = mk_bo();
+    let spec = amt::strategies::speculate(&mut bo, base, &[], landed_cfg.clone());
+    let mut landed = base.to_vec();
+    landed.push(Observation { config: landed_cfg, value: spec.fantasy_value });
+    assert!(spec.matches(&landed, &[]), "bench must exercise the commit path");
+    let commit_stats = bench("propose pipelined-commit n=50", 10, 2000, || {
+        let hit = spec.matches(&landed, &[]);
+        std::hint::black_box((hit, &spec.config));
+    });
+    report.push(
+        "propose pipelined-commit n=50",
+        &[("mode", "pipelined-commit".to_string()), ("n", n.to_string())],
+        &commit_stats,
+    );
+
+    // cache hit path: 1024 recorded entries, 64 lookups per iteration
+    let store = amt::store::MetadataStore::new();
+    let mut rng = Rng::new(7);
+    let keys: Vec<String> = (0..1024)
+        .map(|_| {
+            let key = amt::coordinator::eval_cache_key("branin", &sp.sample(&mut rng));
+            store.eval_cache_put(
+                &key,
+                amt::json::Json::obj(vec![
+                    ("owner", amt::json::Json::Str("bench".into())),
+                    ("objective", amt::json::Json::Str("branin".into())),
+                    (
+                        "curve",
+                        amt::json::Json::Arr(
+                            (0..8).map(|e| amt::json::Json::Num(e as f64)).collect(),
+                        ),
+                    ),
+                    ("final_value", amt::json::Json::Num(0.25)),
+                    ("status", amt::json::Json::Str("Completed".into())),
+                    ("stopped_early", amt::json::Json::Bool(false)),
+                ]),
+            );
+            key
+        })
+        .collect();
+    let hit_stats = bench("cache hit x64 (1024 entries)", 10, 2000, || {
+        for k in &keys[..64] {
+            std::hint::black_box(store.eval_cache_get(k));
+        }
+    });
+    report.push(
+        "cache hit x64 (1024 entries)",
+        &[("mode", "cache-hit".to_string()), ("entries", "1024".to_string())],
+        &hit_stats,
+    );
+
+    print_table(
+        "critical-path latency per landed outcome (p50)",
+        &["path", "p50"],
+        &[
+            vec!["sync propose".to_string(), amt::harness::fmt_secs(sync_stats.p50)],
+            vec![
+                "pipelined commit".to_string(),
+                amt::harness::fmt_secs(commit_stats.p50),
+            ],
+            vec![
+                "cache hit (64 lookups)".to_string(),
+                amt::harness::fmt_secs(hit_stats.p50),
+            ],
+        ],
+    );
     match report.write() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("WARN: could not write bench report: {e}"),

@@ -681,7 +681,20 @@ impl AmtService {
         }
 
         let sign = if objective.minimize() { 1.0 } else { -1.0 };
-        let transferred = self.resolve_parents_for(&request, sign, &objective.space())?;
+        // the persisted `warm_start` row is authoritative when present
+        // (a resume re-entering the create path, or a reseed that kept
+        // the row): reuse it instead of re-running the paginated parent
+        // scans — the observations are exactly what the original create
+        // computed, which is also what resolution would re-produce
+        let transferred = match self
+            .store
+            .get("warm_start", &request.name)
+            .filter(|_| !request.warm_start_parents.is_empty())
+            .and_then(|(_, j)| observations_from_json(j.get("observations")?))
+        {
+            Some(obs) => obs,
+            None => self.resolve_parents_for(&request, sign, &objective.space())?,
+        };
         self.create_prepared(request, objective, transferred, remote_ok)
     }
 
@@ -881,6 +894,26 @@ pub fn config_num(config: &crate::space::Config, key: &str) -> Option<f64> {
 /// `-train-` (request validation), so no other job name is an extension
 /// of this prefix.
 pub(crate) fn reset_job_records(store: &MetadataStore, metrics: &MetricsService, name: &str) {
+    // evaluation-cache entries this job recorded must not survive into
+    // its deterministic replay: a replayed evaluation hitting its own
+    // pre-crash entry would short-circuit where the original trained,
+    // diverging from the uninterrupted timeline. Entries owned by other
+    // jobs are untouched. The job record still exists at this point (it
+    // is deleted just below), so the objective — and with it the cache
+    // key prefix — is recoverable from it.
+    if let Some((_, job)) = store.get("tuning_jobs", name) {
+        if let Some(obj) = job
+            .get("request")
+            .and_then(|r| r.get("objective"))
+            .and_then(Json::as_str)
+        {
+            for (key, entry) in store.scan(crate::store::EVAL_CACHE_TABLE, &format!("{obj}|")) {
+                if entry.get("owner").and_then(Json::as_str) == Some(name) {
+                    store.delete(crate::store::EVAL_CACHE_TABLE, &key);
+                }
+            }
+        }
+    }
     store.delete("tuning_jobs", name);
     store.delete("warm_start", name);
     for key in store.list_keys("training_jobs", &format!("{name}-train-")) {

@@ -45,6 +45,20 @@ pub struct TuningJobRequest {
     /// Jobs sharing a `tenant` should carry the same `max_in_flight`
     /// (the most recently registered non-zero value wins).
     pub max_in_flight: u32,
+    /// Enable the speculative proposal pipeline (DESIGN.md §17): while
+    /// parallel slots are full, the strategy pre-computes the next
+    /// proposal against a constant-liar fantasy observation in the
+    /// scheduler's idle tail. Off (the default) preserves the exact
+    /// synchronous proposal path; on, outcomes are still bit-identical
+    /// (commits only happen when provably byte-equivalent).
+    pub speculative: bool,
+    /// Enable the cross-job evaluation cache (DESIGN.md §17): proposals
+    /// whose typed-config key already has a recorded outcome for this
+    /// objective short-circuit the training platform and replay the
+    /// recorded metric series. Off by default — cached outcomes arrive
+    /// instantly, which changes the virtual timeline versus an uncached
+    /// run.
+    pub eval_cache: bool,
 }
 
 impl Default for TuningJobRequest {
@@ -63,6 +77,8 @@ impl Default for TuningJobRequest {
             tenant_weight: 1,
             tenant: String::new(),
             max_in_flight: 0,
+            speculative: false,
+            eval_cache: false,
         }
     }
 }
@@ -163,6 +179,8 @@ impl TuningJobRequest {
             ("tenant_weight", Json::Num(self.tenant_weight as f64)),
             ("tenant", Json::Str(self.tenant.clone())),
             ("max_in_flight", Json::Num(self.max_in_flight as f64)),
+            ("speculative", Json::Bool(self.speculative)),
+            ("eval_cache", Json::Bool(self.eval_cache)),
         ])
     }
 
@@ -194,6 +212,9 @@ impl TuningJobRequest {
             tenant_weight: get_u32("tenant_weight", d.tenant_weight),
             tenant: get_str("tenant", &d.tenant),
             max_in_flight: get_u32("max_in_flight", d.max_in_flight),
+            // absent on pre-pipeline wire payloads ⇒ both features off
+            speculative: j.get("speculative").and_then(Json::as_bool).unwrap_or(false),
+            eval_cache: j.get("eval_cache").and_then(Json::as_bool).unwrap_or(false),
         })
     }
 }
@@ -256,6 +277,8 @@ mod tests {
         r.tenant_weight = 3;
         r.tenant = "acme".into();
         r.max_in_flight = 2;
+        r.speculative = true;
+        r.eval_cache = true;
         let j = r.to_json();
         let back = TuningJobRequest::from_json(&crate::json::parse(&j.to_string()).unwrap())
             .unwrap();

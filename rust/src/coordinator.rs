@@ -64,6 +64,9 @@ pub struct EvaluationRecord {
     pub submitted_at: f64,
     /// Virtual terminal time.
     pub ended_at: f64,
+    /// True when the outcome was served from the cross-job evaluation
+    /// cache (DESIGN.md §17) — no training job ever ran for this record.
+    pub cached: bool,
 }
 
 /// Result of a completed tuning job.
@@ -101,6 +104,7 @@ impl EvaluationRecord {
             ("attempts", Json::Num(self.attempts as f64)),
             ("submitted_at", Json::Num(self.submitted_at)),
             ("ended_at", Json::Num(self.ended_at)),
+            ("cached", Json::Bool(self.cached)),
         ])
     }
 
@@ -116,6 +120,8 @@ impl EvaluationRecord {
             attempts: j.get("attempts")?.as_i64()? as u32,
             submitted_at: j.get("submitted_at")?.as_f64()?,
             ended_at: j.get("ended_at")?.as_f64()?,
+            // absent on pre-cache records ⇒ not cached
+            cached: j.get("cached").and_then(Json::as_bool).unwrap_or(false),
         })
     }
 }
@@ -165,6 +171,19 @@ struct LoopCtx {
     retries: u32,
     /// per-eval remaining retry budget
     retry_budget: Vec<u32>,
+    /// In-flight speculative proposal (DESIGN.md §17), populated by
+    /// [`JobActor::speculate_step`] in the scheduler's idle tail and
+    /// consumed (commit or discard) by the next [`LoopCtx::launch_new`].
+    speculation: Option<crate::strategies::Speculation>,
+}
+
+/// Canonical evaluation-cache key: `"{objective}|{typed-config JSON}"`.
+/// [`crate::space::config_to_json_typed`] is an exact (bit-preserving,
+/// key-sorted) encoding, so two configs share a key iff they are the same
+/// point of the same objective's space — and one objective's entries form
+/// a contiguous, prefix-scannable range in the `eval_cache` table.
+pub fn eval_cache_key(objective: &str, config: &Config) -> String {
+    format!("{objective}|{}", crate::space::config_to_json_typed(config))
 }
 
 /// Schema version of the checkpoint payload [`JobActor::poll`] writes.
@@ -237,7 +256,7 @@ impl LoopCtx {
         let mut in_flight: Vec<(JobId, &InFlight)> =
             self.in_flight.iter().map(|(id, fl)| (*id, fl)).collect();
         in_flight.sort_by_key(|(id, _)| *id);
-        Json::obj(vec![
+        let mut out = Json::obj(vec![
             ("launched", Json::Num(self.launched as f64)),
             ("history", crate::strategies::observations_to_json(&self.history)),
             ("curve_history", self.curve_history.to_json()),
@@ -270,21 +289,106 @@ impl LoopCtx {
                 "retry_budget",
                 Json::Arr(self.retry_budget.iter().map(|&v| Json::Num(v as f64)).collect()),
             ),
-        ])
+        ]);
+        // the in-flight speculation (if any) freezes alongside the
+        // already-advanced strategy state, so a thawed actor commits or
+        // discards exactly like the uninterrupted one; absent on old
+        // snapshots ⇒ no speculation (DESIGN.md §17)
+        if let Some(spec) = &self.speculation {
+            if let Json::Obj(fields) = &mut out {
+                fields.insert("speculation".to_string(), spec.to_json());
+            }
+        }
+        out
     }
 }
 
 impl LoopCtx {
+    /// Configs of in-flight evaluations, in launch (eval-index) order.
+    /// The deterministic order matters twice: strategies see a stable
+    /// pending set across runs, and [`crate::strategies::Speculation::matches`]
+    /// compares this vector against the speculated one verbatim.
     fn pending_configs(&self) -> Vec<Config> {
-        self.in_flight
-            .values()
+        let mut flights: Vec<&InFlight> = self.in_flight.values().collect();
+        flights.sort_by_key(|f| f.eval_index);
+        flights
+            .iter()
             .map(|f| self.evaluations[f.eval_index].config.clone())
             .collect()
     }
 
+    /// Produce the next proposal: commit the in-flight speculation when
+    /// the real world turned out exactly as fantasized (zero recompute),
+    /// otherwise roll the strategy back and recompute synchronously —
+    /// bit-identical to a run without the pipeline (DESIGN.md §17).
+    fn take_proposal(&mut self, pending: &[Config]) -> Config {
+        if let Some(spec) = self.speculation.take() {
+            if spec.matches(&self.history, pending) {
+                self.store.registry().counter("strategy.speculation_hits").inc();
+                return spec.config;
+            }
+            // Discard: restore_state thaws the exact pre-speculation
+            // strategy state (it was captured from this same instance,
+            // so the kind always matches), then fall through to the
+            // synchronous path.
+            let ok = self.strategy.restore_state(&spec.saved);
+            debug_assert!(ok, "own saved strategy state must restore");
+            self.store.registry().counter("strategy.speculation_misses").inc();
+        }
+        self.strategy.next_config(&self.history, pending)
+    }
+
+    /// Idle-tail speculation (DESIGN.md §17): with every parallel slot
+    /// occupied and budget remaining, fantasize that the **oldest**
+    /// in-flight evaluation (smallest eval index — the pinned
+    /// deterministic rule) completes at the constant-liar value, and
+    /// pre-compute the proposal that would fill its slot. The strategy
+    /// state advances here; `take_proposal` later keeps it (commit) or
+    /// rolls it back via the saved state (discard).
+    fn speculate_step(&mut self) {
+        if !self.request.speculative
+            || self.speculation.is_some()
+            || self.stop_flag.load(Ordering::Relaxed)
+            || self.in_flight.is_empty()
+            || self.launched >= self.request.max_training_jobs
+            || self.in_flight.len() < self.request.max_parallel_jobs as usize
+        {
+            return;
+        }
+        let mut flights: Vec<&InFlight> = self.in_flight.values().collect();
+        flights.sort_by_key(|f| f.eval_index);
+        let fantasy_config = self.evaluations[flights[0].eval_index].config.clone();
+        let pending_after: Vec<Config> = flights[1..]
+            .iter()
+            .map(|f| self.evaluations[f.eval_index].config.clone())
+            .collect();
+        let started = std::time::Instant::now();
+        let spec = crate::strategies::speculate(
+            self.strategy.as_mut(),
+            &self.history,
+            &pending_after,
+            fantasy_config,
+        );
+        self.store
+            .registry()
+            .histogram("strategy.speculate_us")
+            .record(started.elapsed().as_micros() as u64);
+        self.speculation = Some(spec);
+    }
+
     fn launch_new(&mut self) {
         let pending = self.pending_configs();
-        let config = self.strategy.next_config(&self.history, &pending);
+        let config = self.take_proposal(&pending);
+        if self.request.eval_cache {
+            let key = eval_cache_key(&self.request.objective, &config);
+            if let Some(entry) = self.store.eval_cache_get(&key) {
+                if self.record_cached_eval(&config, &entry) {
+                    return;
+                }
+            }
+        } else {
+            self.store.eval_cache_bypass();
+        }
         let idx = self.evaluations.len();
         let name = format!("{}-train-{:04}", self.request.name, idx);
         self.evaluations.push(EvaluationRecord {
@@ -297,11 +401,111 @@ impl LoopCtx {
             attempts: 1,
             submitted_at: self.platform.now(),
             ended_at: self.platform.now(),
+            cached: false,
         });
         self.retry_budget.push(self.request.max_retries_per_job);
         self.launched += 1;
         self.submit(idx);
         self.persist_training_job(idx);
+    }
+
+    /// Serve one evaluation from a cache entry: the platform is never
+    /// touched — the recorded metric series is replayed instantly at the
+    /// current virtual time and the observation feeds the strategy and
+    /// the early-stopping bands exactly like a live outcome. Returns
+    /// false (caller launches for real) on a malformed entry.
+    fn record_cached_eval(&mut self, config: &Config, entry: &Json) -> bool {
+        let Some(curve) = entry
+            .get("curve")
+            .and_then(Json::as_arr)
+            .and_then(|a| a.iter().map(Json::as_f64).collect::<Option<Vec<f64>>>())
+        else {
+            return false;
+        };
+        let Some(status) = entry
+            .get("status")
+            .and_then(Json::as_str)
+            .and_then(TrainingJobStatus::parse)
+        else {
+            return false;
+        };
+        let final_value = entry.get("final_value").and_then(Json::as_f64);
+        let stopped_early = entry
+            .get("stopped_early")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+        let idx = self.evaluations.len();
+        let name = format!("{}-train-{:04}", self.request.name, idx);
+        let now = self.platform.now();
+        for &v in &curve {
+            self.metrics.emit(&format!("{name}/objective"), now, v);
+        }
+        if let Some(v) = final_value {
+            self.metrics.emit(&format!("{name}/final"), now, v);
+            self.metrics
+                .emit(&format!("{}/evaluations", self.request.name), now, v);
+            self.history.push(Observation {
+                config: config.clone(),
+                value: self.sign * v,
+            });
+        }
+        let curve_min: Vec<f64> = curve.iter().map(|&v| self.sign * v).collect();
+        self.curve_history
+            .push(curve_min, status == TrainingJobStatus::Completed);
+        self.evaluations.push(EvaluationRecord {
+            training_job_name: name,
+            config: config.clone(),
+            curve,
+            final_value,
+            status,
+            stopped_early,
+            attempts: 0,
+            submitted_at: now,
+            ended_at: now,
+            cached: true,
+        });
+        self.retry_budget.push(0);
+        self.launched += 1;
+        self.persist_training_job(idx);
+        true
+    }
+
+    /// Record a terminal evaluation's outcome in the cross-job cache.
+    /// Only successful outcomes (Completed, or Stopped with a recorded
+    /// value) are cacheable — failures must re-run. First writer wins,
+    /// so the entry is immutable once created.
+    fn cache_outcome(&self, idx: usize) {
+        if !self.request.eval_cache {
+            return;
+        }
+        let e = &self.evaluations[idx];
+        if e.cached || e.final_value.is_none() {
+            return;
+        }
+        if !matches!(
+            e.status,
+            TrainingJobStatus::Completed | TrainingJobStatus::Stopped
+        ) {
+            return;
+        }
+        let key = eval_cache_key(&self.request.objective, &e.config);
+        self.store.eval_cache_put(
+            &key,
+            Json::obj(vec![
+                ("owner", Json::Str(self.request.name.clone())),
+                ("objective", Json::Str(self.request.objective.clone())),
+                (
+                    "curve",
+                    Json::Arr(e.curve.iter().map(|&v| Json::Num(v)).collect()),
+                ),
+                (
+                    "final_value",
+                    e.final_value.map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("status", Json::Str(e.status.as_str().into())),
+                ("stopped_early", Json::Bool(e.stopped_early)),
+            ]),
+        );
     }
 
     fn submit(&mut self, eval_index: usize) {
@@ -314,6 +518,7 @@ impl LoopCtx {
                 ^ (e.attempts as u64) << 48,
             instance_count: self.request.instance_count,
         });
+        self.store.registry().counter("platform.trains").inc();
         self.in_flight.insert(
             id,
             InFlight { eval_index, platform_id: id, curve_min: Vec::new() },
@@ -374,6 +579,7 @@ impl LoopCtx {
                             });
                         }
                         self.persist_training_job(idx);
+                        self.cache_outcome(idx);
                     }
                 }
             }
@@ -397,6 +603,7 @@ impl LoopCtx {
                         final_value,
                     );
                     self.persist_training_job(idx);
+                    self.cache_outcome(idx);
                 }
             }
             PlatformEvent::JobFailed { job, reason, time } => {
@@ -639,6 +846,7 @@ impl JobActor {
                 evaluations: Vec::new(),
                 retries: 0,
                 retry_budget: Vec::new(),
+                speculation: None,
             }),
         }
     }
@@ -713,6 +921,11 @@ impl JobActor {
         if retry_budget.len() != evaluations.len() {
             return Err(coord_err());
         }
+        // optional: snapshots taken before the pipeline existed (or with
+        // no speculation in flight) simply thaw with none
+        let speculation = c
+            .get("speculation")
+            .and_then(crate::strategies::Speculation::from_json);
 
         let sign = if objective.minimize() { 1.0 } else { -1.0 };
         let name = request.name.clone();
@@ -744,6 +957,7 @@ impl JobActor {
                 evaluations,
                 retries,
                 retry_budget,
+                speculation,
             }),
         })
     }
@@ -816,6 +1030,21 @@ impl JobActor {
             });
         }
         ActorPoll::Pending { due: self.due() }
+    }
+
+    /// Idle-tail hook for the scheduler worker loop and the distributed
+    /// worker: run at most one speculation step (DESIGN.md §17). No-op
+    /// for non-pipelined requests, terminal actors, or when a
+    /// speculation is already queued. Deliberately *not* part of
+    /// [`JobActor::poll`] — callers invoke it after the timed slice
+    /// closed, so speculative compute never inflates
+    /// `scheduler.poll_slice_us`, and after the `Pending` checkpoint, so
+    /// a crash in between simply re-speculates deterministically on
+    /// resume.
+    pub fn speculate_step(&mut self) {
+        if let Some(ctx) = self.ctx.as_mut() {
+            ctx.speculate_step();
+        }
     }
 
     /// Freeze the whole actor into a v1 [`ResumeSnapshot`] payload. Only
@@ -1202,6 +1431,222 @@ mod tests {
         for w in series.windows(2) {
             assert!(w[1].1 <= w[0].1 + 1e-12);
             assert!(w[1].0 >= w[0].0);
+        }
+    }
+
+    fn pipelined_actor(
+        strategy: &str,
+        seed: u64,
+        parallel: u32,
+        speculative: bool,
+        store: Arc<MetadataStore>,
+    ) -> (TuningJobRequest, JobActor) {
+        let request = TuningJobRequest {
+            name: format!("pipe-{strategy}-{seed}-{speculative}"),
+            objective: "branin".into(),
+            strategy: strategy.into(),
+            max_training_jobs: 8,
+            max_parallel_jobs: parallel,
+            seed,
+            speculative,
+            ..Default::default()
+        };
+        let obj: Arc<dyn Objective> = crate::objectives::by_name("branin").unwrap().into();
+        let strat = crate::strategies::for_request(
+            strategy,
+            &obj.space(),
+            Arc::new(NativeBackend),
+            seed,
+            Vec::new(),
+        )
+        .unwrap();
+        let actor = JobActor::new(
+            request.clone(),
+            obj,
+            strat,
+            stopping_by_name("off").unwrap(),
+            TrainingPlatform::new(PlatformConfig::noiseless(), seed),
+            store,
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        );
+        (request, actor)
+    }
+
+    /// Drive an actor the way the scheduler does with the pipeline on:
+    /// speculate in the idle tail of every Pending slice.
+    fn drive_pipelined(mut actor: JobActor) -> TuningJobOutcome {
+        loop {
+            match actor.poll(16) {
+                ActorPoll::Pending { .. } => actor.speculate_step(),
+                ActorPoll::Complete(outcome) => return *outcome,
+            }
+        }
+    }
+
+    fn assert_outcomes_bit_identical(a: &TuningJobOutcome, b: &TuningJobOutcome) {
+        assert_eq!(a.evaluations.len(), b.evaluations.len());
+        for (x, y) in a.evaluations.iter().zip(&b.evaluations) {
+            assert_eq!(x.training_job_name, y.training_job_name);
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.final_value.map(f64::to_bits), y.final_value.map(f64::to_bits));
+            assert_eq!(x.ended_at.to_bits(), y.ended_at.to_bits());
+            assert_eq!(x.status, y.status);
+        }
+        assert_eq!(a.total_seconds.to_bits(), b.total_seconds.to_bits());
+        assert_eq!(a.status, b.status);
+    }
+
+    /// Value-free strategy + one slot: every speculation fantasizes the
+    /// only in-flight evaluation, so every proposal after warm-up is a
+    /// committed speculation — and the run is bit-identical to the
+    /// synchronous reference.
+    #[test]
+    fn pipelined_random_commits_speculations_bit_identically() {
+        let (_, sync_actor) =
+            pipelined_actor("random", 41, 1, false, Arc::new(MetadataStore::new()));
+        let reference = drive_pipelined(sync_actor); // speculate_step is a no-op here
+
+        let store = Arc::new(MetadataStore::new());
+        let (_, actor) = pipelined_actor("random", 41, 1, true, Arc::clone(&store));
+        let pipelined = drive_pipelined(actor);
+
+        assert_outcomes_bit_identical(&reference, &pipelined);
+        let hits = store.registry().counter("strategy.speculation_hits").get();
+        let misses = store.registry().counter("strategy.speculation_misses").get();
+        assert!(hits > 0, "value-free pipeline never committed a speculation");
+        assert_eq!(misses, 0, "value-free speculation must never discard");
+    }
+
+    /// BO flips to value-dependent proposals once the surrogate fits:
+    /// those speculations are discarded (fantasy != real value) and the
+    /// synchronous fallback keeps the run bit-identical.
+    #[test]
+    fn pipelined_bo_discards_value_dependent_speculations_bit_identically() {
+        let (_, sync_actor) =
+            pipelined_actor("bayesian", 43, 1, false, Arc::new(MetadataStore::new()));
+        let reference = drive_pipelined(sync_actor);
+
+        let store = Arc::new(MetadataStore::new());
+        let (_, actor) = pipelined_actor("bayesian", 43, 1, true, Arc::clone(&store));
+        let pipelined = drive_pipelined(actor);
+
+        assert_outcomes_bit_identical(&reference, &pipelined);
+        let hits = store.registry().counter("strategy.speculation_hits").get();
+        let misses = store.registry().counter("strategy.speculation_misses").get();
+        assert!(hits > 0, "initial-design speculations are value-free and must commit");
+        assert!(misses > 0, "fit-based speculations must discard on real outcomes");
+    }
+
+    /// Bit-identity must also hold when the fantasized (oldest) flight is
+    /// not necessarily the first to land: with two slots a younger eval
+    /// can finish first, forcing the discard path mid-stream.
+    #[test]
+    fn pipelined_two_slot_run_matches_synchronous_reference() {
+        let (_, sync_actor) =
+            pipelined_actor("bayesian", 47, 2, false, Arc::new(MetadataStore::new()));
+        let reference = drive_pipelined(sync_actor);
+        let (_, actor) =
+            pipelined_actor("bayesian", 47, 2, true, Arc::new(MetadataStore::new()));
+        assert_outcomes_bit_identical(&reference, &drive_pipelined(actor));
+    }
+
+    /// A speculation in flight at the freeze point must thaw with the
+    /// actor: freeze right after an idle-tail speculate_step, rebuild via
+    /// `actor_from_snapshot`, and the rest of the pipelined run is
+    /// bit-identical to the uninterrupted pipelined run.
+    #[test]
+    fn speculation_survives_resume_snapshot_bit_identically() {
+        let (_, reference_actor) =
+            pipelined_actor("bayesian", 51, 1, true, Arc::new(MetadataStore::new()));
+        let reference = drive_pipelined(reference_actor);
+
+        let (request, mut actor) =
+            pipelined_actor("bayesian", 51, 1, true, Arc::new(MetadataStore::new()));
+        let mut slices = 0;
+        let frozen = loop {
+            match actor.poll(16) {
+                ActorPoll::Pending { .. } => {
+                    actor.speculate_step();
+                    slices += 1;
+                    if slices == 4 {
+                        break actor.resume_snapshot_json();
+                    }
+                }
+                ActorPoll::Complete(_) => panic!("job finished before the freeze point"),
+            }
+        };
+        let parsed = crate::json::parse(&frozen.to_string()).unwrap();
+        let resumed_actor = actor_from_snapshot(
+            request,
+            &parsed,
+            Arc::new(NativeBackend),
+            Arc::new(MetadataStore::new()),
+            Arc::new(MetricsService::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+        .unwrap();
+        assert_outcomes_bit_identical(&reference, &drive_pipelined(resumed_actor));
+    }
+
+    /// Cache hits replay the recorded outcome without touching the
+    /// platform: a second identical job trains nothing new and its
+    /// final values are bit-identical to the recorded ones.
+    #[test]
+    fn eval_cache_short_circuits_identical_job_bit_identically() {
+        let store = Arc::new(MetadataStore::new());
+        let mut request = TuningJobRequest {
+            name: "cache-a".into(),
+            objective: "branin".into(),
+            strategy: "random".into(),
+            max_training_jobs: 6,
+            max_parallel_jobs: 2,
+            seed: 61,
+            eval_cache: true,
+            ..Default::default()
+        };
+        let build = |request: TuningJobRequest, store: Arc<MetadataStore>| {
+            let obj: Arc<dyn Objective> =
+                crate::objectives::by_name("branin").unwrap().into();
+            let strat = crate::strategies::for_request(
+                "random",
+                &obj.space(),
+                Arc::new(NativeBackend),
+                request.seed,
+                Vec::new(),
+            )
+            .unwrap();
+            JobActor::new(
+                request,
+                obj,
+                strat,
+                stopping_by_name("off").unwrap(),
+                TrainingPlatform::new(PlatformConfig::noiseless(), 61),
+                store,
+                Arc::new(MetricsService::new()),
+                Arc::new(AtomicBool::new(false)),
+            )
+        };
+        let first = drive_to_completion(build(request.clone(), Arc::clone(&store)));
+        assert_eq!(store.eval_cache_hits(), 0);
+        let trains = store.registry().counter("platform.trains").get();
+        assert_eq!(trains, 6);
+
+        // same seed + same space ⇒ identical proposal stream ⇒ all hits
+        request.name = "cache-b".into();
+        let second = drive_to_completion(build(request, Arc::clone(&store)));
+        assert_eq!(
+            store.registry().counter("platform.trains").get(),
+            trains,
+            "second job must train nothing"
+        );
+        assert_eq!(store.eval_cache_hits(), 6);
+        assert_eq!(second.evaluations.len(), first.evaluations.len());
+        for (a, b) in first.evaluations.iter().zip(&second.evaluations) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.final_value.map(f64::to_bits), b.final_value.map(f64::to_bits));
+            assert!(b.cached);
+            assert_eq!(b.attempts, 0);
         }
     }
 }

@@ -1361,12 +1361,25 @@ fn driver_loop(inner: &Arc<LeaderInner>, idx: usize, mut transport: Box<dyn Tran
                 // the new worker rebuilds the actor mid-flight instead
                 // of replaying from the seed
                 let resume = slot.last_ckpt.lock().unwrap().clone();
+                // ship the leader's current cache slice for this
+                // objective so the worker can short-circuit configs
+                // already evaluated elsewhere; gathered at send time so
+                // a re-assign after a repair carries fresher seeds
+                let cache_seeds = if slot.spec.request.eval_cache {
+                    inner.store.scan(
+                        crate::store::EVAL_CACHE_TABLE,
+                        &format!("{}|", slot.spec.request.objective),
+                    )
+                } else {
+                    Vec::new()
+                };
                 burst.push(Message::Assign {
                     request: slot.spec.request.clone(),
                     platform: slot.spec.platform.clone(),
                     transfer: slot.spec.transfer.clone(),
                     backend: slot.spec.backend.clone(),
                     resume,
+                    cache_seeds,
                     // a gen-3 worker echoes this id on every
                     // SliceResult; earlier generations never see it
                     trace: telemetry::trace::trace_id(&name),

@@ -116,6 +116,13 @@ pub enum Message {
         /// worker remembers it and echoes it on every `SliceResult`
         /// for this job.
         trace: Option<u64>,
+        /// Evaluation-cache seed entries for the job's objective
+        /// (DESIGN.md §17): `(key, entry)` pairs from the leader's
+        /// `eval_cache` table, installed unlogged into the worker's
+        /// local store so cache-enabled jobs hit across the fleet.
+        /// Empty when the job has the cache off (and absent on the wire
+        /// — pre-cache peers interoperate unchanged).
+        cache_seeds: Vec<(String, Json)>,
     },
     /// Run one bounded poll slice of an assigned job.
     PollRequest {
@@ -321,8 +328,16 @@ impl Message {
                 ("backend", Json::Str(backend.clone())),
                 ("proto", Json::Num(*proto as f64)),
             ]),
-            Message::Assign { request, platform, transfer, backend, resume, trace } => {
-                Json::obj(vec![
+            Message::Assign {
+                request,
+                platform,
+                transfer,
+                backend,
+                resume,
+                trace,
+                cache_seeds,
+            } => {
+                let mut fields = vec![
                     ("type", Json::Str("assign".into())),
                     ("request", request.to_json()),
                     ("platform", platform.to_json()),
@@ -330,7 +345,26 @@ impl Message {
                     ("backend", Json::Str(backend.clone())),
                     ("resume", resume.clone().unwrap_or(Json::Null)),
                     ("trace", trace_to_json(*trace)),
-                ])
+                ];
+                // absent-on-wire when empty, like `trace`: pre-cache
+                // peers never see the field
+                if !cache_seeds.is_empty() {
+                    fields.push((
+                        "cache_seeds",
+                        Json::Arr(
+                            cache_seeds
+                                .iter()
+                                .map(|(k, v)| {
+                                    Json::obj(vec![
+                                        ("key", Json::Str(k.clone())),
+                                        ("entry", v.clone()),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                Json::obj(fields)
             }
             Message::PollRequest { job, max_steps } => Json::obj(vec![
                 ("type", Json::Str("poll".into())),
@@ -406,6 +440,19 @@ impl Message {
                     Some(s) => Some(s.clone()),
                 },
                 trace: trace_from_json(j),
+                // absent or null ⇒ no seeds (pre-cache leader)
+                cache_seeds: match j.get("cache_seeds").and_then(Json::as_arr) {
+                    Some(arr) => arr
+                        .iter()
+                        .map(|e| {
+                            Some((
+                                e.get("key")?.as_str()?.to_string(),
+                                e.get("entry")?.clone(),
+                            ))
+                        })
+                        .collect::<Option<_>>()?,
+                    None => Vec::new(),
+                },
             },
             "poll" => Message::PollRequest {
                 job: j.get("job")?.as_str()?.to_string(),
@@ -542,13 +589,22 @@ mod tests {
             backend: "native".into(),
             resume: None,
             trace: None,
+            cache_seeds: Vec::new(),
         };
-        let Message::Assign { request, platform, transfer, backend, resume, trace } =
-            roundtrip(&msg)
+        let Message::Assign {
+            request,
+            platform,
+            transfer,
+            backend,
+            resume,
+            trace,
+            cache_seeds,
+        } = roundtrip(&msg)
         else {
             panic!("wrong variant");
         };
         assert!(trace.is_none());
+        assert!(cache_seeds.is_empty());
         assert_eq!(request.name, "remote-1");
         assert_eq!(request.seed, 42);
         assert_eq!(request.tenant_weight, 3);
@@ -578,6 +634,7 @@ mod tests {
             backend: "hlo".into(),
             resume: Some(snap.clone()),
             trace: None,
+            cache_seeds: Vec::new(),
         };
         let Message::Assign { backend, resume, .. } = roundtrip(&msg) else {
             panic!("wrong variant");
@@ -671,6 +728,45 @@ mod tests {
     }
 
     #[test]
+    fn assign_cache_seeds_roundtrip_and_absent_when_empty() {
+        let seeds = vec![(
+            "branin|{\"x\":{\"float\":0.25}}".to_string(),
+            Json::obj(vec![("final_value", Json::Num(1.0 / 3.0))]),
+        )];
+        let msg = Message::Assign {
+            request: TuningJobRequest { name: "c".into(), ..Default::default() },
+            platform: PlatformConfig::default(),
+            transfer: Vec::new(),
+            backend: "native".into(),
+            resume: None,
+            trace: None,
+            cache_seeds: seeds.clone(),
+        };
+        let Message::Assign { cache_seeds, .. } = roundtrip(&msg) else {
+            panic!("wrong variant");
+        };
+        assert_eq!(cache_seeds.len(), 1);
+        assert_eq!(cache_seeds[0].0, seeds[0].0);
+        assert_eq!(
+            cache_seeds[0].1.get("final_value").unwrap().as_f64().unwrap().to_bits(),
+            (1.0f64 / 3.0).to_bits(),
+            "entry payload must survive bit-exactly"
+        );
+        // empty seed lists stay OFF the wire, like an absent trace id —
+        // a pre-cache peer's decoder never sees an unknown key
+        let empty = Message::Assign {
+            request: TuningJobRequest { name: "c".into(), ..Default::default() },
+            platform: PlatformConfig::default(),
+            transfer: Vec::new(),
+            backend: "native".into(),
+            resume: None,
+            trace: None,
+            cache_seeds: Vec::new(),
+        };
+        assert!(empty.to_json().get("cache_seeds").is_none());
+    }
+
+    #[test]
     fn trace_ids_roundtrip_and_absent_on_wire_reads_as_none() {
         // present → survives the frame bit-exactly
         let msg = Message::SliceResult {
@@ -688,6 +784,7 @@ mod tests {
             backend: "native".into(),
             resume: None,
             trace: Some(7),
+            cache_seeds: Vec::new(),
         };
         let Message::Assign { trace, .. } = roundtrip(&msg) else { panic!() };
         assert_eq!(trace, Some(7));
@@ -759,6 +856,7 @@ mod tests {
                 attempts: 2,
                 submitted_at: 1.5,
                 ended_at: 123.456789,
+                cached: false,
             }],
             best: Some((config, 1.0 / 3.0)),
             total_seconds: 123.456789,

@@ -173,6 +173,7 @@ impl WorkerRuntime {
         &self.label
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn assign(
         &mut self,
         request: TuningJobRequest,
@@ -181,6 +182,7 @@ impl WorkerRuntime {
         backend: String,
         resume: Option<crate::json::Json>,
         trace: Option<u64>,
+        cache_seeds: Vec<(String, crate::json::Json)>,
     ) {
         let name = request.name.clone();
         if backend != self.backend {
@@ -200,6 +202,13 @@ impl WorkerRuntime {
         }
         let store = Arc::new(MetadataStore::new());
         let metrics = Arc::new(MetricsService::new());
+        // leader-provided evaluation-cache seeds (DESIGN.md §17) install
+        // unlogged: `insert_raw` bypasses the capture WAL, so seeds the
+        // leader already holds are never echoed back as deltas — only
+        // entries this job *records* flow leaderward
+        for (key, entry) in &cache_seeds {
+            store.insert_raw(crate::store::EVAL_CACHE_TABLE, key, 1, entry.clone());
+        }
         store.attach_wal(Arc::clone(&self.capture));
         metrics.attach_wal(Arc::clone(&self.capture));
         let stop_flag = Arc::new(AtomicBool::new(false));
@@ -257,6 +266,13 @@ impl WorkerRuntime {
         self.polls_served += 1;
         let trace = hosted.trace;
         let poll = hosted.actor.poll(max_steps.max(1));
+        // idle tail (DESIGN.md §17): pipelined jobs pre-compute the next
+        // proposal after the slice finished — the already-appended
+        // checkpoint excludes it, so a worker death here just
+        // re-speculates deterministically on the replacement worker
+        if matches!(poll, ActorPoll::Pending { .. }) {
+            hosted.actor.speculate_step();
+        }
         // the slice's mutations, in application order, straight out of
         // the capture WAL's buffer, coalesced with the verdict into one
         // frame (records precede the reply within the message, so the
@@ -280,8 +296,16 @@ impl WorkerRuntime {
     /// Dispatch one leader message; `Flow::Drained` ends the session.
     fn handle(&mut self, msg: Message) -> std::io::Result<Flow> {
         match msg {
-            Message::Assign { request, platform, transfer, backend, resume, trace } => {
-                self.assign(request, platform, transfer, backend, resume, trace);
+            Message::Assign {
+                request,
+                platform,
+                transfer,
+                backend,
+                resume,
+                trace,
+                cache_seeds,
+            } => {
+                self.assign(request, platform, transfer, backend, resume, trace, cache_seeds);
             }
             Message::PollRequest { job, max_steps } => {
                 self.poll(&job, max_steps)?;
@@ -454,6 +478,7 @@ mod tests {
                 backend: "native".into(),
                 resume: None,
                 trace: None,
+                cache_seeds: Vec::new(),
             })
             .unwrap();
         let mut all_records = Vec::new();
@@ -497,6 +522,7 @@ mod tests {
                 backend: "native".into(),
                 resume: None,
                 trace: None,
+                cache_seeds: Vec::new(),
             })
             .unwrap();
         let reply = loop {

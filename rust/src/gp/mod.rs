@@ -248,6 +248,14 @@ impl GpModel {
     /// the factor was extended in O(N²) by
     /// [`crate::linalg::chol_append_row`], so no O(N³) refactorization
     /// happens here).
+    ///
+    /// The factor depends **only on X and theta, never on y** — `alpha` is
+    /// recomputed from the passed observations on every call. The
+    /// speculative proposal pipeline (DESIGN.md §17) leans on this: a
+    /// factor extended by a constant-liar *fantasy* row stays exactly
+    /// valid when the real outcome lands at the same configuration with a
+    /// different value, so a committed speculation needs zero Cholesky
+    /// recompute on the slice.
     pub fn fit_from_factor(
         x: &Dataset,
         y_raw: &[f64],
@@ -485,6 +493,45 @@ mod tests {
         for (u, v) in a.iter().zip(&b) {
             assert!((u.mu - v.mu).abs() < 1e-12);
             assert!((u.var - v.var).abs() < 1e-12);
+        }
+    }
+
+    /// The fantasy append/rollback invariant the speculative pipeline
+    /// rides (DESIGN.md §17): a factor extended by a row for a *fantasy*
+    /// observation is bit-identical to one extended for the *real*
+    /// observation at the same x, because the factor never sees y. Only
+    /// alpha changes between the fantasy fit and the commit-time fit.
+    #[test]
+    fn factor_is_y_independent_so_fantasy_rows_commit_exactly() {
+        let (x, y_fantasy) = toy_data(16, 2, 8);
+        let mut y_real = y_fantasy.clone();
+        *y_real.last_mut().unwrap() += 3.5; // the fantasy missed badly
+        let theta = Theta::default_for_dim(2);
+        let via_fantasy = GpModel::fit(&NativeBackend, &x, &y_fantasy, vec![theta.clone()])
+            .unwrap();
+        let via_real = GpModel::fit(&NativeBackend, &x, &y_real, vec![theta.clone()]).unwrap();
+        // identical factors bit-for-bit…
+        assert_eq!(via_fantasy.posteriors[0].l.data.len(), via_real.posteriors[0].l.data.len());
+        for (a, b) in via_fantasy.posteriors[0].l.data.iter().zip(&via_real.posteriors[0].l.data)
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // …so re-solving with the real ys through the fantasy's factor is
+        // the same model the synchronous path would have fitted
+        let committed = GpModel::fit_from_factor(
+            &x,
+            &y_real,
+            theta,
+            via_fantasy.posteriors[0].l.clone(),
+        )
+        .unwrap();
+        let (cand, _) = toy_data(8, 2, 9);
+        let a = committed.score(&NativeBackend, &cand);
+        let b = via_real.score(&NativeBackend, &cand);
+        for (u, v) in a.iter().zip(&b) {
+            assert_eq!(u.mu.to_bits(), v.mu.to_bits());
+            assert_eq!(u.var.to_bits(), v.var.to_bits());
+            assert_eq!(u.ei.to_bits(), v.ei.to_bits());
         }
     }
 

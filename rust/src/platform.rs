@@ -324,6 +324,13 @@ impl TrainingPlatform {
         self.now
     }
 
+    /// Total training jobs ever submitted to this platform (including
+    /// retries). The cache-dedupe tests assert on this: an evaluation
+    /// served from the cross-job evaluation cache never submits here.
+    pub fn submitted_jobs(&self) -> usize {
+        self.next_id as usize
+    }
+
     /// Read a job record.
     pub fn job(&self, id: JobId) -> Option<&TrainingJobInfo> {
         self.jobs.get(&id).map(|s| &s.info)

@@ -553,6 +553,15 @@ fn worker_loop(inner: &Inner) {
         }
         match polled {
             Ok(ActorPoll::Pending { due }) => {
+                // idle tail (DESIGN.md §17): pipelined jobs pre-compute the
+                // next proposal here — after the slice's timing window
+                // closed, so speculation never inflates
+                // `scheduler.poll_slice_us` — and before the requeue, so the
+                // strategy state it advances lands in the next slice's
+                // checkpoint.
+                let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    actor.speculate_step()
+                }));
                 drop(actor_guard);
                 push_entry(inner, due, slot.weight, entry.name);
                 release_quota(inner, &slot);

@@ -37,6 +37,11 @@ pub type Version = u64;
 /// BTreeMap behind its own mutex, and the workload is dozens-of-writers.
 const DEFAULT_SHARDS: usize = 16;
 
+/// Table holding cross-job evaluation-cache entries (DESIGN.md §17). A
+/// plain store table, so entries ride the WAL, snapshots, and the
+/// distributed capture plane exactly like job records.
+pub const EVAL_CACHE_TABLE: &str = "eval_cache";
+
 /// Conditional-write failure.
 #[derive(Debug, PartialEq, Eq)]
 pub enum StoreError {
@@ -87,6 +92,35 @@ impl Shard {
                 break;
             }
             out.push((k.clone(), *ver, v.clone()));
+            if out.len() >= limit {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Keys-only variant of [`Shard::scan_prefix`]: the paginated scan's
+    /// first pass. Values are *not* cloned here — up to `shards × limit`
+    /// candidate keys compete for a `limit`-sized page, and cloning the
+    /// losers' values (full job records) was pure waste.
+    fn scan_keys(
+        &self,
+        table: &str,
+        prefix: &str,
+        start_after: Option<&str>,
+        limit: usize,
+    ) -> Vec<String> {
+        let Some(t) = self.tables.get(table) else { return Vec::new() };
+        let lower: Bound<&str> = match start_after {
+            Some(sa) if sa >= prefix => Bound::Excluded(sa),
+            _ => Bound::Included(prefix),
+        };
+        let mut out = Vec::new();
+        for (k, _) in t.range::<str, _>((lower, Bound::Unbounded)) {
+            if !k.starts_with(prefix) {
+                break;
+            }
+            out.push(k.clone());
             if out.len() >= limit {
                 break;
             }
@@ -163,6 +197,15 @@ pub struct MetadataStore {
     /// Latency of one [`MetadataStore::put_batch`] call (µs). Registry
     /// name: `store.put_batch_us`.
     put_batch_us: Arc<crate::telemetry::Histogram>,
+    /// Evaluation-cache lookups that found a recorded outcome (DESIGN.md
+    /// §17). Registry name: `cache.hits`.
+    cache_hits: Arc<crate::telemetry::Counter>,
+    /// Evaluation-cache lookups that missed. Registry name:
+    /// `cache.misses`.
+    cache_misses: Arc<crate::telemetry::Counter>,
+    /// Evaluations launched by jobs with the cache disabled (the lookup
+    /// was never made). Registry name: `cache.bypass`.
+    cache_bypass: Arc<crate::telemetry::Counter>,
     /// Optional write-ahead log: once attached, every successful mutation
     /// appends a record *inside* its shard critical section, so WAL order
     /// equals application order per key (DESIGN.md §10).
@@ -205,6 +248,9 @@ impl MetadataStore {
             writes: reg.counter("store.writes"),
             shard_locks: reg.counter("store.shard_lock_acquisitions"),
             put_batch_us: reg.histogram("store.put_batch_us"),
+            cache_hits: reg.counter("cache.hits"),
+            cache_misses: reg.counter("cache.misses"),
+            cache_bypass: reg.counter("cache.bypass"),
             telemetry: reg,
             wal: OnceLock::new(),
         }
@@ -455,12 +501,7 @@ impl MetadataStore {
         let mut keys: Vec<String> = Vec::new();
         for shard in &self.shards {
             let shard = shard.lock().unwrap();
-            keys.extend(
-                shard
-                    .scan_prefix(table, prefix, None, usize::MAX)
-                    .into_iter()
-                    .map(|(k, _, _)| k),
-            );
+            keys.extend(shard.scan_keys(table, prefix, None, usize::MAX));
         }
         keys.sort();
         keys
@@ -487,6 +528,15 @@ impl MetadataStore {
     /// key of the previous page as the cursor; `None` starts at the
     /// beginning). An empty result means the scan is exhausted. Each shard
     /// lock is held only long enough to pull its own ≤ `limit` candidates.
+    ///
+    /// Two-pass: pass 1 collects candidate *keys* per shard and elects the
+    /// page (sort + truncate); pass 2 re-locks only the shards that won a
+    /// slot and clones just the page's values. The old single-pass scan
+    /// cloned full values for up to `shards × limit` candidates and then
+    /// threw most of them away — on wide tables (job records, metric
+    /// streams) that was the dominant cost of every List* call. The scan
+    /// is not atomic across passes (point reads never were across shards):
+    /// a key deleted between passes is simply dropped from the page.
     pub fn scan_page(
         &self,
         table: &str,
@@ -497,25 +547,95 @@ impl MetadataStore {
         if limit == 0 {
             return Vec::new();
         }
-        let mut items: Vec<(String, Json)> = Vec::new();
-        for shard in &self.shards {
+        // Pass 1: keys only, remembering which shard each came from.
+        let mut candidates: Vec<(String, usize)> = Vec::new();
+        for (idx, shard) in self.shards.iter().enumerate() {
             let shard = shard.lock().unwrap();
-            items.extend(
+            candidates.extend(
                 shard
-                    .scan_prefix(table, prefix, start_after, limit)
+                    .scan_keys(table, prefix, start_after, limit)
                     .into_iter()
-                    .map(|(k, _, v)| (k, v)),
+                    .map(|k| (k, idx)),
             );
         }
-        items.sort_by(|a, b| a.0.cmp(&b.0));
-        items.truncate(limit);
-        items
+        candidates.sort_by(|a, b| a.0.cmp(&b.0));
+        candidates.truncate(limit);
+        // Pass 2: group the winners by shard so each winning shard is
+        // locked exactly once, then reassemble in page order.
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (pos, (_, idx)) in candidates.iter().enumerate() {
+            by_shard[*idx].push(pos);
+        }
+        let mut items: Vec<Option<(String, Json)>> = vec![None; candidates.len()];
+        for (idx, positions) in by_shard.iter().enumerate() {
+            if positions.is_empty() {
+                continue;
+            }
+            let shard = self.shards[idx].lock().unwrap();
+            for &pos in positions {
+                let key = &candidates[pos].0;
+                if let Some((_, v)) = shard.tables.get(table).and_then(|t| t.get(key)) {
+                    items[pos] = Some((key.clone(), v.clone()));
+                }
+            }
+        }
+        items.into_iter().flatten().collect()
     }
 
     /// Total successful writes (availability accounting for §6.5). Shim
     /// over registry metric `store.writes`.
     pub fn write_count(&self) -> u64 {
         self.writes.get()
+    }
+
+    /// Cross-job evaluation-cache lookup (DESIGN.md §17). Keys are
+    /// `"{objective}|{canonical typed-config JSON}"` — built by
+    /// [`crate::coordinator::eval_cache_key`] — so one objective's entries
+    /// form a contiguous prefix range. Counts `cache.hits`/`cache.misses`.
+    pub fn eval_cache_get(&self, key: &str) -> Option<Json> {
+        match self.get(EVAL_CACHE_TABLE, key) {
+            Some((_, v)) => {
+                self.cache_hits.inc();
+                Some(v)
+            }
+            None => {
+                self.cache_misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Record an evaluation outcome in the cache. Entries are immutable:
+    /// the first writer wins (create-if-absent), so a hit is bit-identical
+    /// to the *first* run of that config forever — concurrent jobs racing
+    /// on the same config cannot flap the recorded series. Returns whether
+    /// this call created the entry.
+    pub fn eval_cache_put(&self, key: &str, value: Json) -> bool {
+        self.put_if(EVAL_CACHE_TABLE, key, None, value).is_ok()
+    }
+
+    /// Count an evaluation that skipped the cache entirely (job ran with
+    /// the cache disabled). Registry name: `cache.bypass`.
+    pub fn eval_cache_bypass(&self) {
+        self.cache_bypass.inc();
+    }
+
+    /// Cache-hit count so far. Shim over registry metric `cache.hits`.
+    pub fn eval_cache_hits(&self) -> u64 {
+        self.cache_hits.get()
+    }
+
+    /// Cache-miss count so far. Shim over registry metric `cache.misses`.
+    pub fn eval_cache_misses(&self) -> u64 {
+        self.cache_misses.get()
+    }
+
+    /// This store's per-instance metric registry — shared with the
+    /// coordinator so strategy-level counters (`strategy.speculation_*`,
+    /// `strategy.speculate_us`, `platform.trains`) land in the same
+    /// snapshot the service merges into `amt stats`.
+    pub(crate) fn registry(&self) -> &crate::telemetry::Registry {
+        &self.telemetry
     }
 
     /// Serialize the whole store to pretty JSON. Shards are merged into
@@ -663,6 +783,56 @@ mod tests {
         assert!(s.scan_page("jobs", "run-", Some("run-999"), 5).is_empty());
         // missing tables scan empty
         assert!(s.scan_page("nope", "", None, 5).is_empty());
+    }
+
+    #[test]
+    fn scan_page_matches_full_scan_across_shard_counts() {
+        // The two-pass page (keys elected first, values cloned second)
+        // must be observably identical to slicing the full scan.
+        for shards in [1, 3, 16] {
+            let s = MetadataStore::with_shards(shards);
+            for i in 0..33 {
+                s.put(
+                    "jobs",
+                    &format!("run-{i:03}"),
+                    Json::obj(vec![("i", Json::Num(i as f64))]),
+                );
+            }
+            let full = s.scan("jobs", "run-");
+            assert_eq!(s.scan_page("jobs", "run-", None, 10), full[..10].to_vec());
+            assert_eq!(
+                s.scan_page("jobs", "run-", Some("run-009"), 10),
+                full[10..20].to_vec()
+            );
+            assert_eq!(s.scan_page("jobs", "run-", None, 100), full);
+        }
+    }
+
+    #[test]
+    fn eval_cache_is_immutable_and_counts() {
+        let s = MetadataStore::new();
+        assert_eq!(s.eval_cache_get("obj|{\"x\":1}"), None);
+        assert_eq!(s.eval_cache_misses(), 1);
+        assert!(s.eval_cache_put("obj|{\"x\":1}", Json::Num(0.25)));
+        // first writer wins: a second put with a different value no-ops
+        assert!(!s.eval_cache_put("obj|{\"x\":1}", Json::Num(9.0)));
+        assert_eq!(s.eval_cache_get("obj|{\"x\":1}"), Some(Json::Num(0.25)));
+        assert_eq!(s.eval_cache_hits(), 1);
+        s.eval_cache_bypass();
+        let names: Vec<String> = s
+            .telemetry_metrics()
+            .into_iter()
+            .map(|m| m.name)
+            .collect();
+        for n in ["cache.hits", "cache.misses", "cache.bypass"] {
+            assert!(names.iter().any(|x| x == n), "missing metric {n}");
+        }
+        // entries live in a plain table ⇒ snapshot/restore carries them
+        let r = MetadataStore::restore(&s.snapshot()).unwrap();
+        assert_eq!(
+            r.get(EVAL_CACHE_TABLE, "obj|{\"x\":1}").unwrap().1,
+            Json::Num(0.25)
+        );
     }
 
     #[test]

@@ -85,6 +85,165 @@ pub trait Strategy: Send + StrategyState {
     fn name(&self) -> &'static str;
     /// Propose the next configuration given history and pending evaluations.
     fn next_config(&mut self, history: &[Observation], pending: &[Config]) -> Config;
+    /// [`Strategy::next_config`] plus a flag telling the speculative
+    /// pipeline whether observation *values* influenced the proposal.
+    /// `false` (model-free strategies, BO's initial design) means a
+    /// speculative call with a fantasy value is byte-equivalent to the
+    /// synchronous recompute with the real value, so a commit needs no
+    /// fantasy-consistency check. The default is conservatively `true`.
+    fn next_config_tracked(
+        &mut self,
+        history: &[Observation],
+        pending: &[Config],
+    ) -> (Config, bool) {
+        (self.next_config(history, pending), true)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Speculative proposal pipeline (DESIGN.md §17)
+// ---------------------------------------------------------------------------
+
+/// Deterministic constant-liar fantasy value (DESIGN.md §17): the current
+/// best (minimum — strategies speak minimization) observed value, or 0.0
+/// when no observation has landed yet. Pinned here so both execution
+/// planes and every resume path fantasize identically.
+pub fn fantasy_value(history: &[Observation]) -> f64 {
+    match history.iter().map(|o| o.value).fold(f64::INFINITY, f64::min) {
+        best if best.is_finite() => best,
+        _ => 0.0,
+    }
+}
+
+/// One in-flight speculative proposal: the pre-computed next config plus
+/// everything needed to decide commit vs discard when the real outcome
+/// lands, and to roll the strategy back on discard. Frozen into resume
+/// snapshots (an optional `speculation` block of the coordinator state)
+/// so PR 5 crash recovery and PR 6 drain/steal migration keep the
+/// pipeline's zero-replay guarantee.
+#[derive(Clone, Debug)]
+pub struct Speculation {
+    /// The speculatively proposed next configuration.
+    pub config: Config,
+    /// Config of the in-flight evaluation we fantasized an outcome for.
+    pub fantasy_config: Config,
+    /// The constant-liar value used ([`fantasy_value`] at speculate time).
+    pub fantasy_value: f64,
+    /// History length when the speculation was computed.
+    pub history_len: usize,
+    /// The pending set the speculative call saw (the in-flight configs
+    /// minus `fantasy_config`) — a commit requires the synchronous call
+    /// would have seen exactly this set.
+    pub pending: Vec<Config>,
+    /// Whether observation values influenced the proposal. `false` ⇒
+    /// commit unconditionally on a structural match; `true` ⇒ commit only
+    /// when the real outcome equals the fantasy bit-for-bit.
+    pub value_dependent: bool,
+    /// Strategy state frozen *before* the speculative call — restored on
+    /// discard, making the fallback bit-identical to the synchronous path.
+    pub saved: Json,
+}
+
+impl Speculation {
+    /// Commit check: the speculative call was byte-equivalent to the
+    /// synchronous recompute iff exactly one observation landed since,
+    /// it is the fantasized evaluation, the pending set shrank to what
+    /// the speculation assumed, and (for value-dependent proposals) the
+    /// real value equals the fantasy bit-for-bit. Anything else — a
+    /// different eval finishing first, a no-retry failure shrinking the
+    /// pending set, a multi-outcome slice — forces the discard path.
+    pub fn matches(&self, history: &[Observation], pending: &[Config]) -> bool {
+        history.len() == self.history_len + 1
+            && pending == &self.pending[..]
+            && history.last().is_some_and(|o| {
+                o.config == self.fantasy_config
+                    && if self.value_dependent {
+                        o.value.to_bits() == self.fantasy_value.to_bits()
+                    } else {
+                        // value-free proposals never *read* y, but
+                        // encoders may *filter* non-finite observations —
+                        // and the fantasy value is always finite, so a
+                        // non-finite real value could change history
+                        // cardinality downstream. Require finiteness to
+                        // keep the commit provably byte-equivalent.
+                        o.value.is_finite()
+                    }
+            })
+    }
+
+    /// Wire form (typed configs, bit-exact f64s) for resume snapshots.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", crate::space::config_to_json_typed(&self.config)),
+            (
+                "fantasy_config",
+                crate::space::config_to_json_typed(&self.fantasy_config),
+            ),
+            ("fantasy_value", Json::Num(self.fantasy_value)),
+            ("history_len", Json::Num(self.history_len as f64)),
+            (
+                "pending",
+                Json::Arr(
+                    self.pending
+                        .iter()
+                        .map(crate::space::config_to_json_typed)
+                        .collect(),
+                ),
+            ),
+            ("value_dependent", Json::Bool(self.value_dependent)),
+            ("saved", self.saved.clone()),
+        ])
+    }
+
+    /// Reader for [`Speculation::to_json`].
+    pub fn from_json(j: &Json) -> Option<Speculation> {
+        let pending = j
+            .get("pending")?
+            .as_arr()?
+            .iter()
+            .map(crate::space::config_from_json_typed)
+            .collect::<Option<Vec<_>>>()?;
+        Some(Speculation {
+            config: crate::space::config_from_json_typed(j.get("config")?)?,
+            fantasy_config: crate::space::config_from_json_typed(
+                j.get("fantasy_config")?,
+            )?,
+            fantasy_value: j.get("fantasy_value")?.as_f64()?,
+            history_len: j.get("history_len")?.as_i64()? as usize,
+            pending,
+            value_dependent: j.get("value_dependent")?.as_bool()?,
+            saved: j.get("saved")?.clone(),
+        })
+    }
+}
+
+/// Speculatively compute the next proposal while `fantasy_config` is
+/// still in flight: freeze the strategy state, append the constant-liar
+/// fantasy observation, and run the ordinary proposal path against the
+/// post-completion view (`pending_after` = in-flight configs minus the
+/// fantasized one). The strategy is left *advanced* — on commit nothing
+/// recomputes; on discard the caller restores `saved` and the strategy
+/// is bit-identical to one that never speculated.
+pub fn speculate(
+    strategy: &mut dyn Strategy,
+    history: &[Observation],
+    pending_after: &[Config],
+    fantasy_config: Config,
+) -> Speculation {
+    let saved = strategy.state_to_json();
+    let fantasy = fantasy_value(history);
+    let mut fantasized: Vec<Observation> = history.to_vec();
+    fantasized.push(Observation { config: fantasy_config.clone(), value: fantasy });
+    let (config, value_dependent) = strategy.next_config_tracked(&fantasized, pending_after);
+    Speculation {
+        config,
+        fantasy_config,
+        fantasy_value: fantasy,
+        history_len: history.len(),
+        pending: pending_after.to_vec(),
+        value_dependent,
+        saved,
+    }
 }
 
 fn sobol_to_json(s: &Sobol) -> Json {
@@ -168,6 +327,13 @@ impl Strategy for RandomSearch {
     fn next_config(&mut self, _history: &[Observation], _pending: &[Config]) -> Config {
         self.space.sample(&mut self.rng)
     }
+    fn next_config_tracked(
+        &mut self,
+        history: &[Observation],
+        pending: &[Config],
+    ) -> (Config, bool) {
+        (self.next_config(history, pending), false)
+    }
 }
 
 impl StrategyState for RandomSearch {
@@ -208,6 +374,13 @@ impl SobolSearch {
 impl Strategy for SobolSearch {
     fn name(&self) -> &'static str {
         "sobol"
+    }
+    fn next_config_tracked(
+        &mut self,
+        history: &[Observation],
+        pending: &[Config],
+    ) -> (Config, bool) {
+        (self.next_config(history, pending), false)
     }
     fn next_config(&mut self, _history: &[Observation], _pending: &[Config]) -> Config {
         let mut u = self.sobol.next_point();
@@ -270,6 +443,13 @@ impl Strategy for GridSearch {
         let c = self.grid[self.cursor % self.grid.len()].clone();
         self.cursor += 1;
         c
+    }
+    fn next_config_tracked(
+        &mut self,
+        history: &[Observation],
+        pending: &[Config],
+    ) -> (Config, bool) {
+        (self.next_config(history, pending), false)
     }
 }
 
@@ -601,6 +781,27 @@ impl Strategy for BayesianOptimization {
     }
     fn next_config(&mut self, history: &[Observation], pending: &[Config]) -> Config {
         self.propose_detailed(history, pending).0
+    }
+    fn next_config_tracked(
+        &mut self,
+        history: &[Observation],
+        pending: &[Config],
+    ) -> (Config, bool) {
+        // value-free only on the paths that provably never reach the GP
+        // fit: the initial design, and histories too small to fit (where
+        // `fit_model` bails before touching the RNG). Everything past
+        // that is value-dependent — even a failed fit may have consumed
+        // RNG draws in a y-dependent way (MCMC slice sampling), so the
+        // conservative flag keeps commits byte-equivalent to the
+        // synchronous recompute.
+        let live = history.len();
+        if live + pending.len() < self.config.init_random && self.transferred.is_empty() {
+            return (self.initial_design(), false);
+        }
+        if self.encode_history(history).0.len() < 2 {
+            return (self.initial_design(), false);
+        }
+        (self.propose_detailed(history, pending).0, true)
     }
 }
 
@@ -1125,6 +1326,120 @@ mod tests {
         let mut random = RandomSearch::new(space, 2);
         assert!(random.restore_state(&frozen));
         assert!(!random.restore_state(&Json::Null));
+    }
+
+    #[test]
+    fn fantasy_value_is_current_best_or_zero() {
+        assert_eq!(fantasy_value(&[]).to_bits(), 0.0f64.to_bits());
+        let mut rng = Rng::new(3);
+        let obs: Vec<Observation> = [0.7, 0.2, 0.9]
+            .iter()
+            .map(|&v| Observation { config: space_2d().sample(&mut rng), value: v })
+            .collect();
+        assert_eq!(fantasy_value(&obs).to_bits(), 0.2f64.to_bits());
+    }
+
+    #[test]
+    fn value_free_speculation_commits_and_matches_synchronous_path() {
+        // a random-search speculation ignores values entirely: committing
+        // it must be byte-equivalent to the synchronous recompute with
+        // the real (different) outcome value
+        let mut spec_strat = RandomSearch::new(space_2d(), 9);
+        let mut sync_strat = RandomSearch::new(space_2d(), 9);
+        let mut rng = Rng::new(10);
+        let mut history = Vec::new();
+        for _ in 0..3 {
+            let c = space_2d().sample(&mut rng);
+            history.push(Observation { config: c, value: rng.uniform() });
+        }
+        let in_flight = space_2d().sample(&mut rng);
+        let spec = speculate(&mut spec_strat, &history, &[], in_flight.clone());
+        assert!(!spec.value_dependent);
+
+        // the real outcome lands with a value far from the fantasy
+        history.push(Observation { config: in_flight, value: 123.456 });
+        assert!(spec.matches(&history, &[]));
+        let sync = sync_strat.next_config(&history, &[]);
+        assert_eq!(spec.config, sync, "committed speculation diverged from sync");
+        // and the advanced strategy state agrees too
+        assert_eq!(
+            spec_strat.state_to_json().to_string(),
+            sync_strat.state_to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn value_dependent_speculation_discards_bit_identically() {
+        let make = || {
+            BayesianOptimization::new(
+                space_2d(),
+                Arc::new(NativeBackend),
+                BoConfig {
+                    init_random: 2,
+                    gphp: GphpMode::EmpiricalBayes { restarts: 1 },
+                    acq: AcquisitionConfig { num_anchors: 32, ..Default::default() },
+                    eb_refit_every: 8,
+                    ..Default::default()
+                },
+                61,
+            )
+        };
+        let mut spec_strat = make();
+        let mut sync_strat = make();
+        let mut rng = Rng::new(62);
+        let mut history = Vec::new();
+        for _ in 0..5 {
+            let c = space_2d().sample(&mut rng);
+            let v = quadratic(&c);
+            history.push(Observation { config: c, value: v });
+        }
+        // keep both strategies at the same warmed state
+        let warm = spec_strat.next_config(&history, &[]);
+        let warm_sync = sync_strat.next_config(&history, &[]);
+        assert_eq!(warm, warm_sync);
+        history.push(Observation { config: warm.clone(), value: quadratic(&warm) });
+
+        let in_flight = space_2d().sample(&mut rng);
+        let mut spec =
+            speculate(&mut spec_strat, &history, &[], in_flight.clone());
+        assert!(spec.value_dependent, "model-driven BO must be value-dependent");
+
+        // the real value differs from the constant-liar fantasy ⇒ discard
+        history.push(Observation { config: in_flight, value: 7.5 });
+        assert!(!spec.matches(&history, &[]));
+        assert!(spec_strat.restore_state(&spec.saved));
+        let a = spec_strat.next_config(&history, &[]);
+        let b = sync_strat.next_config(&history, &[]);
+        assert_eq!(a, b, "discard fallback diverged from synchronous propose");
+
+        // structural mismatches also refuse the commit
+        spec.value_dependent = false;
+        assert!(!spec.matches(&history[..history.len() - 1], &[])); // wrong len
+        let other = space_2d().sample(&mut rng);
+        assert!(!spec.matches(&history, &[other])); // pending set changed
+    }
+
+    #[test]
+    fn speculation_json_roundtrips() {
+        let mut strat = RandomSearch::new(space_2d(), 77);
+        let mut rng = Rng::new(78);
+        let history = vec![Observation {
+            config: space_2d().sample(&mut rng),
+            value: 0.25,
+        }];
+        let pending = vec![space_2d().sample(&mut rng)];
+        let fantasy = space_2d().sample(&mut rng);
+        let spec = speculate(&mut strat, &history, &pending, fantasy);
+        let j = crate::json::parse(&spec.to_json().to_string()).unwrap();
+        let back = Speculation::from_json(&j).unwrap();
+        assert_eq!(back.config, spec.config);
+        assert_eq!(back.fantasy_config, spec.fantasy_config);
+        assert_eq!(back.fantasy_value.to_bits(), spec.fantasy_value.to_bits());
+        assert_eq!(back.history_len, spec.history_len);
+        assert_eq!(back.pending, spec.pending);
+        assert_eq!(back.value_dependent, spec.value_dependent);
+        assert_eq!(back.saved.to_string(), spec.saved.to_string());
+        assert!(Speculation::from_json(&Json::Null).is_none());
     }
 
     #[test]

@@ -443,3 +443,81 @@ fn drain_of_last_lane_parks_jobs_until_a_worker_joins() {
     workers.join();
     let _ = late_h.join();
 }
+
+/// Speculation chaos leg (DESIGN.md §17): the kill/join/drain smoke with
+/// the proposal pipeline enabled on every job. Speculation must be
+/// bit-transparent under elastic chaos — the fleet's final state matches
+/// an uninterrupted pipelined in-process reference, and the snapshot
+/// legs (join/steal/drain) still replay zero proposals.
+#[test]
+fn pipelined_kill_join_drain_matches_uninterrupted_pipelined_reference() {
+    let mut requests = chaos_requests("pipe", 24, 4, 7000);
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.speculative = true;
+        // a few BO jobs exercise the discard path (value-dependent
+        // proposals) alongside random's always-commit path
+        if i % 6 == 0 {
+            r.strategy = "bayesian".into();
+            r.max_parallel_jobs = 1;
+        }
+    }
+    let reference = reference_run(&requests);
+    assert!(
+        reference
+            .telemetry_snapshot()
+            .counter("strategy.speculation_hits")
+            .unwrap_or(0)
+            > 0,
+        "pipeline never engaged in the reference run"
+    );
+
+    let (transports, workers) = spawn_workers(2, "pipe");
+    let mut svc = AmtService::new(PlatformConfig::noiseless());
+    svc.attach_remote_workers(
+        transports,
+        RemoteConfig { batch_steps: 8, ..RemoteConfig::default() },
+    );
+    for r in &requests {
+        svc.create_tuning_job(r.clone()).unwrap();
+    }
+    let pool = svc.remote_pool().unwrap();
+    await_polls(&pool, &requests, 8);
+
+    // kill #1: abrupt death mid-pipeline; the survivor resumes the
+    // victims from their last delta-acked checkpoints (speculation in
+    // flight at the boundary thaws with the actor or re-speculates —
+    // both bit-identical)
+    workers.faults[0].kill();
+    await_live(&pool, 1);
+    let replays_after_kill = pool.replayed_proposals();
+
+    // join + graceful drain: pure snapshot paths
+    let (late_t, _late_fault, late_h) = spawn_loopback_worker("pipe-late");
+    svc.add_remote_worker(late_t).unwrap();
+    assert!(svc.drain_remote_worker(1), "lane 1 should be drainable");
+
+    let mut outcomes = Vec::new();
+    for r in &requests {
+        outcomes.push(svc.wait(&r.name).unwrap());
+    }
+    for o in &outcomes {
+        assert_eq!(o.status, ExecutionStatus::Succeeded, "{} failed", o.name);
+        assert_eq!(o.evaluations.len(), 4, "{} wrong evaluation count", o.name);
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while pool.drains() == 0 {
+        assert!(Instant::now() < deadline, "drain never completed");
+        std::thread::yield_now();
+    }
+    assert_eq!(
+        pool.replayed_proposals(),
+        replays_after_kill,
+        "snapshot legs must replay zero proposals with the pipeline on"
+    );
+    assert_services_identical(&reference, &svc);
+    assert_eq!(svc.running_jobs(), 0);
+    drop(pool);
+    drop(svc);
+    workers.join();
+    let _ = late_h.join();
+}

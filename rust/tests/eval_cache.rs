@@ -1,0 +1,221 @@
+//! Cross-job evaluation-cache integration tests (DESIGN.md §17): a
+//! warm-start family dedupes training through the shared `eval_cache`
+//! table, hits replay bit-identical outcomes, the cache rides the
+//! durable plane across close/reopen, and both execution planes agree.
+
+use std::collections::BTreeMap;
+
+use amt::api::AmtService;
+use amt::config::TuningJobRequest;
+use amt::coordinator::TuningJobOutcome;
+use amt::distributed::worker::spawn_loopback_worker;
+use amt::platform::PlatformConfig;
+
+/// Grid search is a pure cursor over the 16-point branin grid (k=4 per
+/// axis), so every job with the same budget proposes the same configs —
+/// overlap between family members is guaranteed, not probabilistic.
+fn grid_request(name: &str, jobs: u32, parents: Vec<String>) -> TuningJobRequest {
+    TuningJobRequest {
+        name: name.into(),
+        objective: "branin".into(),
+        strategy: "grid".into(),
+        max_training_jobs: jobs,
+        max_parallel_jobs: 2,
+        seed: 5,
+        eval_cache: true,
+        warm_start_parents: parents,
+        ..Default::default()
+    }
+}
+
+fn run(svc: &AmtService, r: TuningJobRequest) -> TuningJobOutcome {
+    let name = svc.create_tuning_job(r).unwrap();
+    svc.wait(&name).unwrap()
+}
+
+/// Canonical-config → final-value-bits map, the cache's own equality.
+fn final_bits(out: &TuningJobOutcome) -> BTreeMap<String, Option<u64>> {
+    out.evaluations
+        .iter()
+        .map(|e| {
+            (
+                amt::space::config_to_json_typed(&e.config).to_string(),
+                e.final_value.map(f64::to_bits),
+            )
+        })
+        .collect()
+}
+
+/// Satellite property: two warm-start children of one parent with
+/// overlapping grids train each distinct config exactly once, counted
+/// at the platform, and every hit is bit-identical to the recorded
+/// outcome.
+#[test]
+fn warm_start_family_trains_each_distinct_config_exactly_once() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let parent = run(&svc, grid_request("fam-parent", 6, Vec::new()));
+    assert_eq!(svc.telemetry_snapshot().counter("platform.trains"), Some(6));
+
+    let a = run(&svc, grid_request("fam-child-a", 9, vec!["fam-parent".into()]));
+    let b = run(&svc, grid_request("fam-child-b", 9, vec!["fam-parent".into()]));
+
+    // 9 distinct configs in the family union, each trained exactly once:
+    // grid points 0..6 by the parent, 6..9 by child A, nothing by child B
+    let snap = svc.telemetry_snapshot();
+    assert_eq!(snap.counter("platform.trains"), Some(9));
+    assert_eq!(snap.counter("cache.hits"), Some(6 + 9));
+    assert_eq!(snap.counter("cache.misses"), Some(6 + 3));
+    assert_eq!(svc.store().eval_cache_hits(), 15);
+
+    assert_eq!(a.evaluations.iter().filter(|e| e.cached).count(), 6);
+    assert!(b.evaluations.iter().all(|e| e.cached && e.attempts == 0));
+    assert_eq!(b.total_billable_seconds, 0.0, "cached evals must not bill");
+
+    // hits replay the recorded values bit-exactly
+    let parent_bits = final_bits(&parent);
+    let a_bits = final_bits(&a);
+    for (config, bits) in &parent_bits {
+        assert_eq!(a_bits.get(config), Some(bits), "child A diverged on {config}");
+    }
+    assert_eq!(final_bits(&b), a_bits, "child B diverged from child A");
+}
+
+/// The cache is plain `MetadataStore` state, so it must ride WAL replay
+/// and snapshot recovery: after close/reopen a third family member is
+/// served entirely from the recovered cache and trains nothing.
+#[test]
+fn eval_cache_survives_close_and_reopen() {
+    let dir = std::env::temp_dir().join(format!(
+        "amt-eval-cache-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let a_bits = {
+        let svc = AmtService::open(&dir, PlatformConfig::noiseless()).unwrap();
+        run(&svc, grid_request("dur-parent", 6, Vec::new()));
+        let a = run(&svc, grid_request("dur-child-a", 9, vec!["dur-parent".into()]));
+        let bits = final_bits(&a);
+        svc.close().unwrap();
+        bits
+    };
+
+    let svc = AmtService::open(&dir, PlatformConfig::noiseless()).unwrap();
+    let b = run(&svc, grid_request("dur-child-b", 9, vec!["dur-parent".into()]));
+    // every config is served from the recovered cache: the reopened
+    // service never touches the platform (the counter is never created)
+    assert_eq!(
+        svc.telemetry_snapshot().counter("platform.trains").unwrap_or(0),
+        0
+    );
+    assert_eq!(svc.store().eval_cache_hits(), 9);
+    assert!(b.evaluations.iter().all(|e| e.cached));
+    assert_eq!(final_bits(&b), a_bits);
+    svc.close().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CI gate (`scripts/ci.sh` pipeline_smoke): a 16-job BO fleet with the
+/// speculative pipeline and the evaluation cache on. The first job
+/// pipelines its proposals in the scheduler's idle tail; the other
+/// fifteen — identical requests — are served entirely from the cache it
+/// recorded, bit-identically.
+#[test]
+fn pipeline_smoke_16_bo_jobs_speculate_and_hit_cache() {
+    let svc = AmtService::new(PlatformConfig::noiseless());
+    let mk = |i: u64| TuningJobRequest {
+        name: format!("pipe-smoke-{i:02}"),
+        objective: "branin".into(),
+        strategy: "bayesian".into(),
+        max_training_jobs: 6,
+        max_parallel_jobs: 1,
+        seed: 99,
+        speculative: true,
+        eval_cache: true,
+        ..Default::default()
+    };
+    let first = run(&svc, mk(0));
+    // the full trajectory is recorded: the rest can run concurrently
+    for i in 1..16 {
+        svc.create_tuning_job(mk(i)).unwrap();
+    }
+    let rest: Vec<TuningJobOutcome> = (1..16u64)
+        .map(|i| svc.wait(&format!("pipe-smoke-{i:02}")).unwrap())
+        .collect();
+
+    let snap = svc.telemetry_snapshot();
+    assert!(
+        snap.counter("strategy.speculation_hits").unwrap_or(0) > 0,
+        "pipeline never committed a speculation"
+    );
+    assert!(snap.counter("cache.hits").unwrap_or(0) > 0, "cache never hit");
+    assert_eq!(snap.counter("cache.hits"), Some(15 * 6));
+    assert!(snap.histogram("strategy.speculate_us").map(|h| h.count).unwrap_or(0) > 0);
+
+    for o in &rest {
+        assert_eq!(o.evaluations.len(), first.evaluations.len());
+        assert!(o.evaluations.iter().all(|e| e.cached));
+        for (x, y) in first.evaluations.iter().zip(&o.evaluations) {
+            assert_eq!(x.config, y.config, "{}: trajectory diverged", o.name);
+            assert_eq!(
+                x.final_value.map(f64::to_bits),
+                y.final_value.map(f64::to_bits),
+                "{}: cached value not bit-identical",
+                o.name
+            );
+        }
+    }
+}
+
+/// Both execution planes must agree: the same family on the loopback
+/// remote pool produces bit-identical evaluations (cached flags
+/// included) to the in-process scheduler. Seeds ship to workers on
+/// `Assign`, and worker-recorded entries flow back through the capture
+/// WAL, so sequential family members see the full cache either way.
+#[test]
+fn cache_dedupe_matches_across_execution_planes() {
+    let family = |svc: &AmtService| {
+        let parent = run(svc, grid_request("xp-parent", 6, Vec::new()));
+        let a = run(svc, grid_request("xp-child-a", 9, vec!["xp-parent".into()]));
+        let b = run(svc, grid_request("xp-child-b", 9, vec!["xp-parent".into()]));
+        vec![parent, a, b]
+    };
+
+    let local = AmtService::new(PlatformConfig::noiseless());
+    let local_outcomes = family(&local);
+
+    let mut transports = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..2 {
+        let (t, _fault, h) = spawn_loopback_worker(&format!("cache-{i}"));
+        transports.push(t);
+        handles.push(h);
+    }
+    let remote = AmtService::with_remote_workers(PlatformConfig::noiseless(), transports);
+    let remote_outcomes = family(&remote);
+
+    for (l, r) in local_outcomes.iter().zip(&remote_outcomes) {
+        assert_eq!(l.evaluations.len(), r.evaluations.len(), "{}", l.name);
+        for (x, y) in l.evaluations.iter().zip(&r.evaluations) {
+            assert_eq!(x.training_job_name, y.training_job_name);
+            assert_eq!(x.config, y.config);
+            assert_eq!(
+                x.final_value.map(f64::to_bits),
+                y.final_value.map(f64::to_bits),
+                "{}: value diverged across planes",
+                x.training_job_name
+            );
+            assert_eq!(x.ended_at.to_bits(), y.ended_at.to_bits());
+            assert_eq!(x.cached, y.cached, "{}: cached flag diverged", x.training_job_name);
+            assert_eq!(x.attempts, y.attempts);
+        }
+    }
+    assert!(remote_outcomes[2].evaluations.iter().all(|e| e.cached));
+
+    drop(remote);
+    for h in handles {
+        let _ = h.join();
+    }
+}

@@ -198,6 +198,7 @@ fn coalesced_worker_reports_each_slice_as_one_frame() {
                     transfer: Vec::new(),
                     backend: "native".into(),
                     resume: None,
+                    cache_seeds: Vec::new(),
                     trace: None,
                 },
                 Message::PollRequest { job: "coalesce-job".into(), max_steps: 8 },
@@ -291,6 +292,7 @@ fn gen3_worker_echoes_trace_id_on_every_slice() {
                     transfer: Vec::new(),
                     backend: "native".into(),
                     resume: None,
+                    cache_seeds: Vec::new(),
                     trace: Some(42),
                 },
                 Message::PollRequest { job: "trace-echo-job".into(), max_steps: 8 },
@@ -373,6 +375,7 @@ fn gen2_leader_without_trace_ids_interoperates_with_gen3_worker() {
                     transfer: Vec::new(),
                     backend: "native".into(),
                     resume: None,
+                    cache_seeds: Vec::new(),
                     trace: None,
                 },
                 Message::PollRequest { job: "gen2-job".into(), max_steps: 8 },

@@ -47,6 +47,13 @@ cargo test -q --release --test throughput throughput_smoke
 echo "== telemetry smoke: metrics + trace lifecycle (16 jobs) =="
 cargo test -q --release --test throughput telemetry_smoke
 
+# pipeline smoke (DESIGN.md §17): a 16-job BO fleet with the speculative
+# proposal pipeline and the cross-job evaluation cache enabled. Asserts
+# strategy.speculation_hits > 0 and cache.hits > 0 in the telemetry
+# snapshot, and that cached trajectories replay bit-identically.
+echo "== pipeline smoke: speculation + evaluation cache (16 BO jobs) =="
+cargo test -q --release --test eval_cache pipeline_smoke
+
 # load smoke (DESIGN.md §16): ~10 s declarative mixed workload (every
 # create flavor plus describe/list/stop/wait polling) on the loopback
 # distributed plane with one worker kill, one late join and one graceful
